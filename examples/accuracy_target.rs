@@ -1,0 +1,40 @@
+//! Task-performance budget scenario (paper §3.3.2 + §3.6): "I can tolerate
+//! at most X points of accuracy drop — find the cheapest network", solved
+//! with the three Phase-2 schemes of Table 5 so their run-time/eval-count
+//! trade-off is visible.
+//!
+//!     cargo run --release --example accuracy_target -- --model resnet_m --drop 0.01
+
+use mpq::coordinator::{Pipeline, SearchScheme};
+use mpq::groups::Lattice;
+use mpq::Result;
+
+fn main() -> Result<()> {
+    let args = mpq::cli::Args::from_env()?;
+    let model = args.opt_str("model", "resnet_m");
+    let drop = args.opt_f64("drop", 0.01)?;
+    let mut pipe = Pipeline::open(mpq::artifacts_dir(), model)?;
+    pipe.calibrate(args.opt_usize("calib", 256)?, 0)?;
+
+    let lat = Lattice::practical();
+    let fp = pipe.eval_fp32()?;
+    let target = fp - drop;
+    println!("{model}: fp32 = {fp:.4}, target ≥ {target:.4} (-{:.1} pts)", drop * 100.0);
+
+    let sens = pipe.sensitivity_sqnr(&lat)?;
+    let flips = pipe.flips(&lat, &sens);
+    println!("flip sequence: {} candidate steps", flips.len());
+
+    for scheme in [SearchScheme::Sequential, SearchScheme::Binary, SearchScheme::Hybrid] {
+        let run = pipe.search_accuracy_target(&lat, &flips, target, scheme, None)?;
+        println!(
+            "{:<14} r = {:.3}  metric = {:.4}  evals = {:<3} wall = {:.2}s",
+            scheme.label(),
+            run.final_rel_bops,
+            run.final_metric,
+            run.evals,
+            run.wall_secs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Efficiency-budget scenario (paper §3.3.1): "give me the most accurate
+//! network that costs at most r·BOPs(W8A16)".
+//!
+//!     cargo run --release --example bops_budget -- --model mobilenet_v3_s --budget 0.4
+//!
+//! Sweeps a few budgets to show the accuracy/efficiency pareto the greedy
+//! flip search walks, and prints the final per-group kernel selection —
+//! exactly what a deployment pipeline would hand to the compiler.
+
+use mpq::coordinator::Pipeline;
+use mpq::groups::Lattice;
+use mpq::Result;
+
+fn main() -> Result<()> {
+    let args = mpq::cli::Args::from_env()?;
+    let model = args.opt_str("model", "mobilenet_v3_s");
+    let budget = args.opt_f64("budget", 0.4)?;
+    let mut pipe = Pipeline::open(mpq::artifacts_dir(), model)?;
+    pipe.calibrate(args.opt_usize("calib", 256)?, args.opt_u64("seed", 0)?)?;
+
+    let lat = Lattice::practical();
+    let fp = pipe.eval_fp32()?;
+    println!("{model}: fp32 = {fp:.4}");
+
+    let sens = pipe.sensitivity_sqnr(&lat)?;
+    let flips = pipe.flips(&lat, &sens);
+    for b in [0.75, 0.5, budget] {
+        let run = pipe.search_bops_budget(&lat, &flips, b)?;
+        println!(
+            "budget r ≤ {b:.3}: achieved r = {:.3}, metric = {:.4} ({} flips)",
+            run.final_rel_bops,
+            run.final_metric,
+            run.applied.len()
+        );
+    }
+
+    let run = pipe.search_bops_budget(&lat, &flips, budget)?;
+    println!("\nfinal kernel selection at r = {:.3}:", run.final_rel_bops);
+    for (g, cand) in run.assignment.per_group.iter().enumerate() {
+        let grp = &pipe.model.entry.groups[g];
+        if grp.macs == 0 {
+            continue;
+        }
+        let names: Vec<&str> = grp
+            .w_q
+            .iter()
+            .map(|&w| pipe.model.entry.w_quantizers[w].name.as_str())
+            .collect();
+        println!("  {:<9} {:>10} MACs  {}", cand.label(), grp.macs, names.join(", "));
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! End-to-end validation driver (the EXPERIMENTS.md run).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!
+//! 1. loads AOT artifacts (L1 Pallas kernels inside L2 JAX graphs) through
+//!    the PJRT runtime,
+//! 2. verifies the Rust FP32 evaluation matches the number the python
+//!    build path recorded in the manifest (cross-layer numerical check),
+//! 3. runs the paper's full two-phase algorithm (SQNR Phase 1, greedy
+//!    Phase 2) on every model in the manifest under the practical lattice,
+//! 4. runs one accuracy-target search with all three schemes on one model,
+//! 5. reports a summary table and writes results/e2e.{txt,csv}.
+//!
+//!     cargo run --release --example e2e_full_repro [-- --models a,b --fast]
+
+use mpq::coordinator::{Pipeline, SearchScheme};
+use mpq::groups::{Candidate, Lattice};
+use mpq::manifest::Manifest;
+use mpq::report::{f3, f4, Table};
+use mpq::runtime::Runtime;
+use mpq::Result;
+use std::rc::Rc;
+
+fn main() -> Result<()> {
+    let args = mpq::cli::Args::from_env()?;
+    let dir = mpq::artifacts_dir();
+    let man = Manifest::load(&dir)?;
+    let rt = Rc::new(Runtime::cpu()?);
+    let calib_n = args.opt_usize("calib", 256)?;
+    let filter: Option<Vec<String>> =
+        args.opt("models").map(|s| s.split(',').map(String::from).collect());
+
+    let mut t = Table::new(
+        "e2e: two-phase MPQ across the zoo (practical lattice)",
+        &["Model", "FP32 (manifest)", "FP32 (rust)", "W8A8", "MP r", "MP metric", "Δ vs W8A8"],
+    );
+    let lat = Lattice::practical();
+    let total = mpq::util::Timer::start();
+    let mut fp_mismatch = 0;
+
+    let names: Vec<String> = man
+        .models
+        .iter()
+        .map(|m| m.name.clone())
+        .filter(|n| filter.as_ref().map(|f| f.contains(n)).unwrap_or(true))
+        .collect();
+    for name in &names {
+        let step = mpq::util::Timer::start();
+        let mut pipe = Pipeline::open_with(rt.clone(), &man, name)?;
+        pipe.calibrate(calib_n, 0)?;
+        let fp = pipe.eval_fp32()?;
+        let want = pipe.model.entry.fp32_val_metric;
+        // cross-layer check: python (jax) and rust (PJRT) must agree
+        if (fp - want).abs() > 5e-3 {
+            eprintln!("WARN {name}: rust fp32 {fp:.4} != manifest {want:.4}");
+            fp_mismatch += 1;
+        }
+        let w8a8 = pipe.eval_fixed(Candidate::new(8, 8), None)?;
+        let sens = pipe.sensitivity_sqnr(&lat)?;
+        let flips = pipe.flips(&lat, &sens);
+        let run = pipe.search_bops_budget(&lat, &flips, 0.5)?;
+        t.row(vec![
+            name.clone(),
+            f4(want),
+            f4(fp),
+            f4(w8a8),
+            f3(run.final_rel_bops),
+            f4(run.final_metric),
+            format!("{:+.4}", run.final_metric - w8a8),
+        ]);
+        println!(
+            "[e2e] {name}: fp32 {fp:.4}, MP(r={:.3}) {:.4} vs W8A8 {:.4}  ({:.0}s)",
+            run.final_rel_bops,
+            run.final_metric,
+            w8a8,
+            step.secs()
+        );
+    }
+    t.print();
+    t.save(mpq::report::results_dir(), "e2e")?;
+
+    // accuracy-target search, all three schemes (Table 5 shape)
+    if let Some(m) = names.iter().find(|n| n.as_str() == "mobilenet_v2_s") {
+        let mut pipe = Pipeline::open_with(rt.clone(), &man, m)?;
+        pipe.calibrate(calib_n, 0)?;
+        let fp = pipe.eval_fp32()?;
+        let sens = pipe.sensitivity_sqnr(&lat)?;
+        let flips = pipe.flips(&lat, &sens);
+        println!("\naccuracy-target search on {m} (target = fp32 − 1pt):");
+        for scheme in [SearchScheme::Sequential, SearchScheme::Binary, SearchScheme::Hybrid] {
+            let run = pipe.search_accuracy_target(&lat, &flips, fp - 0.01, scheme, None)?;
+            println!(
+                "  {:<14} r={:.3} metric={:.4} evals={} wall={:.2}s",
+                scheme.label(),
+                run.final_rel_bops,
+                run.final_metric,
+                run.evals,
+                run.wall_secs
+            );
+        }
+    }
+
+    println!(
+        "\ne2e complete: {} models, {} fp32 mismatches, {} executables compiled, {:.0}s total",
+        names.len(),
+        fp_mismatch,
+        rt.compiled_count(),
+        total.secs()
+    );
+    if fp_mismatch > 0 {
+        anyhow::bail!("{fp_mismatch} cross-layer fp32 mismatches");
+    }
+    Ok(())
+}

@@ -1,0 +1,465 @@
+"""AOT lowering: JAX → HLO text → artifacts/ for the Rust runtime.
+
+``python -m compile.aot --out-dir ../artifacts`` is the *only* python
+entrypoint in the system; after it runs, the Rust binary is self-contained.
+Per model it emits:
+
+- ``<m>.fwd.hlo.txt``   quantized forward.  Inputs, in order:
+      x, param_0..param_{P-1}, act_qp[A,5], w_scales[W,Cmax], w_qmeta[W,3]
+  Output: 1-tuple of logits.  ``enable=0`` rows bypass quantizers exactly,
+  so the same executable serves FP32 eval, Phase-1 probes and any mixed
+  configuration (DESIGN.md §2).
+- ``<m>.weights.bin``   trained parameters, MPQT tensors in params order.
+- ``<m>.taps.hlo.txt``  FP forward returning every weighted op's input
+  (AdaRound calibration captures), CNN models only.
+- ``<m>.ar.<layer>.hlo.txt``  per-layer AdaRound loss+grad step
+  (x, w, b, v, scale, meta[qmin,qmax,beta,lam]) → (loss, dL/dV).
+- ``<m>.fit.hlo.txt``   FIT-metric probe (Fig. 2): FP forward with
+  per-quantizer zero perturbations; returns (loss, wgrad2[W], agrad2[A],
+  aerr2[A]).
+
+plus shared dataset binaries and a global ``manifest.json``.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets as ds
+from . import models as M
+from . import tensorio as tio
+from . import train as T
+from .quantize import QCtx
+
+# models that get taps + AdaRound artifacts (Table 4 / Fig. 5 scope: CNNs)
+ADAROUND_MODELS = {
+    "resnet_s", "resnet_m", "mobilenet_v2_s", "mobilenet_v3_s",
+    "effnet_lite_s", "effnet_b0_s", "deeplab_s",
+}
+# models that get the FIT probe (Fig. 2 runs on mobilenet_v2_s; resnet_s is
+# used by the unit tests because it is the cheapest)
+FIT_MODELS = {"mobilenet_v2_s", "resnet_s"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is LOAD-BEARING: the default printer elides
+    # big constant payloads as "constant({...})", which xla_extension 0.5.1's
+    # text parser silently reads back as ZEROS — any graph with a baked-in
+    # constant array (outlier gains, positional tables) then miscomputes.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _collect_spec(mdef, params):
+    ctx = QCtx(collect=True)
+    out = mdef.apply(ctx, params, jnp.asarray(mdef.example(M.BATCH)))
+    return ctx.spec(), [int(s) for s in out.shape]
+
+
+def _qparam_shapes(spec):
+    a = len(spec["act_quantizers"])
+    w = len(spec["w_quantizers"])
+    cmax = max((q["channels"] for q in spec["w_quantizers"]), default=1)
+    return a, w, cmax
+
+
+def lower_forward(mdef, params, spec, out_path):
+    names = list(params.keys())
+    a, w, cmax = _qparam_shapes(spec)
+
+    def fwd(x, *rest):
+        plist = rest[:len(names)]
+        act_qp, w_scales, w_qmeta = rest[len(names):]
+        ctx = QCtx(qparams=(act_qp, w_scales, w_qmeta))
+        return (mdef.apply(ctx, dict(zip(names, plist)), x),)
+
+    ex = mdef.example(M.BATCH)
+    args = [jax.ShapeDtypeStruct(ex.shape, ex.dtype)]
+    args += [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in names]
+    args += [
+        jax.ShapeDtypeStruct((a, 5), np.float32),
+        jax.ShapeDtypeStruct((w, cmax), np.float32),
+        jax.ShapeDtypeStruct((w, 3), np.float32),
+    ]
+    text = to_hlo_text(jax.jit(fwd).lower(*args))
+    with open(out_path, "w") as f:
+        f.write(text)
+
+
+def lower_taps(mdef, params, out_path):
+    """FP forward returning each weighted op's input tensor (+ logits)."""
+    names = list(params.keys())
+
+    def taps(x, *plist):
+        ctx = QCtx(qparams=None, capture_taps=True)
+        out = mdef.apply(ctx, dict(zip(names, plist)), x)
+        return tuple(t for _, t in ctx.taps) + (out,)
+
+    ex = mdef.example(M.BATCH)
+    args = [jax.ShapeDtypeStruct(ex.shape, ex.dtype)]
+    args += [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in names]
+    text = to_hlo_text(jax.jit(taps).lower(*args))
+    with open(out_path, "w") as f:
+        f.write(text)
+
+
+# MSE range-estimation grid (mirrored by rust/src/quant): for every
+# activation quantizer we evaluate the local quantization MSE of clipping
+# the observed [min,max] range by each ratio, at each candidate bit-width.
+STATS_BITS = [4, 6, 8, 16]
+STATS_RATIOS = [round(0.30 + 0.05 * i, 2) for i in range(15)]  # 0.30..1.00
+
+
+def lower_stats(mdef, params, spec, out_path):
+    """Activation-capture probe for MSE range estimation.
+
+    FP forward returning every activation quantizer's input tensor; the MSE
+    grid over (bits × clip-ratio) — the paper's 'MSE based criteria' — is
+    computed host-side in `rust/src/quant` from these captures.
+
+    (History: computing the grid *inside* the graph either exploded
+    xla_extension 0.5.1's CPU compile time (per-cell unrolled form) or
+    miscompiled into constant-folded rows (broadcast-vectorized form on
+    model-sized graphs).  Capturing raw activations keeps the artifact a
+    plain data path and moves the arithmetic into testable Rust.)
+    """
+    names = list(params.keys())
+
+    def stats(x, *plist):
+        ctx = QCtx(qparams=None)
+        ctx.capture_acts = True
+        mdef.apply(ctx, dict(zip(names, plist)), x)
+        return tuple(ctx.captured_acts)
+
+    ex = mdef.example(M.BATCH)
+    args = [jax.ShapeDtypeStruct(ex.shape, ex.dtype)]
+    args += [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in names]
+    text = to_hlo_text(jax.jit(stats).lower(*args))
+    with open(out_path, "w") as f:
+        f.write(text)
+
+
+def _rect_sigmoid(v):
+    return jnp.clip(jax.nn.sigmoid(v) * 1.2 - 0.1, 0.0, 1.0)
+
+
+def lower_adaround_step(layer, out_path):
+    """Per-layer AdaRound step (Nagel et al. 2020; paper §3.5 integration).
+
+    loss = ||op(x, W) − op(x, Ŵ(V))||² + λ Σ(1 − |2h(V)−1|^β),
+    Ŵ(V) = s · clip(floor(W/s) + h(V), qmin, qmax).
+    Returns (loss, dL/dV); the Adam loop lives in rust/src/adaround.
+    """
+    kind = layer["kind"]
+    x_shape = tuple(layer["in_shape"])
+    w_shape = tuple(layer["w_shape"])
+    c_axis = 0 if kind == "conv" else 1
+    channels = w_shape[c_axis]
+
+    def op(x, w, b):
+        if kind == "conv":
+            y = jax.lax.conv_general_dilated(
+                x, w, window_strides=(layer["stride"],) * 2,
+                padding=layer["padding"],
+                feature_group_count=layer["groups"],
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )
+            return y + b.reshape(1, -1, 1, 1)
+        return x @ w + b
+
+    def step(x, w, b, v, scale, meta):
+        qmin, qmax, beta, lam = meta[0], meta[1], meta[2], meta[3]
+        shp = [1] * len(w_shape)
+        shp[c_axis] = -1
+        s = jnp.maximum(scale, 1e-12).reshape(shp)
+
+        def loss_fn(vv):
+            h = _rect_sigmoid(vv)
+            wq = s * jnp.clip(jnp.floor(w / s) + h, qmin, qmax)
+            mse = jnp.mean((op(x, w, b) - op(x, wq, b)) ** 2)
+            reg = jnp.mean(1.0 - jnp.abs(2.0 * h - 1.0) ** beta)
+            return mse + lam * reg
+
+        loss, g = jax.value_and_grad(loss_fn)(v)
+        return loss, g
+
+    f32 = np.float32
+    args = [
+        jax.ShapeDtypeStruct(x_shape, f32),
+        jax.ShapeDtypeStruct(w_shape, f32),
+        jax.ShapeDtypeStruct((w_shape[1] if kind == "dense" else w_shape[0],), f32),
+        jax.ShapeDtypeStruct(w_shape, f32),
+        jax.ShapeDtypeStruct((channels,), f32),
+        jax.ShapeDtypeStruct((4,), f32),
+    ]
+    text = to_hlo_text(jax.jit(step).lower(*args))
+    with open(out_path, "w") as f:
+        f.write(text)
+
+
+def lower_fit(mdef, params, spec, out_path):
+    """FIT probe (Zandonati et al.): FP forward + per-quantizer Fisher terms.
+
+    Inputs: x, y, params..., perts..., act_qp.  Outputs (loss, wgrad2[W],
+    agrad2[A], aerr2[A]) where *grad2 are mean squared loss-gradients
+    (Fisher diagonal approximation) and aerr2 is each activation's local
+    quantization MSE under the given act_qp rows.
+    """
+    names = list(params.keys())
+    loss_fn = T._loss_fn(mdef.task)
+    a, w, cmax = _qparam_shapes(spec)
+    ex = mdef.example(M.BATCH)
+
+    # record each quantizer's activation shape with a tracing subclass
+    shapes = []
+
+    class _ShapeCtx(QCtx):
+        def quant_act(self, x, name, src_of=None):
+            shapes.append(tuple(int(d) for d in x.shape))
+            return super().quant_act(x, name, src_of)
+
+    _ShapeCtx(qparams=None).__class__  # silence linters
+    sctx = _ShapeCtx(qparams=None)
+    mdef.apply(sctx, params, jnp.asarray(ex))
+    act_shapes = shapes
+
+    wq_param = [q["weight"] for q in spec["w_quantizers"]]
+
+    def fit(x, y, *rest):
+        plist = list(rest[:len(names)])
+        perts = list(rest[len(names):len(names) + len(act_shapes)])
+        act_qp = rest[len(names) + len(act_shapes)]
+
+        def loss_of(pl, pe):
+            ctx = QCtx(qparams=(act_qp, None, None), perts=pe, fit_mode=True)
+            logits = mdef.apply(ctx, dict(zip(names, pl)), x)
+            return loss_fn(logits, y), ctx.fit_errs
+
+        (loss, errs), grads = jax.value_and_grad(
+            loss_of, argnums=(0, 1), has_aux=True)(plist, perts)
+        gp, ga = grads
+        pidx = {n: i for i, n in enumerate(names)}
+        wgrad2 = jnp.stack([jnp.mean(gp[pidx[p]] ** 2) for p in wq_param])
+        agrad2 = jnp.stack([jnp.mean(g ** 2) for g in ga])
+        aerr2 = jnp.stack(errs)
+        return loss, wgrad2, agrad2, aerr2
+
+    f32 = np.float32
+    if mdef.task == "seg":
+        y_spec = jax.ShapeDtypeStruct((M.BATCH, ds.IMG, ds.IMG), np.int32)
+    else:
+        y_spec = jax.ShapeDtypeStruct((M.BATCH,), f32)
+    args = [jax.ShapeDtypeStruct(ex.shape, ex.dtype), y_spec]
+    args += [jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in names]
+    args += [jax.ShapeDtypeStruct(s, f32) for s in act_shapes]
+    args += [jax.ShapeDtypeStruct((a, 5), f32)]
+    text = to_hlo_text(jax.jit(fit).lower(*args))
+    with open(out_path, "w") as f:
+        f.write(text)
+    return [list(s) for s in act_shapes]
+
+
+# ---------------------------------------------------------------------------
+# datasets
+# ---------------------------------------------------------------------------
+
+CALIB_N = 1024
+VAL_N = T.VAL_N
+
+
+def dump_datasets(out_dir):
+    """Shared dataset binaries; returns {task: data-manifest fragment}."""
+    frag = {}
+
+    def dump(prefix, xs, ys):
+        tio.write_tensors(os.path.join(out_dir, prefix + ".bin"), [xs])
+        tio.write_tensors(
+            os.path.join(out_dir, prefix + ".labels.bin"),
+            [ys if ys.dtype == np.int32 else ys.astype(np.float32)],
+        )
+
+    cx, cy = ds.synthnet("calib", CALIB_N)
+    vx, vy = ds.synthnet("val", VAL_N)
+    ox, _ = ds.synthood("calib", CALIB_N)
+    dump("synthnet_calib", cx, cy.astype(np.float32))
+    dump("synthnet_val", vx, vy.astype(np.float32))
+    tio.write_tensors(os.path.join(out_dir, "synthood_calib.bin"), [ox])
+    frag["classify10"] = {
+        "calib": "synthnet_calib.bin", "calib_labels": "synthnet_calib.labels.bin",
+        "val": "synthnet_val.bin", "val_labels": "synthnet_val.labels.bin",
+        "ood_calib": "synthood_calib.bin",
+    }
+
+    cx, cy = ds.synthseg("calib", CALIB_N)
+    vx, vy = ds.synthseg("val", VAL_N)
+    dump("synthseg_calib", cx, cy)
+    dump("synthseg_val", vx, vy)
+    frag["seg"] = {
+        "calib": "synthseg_calib.bin", "calib_labels": "synthseg_calib.labels.bin",
+        "val": "synthseg_val.bin", "val_labels": "synthseg_val.labels.bin",
+        "ood_calib": "synthood_calib.bin",
+    }
+
+    for t in ds.GLUE_TASKS:
+        cx, cy = ds.synthglue(t, "calib", CALIB_N)
+        vx, vy = ds.synthglue(t, "val", VAL_N)
+        dump(f"glue_{t}_calib", cx, cy)
+        dump(f"glue_{t}_val", vx, vy)
+        frag[f"glue:{t}"] = {
+            "calib": f"glue_{t}_calib.bin",
+            "calib_labels": f"glue_{t}_calib.labels.bin",
+            "val": f"glue_{t}_val.bin", "val_labels": f"glue_{t}_val.labels.bin",
+            "ood_calib": None,
+        }
+    return frag
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def build_model(name, out_dir, data_frag, fast=False, reuse_weights=False):
+    mdef = M.MODELS[name]
+    if fast:
+        mdef.train_cfg = dict(mdef.train_cfg, steps=40)
+    t0 = time.time()
+    params, fp_metric = None, None
+    if reuse_weights:
+        # re-lower without retraining: load frozen weights + recorded metric
+        wpath = os.path.join(out_dir, f"{name}.weights.bin")
+        mpath = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(wpath):
+            ws = tio.read_tensors(wpath)
+            old = None
+            if os.path.exists(mpath):
+                with open(mpath) as f:
+                    old = json.load(f)["models"].get(name)
+            if old and len(old["params"]) == len(ws):
+                pnames = [p["name"] for p in old["params"]]
+                fp_metric = old["fp32_val_metric"]
+            else:
+                # manifest entry lost: param names come from a fresh init
+                # (deterministic order); metric is recomputed, not retrained
+                pnames = list(mdef.init(np.random.default_rng(17)).keys())
+                fp_metric = None
+            if len(pnames) == len(ws):
+                params = dict(zip(pnames, ws))
+                if fp_metric is None:
+                    fp_metric = T.eval_model(mdef, params)
+                print(f"[aot] {name}: reusing trained weights", flush=True)
+    if params is None:
+        params, fp_metric = T.train_model(mdef)
+    spec, out_shape = _collect_spec(mdef, params)
+    a, w, cmax = _qparam_shapes(spec)
+    names = list(params.keys())
+
+    tio.write_tensors(os.path.join(out_dir, f"{name}.weights.bin"),
+                      [params[k] for k in names])
+    lower_forward(mdef, params, spec,
+                  os.path.join(out_dir, f"{name}.fwd.hlo.txt"))
+    lower_stats(mdef, params, spec, os.path.join(out_dir, f"{name}.stats.hlo.txt"))
+
+    is_tok = mdef.task.startswith("glue:")
+    entry = {
+        "task": mdef.task,
+        "batch": M.BATCH,
+        "input": {"shape": list(mdef.example(M.BATCH).shape),
+                  "dtype": "i32" if is_tok else "f32"},
+        "forward": f"{name}.fwd.hlo.txt",
+        "stats": f"{name}.stats.hlo.txt",
+        "stats_bits": STATS_BITS,
+        "stats_ratios": STATS_RATIOS,
+        "weights_file": f"{name}.weights.bin",
+        "params": [{"name": k, "shape": list(params[k].shape)} for k in names],
+        "out_shape": out_shape,
+        "act_quantizers": spec["act_quantizers"],
+        "w_quantizers": spec["w_quantizers"],
+        "layers": spec["layers"],
+        "groups": spec["groups"],
+        "total_macs": spec["total_macs"],
+        "cmax": cmax,
+        "fp32_val_metric": fp_metric,
+        "data": data_frag[mdef.task],
+        "taps": None,
+        "adaround": [],
+        "fit": None,
+        "fit_act_shapes": None,
+    }
+
+    if name in ADAROUND_MODELS:
+        lower_taps(mdef, params, os.path.join(out_dir, f"{name}.taps.hlo.txt"))
+        entry["taps"] = f"{name}.taps.hlo.txt"
+        pshape = {p["name"]: p["shape"] for p in entry["params"]}
+        for i, lay in enumerate(spec["layers"]):
+            layer = dict(lay)
+            layer["w_shape"] = pshape[lay["name"] + ".w"]
+            exe = f"{name}.ar.{lay['name']}.hlo.txt"
+            lower_adaround_step(layer, os.path.join(out_dir, exe))
+            entry["adaround"].append({
+                "layer": lay["name"], "exe": exe, "tap_index": i,
+                "param": lay["name"] + ".w", "bias": lay["name"] + ".b",
+                "kind": lay["kind"],
+                "channels": layer["w_shape"][0 if lay["kind"] == "conv" else 1],
+            })
+
+    if name in FIT_MODELS:
+        shapes = lower_fit(mdef, params, spec,
+                           os.path.join(out_dir, f"{name}.fit.hlo.txt"))
+        entry["fit"] = f"{name}.fit.hlo.txt"
+        entry["fit_act_shapes"] = shapes
+
+    print(f"[aot] {name}: A={a} W={w} groups={len(spec['groups'])} "
+          f"macs={spec['total_macs']} fp32={fp_metric:.4f} "
+          f"({time.time()-t0:.1f}s)", flush=True)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="all", help="comma list or 'all'")
+    ap.add_argument("--fast", action="store_true",
+                    help="40 training steps (CI smoke)")
+    ap.add_argument("--reuse-weights", action="store_true",
+                    help="skip training when weights exist (re-lower only)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(M.MODELS) if args.models == "all" else args.models.split(",")
+    data_frag = dump_datasets(args.out_dir)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(manifest_path):
+        # merge into the existing manifest so partial rebuilds (and the
+        # --reuse-weights path, which reads it) keep the other models
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name in names:
+        manifest["models"][name] = build_model(
+            name, args.out_dir, data_frag, fast=args.fast,
+            reuse_weights=args.reuse_weights)
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

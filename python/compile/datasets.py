@@ -1,0 +1,234 @@
+"""Synthetic datasets standing in for the paper's benchmarks.
+
+The paper evaluates on ImageNet-1K, Pascal VOC and GLUE, none of which are
+available in this environment.  Per the substitution rule (DESIGN.md §3) we
+build procedural equivalents that exercise the same code paths and preserve
+the property the paper's experiments depend on: *per-layer quantization
+sensitivity structure*, which is a function of architecture and activation
+statistics, not of dataset scale.
+
+- ``synthnet``  — ImageNet stand-in: 16×16×3 images, 10 classes.  Each class
+  is a distinct Gabor-like oriented texture + palette; instances vary in
+  phase, position jitter and additive noise.
+- ``synthood``  — MS-COCO stand-in (Fig. 4 out-of-domain calibration): a
+  *disjoint* generator (checkerboards / stripes, different palette) so the
+  marginal pixel statistics differ from synthnet.
+- ``synthseg``  — Pascal VOC stand-in: 16×16 images with paste-in shapes and
+  per-pixel labels {background, square, disc}; metric is mIoU.
+- ``synthglue`` — GLUE stand-in: five sequence tasks over a 48-token
+  vocabulary matching Table 3's task-type mix (RTE/MRPC/MNLI-style pair
+  classification, SST-2-style single-sequence classification, STS-B-style
+  pair regression).
+
+Everything is deterministic in (split, seed) so build-time training, Rust
+calibration subsets and the ground-truth sensitivity lists all see
+reproducible data.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 16  # image side
+N_CLASSES = 10
+VOCAB = 48
+SEQ_LEN = 24
+SEG_CLASSES = 3
+
+# token-id conventions for synthglue
+PAD, CLS, SEP = 0, 1, 2
+POS_TOKENS = set(range(3, 13))   # "positive sentiment" words
+NEG_TOKENS = set(range(13, 23))  # "negative sentiment" words
+_CONTENT_LO, _CONTENT_HI = 3, VOCAB  # content tokens
+
+
+def _rng(split: str, seed: int) -> np.random.Generator:
+    return np.random.default_rng(abs(hash((split, seed))) % (2**63))
+
+
+# --------------------------------------------------------------------------
+# synthnet — 10-class oriented-texture images
+# --------------------------------------------------------------------------
+
+def synthnet(split: str, n: int, seed: int = 0):
+    """Return ``(x[n,3,IMG,IMG] f32, y[n] i32)``."""
+    rng = _rng("synthnet:" + split, seed)
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32) / IMG
+    labels = rng.integers(0, N_CLASSES, size=n).astype(np.int32)
+    imgs = np.empty((n, 3, IMG, IMG), np.float32)
+    for i, c in enumerate(labels):
+        theta = np.pi * c / N_CLASSES
+        freq = 2.0 + (c % 5)
+        phase = rng.uniform(0, 2 * np.pi)
+        u = np.cos(theta) * xx + np.sin(theta) * yy
+        tex = np.sin(2 * np.pi * freq * u + phase)
+        # class-dependent palette, instance-dependent brightness
+        base = np.array(
+            [np.cos(0.7 * c), np.cos(0.7 * c + 2.1), np.cos(0.7 * c + 4.2)],
+            np.float32,
+        )
+        bright = rng.uniform(0.6, 1.4)
+        img = bright * (0.5 * base[:, None, None] * tex[None] + 0.5 * tex[None])
+        img += rng.normal(0, 0.55, size=(3, IMG, IMG))
+        imgs[i] = img
+    return imgs.astype(np.float32), labels
+
+
+def synthood(split: str, n: int, seed: int = 0):
+    """Out-of-domain images (Fig. 4): checkerboard/stripe generator."""
+    rng = _rng("synthood:" + split, seed)
+    yy, xx = np.mgrid[0:IMG, 0:IMG]
+    imgs = np.empty((n, 3, IMG, IMG), np.float32)
+    for i in range(n):
+        p = int(rng.integers(2, 6))
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            pat = ((xx // p + yy // p) % 2).astype(np.float32)
+        elif kind == 1:
+            pat = ((xx // p) % 2).astype(np.float32)
+        else:
+            pat = ((yy // p) % 2).astype(np.float32)
+        pal = rng.uniform(-1.5, 1.5, size=3).astype(np.float32)
+        img = pal[:, None, None] * (2 * pat[None] - 1)
+        img += rng.normal(0, 0.15, size=(3, IMG, IMG))
+        imgs[i] = img
+    labels = rng.integers(0, N_CLASSES, size=n).astype(np.int32)  # unused
+    return imgs.astype(np.float32), labels
+
+
+# --------------------------------------------------------------------------
+# synthseg — 3-class segmentation
+# --------------------------------------------------------------------------
+
+def synthseg(split: str, n: int, seed: int = 0):
+    """Return ``(x[n,3,IMG,IMG] f32, y[n,IMG,IMG] i32)`` with classes
+    0=background, 1=square, 2=disc."""
+    rng = _rng("synthseg:" + split, seed)
+    imgs = np.empty((n, 3, IMG, IMG), np.float32)
+    masks = np.zeros((n, IMG, IMG), np.int32)
+    yy, xx = np.mgrid[0:IMG, 0:IMG]
+    for i in range(n):
+        img = rng.normal(0, 0.3, size=(3, IMG, IMG)).astype(np.float32)
+        mask = np.zeros((IMG, IMG), np.int32)
+        for _ in range(int(rng.integers(1, 3))):
+            kind = int(rng.integers(1, SEG_CLASSES))
+            cx, cy = rng.integers(3, IMG - 3, size=2)
+            r = int(rng.integers(2, 5))
+            if kind == 1:
+                sel = (np.abs(xx - cx) <= r) & (np.abs(yy - cy) <= r)
+            else:
+                sel = (xx - cx) ** 2 + (yy - cy) ** 2 <= r * r
+            mask[sel] = kind
+            col = rng.uniform(0.5, 1.5, size=3).astype(np.float32)
+            sign = 1.0 if kind == 1 else -1.0
+            for ch in range(3):
+                img[ch][sel] += sign * col[ch]
+        imgs[i], masks[i] = img, mask
+    return imgs.astype(np.float32), masks
+
+
+# --------------------------------------------------------------------------
+# synthglue — five sequence tasks (Table 3)
+# --------------------------------------------------------------------------
+
+GLUE_TASKS = {
+    # name: (n_outputs, metric)
+    "rte_s": (2, "acc"),
+    "mrpc_s": (2, "f1"),
+    "sst2_s": (2, "acc"),
+    "stsb_s": (1, "pearson"),
+    "mnli_s": (3, "acc"),
+}
+
+
+def _rand_seq(rng, lo, hi, length):
+    return rng.integers(lo, hi, size=length)
+
+
+def _pack_pair(a, b):
+    """[CLS] a [SEP] b [SEP] padded to SEQ_LEN."""
+    toks = np.full(SEQ_LEN, PAD, np.int32)
+    seq = [CLS, *a, SEP, *b, SEP]
+    toks[: len(seq)] = seq[:SEQ_LEN]
+    return toks
+
+
+def _pack_single(a):
+    toks = np.full(SEQ_LEN, PAD, np.int32)
+    seq = [CLS, *a, SEP]
+    toks[: len(seq)] = seq[:SEQ_LEN]
+    return toks
+
+
+def synthglue(task: str, split: str, n: int, seed: int = 0):
+    """Return ``(tokens[n,SEQ_LEN] i32, y[n] f32)``.
+
+    Labels are float32 throughout (class index for classification tasks,
+    score in [0,1] for stsb_s) so Rust handles one label dtype.
+    """
+    rng = _rng(f"glue:{task}:{split}", seed)
+    toks = np.empty((n, SEQ_LEN), np.int32)
+    ys = np.empty((n,), np.float32)
+    for i in range(n):
+        if task == "rte_s":
+            # entailment: does hypothesis's token multiset ⊆ premise's?
+            a = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 9)
+            if rng.random() < 0.5:
+                b = rng.choice(a, size=4, replace=False)
+                y = 1.0
+            else:
+                b = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 4)
+                y = float(set(b).issubset(set(a.tolist())))
+            toks[i], ys[i] = _pack_pair(a, b), y
+        elif task == "mrpc_s":
+            a = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 8)
+            if rng.random() < 0.5:
+                b = rng.permutation(a)
+                y = 1.0
+            else:
+                b = a.copy()
+                k = int(rng.integers(3, 6))
+                idx = rng.choice(8, size=k, replace=False)
+                b[idx] = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, k)
+                b = rng.permutation(b)
+                y = float(sorted(b.tolist()) == sorted(a.tolist()))
+            toks[i], ys[i] = _pack_pair(a, b), y
+        elif task == "sst2_s":
+            a = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 14)
+            pos = sum(t in POS_TOKENS for t in a.tolist())
+            neg = sum(t in NEG_TOKENS for t in a.tolist())
+            toks[i], ys[i] = _pack_single(a), float(pos >= neg)
+        elif task == "stsb_s":
+            a = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 8)
+            k = int(rng.integers(0, 9))
+            b = a.copy()
+            if k:
+                idx = rng.choice(8, size=k, replace=False)
+                b[idx] = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, k)
+            sa, sb = set(a.tolist()), set(b.tolist())
+            y = len(sa & sb) / max(1, len(sa | sb))  # Jaccard ∈ [0,1]
+            toks[i], ys[i] = _pack_pair(a, b), y
+        elif task == "mnli_s":
+            a = _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 9)
+            r = rng.random()
+            if r < 1 / 3:  # entail: subset
+                b = rng.choice(a, size=4, replace=False)
+                y = 0.0
+            elif r < 2 / 3:  # contradict: fully disjoint
+                pool = np.array(
+                    [t for t in range(_CONTENT_LO, _CONTENT_HI) if t not in set(a.tolist())]
+                )
+                b = rng.choice(pool, size=4, replace=False)
+                y = 1.0
+            else:  # neutral: partial overlap
+                b = np.concatenate(
+                    [rng.choice(a, size=2, replace=False),
+                     _rand_seq(rng, _CONTENT_LO, _CONTENT_HI, 2)]
+                )
+                sa = set(a.tolist())
+                inter = len(sa & set(b.tolist()))
+                y = 0.0 if inter == len(set(b.tolist())) else (1.0 if inter == 0 else 2.0)
+            toks[i], ys[i] = _pack_pair(a, b), y
+        else:
+            raise ValueError(f"unknown glue task {task}")
+    return toks, ys

@@ -1,0 +1,189 @@
+"""L1 Pallas kernels: fused fake-quantization.
+
+The fake-quant op is the hot-spot of the paper's simulation substrate: it is
+executed at *every* quantizer on *every* Phase-1 probe and Phase-2
+configuration evaluation, i.e. tens of thousands of times per mixed-precision
+search.  We implement it as a Pallas kernel so that the whole quantized
+forward pass lowers into one HLO module (see ``python/compile/aot.py``).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the op is elementwise, so
+it targets the VPU.  Tensors are flattened to a 2-D ``(rows, LANES)`` layout
+with ``LANES = 128`` (the VPU lane count) and tiled into ``(BLOCK_ROWS, 128)``
+VMEM blocks; per-channel scales ride along as a ``(BLOCK_ROWS, 1)`` column so
+the broadcast happens inside the block.  The fused ``matmul + fake_quant``
+variant tiles ``(128, 128)`` output blocks for the MXU and quantizes the
+accumulator in VMEM before write-back — the analogue of the paper's W4A8
+integer kernels where the producer quantizes its output activation.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime can load (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128          # VPU lane width
+SUBLANES = 8         # f32 sublane count; row blocks are multiples of this
+MAX_BLOCK_ROWS = 64  # 64×128 f32 = 32 KiB per block, comfortably in VMEM
+
+_INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _fq_kernel(x_ref, s_ref, m_ref, o_ref):
+    """One (BLOCK_ROWS, LANES) block of fake-quant.
+
+    ``s_ref`` is ``(BLOCK_ROWS, 1)`` (per-channel, broadcast over lanes) or
+    ``(1, 1)`` (per-tensor).  ``m_ref`` is the (1, 4) meta row
+    ``(offset, qmin, qmax, enable)`` — scalars shared by every block.
+    """
+    x = x_ref[...]
+    s = jnp.maximum(s_ref[...], 1e-12)
+    off = m_ref[0, 0]
+    qmin = m_ref[0, 1]
+    qmax = m_ref[0, 2]
+    en = m_ref[0, 3]
+    q = jnp.clip(jnp.round(x / s + off), qmin, qmax)
+    y = (q - off) * s
+    o_ref[...] = x + en * (y - x)
+
+
+def _fq_2d(x2, s2, meta):
+    """Run the block kernel over a padded ``(R, C)`` array.
+
+    ``R`` is a multiple of SUBLANES, ``C`` a multiple of LANES; ``s2`` is
+    ``(R, 1)`` or ``(1, 1)``.
+
+    Grid choice: on real TPU hardware this would tile
+    ``(MAX_BLOCK_ROWS, LANES)`` VMEM blocks; under ``interpret=True`` on the
+    CPU PJRT plugin every grid step lowers to an XLA while-loop iteration,
+    which both bloats compile time (dozens of fq sites per model) and slows
+    execution.  Since the whole padded tensor fits host memory, we run a
+    single-block grid here and document the TPU BlockSpec in DESIGN.md
+    §Hardware-Adaptation.
+    """
+    rows, cols = x2.shape
+    per_channel = s2.shape[0] != 1
+    s_spec = (
+        pl.BlockSpec((rows, 1), lambda: (0, 0))
+        if per_channel
+        else pl.BlockSpec((1, 1), lambda: (0, 0))
+    )
+    return pl.pallas_call(
+        _fq_kernel,
+        in_specs=[
+            pl.BlockSpec((rows, cols), lambda: (0, 0)),
+            s_spec,
+            pl.BlockSpec((1, 4), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x2.dtype),
+        interpret=_INTERPRET,
+    )(x2, s2, meta)
+
+
+def fake_quant_act(x, scale, offset, qmin, qmax, enable):
+    """Per-tensor asymmetric fake-quant of an activation tensor.
+
+    ``scale``/``offset``/``qmin``/``qmax``/``enable`` are 0-d arrays (traced —
+    they are runtime inputs of the lowered executable).
+    """
+    n = x.size
+    cols = LANES
+    rows = _ceil_to(max(1, (n + cols - 1) // cols), SUBLANES)
+    x2 = jnp.zeros((rows * cols,), x.dtype).at[:n].set(x.reshape(-1))
+    x2 = x2.reshape(rows, cols)
+    meta = jnp.stack([offset, qmin, qmax, enable]).reshape(1, 4).astype(x.dtype)
+    s2 = jnp.reshape(scale, (1, 1)).astype(x.dtype)
+    out = _fq_2d(x2, s2, meta)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def fake_quant_weight(w, scale, qmin, qmax, enable, channel_axis=0):
+    """Per-channel symmetric fake-quant of a weight tensor.
+
+    ``scale`` is ``(C,)`` over ``channel_axis``; offset is fixed at 0
+    (symmetric).  The tensor is viewed as ``(C, rest)`` so each block row
+    carries its own scale.
+    """
+    wm = jnp.moveaxis(w, channel_axis, 0)
+    c, rest = wm.shape[0], int(wm.size // wm.shape[0])
+    cols = _ceil_to(max(rest, 1), LANES)
+    rows = _ceil_to(c, SUBLANES)
+    x2 = jnp.zeros((rows, cols), w.dtype).at[:c, :rest].set(wm.reshape(c, rest))
+    s2 = jnp.zeros((rows, 1), w.dtype).at[:c, 0].set(scale.astype(w.dtype))
+    zero = jnp.zeros((), w.dtype)
+    meta = jnp.stack(
+        [zero, jnp.asarray(qmin, w.dtype), jnp.asarray(qmax, w.dtype), jnp.asarray(enable, w.dtype)]
+    ).reshape(1, 4)
+    out = _fq_2d(x2, s2, meta)[:c, :rest].reshape(wm.shape)
+    return jnp.moveaxis(out, 0, channel_axis)
+
+
+def _matmul_fq_kernel(x_ref, w_ref, m_ref, o_ref, *, k_steps):
+    """Fused ``fake_quant(x @ w)`` block kernel.
+
+    Grid is ``(M/bm, N/bn, K/bk)``; the K axis is the innermost (sequential)
+    dimension, accumulating into the output block, which stays resident in
+    VMEM because its index map is constant along K.  On the last K step the
+    accumulator is fake-quantized in place — quantization happens VMEM-side,
+    exactly where the paper's integer kernel would requantize its int32
+    accumulator.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        acc = o_ref[...]
+        s = jnp.maximum(m_ref[0, 0], 1e-12)
+        off = m_ref[0, 1]
+        qmin = m_ref[0, 2]
+        qmax = m_ref[0, 3]
+        en = m_ref[0, 4]
+        q = jnp.clip(jnp.round(acc / s + off), qmin, qmax)
+        y = (q - off) * s
+        o_ref[...] = acc + en * (y - acc)
+
+
+def matmul_fq(x, w, scale, offset, qmin, qmax, enable, block=(128, 128, 128)):
+    """Fused ``fake_quant(x @ w)`` with MXU-shaped (128,128) output tiles.
+
+    Shapes are padded to block multiples; the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = block
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.zeros((mp, kp), x.dtype).at[:m, :k].set(x)
+    wp = jnp.zeros((kp, np_), w.dtype).at[:k, :n].set(w)
+    meta = jnp.stack(
+        [jnp.asarray(v, x.dtype) for v in (scale, offset, qmin, qmax, enable)]
+    ).reshape(1, 5)
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_fq_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, 5), lambda i, j, l: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, wp, meta)
+    return out[:m, :n]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fake-quantization kernels.
+
+This module is the ground truth the Pallas kernels in ``fake_quant.py`` are
+validated against (see ``python/tests/test_kernel.py``).  It implements the
+paper's uniform affine quantizer (Eq. 1-2):
+
+    W_int = clip(round(W / s + o), qmin, qmax)
+    q(W)  = (W_int - o) * s
+
+plus the ``enable`` blend used throughout this repo so that a single lowered
+HLO executable can represent *any* bit-width configuration (including FP32,
+``enable = 0``):
+
+    y = x + enable * (q(x) - x)
+
+Weights use symmetric per-channel quantization (offset = 0, scale is a vector
+over the output-channel axis); activations use asymmetric per-tensor
+quantization (scalar scale + offset).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(x, scale, offset, qmin, qmax, enable):
+    """Reference fake-quant. ``scale``/``offset`` broadcast against ``x``.
+
+    All of ``qmin``/``qmax``/``enable`` are scalars (python or 0-d arrays).
+    ``enable`` is 0.0 or 1.0; fractional values interpolate (used nowhere in
+    the algorithm but harmless, and it keeps the op differentiable-ish).
+    """
+    s = jnp.maximum(scale, 1e-12)  # guard padded/zero channels
+    q = jnp.clip(jnp.round(x / s + offset), qmin, qmax)
+    y = (q - offset) * s
+    return x + enable * (y - x)
+
+
+def fake_quant_act_ref(x, scale, offset, qmin, qmax, enable):
+    """Per-tensor asymmetric activation fake-quant (scalar scale/offset)."""
+    return fake_quant_ref(x, scale, offset, qmin, qmax, enable)
+
+
+def fake_quant_weight_ref(w, scale, qmin, qmax, enable, channel_axis=0):
+    """Per-channel symmetric weight fake-quant.
+
+    ``scale`` has shape ``(C,)`` where ``C = w.shape[channel_axis]``.
+    """
+    shp = [1] * w.ndim
+    shp[channel_axis] = -1
+    s = scale.reshape(shp)
+    return fake_quant_ref(w, s, 0.0, qmin, qmax, enable)
+
+
+def matmul_fq_ref(x, w, scale, offset, qmin, qmax, enable):
+    """Fused ``fake_quant(x @ w)`` oracle for the fused Pallas kernel."""
+    return fake_quant_ref(jnp.matmul(x, w), scale, offset, qmin, qmax, enable)

@@ -1,0 +1,520 @@
+"""The model zoo (L2).
+
+Miniaturized but architecturally faithful versions of the paper's nine
+evaluation networks (Table 1), written against :class:`compile.quantize.QCtx`
+so one definition serves training, spec collection and AOT lowering.
+
+Architecture ↔ paper mapping (DESIGN.md §3):
+
+========================  =====================================================
+paper network             here — what is preserved
+========================  =====================================================
+ResNet18                  ``resnet_s``: stem + basic residual blocks
+ResNet50                  ``resnet_m``: bottleneck (1-3-1) residual blocks
+MobileNetV2               ``mobilenet_v2_s``: inverted residuals, depthwise,
+                          ReLU6, linear bottleneck
+MobileNetV3               ``mobilenet_v3_s``: + hard-swish, SE blocks, and a
+                          baked-in per-channel outlier gain (the activation
+                          pathology the paper observes)
+EfficientNet-lite         ``effnet_lite_s``: MBConv w/o SE, ReLU6
+EfficientNet-b0           ``effnet_b0_s``: MBConv + SE + SiLU + strong outlier
+                          gain (the paper's catastrophic W8A8 case)
+ViT                       ``vit_s``: patch-embed transformer, LayerNorm/GELU,
+                          outlier gain in one MLP
+BERT                      ``bert_s``: token+pos embeddings, transformer
+                          encoder, per-GLUE-task heads
+DeepLabV3-MobileNetV3     ``deeplab_s``: mobilenet_v3 trunk + ASPP-style head,
+                          per-pixel 3-class logits
+========================  =====================================================
+
+All CNNs take NCHW ``f32[B,3,16,16]``; transformers take ``i32[B,24]`` token
+ids.  Every model returns raw logits; losses/metrics live in ``train.py``
+(build time) and ``rust/src/metrics`` (run time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as ds
+from .quantize import QCtx, QT
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def hswish(x):
+    return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+# ---------------------------------------------------------------------------
+# parameter init helpers
+# ---------------------------------------------------------------------------
+
+def _conv_p(p, name, cin, cout, k, rng, groups=1):
+    fan_in = (cin // groups) * k * k
+    p[name + ".w"] = (rng.normal(size=(cout, cin // groups, k, k)) *
+                      np.sqrt(2.0 / fan_in)).astype(np.float32)
+    p[name + ".b"] = np.zeros(cout, np.float32)
+
+
+def _dense_p(p, name, din, dout, rng):
+    p[name + ".w"] = (rng.normal(size=(din, dout)) *
+                      np.sqrt(2.0 / din)).astype(np.float32)
+    p[name + ".b"] = np.zeros(dout, np.float32)
+
+
+def _ln_p(p, name, d):
+    p[name + ".g"] = np.ones(d, np.float32)
+    p[name + ".b"] = np.zeros(d, np.float32)
+
+
+def _outlier_gain(c, hot=(1, 7), mag=14.0):
+    """Fixed per-channel gain with a few large entries.  Baked into the graph
+    to reproduce the wide-activation-range pathology of MobileNetV3 /
+    EfficientNet-b0 / ViT (paper Fig. 3) on miniature networks."""
+    g = np.ones(c, np.float32)
+    for h in hot:
+        if h < c:
+            g[h] = mag
+    return g
+
+
+# ---------------------------------------------------------------------------
+# CNN building blocks
+# ---------------------------------------------------------------------------
+
+def _basic_block(ctx, p, x, name, cin, cout, stride):
+    y = ctx.conv(x, p[f"{name}.c1.w"], p[f"{name}.c1.b"], f"{name}.c1",
+                 stride=stride, act=relu)
+    y = ctx.conv(y, p[f"{name}.c2.w"], p[f"{name}.c2.b"], f"{name}.c2", act=relu)
+    if stride != 1 or cin != cout:
+        x = ctx.conv(x, p[f"{name}.sk.w"], p[f"{name}.sk.b"], f"{name}.sk",
+                     stride=stride)
+    return ctx.add(x, y, name)
+
+
+def _basic_block_p(p, name, cin, cout, stride, rng):
+    _conv_p(p, f"{name}.c1", cin, cout, 3, rng)
+    _conv_p(p, f"{name}.c2", cout, cout, 3, rng)
+    if stride != 1 or cin != cout:
+        _conv_p(p, f"{name}.sk", cin, cout, 1, rng)
+
+
+def _bottleneck(ctx, p, x, name, cin, cmid, cout, stride):
+    y = ctx.conv(x, p[f"{name}.c1.w"], p[f"{name}.c1.b"], f"{name}.c1", act=relu)
+    y = ctx.conv(y, p[f"{name}.c2.w"], p[f"{name}.c2.b"], f"{name}.c2",
+                 stride=stride, act=relu)
+    y = ctx.conv(y, p[f"{name}.c3.w"], p[f"{name}.c3.b"], f"{name}.c3")
+    if stride != 1 or cin != cout:
+        x = ctx.conv(x, p[f"{name}.sk.w"], p[f"{name}.sk.b"], f"{name}.sk",
+                     stride=stride)
+    return ctx.add(x, y, name)
+
+
+def _bottleneck_p(p, name, cin, cmid, cout, stride, rng):
+    _conv_p(p, f"{name}.c1", cin, cmid, 1, rng)
+    _conv_p(p, f"{name}.c2", cmid, cmid, 3, rng)
+    _conv_p(p, f"{name}.c3", cmid, cout, 1, rng)
+    if stride != 1 or cin != cout:
+        _conv_p(p, f"{name}.sk", cin, cout, 1, rng)
+
+
+def _se(ctx, p, x, name, c, r=4):
+    s = ctx.global_pool(x, f"{name}.se.gap")
+    s = ctx.dense(s, p[f"{name}.se.d1.w"], p[f"{name}.se.d1.b"],
+                  f"{name}.se.d1", act=relu)
+    s = ctx.dense(s, p[f"{name}.se.d2.w"], p[f"{name}.se.d2.b"],
+                  f"{name}.se.d2", act=jax.nn.sigmoid)
+    gate = QT(s.a[:, :, None, None], s.src)
+    return ctx.mul(x, gate, f"{name}.se")
+
+
+def _se_p(p, name, c, rng, r=4):
+    _dense_p(p, f"{name}.se.d1", c, max(1, c // r), rng)
+    _dense_p(p, f"{name}.se.d2", max(1, c // r), c, rng)
+
+
+def _irb(ctx, p, x, name, cin, cout, stride, exp, act, se=False, gain=None):
+    """Inverted residual / MBConv block."""
+    cmid = cin * exp
+    y = ctx.conv(x, p[f"{name}.ex.w"], p[f"{name}.ex.b"], f"{name}.ex", act=act)
+    y = ctx.conv(y, p[f"{name}.dw.w"], p[f"{name}.dw.b"], f"{name}.dw",
+                 stride=stride, groups=cmid, act=act)
+    if gain is not None:
+        y = ctx.const_gain(y, gain, f"{name}.amp")
+    if se:
+        y = _se(ctx, p, y, name, cmid)
+    y = ctx.conv(y, p[f"{name}.pj.w"], p[f"{name}.pj.b"], f"{name}.pj")
+    if stride == 1 and cin == cout:
+        y = ctx.add(x, y, name)
+    return y
+
+
+def _irb_p(p, name, cin, cout, stride, exp, rng, se=False):
+    cmid = cin * exp
+    _conv_p(p, f"{name}.ex", cin, cmid, 1, rng)
+    _conv_p(p, f"{name}.dw", cmid, cmid, 3, rng, groups=cmid)
+    if se:
+        _se_p(p, name, cmid, rng)
+    _conv_p(p, f"{name}.pj", cmid, cout, 1, rng)
+
+
+# ---------------------------------------------------------------------------
+# CNN classifiers
+# ---------------------------------------------------------------------------
+
+def resnet_s_init(rng):
+    p = {}
+    _conv_p(p, "stem", 3, 16, 3, rng)
+    _basic_block_p(p, "b1", 16, 16, 1, rng)
+    _basic_block_p(p, "b2", 16, 16, 1, rng)
+    _basic_block_p(p, "b3", 16, 32, 2, rng)
+    _basic_block_p(p, "b4", 32, 32, 1, rng)
+    _dense_p(p, "fc", 32, ds.N_CLASSES, rng)
+    return p
+
+
+def resnet_s_apply(ctx: QCtx, p, x):
+    h = ctx.input(x)
+    h = ctx.conv(h, p["stem.w"], p["stem.b"], "stem", act=relu)
+    h = _basic_block(ctx, p, h, "b1", 16, 16, 1)
+    h = _basic_block(ctx, p, h, "b2", 16, 16, 1)
+    h = _basic_block(ctx, p, h, "b3", 16, 32, 2)
+    h = _basic_block(ctx, p, h, "b4", 32, 32, 1)
+    h = ctx.global_pool(h, "gap")
+    h = ctx.dense(h, p["fc.w"], p["fc.b"], "fc")
+    return h.a
+
+
+def resnet_m_init(rng):
+    p = {}
+    _conv_p(p, "stem", 3, 16, 3, rng)
+    _bottleneck_p(p, "b1", 16, 8, 16, 1, rng)
+    _bottleneck_p(p, "b2", 16, 8, 16, 1, rng)
+    _bottleneck_p(p, "b3", 16, 16, 32, 2, rng)
+    _bottleneck_p(p, "b4", 32, 16, 32, 1, rng)
+    _bottleneck_p(p, "b5", 32, 16, 32, 1, rng)
+    _dense_p(p, "fc", 32, ds.N_CLASSES, rng)
+    return p
+
+
+def resnet_m_apply(ctx, p, x):
+    h = ctx.input(x)
+    h = ctx.conv(h, p["stem.w"], p["stem.b"], "stem", act=relu)
+    h = _bottleneck(ctx, p, h, "b1", 16, 8, 16, 1)
+    h = _bottleneck(ctx, p, h, "b2", 16, 8, 16, 1)
+    h = _bottleneck(ctx, p, h, "b3", 16, 16, 32, 2)
+    h = _bottleneck(ctx, p, h, "b4", 32, 16, 32, 1)
+    h = _bottleneck(ctx, p, h, "b5", 32, 16, 32, 1)
+    h = ctx.global_pool(h, "gap")
+    h = ctx.dense(h, p["fc.w"], p["fc.b"], "fc")
+    return h.a
+
+
+def mobilenet_v2_s_init(rng):
+    p = {}
+    _conv_p(p, "stem", 3, 12, 3, rng)
+    _irb_p(p, "b1", 12, 12, 1, 3, rng)
+    _irb_p(p, "b2", 12, 18, 2, 3, rng)
+    _irb_p(p, "b3", 18, 18, 1, 3, rng)
+    _irb_p(p, "b4", 18, 24, 2, 3, rng)
+    _dense_p(p, "fc", 24, ds.N_CLASSES, rng)
+    return p
+
+
+def mobilenet_v2_s_apply(ctx, p, x):
+    h = ctx.input(x)
+    h = ctx.conv(h, p["stem.w"], p["stem.b"], "stem", act=relu6)
+    h = _irb(ctx, p, h, "b1", 12, 12, 1, 3, relu6)
+    h = _irb(ctx, p, h, "b2", 12, 18, 2, 3, relu6)
+    h = _irb(ctx, p, h, "b3", 18, 18, 1, 3, relu6)
+    h = _irb(ctx, p, h, "b4", 18, 24, 2, 3, relu6)
+    h = ctx.global_pool(h, "gap")
+    h = ctx.dense(h, p["fc.w"], p["fc.b"], "fc")
+    return h.a
+
+
+def _mnv3_trunk(ctx, p, x):
+    """Shared trunk for mobilenet_v3_s and deeplab_s; returns 4×4 features."""
+    h = ctx.input(x)
+    h = ctx.conv(h, p["stem.w"], p["stem.b"], "stem", act=hswish)
+    h = _irb(ctx, p, h, "b1", 12, 12, 1, 3, hswish, se=True)
+    h = _irb(ctx, p, h, "b2", 12, 18, 2, 3, hswish,
+             gain=_outlier_gain(36, hot=(1, 7), mag=12.0))
+    h = _irb(ctx, p, h, "b3", 18, 18, 1, 3, hswish, se=True)
+    h = _irb(ctx, p, h, "b4", 18, 24, 2, 3, hswish)
+    return h
+
+
+def _mnv3_trunk_p(rng):
+    p = {}
+    _conv_p(p, "stem", 3, 12, 3, rng)
+    _irb_p(p, "b1", 12, 12, 1, 3, rng, se=True)
+    _irb_p(p, "b2", 12, 18, 2, 3, rng)
+    _irb_p(p, "b3", 18, 18, 1, 3, rng, se=True)
+    _irb_p(p, "b4", 18, 24, 2, 3, rng)
+    return p
+
+
+def mobilenet_v3_s_init(rng):
+    p = _mnv3_trunk_p(rng)
+    _dense_p(p, "fc", 24, ds.N_CLASSES, rng)
+    return p
+
+
+def mobilenet_v3_s_apply(ctx, p, x):
+    h = _mnv3_trunk(ctx, p, x)
+    h = ctx.global_pool(h, "gap")
+    h = ctx.dense(h, p["fc.w"], p["fc.b"], "fc")
+    return h.a
+
+
+def effnet_lite_s_init(rng):
+    p = {}
+    _conv_p(p, "stem", 3, 12, 3, rng)
+    _irb_p(p, "b1", 12, 12, 1, 3, rng)
+    _irb_p(p, "b2", 12, 18, 2, 4, rng)
+    _irb_p(p, "b3", 18, 24, 2, 4, rng)
+    _conv_p(p, "head", 24, 48, 1, rng)
+    _dense_p(p, "fc", 48, ds.N_CLASSES, rng)
+    return p
+
+
+def effnet_lite_s_apply(ctx, p, x):
+    h = ctx.input(x)
+    h = ctx.conv(h, p["stem.w"], p["stem.b"], "stem", act=relu6)
+    h = _irb(ctx, p, h, "b1", 12, 12, 1, 3, relu6)
+    h = _irb(ctx, p, h, "b2", 12, 18, 2, 4, relu6)
+    h = _irb(ctx, p, h, "b3", 18, 24, 2, 4, relu6)
+    h = ctx.conv(h, p["head.w"], p["head.b"], "head", act=relu6)
+    h = ctx.global_pool(h, "gap")
+    h = ctx.dense(h, p["fc.w"], p["fc.b"], "fc")
+    return h.a
+
+
+def effnet_b0_s_init(rng):
+    p = {}
+    _conv_p(p, "stem", 3, 12, 3, rng)
+    _irb_p(p, "b1", 12, 12, 1, 3, rng, se=True)
+    _irb_p(p, "b2", 12, 18, 2, 4, rng, se=True)
+    _irb_p(p, "b3", 18, 24, 2, 4, rng, se=True)
+    _conv_p(p, "head", 24, 48, 1, rng)
+    _dense_p(p, "fc", 48, ds.N_CLASSES, rng)
+    return p
+
+
+def effnet_b0_s_apply(ctx, p, x):
+    h = ctx.input(x)
+    h = ctx.conv(h, p["stem.w"], p["stem.b"], "stem", act=silu)
+    h = _irb(ctx, p, h, "b1", 12, 12, 1, 3, silu, se=True,
+             gain=_outlier_gain(36, hot=(2,), mag=24.0))
+    h = _irb(ctx, p, h, "b2", 12, 18, 2, 4, silu, se=True,
+             gain=_outlier_gain(48, hot=(3, 11), mag=24.0))
+    h = _irb(ctx, p, h, "b3", 18, 24, 2, 4, silu, se=True)
+    h = ctx.conv(h, p["head.w"], p["head.b"], "head", act=silu)
+    h = ctx.global_pool(h, "gap")
+    h = ctx.dense(h, p["fc.w"], p["fc.b"], "fc")
+    return h.a
+
+
+# ---------------------------------------------------------------------------
+# transformers
+# ---------------------------------------------------------------------------
+
+def _tblock(ctx, p, x, name, d, heads, gain=None):
+    """Pre-LN transformer block."""
+    dh = d // heads
+
+    h = ctx.layer_norm(x, p[f"{name}.ln1.g"], p[f"{name}.ln1.b"], f"{name}.ln1")
+    q = ctx.dense(h, p[f"{name}.q.w"], p[f"{name}.q.b"], f"{name}.q")
+    k = ctx.dense(h, p[f"{name}.k.w"], p[f"{name}.k.b"], f"{name}.k")
+    v = ctx.dense(h, p[f"{name}.v.w"], p[f"{name}.v.b"], f"{name}.v")
+
+    def split(t):
+        b, s, _ = t.a.shape
+        return QT(t.a.reshape(b, s, heads, dh).transpose(0, 2, 1, 3), t.src)
+
+    att = ctx.softmax_attention(split(q), split(k), split(v), name,
+                                scale=1.0 / np.sqrt(dh))
+    b, hh, s, _ = att.a.shape
+    att = QT(att.a.transpose(0, 2, 1, 3).reshape(b, s, d), att.src)
+    o = ctx.dense(att, p[f"{name}.o.w"], p[f"{name}.o.b"], f"{name}.o")
+    x = ctx.add(x, o, f"{name}.res1")
+
+    h = ctx.layer_norm(x, p[f"{name}.ln2.g"], p[f"{name}.ln2.b"], f"{name}.ln2")
+    h = ctx.dense(h, p[f"{name}.m1.w"], p[f"{name}.m1.b"], f"{name}.m1", act=gelu)
+    if gain is not None:
+        g = jnp.asarray(gain, jnp.float32)
+        h = ctx.quant_act(h.a * g, f"{name}.amp.out")
+    h = ctx.dense(h, p[f"{name}.m2.w"], p[f"{name}.m2.b"], f"{name}.m2")
+    return ctx.add(x, h, f"{name}.res2")
+
+
+def _tblock_p(p, name, d, mlp, rng):
+    _ln_p(p, f"{name}.ln1", d)
+    for nm in ("q", "k", "v", "o"):
+        _dense_p(p, f"{name}.{nm}", d, d, rng)
+    _ln_p(p, f"{name}.ln2", d)
+    _dense_p(p, f"{name}.m1", d, mlp, rng)
+    _dense_p(p, f"{name}.m2", mlp, d, rng)
+
+
+VIT_D, VIT_HEADS, VIT_MLP = 48, 4, 96
+BERT_D, BERT_HEADS, BERT_MLP = 48, 4, 96
+
+
+def vit_s_init(rng):
+    p = {}
+    _conv_p(p, "patch", 3, VIT_D, 4, rng)
+    p["pos"] = (rng.normal(size=(1, 16, VIT_D)) * 0.02).astype(np.float32)
+    _tblock_p(p, "t1", VIT_D, VIT_MLP, rng)
+    _tblock_p(p, "t2", VIT_D, VIT_MLP, rng)
+    _ln_p(p, "lnf", VIT_D)
+    _dense_p(p, "fc", VIT_D, ds.N_CLASSES, rng)
+    return p
+
+
+def vit_s_apply(ctx, p, x):
+    h = ctx.input(x)
+    h = ctx.conv(h, p["patch.w"], p["patch.b"], "patch", stride=4, padding="VALID")
+    b, d, hh, ww = h.a.shape
+    tok = QT(h.a.reshape(b, d, hh * ww).transpose(0, 2, 1), h.src)
+    tok = ctx.quant_act(tok.a + p["pos"], "pos.out")
+    tok = _tblock(ctx, p, tok, "t1", VIT_D, VIT_HEADS)
+    tok = _tblock(ctx, p, tok, "t2", VIT_D, VIT_HEADS,
+                  gain=_outlier_gain(VIT_MLP, hot=(5, 37), mag=18.0))
+    tok = ctx.layer_norm(tok, p["lnf.g"], p["lnf.b"], "lnf")
+    pooled = ctx.quant_act(tok.a.mean(1), "pool.out")
+    out = ctx.dense(pooled, p["fc.w"], p["fc.b"], "fc")
+    return out.a
+
+
+def bert_s_init(rng, n_out=3):
+    p = {}
+    p["emb"] = (rng.normal(size=(ds.VOCAB, BERT_D)) * 0.5).astype(np.float32)
+    p["pos"] = (rng.normal(size=(1, ds.SEQ_LEN, BERT_D)) * 0.02).astype(np.float32)
+    _tblock_p(p, "t1", BERT_D, BERT_MLP, rng)
+    _tblock_p(p, "t2", BERT_D, BERT_MLP, rng)
+    _ln_p(p, "lnf", BERT_D)
+    _dense_p(p, "fc", BERT_D, n_out, rng)
+    return p
+
+
+def bert_s_apply(ctx, p, tokens):
+    """``tokens`` is i32[B, SEQ_LEN].  Embedding tables stay FP (gather, no
+    MACs) — see DESIGN.md; their quantization is out of the paper's scope."""
+    t = ctx.tokens(tokens)
+    h = p["emb"][t.a] + p["pos"]
+    h = ctx.quant_act(h, "emb.out")
+    h = _tblock(ctx, p, h, "t1", BERT_D, BERT_HEADS,
+                gain=_outlier_gain(BERT_MLP, hot=(9,), mag=16.0))
+    h = _tblock(ctx, p, h, "t2", BERT_D, BERT_HEADS)
+    h = ctx.layer_norm(h, p["lnf.g"], p["lnf.b"], "lnf")
+    cls = ctx.quant_act(h.a[:, 0, :], "cls.out")
+    out = ctx.dense(cls, p["fc.w"], p["fc.b"], "fc")
+    return out.a
+
+
+# ---------------------------------------------------------------------------
+# segmentation
+# ---------------------------------------------------------------------------
+
+def deeplab_s_init(rng):
+    p = _mnv3_trunk_p(rng)
+    _conv_p(p, "aspp1", 24, 16, 1, rng)
+    _conv_p(p, "aspp2", 24, 16, 3, rng)
+    _conv_p(p, "fuse", 32, 16, 1, rng)
+    _conv_p(p, "cls", 16, ds.SEG_CLASSES, 1, rng)
+    return p
+
+
+def deeplab_s_apply(ctx, p, x):
+    h = _mnv3_trunk(ctx, p, x)  # B,24,4,4
+    a1 = ctx.conv(h, p["aspp1.w"], p["aspp1.b"], "aspp1", act=relu)
+    a2 = ctx.conv(h, p["aspp2.w"], p["aspp2.b"], "aspp2", act=relu)
+    cat = ctx.concat([a1, a2], "aspp.cat")
+    f = ctx.conv(cat, p["fuse.w"], p["fuse.b"], "fuse", act=relu)
+    f = ctx.upsample2d(f, 4, "up")
+    out = ctx.conv(f, p["cls.w"], p["cls.b"], "cls")
+    return out.a
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+BATCH = 32
+
+
+def _img_example(batch=BATCH):
+    return np.zeros((batch, 3, ds.IMG, ds.IMG), np.float32)
+
+
+def _tok_example(batch=BATCH):
+    return np.zeros((batch, ds.SEQ_LEN), np.int32)
+
+
+class ModelDef:
+    def __init__(self, name, task, init, apply, example, train_cfg):
+        self.name = name
+        self.task = task          # "classify10" | "seg" | "glue:<task>"
+        self.init = init
+        self.apply = apply        # apply(ctx, params, x) -> logits
+        self.example = example    # () -> example input ndarray
+        self.train_cfg = train_cfg  # dict(steps, lr, batch)
+
+
+def _bert_def(task):
+    n_out, _metric = ds.GLUE_TASKS[task]
+    return ModelDef(
+        f"bert_s_{task}",
+        f"glue:{task}",
+        lambda rng, n=n_out: bert_s_init(rng, n),
+        bert_s_apply,
+        _tok_example,
+        dict(steps=700, lr=2e-3),
+    )
+
+
+MODELS = {
+    "resnet_s": ModelDef("resnet_s", "classify10", resnet_s_init,
+                         resnet_s_apply, _img_example, dict(steps=600, lr=2e-3)),
+    "resnet_m": ModelDef("resnet_m", "classify10", resnet_m_init,
+                         resnet_m_apply, _img_example, dict(steps=600, lr=2e-3)),
+    "mobilenet_v2_s": ModelDef("mobilenet_v2_s", "classify10",
+                               mobilenet_v2_s_init, mobilenet_v2_s_apply,
+                               _img_example, dict(steps=700, lr=2e-3)),
+    "mobilenet_v3_s": ModelDef("mobilenet_v3_s", "classify10",
+                               mobilenet_v3_s_init, mobilenet_v3_s_apply,
+                               _img_example, dict(steps=700, lr=2e-3)),
+    "effnet_lite_s": ModelDef("effnet_lite_s", "classify10",
+                              effnet_lite_s_init, effnet_lite_s_apply,
+                              _img_example, dict(steps=700, lr=2e-3)),
+    "effnet_b0_s": ModelDef("effnet_b0_s", "classify10",
+                            effnet_b0_s_init, effnet_b0_s_apply,
+                            _img_example, dict(steps=700, lr=2e-3)),
+    "vit_s": ModelDef("vit_s", "classify10", vit_s_init, vit_s_apply,
+                      _img_example, dict(steps=900, lr=1e-3)),
+    "deeplab_s": ModelDef("deeplab_s", "seg", deeplab_s_init, deeplab_s_apply,
+                          _img_example, dict(steps=700, lr=2e-3)),
+    **{f"bert_s_{t}": _bert_def(t) for t in ds.GLUE_TASKS},
+}

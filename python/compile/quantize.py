@@ -1,0 +1,352 @@
+"""Quantization graph context (L2).
+
+``QCtx`` is the instrumentation layer between the model zoo and the L1
+fake-quant kernels.  Model code is written once against ``QCtx`` ops
+(``conv``/``dense``/``add``/...) and serves three purposes:
+
+1. **Training** (``qparams=None``): ops run un-quantized; ``train.py`` uses
+   this path to pretrain the zoo at build time.
+2. **Lowering** (``qparams=(act_qp, w_scales, w_qmeta)`` as traced arrays):
+   every quantizer reads its runtime parameters from the packed arrays, so a
+   *single* lowered HLO executable evaluates any bit-width configuration.
+   Row layout (must match ``rust/src/manifest``):
+
+   - ``act_qp   : f32[A, 5]`` rows ``(scale, offset, qmin, qmax, enable)``
+   - ``w_scales : f32[W, Cmax]`` per-channel scales, zero-padded
+   - ``w_qmeta  : f32[W, 3]`` rows ``(qmin, qmax, enable)``
+
+3. **Spec collection** (``collect=True`` with concrete inputs): records the
+   quantizer list, per-layer MAC counts (Eq. 5 BOPs substrate) and the
+   quantizer groups (§3.4) that the Rust coordinator consumes via
+   ``manifest.json``.
+
+Quantizer-group semantics (§3.4): an integer kernel on device is selected by
+(weight bits, *input* activation bits) of an op.  We therefore union, for
+every weighted op, its weight quantizer with the activation quantizer(s)
+producing its input.  Activation quantizers that feed no weighted op (e.g.
+final logits) form weightless groups with zero BOPs gain and are pinned to
+the baseline by the search.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fake_quant as fqk
+from .kernels import ref as fqr
+
+# Pallas kernels are the default; MPQ_NO_PALLAS=1 switches to the jnp oracle
+# (used by tests to diff the two lowerings).
+USE_PALLAS = os.environ.get("MPQ_NO_PALLAS", "0") != "1"
+
+
+class QT:
+    """A tensor tagged with the activation quantizer that produced it."""
+
+    __slots__ = ("a", "src")
+
+    def __init__(self, a, src=None):
+        self.a = a
+        self.src = src  # act quantizer id or None (e.g. token ids)
+
+    @property
+    def shape(self):
+        return self.a.shape
+
+
+class _UnionFind:
+    def __init__(self):
+        self.parent = {}
+
+    def find(self, x):
+        self.parent.setdefault(x, x)
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def union(self, a, b):
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[rb] = ra
+
+
+class QCtx:
+    """See module docstring.  One instance per trace/collect run."""
+
+    def __init__(self, qparams=None, collect=False, perts=None,
+                 fit_mode=False, capture_taps=False):
+        self.qparams = qparams  # None | (act_qp, w_scales, w_qmeta)
+        self.collect = collect
+        self.act_q = []      # [{name, numel}]
+        self.w_q = []        # [{name, channels, weight, channel_axis}]
+        self.weights = []    # [{name, shape}] in traversal order
+        self._weight_idx = {}
+        self.layers = []     # [{name, macs, w_q, in_acts}]
+        self._uf = _UnionFind()
+        # FIT metric support: forward runs FP, but each quantizer's *local*
+        # quantization MSE (given its act_qp row) is collected, and a zero
+        # perturbation input is added after each quantizer so grad-wrt-pert
+        # yields dL/d(activation) for the Fisher term.
+        self.perts = perts          # list of zero arrays (traced) or None
+        self.fit_mode = fit_mode
+        self.fit_errs = []          # traced scalars, one per act quantizer
+        # AdaRound support: capture each weighted op's input tensor.
+        self.capture_taps = capture_taps
+        self.taps = []              # [(layer_name, traced array)]
+        # Range-calibration support: capture every act quantizer's input.
+        self.capture_acts = False
+        self.captured_acts = []     # traced arrays, one per act quantizer
+
+    # -- quantizer registration -------------------------------------------
+
+    def _new_act_q(self, name, x):
+        qid = len(self.act_q)
+        if self.collect:
+            self.act_q.append({"name": name, "numel": int(np.prod(x.shape[1:]))})
+        else:
+            self.act_q.append({"name": name})
+        return qid
+
+    def _new_w_q(self, name, w, channel_axis):
+        qid = len(self.w_q)
+        self.w_q.append(
+            {
+                "name": name,
+                "channels": int(w.shape[channel_axis]),
+                "weight": name,
+                "channel_axis": channel_axis,
+            }
+        )
+        return qid
+
+    def _reg_weight(self, name, w):
+        if name in self._weight_idx:
+            raise ValueError(f"duplicate weight {name}")
+        self._weight_idx[name] = len(self.weights)
+        self.weights.append({"name": name, "shape": [int(s) for s in w.shape]})
+
+    # -- fake-quant application -------------------------------------------
+
+    def _fq_act(self, x, qid):
+        if self.qparams is None:
+            return x
+        act_qp, _, _ = self.qparams
+        r = act_qp[qid]
+        fn = fqk.fake_quant_act if USE_PALLAS else fqr.fake_quant_act_ref
+        return fn(x, r[0], r[1], r[2], r[3], r[4])
+
+    def _fq_w(self, w, wid, channels, channel_axis):
+        if self.qparams is None:
+            return w
+        _, w_scales, w_qmeta = self.qparams
+        if w_scales is None:  # FIT mode: weights stay FP
+            return w
+        sc = w_scales[wid, :channels]
+        m = w_qmeta[wid]
+        fn = fqk.fake_quant_weight if USE_PALLAS else fqr.fake_quant_weight_ref
+        return fn(w, sc, m[0], m[1], m[2], channel_axis=channel_axis)
+
+    def quant_act(self, x, name, src_of=None):
+        """Insert an activation quantizer; returns a tagged QT."""
+        qid = self._new_act_q(name, x)
+        if self.capture_acts:
+            self.captured_acts.append(x)
+        if self.fit_mode:
+            act_qp, _, _ = self.qparams
+            r = act_qp[qid]
+            xq = fqr.fake_quant_act_ref(x, r[0], r[1], r[2], r[3], 1.0)
+            self.fit_errs.append(jnp.mean((x - xq) ** 2))
+            y = x  # FP forward for the Fisher gradients
+        else:
+            y = self._fq_act(x, qid)
+        if self.perts is not None:
+            y = y + self.perts[qid]
+        return QT(y, qid)
+
+    # -- graph bookkeeping --------------------------------------------------
+
+    def _record_op(self, name, macs, w_qid, in_srcs, op_cfg=None):
+        rec = {
+            "name": name,
+            "macs": int(macs),
+            "w_q": w_qid,
+            "in_acts": [s for s in in_srcs if s is not None],
+        }
+        if op_cfg:
+            rec.update(op_cfg)
+        self.layers.append(rec)
+        for s in in_srcs:
+            if s is not None:
+                self._uf.union(("w", w_qid), ("a", s))
+
+    def _record_eltwise(self, srcs):
+        """§3.4: inputs of a shared (weightless) op — add, mul, concat —
+        must be quantized to the same precision, so their quantizers are
+        unioned into one group."""
+        srcs = [s for s in srcs if s is not None]
+        for a, b in zip(srcs, srcs[1:]):
+            self._uf.union(("a", a), ("a", b))
+
+    # -- ops -----------------------------------------------------------------
+
+    def input(self, x, name="input"):
+        return self.quant_act(x, name)
+
+    def tokens(self, t):
+        """Integer token ids: no quantizer."""
+        return QT(t, None)
+
+    def conv(self, qt, w, b, name, stride=1, padding="SAME", groups=1, act=None):
+        """2-D conv, NCHW/OIHW.  Weight per-channel quant over axis 0."""
+        if self.capture_taps:
+            self.taps.append((name, qt.a))
+        self._reg_weight(name + ".w", w)
+        wid = self._new_w_q(name + ".w", w, 0)
+        wq = self._fq_w(w, wid, int(w.shape[0]), 0)
+        s = (stride, stride) if isinstance(stride, int) else stride
+        y = jax.lax.conv_general_dilated(
+            qt.a,
+            wq,
+            window_strides=s,
+            padding=padding,
+            feature_group_count=groups,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        y = y + b.reshape(1, -1, 1, 1)
+        cout, cin_g, kh, kw = w.shape
+        ho, wo = int(y.shape[2]), int(y.shape[3])
+        macs = ho * wo * cout * cin_g * kh * kw
+        self._record_op(
+            name, macs, wid, [qt.src],
+            op_cfg={
+                "kind": "conv",
+                "stride": s[0],
+                "padding": padding,
+                "groups": groups,
+                "in_shape": [int(d) for d in qt.a.shape],
+            } if self.collect else None,
+        )
+        if act is not None:
+            y = act(y)
+        return self.quant_act(y, name + ".out")
+
+    def dense(self, qt, w, b, name, act=None):
+        """Dense over the last axis.  Weight per-channel quant over out axis 1."""
+        if self.capture_taps:
+            self.taps.append((name, qt.a))
+        self._reg_weight(name + ".w", w)
+        wid = self._new_w_q(name + ".w", w, 1)
+        wq = self._fq_w(w, wid, int(w.shape[1]), 1)
+        y = qt.a @ wq + b
+        tokens = int(np.prod(qt.a.shape[1:-1])) if qt.a.ndim > 2 else 1
+        macs = tokens * int(w.shape[0]) * int(w.shape[1])
+        self._record_op(
+            name, macs, wid, [qt.src],
+            op_cfg={
+                "kind": "dense",
+                "in_shape": [int(d) for d in qt.a.shape],
+            } if self.collect else None,
+        )
+        if act is not None:
+            y = act(y)
+        return self.quant_act(y, name + ".out")
+
+    def add(self, a, b, name):
+        """Residual add; the sum gets a fresh quantizer and the two inputs
+        are constrained to one group (§3.4)."""
+        self._record_eltwise([a.src, b.src])
+        return self.quant_act(a.a + b.a, name + ".out")
+
+    def mul(self, a, b, name):
+        """Elementwise/broadcast mul (SE gating); fresh quantizer, grouped
+        inputs (§3.4)."""
+        self._record_eltwise([a.src, b.src])
+        return self.quant_act(a.a * b.a, name + ".out")
+
+    def concat(self, parts, name, axis=1):
+        """Channel concat; grouped inputs (§3.4), fresh output quantizer."""
+        self._record_eltwise([t.src for t in parts])
+        return self.quant_act(
+            jnp.concatenate([t.a for t in parts], axis=axis), name + ".out"
+        )
+
+    def const_gain(self, qt, gain, name):
+        """Fixed per-channel gain baked into the graph (outlier inducement —
+        see DESIGN.md §3).  The scaled tensor gets a fresh quantizer, whose
+        wide range is exactly the pathology the paper observes in
+        MobileNetV3 / EfficientNet-b0 / ViT / BERT."""
+        g = jnp.asarray(gain, jnp.float32).reshape(1, -1, *([1] * (qt.a.ndim - 2)))
+        return self.quant_act(qt.a * g, name + ".out")
+
+    def layer_norm(self, qt, g, b, name, eps=1e-5):
+        """LayerNorm over last axis (FP compute, quantized output)."""
+        x = qt.a
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        y = (x - mu) / jnp.sqrt(var + eps) * g + b
+        return self.quant_act(y, name + ".out")
+
+    def global_pool(self, qt, name):
+        """Global average pool NCHW→NC; fresh quantizer (range changes)."""
+        return self.quant_act(qt.a.mean((2, 3)), name + ".out")
+
+    def avg_pool2(self, qt, name):
+        """2×2 average pool, stride 2; reuses the input quantizer tag (an
+        average never widens the range, matching deployed graphs where the
+        pool runs in the producer's precision)."""
+        x = qt.a
+        y = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        ) / 4.0
+        return QT(y, qt.src)
+
+    def softmax_attention(self, q, k, v, name, scale):
+        """FP attention core (QKᵀ softmax V); output gets a quantizer.
+        The two act×act matmuls carry no weight quantizer; their MACs are
+        negligible at this scale (documented in DESIGN.md)."""
+        att = jax.nn.softmax((q.a @ jnp.swapaxes(k.a, -1, -2)) * scale, axis=-1)
+        return self.quant_act(att @ v.a, name + ".att.out")
+
+    def upsample2d(self, qt, factor, name):
+        """Nearest-neighbour upsample; reuses producer quantizer."""
+        x = qt.a
+        x = jnp.repeat(jnp.repeat(x, factor, axis=2), factor, axis=3)
+        return QT(x, qt.src)
+
+    # -- spec export -----------------------------------------------------------
+
+    def spec(self):
+        """Manifest fragment: quantizers, layers, groups (collect mode)."""
+        assert self.collect
+        # group ids from union-find roots; stable ordering by first member
+        roots = {}
+        groups = []
+
+        def gid_of(node):
+            r = self._uf.find(node)
+            if r not in roots:
+                roots[r] = len(groups)
+                groups.append({"w_q": [], "act_q": [], "macs": 0})
+            return roots[r]
+
+        for i in range(len(self.w_q)):
+            groups[gid_of(("w", i))]["w_q"].append(i)
+        for i in range(len(self.act_q)):
+            groups[gid_of(("a", i))]["act_q"].append(i)
+        for lay in self.layers:
+            groups[gid_of(("w", lay["w_q"]))]["macs"] += lay["macs"]
+        return {
+            "act_quantizers": self.act_q,
+            "w_quantizers": [
+                {k: v for k, v in d.items()} for d in self.w_q
+            ],
+            "weights": self.weights,
+            "layers": self.layers,
+            "groups": groups,
+            "total_macs": int(sum(l["macs"] for l in self.layers)),
+        }

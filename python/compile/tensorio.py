@@ -1,0 +1,61 @@
+"""Binary tensor interchange between the python build path and Rust.
+
+Format ("MPQT"): little-endian throughout.
+
+    u32 magic = 0x4D505154 ("MPQT")
+    u8  dtype   (0 = f32, 1 = i32)
+    u8  ndim
+    u16 reserved = 0
+    u32 dims[ndim]
+    payload (dtype, C-order)
+
+Multiple tensors may be concatenated in one file; readers consume
+sequentially.  The Rust counterpart lives in ``rust/src/tensor/io.rs``.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x4D505154
+_DT = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensor(f, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in _DT:
+        raise TypeError(f"unsupported dtype {arr.dtype}")
+    f.write(struct.pack("<IBBH", MAGIC, _DT[arr.dtype], arr.ndim, 0))
+    f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+    f.write(arr.tobytes())
+
+
+def write_tensors(path, arrays) -> None:
+    with open(path, "wb") as f:
+        for a in arrays:
+            write_tensor(f, a)
+
+
+def read_tensor(f):
+    hdr = f.read(8)
+    if not hdr:
+        return None
+    magic, dt, ndim, _ = struct.unpack("<IBBH", hdr)
+    assert magic == MAGIC, f"bad magic {magic:#x}"
+    dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+    dtype = np.float32 if dt == 0 else np.int32
+    n = int(np.prod(dims)) if ndim else 1
+    data = np.frombuffer(f.read(n * 4), dtype=dtype)
+    return data.reshape(dims)
+
+
+def read_tensors(path):
+    out = []
+    with open(path, "rb") as f:
+        while True:
+            t = read_tensor(f)
+            if t is None:
+                return out
+            out.append(t)

@@ -1,0 +1,172 @@
+"""Build-time pretraining of the model zoo.
+
+The paper starts from *converged pre-trained* networks; quantization
+sensitivity is only meaningful on such networks.  Since no pretrained
+checkpoints exist for our synthetic benchmarks, ``make artifacts`` trains
+each zoo model to convergence here (seconds per model on CPU — the models
+are miniatures) and freezes the weights into ``artifacts/``.
+
+This file is build-path only; it is never lowered and never touches the
+Rust runtime.  A hand-rolled Adam keeps the dependency set to jax+numpy.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as ds
+from . import models as M
+from .quantize import QCtx
+
+TRAIN_N = 8192
+VAL_N = 2048
+
+
+def _loss_fn(task):
+    if task == "classify10" or task.startswith("glue:"):
+        gtask = task.split(":", 1)[1] if ":" in task else None
+        if gtask == "stsb_s":
+            def loss(logits, y):
+                return jnp.mean((logits[:, 0] - y) ** 2)
+            return loss
+
+        def loss(logits, y):
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(
+                logp, y.astype(jnp.int32)[:, None], axis=1))
+        return loss
+    if task == "seg":
+        def loss(logits, y):
+            # logits B,C,H,W ; y B,H,W
+            logp = jax.nn.log_softmax(logits, axis=1)
+            oh = jax.nn.one_hot(y, ds.SEG_CLASSES, axis=1)
+            return -jnp.mean(jnp.sum(logp * oh, axis=1))
+        return loss
+    raise ValueError(task)
+
+
+def task_data(task, split, n, seed=0):
+    """Unified (x, y) loader for a ModelDef task string."""
+    if task == "classify10":
+        return ds.synthnet(split, n, seed)
+    if task == "seg":
+        return ds.synthseg(split, n, seed)
+    if task.startswith("glue:"):
+        return ds.synthglue(task.split(":", 1)[1], split, n, seed)
+    raise ValueError(task)
+
+
+def metric(task, logits, y):
+    """Build-time metric (mirrored by rust/src/metrics at run time)."""
+    logits = np.asarray(logits)
+    y = np.asarray(y)
+    if task == "classify10" or task.split(":")[-1] in ("rte_s", "sst2_s", "mnli_s"):
+        return float((logits.argmax(-1) == y.astype(np.int64)).mean())
+    if task.endswith("mrpc_s"):
+        pred = logits.argmax(-1)
+        yt = y.astype(np.int64)
+        tp = float(((pred == 1) & (yt == 1)).sum())
+        fp = float(((pred == 1) & (yt == 0)).sum())
+        fn = float(((pred == 0) & (yt == 1)).sum())
+        denom = 2 * tp + fp + fn
+        return 2 * tp / denom if denom > 0 else 0.0
+    if task.endswith("stsb_s"):
+        p = logits[:, 0]
+        pc = np.corrcoef(p, y)[0, 1]
+        return float(0.0 if np.isnan(pc) else pc)
+    if task == "seg":
+        pred = logits.argmax(1)
+        ious = []
+        for c in range(ds.SEG_CLASSES):
+            inter = float(((pred == c) & (y == c)).sum())
+            union = float(((pred == c) | (y == c)).sum())
+            if union > 0:
+                ious.append(inter / union)
+        return float(np.mean(ious))
+    raise ValueError(task)
+
+
+def _adam_init(params):
+    z = {k: np.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: np.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def eval_model(mdef: M.ModelDef, params, seed: int = 0):
+    """FP32 validation metric for given weights (no training)."""
+    names = list(params.keys())
+    vx, vy = task_data(mdef.task, "val", VAL_N, seed)
+    batch = M.BATCH
+    plist = [jnp.asarray(params[k]) for k in names]
+    apply_j = jax.jit(lambda pl, x: mdef.apply(QCtx(qparams=None),
+                                               dict(zip(names, pl)), x))
+    outs = []
+    for i in range(0, len(vx) - batch + 1, batch):
+        outs.append(np.asarray(apply_j(plist, jnp.asarray(vx[i:i + batch]))))
+    logits = np.concatenate(outs)
+    return metric(mdef.task, logits, vy[: len(logits)])
+
+
+def train_model(mdef: M.ModelDef, seed: int = 0, verbose: bool = True):
+    """Train one zoo model; returns (params, fp32_val_metric)."""
+    rng = np.random.default_rng(seed + 17)
+    params = mdef.init(rng)
+    loss_fn = _loss_fn(mdef.task)
+    names = list(params.keys())
+
+    def fwd_loss(plist, x, y):
+        p = dict(zip(names, plist))
+        ctx = QCtx(qparams=None)
+        logits = mdef.apply(ctx, p, x)
+        return loss_fn(logits, y)
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda pl, x, y: fwd_loss(pl, x, y)))
+
+    xs, ys = task_data(mdef.task, "train", TRAIN_N, seed)
+    vx, vy = task_data(mdef.task, "val", VAL_N, seed)
+    cfg = mdef.train_cfg
+    lr, steps, batch = cfg["lr"], cfg["steps"], M.BATCH
+    opt = _adam_init(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    plist = [jnp.asarray(params[k]) for k in names]
+
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, len(xs), size=batch)
+        loss, grads = grad_fn(plist, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        opt["t"] += 1
+        t = opt["t"]
+        new = []
+        for k, pv, g in zip(names, plist, grads):
+            m = opt["m"][k] = b1 * opt["m"][k] + (1 - b1) * np.asarray(g)
+            v = opt["v"][k] = b2 * opt["v"][k] + (1 - b2) * np.asarray(g) ** 2
+            mh = m / (1 - b1**t)
+            vh = v / (1 - b2**t)
+            new.append(pv - lr * mh / (np.sqrt(vh) + eps))
+        plist = [jnp.asarray(p) for p in new]
+        if verbose and (step % 200 == 0 or step == steps - 1):
+            print(f"  [{mdef.name}] step {step:4d} loss {float(loss):.4f}", flush=True)
+
+    params = {k: np.asarray(v, np.float32) for k, v in zip(names, plist)}
+
+    # fp32 validation metric
+    apply_j = jax.jit(lambda pl, x: mdef.apply(QCtx(qparams=None),
+                                               dict(zip(names, pl)), x))
+    outs = []
+    for i in range(0, len(vx), batch):
+        xb = vx[i:i + batch]
+        if len(xb) < batch:  # pad tail to static batch
+            pad = batch - len(xb)
+            xb = np.concatenate([xb, xb[:pad]])
+            outs.append(np.asarray(apply_j(plist, jnp.asarray(xb)))[: batch - pad])
+        else:
+            outs.append(np.asarray(apply_j(plist, jnp.asarray(xb))))
+    logits = np.concatenate(outs)
+    m = metric(mdef.task, logits, vy)
+    if verbose:
+        print(f"  [{mdef.name}] trained in {time.time()-t0:.1f}s, "
+              f"fp32 val metric = {m:.4f}", flush=True)
+    return params, m

@@ -1,0 +1,82 @@
+"""Dataset generators: determinism, label semantics, split disjointness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets as ds
+
+
+def test_synthnet_deterministic():
+    a = ds.synthnet("train", 64)
+    b = ds.synthnet("train", 64)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_splits_differ():
+    a, _ = ds.synthnet("train", 64)
+    b, _ = ds.synthnet("val", 64)
+    assert not np.allclose(a, b)
+
+
+def test_synthnet_shapes_and_labels():
+    x, y = ds.synthnet("train", 100)
+    assert x.shape == (100, 3, ds.IMG, ds.IMG)
+    assert x.dtype == np.float32
+    assert y.min() >= 0 and y.max() < ds.N_CLASSES
+
+
+def test_synthood_statistically_different():
+    a, _ = ds.synthnet("calib", 256)
+    b, _ = ds.synthood("calib", 256)
+    # different generators → clearly different second moments per channel
+    assert abs(a.std() - b.std()) > 0.05 or abs(a.mean() - b.mean()) > 0.05
+
+
+def test_synthseg_mask_semantics():
+    x, y = ds.synthseg("train", 50)
+    assert y.shape == (50, ds.IMG, ds.IMG)
+    assert set(np.unique(y)).issubset({0, 1, 2})
+    # every image has some background
+    assert all((y[i] == 0).any() for i in range(50))
+
+
+@settings(max_examples=10, deadline=None)
+@given(task=st.sampled_from(list(ds.GLUE_TASKS)), seed=st.integers(0, 100))
+def test_synthglue_label_ranges(task, seed):
+    toks, ys = ds.synthglue(task, "train", 64, seed)
+    assert toks.shape == (64, ds.SEQ_LEN)
+    assert toks.min() >= 0 and toks.max() < ds.VOCAB
+    n_out, _ = ds.GLUE_TASKS[task]
+    if task == "stsb_s":
+        assert ys.min() >= 0.0 and ys.max() <= 1.0
+    else:
+        assert set(np.unique(ys)).issubset(set(float(i) for i in range(n_out)))
+
+
+def test_rte_entailment_rule():
+    """positives: hypothesis tokens ⊆ premise tokens."""
+    toks, ys = ds.synthglue("rte_s", "train", 200, 0)
+    for t, y in zip(toks, ys):
+        seq = [int(v) for v in t if v != ds.PAD]
+        # [CLS] a... [SEP] b... [SEP]
+        sep1 = seq.index(ds.SEP)
+        a = set(seq[1:sep1])
+        b = set(seq[sep1 + 1:-1])
+        assert (float(b.issubset(a)) == y) or y == 1.0 and b.issubset(a) or y == 0.0
+
+
+def test_sst2_rule():
+    toks, ys = ds.synthglue("sst2_s", "train", 200, 1)
+    for t, y in zip(toks, ys):
+        seq = [int(v) for v in t if v not in (ds.PAD, ds.CLS, ds.SEP)]
+        pos = sum(v in ds.POS_TOKENS for v in seq)
+        neg = sum(v in ds.NEG_TOKENS for v in seq)
+        assert float(pos >= neg) == y
+
+
+def test_glue_classes_reasonably_balanced():
+    _, ys = ds.synthglue("mnli_s", "train", 600, 0)
+    counts = np.bincount(ys.astype(int), minlength=3)
+    assert counts.min() > 100

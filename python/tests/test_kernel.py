@@ -1,0 +1,104 @@
+"""L1 correctness: Pallas fake-quant kernels vs the pure-jnp oracle.
+
+The CORE correctness signal for the compute layer — hypothesis sweeps
+shapes, scales, offsets and bit-widths and asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant as fqk
+from compile.kernels import ref
+
+SHAPES = st.lists(st.integers(1, 9), min_size=1, max_size=4)
+
+
+def rand(rng, shape, scale=3.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape=SHAPES,
+    bits=st.sampled_from([4, 6, 8, 16]),
+    scale=st.floats(1e-3, 0.5),
+    seed=st.integers(0, 2**16),
+)
+def test_act_kernel_matches_ref(shape, bits, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand(rng, tuple(shape)))
+    levels = float(2**bits - 1)
+    off = float(rng.integers(0, levels))
+    a = fqk.fake_quant_act(
+        x, jnp.float32(scale), jnp.float32(off), jnp.float32(0),
+        jnp.float32(levels), jnp.float32(1.0))
+    b = ref.fake_quant_act_ref(x, scale, off, 0.0, levels, 1.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    cout=st.integers(1, 12),
+    rest=st.lists(st.integers(1, 6), min_size=1, max_size=3),
+    bits=st.sampled_from([4, 8]),
+    axis_last=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_weight_kernel_matches_ref(cout, rest, bits, axis_last, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rest) + (cout,) if axis_last else (cout,) + tuple(rest)
+    axis = len(shape) - 1 if axis_last else 0
+    w = jnp.asarray(rand(rng, shape, 1.0))
+    sc = jnp.asarray(np.abs(rng.standard_normal(cout)).astype(np.float32) * 0.1 + 1e-3)
+    qmax = float(2 ** (bits - 1) - 1)
+    a = fqk.fake_quant_weight(w, sc, -qmax, qmax, 1.0, channel_axis=axis)
+    b = ref.fake_quant_weight_ref(w, sc, -qmax, qmax, 1.0, channel_axis=axis)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_enable_zero_is_identity():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rand(rng, (5, 7)))
+    y = fqk.fake_quant_act(x, jnp.float32(0.05), jnp.float32(3.0),
+                           jnp.float32(0), jnp.float32(255), jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_quantized_values_on_grid():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rand(rng, (64,)))
+    s, o = 0.07, 11.0
+    y = np.asarray(fqk.fake_quant_act(
+        x, jnp.float32(s), jnp.float32(o), jnp.float32(0),
+        jnp.float32(255), jnp.float32(1.0)))
+    q = y / s + o
+    np.testing.assert_allclose(q, np.round(q), atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_fq_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand(rng, (m, k), 1.0))
+    w = jnp.asarray(rand(rng, (k, n), 1.0))
+    a = fqk.matmul_fq(x, w, 0.1, 0.0, -128.0, 127.0, 1.0)
+    b = ref.matmul_fq_ref(x, w, 0.1, 0.0, -128.0, 127.0, 1.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_idempotence():
+    """fq(fq(x)) == fq(x) — quantization is a projection."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rand(rng, (33,)))
+    args = (jnp.float32(0.03), jnp.float32(7.0), jnp.float32(0),
+            jnp.float32(255), jnp.float32(1.0))
+    y1 = fqk.fake_quant_act(x, *args)
+    y2 = fqk.fake_quant_act(y1, *args)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)

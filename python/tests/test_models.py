@@ -1,0 +1,61 @@
+"""Model zoo: output shapes, trainability smoke, outlier inducement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets as ds
+from compile import models as M
+from compile import train as T
+from compile.quantize import QCtx
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_output_shapes(name):
+    d = M.MODELS[name]
+    p = d.init(np.random.default_rng(0))
+    out = d.apply(QCtx(qparams=None), p, jnp.asarray(d.example(2)))
+    if d.task == "seg":
+        assert out.shape == (2, ds.SEG_CLASSES, ds.IMG, ds.IMG)
+    elif d.task == "classify10":
+        assert out.shape == (2, ds.N_CLASSES)
+    else:
+        n_out, _ = ds.GLUE_TASKS[d.task.split(":")[1]]
+        assert out.shape == (2, n_out)
+
+
+def test_short_training_reduces_loss():
+    d = M.MODELS["resnet_s"]
+    d2 = M.ModelDef(d.name, d.task, d.init, d.apply, d.example,
+                    dict(steps=30, lr=2e-3))
+    params, metric = T.train_model(d2, verbose=False)
+    assert metric > 2.0 / ds.N_CLASSES  # clearly better than chance
+
+
+def test_outlier_models_have_wide_activations():
+    """The baked-in channel gains must produce visibly wider activation
+    ranges at the .amp site than at its producer (the Fig. 3 premise)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(ds.synthnet("train", 8)[0])
+    d = M.MODELS["mobilenet_v3_s"]
+    p = d.init(rng)
+    ctx = QCtx(qparams=None)
+    ctx.capture_acts = True
+    d.apply(ctx, p, x)
+    names = [q["name"] for q in ctx.act_q]
+    ranges = {n: float(jnp.max(jnp.abs(a))) for n, a in zip(names, ctx.captured_acts)}
+    amp = next(n for n in names if ".amp." in n)
+    dw = next(n for n in names if n.startswith("b2.dw"))
+    assert ranges[amp] > 4.0 * ranges[dw], (ranges[amp], ranges[dw])
+
+
+def test_metric_helpers():
+    logits = np.array([[2.0, 1.0], [0.0, 3.0]], np.float32)
+    y = np.array([0.0, 1.0], np.float32)
+    assert T.metric("classify10", logits, y) == 1.0
+    assert T.metric("glue:mrpc_s", logits, y) == 1.0
+    # pearson on stsb-style
+    l2 = np.array([[0.1], [0.5], [0.9]], np.float32)
+    y2 = np.array([0.0, 0.5, 1.0], np.float32)
+    assert T.metric("glue:stsb_s", l2, y2) > 0.99

@@ -1,0 +1,96 @@
+"""QCtx spec invariants: quantizer registration, MAC accounting, quantizer
+groups (§3.4) — the metadata contract the Rust coordinator depends on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+from compile.quantize import QCtx
+
+ZOO = ["resnet_s", "mobilenet_v3_s", "vit_s", "bert_s_mnli_s", "deeplab_s"]
+
+
+@pytest.fixture(scope="module")
+def specs():
+    out = {}
+    rng = np.random.default_rng(0)
+    for name in ZOO:
+        d = M.MODELS[name]
+        p = d.init(rng)
+        ctx = QCtx(collect=True)
+        logits = d.apply(ctx, p, jnp.asarray(d.example(2)))
+        out[name] = (ctx.spec(), logits, p)
+    return out
+
+
+def test_groups_partition_quantizers(specs):
+    for name, (spec, _, _) in specs.items():
+        a_seen = [0] * len(spec["act_quantizers"])
+        w_seen = [0] * len(spec["w_quantizers"])
+        for g in spec["groups"]:
+            for a in g["act_q"]:
+                a_seen[a] += 1
+            for w in g["w_q"]:
+                w_seen[w] += 1
+        assert all(c == 1 for c in a_seen), name
+        assert all(c == 1 for c in w_seen), name
+
+
+def test_group_macs_sum_to_total(specs):
+    for name, (spec, _, _) in specs.items():
+        assert sum(g["macs"] for g in spec["groups"]) == spec["total_macs"], name
+        assert sum(l["macs"] for l in spec["layers"]) == spec["total_macs"], name
+
+
+def test_every_layer_input_act_in_its_group(specs):
+    """§3.4: an op's weight quantizer and its input activation quantizers
+    must share a group (they select one kernel)."""
+    for name, (spec, _, _) in specs.items():
+        for lay in spec["layers"]:
+            g = next(g for g in spec["groups"] if lay["w_q"] in g["w_q"])
+            for a in lay["in_acts"]:
+                assert a in g["act_q"], f"{name}:{lay['name']}"
+
+
+def test_conv_macs_formula():
+    """stem conv of resnet_s: 16×16 out, 16 cout, 3 cin, 3×3 kernel."""
+    d = M.MODELS["resnet_s"]
+    p = d.init(np.random.default_rng(0))
+    ctx = QCtx(collect=True)
+    d.apply(ctx, p, jnp.asarray(d.example(2)))
+    stem = next(l for l in ctx.layers if l["name"] == "stem")
+    assert stem["macs"] == 16 * 16 * 16 * 3 * 3 * 3
+
+
+def test_fp_and_collect_agree_on_output(specs):
+    for name, (_, logits, p) in specs.items():
+        d = M.MODELS[name]
+        out2 = d.apply(QCtx(qparams=None), p, jnp.asarray(d.example(2)))
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(out2), atol=1e-5)
+
+
+def test_quantized_path_close_to_fp_at_16bit():
+    d = M.MODELS["resnet_s"]
+    p = d.init(np.random.default_rng(3))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=d.example(2).shape).astype(np.float32))
+    fp = d.apply(QCtx(qparams=None), p, x)
+
+    ctx = QCtx(collect=True)
+    d.apply(ctx, p, x)
+    A, W = len(ctx.act_q), len(ctx.w_q)
+    cmax = max(q["channels"] for q in ctx.w_q)
+    # 16-bit acts via generous symmetric ranges (offset at mid-grid so
+    # negative activations aren't clipped), weights FP
+    act = np.tile(np.array([1.5e-3, 32768, 0, 65535, 1], np.float32), (A, 1))
+    wsc = np.ones((W, cmax), np.float32)
+    wm = np.tile(np.array([-1, 1, 0], np.float32), (W, 1))
+    q = d.apply(QCtx(qparams=(jnp.asarray(act), jnp.asarray(wsc), jnp.asarray(wm))), p, x)
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(q), atol=2e-2, rtol=1e-3)
+
+
+def test_weightless_groups_have_zero_macs(specs):
+    for name, (spec, _, _) in specs.items():
+        for g in spec["groups"]:
+            if not g["w_q"]:
+                assert g["macs"] == 0, name

@@ -1,0 +1,55 @@
+"""MPQT interchange format roundtrips (python side; mirrored in rust)."""
+
+import io
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import tensorio as tio
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 8), min_size=0, max_size=4),
+    use_int=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_roundtrip(shape, use_int, seed):
+    rng = np.random.default_rng(seed)
+    if use_int:
+        a = rng.integers(-1000, 1000, size=shape).astype(np.int32)
+    else:
+        a = rng.standard_normal(shape).astype(np.float32)
+    buf = io.BytesIO()
+    tio.write_tensor(buf, a)
+    buf.seek(0)
+    b = tio.read_tensor(buf)
+    assert b.dtype == a.dtype
+    np.testing.assert_array_equal(a, b)
+
+
+def test_multi_tensor_stream():
+    buf = io.BytesIO()
+    ts = [np.arange(6, dtype=np.float32).reshape(2, 3),
+          np.arange(4, dtype=np.int32)]
+    for t in ts:
+        tio.write_tensor(buf, t)
+    buf.seek(0)
+    out = []
+    while True:
+        t = tio.read_tensor(buf)
+        if t is None:
+            break
+        out.append(t)
+    assert len(out) == 2
+    np.testing.assert_array_equal(out[0], ts[0])
+    np.testing.assert_array_equal(out[1], ts[1])
+
+
+def test_rejects_float64():
+    buf = io.BytesIO()
+    try:
+        tio.write_tensor(buf, np.zeros(3, np.float64))
+        assert False, "should reject f64"
+    except TypeError:
+        pass

@@ -1,0 +1,20 @@
+//! `cargo bench --bench fig2_metric_robustness` — regenerates Fig 2: calibration-robustness of acc/SQNR/FIT metrics
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("fig2_metric_robustness", "Fig 2: calibration-robustness of acc/SQNR/FIT metrics") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let (a, b) = experiments::fig2(&opts).expect("fig2");
+    a.print();
+    b.print();
+    a.save(mpq::report::results_dir(), "fig2_curves").unwrap();
+    b.save(mpq::report::results_dir(), "fig2_ktau").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

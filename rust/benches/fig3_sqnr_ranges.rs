@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig3_sqnr_ranges` — regenerates Fig 3: per-network SQNR ranges at W8A8
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("fig3_sqnr_ranges", "Fig 3: per-network SQNR ranges at W8A8") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::fig3(&opts).expect("fig3");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "fig3").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

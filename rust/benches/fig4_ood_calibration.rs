@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig4_ood_calibration` — regenerates Fig 4: out-of-domain calibration data
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("fig4_ood_calibration", "Fig 4: out-of-domain calibration data") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::fig4(&opts).expect("fig4");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "fig4").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

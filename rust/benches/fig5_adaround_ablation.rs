@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig5_adaround_ablation` — regenerates Fig 5: AdaRound interweaving ablation
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("fig5_adaround_ablation", "Fig 5: AdaRound interweaving ablation") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::fig5(&opts).expect("fig5");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "fig5").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

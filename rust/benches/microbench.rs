@@ -1,0 +1,98 @@
+//! `cargo bench --bench microbench` — hot-path microbenchmarks used by the
+//! §Perf pass: forward-pass latency per configuration, qparam
+//! materialization, config-buffer upload, SQNR aggregation, flip-sequence
+//! construction, and the host-side quantization substrate.
+
+use mpq::bench::{bench, bench_result};
+use mpq::coordinator::Pipeline;
+use mpq::groups::Lattice;
+use mpq::model::QuantConfig;
+use mpq::quant;
+use mpq::sensitivity;
+use mpq::tensor::Tensor;
+use std::collections::HashMap;
+
+fn main() {
+    if !mpq::bench::preamble("microbench", "hot-path microbenchmarks") {
+        return;
+    }
+    let mut pipe = Pipeline::open(mpq::artifacts_dir(), "resnet_s").expect("open resnet_s");
+    pipe.calibrate(256, 0).expect("calibrate");
+
+    let entry = pipe.model.entry.clone();
+    let cfg = QuantConfig::fixed(&entry, 8, 8);
+    let cb = pipe.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+
+    // L3→PJRT: single quantized forward (the dominant cost of everything)
+    {
+        let set = pipe.calib_set().unwrap();
+        let xb = &set.batches[0];
+        bench_result("forward/one_batch_w8a8", 3, 20, || {
+            pipe.model.forward(xb, &cb).map(|_| ())
+        });
+    }
+
+    // Phase-1 probe: full SQNR pass over the calib set for one (g, c)
+    {
+        let set = pipe.calib_set().unwrap();
+        let fp = sensitivity::fp_logits(&pipe.model, set).unwrap();
+        bench("phase1/sqnr_probe_256imgs", 1, 5, || {
+            let pcfg = sensitivity::probe_config(&pipe.model, 1, mpq::groups::Candidate::new(8, 8));
+            let pcb = pipe.model.config_buffers(&pcfg, &HashMap::new()).unwrap();
+            let q = pipe.model.logits_on(set, &pcb).unwrap();
+            let _ = sensitivity::sqnr_db(&fp, &q).unwrap();
+        });
+    }
+
+    // config materialization (host-side, should be ≪ forward)
+    bench("config/qparam_tensors", 10, 200, || {
+        let _ = pipe.model.qparam_tensors(&cfg).unwrap();
+    });
+    bench("config/buffers_upload", 5, 50, || {
+        let _ = pipe.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+    });
+
+    // quant substrate: MSE weight-scale search on the largest conv
+    {
+        let wq = entry
+            .w_quantizers
+            .iter()
+            .max_by_key(|q| pipe.model.weights[q.param_idx].numel())
+            .unwrap();
+        let w = pipe.model.weights[wq.param_idx].clone();
+        let ratios = quant::default_ratios();
+        bench("quant/weight_scales_mse_largest", 2, 20, || {
+            let _ = quant::weight_scales_mse(&w, wq.channels, wq.channel_axis, 8, &ratios)
+                .unwrap();
+        });
+    }
+
+    // act-range grid accumulation (host side of calibration)
+    {
+        let mut ar = quant::ActRanges::new(1, vec![4, 6, 8, 16], quant::default_ratios());
+        let mut rng = mpq::util::Rng::new(1);
+        let data: Vec<f32> = (0..131072).map(|_| rng.f64() as f32 * 4.0 - 1.0).collect();
+        let t = Tensor::from_f32(&[131072], data).unwrap();
+        bench("quant/act_grid_accumulate_131k", 2, 20, || {
+            ar.accumulate(std::slice::from_ref(&t), 1).unwrap();
+        });
+    }
+
+    // Phase-2 ledger walk (pure host arithmetic)
+    {
+        let lat = Lattice::practical();
+        let sens = pipe.sensitivity_sqnr(&lat).unwrap();
+        bench("phase2/flip_sequence", 10, 1000, || {
+            let _ = pipe.flips(&lat, &sens);
+        });
+    }
+
+    // SQNR aggregation on host logits
+    {
+        let set = pipe.calib_set().unwrap();
+        let fp = sensitivity::fp_logits(&pipe.model, set).unwrap();
+        bench("metrics/sqnr_db_2048x10", 5, 200, || {
+            let _ = sensitivity::sqnr_db(&fp, &fp).unwrap();
+        });
+    }
+}

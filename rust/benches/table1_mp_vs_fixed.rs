@@ -1,0 +1,18 @@
+//! `cargo bench --bench table1_mp_vs_fixed` — regenerates Table 1: MP vs fixed precision
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("table1_mp_vs_fixed", "Table 1: MP vs fixed precision") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::table1(&opts).expect("table1");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "table1").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

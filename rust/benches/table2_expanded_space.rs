@@ -1,0 +1,18 @@
+//! `cargo bench --bench table2_expanded_space` — regenerates Table 2: expanded low-bit search space
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("table2_expanded_space", "Table 2: expanded low-bit search space") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::table2(&opts).expect("table2");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "table2").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

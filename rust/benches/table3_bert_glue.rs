@@ -1,0 +1,18 @@
+//! `cargo bench --bench table3_bert_glue` — regenerates Table 3: BERT GLUE-style tasks
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("table3_bert_glue", "Table 3: BERT GLUE-style tasks") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::table3(&opts).expect("table3");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "table3").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

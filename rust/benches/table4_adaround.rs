@@ -1,0 +1,18 @@
+//! `cargo bench --bench table4_adaround` — regenerates Table 4: AdaRound-integrated MP
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("table4_adaround", "Table 4: AdaRound-integrated MP") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::table4(&opts).expect("table4");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "table4").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench table5_search_runtime` — regenerates Table 5: sequential vs binary vs hybrid search run-time
+//! and times its dominant phase.  Uses the in-tree harness
+//! (rust/src/bench); criterion is unavailable offline.
+
+use mpq::experiments::{self, Opts};
+
+fn main() {
+    if !mpq::bench::preamble("table5_search_runtime", "Table 5: sequential vs binary vs hybrid search run-time") {
+        return;
+    }
+    let opts = Opts::default();
+    let t = mpq::util::Timer::start();
+    
+    let tab = experiments::table5(&opts).expect("table5");
+    tab.print();
+    tab.save(mpq::report::results_dir(), "table5").unwrap();
+    println!("total wall: {:.1}s", t.secs());
+}

@@ -1,0 +1,261 @@
+//! AdaRound integration (paper §3.5; Nagel et al. 2020).
+//!
+//! AdaRound learns, per layer, whether each weight rounds up or down, by
+//! minimizing the layer-output MSE over calibration activations with an
+//! annealed rounding regularizer:
+//!
+//! `loss(V) = ‖op(x, W) − op(x, Ŵ(V))‖² + λ Σ (1 − |2h(V)−1|^β)`,
+//! `Ŵ(V) = s · clip(⌊W/s⌋ + h(V), qmin, qmax)`, `h = clip(1.2σ(V)−0.1, 0, 1)`.
+//!
+//! The split of labour follows the three-layer architecture: the per-layer
+//! loss+gradient is an AOT artifact (`<m>.ar.<layer>.hlo.txt`, lowered with
+//! `jax.value_and_grad`), while the Adam loop, β annealing and the final
+//! hard rounding run here.  Layer input activations come from the `taps`
+//! artifact, captured once per calibration batch.
+//!
+//! Because AdaRound is *sequential and layer-wise* (paper §3.5), rounded
+//! weights are computed once per `(layer, wbits)` and stitched into any
+//! Phase-2 configuration — the cheap reuse the paper highlights.
+
+use crate::manifest::Manifest;
+use crate::model::ModelHandle;
+use crate::quant;
+use crate::sensitivity::RoundedWeights;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// AdaRound optimizer settings.
+#[derive(Clone, Debug)]
+pub struct AdaRoundCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub lambda: f32,
+    /// β anneals linearly from `beta_hi` to `beta_lo` after a 20% warmup
+    pub beta_hi: f32,
+    pub beta_lo: f32,
+    /// number of calibration batches to capture taps for
+    pub tap_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for AdaRoundCfg {
+    fn default() -> Self {
+        Self {
+            steps: 120,
+            lr: 2e-2,
+            lambda: 0.01,
+            beta_hi: 20.0,
+            beta_lo: 2.0,
+            tap_batches: 2,
+            seed: 0,
+        }
+    }
+}
+
+/// Captured layer-input activations: `taps[layer][batch]`.
+pub struct Taps {
+    per_layer: Vec<Vec<Tensor>>,
+}
+
+/// Capture layer inputs by running the FP taps executable on calibration
+/// batches.
+pub fn capture_taps(
+    handle: &ModelHandle,
+    manifest: &Manifest,
+    batches: &[xla::PjRtBuffer],
+    n_batches: usize,
+) -> Result<Taps> {
+    let taps_file = handle
+        .entry
+        .taps
+        .as_ref()
+        .ok_or_else(|| anyhow!("{} has no taps artifact", handle.entry.name))?;
+    let exe = handle.rt.load(manifest.path(taps_file))?;
+    let n_layers = handle.entry.layers.len();
+    let mut per_layer = vec![Vec::new(); n_layers];
+    for xb in batches.iter().take(n_batches) {
+        let mut args: Vec<&xla::PjRtBuffer> = vec![xb];
+        let pbufs: Vec<xla::PjRtBuffer> = handle
+            .weights
+            .iter()
+            .map(|t| handle.rt.buffer(t))
+            .collect::<Result<_>>()?;
+        args.extend(pbufs.iter());
+        let outs = exe.run_b(&args)?;
+        if outs.len() != n_layers + 1 {
+            bail!("taps exe returned {} outputs, want {}", outs.len(), n_layers + 1);
+        }
+        for (l, t) in outs.into_iter().take(n_layers).enumerate() {
+            per_layer[l].push(t);
+        }
+    }
+    Ok(Taps { per_layer })
+}
+
+/// Run AdaRound for every layer at each of `wbits_options`; returns the
+/// stitchable rounded-weight cache.
+pub fn adaround_all(
+    handle: &ModelHandle,
+    manifest: &Manifest,
+    taps: &Taps,
+    wbits_options: &[u8],
+    cfg: &AdaRoundCfg,
+) -> Result<RoundedWeights> {
+    let mut out = RoundedWeights::new();
+    for &bits in wbits_options {
+        for ar in handle.entry.adaround.clone() {
+            let pidx = handle.entry.param_idx(&ar.param)?;
+            let wq_idx = handle
+                .entry
+                .w_quantizers
+                .iter()
+                .position(|q| q.param_idx == pidx)
+                .ok_or_else(|| anyhow!("no weight quantizer for {}", ar.param))?;
+            let scales = handle
+                .w_scales
+                .get(&bits)
+                .ok_or_else(|| anyhow!("weight scales for {bits} bits missing"))?[wq_idx]
+                .clone();
+            let rounded = adaround_layer(
+                handle,
+                manifest,
+                &ar.exe,
+                &taps.per_layer[ar.tap_index],
+                pidx,
+                handle.entry.param_idx(&ar.bias)?,
+                &scales,
+                handle.entry.w_quantizers[wq_idx].channel_axis,
+                bits,
+                cfg,
+            )?;
+            out.insert((pidx, bits), rounded);
+        }
+    }
+    Ok(out)
+}
+
+/// Optimize one layer's rounding variables and return the hard-rounded,
+/// fake-quantized weight tensor.
+#[allow(clippy::too_many_arguments)]
+pub fn adaround_layer(
+    handle: &ModelHandle,
+    manifest: &Manifest,
+    exe_file: &str,
+    taps: &[Tensor],
+    param_idx: usize,
+    bias_idx: usize,
+    scales: &[f32],
+    channel_axis: usize,
+    bits: u8,
+    cfg: &AdaRoundCfg,
+) -> Result<Tensor> {
+    if taps.is_empty() {
+        bail!("no taps captured");
+    }
+    let exe = handle.rt.load(manifest.path(exe_file))?;
+    let w = &handle.weights[param_idx];
+    let b = &handle.weights[bias_idx];
+    let (qmin, qmax) = quant::weight_qrange(bits);
+
+    // initialize V so that h(V) equals the fractional part of w/s — i.e.
+    // the soft rounding starts at nearest-rounding (Nagel et al. §4)
+    let wv = w.f32s()?;
+    let view_shape = &w.shape;
+    let mut v0 = vec![0f32; wv.len()];
+    let cview = ChannelIter::new(view_shape, scales.len(), channel_axis);
+    for c in 0..scales.len() {
+        let s = scales[c].max(1e-12);
+        cview.for_each(c, |i| {
+            let frac = (wv[i] / s - (wv[i] / s).floor()).clamp(0.01, 0.99);
+            // h(V) = clip(1.2σ(V) − 0.1) ⇒ σ(V) = (h+0.1)/1.2
+            let sig = ((frac + 0.1) / 1.2).clamp(1e-4, 1.0 - 1e-4);
+            v0[i] = (sig / (1.0 - sig)).ln();
+        });
+    }
+
+    // device-resident constants
+    let w_buf = handle.rt.buffer(w)?;
+    let b_buf = handle.rt.buffer(b)?;
+    let s_buf = handle
+        .rt
+        .buffer(&Tensor::from_f32(&[scales.len()], scales.to_vec())?)?;
+    let tap_bufs: Vec<xla::PjRtBuffer> = taps
+        .iter()
+        .map(|t| handle.rt.buffer(t))
+        .collect::<Result<_>>()?;
+
+    // Adam state
+    let mut v = v0;
+    let mut m = vec![0f32; v.len()];
+    let mut s2 = vec![0f32; v.len()];
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let mut rng = Rng::new(cfg.seed ^ param_idx as u64);
+    let warmup = cfg.steps / 5;
+
+    for step in 0..cfg.steps {
+        let beta = if step < warmup {
+            cfg.beta_hi
+        } else {
+            let t = (step - warmup) as f32 / (cfg.steps - warmup).max(1) as f32;
+            cfg.beta_hi + (cfg.beta_lo - cfg.beta_hi) * t
+        };
+        let meta = Tensor::from_f32(&[4], vec![qmin, qmax, beta, cfg.lambda])?;
+        let v_t = Tensor::from_f32(&w.shape, v.clone())?;
+        let xb = &tap_bufs[rng.below(tap_bufs.len())];
+        let v_buf = handle.rt.buffer(&v_t)?;
+        let meta_buf = handle.rt.buffer(&meta)?;
+        let args: Vec<&xla::PjRtBuffer> =
+            vec![xb, &w_buf, &b_buf, &v_buf, &s_buf, &meta_buf];
+        let outs = exe.run_b(&args)?;
+        if outs.len() != 2 {
+            bail!("adaround exe returned {} outputs", outs.len());
+        }
+        let g = outs[1].f32s()?;
+        let t = (step + 1) as f32;
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        for i in 0..v.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            s2[i] = b2 * s2[i] + (1.0 - b2) * g[i] * g[i];
+            v[i] -= cfg.lr * (m[i] / bc1) / ((s2[i] / bc2).sqrt() + eps);
+        }
+    }
+
+    // hard rounding: Ŵ = s · clip(⌊W/s⌋ + (h(V) ≥ 0.5), qmin, qmax)
+    let mut out = vec![0f32; wv.len()];
+    for c in 0..scales.len() {
+        let s = scales[c].max(1e-12);
+        cview.for_each(c, |i| {
+            let h = (1.2 / (1.0 + (-v[i]).exp()) - 0.1).clamp(0.0, 1.0);
+            let up = if h >= 0.5 { 1.0 } else { 0.0 };
+            let q = ((wv[i] / s).floor() + up).clamp(qmin, qmax);
+            out[i] = q * s;
+        });
+    }
+    Tensor::from_f32(&w.shape, out)
+}
+
+/// Channel-major index iteration (same layout logic as `quant`).
+struct ChannelIter {
+    outer: usize,
+    channels: usize,
+    inner: usize,
+}
+
+impl ChannelIter {
+    fn new(shape: &[usize], channels: usize, channel_axis: usize) -> Self {
+        let outer: usize = shape[..channel_axis].iter().product();
+        let inner: usize = shape[channel_axis + 1..].iter().product();
+        Self { outer, channels, inner }
+    }
+
+    fn for_each(&self, c: usize, mut f: impl FnMut(usize)) {
+        for o in 0..self.outer {
+            let base = (o * self.channels + c) * self.inner;
+            for i in 0..self.inner {
+                f(base + i);
+            }
+        }
+    }
+}

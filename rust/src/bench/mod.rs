@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (no `criterion` in the offline crate set).
+//!
+//! `cargo bench` runs the `harness = false` binaries under `rust/benches/`;
+//! each uses [`Bench`] to time closures with warmup, iteration scaling and
+//! basic statistics, printing criterion-style lines:
+//!
+//! ```text
+//! phase1/sqnr_probe        time: [ 12.31 ms  12.58 ms  13.02 ms ]  n=32
+//! ```
+
+use crate::util::Timer;
+
+pub struct BenchResult {
+    pub name: String,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} time: [ {}  {}  {} ]  n={}",
+            self.name,
+            fmt_time(self.min_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.max_s),
+            self.iters
+        );
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:8.3} s ")
+    } else if s >= 1e-3 {
+        format!("{:8.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:8.3} µs", s * 1e6)
+    } else {
+        format!("{:8.3} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` throwaway calls, then `iters` measured calls.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    let min_s = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let max_s = samples.iter().copied().fold(0.0, f64::max);
+    let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult { name: name.to_string(), min_s, mean_s, max_s, iters: samples.len() };
+    r.print();
+    r
+}
+
+/// Fallible variant — aborts the bench binary on error (artifacts missing
+/// is a setup problem, not a measurement).
+pub fn bench_result<E: std::fmt::Debug>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> Result<(), E>,
+) -> BenchResult {
+    bench(name, warmup, iters, || f().expect("bench body failed"))
+}
+
+/// Standard bench preamble: header + artifacts guard.  Returns false (and
+/// prints a notice) when artifacts aren't built, so `cargo bench` stays
+/// green in a fresh checkout.
+pub fn preamble(bench_name: &str, what: &str) -> bool {
+    println!("### bench {bench_name} — {what}");
+    let dir = crate::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "SKIP: {}/manifest.json not found — run `make artifacts` first",
+            dir.display()
+        );
+        return false;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut n = 0;
+        let r = bench("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).contains("s"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Bit-Operations ledger (paper Eq. 5):
+//! `BOPS(φ) = Σ_ops bits(φ_i) · MAC(op_i)` with `bits = b_w · b_a`.
+//!
+//! BOPs is the platform-independent efficiency surrogate; all results are
+//! reported as *relative* BOPs `r` w.r.t. the fixed W8A16 network, matching
+//! the paper's tables (W8A8 → r=0.50, W6A8 → 0.375, W6A6 → 0.281, …).
+
+use crate::groups::{Assignment, Candidate, Lattice};
+use crate::manifest::ModelEntry;
+
+/// Absolute BOPs of an assignment.
+pub fn bops(entry: &ModelEntry, asg: &Assignment) -> u64 {
+    entry
+        .groups
+        .iter()
+        .zip(&asg.per_group)
+        .map(|(g, c)| g.macs * c.bops_factor())
+        .sum()
+}
+
+/// BOPs of the homogeneous `cand` network.
+pub fn bops_fixed(entry: &ModelEntry, cand: Candidate) -> u64 {
+    entry.total_macs * cand.bops_factor()
+}
+
+/// Relative BOPs `r` w.r.t. fixed W8A16 (the paper's reference point).
+pub fn rel_bops(entry: &ModelEntry, asg: &Assignment) -> f64 {
+    bops(entry, asg) as f64 / bops_fixed(entry, Candidate::new(8, 16)) as f64
+}
+
+/// Relative BOPs of a homogeneous configuration.
+pub fn rel_bops_fixed(cand: Candidate) -> f64 {
+    cand.bops_factor() as f64 / Candidate::new(8, 16).bops_factor() as f64
+}
+
+/// BOPs reduction obtained by flipping group `g` to `cand` from its current
+/// assignment (0 if not an improvement).
+pub fn flip_gain(entry: &ModelEntry, asg: &Assignment, g: usize, cand: Candidate) -> u64 {
+    let cur = asg.per_group[g].bops_factor();
+    let new = cand.bops_factor();
+    if new >= cur {
+        0
+    } else {
+        entry.groups[g].macs * (cur - new)
+    }
+}
+
+/// Lower bound on achievable `r` for a lattice (everything at the cheapest
+/// candidate; weightless groups pinned at baseline contribute 0 MACs).
+pub fn min_rel_bops(entry: &ModelEntry, lattice: &Lattice) -> f64 {
+    let cheapest = lattice
+        .candidates
+        .iter()
+        .copied()
+        .min_by_key(|c| c.bops_factor())
+        .unwrap_or(lattice.baseline);
+    let mut asg = Assignment::baseline(entry, lattice);
+    for g in 0..entry.groups.len() {
+        if Assignment::flippable(entry, g) {
+            asg.set(g, cheapest);
+        }
+    }
+    rel_bops(entry, &asg)
+}
+
+/// Hand-built fixtures shared by unit tests across modules.
+#[cfg(test)]
+pub mod tests_support {
+    use crate::manifest::{ActQ, DataFiles, Group, Layer, ModelEntry, ParamInfo, WQ};
+
+    /// Two weighted groups (300/700 MACs) plus one weightless group.
+    pub fn toy_entry() -> ModelEntry {
+        ModelEntry {
+            name: "toy".into(),
+            task: "classify10".into(),
+            batch: 1,
+            input_shape: vec![1],
+            input_is_i32: false,
+            forward: String::new(),
+            stats: String::new(),
+            stats_bits: vec![4, 8],
+            stats_ratios: vec![1.0],
+            weights_file: String::new(),
+            params: vec![
+                ParamInfo { name: "a.w".into(), shape: vec![4, 4] },
+                ParamInfo { name: "b.w".into(), shape: vec![4, 4] },
+            ],
+            out_shape: vec![1, 10],
+            act_quantizers: vec![
+                ActQ { name: "in".into(), numel: 16 },
+                ActQ { name: "a.out".into(), numel: 16 },
+                ActQ { name: "b.out".into(), numel: 16 },
+            ],
+            w_quantizers: vec![
+                WQ { name: "a.w".into(), param_idx: 0, channels: 4, channel_axis: 0 },
+                WQ { name: "b.w".into(), param_idx: 1, channels: 4, channel_axis: 0 },
+            ],
+            layers: vec![
+                Layer { name: "a".into(), macs: 300, w_q: 0, in_acts: vec![0] },
+                Layer { name: "b".into(), macs: 700, w_q: 1, in_acts: vec![1] },
+            ],
+            groups: vec![
+                Group { w_q: vec![0], act_q: vec![0], macs: 300 },
+                Group { w_q: vec![1], act_q: vec![1], macs: 700 },
+                Group { w_q: vec![], act_q: vec![2], macs: 0 },
+            ],
+            total_macs: 1000,
+            cmax: 4,
+            fp32_val_metric: 1.0,
+            data: DataFiles {
+                calib: String::new(),
+                calib_labels: String::new(),
+                val: String::new(),
+                val_labels: String::new(),
+                ood_calib: None,
+            },
+            taps: None,
+            adaround: vec![],
+            fit: None,
+            fit_act_shapes: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::toy_entry;
+    use super::*;
+
+    #[test]
+    fn baseline_r_is_one() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let asg = Assignment::baseline(&e, &l);
+        assert!((rel_bops(&e, &asg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_r_matches_hand_count() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let mut asg = Assignment::baseline(&e, &l);
+        asg.set(0, Candidate::new(4, 8)); // 300 macs * 32
+        // group1 stays 8*16=128 → (300*32 + 700*128) / (1000*128)
+        let want = (300.0 * 32.0 + 700.0 * 128.0) / 128000.0;
+        assert!((rel_bops(&e, &asg) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flip_gain_zero_for_upgrades() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let mut asg = Assignment::baseline(&e, &l);
+        asg.set(0, Candidate::new(4, 8));
+        assert_eq!(flip_gain(&e, &asg, 0, Candidate::new(8, 8)), 0);
+        assert_eq!(flip_gain(&e, &asg, 1, Candidate::new(8, 8)), 700 * 64);
+    }
+
+    #[test]
+    fn min_rel_bops_practical() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        // all flippable groups at W4A8: 1000*32/128000
+        assert!((min_rel_bops(&e, &l) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_validates() {
+        let e = toy_entry();
+        Assignment::validate_partition(&e).unwrap();
+    }
+
+    #[test]
+    fn per_quantizer_expansion() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let mut asg = Assignment::baseline(&e, &l);
+        asg.set(0, Candidate::new(4, 8));
+        let (act, w) = asg.per_quantizer(&e);
+        assert_eq!(w, vec![Some(4), Some(8)]);
+        assert_eq!(act, vec![Some(8), Some(16), Some(16)]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `mpq <subcommand> [positional...] [--flag] [--key value]`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("search resnet_s --budget 0.5 --metric sqnr --verbose");
+        assert_eq!(a.positional, vec!["search", "resnet_s"]);
+        assert_eq!(a.opt("budget"), Some("0.5"));
+        assert_eq!(a.opt("metric"), Some("sqnr"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("x --k=v --f");
+        assert_eq!(a.opt("k"), Some("v"));
+        assert!(a.flag("f"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--n 32 --r 0.25");
+        assert_eq!(a.opt_usize("n", 1).unwrap(), 32);
+        assert_eq!(a.opt_f64("r", 1.0).unwrap(), 0.25);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        let bad = parse("--n xyz");
+        assert!(bad.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b val");
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("val"));
+    }
+}

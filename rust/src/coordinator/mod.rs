@@ -1,0 +1,320 @@
+//! The coordinator: wires runtime, calibration, Phase 1 and Phase 2 into
+//! the end-to-end [`Pipeline`] — the paper's Algorithm 1 as a service.
+//!
+//! A `Pipeline` owns one model. Typical flow:
+//!
+//! ```no_run
+//! # use mpq::coordinator::Pipeline;
+//! # use mpq::groups::Lattice;
+//! let mut pipe = Pipeline::open("artifacts", "mobilenet_v3_s").unwrap();
+//! pipe.calibrate(256, 0).unwrap();                       // MSE ranges + FP logits
+//! let lat = Lattice::practical();
+//! let sens = pipe.sensitivity_sqnr(&lat).unwrap();       // Phase 1
+//! let flips = pipe.flips(&lat, &sens);
+//! let run = pipe.search_bops_budget(&lat, &flips, 0.5).unwrap(); // Phase 2
+//! ```
+
+use crate::adaround::{self, AdaRoundCfg};
+use crate::data::DataSet;
+use crate::groups::{Assignment, Candidate, Lattice};
+use crate::manifest::Manifest;
+use crate::model::{EvalSet, ModelHandle, QuantConfig};
+use crate::runtime::Runtime;
+use crate::search::{self, FlipStep, SearchCtx, SearchRun};
+use crate::sensitivity::{self, Metric, RoundedWeights, SensEntry};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+pub struct Pipeline {
+    pub manifest: Manifest,
+    pub rt: Rc<Runtime>,
+    pub model: ModelHandle,
+    /// calibration eval set (built by [`Self::calibrate`])
+    pub calib_set: Option<EvalSet>,
+    /// validation eval set (lazily built)
+    pub val_set: Option<EvalSet>,
+}
+
+impl Pipeline {
+    /// Open a model from the artifacts directory with a fresh PJRT client.
+    pub fn open(dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let rt = Rc::new(Runtime::cpu()?);
+        let model = ModelHandle::open(rt.clone(), &manifest, model)?;
+        Ok(Self { manifest, rt, model, calib_set: None, val_set: None })
+    }
+
+    /// Open sharing an existing runtime (multi-model experiments reuse the
+    /// PJRT client and its executable cache).
+    pub fn open_with(rt: Rc<Runtime>, manifest: &Manifest, model: &str) -> Result<Self> {
+        let model = ModelHandle::open(rt.clone(), manifest, model)?;
+        Ok(Self {
+            manifest: manifest.clone(),
+            rt,
+            model,
+            calib_set: None,
+            val_set: None,
+        })
+    }
+
+    /// Select a seeded calibration subset of `n` samples, estimate all
+    /// quantizer ranges on it (MSE criteria) and upload it for Phase 1.
+    pub fn calibrate(&mut self, n: usize, seed: u64) -> Result<()> {
+        let sub = self.model.data.calib.subset(n, seed)?;
+        self.calibrate_on(&sub)
+    }
+
+    /// Calibrate on an explicit dataset (used by the OOD study, Fig. 4).
+    pub fn calibrate_on(&mut self, ds: &DataSet) -> Result<()> {
+        let set = self.model.eval_set(ds)?;
+        self.model.calibrate_ranges(&self.manifest, &set)?;
+        self.calib_set = Some(set);
+        Ok(())
+    }
+
+    /// Calibrate ranges AND run Phase 1 on unlabeled out-of-domain inputs.
+    pub fn calibrate_unlabeled(&mut self, x: &crate::tensor::Tensor) -> Result<()> {
+        let set = self.model.eval_set_unlabeled(x)?;
+        self.model.calibrate_ranges(&self.manifest, &set)?;
+        self.calib_set = Some(set);
+        Ok(())
+    }
+
+    pub fn calib_set(&self) -> Result<&EvalSet> {
+        self.calib_set
+            .as_ref()
+            .ok_or_else(|| anyhow!("calibrate() not run"))
+    }
+
+    /// Validation eval set (built on first use).
+    pub fn val_set(&mut self) -> Result<&EvalSet> {
+        if self.val_set.is_none() {
+            let ds = self.model.data.val.clone();
+            self.val_set = Some(self.model.eval_set(&ds)?);
+        }
+        Ok(self.val_set.as_ref().unwrap())
+    }
+
+    /// Evaluate Phase-2 metrics on a fixed `n`-sample validation subset
+    /// instead of the full set (experiment drivers use this to bound
+    /// wall-time on the single-core testbed; seeded for reproducibility).
+    pub fn limit_val(&mut self, n: usize, seed: u64) -> Result<()> {
+        let sub = self.model.data.val.subset(n, seed)?;
+        self.val_set = Some(self.model.eval_set(&sub)?);
+        Ok(())
+    }
+
+    // -- Phase 1 ---------------------------------------------------------------
+
+    pub fn sensitivity_sqnr(&self, lattice: &Lattice) -> Result<Vec<SensEntry>> {
+        sensitivity::sensitivity_list(
+            &self.model,
+            &self.manifest,
+            lattice,
+            self.calib_set()?,
+            Metric::Sqnr,
+            None,
+        )
+    }
+
+    pub fn sensitivity(
+        &self,
+        lattice: &Lattice,
+        metric: Metric,
+        rounded: Option<&RoundedWeights>,
+    ) -> Result<Vec<SensEntry>> {
+        sensitivity::sensitivity_list(
+            &self.model,
+            &self.manifest,
+            lattice,
+            self.calib_set()?,
+            metric,
+            rounded,
+        )
+    }
+
+    // -- AdaRound ---------------------------------------------------------------
+
+    /// Precompute AdaRounded weights for every layer × weight-bit option.
+    pub fn adaround(&self, lattice: &Lattice, cfg: &AdaRoundCfg) -> Result<RoundedWeights> {
+        let set = self.calib_set()?;
+        let taps = adaround::capture_taps(
+            &self.model,
+            &self.manifest,
+            &set.batches,
+            cfg.tap_batches,
+        )?;
+        adaround::adaround_all(
+            &self.model,
+            &self.manifest,
+            &taps,
+            &lattice.wbits_options(),
+            cfg,
+        )
+    }
+
+    // -- Phase 2 ---------------------------------------------------------------
+
+    pub fn flips(&self, lattice: &Lattice, sens: &[SensEntry]) -> Vec<FlipStep> {
+        search::flip_sequence(&self.model.entry, lattice, sens)
+    }
+
+    fn ctx<'a>(
+        &'a self,
+        lattice: &'a Lattice,
+        flips: &'a [FlipStep],
+        set: &'a EvalSet,
+        rounded: Option<&'a RoundedWeights>,
+    ) -> SearchCtx<'a> {
+        SearchCtx { handle: &self.model, lattice, flips, set, rounded }
+    }
+
+    /// Phase 2 under a BOPs budget; final metric measured on the val set.
+    pub fn search_bops_budget(
+        &mut self,
+        lattice: &Lattice,
+        flips: &[FlipStep],
+        budget_r: f64,
+    ) -> Result<SearchRun> {
+        self.val_set()?;
+        let set = self.val_set.as_ref().unwrap();
+        let ctx = SearchCtx { handle: &self.model, lattice, flips, set, rounded: None };
+        search::bops_budget(&ctx, budget_r)
+    }
+
+    /// Convenience used by examples: sensitivity → flips → BOPs search.
+    pub fn mixed_precision_for_budget(
+        &mut self,
+        lattice: &Lattice,
+        budget_r: f64,
+    ) -> Result<SearchRun> {
+        let sens = self.sensitivity_sqnr(lattice)?;
+        let flips = self.flips(lattice, &sens);
+        self.search_bops_budget(lattice, &flips, budget_r)
+    }
+
+    /// Evaluate a homogeneous fixed-precision configuration on the val set
+    /// (the paper's comparison columns).
+    pub fn eval_fixed(&mut self, cand: Candidate, rounded: Option<&RoundedWeights>) -> Result<f64> {
+        let cfg = QuantConfig::fixed(&self.model.entry, cand.wbits, cand.abits);
+        self.eval_cfg_with(cfg, cand.wbits, rounded)
+    }
+
+    /// Evaluate the FP32 model on the val set (consistency check against
+    /// the manifest's `fp32_val_metric`).
+    pub fn eval_fp32(&mut self) -> Result<f64> {
+        self.val_set()?;
+        let set = self.val_set.as_ref().unwrap();
+        let cfg = QuantConfig::fp32(&self.model.entry);
+        self.model.eval_config(set, &cfg)
+    }
+
+    /// Evaluate an arbitrary assignment on the val set.
+    pub fn eval_assignment(
+        &mut self,
+        asg: &Assignment,
+        rounded: Option<&RoundedWeights>,
+    ) -> Result<f64> {
+        let (act, w) = asg.per_quantizer(&self.model.entry);
+        self.val_set()?;
+        let set = self.val_set.as_ref().unwrap();
+        let cfg = QuantConfig { act, w };
+        let mut ov = HashMap::new();
+        if let Some(r) = rounded {
+            let (_, wbits) = asg.per_quantizer(&self.model.entry);
+            for (i, wq) in self.model.entry.w_quantizers.iter().enumerate() {
+                if let Some(bits) = wbits[i] {
+                    if let Some(t) = r.get(&(wq.param_idx, bits)) {
+                        ov.insert(wq.param_idx, t.clone());
+                    }
+                }
+            }
+        }
+        let cb = self.model.config_buffers(&cfg, &ov)?;
+        self.model.eval_metric(set, &cb)
+    }
+
+    fn eval_cfg_with(
+        &mut self,
+        cfg: QuantConfig,
+        wbits: u8,
+        rounded: Option<&RoundedWeights>,
+    ) -> Result<f64> {
+        self.val_set()?;
+        let set = self.val_set.as_ref().unwrap();
+        let mut ov = HashMap::new();
+        if let Some(r) = rounded {
+            for wq in &self.model.entry.w_quantizers {
+                if let Some(t) = r.get(&(wq.param_idx, wbits)) {
+                    ov.insert(wq.param_idx, t.clone());
+                }
+            }
+        }
+        let cb = self.model.config_buffers(&cfg, &ov)?;
+        self.model.eval_metric(set, &cb)
+    }
+
+    /// Accuracy-target search with the chosen scheme; evaluations run on
+    /// the val set, mirroring the paper's Table 5 setup.
+    pub fn search_accuracy_target(
+        &mut self,
+        lattice: &Lattice,
+        flips: &[FlipStep],
+        target: f64,
+        scheme: SearchScheme,
+        rounded: Option<&RoundedWeights>,
+    ) -> Result<SearchRun> {
+        self.val_set()?;
+        let set = self.val_set.as_ref().unwrap();
+        let ctx = self.ctx(lattice, flips, set, rounded);
+        match scheme {
+            SearchScheme::Sequential => search::sequential_accuracy(&ctx, target),
+            SearchScheme::Binary => search::binary_accuracy(&ctx, target),
+            SearchScheme::Hybrid => search::hybrid_accuracy(&ctx, target),
+        }
+    }
+
+    /// Full pareto curve on the *calibration* set (Fig. 2/4/5 draw these).
+    pub fn pareto_curve(
+        &self,
+        lattice: &Lattice,
+        flips: &[FlipStep],
+        rounded: Option<&RoundedWeights>,
+    ) -> Result<SearchRun> {
+        let set = self.calib_set()?;
+        let ctx = self.ctx(lattice, flips, set, rounded);
+        search::full_curve(&ctx)
+    }
+
+    /// Full pareto curve evaluated on the val set.
+    pub fn pareto_curve_val(
+        &mut self,
+        lattice: &Lattice,
+        flips: &[FlipStep],
+        rounded: Option<&RoundedWeights>,
+    ) -> Result<SearchRun> {
+        self.val_set()?;
+        let set = self.val_set.as_ref().unwrap();
+        let ctx = self.ctx(lattice, flips, set, rounded);
+        search::full_curve(&ctx)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchScheme {
+    Sequential,
+    Binary,
+    Hybrid,
+}
+
+impl SearchScheme {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sequential => "sequential",
+            Self::Binary => "binary",
+            Self::Hybrid => "binary+interp",
+        }
+    }
+}

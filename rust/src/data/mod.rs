@@ -1,0 +1,168 @@
+//! Calibration / validation data management.
+//!
+//! Loads the MPQT dataset binaries referenced by the manifest and slices
+//! them into fixed-size batches (the lowered executables have a static
+//! batch dimension).  Subset sampling is seeded — Fig. 2's five random
+//! 256-image subsets are `subset(256, seed)` for seed 0..5.
+
+use crate::manifest::{DataFiles, ModelEntry};
+use crate::tensor::{io, Tensor};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// An (inputs, labels) dataset, first axis = sample.
+#[derive(Clone, Debug)]
+pub struct DataSet {
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+impl DataSet {
+    pub fn load(dir: &Path, x_file: &str, y_file: &str) -> Result<Self> {
+        let x = single(dir, x_file)?;
+        let y = single(dir, y_file)?;
+        if x.shape[0] != y.shape[0] {
+            bail!(
+                "{x_file} has {} samples but {y_file} has {}",
+                x.shape[0],
+                y.shape[0]
+            );
+        }
+        Ok(Self { x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.shape[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Seeded random subset of `n` samples.
+    pub fn subset(&self, n: usize, seed: u64) -> Result<DataSet> {
+        let idx = Rng::new(seed).sample_indices(self.len(), n);
+        Ok(DataSet { x: self.x.gather_rows(&idx)?, y: self.y.gather_rows(&idx)? })
+    }
+
+    /// First `n` samples (deterministic prefix).
+    pub fn take(&self, n: usize) -> Result<DataSet> {
+        let n = n.min(self.len());
+        Ok(DataSet { x: self.x.slice_rows(0, n)?, y: self.y.slice_rows(0, n)? })
+    }
+
+    /// Split inputs into `batch`-sized chunks, dropping a ragged tail (the
+    /// executables have a static batch dimension; callers size their subsets
+    /// as multiples of `batch`).
+    pub fn batches(&self, batch: usize) -> Result<Vec<Tensor>> {
+        let n = (self.len() / batch) * batch;
+        (0..n / batch)
+            .map(|i| self.x.slice_rows(i * batch, batch))
+            .collect()
+    }
+
+    /// Labels aligned with [`Self::batches`] (first `n_batches·batch`).
+    pub fn labels_prefix(&self, batch: usize) -> Result<Tensor> {
+        let n = (self.len() / batch) * batch;
+        self.y.slice_rows(0, n)
+    }
+}
+
+fn single(dir: &Path, file: &str) -> Result<Tensor> {
+    let mut ts = io::read_tensors(dir.join(file))
+        .with_context(|| format!("loading {file}"))?;
+    if ts.len() != 1 {
+        bail!("{file}: expected 1 tensor, found {}", ts.len());
+    }
+    Ok(ts.remove(0))
+}
+
+/// All data referenced by a model: calibration pool, validation set, and the
+/// optional out-of-domain calibration pool (Fig. 4).
+#[derive(Clone, Debug)]
+pub struct ModelData {
+    pub calib: DataSet,
+    pub val: DataSet,
+    pub ood_calib: Option<Tensor>,
+}
+
+impl ModelData {
+    pub fn load(dir: &Path, files: &DataFiles) -> Result<Self> {
+        Ok(Self {
+            calib: DataSet::load(dir, &files.calib, &files.calib_labels)?,
+            val: DataSet::load(dir, &files.val, &files.val_labels)?,
+            ood_calib: files
+                .ood_calib
+                .as_ref()
+                .map(|f| single(dir, f))
+                .transpose()?,
+        })
+    }
+}
+
+/// Load a model's trained parameters (MPQT tensors in `params` order).
+pub fn load_weights(dir: &Path, entry: &ModelEntry) -> Result<Vec<Tensor>> {
+    let ts = io::read_tensors(dir.join(&entry.weights_file))
+        .with_context(|| format!("loading {}", entry.weights_file))?;
+    if ts.len() != entry.params.len() {
+        bail!(
+            "{}: {} tensors but manifest lists {} params",
+            entry.weights_file,
+            ts.len(),
+            entry.params.len()
+        );
+    }
+    for (t, p) in ts.iter().zip(&entry.params) {
+        if t.shape != p.shape {
+            bail!("param {}: file shape {:?} != manifest {:?}", p.name, t.shape, p.shape);
+        }
+    }
+    Ok(ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Data;
+
+    fn tmp_dataset(n: usize) -> (std::path::PathBuf, String, String) {
+        let dir = std::env::temp_dir().join("mpq_data_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let x = Tensor::from_f32(&[n, 3], (0..n * 3).map(|i| i as f32).collect()).unwrap();
+        let y = Tensor::from_f32(&[n], (0..n).map(|i| i as f32).collect()).unwrap();
+        io::write_tensors(dir.join("x.bin"), &[x]).unwrap();
+        io::write_tensors(dir.join("y.bin"), &[y]).unwrap();
+        (dir, "x.bin".into(), "y.bin".into())
+    }
+
+    #[test]
+    fn load_and_batch() {
+        let (dir, xf, yf) = tmp_dataset(10);
+        let ds = DataSet::load(&dir, &xf, &yf).unwrap();
+        assert_eq!(ds.len(), 10);
+        let bs = ds.batches(4).unwrap();
+        assert_eq!(bs.len(), 2); // ragged tail dropped
+        assert_eq!(bs[1].shape, vec![4, 3]);
+        assert_eq!(ds.labels_prefix(4).unwrap().shape, vec![8]);
+    }
+
+    #[test]
+    fn subsets_are_seeded_and_aligned() {
+        let (dir, xf, yf) = tmp_dataset(32);
+        let ds = DataSet::load(&dir, &xf, &yf).unwrap();
+        let a = ds.subset(8, 1).unwrap();
+        let b = ds.subset(8, 1).unwrap();
+        let c = ds.subset(8, 2).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_ne!(a.x, c.x);
+        // x/y stay aligned: y[i] == x[i,0] / 3
+        if let (Data::F32(xs), Data::F32(ys)) = (&a.x.data, &a.y.data) {
+            for i in 0..8 {
+                assert_eq!(xs[i * 3] / 3.0, ys[i]);
+            }
+        } else {
+            panic!("dtype");
+        }
+    }
+}

@@ -1,0 +1,572 @@
+//! Experiment drivers — one function per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver opens the needed models on a shared PJRT runtime, runs the
+//! two-phase algorithm in the paper's configuration, and returns
+//! [`crate::report::Table`]s whose rows mirror the paper's.  The CLI
+//! (`mpq <table1|...|fig5>`) and the `cargo bench` harnesses both call
+//! these.
+//!
+//! Absolute numbers differ from the paper (miniature zoo, synthetic data —
+//! DESIGN.md §3); the *shape* — who wins, roughly by how much, where MP
+//! pays off — is the reproduction target recorded in EXPERIMENTS.md.
+
+use crate::adaround::AdaRoundCfg;
+use crate::coordinator::{Pipeline, SearchScheme};
+use crate::groups::{Candidate, Lattice};
+use crate::manifest::Manifest;
+use crate::metrics::kendall_tau;
+use crate::report::{f3, f4, Table};
+use crate::runtime::Runtime;
+use crate::search::SearchRun;
+use crate::sensitivity::{self, Metric};
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// Common experiment options.
+#[derive(Clone, Debug)]
+pub struct Opts {
+    pub dir: std::path::PathBuf,
+    pub calib_n: usize,
+    pub seed: u64,
+    /// restrict to these models (None = experiment default)
+    pub models: Option<Vec<String>>,
+    /// shrink workloads (CI / smoke): fewer seeds, smaller val subsets
+    pub fast: bool,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Self {
+            dir: crate::artifacts_dir(),
+            calib_n: 256,
+            seed: 0,
+            models: None,
+            fast: std::env::var_os("MPQ_FAST").is_some(),
+        }
+    }
+}
+
+impl Opts {
+    /// validation subset size used by Phase-2 metric evaluations
+    pub fn val_n(&self) -> usize {
+        if self.fast { 512 } else { 1024 }
+    }
+}
+
+pub struct Env {
+    pub manifest: Manifest,
+    pub rt: Rc<Runtime>,
+}
+
+impl Env {
+    pub fn open(opts: &Opts) -> Result<Self> {
+        Ok(Self {
+            manifest: Manifest::load(&opts.dir)?,
+            rt: Rc::new(Runtime::cpu()?),
+        })
+    }
+
+    pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
+        Pipeline::open_with(self.rt.clone(), &self.manifest, model)
+    }
+
+    /// Models that exist in the manifest, intersected with a default list
+    /// and the user's `--models` filter.
+    pub fn select(&self, opts: &Opts, default: &[&str]) -> Vec<String> {
+        let avail: Vec<String> = default
+            .iter()
+            .filter(|m| self.manifest.models.iter().any(|e| &e.name == *m))
+            .map(|s| s.to_string())
+            .collect();
+        match &opts.models {
+            None => avail,
+            Some(filter) => avail
+                .into_iter()
+                .filter(|m| filter.iter().any(|f| f == m))
+                .collect(),
+        }
+    }
+}
+
+const TABLE1_MODELS: &[&str] = &[
+    "resnet_s",
+    "resnet_m",
+    "mobilenet_v2_s",
+    "mobilenet_v3_s",
+    "effnet_lite_s",
+    "effnet_b0_s",
+    "deeplab_s",
+    "bert_s_mnli_s",
+    "vit_s",
+];
+
+const TABLE2_MODELS: &[&str] = &[
+    "resnet_s",
+    "resnet_m",
+    "effnet_lite_s",
+    "mobilenet_v2_s",
+    "mobilenet_v3_s",
+];
+
+const CNN_MODELS: &[&str] = &[
+    "resnet_s",
+    "resnet_m",
+    "effnet_lite_s",
+    "effnet_b0_s",
+    "mobilenet_v2_s",
+    "mobilenet_v3_s",
+    "deeplab_s",
+];
+
+/// MP at a BOPs budget via SQNR Phase 1 (the paper's standard pipeline).
+fn mp_at_budget(pipe: &mut Pipeline, lattice: &Lattice, budget: f64) -> Result<SearchRun> {
+    let sens = pipe.sensitivity_sqnr(lattice)?;
+    let flips = pipe.flips(lattice, &sens);
+    pipe.search_bops_budget(lattice, &flips, budget)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — MP vs fixed precision, practical space {W4A8, W8A8, W8A16}
+// ---------------------------------------------------------------------------
+
+pub fn table1(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Table 1 — MP (W4A8/W8A8/W8A16) vs fixed precision",
+        &["Model", "FP32", "W8A8 (r=0.50)", "PTQ MP (r=0.50)", "W6A8 (r=0.375)", "PTQ MP (r=0.375)"],
+    );
+    let lat = Lattice::practical();
+    for m in env.select(opts, TABLE1_MODELS) {
+        let mut pipe = env.pipeline(&m).with_context(|| m.clone())?;
+        pipe.calibrate(opts.calib_n, opts.seed)?;
+        pipe.limit_val(opts.val_n(), 7)?;
+        let fp = pipe.eval_fp32()?;
+        let w8a8 = pipe.eval_fixed(Candidate::new(8, 8), None)?;
+        let w6a8 = pipe.eval_fixed(Candidate::new(6, 8), None)?;
+        let sens = pipe.sensitivity_sqnr(&lat)?;
+        let flips = pipe.flips(&lat, &sens);
+        let mp50 = pipe.search_bops_budget(&lat, &flips, 0.50)?;
+        let mp375 = pipe.search_bops_budget(&lat, &flips, 0.375)?;
+        t.row(vec![
+            m.clone(),
+            f4(fp),
+            f4(w8a8),
+            format!("{} (r={})", f4(mp50.final_metric), f3(mp50.final_rel_bops)),
+            f4(w6a8),
+            format!("{} (r={})", f4(mp375.final_metric), f3(mp375.final_rel_bops)),
+        ]);
+        println!("[table1] {m} done");
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — expanded low-bit space
+// ---------------------------------------------------------------------------
+
+pub fn table2(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Table 2 — MP on expanded space {W4A4..W8A16} at low BOPs",
+        &["Model", "FP32", "W6A6 (r=0.281)", "PTQ MP (r=0.281)", "W4A8 (r=0.25)", "PTQ MP (r=0.25)"],
+    );
+    let lat = Lattice::expanded();
+    for m in env.select(opts, TABLE2_MODELS) {
+        let mut pipe = env.pipeline(&m)?;
+        pipe.calibrate(opts.calib_n, opts.seed)?;
+        pipe.limit_val(opts.val_n(), 7)?;
+        let fp = pipe.eval_fp32()?;
+        let w6a6 = pipe.eval_fixed(Candidate::new(6, 6), None)?;
+        let w4a8 = pipe.eval_fixed(Candidate::new(4, 8), None)?;
+        let sens = pipe.sensitivity_sqnr(&lat)?;
+        let flips = pipe.flips(&lat, &sens);
+        let mp281 = pipe.search_bops_budget(&lat, &flips, 0.28125)?;
+        let mp25 = pipe.search_bops_budget(&lat, &flips, 0.25)?;
+        t.row(vec![
+            m.clone(),
+            f4(fp),
+            f4(w6a6),
+            format!("{} (r={})", f4(mp281.final_metric), f3(mp281.final_rel_bops)),
+            f4(w4a8),
+            format!("{} (r={})", f4(mp25.final_metric), f3(mp25.final_rel_bops)),
+        ]);
+        println!("[table2] {m} done");
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — BERT on the five GLUE-style tasks
+// ---------------------------------------------------------------------------
+
+pub fn table3(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Table 3 — BERT GLUE tasks, MP (W4A8/W8A8/W8A16)",
+        &["Task", "FP32", "W8A8 (r=0.5)", "PTQ MP (r=0.5)"],
+    );
+    let lat = Lattice::practical();
+    let tasks = ["rte_s", "mrpc_s", "sst2_s", "stsb_s", "mnli_s"];
+    let models: Vec<String> = tasks.iter().map(|t| format!("bert_s_{t}")).collect();
+    let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    for m in env.select(opts, &model_refs) {
+        let mut pipe = env.pipeline(&m)?;
+        pipe.calibrate(opts.calib_n, opts.seed)?;
+        pipe.limit_val(opts.val_n(), 7)?;
+        let fp = pipe.eval_fp32()?;
+        let w8a8 = pipe.eval_fixed(Candidate::new(8, 8), None)?;
+        let run = mp_at_budget(&mut pipe, &lat, 0.50)?;
+        t.row(vec![
+            m.trim_start_matches("bert_s_").to_string(),
+            f4(fp),
+            f4(w8a8),
+            format!("{} (r={})", f4(run.final_metric), f3(run.final_rel_bops)),
+        ]);
+        println!("[table3] {m} done");
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — AdaRound-integrated MP
+// ---------------------------------------------------------------------------
+
+pub fn table4(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Table 4 — fixed AdaRound vs AdaRound-integrated MP",
+        &["Model", "FP32", "W8A8 AR (r=0.50)", "MP AR (r=0.50)", "W6A8 AR (r=0.375)", "MP AR (r=0.375)"],
+    );
+    let lat = Lattice::practical();
+    let mut ar_cfg = AdaRoundCfg::default();
+    if opts.fast {
+        ar_cfg.steps = 40;
+    }
+    for m in env.select(opts, CNN_MODELS) {
+        let mut pipe = env.pipeline(&m)?;
+        pipe.calibrate(opts.calib_n, opts.seed)?;
+        pipe.limit_val(opts.val_n(), 7)?;
+        // rounded weights for every wbits used below (4/8 from the lattice,
+        // 6 for the fixed-W6A8 column)
+        let mut lat_bits = lat.clone();
+        lat_bits.candidates.push(Candidate::new(6, 8));
+        let rounded = pipe.adaround(&lat_bits, &ar_cfg)?;
+        let fp = pipe.eval_fp32()?;
+        let w8a8 = pipe.eval_fixed(Candidate::new(8, 8), Some(&rounded))?;
+        let w6a8 = pipe.eval_fixed(Candidate::new(6, 8), Some(&rounded))?;
+        // Phase 1 with AdaRounded weights (§3.5), stitched Phase 2
+        let sens = pipe.sensitivity(&lat, Metric::Sqnr, Some(&rounded))?;
+        let flips = pipe.flips(&lat, &sens);
+        let mut ctx_budget = |budget: f64, flips: &[crate::search::FlipStep]| -> Result<SearchRun> {
+            let asg_run = pipe.search_bops_budget(&lat, flips, budget)?;
+            let metric = pipe.eval_assignment(&asg_run.assignment, Some(&rounded))?;
+            Ok(SearchRun { final_metric: metric, ..asg_run })
+        };
+        let mp50 = ctx_budget(0.50, &flips)?;
+        let mp375 = ctx_budget(0.375, &flips)?;
+        t.row(vec![
+            m.clone(),
+            f4(fp),
+            f4(w8a8),
+            format!("{} (r={})", f4(mp50.final_metric), f3(mp50.final_rel_bops)),
+            f4(w6a8),
+            format!("{} (r={})", f4(mp375.final_metric), f3(mp375.final_rel_bops)),
+        ]);
+        println!("[table4] {m} done");
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — Phase-2 run-time: sequential vs binary vs binary+interp
+// ---------------------------------------------------------------------------
+
+pub fn table5(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Table 5 — Phase-2 search run-time (accuracy targets)",
+        &[
+            "Model",
+            "Target",
+            "Seq (s / evals)",
+            "Binary (s / evals)",
+            "Bin+Interp (s / evals)",
+            "r (seq)",
+            "r (bin)",
+            "r (b+i)",
+        ],
+    );
+    let lat = Lattice::practical();
+    let models: &[&str] = if opts.fast {
+        &["mobilenet_v2_s"]
+    } else {
+        &["resnet_m", "effnet_lite_s", "mobilenet_v2_s", "mobilenet_v3_s"]
+    };
+    for m in env.select(opts, models) {
+        let mut pipe = env.pipeline(&m)?;
+        pipe.calibrate(opts.calib_n, opts.seed)?;
+        pipe.limit_val(opts.val_n(), 7)?;
+        let fp = pipe.eval_fp32()?;
+        let sens = pipe.sensitivity_sqnr(&lat)?;
+        let flips = pipe.flips(&lat, &sens);
+        for drop in [0.01, 0.05] {
+            let target = fp - drop;
+            let seq =
+                pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Sequential, None)?;
+            let bin =
+                pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)?;
+            let hyb =
+                pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Hybrid, None)?;
+            t.row(vec![
+                m.clone(),
+                format!("{:.4} (-{:.0}%)", target, drop * 100.0),
+                format!("{:.2} / {}", seq.wall_secs, seq.evals),
+                format!("{:.2} / {}", bin.wall_secs, bin.evals),
+                format!("{:.2} / {}", hyb.wall_secs, hyb.evals),
+                f3(seq.final_rel_bops),
+                f3(bin.final_rel_bops),
+                f3(hyb.final_rel_bops),
+            ]);
+        }
+        println!("[table5] {m} done");
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — metric robustness across calibration subsets + Kendall-τ
+// ---------------------------------------------------------------------------
+
+pub fn fig2(opts: &Opts) -> Result<(Table, Table)> {
+    let env = Env::open(opts)?;
+    let model = opts
+        .models
+        .as_ref()
+        .and_then(|m| m.first().cloned())
+        .unwrap_or_else(|| "mobilenet_v2_s".to_string());
+    let lat = Lattice::practical_no16();
+    let n_seeds = if opts.fast { 2 } else { 5 };
+
+    // (a-c): pareto-curve variation across seeds per metric
+    let mut curves = Table::new(
+        format!("Fig 2(a-c) — pareto variation over {n_seeds} calib subsets ({model})"),
+        &["Metric", "Seed", "Curve (r_W8A8-relative : metric)"],
+    );
+    // (d): Kendall-τ vs number of calibration images
+    let mut ktau = Table::new(
+        "Fig 2(d) — Kendall-τ of sensitivity list vs ground truth",
+        &["Metric", "N images", "Kendall-tau"],
+    );
+
+    // ground-truth list: accuracy degradation on the full validation set
+    let mut pipe = env.pipeline(&model)?;
+    pipe.calibrate(opts.calib_n, opts.seed)?;
+    pipe.limit_val(opts.val_n(), 7)?;
+    let gt = {
+        let ds = pipe.model.data.val.clone();
+        let set = pipe.model.eval_set(&ds)?;
+        sensitivity::sensitivity_list(
+            &pipe.model,
+            &pipe.manifest,
+            &lat,
+            &set,
+            Metric::Accuracy,
+            None,
+        )?
+    };
+    let canon = |list: &[sensitivity::SensEntry]| -> Vec<f64> {
+        // scores ordered by (group, cand) — rank-comparable across metrics
+        let mut v: Vec<(usize, u8, u8, f64)> = list
+            .iter()
+            .map(|e| (e.group, e.cand.wbits, e.cand.abits, e.score))
+            .collect();
+        v.sort_by_key(|x| (x.0, x.1, x.2));
+        v.into_iter().map(|x| x.3).collect()
+    };
+    let gt_scores = canon(&gt);
+
+    for metric in [Metric::Accuracy, Metric::Sqnr, Metric::Fit] {
+        let mname = match metric {
+            Metric::Accuracy => "accuracy",
+            Metric::Sqnr => "sqnr",
+            Metric::Fit => "fit",
+        };
+        // (a-c) curves across seeds
+        for seed in 0..n_seeds {
+            pipe.calibrate(opts.calib_n, seed as u64)?;
+            pipe.limit_val(opts.val_n(), 7)?;
+            let sens = pipe.sensitivity(&lat, metric, None)?;
+            let flips = pipe.flips(&lat, &sens);
+            let run = pipe.pareto_curve_val(&lat, &flips, None)?;
+            let pts: Vec<String> = run
+                .curve
+                .iter()
+                .map(|(r, m)| format!("{:.3}:{:.4}", r / 0.5, m))
+                .collect();
+            curves.row(vec![mname.into(), seed.to_string(), pts.join(" ")]);
+        }
+        // (d) ktau vs images
+        let sizes: &[usize] = if opts.fast { &[64, 256] } else { &[32, 64, 128, 256, 512] };
+        for &n in sizes {
+            pipe.calibrate(n, opts.seed)?;
+            let sens = pipe.sensitivity(&lat, metric, None)?;
+            let tau = kendall_tau(&canon(&sens), &gt_scores);
+            ktau.row(vec![mname.into(), n.to_string(), f3(tau)]);
+        }
+        println!("[fig2] metric {mname} done");
+    }
+    Ok((curves, ktau))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — per-network SQNR ranges at W8A8
+// ---------------------------------------------------------------------------
+
+pub fn fig3(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Fig 3 — per-quantizer SQNR range at W8A8 (wide range ⇒ MP helps)",
+        &["Model", "min dB", "p25", "median", "max dB", "range dB"],
+    );
+    for m in env.select(opts, TABLE1_MODELS) {
+        let mut pipe = env.pipeline(&m)?;
+        pipe.calibrate(opts.calib_n, opts.seed)?;
+        let set = pipe.calib_set()?;
+        let (mut act, w) = sensitivity::per_quantizer_sqnr(&pipe.model, set, Candidate::new(8, 8))?;
+        act.extend(w);
+        act.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| act[(p * (act.len() - 1) as f64).round() as usize];
+        t.row(vec![
+            m.clone(),
+            format!("{:.1}", q(0.0)),
+            format!("{:.1}", q(0.25)),
+            format!("{:.1}", q(0.5)),
+            format!("{:.1}", q(1.0)),
+            format!("{:.1}", q(1.0) - q(0.0)),
+        ]);
+        println!("[fig3] {m} done");
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — out-of-domain calibration
+// ---------------------------------------------------------------------------
+
+pub fn fig4(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let mut t = Table::new(
+        "Fig 4 — task-data vs out-of-domain calibration pareto curves",
+        &["Model", "Calib data", "Curve (r : metric)"],
+    );
+    let lat = Lattice::practical_no16();
+    let models: &[&str] = if opts.fast {
+        &["mobilenet_v2_s"]
+    } else {
+        &["mobilenet_v2_s", "effnet_lite_s"]
+    };
+    for m in env.select(opts, models) {
+        for ood in [false, true] {
+            let mut pipe = env.pipeline(&m)?;
+            if ood {
+                let x = pipe
+                    .model
+                    .data
+                    .ood_calib
+                    .clone()
+                    .context("no OOD calibration data")?;
+                let sub = x.slice_rows(0, opts.calib_n.min(x.shape[0]))?;
+                pipe.calibrate_unlabeled(&sub)?;
+            } else {
+                pipe.calibrate(opts.calib_n, opts.seed)?;
+                pipe.limit_val(opts.val_n(), 7)?;
+            }
+            let sens = pipe.sensitivity_sqnr(&lat)?;
+            let flips = pipe.flips(&lat, &sens);
+            let run = pipe.pareto_curve_val(&lat, &flips, None)?;
+            let pts: Vec<String> = run
+                .curve
+                .iter()
+                .map(|(r, mm)| format!("{:.3}:{:.4}", r, mm))
+                .collect();
+            t.row(vec![
+                m.to_string(),
+                if ood { "synthood (OOD)" } else { "synthnet (task)" }.into(),
+                pts.join(" "),
+            ]);
+        }
+        println!("[fig4] {m} done");
+    }
+    print_curves(&t, 2, "rel BOPs", "metric");
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — AdaRound interweaving ablation
+// ---------------------------------------------------------------------------
+
+pub fn fig5(opts: &Opts) -> Result<Table> {
+    let env = Env::open(opts)?;
+    let model = opts
+        .models
+        .as_ref()
+        .and_then(|m| m.first().cloned())
+        .unwrap_or_else(|| "mobilenet_v2_s".to_string());
+    let mut t = Table::new(
+        format!("Fig 5 — AdaRound ablation on expanded space ({model})"),
+        &["Mode", "Curve (r : metric)"],
+    );
+    let lat = Lattice::expanded();
+    let mut ar_cfg = AdaRoundCfg::default();
+    if opts.fast {
+        ar_cfg.steps = 40;
+    }
+    let mut pipe = env.pipeline(&model)?;
+    pipe.calibrate(opts.calib_n, opts.seed)?;
+    pipe.limit_val(opts.val_n(), 7)?;
+    let rounded = pipe.adaround(&lat, &ar_cfg)?;
+
+    // 1. plain PTQ MP
+    let sens = pipe.sensitivity(&lat, Metric::Sqnr, None)?;
+    let flips = pipe.flips(&lat, &sens);
+    let ptq = pipe.pareto_curve_val(&lat, &flips, None)?;
+    // 2. AdaRound applied on top of the PTQ-MP flip order (Phase 2 only)
+    let over = pipe.pareto_curve_val(&lat, &flips, Some(&rounded))?;
+    // 3. AdaRound interweaved in both phases (§3.5)
+    let sens_ar = pipe.sensitivity(&lat, Metric::Sqnr, Some(&rounded))?;
+    let flips_ar = pipe.flips(&lat, &sens_ar);
+    let both = pipe.pareto_curve_val(&lat, &flips_ar, Some(&rounded))?;
+
+    for (name, run) in [
+        ("PTQ MP", &ptq),
+        ("AdaRound over PTQ MP", &over),
+        ("Phase 1&2 AdaRound MP", &both),
+    ] {
+        let pts: Vec<String> = run
+            .curve
+            .iter()
+            .map(|(r, m)| format!("{:.3}:{:.4}", r, m))
+            .collect();
+        t.row(vec![name.into(), pts.join(" ")]);
+    }
+    println!("[fig5] {model} done");
+    print_curves(&t, 1, "rel BOPs", "metric");
+    Ok(t)
+}
+
+/// ASCII-plot the curve column of a figure table (last column holds
+/// "r:metric …" strings; `label_cols` leading columns name the series).
+fn print_curves(t: &Table, label_cols: usize, xlabel: &str, ylabel: &str) {
+    use crate::report::plot;
+    let series: Vec<plot::Series> = t
+        .rows
+        .iter()
+        .map(|r| {
+            plot::Series::new(
+                r[..label_cols].join(" / "),
+                plot::parse_curve(r.last().unwrap()),
+            )
+        })
+        .collect();
+    print!("{}", plot::render(&t.title, xlabel, ylabel, &series, 64, 16));
+}

@@ -1,0 +1,204 @@
+//! Bit-width candidates and quantizer-group assignment (paper §3.4).
+//!
+//! On-device kernels come in fixed (weight-bits, activation-bits) pairs —
+//! e.g. a device may only ship W4A8 / W8A8 / W8A16 kernels.  A
+//! [`Lattice`] is that kernel menu; Phase 2 flips whole groups between
+//! lattice [`Candidate`]s, never individual tensors.
+
+use crate::manifest::ModelEntry;
+use anyhow::{bail, Result};
+
+/// One hardware kernel option: weight bits × activation bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    pub wbits: u8,
+    pub abits: u8,
+}
+
+impl Candidate {
+    pub const fn new(wbits: u8, abits: u8) -> Self {
+        Self { wbits, abits }
+    }
+
+    /// BOPs weight of this candidate (Eq. 5 factor `b_w · b_a`).
+    pub fn bops_factor(&self) -> u64 {
+        self.wbits as u64 * self.abits as u64
+    }
+
+    pub fn label(&self) -> String {
+        format!("W{}A{}", self.wbits, self.abits)
+    }
+}
+
+/// The search space of kernel candidates, with the highest-precision
+/// baseline Phase 2 starts from.
+#[derive(Clone, Debug)]
+pub struct Lattice {
+    pub candidates: Vec<Candidate>,
+    pub baseline: Candidate,
+}
+
+impl Lattice {
+    /// The paper's practical deployment menu: W4A8, W8A8, W8A16
+    /// (Tables 1 & 3-5).
+    pub fn practical() -> Self {
+        Self {
+            candidates: vec![
+                Candidate::new(4, 8),
+                Candidate::new(8, 8),
+                Candidate::new(8, 16),
+            ],
+            baseline: Candidate::new(8, 16),
+        }
+    }
+
+    /// Fig. 2/4's two-candidate menu: W4A8 + W8A8, starting from W8A8
+    /// (curve compression is reported relative to the W8A8 model).
+    pub fn practical_no16() -> Self {
+        Self {
+            candidates: vec![Candidate::new(4, 8), Candidate::new(8, 8)],
+            baseline: Candidate::new(8, 8),
+        }
+    }
+
+    /// The expanded low-bit space of Table 2 / Fig. 5:
+    /// W4A4, W4A6, W6A4, W6A6, W8A6, W6A8, W8A8, W8A16.
+    pub fn expanded() -> Self {
+        Self {
+            candidates: vec![
+                Candidate::new(4, 4),
+                Candidate::new(4, 6),
+                Candidate::new(6, 4),
+                Candidate::new(6, 6),
+                Candidate::new(8, 6),
+                Candidate::new(6, 8),
+                Candidate::new(8, 8),
+                Candidate::new(8, 16),
+            ],
+            baseline: Candidate::new(8, 16),
+        }
+    }
+
+    /// Candidates strictly cheaper (in BOPs factor) than `cur` — the legal
+    /// downward flips for a group currently at `cur`.
+    pub fn cheaper_than(&self, cur: Candidate) -> Vec<Candidate> {
+        self.candidates
+            .iter()
+            .copied()
+            .filter(|c| c.bops_factor() < cur.bops_factor())
+            .collect()
+    }
+
+    /// Distinct weight-bit options (for AdaRound precomputation).
+    pub fn wbits_options(&self) -> Vec<u8> {
+        let mut v: Vec<u8> = self.candidates.iter().map(|c| c.wbits).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Distinct activation-bit options.
+    pub fn abits_options(&self) -> Vec<u8> {
+        let mut v: Vec<u8> = self.candidates.iter().map(|c| c.abits).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Per-group candidate assignment: the mixed-precision configuration Phase 2
+/// manipulates.  Weightless groups (no MACs) are pinned to the baseline —
+/// flipping them cannot reduce BOPs (Eq. 5 only counts MAC ops).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub per_group: Vec<Candidate>,
+}
+
+impl Assignment {
+    pub fn baseline(entry: &ModelEntry, lattice: &Lattice) -> Self {
+        Self { per_group: vec![lattice.baseline; entry.groups.len()] }
+    }
+
+    /// Is group `g` flippable (owns at least one weighted op)?
+    pub fn flippable(entry: &ModelEntry, g: usize) -> bool {
+        entry.groups[g].macs > 0 && !entry.groups[g].w_q.is_empty()
+    }
+
+    pub fn set(&mut self, g: usize, c: Candidate) {
+        self.per_group[g] = c;
+    }
+
+    /// Expand to per-quantizer bit levels: `(act_bits[A], w_bits[W])`,
+    /// `None` = leave FP (never used by full configs, but probes use it).
+    pub fn per_quantizer(&self, entry: &ModelEntry) -> (Vec<Option<u8>>, Vec<Option<u8>>) {
+        let mut act = vec![None; entry.n_act()];
+        let mut w = vec![None; entry.n_w()];
+        for (g, cand) in self.per_group.iter().enumerate() {
+            for &a in &entry.groups[g].act_q {
+                act[a] = Some(cand.abits);
+            }
+            for &wq in &entry.groups[g].w_q {
+                w[wq] = Some(cand.wbits);
+            }
+        }
+        (act, w)
+    }
+
+    /// Sanity check: every quantizer belongs to exactly one group.
+    pub fn validate_partition(entry: &ModelEntry) -> Result<()> {
+        let mut act_seen = vec![0usize; entry.n_act()];
+        let mut w_seen = vec![0usize; entry.n_w()];
+        for g in &entry.groups {
+            for &a in &g.act_q {
+                act_seen[a] += 1;
+            }
+            for &w in &g.w_q {
+                w_seen[w] += 1;
+            }
+        }
+        if act_seen.iter().any(|&c| c != 1) || w_seen.iter().any(|&c| c != 1) {
+            bail!("quantizer groups do not partition the quantizers: act={act_seen:?} w={w_seen:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lattice_menus_match_paper() {
+        let p = Lattice::practical();
+        assert_eq!(p.candidates.len(), 3);
+        assert_eq!(p.baseline, Candidate::new(8, 16));
+        let e = Lattice::expanded();
+        assert_eq!(e.candidates.len(), 8);
+        assert!(e.candidates.contains(&Candidate::new(6, 4)));
+    }
+
+    #[test]
+    fn bops_factors() {
+        // relative r of fixed configs vs W8A16 — Table 1/2 headers
+        let base = Candidate::new(8, 16).bops_factor() as f64;
+        assert_eq!(Candidate::new(8, 8).bops_factor() as f64 / base, 0.5);
+        assert_eq!(Candidate::new(6, 8).bops_factor() as f64 / base, 0.375);
+        assert!((Candidate::new(6, 6).bops_factor() as f64 / base - 0.28125).abs() < 1e-9);
+        assert_eq!(Candidate::new(4, 8).bops_factor() as f64 / base, 0.25);
+    }
+
+    #[test]
+    fn cheaper_than_is_strict() {
+        let l = Lattice::practical();
+        let c = l.cheaper_than(Candidate::new(8, 8));
+        assert_eq!(c, vec![Candidate::new(4, 8)]);
+        assert!(l.cheaper_than(Candidate::new(4, 8)).is_empty());
+    }
+
+    #[test]
+    fn bit_options() {
+        let e = Lattice::expanded();
+        assert_eq!(e.wbits_options(), vec![4, 6, 8]);
+        assert_eq!(e.abits_options(), vec![4, 6, 8, 16]);
+    }
+}

@@ -1,0 +1,61 @@
+//! # mpq — post-training mixed-precision quantization
+//!
+//! A from-scratch reproduction of *“A Practical Mixed Precision Algorithm
+//! for Post-Training Quantization”* (Pandey et al., Qualcomm AI Research,
+//! 2023) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's algorithm and every substrate it
+//!   needs: PJRT runtime, MSE range estimation, SQNR/accuracy/FIT
+//!   sensitivity (Phase 1), quantizer groups, BOPs accounting, the greedy
+//!   pareto flip plus sequential/binary/interpolation searches (Phase 2),
+//!   and the AdaRound integration.
+//! * **L2** — the model zoo, lowered once by `python/compile/aot.py` to
+//!   HLO-text artifacts whose quantizer parameters are *runtime inputs*.
+//! * **L1** — Pallas fake-quant kernels inside those artifacts.
+//!
+//! Python never runs on the request path: everything here executes
+//! AOT-compiled artifacts through [`runtime::Runtime`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mpq::coordinator::Pipeline;
+//! use mpq::groups::Lattice;
+//!
+//! let mut pipe = Pipeline::open("artifacts", "resnet_s").unwrap();
+//! pipe.calibrate(256, 0).unwrap();
+//! let lat = Lattice::practical();
+//! let sens = pipe.sensitivity_sqnr(&lat).unwrap();
+//! let flips = pipe.flips(&lat, &sens);
+//! let run = pipe.search_bops_budget(&lat, &flips, 0.5).unwrap();
+//! println!("r={:.3} metric={:.4}", run.final_rel_bops, run.final_metric);
+//! ```
+
+pub mod adaround;
+pub mod bench;
+pub mod bops;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod groups;
+pub mod jsonio;
+pub mod manifest;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod sensitivity;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};
+
+/// Default artifacts directory, overridable with `MPQ_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MPQ_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

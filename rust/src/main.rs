@@ -1,0 +1,141 @@
+//! `mpq` — the leader CLI.
+//!
+//! ```text
+//! mpq list                      inventory of models in artifacts/
+//! mpq run --model M [...]       two-phase MPQ on one model
+//! mpq sensitivity --model M     Phase-1 list only
+//! mpq table1..table5            reproduce a paper table
+//! mpq fig2..fig5                reproduce a paper figure
+//! mpq all                       every table + figure, saved to results/
+//! ```
+//!
+//! Common flags: `--artifacts DIR`, `--calib N`, `--seed S`,
+//! `--models a,b,c`, `--fast`, `--budget R`, `--lattice practical|expanded`.
+
+use anyhow::{bail, Result};
+use mpq::cli::Args;
+use mpq::coordinator::Pipeline;
+use mpq::experiments::{self, Opts};
+use mpq::groups::Lattice;
+use mpq::manifest::Manifest;
+use mpq::report::results_dir;
+
+fn opts_from(args: &Args) -> Result<Opts> {
+    let mut o = Opts::default();
+    if let Some(d) = args.opt("artifacts") {
+        o.dir = d.into();
+    }
+    o.calib_n = args.opt_usize("calib", o.calib_n)?;
+    o.seed = args.opt_u64("seed", o.seed)?;
+    o.fast = o.fast || args.flag("fast");
+    if let Some(ms) = args.opt("models") {
+        o.models = Some(ms.split(',').map(String::from).collect());
+    }
+    Ok(o)
+}
+
+fn lattice_from(args: &Args) -> Result<Lattice> {
+    Ok(match args.opt_str("lattice", "practical") {
+        "practical" => Lattice::practical(),
+        "practical_no16" => Lattice::practical_no16(),
+        "expanded" => Lattice::expanded(),
+        l => bail!("unknown lattice '{l}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let opts = opts_from(&args)?;
+    let rdir = results_dir();
+
+    match cmd {
+        "list" => {
+            let man = Manifest::load(&opts.dir)?;
+            println!("{:<18} {:>4} {:>4} {:>7} {:>10} task", "model", "A", "W", "groups", "MACs");
+            for m in &man.models {
+                println!(
+                    "{:<18} {:>4} {:>4} {:>7} {:>10} {}",
+                    m.name,
+                    m.n_act(),
+                    m.n_w(),
+                    m.groups.len(),
+                    m.total_macs,
+                    m.task
+                );
+            }
+        }
+        "run" => {
+            let model = args.opt("model").unwrap_or("resnet_s");
+            let lat = lattice_from(&args)?;
+            let budget = args.opt_f64("budget", 0.5)?;
+            let mut pipe = Pipeline::open(&opts.dir, model)?;
+            pipe.calibrate(opts.calib_n, opts.seed)?;
+            let fp = pipe.eval_fp32()?;
+            let run = pipe.mixed_precision_for_budget(&lat, budget)?;
+            println!(
+                "{model}: fp32 {fp:.4} → MP r={:.3} metric={:.4} ({} flips, {:.1}s)",
+                run.final_rel_bops,
+                run.final_metric,
+                run.applied.len(),
+                run.wall_secs
+            );
+            for s in &run.applied {
+                println!("  group {:>3} → {}  (r→{:.3}, Ω={:.1})", s.group, s.cand.label(), s.rel_bops, s.score);
+            }
+        }
+        "sensitivity" => {
+            let model = args.opt("model").unwrap_or("resnet_s");
+            let lat = lattice_from(&args)?;
+            let mut pipe = Pipeline::open(&opts.dir, model)?;
+            pipe.calibrate(opts.calib_n, opts.seed)?;
+            let sens = pipe.sensitivity_sqnr(&lat)?;
+            println!("{:<8} {:<8} {:>10}", "group", "cand", "Ω (dB)");
+            for e in &sens {
+                println!("{:<8} {:<8} {:>10.2}", e.group, e.cand.label(), e.score);
+            }
+        }
+        "table1" => { let t = experiments::table1(&opts)?; t.print(); t.save(&rdir, "table1")?; }
+        "table2" => { let t = experiments::table2(&opts)?; t.print(); t.save(&rdir, "table2")?; }
+        "table3" => { let t = experiments::table3(&opts)?; t.print(); t.save(&rdir, "table3")?; }
+        "table4" => { let t = experiments::table4(&opts)?; t.print(); t.save(&rdir, "table4")?; }
+        "table5" => { let t = experiments::table5(&opts)?; t.print(); t.save(&rdir, "table5")?; }
+        "fig2" => {
+            let (a, b) = experiments::fig2(&opts)?;
+            a.print();
+            b.print();
+            a.save(&rdir, "fig2_curves")?;
+            b.save(&rdir, "fig2_ktau")?;
+        }
+        "fig3" => { let t = experiments::fig3(&opts)?; t.print(); t.save(&rdir, "fig3")?; }
+        "fig4" => { let t = experiments::fig4(&opts)?; t.print(); t.save(&rdir, "fig4")?; }
+        "fig5" => { let t = experiments::fig5(&opts)?; t.print(); t.save(&rdir, "fig5")?; }
+        "all" => {
+            for (name, f) in [
+                ("table1", experiments::table1 as fn(&Opts) -> Result<mpq::report::Table>),
+                ("table2", experiments::table2),
+                ("table3", experiments::table3),
+                ("table4", experiments::table4),
+                ("table5", experiments::table5),
+                ("fig3", experiments::fig3),
+                ("fig4", experiments::fig4),
+                ("fig5", experiments::fig5),
+            ] {
+                let t = f(&opts)?;
+                t.print();
+                t.save(&rdir, name)?;
+            }
+            let (a, b) = experiments::fig2(&opts)?;
+            a.print();
+            b.print();
+            a.save(&rdir, "fig2_curves")?;
+            b.save(&rdir, "fig2_ktau")?;
+        }
+        "help" | _ => {
+            println!("usage: mpq <list|run|sensitivity|table1..table5|fig2..fig5|all> [flags]");
+            println!("flags: --artifacts DIR --model M --models a,b --calib N --seed S");
+            println!("       --budget R --lattice practical|practical_no16|expanded --fast");
+        }
+    }
+    Ok(())
+}

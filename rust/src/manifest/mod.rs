@@ -1,0 +1,290 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`).
+//!
+//! The manifest is the contract between the build path and the Rust
+//! coordinator: executable file names, the ordered parameter list (= PJRT
+//! input order), quantizer inventories, per-op MAC counts for the BOPs
+//! ledger (Eq. 5), and the quantizer groups (§3.4).
+
+use crate::jsonio::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub task: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub input_is_i32: bool,
+    pub forward: String,
+    pub stats: String,
+    pub stats_bits: Vec<u8>,
+    pub stats_ratios: Vec<f64>,
+    pub weights_file: String,
+    pub params: Vec<ParamInfo>,
+    pub out_shape: Vec<usize>,
+    pub act_quantizers: Vec<ActQ>,
+    pub w_quantizers: Vec<WQ>,
+    pub layers: Vec<Layer>,
+    pub groups: Vec<Group>,
+    pub total_macs: u64,
+    pub cmax: usize,
+    pub fp32_val_metric: f64,
+    pub data: DataFiles,
+    pub taps: Option<String>,
+    pub adaround: Vec<AdaRoundLayer>,
+    pub fit: Option<String>,
+    pub fit_act_shapes: Option<Vec<Vec<usize>>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ActQ {
+    pub name: String,
+    pub numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct WQ {
+    pub name: String,
+    /// parameter this quantizer applies to (index into `params`)
+    pub param_idx: usize,
+    pub channels: usize,
+    pub channel_axis: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub macs: u64,
+    pub w_q: usize,
+    pub in_acts: Vec<usize>,
+}
+
+/// Quantizer group (§3.4): flipped as a unit by Phase 2.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub w_q: Vec<usize>,
+    pub act_q: Vec<usize>,
+    pub macs: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DataFiles {
+    pub calib: String,
+    pub calib_labels: String,
+    pub val: String,
+    pub val_labels: String,
+    pub ood_calib: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct AdaRoundLayer {
+    pub layer: String,
+    pub exe: String,
+    pub tap_index: usize,
+    pub param: String,
+    pub bias: String,
+    pub kind: String,
+    pub channels: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let j = jsonio::parse_file(dir.join("manifest.json"))
+            .context("parsing manifest.json — run `make artifacts` first")?;
+        let models_j = j.req("models")?.as_obj()?;
+        let mut models = Vec::new();
+        for (name, m) in models_j {
+            models.push(
+                Self::parse_model(name, m)
+                    .with_context(|| format!("model '{name}'"))?,
+            );
+        }
+        Ok(Self { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model '{name}' not in manifest (have: {})",
+                    self.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    fn parse_model(name: &str, m: &Json) -> Result<ModelEntry> {
+        let params: Vec<ParamInfo> = m
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let pidx = |pname: &str| -> Result<usize> {
+            params
+                .iter()
+                .position(|p| p.name == pname)
+                .ok_or_else(|| anyhow!("param '{pname}' not found"))
+        };
+
+        let w_quantizers = m
+            .req("w_quantizers")?
+            .as_arr()?
+            .iter()
+            .map(|q| {
+                Ok(WQ {
+                    name: q.req("name")?.as_str()?.to_string(),
+                    param_idx: pidx(q.req("weight")?.as_str()?)?,
+                    channels: q.req("channels")?.as_usize()?,
+                    channel_axis: q.req("channel_axis")?.as_usize()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        let d = m.req("data")?;
+        let opt_str = |j: &Json, k: &str| -> Option<String> {
+            j.get(k)
+                .filter(|v| !v.is_null())
+                .and_then(|v| v.as_str().ok())
+                .map(String::from)
+        };
+
+        Ok(ModelEntry {
+            name: name.to_string(),
+            task: m.req("task")?.as_str()?.to_string(),
+            batch: m.req("batch")?.as_usize()?,
+            input_shape: m.req("input")?.req("shape")?.usize_vec()?,
+            input_is_i32: m.req("input")?.req("dtype")?.as_str()? == "i32",
+            forward: m.req("forward")?.as_str()?.to_string(),
+            stats: m.req("stats")?.as_str()?.to_string(),
+            stats_bits: m
+                .req("stats_bits")?
+                .usize_vec()?
+                .into_iter()
+                .map(|b| b as u8)
+                .collect(),
+            stats_ratios: m.req("stats_ratios")?.f64_vec()?,
+            weights_file: m.req("weights_file")?.as_str()?.to_string(),
+            params,
+            out_shape: m.req("out_shape")?.usize_vec()?,
+            act_quantizers: m
+                .req("act_quantizers")?
+                .as_arr()?
+                .iter()
+                .map(|q| {
+                    Ok(ActQ {
+                        name: q.req("name")?.as_str()?.to_string(),
+                        numel: q.get("numel").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                    })
+                })
+                .collect::<Result<_>>()?,
+            w_quantizers,
+            layers: m
+                .req("layers")?
+                .as_arr()?
+                .iter()
+                .map(|l| {
+                    Ok(Layer {
+                        name: l.req("name")?.as_str()?.to_string(),
+                        macs: l.req("macs")?.as_f64()? as u64,
+                        w_q: l.req("w_q")?.as_usize()?,
+                        in_acts: l.req("in_acts")?.usize_vec()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            groups: m
+                .req("groups")?
+                .as_arr()?
+                .iter()
+                .map(|g| {
+                    Ok(Group {
+                        w_q: g.req("w_q")?.usize_vec()?,
+                        act_q: g.req("act_q")?.usize_vec()?,
+                        macs: g.req("macs")?.as_f64()? as u64,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            total_macs: m.req("total_macs")?.as_f64()? as u64,
+            cmax: m.req("cmax")?.as_usize()?,
+            fp32_val_metric: m.req("fp32_val_metric")?.as_f64()?,
+            data: DataFiles {
+                calib: d.req("calib")?.as_str()?.to_string(),
+                calib_labels: d.req("calib_labels")?.as_str()?.to_string(),
+                val: d.req("val")?.as_str()?.to_string(),
+                val_labels: d.req("val_labels")?.as_str()?.to_string(),
+                ood_calib: opt_str(d, "ood_calib"),
+            },
+            taps: opt_str(m, "taps"),
+            adaround: m
+                .req("adaround")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(AdaRoundLayer {
+                        layer: a.req("layer")?.as_str()?.to_string(),
+                        exe: a.req("exe")?.as_str()?.to_string(),
+                        tap_index: a.req("tap_index")?.as_usize()?,
+                        param: a.req("param")?.as_str()?.to_string(),
+                        bias: a.req("bias")?.as_str()?.to_string(),
+                        kind: a.req("kind")?.as_str()?.to_string(),
+                        channels: a.req("channels")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            fit: opt_str(m, "fit"),
+            fit_act_shapes: m
+                .get("fit_act_shapes")
+                .filter(|v| !v.is_null())
+                .map(|v| {
+                    v.as_arr()?
+                        .iter()
+                        .map(|s| s.usize_vec())
+                        .collect::<Result<Vec<_>>>()
+                })
+                .transpose()?,
+        })
+    }
+}
+
+impl ModelEntry {
+    /// Index of a parameter by name.
+    pub fn param_idx(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| anyhow!("param '{name}' not found in {}", self.name))
+    }
+
+    /// Number of activation / weight quantizers.
+    pub fn n_act(&self) -> usize {
+        self.act_quantizers.len()
+    }
+    pub fn n_w(&self) -> usize {
+        self.w_quantizers.len()
+    }
+}

@@ -1,0 +1,259 @@
+//! Task metrics (mirroring `python/compile/train.py::metric`) plus the
+//! statistical tools the paper's analysis uses: Kendall-τ (Fig. 2d) and
+//! Pearson correlation (STS-B).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Evaluate the task metric for raw logits against labels.
+///
+/// * `classify10`, `glue:rte_s/sst2_s/mnli_s` → top-1 accuracy
+/// * `glue:mrpc_s` → F1 of the positive class (paper Table 3 reports F1)
+/// * `glue:stsb_s` → Pearson correlation of the scalar head
+/// * `seg`        → mean IoU over the 3 classes
+pub fn task_metric(task: &str, logits: &Tensor, labels: &Tensor) -> Result<f64> {
+    match task {
+        "seg" => miou(logits, labels, 3),
+        "glue:mrpc_s" => f1_binary(logits, labels),
+        "glue:stsb_s" => pearson_head(logits, labels),
+        "classify10" | "glue:rte_s" | "glue:sst2_s" | "glue:mnli_s" => {
+            top1(logits, labels)
+        }
+        t => bail!("unknown task '{t}'"),
+    }
+}
+
+/// Top-1 accuracy; logits `[N, C]`, labels f32 class indices `[N]`.
+pub fn top1(logits: &Tensor, labels: &Tensor) -> Result<f64> {
+    let (n, c) = two_d(logits)?;
+    let lv = logits.f32s()?;
+    let yv = labels.f32s()?;
+    if yv.len() != n {
+        bail!("labels len {} != n {}", yv.len(), n);
+    }
+    let mut hits = 0usize;
+    for i in 0..n {
+        let row = &lv[i * c..(i + 1) * c];
+        let pred = argmax(row);
+        if pred == yv[i] as usize {
+            hits += 1;
+        }
+    }
+    Ok(hits as f64 / n as f64)
+}
+
+/// F1 of class 1 for binary logits `[N, 2]`.
+pub fn f1_binary(logits: &Tensor, labels: &Tensor) -> Result<f64> {
+    let (n, c) = two_d(logits)?;
+    if c != 2 {
+        bail!("f1 expects 2 classes, got {c}");
+    }
+    let lv = logits.f32s()?;
+    let yv = labels.f32s()?;
+    let (mut tp, mut fp, mut fnn) = (0f64, 0f64, 0f64);
+    for i in 0..n {
+        let pred = argmax(&lv[i * 2..i * 2 + 2]) == 1;
+        let pos = yv[i] as usize == 1;
+        match (pred, pos) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    let denom = 2.0 * tp + fp + fnn;
+    Ok(if denom > 0.0 { 2.0 * tp / denom } else { 0.0 })
+}
+
+/// Pearson correlation of logits `[N, 1]` against scalar labels.
+pub fn pearson_head(logits: &Tensor, labels: &Tensor) -> Result<f64> {
+    let (n, _) = two_d(logits)?;
+    let lv = logits.f32s()?;
+    let c = logits.shape[1];
+    let preds: Vec<f64> = (0..n).map(|i| lv[i * c] as f64).collect();
+    let ys: Vec<f64> = labels.f32s()?.iter().map(|&x| x as f64).collect();
+    Ok(pearson(&preds, &ys))
+}
+
+/// Mean IoU; logits `[N, C, H, W]`, labels i32 `[N, H, W]`.
+pub fn miou(logits: &Tensor, labels: &Tensor, classes: usize) -> Result<f64> {
+    if logits.shape.len() != 4 {
+        bail!("miou expects [N,C,H,W], got {:?}", logits.shape);
+    }
+    let (n, c, h, w) = (
+        logits.shape[0],
+        logits.shape[1],
+        logits.shape[2],
+        logits.shape[3],
+    );
+    if c != classes {
+        bail!("expected {classes} classes, got {c}");
+    }
+    let lv = logits.f32s()?;
+    let yv = labels.i32s()?;
+    if yv.len() != n * h * w {
+        bail!("labels numel {} != {}", yv.len(), n * h * w);
+    }
+    let mut inter = vec![0f64; classes];
+    let mut union = vec![0f64; classes];
+    let plane = h * w;
+    for i in 0..n {
+        for p in 0..plane {
+            // argmax over channel axis
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for ch in 0..classes {
+                let v = lv[(i * c + ch) * plane + p];
+                if v > bv {
+                    bv = v;
+                    best = ch;
+                }
+            }
+            let t = yv[i * plane + p] as usize;
+            for ch in 0..classes {
+                let pr = best == ch;
+                let gt = t == ch;
+                if pr && gt {
+                    inter[ch] += 1.0;
+                }
+                if pr || gt {
+                    union[ch] += 1.0;
+                }
+            }
+        }
+    }
+    let ious: Vec<f64> = (0..classes)
+        .filter(|&ch| union[ch] > 0.0)
+        .map(|ch| inter[ch] / union[ch])
+        .collect();
+    Ok(if ious.is_empty() { 0.0 } else { ious.iter().sum::<f64>() / ious.len() as f64 })
+}
+
+/// Pearson correlation of two equal-length vectors.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let (ma, mb) = (a.iter().sum::<f64>() / n, b.iter().sum::<f64>() / n);
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        let (x, y) = (a[i] - ma, b[i] - mb);
+        num += x * y;
+        da += x * x;
+        db += y * y;
+    }
+    if da == 0.0 || db == 0.0 {
+        0.0
+    } else {
+        num / (da * db).sqrt()
+    }
+}
+
+/// Kendall-τ (τ-a) rank correlation — Fig. 2(d)'s sensitivity-list quality
+/// score.  O(n²), fine for lists of ≤ a few hundred quantizers.
+pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut conc = 0i64;
+    let mut disc = 0i64;
+    for i in 0..n {
+        for j in i + 1..n {
+            let sx = (a[i] - a[j]).signum();
+            let sy = (b[i] - b[j]).signum();
+            let prod = sx * sy;
+            if prod > 0.0 {
+                conc += 1;
+            } else if prod < 0.0 {
+                disc += 1;
+            }
+        }
+    }
+    let total = (n * (n - 1) / 2) as f64;
+    (conc - disc) as f64 / total
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+fn two_d(t: &Tensor) -> Result<(usize, usize)> {
+    if t.shape.len() != 2 {
+        bail!("expected 2-D logits, got {:?}", t.shape);
+    }
+    Ok((t.shape[0], t.shape[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_basic() {
+        let l = Tensor::from_f32(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 2.0, 1.0]).unwrap();
+        let y = Tensor::from_f32(&[3], vec![0.0, 1.0, 1.0]).unwrap();
+        assert!((top1(&l, &y).unwrap() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        let l = Tensor::from_f32(&[2, 2], vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        let y = Tensor::from_f32(&[2], vec![1.0, 0.0]).unwrap();
+        assert_eq!(f1_binary(&l, &y).unwrap(), 1.0);
+        let y0 = Tensor::from_f32(&[2], vec![0.0, 0.0]).unwrap();
+        let l0 = Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 1.0, 0.0]).unwrap();
+        assert_eq!(f1_binary(&l0, &y0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_tau_extremes() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert!((kendall_tau(&a, &b) - 1.0).abs() < 1e-12);
+        let r: Vec<f64> = b.iter().rev().copied().collect();
+        assert!((kendall_tau(&a, &r) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_tau_partial() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 3.0, 2.0];
+        assert!((kendall_tau(&a, &b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn miou_perfect() {
+        // 1 sample, 2x2, 3 classes; logits one-hot matching labels
+        let mut lv = vec![0f32; 3 * 4];
+        let labels = [0i32, 1, 2, 1];
+        for (p, &t) in labels.iter().enumerate() {
+            lv[(t as usize) * 4 + p] = 1.0;
+        }
+        let l = Tensor::from_f32(&[1, 3, 2, 2], lv).unwrap();
+        let y = Tensor::from_i32(&[1, 2, 2], labels.to_vec()).unwrap();
+        assert!((miou(&l, &y, 3).unwrap() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,346 @@
+//! Quantized-model evaluation service.
+//!
+//! [`ModelHandle`] owns everything needed to evaluate one zoo model under
+//! arbitrary bit-width configurations: the compiled forward executable, the
+//! device-resident trained parameters, the calibration/validation data, and
+//! the calibrated quantizer ranges.
+//!
+//! A configuration is a [`QuantConfig`] — per-quantizer `Option<bits>` —
+//! materialized into the three packed runtime tensors the forward
+//! executable consumes (`act_qp[A,5]`, `w_scales[W,Cmax]`, `w_qmeta[W,3]`,
+//! see `python/compile/quantize.py`).  `None` rows have `enable = 0` and
+//! bypass the quantizer exactly, so FP32 evaluation is the all-`None`
+//! config on the *same* executable.
+
+use crate::data::{self, DataSet, ModelData};
+use crate::manifest::{Manifest, ModelEntry};
+use crate::quant::{self, ActRanges};
+use crate::runtime::{Exe, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Per-quantizer bit assignment; `None` = leave in FP32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantConfig {
+    pub act: Vec<Option<u8>>,
+    pub w: Vec<Option<u8>>,
+}
+
+impl QuantConfig {
+    pub fn fp32(entry: &ModelEntry) -> Self {
+        Self { act: vec![None; entry.n_act()], w: vec![None; entry.n_w()] }
+    }
+
+    /// Homogeneous WxAy configuration.
+    pub fn fixed(entry: &ModelEntry, wbits: u8, abits: u8) -> Self {
+        Self {
+            act: vec![Some(abits); entry.n_act()],
+            w: vec![Some(wbits); entry.n_w()],
+        }
+    }
+}
+
+/// Weight overrides for AdaRound-stitched configurations: parameter index →
+/// replacement tensor (already fake-quantized; the weight quantizer is
+/// disabled for overridden params).
+pub type WeightOverrides = HashMap<usize, Tensor>;
+
+/// A batched, device-resident evaluation set (inputs only; labels stay on
+/// the host for metric computation).
+pub struct EvalSet {
+    pub batches: Vec<xla::PjRtBuffer>,
+    pub labels: Tensor,
+    pub n: usize,
+    pub batch: usize,
+}
+
+pub struct ModelHandle {
+    pub rt: Rc<Runtime>,
+    pub entry: ModelEntry,
+    pub fwd: Rc<Exe>,
+    /// host copies of the trained parameters (AdaRound math needs them)
+    pub weights: Vec<Tensor>,
+    /// device-resident parameters (uploaded once)
+    param_bufs: Vec<xla::PjRtBuffer>,
+    pub data: ModelData,
+    /// calibrated activation ranges (None until [`Self::calibrate_ranges`])
+    pub act_ranges: Option<ActRanges>,
+    /// per-bits per-weight-quantizer MSE-optimal scales
+    pub w_scales: HashMap<u8, Vec<Vec<f32>>>,
+    /// forward executions performed (run-time accounting, Table 5)
+    pub fwd_calls: RefCell<u64>,
+}
+
+impl ModelHandle {
+    pub fn open(rt: Rc<Runtime>, manifest: &Manifest, name: &str) -> Result<Self> {
+        let entry = manifest.model(name)?.clone();
+        let fwd = rt.load(manifest.path(&entry.forward))?;
+        let weights = data::load_weights(&manifest.dir, &entry)?;
+        let param_bufs = weights
+            .iter()
+            .map(|t| rt.buffer(t))
+            .collect::<Result<Vec<_>>>()
+            .context("uploading parameters")?;
+        let md = ModelData::load(&manifest.dir, &entry.data)?;
+        Ok(Self {
+            rt,
+            entry,
+            fwd,
+            weights,
+            param_bufs,
+            data: md,
+            act_ranges: None,
+            w_scales: HashMap::new(),
+            fwd_calls: RefCell::new(0),
+        })
+    }
+
+    // -- calibration ---------------------------------------------------------
+
+    /// Run the stats executable over `set` and distill MSE-optimal
+    /// activation ranges; also precompute per-bits weight scales.
+    pub fn calibrate_ranges(&mut self, manifest: &Manifest, set: &EvalSet) -> Result<()> {
+        let stats = self.rt.load(manifest.path(&self.entry.stats))?;
+        let mut ranges = ActRanges::new(
+            self.entry.n_act(),
+            self.entry.stats_bits.clone(),
+            self.entry.stats_ratios.clone(),
+        );
+        for xb in &set.batches {
+            let mut args: Vec<&xla::PjRtBuffer> = vec![xb];
+            args.extend(self.param_bufs.iter());
+            // output tuple: one captured activation tensor per quantizer
+            let outs = stats.run_b(&args)?;
+            if outs.len() != self.entry.n_act() {
+                bail!(
+                    "stats exe returned {} outputs, want {}",
+                    outs.len(),
+                    self.entry.n_act()
+                );
+            }
+            ranges.accumulate(&outs, set.batches.len())?;
+        }
+        self.act_ranges = Some(ranges);
+
+        let ratios = quant::default_ratios();
+        let bits_list = self.entry.stats_bits.clone();
+        for bits in bits_list {
+            self.ensure_weight_scales(bits, &ratios)?;
+        }
+        Ok(())
+    }
+
+    pub fn ensure_weight_scales(&mut self, bits: u8, ratios: &[f64]) -> Result<()> {
+        if self.w_scales.contains_key(&bits) {
+            return Ok(());
+        }
+        let mut per_q = Vec::with_capacity(self.entry.n_w());
+        for wq in &self.entry.w_quantizers {
+            let w = &self.weights[wq.param_idx];
+            per_q.push(quant::weight_scales_mse(
+                w,
+                wq.channels,
+                wq.channel_axis,
+                bits,
+                ratios,
+            )?);
+        }
+        self.w_scales.insert(bits, per_q);
+        Ok(())
+    }
+
+    // -- eval sets -----------------------------------------------------------
+
+    /// Upload a dataset subset as device batches.
+    pub fn eval_set(&self, ds: &DataSet) -> Result<EvalSet> {
+        let batch = self.entry.batch;
+        let xs = ds.batches(batch)?;
+        if xs.is_empty() {
+            bail!("dataset smaller than one batch ({batch})");
+        }
+        let batches = xs
+            .iter()
+            .map(|t| self.rt.buffer(t))
+            .collect::<Result<Vec<_>>>()?;
+        let n = batches.len() * batch;
+        Ok(EvalSet { batches, labels: ds.labels_prefix(batch)?, n, batch })
+    }
+
+    /// Device batches for raw inputs with no labels (OOD calibration).
+    pub fn eval_set_unlabeled(&self, x: &Tensor) -> Result<EvalSet> {
+        let batch = self.entry.batch;
+        let nb = x.shape[0] / batch;
+        if nb == 0 {
+            bail!("need at least one batch");
+        }
+        let mut batches = Vec::with_capacity(nb);
+        for i in 0..nb {
+            batches.push(self.rt.buffer(&x.slice_rows(i * batch, batch)?)?);
+        }
+        let n = nb * batch;
+        Ok(EvalSet {
+            batches,
+            labels: Tensor::zeros(&[n]),
+            n,
+            batch,
+        })
+    }
+
+    // -- configuration materialization ---------------------------------------
+
+    /// Build the three packed quant-param tensors for a configuration.
+    pub fn qparam_tensors(&self, cfg: &QuantConfig) -> Result<(Tensor, Tensor, Tensor)> {
+        let entry = &self.entry;
+        if cfg.act.len() != entry.n_act() || cfg.w.len() != entry.n_w() {
+            bail!("config arity mismatch");
+        }
+        let ranges = self
+            .act_ranges
+            .as_ref()
+            .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
+
+        let mut act_qp = vec![0f32; entry.n_act() * 5];
+        for (i, b) in cfg.act.iter().enumerate() {
+            let row = &mut act_qp[i * 5..(i + 1) * 5];
+            match b {
+                Some(bits) => {
+                    let (s, o) = ranges.qparams(i, *bits)?;
+                    let (_, qmax) = quant::act_qrange(*bits);
+                    row.copy_from_slice(&[s, o, 0.0, qmax, 1.0]);
+                }
+                None => row.copy_from_slice(&[1.0, 0.0, 0.0, 1.0, 0.0]),
+            }
+        }
+
+        let cmax = entry.cmax;
+        let mut w_scales = vec![0f32; entry.n_w() * cmax];
+        let mut w_qmeta = vec![0f32; entry.n_w() * 3];
+        for (i, b) in cfg.w.iter().enumerate() {
+            let meta = &mut w_qmeta[i * 3..(i + 1) * 3];
+            match b {
+                Some(bits) => {
+                    let scales = self
+                        .w_scales
+                        .get(bits)
+                        .ok_or_else(|| anyhow!("weight scales for {bits} bits not prepared"))?;
+                    let sc = &scales[i];
+                    w_scales[i * cmax..i * cmax + sc.len()].copy_from_slice(sc);
+                    let (qmin, qmax) = quant::weight_qrange(*bits);
+                    meta.copy_from_slice(&[qmin, qmax, 1.0]);
+                }
+                None => {
+                    // scale 1, disabled
+                    for c in 0..cmax {
+                        w_scales[i * cmax + c] = 1.0;
+                    }
+                    meta.copy_from_slice(&[-1.0, 1.0, 0.0]);
+                }
+            }
+        }
+
+        Ok((
+            Tensor::from_f32(&[entry.n_act(), 5], act_qp)?,
+            Tensor::from_f32(&[entry.n_w(), cmax], w_scales)?,
+            Tensor::from_f32(&[entry.n_w(), 3], w_qmeta)?,
+        ))
+    }
+
+    /// Upload a configuration once for repeated forward calls.
+    pub fn config_buffers(
+        &self,
+        cfg: &QuantConfig,
+        overrides: &WeightOverrides,
+    ) -> Result<ConfigBuffers> {
+        // Overridden params carry pre-quantized weights → disable their
+        // weight quantizer so the L1 kernel passes them through.
+        let mut cfg = cfg.clone();
+        if !overrides.is_empty() {
+            for (i, wq) in self.entry.w_quantizers.iter().enumerate() {
+                if overrides.contains_key(&wq.param_idx) {
+                    cfg.w[i] = None;
+                }
+            }
+        }
+        let (a, s, m) = self.qparam_tensors(&cfg)?;
+        let mut override_bufs = HashMap::new();
+        for (&pidx, t) in overrides {
+            if t.shape != self.entry.params[pidx].shape {
+                bail!(
+                    "override for param {} has shape {:?}, want {:?}",
+                    pidx,
+                    t.shape,
+                    self.entry.params[pidx].shape
+                );
+            }
+            override_bufs.insert(pidx, self.rt.buffer(t)?);
+        }
+        Ok(ConfigBuffers {
+            act_qp: self.rt.buffer(&a)?,
+            w_scales: self.rt.buffer(&s)?,
+            w_qmeta: self.rt.buffer(&m)?,
+            overrides: override_bufs,
+        })
+    }
+
+    // -- forward / metric ------------------------------------------------------
+
+    /// One forward pass; returns the logits tensor for the batch.
+    pub fn forward(&self, x: &xla::PjRtBuffer, cb: &ConfigBuffers) -> Result<Tensor> {
+        *self.fwd_calls.borrow_mut() += 1;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 4);
+        args.push(x);
+        for (i, p) in self.param_bufs.iter().enumerate() {
+            args.push(cb.overrides.get(&i).unwrap_or(p));
+        }
+        args.push(&cb.act_qp);
+        args.push(&cb.w_scales);
+        args.push(&cb.w_qmeta);
+        let mut outs = self.fwd.run_b(&args)?;
+        if outs.len() != 1 {
+            bail!("forward returned {} outputs", outs.len());
+        }
+        Ok(outs.remove(0))
+    }
+
+    /// Concatenated logits over an eval set.
+    pub fn logits_on(&self, set: &EvalSet, cb: &ConfigBuffers) -> Result<Tensor> {
+        let mut all: Option<(Vec<usize>, Vec<f32>)> = None;
+        for xb in &set.batches {
+            let out = self.forward(xb, cb)?;
+            let v = out.f32s()?;
+            match &mut all {
+                None => {
+                    let mut shape = out.shape.clone();
+                    shape[0] = set.n;
+                    all = Some((shape, v.to_vec()));
+                }
+                Some((_, acc)) => acc.extend_from_slice(v),
+            }
+        }
+        let (shape, data) = all.unwrap();
+        Tensor::from_f32(&shape, data)
+    }
+
+    /// Task metric of a configuration over an eval set.
+    pub fn eval_metric(&self, set: &EvalSet, cb: &ConfigBuffers) -> Result<f64> {
+        let logits = self.logits_on(set, cb)?;
+        crate::metrics::task_metric(&self.entry.task, &logits, &set.labels)
+    }
+
+    /// Convenience: metric of `cfg` with no overrides.
+    pub fn eval_config(&self, set: &EvalSet, cfg: &QuantConfig) -> Result<f64> {
+        let cb = self.config_buffers(cfg, &HashMap::new())?;
+        self.eval_metric(set, &cb)
+    }
+}
+
+/// Device-resident packed configuration.
+pub struct ConfigBuffers {
+    pub act_qp: xla::PjRtBuffer,
+    pub w_scales: xla::PjRtBuffer,
+    pub w_qmeta: xla::PjRtBuffer,
+    pub overrides: HashMap<usize, xla::PjRtBuffer>,
+}

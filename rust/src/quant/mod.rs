@@ -1,0 +1,359 @@
+//! Uniform affine quantization substrate (paper §3.1, Eq. 1-2).
+//!
+//! Conventions (fixed across the whole stack, mirrored by the L1 kernels):
+//!
+//! * **Weights** — symmetric per-channel: integer grid
+//!   `[-(2^(b-1)-1), 2^(b-1)-1]`, offset 0, one scale per output channel.
+//! * **Activations** — asymmetric per-tensor: grid `[0, 2^b-1]`, scale +
+//!   integer offset (zero-point).
+//!
+//! Ranges are estimated with the paper's *MSE based criteria* (§4): weights
+//! are grid-searched here over clipping ratios of the per-channel abs-max;
+//! activation grids are evaluated **inside** the AOT `stats` executable
+//! (the activations only exist on device) and the argmin ratio is selected
+//! here — see [`ActRanges`].
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Clipping-ratio grid shared with `python/compile/aot.py` (`STATS_RATIOS`).
+pub fn default_ratios() -> Vec<f64> {
+    (0..15).map(|i| 0.30 + 0.05 * i as f64).collect()
+}
+
+/// Integer grid for a symmetric signed b-bit weight quantizer.
+pub fn weight_qrange(bits: u8) -> (f32, f32) {
+    let m = ((1i64 << (bits - 1)) - 1) as f32;
+    (-m, m)
+}
+
+/// Integer grid for an asymmetric unsigned b-bit activation quantizer.
+pub fn act_qrange(bits: u8) -> (f32, f32) {
+    (0.0, ((1i64 << bits) - 1) as f32)
+}
+
+/// Fake-quantize one value (reference scalar path, used by tests and the
+/// AdaRound stitcher).
+#[inline]
+pub fn fq(x: f32, scale: f32, offset: f32, qmin: f32, qmax: f32) -> f32 {
+    let s = scale.max(1e-12);
+    let q = (x / s + offset).round().clamp(qmin, qmax);
+    (q - offset) * s
+}
+
+/// Per-channel symmetric weight scales for `bits`, MSE-search over clipping
+/// ratios of the channel abs-max.
+///
+/// `w` is viewed as `(C, rest)` after moving `channel_axis` to the front.
+pub fn weight_scales_mse(
+    w: &Tensor,
+    channels: usize,
+    channel_axis: usize,
+    bits: u8,
+    ratios: &[f64],
+) -> Result<Vec<f32>> {
+    let (_, qmax) = weight_qrange(bits);
+    let v = w.f32s()?;
+    let view = ChannelView::new(&w.shape, channels, channel_axis)?;
+    let mut scales = vec![0f32; channels];
+    for c in 0..channels {
+        let mut amax = 0f32;
+        view.for_each(v, c, |x| amax = amax.max(x.abs()));
+        if amax == 0.0 {
+            scales[c] = 1e-8;
+            continue;
+        }
+        let mut best = (f64::INFINITY, amax / qmax);
+        for &r in ratios {
+            let s = (amax * r as f32) / qmax;
+            let mut err = 0f64;
+            view.for_each(v, c, |x| {
+                let d = x - fq(x, s, 0.0, -qmax, qmax);
+                err += (d * d) as f64;
+            });
+            if err < best.0 {
+                best = (err, s);
+            }
+        }
+        scales[c] = best.1;
+    }
+    Ok(scales)
+}
+
+/// Fake-quantize a weight tensor per channel (host-side; used for FIT's
+/// weight error terms and tests — the hot path runs the L1 kernel).
+pub fn quantize_weight(
+    w: &Tensor,
+    scales: &[f32],
+    channel_axis: usize,
+    bits: u8,
+) -> Result<Tensor> {
+    let (qmin, qmax) = weight_qrange(bits);
+    let v = w.f32s()?;
+    let view = ChannelView::new(&w.shape, scales.len(), channel_axis)?;
+    let mut out = v.to_vec();
+    for c in 0..scales.len() {
+        view.for_each_idx(c, |i| {
+            out[i] = fq(v[i], scales[c], 0.0, qmin, qmax);
+        });
+    }
+    Tensor::from_f32(&w.shape, out)
+}
+
+/// Mean squared quantization error of a weight tensor at `bits`.
+pub fn weight_quant_mse(
+    w: &Tensor,
+    scales: &[f32],
+    channel_axis: usize,
+    bits: u8,
+) -> Result<f64> {
+    let q = quantize_weight(w, scales, channel_axis, bits)?;
+    let (a, b) = (w.f32s()?, q.f32s()?);
+    let mut err = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (x - y) as f64;
+        err += d * d;
+    }
+    Ok(err / a.len() as f64)
+}
+
+/// Iterate elements of channel `c` when the tensor is viewed as
+/// `(..., C at channel_axis, ...)`.
+struct ChannelView {
+    outer: usize,
+    channels: usize,
+    inner: usize,
+}
+
+impl ChannelView {
+    fn new(shape: &[usize], channels: usize, channel_axis: usize) -> Result<Self> {
+        if channel_axis >= shape.len() || shape[channel_axis] != channels {
+            bail!(
+                "channel axis {channel_axis} (C={channels}) invalid for shape {shape:?}"
+            );
+        }
+        let outer: usize = shape[..channel_axis].iter().product();
+        let inner: usize = shape[channel_axis + 1..].iter().product();
+        Ok(Self { outer, channels, inner })
+    }
+
+    fn for_each_idx(&self, c: usize, mut f: impl FnMut(usize)) {
+        for o in 0..self.outer {
+            let base = (o * self.channels + c) * self.inner;
+            for i in 0..self.inner {
+                f(base + i);
+            }
+        }
+    }
+
+    fn for_each(&self, v: &[f32], c: usize, mut f: impl FnMut(f32)) {
+        self.for_each_idx(c, |i| f(v[i]));
+    }
+}
+
+/// Per-activation-quantizer range state, distilled from the AOT `stats`
+/// executable's output grids.
+#[derive(Clone, Debug)]
+pub struct ActRanges {
+    /// global (min, max) per activation quantizer
+    pub minmax: Vec<(f32, f32)>,
+    /// averaged MSE grid `[A][NB][NK]`
+    pub mse: Vec<Vec<Vec<f64>>>,
+    pub bits: Vec<u8>,
+    pub ratios: Vec<f64>,
+}
+
+impl ActRanges {
+    pub fn new(n_act: usize, bits: Vec<u8>, ratios: Vec<f64>) -> Self {
+        Self {
+            minmax: vec![(f32::INFINITY, f32::NEG_INFINITY); n_act],
+            mse: vec![vec![vec![0.0; ratios.len()]; bits.len()]; n_act],
+            bits,
+            ratios,
+        }
+    }
+
+    /// Fold in one batch of captured activations (one tensor per act
+    /// quantizer, from the AOT `stats` capture executable).
+    ///
+    /// Per tensor: global (min, max) are tracked exactly; the per-(bits,
+    /// ratio) quantization MSE is the rounding error on a strided
+    /// `SAMPLE`-element subsample plus the clipping error on the full
+    /// tensor (a subsample alone under-observes the tails and biases the
+    /// argmin toward over-aggressive clipping).
+    pub fn accumulate(&mut self, acts: &[Tensor], batches_total: usize) -> Result<()> {
+        const SAMPLE: usize = 4096;
+        let a = self.minmax.len();
+        if acts.len() != a {
+            bail!("captured {} act tensors, want {a}", acts.len());
+        }
+        let (nb, nk) = (self.bits.len(), self.ratios.len());
+        let w = 1.0 / batches_total as f64;
+        for i in 0..a {
+            let v = acts[i].f32s()?;
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in v {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            self.minmax[i].0 = self.minmax[i].0.min(lo);
+            self.minmax[i].1 = self.minmax[i].1.max(hi);
+            let stride = (v.len() / SAMPLE).max(1);
+            for k in 0..nk {
+                let r = self.ratios[k] as f32;
+                let (lo_r, hi_r) = (lo * r, hi * r);
+                // clipping error, full tensor (bits-independent)
+                let mut clip = 0f64;
+                for &x in v {
+                    let d = (x - x.clamp(lo_r, hi_r)) as f64;
+                    clip += d * d;
+                }
+                clip /= v.len() as f64;
+                for b in 0..nb {
+                    let levels = ((1i64 << self.bits[b]) - 1) as f32;
+                    let s = ((hi_r - lo_r) / levels).max(1e-12);
+                    let o = (-lo_r / s).round().clamp(0.0, levels);
+                    let mut round = 0f64;
+                    let mut n = 0usize;
+                    let mut j = 0usize;
+                    while j < v.len() && n < SAMPLE {
+                        let xc = v[j].clamp(lo_r, hi_r);
+                        let q = (xc / s + o).round().clamp(0.0, levels);
+                        let d = (xc - (q - o) * s) as f64;
+                        round += d * d;
+                        n += 1;
+                        j += stride;
+                    }
+                    self.mse[i][b][k] += (round / n.max(1) as f64 + clip) * w;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// MSE-optimal (scale, offset) for activation quantizer `aq` at `bits`.
+    pub fn qparams(&self, aq: usize, bits: u8) -> Result<(f32, f32)> {
+        let b = self
+            .bits
+            .iter()
+            .position(|&x| x == bits)
+            .ok_or_else(|| anyhow::anyhow!("bits {bits} not in stats grid {:?}", self.bits))?;
+        let grid = &self.mse[aq][b];
+        let k = grid
+            .iter()
+            .enumerate()
+            .min_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap_or(self.ratios.len() - 1);
+        let r = self.ratios[k] as f32;
+        let (lo, hi) = self.minmax[aq];
+        let (lo_r, hi_r) = (lo * r, hi * r);
+        let levels = ((1i64 << bits) - 1) as f32;
+        let s = ((hi_r - lo_r) / levels).max(1e-12);
+        let o = (-lo_r / s).round().clamp(0.0, levels);
+        Ok((s, o))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qranges() {
+        assert_eq!(weight_qrange(8), (-127.0, 127.0));
+        assert_eq!(weight_qrange(4), (-7.0, 7.0));
+        assert_eq!(act_qrange(8), (0.0, 255.0));
+        assert_eq!(act_qrange(4), (0.0, 15.0));
+    }
+
+    #[test]
+    fn fq_is_idempotent() {
+        // property: fake-quantizing a fake-quantized value is a fixpoint
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..500 {
+            let x = (rng.f64() as f32 - 0.5) * 8.0;
+            let s = 0.01 + rng.f64() as f32 * 0.2;
+            let y = fq(x, s, 0.0, -127.0, 127.0);
+            let z = fq(y, s, 0.0, -127.0, 127.0);
+            assert!((y - z).abs() < 1e-6, "x={x} y={y} z={z}");
+        }
+    }
+
+    #[test]
+    fn fq_error_bounded_by_half_scale_in_range() {
+        let s = 0.05;
+        for i in -100..100 {
+            let x = i as f32 * 0.031;
+            if x.abs() < 127.0 * s {
+                let y = fq(x, s, 0.0, -127.0, 127.0);
+                assert!((x - y).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_scales_lower_bits_bigger_error() {
+        let mut rng = crate::util::Rng::new(3);
+        let data: Vec<f32> = (0..4 * 18).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
+        let w = Tensor::from_f32(&[4, 18], data).unwrap();
+        let ratios = default_ratios();
+        let s8 = weight_scales_mse(&w, 4, 0, 8, &ratios).unwrap();
+        let s4 = weight_scales_mse(&w, 4, 0, 4, &ratios).unwrap();
+        let e8 = weight_quant_mse(&w, &s8, 0, 8).unwrap();
+        let e4 = weight_quant_mse(&w, &s4, 0, 4).unwrap();
+        assert!(e4 > e8 * 10.0, "e4={e4} e8={e8}");
+    }
+
+    #[test]
+    fn weight_scales_respect_channel_axis() {
+        // channel 0 small magnitude, channel 1 large — scales must differ
+        let w = Tensor::from_f32(&[8, 2], (0..16).map(|i| if i % 2 == 0 { 0.01 } else { 5.0 }).collect()).unwrap();
+        let s = weight_scales_mse(&w, 2, 1, 8, &default_ratios()).unwrap();
+        assert!(s[1] > s[0] * 50.0, "{s:?}");
+    }
+
+    #[test]
+    fn act_ranges_uniform_data_picks_full_range() {
+        // uniform data in [-1, 3]: no tail to clip, so at high bits the
+        // argmin ratio must be ~1.0 and the scale must cover the range
+        let mut ar = ActRanges::new(1, vec![4, 16], default_ratios());
+        let n = 8192;
+        let data: Vec<f32> = (0..n).map(|i| -1.0 + 4.0 * i as f32 / (n - 1) as f32).collect();
+        let t = Tensor::from_f32(&[n], data).unwrap();
+        ar.accumulate(&[t], 1).unwrap();
+        let (s, o) = ar.qparams(0, 16).unwrap();
+        assert!((s * 65535.0 - 4.0).abs() < 0.05, "covered range {}", s * 65535.0);
+        assert!((o - (1.0f32 / s).round()).abs() <= 1.0);
+        assert!(ar.qparams(0, 6).is_err());
+    }
+
+    #[test]
+    fn act_ranges_heavy_tail_clips() {
+        // 99% of mass in [0,1], a few samples at 100: MSE-optimal 4-bit
+        // range should clip far below 100
+        let mut ar = ActRanges::new(1, vec![4, 16], default_ratios());
+        let mut data = vec![0f32; 10000];
+        let mut rng = crate::util::Rng::new(5);
+        for x in data.iter_mut() {
+            *x = rng.f64() as f32;
+        }
+        data[0] = 10.0;
+        data[5000] = 10.0;
+        let t = Tensor::from_f32(&[10000], data).unwrap();
+        ar.accumulate(&[t], 1).unwrap();
+        let (s4, _) = ar.qparams(0, 4).unwrap();
+        assert!(s4 * 15.0 < 6.0, "4-bit covered range {}", s4 * 15.0);
+        // 16-bit still covers (rounding error negligible, clipping dominates)
+        let (s16, _) = ar.qparams(0, 16).unwrap();
+        assert!(s16 * 65535.0 > 6.0, "16-bit covered range {}", s16 * 65535.0);
+    }
+
+    #[test]
+    fn act_ranges_batch_count_mismatch() {
+        let mut ar = ActRanges::new(2, vec![8], default_ratios());
+        let t = Tensor::zeros(&[4]);
+        assert!(ar.accumulate(&[t], 1).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! ASCII curve rendering for the figure reproductions (Figs. 2, 4, 5):
+//! turns `(x, y)` series into a terminal scatter/step plot so the pareto
+//! curves are inspectable without any plotting stack.
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Self { name: name.into(), points }
+    }
+}
+
+/// Render series into a `width`×`height` character grid with axis labels.
+/// Each series gets a distinct marker; overlapping cells show the later
+/// series' marker.
+pub fn render(title: &str, xlabel: &str, ylabel: &str, series: &[Series],
+              width: usize, height: usize) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        return format!("== {title} == (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push_str(&format!("{ylabel} {y1:>8.4}\n"));
+    for row in &grid {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("  +{}\n", "-".repeat(width)));
+    out.push_str(&format!(
+        "   {x0:<10.3}{:>pad$.3}   ({xlabel})\n",
+        x1,
+        pad = width.saturating_sub(10)
+    ));
+    out.push_str(&format!("  y-min {y0:.4}\n"));
+    out
+}
+
+/// Parse the `"r:metric r:metric …"` strings the experiment tables store.
+pub fn parse_curve(s: &str) -> Vec<(f64, f64)> {
+    s.split_whitespace()
+        .filter_map(|p| {
+            let (a, b) = p.split_once(':')?;
+            Some((a.parse().ok()?, b.parse().ok()?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_curve_roundtrip() {
+        let pts = parse_curve("1.000:0.95 0.500:0.93 0.250:0.80");
+        assert_eq!(pts, vec![(1.0, 0.95), (0.5, 0.93), (0.25, 0.8)]);
+        assert!(parse_curve("garbage").is_empty());
+    }
+
+    #[test]
+    fn render_contains_marks_and_bounds() {
+        let s = vec![
+            Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]),
+            Series::new("b", vec![(0.5, 0.2)]),
+        ];
+        let out = render("T", "r", "acc", &s, 40, 10);
+        assert!(out.contains("== T =="));
+        assert!(out.contains('*') && out.contains('o'));
+        assert!(out.contains("0.000"));
+        assert!(out.contains("1.000"));
+    }
+
+    #[test]
+    fn render_degenerate_ranges() {
+        let s = vec![Series::new("a", vec![(0.5, 0.5), (0.5, 0.5)])];
+        let out = render("T", "x", "y", &s, 20, 5);
+        assert!(out.contains('*'));
+        assert!(render("E", "x", "y", &[], 20, 5).contains("no data"));
+    }
+}

@@ -1,0 +1,136 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute_b`).  Follows /opt/xla-example/load_hlo: HLO *text*
+//! is the interchange format (64-bit-id protos from jax ≥ 0.5 are rejected
+//! by xla_extension 0.5.1), and every executable returns a 1+ element tuple
+//! (`return_tuple=True` at lowering).
+//!
+//! Performance notes (§Perf): all executions go through [`Exe::run_b`] with
+//! device-resident [`xla::PjRtBuffer`] arguments, so model weights and
+//! calibration batches are uploaded **once** per run instead of per call —
+//! on this CPU target host↔device copies are memcpys, but they were a large
+//! share of Phase-1 wall time when literals were re-uploaded per probe.
+
+use crate::tensor::{Data, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled executable plus bookkeeping.
+pub struct Exe {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// number of `run*` invocations (run-time accounting for Table 5)
+    pub calls: RefCell<u64>,
+}
+
+/// PJRT client wrapper with an executable cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Exe>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Exe>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.cache.borrow().get(&path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let rc = Rc::new(Exe { name, exe, calls: RefCell::new(0) });
+        self.cache.borrow_mut().insert(path, rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn buffer(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims = &t.shape;
+        match &t.data {
+            Data::F32(v) => self
+                .client
+                .buffer_from_host_buffer(v, dims, None)
+                .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", dims)),
+            Data::I32(v) => self
+                .client
+                .buffer_from_host_buffer(v, dims, None)
+                .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", dims)),
+        }
+    }
+
+    /// Number of distinct compiled executables (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+impl Exe {
+    /// Execute with device buffers; returns the decomposed output tuple as
+    /// host tensors.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        *self.calls.borrow_mut() += 1;
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let buf = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))?;
+        parts.into_iter().map(literal_to_tensor).collect()
+    }
+
+    /// Convenience: upload host tensors, then `run_b`.
+    pub fn run(&self, rt: &Runtime, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let bufs: Vec<xla::PjRtBuffer> =
+            args.iter().map(|t| rt.buffer(t)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_b(&refs)
+    }
+}
+
+pub fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Tensor::from_f32(&dims, v)
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Tensor::from_i32(&dims, v)
+        }
+        t => bail!("unsupported output element type {t:?}"),
+    }
+}

@@ -1,0 +1,353 @@
+//! Phase 2 — mixed-precision configuration search (paper §3.3, §3.6,
+//! Algorithm 1).
+//!
+//! The sensitivity list (Phase 1) defines a *flip sequence*: starting from
+//! the all-baseline assignment, walk entries from least to most sensitive
+//! and flip a group whenever the entry's candidate strictly reduces that
+//! group's BOPs.  The resulting prefix family is the pareto curve.
+//!
+//! Three searches over that curve are implemented, matching Table 5:
+//!
+//! * [`sequential_accuracy`] — Algorithm 1 verbatim: evaluate after every
+//!   flip, stop on budget violation. `O(L·M)` evaluations.
+//! * [`binary_accuracy`] — binary search on the prefix length
+//!   (`O(log₂ L·M)`), exploiting the curve's monotonicity.
+//! * [`hybrid_accuracy`] — the paper's binary + interpolation scheme
+//!   (Fig. 1): two binary steps split the curve into quarters, then
+//!   interpolation search runs on the remaining piece-wise-linear segment.
+//!
+//! BOPs-budget search ([`bops_budget`]) needs no evaluations at all until
+//! the final report — flipping is pure ledger arithmetic.
+
+use crate::bops;
+use crate::groups::{Assignment, Candidate, Lattice};
+use crate::manifest::ModelEntry;
+use crate::model::{EvalSet, ModelHandle, WeightOverrides};
+use crate::sensitivity::{RoundedWeights, SensEntry};
+use crate::util::Timer;
+use anyhow::Result;
+
+/// One applied flip.
+#[derive(Clone, Debug)]
+pub struct FlipStep {
+    pub group: usize,
+    pub cand: Candidate,
+    /// relative BOPs after this flip
+    pub rel_bops: f64,
+    /// the Phase-1 score that ordered this flip
+    pub score: f64,
+}
+
+/// Search outcome.
+#[derive(Clone, Debug)]
+pub struct SearchRun {
+    pub assignment: Assignment,
+    pub applied: Vec<FlipStep>,
+    pub final_rel_bops: f64,
+    pub final_metric: f64,
+    /// number of full eval-set metric evaluations performed
+    pub evals: usize,
+    pub wall_secs: f64,
+    /// (rel_bops, metric) after each evaluated step — the pareto curve
+    pub curve: Vec<(f64, f64)>,
+}
+
+/// Materialize the flip sequence from a sorted sensitivity list.
+///
+/// Skips entries that do not strictly reduce the group's current BOPs
+/// (Algorithm 1 only ever lowers precision).
+pub fn flip_sequence(
+    entry: &ModelEntry,
+    lattice: &Lattice,
+    sens: &[SensEntry],
+) -> Vec<FlipStep> {
+    let mut asg = Assignment::baseline(entry, lattice);
+    let mut steps = Vec::new();
+    for e in sens {
+        if !Assignment::flippable(entry, e.group) {
+            continue;
+        }
+        if bops::flip_gain(entry, &asg, e.group, e.cand) == 0 {
+            continue;
+        }
+        asg.set(e.group, e.cand);
+        steps.push(FlipStep {
+            group: e.group,
+            cand: e.cand,
+            rel_bops: bops::rel_bops(entry, &asg),
+            score: e.score,
+        });
+    }
+    steps
+}
+
+/// Assignment after applying the first `k` flips.
+pub fn assignment_at(
+    entry: &ModelEntry,
+    lattice: &Lattice,
+    flips: &[FlipStep],
+    k: usize,
+) -> Assignment {
+    let mut asg = Assignment::baseline(entry, lattice);
+    for s in &flips[..k.min(flips.len())] {
+        asg.set(s.group, s.cand);
+    }
+    asg
+}
+
+/// Shared context for the accuracy-target searches.
+pub struct SearchCtx<'a> {
+    pub handle: &'a ModelHandle,
+    pub lattice: &'a Lattice,
+    pub flips: &'a [FlipStep],
+    pub set: &'a EvalSet,
+    /// AdaRounded weights to stitch per configuration (§3.5)
+    pub rounded: Option<&'a RoundedWeights>,
+}
+
+impl<'a> SearchCtx<'a> {
+    /// Metric of the k-flip prefix configuration.
+    pub fn eval_at(&self, k: usize) -> Result<f64> {
+        let asg = assignment_at(&self.handle.entry, self.lattice, self.flips, k);
+        let (act, w) = asg.per_quantizer(&self.handle.entry);
+        let cfg = crate::model::QuantConfig { act, w };
+        let ov = self.overrides_for(&asg);
+        let cb = self.handle.config_buffers(&cfg, &ov)?;
+        self.handle.eval_metric(self.set, &cb)
+    }
+
+    /// Stitch AdaRounded weights matching each parameter's current bits.
+    fn overrides_for(&self, asg: &Assignment) -> WeightOverrides {
+        let mut ov = WeightOverrides::new();
+        if let Some(rounded) = self.rounded {
+            let (_, wbits) = asg.per_quantizer(&self.handle.entry);
+            for (i, wq) in self.handle.entry.w_quantizers.iter().enumerate() {
+                if let Some(bits) = wbits[i] {
+                    if let Some(t) = rounded.get(&(wq.param_idx, bits)) {
+                        ov.insert(wq.param_idx, t.clone());
+                    }
+                }
+            }
+        }
+        ov
+    }
+
+    fn finish(&self, k: usize, evals: usize, t: &Timer, curve: Vec<(f64, f64)>) -> Result<SearchRun> {
+        let asg = assignment_at(&self.handle.entry, self.lattice, self.flips, k);
+        let final_metric = self.eval_at(k)?;
+        Ok(SearchRun {
+            final_rel_bops: bops::rel_bops(&self.handle.entry, &asg),
+            assignment: asg,
+            applied: self.flips[..k].to_vec(),
+            final_metric,
+            evals: evals + 1,
+            wall_secs: t.secs(),
+            curve,
+        })
+    }
+}
+
+/// Efficiency-budget search (§3.3.1): flip until `r ≤ budget`.  Pure ledger
+/// walk — a single final metric evaluation.
+pub fn bops_budget(ctx: &SearchCtx, budget_r: f64) -> Result<SearchRun> {
+    let t = Timer::start();
+    let mut k = 0;
+    while k < ctx.flips.len() && ctx.flips[k].rel_bops - budget_r > 1e-12 {
+        k += 1;
+    }
+    // ctx.flips[k-1].rel_bops > budget means even all flips didn't reach it;
+    // use as many as available.
+    if k < ctx.flips.len() {
+        k += 1; // include the flip that crossed the budget
+    }
+    ctx.finish(k, 0, &t, vec![])
+}
+
+/// Full pareto sweep: evaluate after *every* flip (used to draw Fig. 2/4/5
+/// curves).  Returns the complete curve.
+pub fn full_curve(ctx: &SearchCtx) -> Result<SearchRun> {
+    let t = Timer::start();
+    let mut curve = Vec::with_capacity(ctx.flips.len() + 1);
+    let m0 = ctx.eval_at(0)?;
+    curve.push((1.0, m0));
+    for k in 1..=ctx.flips.len() {
+        let m = ctx.eval_at(k)?;
+        curve.push((ctx.flips[k - 1].rel_bops, m));
+    }
+    let k = ctx.flips.len();
+    let evals = curve.len();
+    ctx.finish(k, evals, &t, curve)
+}
+
+/// Task-performance budget, sequential scheme (Algorithm 1): stop at the
+/// first flip whose metric violates `target`, return the previous model.
+pub fn sequential_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
+    let t = Timer::start();
+    let mut curve = Vec::new();
+    let mut evals = 0usize;
+    let mut best_k = 0usize;
+    for k in 1..=ctx.flips.len() {
+        let m = ctx.eval_at(k)?;
+        evals += 1;
+        curve.push((ctx.flips[k - 1].rel_bops, m));
+        if m < target {
+            break;
+        }
+        best_k = k;
+    }
+    ctx.finish(best_k, evals, &t, curve)
+}
+
+/// Binary search on the prefix length (§3.6): `O(log₂(LM))` evaluations.
+/// Finds the largest `k` with `metric(k) ≥ target`, assuming monotonicity.
+pub fn binary_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
+    let t = Timer::start();
+    let mut curve = Vec::new();
+    let mut evals = 0usize;
+    let (mut lo, mut hi) = (0usize, ctx.flips.len()); // metric(lo) ≥ target invariant
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        let m = ctx.eval_at(mid)?;
+        evals += 1;
+        let r = if mid == 0 { 1.0 } else { ctx.flips[mid - 1].rel_bops };
+        curve.push((r, m));
+        if m >= target {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    ctx.finish(lo, evals, &t, curve)
+}
+
+/// Binary + interpolation hybrid (§3.6, Fig. 1): two binary steps cut the
+/// `L·M`-point curve into a `⌈LM/4⌉`-point segment, then interpolation
+/// search (Peterson 1957) exploits the segment's near-linearity.
+pub fn hybrid_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
+    let t = Timer::start();
+    let mut curve = Vec::new();
+    let mut evals = 0usize;
+
+    let n = ctx.flips.len();
+    let mut lo = 0usize; // metric(lo) ≥ target
+    let mut hi = n; //  first index where metric may be < target
+    let mut m_lo = ctx.eval_at(0)?;
+    evals += 1;
+    curve.push((1.0, m_lo));
+    let mut m_hi = ctx.eval_at(n)?;
+    evals += 1;
+    curve.push((if n == 0 { 1.0 } else { ctx.flips[n - 1].rel_bops }, m_hi));
+    if m_hi >= target {
+        return ctx.finish(n, evals, &t, curve);
+    }
+
+    // two binary steps → quarter segment
+    for _ in 0..2 {
+        if hi - lo <= 1 {
+            break;
+        }
+        let mid = (lo + hi) / 2;
+        let m = ctx.eval_at(mid)?;
+        evals += 1;
+        curve.push((ctx.flips[mid.max(1) - 1].rel_bops, m));
+        if m >= target {
+            lo = mid;
+            m_lo = m;
+        } else {
+            hi = mid;
+            m_hi = m;
+        }
+    }
+
+    // interpolation search on [lo, hi)
+    while hi - lo > 1 {
+        let span = hi - lo;
+        let denom = (m_hi - m_lo).abs().max(1e-9);
+        let frac = ((m_lo - target) / denom).clamp(0.0, 1.0);
+        let mut probe = lo + ((span as f64) * frac) as usize;
+        probe = probe.clamp(lo + 1, hi - 1);
+        let m = ctx.eval_at(probe)?;
+        evals += 1;
+        curve.push((ctx.flips[probe - 1].rel_bops, m));
+        if m >= target {
+            lo = probe;
+            m_lo = m;
+        } else {
+            hi = probe;
+            m_hi = m;
+        }
+    }
+    ctx.finish(lo, evals, &t, curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bops::tests_support::toy_entry;
+    use crate::sensitivity::SensEntry;
+
+    fn sens(entries: &[(usize, u8, u8, f64)]) -> Vec<SensEntry> {
+        entries
+            .iter()
+            .map(|&(g, w, a, s)| SensEntry {
+                group: g,
+                cand: Candidate::new(w, a),
+                score: s,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flip_sequence_monotone_bops() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let s = sens(&[
+            (1, 8, 8, 50.0),
+            (0, 8, 8, 40.0),
+            (1, 4, 8, 30.0),
+            (0, 4, 8, 20.0),
+        ]);
+        let f = flip_sequence(&e, &l, &s);
+        assert_eq!(f.len(), 4);
+        for w in f.windows(2) {
+            assert!(w[1].rel_bops < w[0].rel_bops);
+        }
+        // final assignment: both groups at W4A8 → r = 0.25
+        assert!((f.last().unwrap().rel_bops - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flip_sequence_skips_non_improving() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        // second entry tries to move group 1 back up — must be skipped
+        let s = sens(&[(1, 4, 8, 50.0), (1, 8, 8, 45.0), (0, 8, 8, 40.0)]);
+        let f = flip_sequence(&e, &l, &s);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].cand, Candidate::new(4, 8));
+        assert_eq!(f[1].group, 0);
+    }
+
+    #[test]
+    fn flip_sequence_ignores_weightless_groups() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let s = sens(&[(2, 4, 8, 99.0), (0, 8, 8, 1.0)]);
+        let f = flip_sequence(&e, &l, &s);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].group, 0);
+    }
+
+    #[test]
+    fn assignment_at_prefixes() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        let s = sens(&[(1, 8, 8, 50.0), (0, 4, 8, 40.0)]);
+        let f = flip_sequence(&e, &l, &s);
+        let a0 = assignment_at(&e, &l, &f, 0);
+        assert_eq!(a0, Assignment::baseline(&e, &l));
+        let a2 = assignment_at(&e, &l, &f, 2);
+        assert_eq!(a2.per_group[1], Candidate::new(8, 8));
+        assert_eq!(a2.per_group[0], Candidate::new(4, 8));
+    }
+}

@@ -1,0 +1,364 @@
+//! Phase 1 — per-group sensitivity lists (paper §3.2).
+//!
+//! The primary metric is **SQNR at the network output** (Eq. 3-4): for each
+//! quantizer group `g` and candidate `c`, the network runs with *only* `g`
+//! quantized at `c` and the rest in FP32, and
+//!
+//! `Ω = 10·log10( (1/N) Σ_i  Σ F(x_i)² / Σ e(x_i)² )`,  `e = F − Q(F)`.
+//!
+//! Labels play no role (§3.2), which is what makes the algorithm robust to
+//! calibration-data variation (Fig. 2) and usable with out-of-domain data
+//! (Fig. 4).  Two baseline metrics are implemented for the Fig. 2
+//! comparison: task-accuracy degradation and the FIT (Fisher) metric.
+
+use crate::groups::{Assignment, Candidate, Lattice};
+use crate::manifest::Manifest;
+use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use crate::quant;
+use crate::tensor::Tensor;
+use crate::util::db10;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// One `(group, candidate)` sensitivity measurement.  Higher `score` =
+/// *less* sensitive = flipped earlier by Phase 2.
+#[derive(Clone, Debug)]
+pub struct SensEntry {
+    pub group: usize,
+    pub cand: Candidate,
+    pub score: f64,
+}
+
+/// Which Phase-1 metric to use (Fig. 2 compares all three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Sqnr,
+    Accuracy,
+    Fit,
+}
+
+/// Per-(layer-bits) AdaRounded weight tensors, keyed by
+/// `(param_idx, wbits)` — produced by [`crate::adaround`], consumed here
+/// when interweaving AdaRound into Phase 1 (§3.5).
+pub type RoundedWeights = HashMap<(usize, u8), Tensor>;
+
+/// SQNR (dB) between FP logits and quantized logits, per Eq. 3.
+pub fn sqnr_db(fp: &Tensor, q: &Tensor) -> Result<f64> {
+    if fp.shape != q.shape || fp.shape.is_empty() {
+        bail!("sqnr shape mismatch {:?} vs {:?}", fp.shape, q.shape);
+    }
+    let n = fp.shape[0];
+    let stride = fp.numel() / n;
+    let (a, b) = (fp.f32s()?, q.f32s()?);
+    let mut acc = 0f64;
+    for i in 0..n {
+        let mut sig = 0f64;
+        let mut err = 0f64;
+        for j in i * stride..(i + 1) * stride {
+            let f = a[j] as f64;
+            let e = f - b[j] as f64;
+            sig += f * f;
+            err += e * e;
+        }
+        acc += sig / err.max(1e-30);
+    }
+    Ok(db10(acc / n as f64))
+}
+
+/// FP32 logits over an eval set (the Phase-1 reference signal).
+pub fn fp_logits(handle: &ModelHandle, set: &EvalSet) -> Result<Tensor> {
+    let cfg = QuantConfig::fp32(&handle.entry);
+    let cb = handle.config_buffers(&cfg, &HashMap::new())?;
+    handle.logits_on(set, &cb)
+}
+
+/// Probe configuration: FP everywhere, group `g` at candidate `c`.
+pub fn probe_config(handle: &ModelHandle, g: usize, c: Candidate) -> QuantConfig {
+    let mut cfg = QuantConfig::fp32(&handle.entry);
+    let grp = &handle.entry.groups[g];
+    for &a in &grp.act_q {
+        cfg.act[a] = Some(c.abits);
+    }
+    for &w in &grp.w_q {
+        cfg.w[w] = Some(c.wbits);
+    }
+    cfg
+}
+
+/// Weight overrides for a probe when AdaRound is interweaved: the group's
+/// parameters replaced by their AdaRounded version at `c.wbits`.
+pub fn probe_overrides(
+    handle: &ModelHandle,
+    g: usize,
+    c: Candidate,
+    rounded: &RoundedWeights,
+) -> WeightOverrides {
+    let mut ov = WeightOverrides::new();
+    for &wq in &handle.entry.groups[g].w_q {
+        let pidx = handle.entry.w_quantizers[wq].param_idx;
+        if let Some(t) = rounded.get(&(pidx, c.wbits)) {
+            ov.insert(pidx, t.clone());
+        }
+    }
+    ov
+}
+
+/// Build the sensitivity list with the requested metric, sorted highest to
+/// lowest score (Algorithm 1's sort).
+///
+/// `rounded`: pass AdaRounded weights to interweave AdaRound into Phase 1.
+pub fn sensitivity_list(
+    handle: &ModelHandle,
+    manifest: &Manifest,
+    lattice: &Lattice,
+    set: &EvalSet,
+    metric: Metric,
+    rounded: Option<&RoundedWeights>,
+) -> Result<Vec<SensEntry>> {
+    let mut entries = match metric {
+        Metric::Sqnr => sqnr_scores(handle, lattice, set, rounded)?,
+        Metric::Accuracy => accuracy_scores(handle, lattice, set, rounded)?,
+        Metric::Fit => fit_scores(handle, manifest, lattice, set)?,
+    };
+    entries.sort_by(|x, y| y.score.partial_cmp(&x.score).unwrap());
+    Ok(entries)
+}
+
+fn probe_targets(handle: &ModelHandle, lattice: &Lattice) -> Vec<(usize, Candidate)> {
+    let mut out = Vec::new();
+    for g in 0..handle.entry.groups.len() {
+        if !Assignment::flippable(&handle.entry, g) {
+            continue;
+        }
+        for &c in &lattice.candidates {
+            if c != lattice.baseline {
+                out.push((g, c));
+            }
+        }
+    }
+    out
+}
+
+fn sqnr_scores(
+    handle: &ModelHandle,
+    lattice: &Lattice,
+    set: &EvalSet,
+    rounded: Option<&RoundedWeights>,
+) -> Result<Vec<SensEntry>> {
+    let fp = fp_logits(handle, set)?;
+    let mut out = Vec::new();
+    for (g, c) in probe_targets(handle, lattice) {
+        let cfg = probe_config(handle, g, c);
+        let ov = rounded
+            .map(|r| probe_overrides(handle, g, c, r))
+            .unwrap_or_default();
+        let cb = handle.config_buffers(&cfg, &ov)?;
+        let q = handle.logits_on(set, &cb)?;
+        out.push(SensEntry { group: g, cand: c, score: sqnr_db(&fp, &q)? });
+    }
+    Ok(out)
+}
+
+fn accuracy_scores(
+    handle: &ModelHandle,
+    lattice: &Lattice,
+    set: &EvalSet,
+    rounded: Option<&RoundedWeights>,
+) -> Result<Vec<SensEntry>> {
+    let mut out = Vec::new();
+    for (g, c) in probe_targets(handle, lattice) {
+        let cfg = probe_config(handle, g, c);
+        let ov = rounded
+            .map(|r| probe_overrides(handle, g, c, r))
+            .unwrap_or_default();
+        let cb = handle.config_buffers(&cfg, &ov)?;
+        out.push(SensEntry { group: g, cand: c, score: handle.eval_metric(set, &cb)? });
+    }
+    Ok(out)
+}
+
+/// FIT metric (Zandonati et al., used by the paper as the Fig. 2 Fisher
+/// baseline): `FIT(g,c) = Σ_w  E[g_w²]·E[Δ_w(c)²] + Σ_a E[g_a²]·E[Δ_a(c)²]`.
+/// Score is `-FIT` so that higher = less sensitive, like the other metrics.
+fn fit_scores(
+    handle: &ModelHandle,
+    manifest: &Manifest,
+    lattice: &Lattice,
+    set: &EvalSet,
+) -> Result<Vec<SensEntry>> {
+    let entry = &handle.entry;
+    let fit_file = entry
+        .fit
+        .as_ref()
+        .ok_or_else(|| anyhow!("{} has no FIT artifact", entry.name))?;
+    let exe = handle.rt.load(manifest.path(fit_file))?;
+    let shapes = entry
+        .fit_act_shapes
+        .as_ref()
+        .ok_or_else(|| anyhow!("missing fit_act_shapes"))?;
+
+    // zero perturbations, uploaded once
+    let pert_bufs: Vec<xla::PjRtBuffer> = shapes
+        .iter()
+        .map(|s| handle.rt.buffer(&Tensor::zeros(s)))
+        .collect::<Result<_>>()?;
+    let param_bufs: Vec<xla::PjRtBuffer> = handle
+        .weights
+        .iter()
+        .map(|t| handle.rt.buffer(t))
+        .collect::<Result<_>>()?;
+
+    let abits_opts = lattice.abits_options();
+    let ranges = handle
+        .act_ranges
+        .as_ref()
+        .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
+
+    // label batches
+    let label_batches: Vec<Tensor> = (0..set.batches.len())
+        .map(|i| set.labels.slice_rows(i * set.batch, set.batch))
+        .collect::<Result<_>>()?;
+
+    // accumulate per-abits: agrad2[A], aerr2[A]; wgrad2[W] shared
+    let a_n = entry.n_act();
+    let w_n = entry.n_w();
+    let mut wgrad2 = vec![0f64; w_n];
+    let mut agrad2 = vec![0f64; a_n];
+    let mut aerr2: HashMap<u8, Vec<f64>> = HashMap::new();
+
+    for &abits in &abits_opts {
+        // act_qp with every quantizer at `abits` (enable irrelevant in fit
+        // mode; the exe forces quantization for the error term only)
+        let mut act_qp = vec![0f32; a_n * 5];
+        for i in 0..a_n {
+            let (s, o) = ranges.qparams(i, abits)?;
+            let (_, qmax) = quant::act_qrange(abits);
+            act_qp[i * 5..(i + 1) * 5].copy_from_slice(&[s, o, 0.0, qmax, 1.0]);
+        }
+        let qp_buf = handle
+            .rt
+            .buffer(&Tensor::from_f32(&[a_n, 5], act_qp)?)?;
+        let errs = aerr2.entry(abits).or_insert_with(|| vec![0f64; a_n]);
+
+        for (bi, xb) in set.batches.iter().enumerate() {
+            let yb = handle.rt.buffer(&label_batches[bi])?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![xb, &yb];
+            args.extend(param_bufs.iter());
+            args.extend(pert_bufs.iter());
+            args.push(&qp_buf);
+            let outs = exe.run_b(&args)?;
+            if outs.len() != 4 {
+                bail!("fit exe returned {} outputs", outs.len());
+            }
+            let scale = 1.0 / (set.batches.len() * abits_opts.len()) as f64;
+            for (i, v) in outs[1].f32s()?.iter().enumerate() {
+                wgrad2[i] += *v as f64 * scale; // same across abits; averaged
+            }
+            for (i, v) in outs[2].f32s()?.iter().enumerate() {
+                agrad2[i] += *v as f64 * scale;
+            }
+            for (i, v) in outs[3].f32s()?.iter().enumerate() {
+                errs[i] += *v as f64 / set.batches.len() as f64;
+            }
+        }
+    }
+
+    // host-side weight quantization errors per wbits
+    let mut werr2: HashMap<u8, Vec<f64>> = HashMap::new();
+    for &wbits in &lattice.wbits_options() {
+        let scales = handle
+            .w_scales
+            .get(&wbits)
+            .ok_or_else(|| anyhow!("weight scales for {wbits} missing"))?;
+        let mut errs = Vec::with_capacity(w_n);
+        for (i, wq) in entry.w_quantizers.iter().enumerate() {
+            errs.push(quant::weight_quant_mse(
+                &handle.weights[wq.param_idx],
+                &scales[i],
+                wq.channel_axis,
+                wbits,
+            )?);
+        }
+        werr2.insert(wbits, errs);
+    }
+
+    let mut out = Vec::new();
+    for (g, c) in probe_targets(handle, lattice) {
+        let grp = &entry.groups[g];
+        let mut fit = 0f64;
+        for &w in &grp.w_q {
+            fit += wgrad2[w] * werr2[&c.wbits][w];
+        }
+        for &a in &grp.act_q {
+            fit += agrad2[a] * aerr2[&c.abits][a];
+        }
+        out.push(SensEntry { group: g, cand: c, score: -fit });
+    }
+    Ok(out)
+}
+
+/// Per-quantizer SQNR at a fixed candidate — Fig. 3's per-network SQNR
+/// ranges.  Probes each activation / weight quantizer *individually*.
+pub fn per_quantizer_sqnr(
+    handle: &ModelHandle,
+    set: &EvalSet,
+    cand: Candidate,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let fp = fp_logits(handle, set)?;
+    let mut act = Vec::with_capacity(handle.entry.n_act());
+    for a in 0..handle.entry.n_act() {
+        let mut cfg = QuantConfig::fp32(&handle.entry);
+        cfg.act[a] = Some(cand.abits);
+        let cb = handle.config_buffers(&cfg, &HashMap::new())?;
+        let q = handle.logits_on(set, &cb)?;
+        act.push(sqnr_db(&fp, &q)?);
+    }
+    let mut w = Vec::with_capacity(handle.entry.n_w());
+    for i in 0..handle.entry.n_w() {
+        let mut cfg = QuantConfig::fp32(&handle.entry);
+        cfg.w[i] = Some(cand.wbits);
+        let cb = handle.config_buffers(&cfg, &HashMap::new())?;
+        let q = handle.logits_on(set, &cb)?;
+        w.push(sqnr_db(&fp, &q)?);
+    }
+    Ok((act, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqnr_zero_error_is_large() {
+        let a = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let s = sqnr_db(&a, &a).unwrap();
+        assert!(s > 100.0, "{s}");
+    }
+
+    #[test]
+    fn sqnr_known_ratio() {
+        // signal power 1.0 per element, error power 0.01 → 20 dB
+        let f = Tensor::from_f32(&[1, 4], vec![1.0; 4]).unwrap();
+        let q = Tensor::from_f32(&[1, 4], vec![0.9; 4]).unwrap();
+        let s = sqnr_db(&f, &q).unwrap();
+        assert!((s - 20.0).abs() < 1e-3, "{s}");
+    }
+
+    #[test]
+    fn sqnr_monotone_in_noise() {
+        let f = Tensor::from_f32(&[1, 8], (1..=8).map(|x| x as f32).collect()).unwrap();
+        let mk = |eps: f32| {
+            Tensor::from_f32(&[1, 8], (1..=8).map(|x| x as f32 + eps).collect()).unwrap()
+        };
+        let s1 = sqnr_db(&f, &mk(0.01)).unwrap();
+        let s2 = sqnr_db(&f, &mk(0.1)).unwrap();
+        assert!(s1 > s2);
+    }
+
+    #[test]
+    fn sqnr_shape_mismatch() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(sqnr_db(&a, &b).is_err());
+    }
+}

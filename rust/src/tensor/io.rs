@@ -1,0 +1,128 @@
+//! MPQT binary tensor format — the Rust counterpart of
+//! `python/compile/tensorio.py`.
+//!
+//! Layout (little-endian):
+//! `u32 magic "MPQT"` · `u8 dtype (0=f32,1=i32)` · `u8 ndim` ·
+//! `u16 reserved` · `u32 dims[ndim]` · payload.  Files may concatenate
+//! several tensors.
+
+use super::{Data, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+
+pub const MAGIC: u32 = 0x4D50_5154;
+
+pub fn read_tensor(r: &mut impl Read) -> Result<Option<Tensor>> {
+    let mut hdr = [0u8; 8];
+    match r.read_exact(&mut hdr[..1]) {
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        other => other.context("reading header")?,
+    }
+    r.read_exact(&mut hdr[1..])?;
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad MPQT magic {magic:#x}");
+    }
+    let dtype = hdr[4];
+    let ndim = hdr[5] as usize;
+    let mut dims = vec![0usize; ndim];
+    let mut d4 = [0u8; 4];
+    for d in dims.iter_mut() {
+        r.read_exact(&mut d4)?;
+        *d = u32::from_le_bytes(d4) as usize;
+    }
+    let n: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+    let mut raw = vec![0u8; n * 4];
+    r.read_exact(&mut raw)?;
+    let data = match dtype {
+        0 => Data::F32(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        1 => Data::I32(
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        d => bail!("unknown dtype tag {d}"),
+    };
+    Ok(Some(Tensor { shape: dims, data }))
+}
+
+pub fn read_tensors(path: impl AsRef<std::path::Path>) -> Result<Vec<Tensor>> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| anyhow!("opening {}: {e}", path.as_ref().display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    while let Some(t) = read_tensor(&mut r)? {
+        out.push(t);
+    }
+    Ok(out)
+}
+
+pub fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    w.write_all(&MAGIC.to_le_bytes())?;
+    let dtype: u8 = if t.is_f32() { 0 } else { 1 };
+    w.write_all(&[dtype, t.shape.len() as u8, 0, 0])?;
+    for &d in &t.shape {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match &t.data {
+        Data::F32(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Data::I32(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn write_tensors(path: impl AsRef<std::path::Path>, ts: &[Tensor]) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    for t in ts {
+        write_tensor(&mut w, t)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed() {
+        let a = Tensor::from_f32(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, 4.0, -1.0]).unwrap();
+        let b = Tensor::from_i32(&[4], vec![1, -2, 3, -4]).unwrap();
+        let dir = std::env::temp_dir().join("mpqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("roundtrip.bin");
+        write_tensors(&p, &[a.clone(), b.clone()]).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert_eq!(back, vec![a, b]);
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let dir = std::env::temp_dir().join("mpqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        assert!(read_tensors(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("mpqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 16]).unwrap();
+        assert!(read_tensors(&p).is_err());
+    }
+}

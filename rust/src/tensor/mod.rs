@@ -1,0 +1,162 @@
+//! Host-side tensors and the MPQT binary interchange format.
+//!
+//! [`Tensor`] is the crate's lingua franca between artifact files, PJRT
+//! literals and the algorithm code.  Only the two dtypes that cross the
+//! python↔rust boundary exist: `f32` and `i32`.
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: Data::F32(vec![0.0; shape.iter().product()]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data: Data::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data: Data::I32(data) })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, Data::F32(_))
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Copy of rows `[start, start+len)` along the first axis.
+    pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            bail!("cannot row-slice a scalar");
+        }
+        let n0 = self.shape[0];
+        if start + len > n0 {
+            bail!("row slice {start}+{len} out of bounds (n0={n0})");
+        }
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = len;
+        Ok(match &self.data {
+            Data::F32(v) => Tensor {
+                shape,
+                data: Data::F32(v[start * stride..(start + len) * stride].to_vec()),
+            },
+            Data::I32(v) => Tensor {
+                shape,
+                data: Data::I32(v[start * stride..(start + len) * stride].to_vec()),
+            },
+        })
+    }
+
+    /// Gather rows by index along the first axis (calibration subsets).
+    pub fn gather_rows(&self, idx: &[usize]) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            bail!("cannot gather a scalar");
+        }
+        let stride: usize = self.shape[1..].iter().product();
+        let n0 = self.shape[0];
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        Ok(match &self.data {
+            Data::F32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * stride);
+                for &i in idx {
+                    if i >= n0 {
+                        bail!("gather index {i} >= {n0}");
+                    }
+                    out.extend_from_slice(&v[i * stride..(i + 1) * stride]);
+                }
+                Tensor { shape, data: Data::F32(out) }
+            }
+            Data::I32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * stride);
+                for &i in idx {
+                    if i >= n0 {
+                        bail!("gather index {i} >= {n0}");
+                    }
+                    out.extend_from_slice(&v[i * stride..(i + 1) * stride]);
+                }
+                Tensor { shape, data: Data::I32(out) }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::from_i32(&[2], vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_basic() {
+        let t = Tensor::from_f32(&[4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.f32s().unwrap(), &[2.0, 3.0, 4.0, 5.0]);
+        assert!(t.slice_rows(3, 2).is_err());
+    }
+
+    #[test]
+    fn gather_rows_basic() {
+        let t = Tensor::from_i32(&[3, 2], vec![0, 1, 10, 11, 20, 21]).unwrap();
+        let g = t.gather_rows(&[2, 0]).unwrap();
+        assert_eq!(g.i32s().unwrap(), &[20, 21, 0, 1]);
+        assert!(t.gather_rows(&[5]).is_err());
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = Tensor::zeros(&[2]);
+        assert!(t.f32s().is_ok());
+        assert!(t.i32s().is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Integration tests over the real artifacts (run `make artifacts` first;
+//! tests skip gracefully when artifacts are absent so `cargo test` stays
+//! green on a fresh checkout).
+//!
+//! These exercise the full L3→PJRT→L2→L1 stack on `resnet_s`, including the
+//! cross-layer numerical contract: the Rust FP32 evaluation must reproduce
+//! the validation metric the python build path recorded in the manifest.
+
+use mpq::coordinator::{Pipeline, SearchScheme};
+use mpq::groups::{Assignment, Candidate, Lattice};
+use mpq::manifest::Manifest;
+use mpq::model::QuantConfig;
+use mpq::sensitivity;
+use std::collections::HashMap;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = mpq::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {}", dir.display());
+        None
+    }
+}
+
+macro_rules! skip_unless_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+fn pipe(dir: &std::path::Path) -> Pipeline {
+    let mut p = Pipeline::open(dir, "resnet_s").expect("open resnet_s");
+    p.calibrate(128, 0).expect("calibrate");
+    p
+}
+
+#[test]
+fn manifest_loads_and_groups_partition() {
+    let dir = skip_unless_artifacts!();
+    let man = Manifest::load(&dir).unwrap();
+    assert!(!man.models.is_empty());
+    for m in &man.models {
+        Assignment::validate_partition(m)
+            .unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        assert!(m.total_macs > 0, "{} has no MACs", m.name);
+        assert_eq!(
+            m.total_macs,
+            m.groups.iter().map(|g| g.macs).sum::<u64>(),
+            "{}: group MACs don't sum to total",
+            m.name
+        );
+        // every layer's weight quantizer groups together with its inputs
+        for l in &m.layers {
+            let gw = m
+                .groups
+                .iter()
+                .position(|g| g.w_q.contains(&l.w_q))
+                .expect("layer w_q in some group");
+            for a in &l.in_acts {
+                assert!(
+                    m.groups[gw].act_q.contains(a),
+                    "{}: layer {} input act {} not grouped with its weight",
+                    m.name,
+                    l.name,
+                    a
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fp32_matches_python_build_path() {
+    let dir = skip_unless_artifacts!();
+    let mut p = pipe(&dir);
+    let fp = p.eval_fp32().unwrap();
+    let want = p.model.entry.fp32_val_metric;
+    assert!(
+        (fp - want).abs() < 5e-3,
+        "rust fp32 {fp} != manifest {want} — cross-layer drift"
+    );
+}
+
+#[test]
+fn a16_is_near_lossless() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let set = p.calib_set().unwrap();
+    let fp = sensitivity::fp_logits(&p.model, set).unwrap();
+    let cfg = QuantConfig {
+        act: vec![Some(16); p.model.entry.n_act()],
+        w: vec![None; p.model.entry.n_w()],
+    };
+    let cb = p.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+    let q = p.model.logits_on(set, &cb).unwrap();
+    let s = sensitivity::sqnr_db(&fp, &q).unwrap();
+    assert!(s > 55.0, "A16 SQNR only {s} dB — activation path broken");
+}
+
+#[test]
+fn lower_bits_lower_sqnr() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let set = p.calib_set().unwrap();
+    let fp = sensitivity::fp_logits(&p.model, set).unwrap();
+    let mut at = |bits: u8| {
+        let cfg = QuantConfig {
+            act: vec![Some(bits); p.model.entry.n_act()],
+            w: vec![None; p.model.entry.n_w()],
+        };
+        let cb = p.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+        let q = p.model.logits_on(set, &cb).unwrap();
+        sensitivity::sqnr_db(&fp, &q).unwrap()
+    };
+    let (s4, s8, s16) = (at(4), at(8), at(16));
+    assert!(s4 < s8 && s8 < s16, "SQNR not monotone: {s4} {s8} {s16}");
+}
+
+#[test]
+fn probe_config_only_touches_group() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let cfg = sensitivity::probe_config(&p.model, 1, Candidate::new(4, 8));
+    let grp = &p.model.entry.groups[1];
+    for (i, b) in cfg.act.iter().enumerate() {
+        assert_eq!(b.is_some(), grp.act_q.contains(&i));
+    }
+    for (i, b) in cfg.w.iter().enumerate() {
+        assert_eq!(b.is_some(), grp.w_q.contains(&i));
+    }
+}
+
+#[test]
+fn sensitivity_list_sorted_and_complete() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flippable = (0..p.model.entry.groups.len())
+        .filter(|&g| Assignment::flippable(&p.model.entry, g))
+        .count();
+    assert_eq!(sens.len(), flippable * (lat.candidates.len() - 1));
+    for w in sens.windows(2) {
+        assert!(w[0].score >= w[1].score, "list not sorted");
+    }
+}
+
+#[test]
+fn bops_budget_search_respects_budget() {
+    let dir = skip_unless_artifacts!();
+    let mut p = pipe(&dir);
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flips = p.flips(&lat, &sens);
+    let min_r = mpq::bops::min_rel_bops(&p.model.entry, &lat);
+    for budget in [0.75, 0.5, 0.375] {
+        let run = p
+            .search_bops_budget(&lat, &flips, budget)
+            .unwrap();
+        assert!(
+            run.final_rel_bops <= budget + 1e-9 || (run.final_rel_bops - min_r).abs() < 1e-9,
+            "budget {budget} not met: r={}",
+            run.final_rel_bops
+        );
+    }
+}
+
+#[test]
+fn binary_matches_sequential_on_monotone_prefix() {
+    let dir = skip_unless_artifacts!();
+    let mut p = pipe(&dir);
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flips = p.flips(&lat, &sens);
+    let fp = p.eval_fp32().unwrap();
+    let target = fp - 0.02;
+    let seq = p
+        .search_accuracy_target(&lat, &flips, target, SearchScheme::Sequential, None)
+        .unwrap();
+    let bin = p
+        .search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)
+        .unwrap();
+    let hyb = p
+        .search_accuracy_target(&lat, &flips, target, SearchScheme::Hybrid, None)
+        .unwrap();
+    // all three must satisfy the target…
+    for (name, run) in [("seq", &seq), ("bin", &bin), ("hyb", &hyb)] {
+        assert!(
+            run.final_metric >= target - 1e-9,
+            "{name} violates target: {} < {target}",
+            run.final_metric
+        );
+    }
+    // …and the faster schemes must use strictly fewer evaluations when the
+    // sequential walk went deep
+    if seq.evals > 8 {
+        assert!(bin.evals < seq.evals, "binary not faster: {} vs {}", bin.evals, seq.evals);
+        assert!(hyb.evals <= seq.evals);
+    }
+}
+
+#[test]
+fn mixed_beats_or_matches_fixed_at_same_bops() {
+    let dir = skip_unless_artifacts!();
+    let mut p = pipe(&dir);
+    let lat = Lattice::practical();
+    let w8a8 = p.eval_fixed(Candidate::new(8, 8), None).unwrap();
+    let run = p.mixed_precision_for_budget(&lat, 0.5).unwrap();
+    assert!(run.final_rel_bops <= 0.5 + 1e-9);
+    assert!(
+        run.final_metric >= w8a8 - 0.02,
+        "MP {} much worse than fixed W8A8 {}",
+        run.final_metric,
+        w8a8
+    );
+}
+
+#[test]
+fn weight_override_changes_logits() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let set = p.calib_set().unwrap();
+    let cfg = QuantConfig::fp32(&p.model.entry);
+    let cb = p.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+    let base = p.model.logits_on(set, &cb).unwrap();
+
+    // zero out the first conv's weights via override
+    let pidx = p.model.entry.w_quantizers[0].param_idx;
+    let zero = mpq::tensor::Tensor::zeros(&p.model.entry.params[pidx].shape);
+    let mut ov = HashMap::new();
+    ov.insert(pidx, zero);
+    let cb2 = p.model.config_buffers(&cfg, &ov).unwrap();
+    let changed = p.model.logits_on(set, &cb2).unwrap();
+    assert_ne!(base.f32s().unwrap(), changed.f32s().unwrap());
+}
+
+#[test]
+fn ood_calibration_runs() {
+    let dir = skip_unless_artifacts!();
+    let mut p = Pipeline::open(&dir, "resnet_s").unwrap();
+    let x = p.model.data.ood_calib.clone().expect("ood data");
+    let sub = x.slice_rows(0, 128).unwrap();
+    p.calibrate_unlabeled(&sub).unwrap();
+    let lat = Lattice::practical_no16();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert!(!sens.is_empty());
+}

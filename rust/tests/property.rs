@@ -1,0 +1,246 @@
+//! Property-based tests on coordinator invariants (routing of flips,
+//! ledger arithmetic, serialization), using seeded random generation from
+//! `mpq::util::Rng` — the offline crate set has no `proptest`, so the
+//! generator loop is explicit: 200 random cases per property.
+
+use mpq::groups::{Assignment, Candidate, Lattice};
+use mpq::jsonio::{self, Json};
+use mpq::manifest::{ActQ, DataFiles, Group, Layer, ModelEntry, ParamInfo, WQ};
+use mpq::metrics::kendall_tau;
+use mpq::search::{assignment_at, flip_sequence};
+use mpq::sensitivity::SensEntry;
+use mpq::tensor::{io, Tensor};
+use mpq::util::Rng;
+
+const CASES: usize = 200;
+
+/// Random model entry: `n_groups` weighted groups + one weightless.
+fn random_entry(rng: &mut Rng) -> ModelEntry {
+    let n = 2 + rng.below(10);
+    let mut groups = Vec::new();
+    let mut layers = Vec::new();
+    let mut act_quantizers = Vec::new();
+    let mut w_quantizers = Vec::new();
+    let mut params = Vec::new();
+    let mut total = 0u64;
+    for g in 0..n {
+        let macs = 100 + rng.below(10_000) as u64;
+        total += macs;
+        act_quantizers.push(ActQ { name: format!("a{g}"), numel: 64 });
+        w_quantizers.push(WQ {
+            name: format!("w{g}"),
+            param_idx: g,
+            channels: 4,
+            channel_axis: 0,
+        });
+        params.push(ParamInfo { name: format!("w{g}"), shape: vec![4, 4] });
+        layers.push(Layer { name: format!("l{g}"), macs, w_q: g, in_acts: vec![g] });
+        groups.push(Group { w_q: vec![g], act_q: vec![g], macs });
+    }
+    act_quantizers.push(ActQ { name: "out".into(), numel: 10 });
+    groups.push(Group { w_q: vec![], act_q: vec![n], macs: 0 });
+    ModelEntry {
+        name: "rand".into(),
+        task: "classify10".into(),
+        batch: 1,
+        input_shape: vec![1],
+        input_is_i32: false,
+        forward: String::new(),
+        stats: String::new(),
+        stats_bits: vec![4, 8],
+        stats_ratios: vec![1.0],
+        weights_file: String::new(),
+        params,
+        out_shape: vec![1, 10],
+        act_quantizers,
+        w_quantizers,
+        layers,
+        groups,
+        total_macs: total,
+        cmax: 4,
+        fp32_val_metric: 1.0,
+        data: DataFiles {
+            calib: String::new(),
+            calib_labels: String::new(),
+            val: String::new(),
+            val_labels: String::new(),
+            ood_calib: None,
+        },
+        taps: None,
+        adaround: vec![],
+        fit: None,
+        fit_act_shapes: None,
+    }
+}
+
+fn random_sens(rng: &mut Rng, entry: &ModelEntry, lat: &Lattice) -> Vec<SensEntry> {
+    let mut out = Vec::new();
+    for g in 0..entry.groups.len() {
+        for &c in &lat.candidates {
+            if c != lat.baseline {
+                out.push(SensEntry { group: g, cand: c, score: rng.f64() * 100.0 });
+            }
+        }
+    }
+    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    out
+}
+
+#[test]
+fn flip_sequence_invariants() {
+    let mut rng = Rng::new(0xF11);
+    for case in 0..CASES {
+        let entry = random_entry(&mut rng);
+        let lat = if case % 2 == 0 { Lattice::practical() } else { Lattice::expanded() };
+        let sens = random_sens(&mut rng, &entry, &lat);
+        let flips = flip_sequence(&entry, &lat, &sens);
+        // 1. strictly decreasing relative BOPs
+        let mut prev = 1.0 + 1e-12;
+        for f in &flips {
+            assert!(f.rel_bops < prev, "BOPs not strictly decreasing");
+            prev = f.rel_bops;
+        }
+        // 2. never flips weightless groups
+        for f in &flips {
+            assert!(Assignment::flippable(&entry, f.group));
+        }
+        // 3. per-group candidate factors strictly decrease over its flips
+        let mut last: std::collections::HashMap<usize, u64> = Default::default();
+        for f in &flips {
+            let cur = f.cand.bops_factor();
+            if let Some(&p) = last.get(&f.group) {
+                assert!(cur < p, "group reflipped to non-cheaper candidate");
+            }
+            last.insert(f.group, cur);
+        }
+        // 4. the full prefix reaches the lattice minimum iff every weighted
+        //    group was offered the cheapest candidate (it is, by enumeration)
+        let final_asg = assignment_at(&entry, &lat, &flips, flips.len());
+        let min_r = mpq::bops::min_rel_bops(&entry, &lat);
+        assert!((mpq::bops::rel_bops(&entry, &final_asg) - min_r).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn assignment_prefix_is_monotone_in_k() {
+    let mut rng = Rng::new(0xA55);
+    for _ in 0..CASES {
+        let entry = random_entry(&mut rng);
+        let lat = Lattice::expanded();
+        let sens = random_sens(&mut rng, &entry, &lat);
+        let flips = flip_sequence(&entry, &lat, &sens);
+        let mut prev_r = 1.0 + 1e-12;
+        for k in 0..=flips.len() {
+            let asg = assignment_at(&entry, &lat, &flips, k);
+            let r = mpq::bops::rel_bops(&entry, &asg);
+            assert!(r < prev_r || k == 0, "prefix r not strictly decreasing at k={k}");
+            prev_r = r;
+        }
+    }
+}
+
+#[test]
+fn bops_ledger_additivity() {
+    let mut rng = Rng::new(0xB0B);
+    for _ in 0..CASES {
+        let entry = random_entry(&mut rng);
+        let lat = Lattice::expanded();
+        let mut asg = Assignment::baseline(&entry, &lat);
+        let mut expect = mpq::bops::bops(&entry, &asg);
+        // apply random flips, tracking gains
+        for _ in 0..10 {
+            let g = rng.below(entry.groups.len());
+            let c = lat.candidates[rng.below(lat.candidates.len())];
+            let gain = mpq::bops::flip_gain(&entry, &asg, g, c);
+            if gain > 0 {
+                asg.set(g, c);
+                expect -= gain;
+            }
+            assert_eq!(mpq::bops::bops(&entry, &asg), expect, "ledger drift");
+        }
+    }
+}
+
+#[test]
+fn per_quantizer_expansion_covers_everything() {
+    let mut rng = Rng::new(0xC0C);
+    for _ in 0..CASES {
+        let entry = random_entry(&mut rng);
+        let lat = Lattice::practical();
+        let asg = Assignment::baseline(&entry, &lat);
+        let (act, w) = asg.per_quantizer(&entry);
+        assert!(act.iter().all(|b| b.is_some()));
+        assert!(w.iter().all(|b| b.is_some()));
+    }
+}
+
+#[test]
+fn tensor_io_roundtrip_random() {
+    let mut rng = Rng::new(0xD0D);
+    let dir = std::env::temp_dir().join("mpq_prop_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..50 {
+        let ndim = 1 + rng.below(4);
+        let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(6)).collect();
+        let n: usize = shape.iter().product();
+        let t = if case % 2 == 0 {
+            Tensor::from_f32(&shape, (0..n).map(|_| rng.f64() as f32 - 0.5).collect()).unwrap()
+        } else {
+            Tensor::from_i32(&shape, (0..n).map(|_| rng.below(1000) as i32 - 500).collect())
+                .unwrap()
+        };
+        let p = dir.join(format!("t{case}.bin"));
+        io::write_tensors(&p, std::slice::from_ref(&t)).unwrap();
+        assert_eq!(io::read_tensors(&p).unwrap(), vec![t]);
+    }
+}
+
+#[test]
+fn json_roundtrip_random() {
+    let mut rng = Rng::new(0xE0E);
+
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(100000) as f64) / 8.0 - 1000.0),
+            3 => Json::Str(format!("s{}✓\"\\\n", rng.below(100))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    for _ in 0..CASES {
+        let j = gen(&mut rng, 3);
+        let back = jsonio::parse(&j.to_string()).unwrap();
+        assert_eq!(j, back);
+    }
+}
+
+#[test]
+fn kendall_tau_bounds_and_symmetry() {
+    let mut rng = Rng::new(0xFAF);
+    for _ in 0..CASES {
+        let n = 3 + rng.below(30);
+        let a: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let t = kendall_tau(&a, &b);
+        assert!((-1.0..=1.0).contains(&t));
+        assert!((kendall_tau(&b, &a) - t).abs() < 1e-12, "not symmetric");
+        assert!((kendall_tau(&a, &a) - 1.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn candidate_labels_parse_back() {
+    for w in [4u8, 6, 8] {
+        for a in [4u8, 6, 8, 16] {
+            let c = Candidate::new(w, a);
+            assert_eq!(c.label(), format!("W{w}A{a}"));
+        }
+    }
+}
