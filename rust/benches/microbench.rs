@@ -1,10 +1,14 @@
 //! `cargo bench --bench microbench` — hot-path microbenchmarks used by the
 //! §Perf pass: forward-pass latency per configuration, qparam
 //! materialization, config-buffer upload, SQNR aggregation, flip-sequence
-//! construction, and the host-side quantization substrate.
+//! construction, the host-side quantization substrate, and the end-to-end
+//! engine paths (full Phase-1 sweep, Phase-2 binary search).
+//!
+//! Results are also written to `BENCH_microbench.json` so before/after
+//! speedups are tracked across PRs.
 
-use mpq::bench::{bench, bench_result};
-use mpq::coordinator::Pipeline;
+use mpq::bench::{bench, bench_result, BenchResult};
+use mpq::coordinator::{Pipeline, SearchScheme};
 use mpq::groups::Lattice;
 use mpq::model::QuantConfig;
 use mpq::quant;
@@ -16,6 +20,7 @@ fn main() {
     if !mpq::bench::preamble("microbench", "hot-path microbenchmarks") {
         return;
     }
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut pipe = Pipeline::open(mpq::artifacts_dir(), "resnet_s").expect("open resnet_s");
     pipe.calibrate(256, 0).expect("calibrate");
 
@@ -27,30 +32,38 @@ fn main() {
     {
         let set = pipe.calib_set().unwrap();
         let xb = &set.batches[0];
-        bench_result("forward/one_batch_w8a8", 3, 20, || {
+        results.push(bench_result("forward/one_batch_w8a8", 3, 20, || {
             pipe.model.forward(xb, &cb).map(|_| ())
-        });
+        }));
     }
 
-    // Phase-1 probe: full SQNR pass over the calib set for one (g, c)
+    // Phase-1 probe: one (g, c) streamed against the cached FP reference
     {
         let set = pipe.calib_set().unwrap();
-        let fp = sensitivity::fp_logits(&pipe.model, set).unwrap();
-        bench("phase1/sqnr_probe_256imgs", 1, 5, || {
-            let pcfg = sensitivity::probe_config(&pipe.model, 1, mpq::groups::Candidate::new(8, 8));
-            let pcb = pipe.model.config_buffers(&pcfg, &HashMap::new()).unwrap();
-            let q = pipe.model.logits_on(set, &pcb).unwrap();
-            let _ = sensitivity::sqnr_db(&fp, &q).unwrap();
-        });
+        let ev = mpq::engine::Evaluator::new(&pipe.model, set);
+        results.push(bench_result("phase1/sqnr_probe_256imgs", 1, 5, || {
+            let pcfg =
+                sensitivity::probe_config(&pipe.model, 1, mpq::groups::Candidate::new(8, 8));
+            ev.sqnr(&pcfg, &HashMap::new()).map(|_| ())
+        }));
     }
 
-    // config materialization (host-side, should be ≪ forward)
-    bench("config/qparam_tensors", 10, 200, || {
+    // Phase-1: the full sensitivity sweep through the engine (reference
+    // cached after warmup — steady-state `probes × sweep` cost)
+    {
+        let lat = Lattice::practical();
+        results.push(bench_result("phase1/full_sensitivity_sweep", 1, 3, || {
+            pipe.sensitivity_sqnr(&lat).map(|_| ())
+        }));
+    }
+
+    // config materialization (host-side row patching, should be ≪ forward)
+    results.push(bench("config/qparam_tensors", 10, 200, || {
         let _ = pipe.model.qparam_tensors(&cfg).unwrap();
-    });
-    bench("config/buffers_upload", 5, 50, || {
+    }));
+    results.push(bench("config/buffers_upload", 5, 50, || {
         let _ = pipe.model.config_buffers(&cfg, &HashMap::new()).unwrap();
-    });
+    }));
 
     // quant substrate: MSE weight-scale search on the largest conv
     {
@@ -61,10 +74,10 @@ fn main() {
             .unwrap();
         let w = pipe.model.weights[wq.param_idx].clone();
         let ratios = quant::default_ratios();
-        bench("quant/weight_scales_mse_largest", 2, 20, || {
+        results.push(bench("quant/weight_scales_mse_largest", 2, 20, || {
             let _ = quant::weight_scales_mse(&w, wq.channels, wq.channel_axis, 8, &ratios)
                 .unwrap();
-        });
+        }));
     }
 
     // act-range grid accumulation (host side of calibration)
@@ -73,26 +86,43 @@ fn main() {
         let mut rng = mpq::util::Rng::new(1);
         let data: Vec<f32> = (0..131072).map(|_| rng.f64() as f32 * 4.0 - 1.0).collect();
         let t = Tensor::from_f32(&[131072], data).unwrap();
-        bench("quant/act_grid_accumulate_131k", 2, 20, || {
+        results.push(bench("quant/act_grid_accumulate_131k", 2, 20, || {
             ar.accumulate(std::slice::from_ref(&t), 1).unwrap();
-        });
+        }));
     }
 
     // Phase-2 ledger walk (pure host arithmetic)
     {
         let lat = Lattice::practical();
         let sens = pipe.sensitivity_sqnr(&lat).unwrap();
-        bench("phase2/flip_sequence", 10, 1000, || {
+        results.push(bench("phase2/flip_sequence", 10, 1000, || {
             let _ = pipe.flips(&lat, &sens);
-        });
+        }));
     }
 
     // SQNR aggregation on host logits
     {
         let set = pipe.calib_set().unwrap();
         let fp = sensitivity::fp_logits(&pipe.model, set).unwrap();
-        bench("metrics/sqnr_db_2048x10", 5, 200, || {
+        results.push(bench("metrics/sqnr_db_2048x10", 5, 200, || {
             let _ = sensitivity::sqnr_db(&fp, &fp).unwrap();
-        });
+        }));
     }
+
+    // Phase-2: binary accuracy-target search end-to-end (memoized finish)
+    {
+        let lat = Lattice::practical();
+        let sens = pipe.sensitivity_sqnr(&lat).unwrap();
+        let flips = pipe.flips(&lat, &sens);
+        let fp = pipe.eval_fp32().unwrap();
+        let target = fp - 0.02;
+        results.push(bench_result("phase2/binary_search", 1, 5, || {
+            pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)
+                .map(|_| ())
+        }));
+    }
+
+    mpq::bench::write_json("BENCH_microbench.json", "microbench", &results)
+        .expect("write BENCH_microbench.json");
+    println!("wrote BENCH_microbench.json ({} entries)", results.len());
 }

@@ -75,13 +75,10 @@ pub fn capture_taps(
     let n_layers = handle.entry.layers.len();
     let mut per_layer = vec![Vec::new(); n_layers];
     for xb in batches.iter().take(n_batches) {
+        // trained parameters are already device-resident on the handle —
+        // no per-batch re-upload
         let mut args: Vec<&xla::PjRtBuffer> = vec![xb];
-        let pbufs: Vec<xla::PjRtBuffer> = handle
-            .weights
-            .iter()
-            .map(|t| handle.rt.buffer(t))
-            .collect::<Result<_>>()?;
-        args.extend(pbufs.iter());
+        args.extend(handle.param_buffers().iter());
         let outs = exe.run_b(&args)?;
         if outs.len() != n_layers + 1 {
             bail!("taps exe returned {} outputs, want {}", outs.len(), n_layers + 1);

@@ -7,7 +7,11 @@
 //! ```text
 //! phase1/sqnr_probe        time: [ 12.31 ms  12.58 ms  13.02 ms ]  n=32
 //! ```
+//!
+//! [`write_json`] additionally emits the results as machine-readable JSON
+//! (`BENCH_<name>.json`) so before/after speedups are tracked across PRs.
 
+use crate::jsonio::Json;
 use crate::util::Timer;
 
 pub struct BenchResult {
@@ -73,6 +77,35 @@ pub fn bench_result<E: std::fmt::Debug>(
     bench(name, warmup, iters, || f().expect("bench body failed"))
 }
 
+/// Serialize results to `path` as JSON:
+/// `{"bench": <name>, "results": {<bench name>: {min_s, mean_s, max_s,
+/// iters}, ...}}`.  Consumed by cross-PR speedup tracking.
+pub fn write_json(
+    path: impl AsRef<std::path::Path>,
+    bench_name: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let entries: Vec<(String, Json)> = results
+        .iter()
+        .map(|r| {
+            (
+                r.name.clone(),
+                Json::Obj(vec![
+                    ("min_s".into(), Json::Num(r.min_s)),
+                    ("mean_s".into(), Json::Num(r.mean_s)),
+                    ("max_s".into(), Json::Num(r.max_s)),
+                    ("iters".into(), Json::Num(r.iters as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let j = Json::Obj(vec![
+        ("bench".into(), Json::Str(bench_name.into())),
+        ("results".into(), Json::Obj(entries)),
+    ]);
+    std::fs::write(path, j.to_string() + "\n")
+}
+
 /// Standard bench preamble: header + artifacts guard.  Returns false (and
 /// prints a notice) when artifacts aren't built, so `cargo bench` stays
 /// green in a fresh checkout.
@@ -107,5 +140,31 @@ mod tests {
         assert!(fmt_time(2.0).contains("s"));
         assert!(fmt_time(2e-3).contains("ms"));
         assert!(fmt_time(2e-6).contains("µs"));
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let results = vec![
+            BenchResult {
+                name: "phase1/full_sensitivity_sweep".into(),
+                min_s: 0.5,
+                mean_s: 0.625,
+                max_s: 0.75,
+                iters: 4,
+            },
+            BenchResult { name: "b".into(), min_s: 1.0, mean_s: 1.0, max_s: 1.0, iters: 1 },
+        ];
+        let p = std::env::temp_dir().join("mpq_bench_json_test.json");
+        write_json(&p, "microbench", &results).unwrap();
+        let j = crate::jsonio::parse_file(&p).unwrap();
+        assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "microbench");
+        let r = j
+            .req("results")
+            .unwrap()
+            .req("phase1/full_sensitivity_sweep")
+            .unwrap();
+        assert_eq!(r.req("mean_s").unwrap().as_f64().unwrap(), 0.625);
+        assert_eq!(r.req("iters").unwrap().as_usize().unwrap(), 4);
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -168,7 +168,7 @@ impl Pipeline {
         set: &'a EvalSet,
         rounded: Option<&'a RoundedWeights>,
     ) -> SearchCtx<'a> {
-        SearchCtx { handle: &self.model, lattice, flips, set, rounded }
+        SearchCtx::new(&self.model, lattice, flips, set, rounded)
     }
 
     /// Phase 2 under a BOPs budget; final metric measured on the val set.
@@ -180,7 +180,7 @@ impl Pipeline {
     ) -> Result<SearchRun> {
         self.val_set()?;
         let set = self.val_set.as_ref().unwrap();
-        let ctx = SearchCtx { handle: &self.model, lattice, flips, set, rounded: None };
+        let ctx = SearchCtx::new(&self.model, lattice, flips, set, None);
         search::bops_budget(&ctx, budget_r)
     }
 

@@ -1,0 +1,252 @@
+//! The evaluation engine — a shared, memoizing, streaming evaluator that
+//! every Phase-1 probe and Phase-2 prefix evaluation routes through.
+//!
+//! The paper's practicality claim (Table 5) rests on search runtime, and in
+//! this reproduction >95% of wall time is the `O(groups × candidates)`
+//! Phase-1 probe sweep plus the Phase-2 prefix evaluations.  The engine
+//! removes every redundancy in that path:
+//!
+//! * **Reference cache** ([`reference::FpReference`], held per
+//!   `(model, eval-set)` in [`HandleEngine`]) — the FP32 logits and
+//!   per-sample signal power Eq. 3 needs are computed by *one* forward sweep
+//!   and reused by every probe, so a full Phase-1 sweep costs exactly
+//!   `1 + probes` forward-sweep-equivalents.
+//! * **Streaming metrics** ([`reference::StreamingSqnr`],
+//!   [`crate::metrics::StreamingTaskMetric`]) — SQNR and task metrics are
+//!   accumulated batch-by-batch, eliminating the per-probe `O(N×C)` host
+//!   concatenation the old `logits_on` path materialized.
+//! * **Memoization** ([`Memo`]) — results are cached by the canonical
+//!   per-quantizer configuration, so a prefix the binary/interpolation
+//!   search already measured (including `SearchCtx::finish`'s final
+//!   re-evaluation) costs zero additional forward calls.  Hit/miss counters
+//!   feed the Table-5 run-time accounting next to `fwd_calls`.
+//! * **Incremental materialization** ([`patch::Materializer`]) — probe
+//!   configurations differ from the FP32 baseline in one group's rows, so
+//!   packed quant-param tensors are patched from a cached baseline instead
+//!   of being recomputed row-by-row per probe.
+
+pub mod patch;
+pub mod reference;
+
+pub use patch::Materializer;
+pub use reference::{FpReference, StreamingSqnr};
+
+use crate::manifest::ModelEntry;
+use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use anyhow::Result;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// References kept per model before the least-recently-filled entries are
+/// dropped.  Fig-2-style studies recalibrate dozens of times, each with a
+/// fresh eval set; an unbounded cache would pin every old set's logits.
+const MAX_CACHED_REFERENCES: usize = 4;
+
+/// Per-[`ModelHandle`] engine state: the FP32 reference cache and the
+/// incremental config materializer.  Lives on the handle so the caches are
+/// shared by every [`Evaluator`], search and sensitivity sweep on the model.
+pub struct HandleEngine {
+    /// incremental packed-tensor materializer (row patching)
+    pub mat: Materializer,
+    /// FP32 reference per eval set, keyed by [`EvalSet::id`]
+    refs: RefCell<HashMap<u64, Rc<FpReference>>>,
+    /// reference forward sweeps actually performed
+    pub ref_builds: Cell<u64>,
+    /// reference requests served from cache
+    pub ref_hits: Cell<u64>,
+}
+
+impl HandleEngine {
+    pub fn new(entry: &ModelEntry) -> Self {
+        Self {
+            mat: Materializer::new(entry),
+            refs: RefCell::new(HashMap::new()),
+            ref_builds: Cell::new(0),
+            ref_hits: Cell::new(0),
+        }
+    }
+
+    /// The FP32 reference for `set`, building it with one forward sweep on
+    /// first use.  The reference depends only on the trained weights, so it
+    /// stays valid across recalibrations of the quantizer ranges.
+    pub fn reference(&self, handle: &ModelHandle, set: &EvalSet) -> Result<Rc<FpReference>> {
+        if let Some(r) = self.refs.borrow().get(&set.id) {
+            self.ref_hits.set(self.ref_hits.get() + 1);
+            return Ok(r.clone());
+        }
+        let r = Rc::new(FpReference::build(handle, set)?);
+        self.ref_builds.set(self.ref_builds.get() + 1);
+        let mut refs = self.refs.borrow_mut();
+        if refs.len() >= MAX_CACHED_REFERENCES {
+            refs.clear();
+        }
+        refs.insert(set.id, r.clone());
+        Ok(r)
+    }
+}
+
+/// Evaluation memo keyed by the canonical per-quantizer configuration.
+///
+/// Kept as its own type (rather than a bare map inside [`Evaluator`]) so the
+/// never-recompute contract is unit-testable without a PJRT model: the
+/// compute closure must not run again for a key that was already measured.
+#[derive(Default)]
+pub struct Memo {
+    map: RefCell<HashMap<QuantConfig, f64>>,
+    hits: Cell<usize>,
+    misses: Cell<usize>,
+}
+
+impl Memo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cached value for `cfg`, if it was already measured.
+    pub fn get(&self, cfg: &QuantConfig) -> Option<f64> {
+        self.map.borrow().get(cfg).copied()
+    }
+
+    /// Return the cached value for `cfg` or compute-and-insert it with `f`.
+    pub fn get_or_try_insert_with(
+        &self,
+        cfg: &QuantConfig,
+        f: impl FnOnce() -> Result<f64>,
+    ) -> Result<f64> {
+        if let Some(v) = self.get(cfg) {
+            self.hits.set(self.hits.get() + 1);
+            return Ok(v);
+        }
+        let v = f()?;
+        self.misses.set(self.misses.get() + 1);
+        self.map.borrow_mut().insert(cfg.clone(), v);
+        Ok(v)
+    }
+
+    /// Evaluations served from cache.
+    pub fn hits(&self) -> usize {
+        self.hits.get()
+    }
+
+    /// Evaluations actually computed.
+    pub fn misses(&self) -> usize {
+        self.misses.get()
+    }
+}
+
+/// The shared evaluator: streams metrics batch-by-batch against the cached
+/// FP32 reference and memoizes task-metric results per configuration.
+///
+/// One `Evaluator` is created per sensitivity sweep / search run, so its
+/// `evals`/`memo_hits` counters are per-run accounting (Table 5); the
+/// expensive caches (reference, materializer rows) live on the
+/// [`ModelHandle`] and are shared across evaluators.
+pub struct Evaluator<'a> {
+    pub handle: &'a ModelHandle,
+    pub set: &'a EvalSet,
+    memo: Memo,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(handle: &'a ModelHandle, set: &'a EvalSet) -> Self {
+        Self { handle, set, memo: Memo::new() }
+    }
+
+    /// The FP32 reference for this evaluator's set (cached on the handle).
+    pub fn reference(&self) -> Result<Rc<FpReference>> {
+        self.handle.engine.reference(self.handle, self.set)
+    }
+
+    /// Distinct full eval-set metric evaluations performed.
+    pub fn evals(&self) -> usize {
+        self.memo.misses()
+    }
+
+    /// Metric evaluations served from the memo.
+    pub fn memo_hits(&self) -> usize {
+        self.memo.hits()
+    }
+
+    /// Memoized metric for `cfg`, if it was already measured.
+    pub fn cached(&self, cfg: &QuantConfig) -> Option<f64> {
+        self.memo.get(cfg)
+    }
+
+    /// Task metric of `cfg`, streamed batch-by-batch and memoized by the
+    /// canonical per-quantizer configuration.
+    ///
+    /// `overrides` must be a pure function of `cfg` within one evaluator's
+    /// lifetime (true for both AdaRound probe stitching and Phase-2 prefix
+    /// stitching) — the memo key is the configuration alone.
+    pub fn metric(&self, cfg: &QuantConfig, overrides: &WeightOverrides) -> Result<f64> {
+        self.memo.get_or_try_insert_with(cfg, || {
+            let cb = self.handle.config_buffers(cfg, overrides)?;
+            self.handle.eval_metric(self.set, &cb)
+        })
+    }
+
+    /// Network-output SQNR of `cfg` against the cached FP32 reference
+    /// (Eq. 3), streamed batch-by-batch — no host concatenation, no repeated
+    /// FP reference sweep.
+    pub fn sqnr(&self, cfg: &QuantConfig, overrides: &WeightOverrides) -> Result<f64> {
+        let fp = self.reference()?;
+        let cb = self.handle.config_buffers(cfg, overrides)?;
+        let mut s = StreamingSqnr::new();
+        for (bi, xb) in self.set.batches.iter().enumerate() {
+            let q = self.handle.forward(xb, &cb)?;
+            s.push(&fp.batches[bi], &fp.sig_pow[bi], &q)?;
+        }
+        Ok(s.db())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(bits: Option<u8>) -> QuantConfig {
+        QuantConfig { act: vec![bits; 3], w: vec![bits; 2] }
+    }
+
+    #[test]
+    fn memo_never_recomputes_a_measured_key() {
+        let memo = Memo::new();
+        let mut calls = 0usize;
+        for _ in 0..5 {
+            let v = memo
+                .get_or_try_insert_with(&key(Some(8)), || {
+                    calls += 1;
+                    Ok(42.0)
+                })
+                .unwrap();
+            assert_eq!(v, 42.0);
+        }
+        assert_eq!(calls, 1, "compute closure ran again for a cached key");
+        assert_eq!(memo.misses(), 1);
+        assert_eq!(memo.hits(), 4);
+    }
+
+    #[test]
+    fn memo_distinguishes_configs() {
+        let memo = Memo::new();
+        let a = memo.get_or_try_insert_with(&key(Some(4)), || Ok(1.0)).unwrap();
+        let b = memo.get_or_try_insert_with(&key(Some(8)), || Ok(2.0)).unwrap();
+        let c = memo.get_or_try_insert_with(&key(None), || Ok(3.0)).unwrap();
+        assert_eq!((a, b, c), (1.0, 2.0, 3.0));
+        assert_eq!(memo.misses(), 3);
+        assert_eq!(memo.get(&key(Some(4))), Some(1.0));
+        assert_eq!(memo.get(&key(Some(16))), None);
+    }
+
+    #[test]
+    fn memo_error_is_not_cached() {
+        let memo = Memo::new();
+        let r = memo.get_or_try_insert_with(&key(Some(8)), || anyhow::bail!("boom"));
+        assert!(r.is_err());
+        // a later successful compute must run and be cached
+        let v = memo.get_or_try_insert_with(&key(Some(8)), || Ok(7.0)).unwrap();
+        assert_eq!(v, 7.0);
+        assert_eq!(memo.misses(), 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Incremental configuration materialization (row patching).
+//!
+//! A Phase-1 probe differs from the FP32 baseline in exactly one group's
+//! rows of the three packed quant-param tensors (`act_qp[A,5]`,
+//! `w_scales[W,Cmax]`, `w_qmeta[W,3]`), yet the pre-engine path recomputed
+//! every row — including the per-row MSE-grid argmin in
+//! [`crate::quant::ActRanges::qparams`] — for each of the
+//! `O(groups × candidates)` probes.  [`Materializer`] keeps the packed FP32
+//! baseline rows and a per-`(quantizer, bits)` activation-row cache, so
+//! materializing any configuration is a memcpy of the baseline plus patches
+//! for only the quantized rows.
+
+use crate::manifest::ModelEntry;
+use crate::model::{ModelHandle, QuantConfig};
+use crate::quant;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+/// Patches packed quant-param tensors from a cached FP32 baseline.
+pub struct Materializer {
+    n_act: usize,
+    n_w: usize,
+    cmax: usize,
+    /// FP32 baseline rows: every quantizer disabled (`enable = 0`)
+    base_act: Vec<f32>,
+    base_scales: Vec<f32>,
+    base_meta: Vec<f32>,
+    /// `[scale, offset, qmin, qmax, enable]` per `(act quantizer, bits)` —
+    /// invalidated when ranges are recalibrated
+    act_rows: RefCell<HashMap<(usize, u8), [f32; 5]>>,
+    /// rows written on top of the baseline (patch-size accounting)
+    pub rows_patched: Cell<u64>,
+    /// configurations materialized
+    pub materializations: Cell<u64>,
+}
+
+impl Materializer {
+    pub fn new(entry: &ModelEntry) -> Self {
+        let (n_act, n_w, cmax) = (entry.n_act(), entry.n_w(), entry.cmax);
+        let mut base_act = vec![0f32; n_act * 5];
+        for i in 0..n_act {
+            base_act[i * 5..(i + 1) * 5].copy_from_slice(&[1.0, 0.0, 0.0, 1.0, 0.0]);
+        }
+        let base_scales = vec![1f32; n_w * cmax];
+        let mut base_meta = vec![0f32; n_w * 3];
+        for i in 0..n_w {
+            base_meta[i * 3..(i + 1) * 3].copy_from_slice(&[-1.0, 1.0, 0.0]);
+        }
+        Self {
+            n_act,
+            n_w,
+            cmax,
+            base_act,
+            base_scales,
+            base_meta,
+            act_rows: RefCell::new(HashMap::new()),
+            rows_patched: Cell::new(0),
+            materializations: Cell::new(0),
+        }
+    }
+
+    /// Drop cached activation rows — must be called whenever the calibrated
+    /// ranges change (the weight-scale rows live in `ModelHandle::w_scales`
+    /// and depend only on the trained weights).
+    pub fn invalidate(&self) {
+        self.act_rows.borrow_mut().clear();
+    }
+
+    /// Packed `(act_qp, w_scales, w_qmeta)` tensors for `cfg`, patched from
+    /// the FP32 baseline.  Requires calibrated ranges for any `Some`
+    /// activation row and prepared weight scales for any `Some` weight row.
+    pub fn tensors(
+        &self,
+        handle: &ModelHandle,
+        cfg: &QuantConfig,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        if cfg.act.len() != self.n_act || cfg.w.len() != self.n_w {
+            bail!("config arity mismatch");
+        }
+        let mut act_qp = self.base_act.clone();
+        let mut w_scales = self.base_scales.clone();
+        let mut w_qmeta = self.base_meta.clone();
+        let mut patched = 0u64;
+        for (i, b) in cfg.act.iter().enumerate() {
+            if let Some(bits) = b {
+                act_qp[i * 5..(i + 1) * 5].copy_from_slice(&self.act_row(handle, i, *bits)?);
+                patched += 1;
+            }
+        }
+        for (i, b) in cfg.w.iter().enumerate() {
+            if let Some(bits) = b {
+                let scales = handle
+                    .w_scales
+                    .get(bits)
+                    .ok_or_else(|| anyhow!("weight scales for {bits} bits not prepared"))?;
+                let sc = &scales[i];
+                w_scales[i * self.cmax..i * self.cmax + sc.len()].copy_from_slice(sc);
+                let (qmin, qmax) = quant::weight_qrange(*bits);
+                w_qmeta[i * 3..(i + 1) * 3].copy_from_slice(&[qmin, qmax, 1.0]);
+                patched += 1;
+            }
+        }
+        self.rows_patched.set(self.rows_patched.get() + patched);
+        self.materializations.set(self.materializations.get() + 1);
+        Ok((
+            Tensor::from_f32(&[self.n_act, 5], act_qp)?,
+            Tensor::from_f32(&[self.n_w, self.cmax], w_scales)?,
+            Tensor::from_f32(&[self.n_w, 3], w_qmeta)?,
+        ))
+    }
+
+    /// Cached `[scale, offset, 0, qmax, 1]` row for activation quantizer `i`
+    /// at `bits` — the MSE-grid argmin behind it runs once per
+    /// `(quantizer, bits)`, not once per probe.
+    fn act_row(&self, handle: &ModelHandle, i: usize, bits: u8) -> Result<[f32; 5]> {
+        if let Some(r) = self.act_rows.borrow().get(&(i, bits)) {
+            return Ok(*r);
+        }
+        let ranges = handle
+            .act_ranges
+            .as_ref()
+            .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
+        let (s, o) = ranges.qparams(i, bits)?;
+        let (_, qmax) = quant::act_qrange(bits);
+        let row = [s, o, 0.0, qmax, 1.0];
+        self.act_rows.borrow_mut().insert((i, bits), row);
+        Ok(row)
+    }
+}

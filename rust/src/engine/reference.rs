@@ -1,0 +1,194 @@
+//! Cached FP32 reference signal and the streaming SQNR accumulator.
+//!
+//! Every SQNR probe compares quantized logits against the *same* FP32
+//! reference (Eq. 3).  Before the engine existed, each Phase-1 caller
+//! recomputed that reference with a full forward sweep (`fp_logits`) and
+//! concatenated all probe logits into one `O(N×C)` host tensor per probe.
+//! [`FpReference`] runs the FP32 sweep once per `(model, eval-set)`, keeps
+//! the logits *per batch* (streaming consumers never need the
+//! concatenation), and precomputes the per-sample signal power
+//! `Σ_j F(x_i)_j²` that Eq. 3's numerator needs — computed once, reused by
+//! every probe.
+
+use crate::model::{EvalSet, ModelHandle, QuantConfig};
+use crate::tensor::Tensor;
+use crate::util::db10;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// The FP32 reference over one eval set: per-batch logits plus per-sample
+/// signal power.
+pub struct FpReference {
+    /// per-batch FP32 logits, in eval-set order (host tensors)
+    pub batches: Vec<Tensor>,
+    /// per-batch, per-sample signal power `Σ_j F(x_i)_j²`
+    pub sig_pow: Vec<Vec<f64>>,
+    /// shape of the concatenated logits `[n, ...]`
+    pub shape: Vec<usize>,
+}
+
+impl FpReference {
+    /// One FP32 forward sweep over `set` — the "1" in Phase 1's
+    /// `1 + probes` forward-sweep budget.
+    pub fn build(handle: &ModelHandle, set: &EvalSet) -> Result<Self> {
+        let cfg = QuantConfig::fp32(&handle.entry);
+        let cb = handle.config_buffers(&cfg, &HashMap::new())?;
+        let mut batches = Vec::with_capacity(set.batches.len());
+        let mut sig_pow = Vec::with_capacity(set.batches.len());
+        for xb in &set.batches {
+            let out = handle.forward(xb, &cb)?;
+            sig_pow.push(per_sample_power(&out)?);
+            batches.push(out);
+        }
+        let mut shape = batches[0].shape.clone();
+        shape[0] = set.n;
+        Ok(Self { batches, sig_pow, shape })
+    }
+
+    /// Number of samples covered.
+    pub fn n(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Concatenate the per-batch logits into one tensor — compat path for
+    /// consumers that genuinely need the full array (tests, Kendall-τ
+    /// ground truth); the streaming paths never call this.
+    pub fn concat(&self) -> Result<Tensor> {
+        let mut data = Vec::with_capacity(self.shape.iter().product());
+        for b in &self.batches {
+            data.extend_from_slice(b.f32s()?);
+        }
+        Tensor::from_f32(&self.shape, data)
+    }
+}
+
+/// `Σ_j x_j²` per sample (first axis), in `f64`.
+fn per_sample_power(t: &Tensor) -> Result<Vec<f64>> {
+    if t.shape.is_empty() {
+        bail!("per-sample power of a scalar");
+    }
+    let n = t.shape[0];
+    let stride = t.numel() / n.max(1);
+    let v = t.f32s()?;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut sig = 0f64;
+        for &x in &v[i * stride..(i + 1) * stride] {
+            let f = x as f64;
+            sig += f * f;
+        }
+        out.push(sig);
+    }
+    Ok(out)
+}
+
+/// Batch-by-batch accumulator for the network-output SQNR (Eq. 3-4).
+///
+/// Numerically identical to [`crate::sensitivity::sqnr_db`] on the
+/// concatenated logits — same per-sample terms in the same summation order —
+/// without ever materializing the concatenation.
+#[derive(Default)]
+pub struct StreamingSqnr {
+    acc: f64,
+    n: usize,
+}
+
+impl StreamingSqnr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one batch: `fp` and `q` are same-shape logits, `sig_pow` the
+    /// cached per-sample `Σ F²` for this batch.
+    pub fn push(&mut self, fp: &Tensor, sig_pow: &[f64], q: &Tensor) -> Result<()> {
+        if fp.shape != q.shape || fp.shape.is_empty() {
+            bail!("sqnr shape mismatch {:?} vs {:?}", fp.shape, q.shape);
+        }
+        let bsz = fp.shape[0];
+        if sig_pow.len() != bsz {
+            bail!("sig_pow len {} != batch size {bsz}", sig_pow.len());
+        }
+        let stride = fp.numel() / bsz;
+        let (a, b) = (fp.f32s()?, q.f32s()?);
+        for i in 0..bsz {
+            let mut err = 0f64;
+            for j in i * stride..(i + 1) * stride {
+                let e = a[j] as f64 - b[j] as f64;
+                err += e * e;
+            }
+            self.acc += sig_pow[i] / err.max(1e-30);
+        }
+        self.n += bsz;
+        Ok(())
+    }
+
+    /// `10·log10((1/N)·Σ_i sig_i/err_i)` over everything pushed so far.
+    pub fn db(&self) -> f64 {
+        db10(self.acc / self.n.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensitivity::sqnr_db;
+    use crate::util::Rng;
+
+    fn random_pair(rng: &mut Rng, n: usize, c: usize) -> (Tensor, Tensor) {
+        let fp: Vec<f32> = (0..n * c).map(|_| rng.f64() as f32 * 4.0 - 2.0).collect();
+        let q: Vec<f32> = fp
+            .iter()
+            .map(|&x| x + (rng.f64() as f32 - 0.5) * 0.05)
+            .collect();
+        (
+            Tensor::from_f32(&[n, c], fp).unwrap(),
+            Tensor::from_f32(&[n, c], q).unwrap(),
+        )
+    }
+
+    #[test]
+    fn streaming_matches_concatenated_sqnr_db() {
+        let mut rng = Rng::new(11);
+        for &(n, c, bsz) in &[(12usize, 7usize, 3usize), (16, 10, 4), (8, 5, 8)] {
+            let (fp, q) = random_pair(&mut rng, n, c);
+            let want = sqnr_db(&fp, &q).unwrap();
+            let mut s = StreamingSqnr::new();
+            for start in (0..n).step_by(bsz) {
+                let fb = fp.slice_rows(start, bsz).unwrap();
+                let qb = q.slice_rows(start, bsz).unwrap();
+                let sig = per_sample_power(&fb).unwrap();
+                s.push(&fb, &sig, &qb).unwrap();
+            }
+            let got = s.db();
+            assert!(
+                (got - want).abs() < 1e-9,
+                "streaming {got} != concatenated {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_zero_error_is_large() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let sig = per_sample_power(&t).unwrap();
+        let mut s = StreamingSqnr::new();
+        s.push(&t, &sig, &t).unwrap();
+        assert!(s.db() > 100.0);
+    }
+
+    #[test]
+    fn streaming_rejects_mismatches() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[2, 3]);
+        let sig = vec![0.0; 2];
+        assert!(StreamingSqnr::new().push(&a, &sig, &b).is_err());
+        assert!(StreamingSqnr::new().push(&a, &sig[..1], &a).is_err());
+    }
+
+    #[test]
+    fn per_sample_power_matches_manual() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let p = per_sample_power(&t).unwrap();
+        assert_eq!(p, vec![5.0, 25.0]);
+    }
+}

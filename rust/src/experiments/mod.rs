@@ -317,18 +317,25 @@ pub fn table5(opts: &Opts) -> Result<Table> {
                 pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)?;
             let hyb =
                 pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Hybrid, None)?;
+            // `evals` are distinct eval-set passes; `+Nm` are engine memo
+            // hits (re-visited prefixes that cost zero forward calls)
             t.row(vec![
                 m.clone(),
                 format!("{:.4} (-{:.0}%)", target, drop * 100.0),
-                format!("{:.2} / {}", seq.wall_secs, seq.evals),
-                format!("{:.2} / {}", bin.wall_secs, bin.evals),
-                format!("{:.2} / {}", hyb.wall_secs, hyb.evals),
+                format!("{:.2} / {}+{}m", seq.wall_secs, seq.evals, seq.memo_hits),
+                format!("{:.2} / {}+{}m", bin.wall_secs, bin.evals, bin.memo_hits),
+                format!("{:.2} / {}+{}m", hyb.wall_secs, hyb.evals, hyb.memo_hits),
                 f3(seq.final_rel_bops),
                 f3(bin.final_rel_bops),
                 f3(hyb.final_rel_bops),
             ]);
         }
-        println!("[table5] {m} done");
+        println!(
+            "[table5] {m} done (fwd_calls={} ref_builds={} ref_hits={})",
+            pipe.model.fwd_calls.borrow(),
+            pipe.model.engine.ref_builds.get(),
+            pipe.model.engine.ref_hits.get()
+        );
     }
     Ok(t)
 }
@@ -434,7 +441,8 @@ pub fn fig3(opts: &Opts) -> Result<Table> {
         let set = pipe.calib_set()?;
         let (mut act, w) = sensitivity::per_quantizer_sqnr(&pipe.model, set, Candidate::new(8, 8))?;
         act.extend(w);
-        act.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: one degenerate probe must not panic the whole figure
+        act.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| act[(p * (act.len() - 1) as f64).round() as usize];
         t.row(vec![
             m.clone(),

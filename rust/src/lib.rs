@@ -8,7 +8,13 @@
 //!   needs: PJRT runtime, MSE range estimation, SQNR/accuracy/FIT
 //!   sensitivity (Phase 1), quantizer groups, BOPs accounting, the greedy
 //!   pareto flip plus sequential/binary/interpolation searches (Phase 2),
-//!   and the AdaRound integration.
+//!   and the AdaRound integration.  Every Phase-1 probe and Phase-2 prefix
+//!   evaluation routes through the [`engine`] — a shared, memoizing,
+//!   streaming evaluator: one cached FP32 reference sweep per
+//!   `(model, eval-set)`, batch-streamed SQNR/task metrics (no host logit
+//!   concatenation), per-configuration memoization with hit counters next
+//!   to `fwd_calls`, and packed quant-param tensors row-patched from a
+//!   cached baseline.
 //! * **L2** — the model zoo, lowered once by `python/compile/aot.py` to
 //!   HLO-text artifacts whose quantizer parameters are *runtime inputs*.
 //! * **L1** — Pallas fake-quant kernels inside those artifacts.
@@ -37,6 +43,7 @@ pub mod bops;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod groups;
 pub mod jsonio;

@@ -12,19 +12,21 @@ use anyhow::{bail, Result};
 /// * `glue:stsb_s` → Pearson correlation of the scalar head
 /// * `seg`        → mean IoU over the 3 classes
 pub fn task_metric(task: &str, logits: &Tensor, labels: &Tensor) -> Result<f64> {
-    match task {
-        "seg" => miou(logits, labels, 3),
-        "glue:mrpc_s" => f1_binary(logits, labels),
-        "glue:stsb_s" => pearson_head(logits, labels),
-        "classify10" | "glue:rte_s" | "glue:sst2_s" | "glue:mnli_s" => {
-            top1(logits, labels)
-        }
-        t => bail!("unknown task '{t}'"),
-    }
+    // one-shot = streaming accumulator fed a single batch, so the task menu
+    // (and e.g. seg's class count) exists in exactly one place
+    let mut acc = StreamingTaskMetric::new(task)?;
+    acc.push(logits, labels)?;
+    Ok(acc.finalize())
 }
 
 /// Top-1 accuracy; logits `[N, C]`, labels f32 class indices `[N]`.
 pub fn top1(logits: &Tensor, labels: &Tensor) -> Result<f64> {
+    let (n, hits) = top1_counts(logits, labels)?;
+    Ok(hits as f64 / n as f64)
+}
+
+/// `(samples, correct)` — the streamable core of [`top1`].
+fn top1_counts(logits: &Tensor, labels: &Tensor) -> Result<(usize, usize)> {
     let (n, c) = two_d(logits)?;
     let lv = logits.f32s()?;
     let yv = labels.f32s()?;
@@ -39,11 +41,18 @@ pub fn top1(logits: &Tensor, labels: &Tensor) -> Result<f64> {
             hits += 1;
         }
     }
-    Ok(hits as f64 / n as f64)
+    Ok((n, hits))
 }
 
 /// F1 of class 1 for binary logits `[N, 2]`.
 pub fn f1_binary(logits: &Tensor, labels: &Tensor) -> Result<f64> {
+    let (tp, fp, fnn) = f1_counts(logits, labels)?;
+    Ok(f1_from_counts(tp, fp, fnn))
+}
+
+/// `(tp, fp, fn)` for the positive class — the streamable core of
+/// [`f1_binary`].
+fn f1_counts(logits: &Tensor, labels: &Tensor) -> Result<(f64, f64, f64)> {
     let (n, c) = two_d(logits)?;
     if c != 2 {
         bail!("f1 expects 2 classes, got {c}");
@@ -61,8 +70,16 @@ pub fn f1_binary(logits: &Tensor, labels: &Tensor) -> Result<f64> {
             _ => {}
         }
     }
+    Ok((tp, fp, fnn))
+}
+
+fn f1_from_counts(tp: f64, fp: f64, fnn: f64) -> f64 {
     let denom = 2.0 * tp + fp + fnn;
-    Ok(if denom > 0.0 { 2.0 * tp / denom } else { 0.0 })
+    if denom > 0.0 {
+        2.0 * tp / denom
+    } else {
+        0.0
+    }
 }
 
 /// Pearson correlation of logits `[N, 1]` against scalar labels.
@@ -77,6 +94,21 @@ pub fn pearson_head(logits: &Tensor, labels: &Tensor) -> Result<f64> {
 
 /// Mean IoU; logits `[N, C, H, W]`, labels i32 `[N, H, W]`.
 pub fn miou(logits: &Tensor, labels: &Tensor, classes: usize) -> Result<f64> {
+    let mut inter = vec![0f64; classes];
+    let mut union = vec![0f64; classes];
+    miou_accumulate(logits, labels, classes, &mut inter, &mut union)?;
+    Ok(miou_from_counts(classes, &inter, &union))
+}
+
+/// Fold one batch's per-class intersection/union counts into
+/// `inter`/`union` — the streamable core of [`miou`].
+fn miou_accumulate(
+    logits: &Tensor,
+    labels: &Tensor,
+    classes: usize,
+    inter: &mut [f64],
+    union: &mut [f64],
+) -> Result<()> {
     if logits.shape.len() != 4 {
         bail!("miou expects [N,C,H,W], got {:?}", logits.shape);
     }
@@ -94,8 +126,6 @@ pub fn miou(logits: &Tensor, labels: &Tensor, classes: usize) -> Result<f64> {
     if yv.len() != n * h * w {
         bail!("labels numel {} != {}", yv.len(), n * h * w);
     }
-    let mut inter = vec![0f64; classes];
-    let mut union = vec![0f64; classes];
     let plane = h * w;
     for i in 0..n {
         for p in 0..plane {
@@ -122,11 +152,128 @@ pub fn miou(logits: &Tensor, labels: &Tensor, classes: usize) -> Result<f64> {
             }
         }
     }
+    Ok(())
+}
+
+fn miou_from_counts(classes: usize, inter: &[f64], union: &[f64]) -> f64 {
     let ious: Vec<f64> = (0..classes)
         .filter(|&ch| union[ch] > 0.0)
         .map(|ch| inter[ch] / union[ch])
         .collect();
-    Ok(if ious.is_empty() { 0.0 } else { ious.iter().sum::<f64>() / ious.len() as f64 })
+    if ious.is_empty() {
+        0.0
+    } else {
+        ious.iter().sum::<f64>() / ious.len() as f64
+    }
+}
+
+/// Streaming task-metric accumulator: fold in per-batch logits/labels, then
+/// [`Self::finalize`] — same result as [`task_metric`] on the concatenated
+/// logits (exactly for the counting metrics, to float precision for the
+/// Pearson head) without ever materializing the concatenation.  This is
+/// what lets the evaluation engine keep Phase-1/Phase-2 metric passes
+/// `O(batch)` in host memory.
+pub enum StreamingTaskMetric {
+    Top1 { hits: usize, n: usize },
+    F1 { tp: f64, fp: f64, fnn: f64 },
+    Pearson(PearsonAccum),
+    Miou { classes: usize, inter: Vec<f64>, union: Vec<f64> },
+}
+
+impl StreamingTaskMetric {
+    /// Accumulator for a manifest task string (same menu as [`task_metric`]).
+    pub fn new(task: &str) -> Result<Self> {
+        Ok(match task {
+            "seg" => Self::Miou { classes: 3, inter: vec![0.0; 3], union: vec![0.0; 3] },
+            "glue:mrpc_s" => Self::F1 { tp: 0.0, fp: 0.0, fnn: 0.0 },
+            "glue:stsb_s" => Self::Pearson(PearsonAccum::default()),
+            "classify10" | "glue:rte_s" | "glue:sst2_s" | "glue:mnli_s" => {
+                Self::Top1 { hits: 0, n: 0 }
+            }
+            t => bail!("unknown task '{t}'"),
+        })
+    }
+
+    /// Fold in one batch of logits and its labels.
+    pub fn push(&mut self, logits: &Tensor, labels: &Tensor) -> Result<()> {
+        match self {
+            Self::Top1 { hits, n } => {
+                let (bn, h) = top1_counts(logits, labels)?;
+                *hits += h;
+                *n += bn;
+            }
+            Self::F1 { tp, fp, fnn } => {
+                let (a, b, c) = f1_counts(logits, labels)?;
+                *tp += a;
+                *fp += b;
+                *fnn += c;
+            }
+            Self::Pearson(p) => {
+                let (n, c) = two_d(logits)?;
+                let lv = logits.f32s()?;
+                let yv = labels.f32s()?;
+                if yv.len() != n {
+                    bail!("labels len {} != n {}", yv.len(), n);
+                }
+                for i in 0..n {
+                    p.push(lv[i * c] as f64, yv[i] as f64);
+                }
+            }
+            Self::Miou { classes, inter, union } => {
+                miou_accumulate(logits, labels, *classes, inter, union)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The metric over everything pushed so far.
+    pub fn finalize(&self) -> f64 {
+        match self {
+            Self::Top1 { hits, n } => {
+                if *n == 0 {
+                    0.0
+                } else {
+                    *hits as f64 / *n as f64
+                }
+            }
+            Self::F1 { tp, fp, fnn } => f1_from_counts(*tp, *fp, *fnn),
+            Self::Pearson(p) => p.r(),
+            Self::Miou { classes, inter, union } => miou_from_counts(*classes, inter, union),
+        }
+    }
+}
+
+/// Single-pass Pearson correlation via Welford-style co-moment updates —
+/// numerically stable without a second pass over the predictions.
+#[derive(Default)]
+pub struct PearsonAccum {
+    n: f64,
+    mx: f64,
+    my: f64,
+    m2x: f64,
+    m2y: f64,
+    cxy: f64,
+}
+
+impl PearsonAccum {
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.n += 1.0;
+        let dx = x - self.mx;
+        self.mx += dx / self.n;
+        let dy = y - self.my;
+        self.my += dy / self.n;
+        self.m2x += dx * (x - self.mx);
+        self.cxy += dx * (y - self.my);
+        self.m2y += dy * (y - self.my);
+    }
+
+    pub fn r(&self) -> f64 {
+        if self.n < 2.0 || self.m2x == 0.0 || self.m2y == 0.0 {
+            0.0
+        } else {
+            self.cxy / (self.m2x * self.m2y).sqrt()
+        }
+    }
 }
 
 /// Pearson correlation of two equal-length vectors.
@@ -242,6 +389,77 @@ mod tests {
         let a = [1.0, 2.0, 3.0];
         let b = [1.0, 3.0, 2.0];
         assert!((kendall_tau(&a, &b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// Streaming accumulation over batch splits must match the one-shot
+    /// metric on the concatenated logits for every task type.
+    #[test]
+    fn streaming_matches_batch_metric() {
+        let mut rng = crate::util::Rng::new(21);
+        let n = 24usize;
+        let bsz = 4usize;
+        for task in ["classify10", "glue:mrpc_s", "glue:stsb_s", "seg"] {
+            let (logits, labels) = match task {
+                "seg" => {
+                    let (c, h, w) = (3usize, 2usize, 2usize);
+                    let lv: Vec<f32> =
+                        (0..n * c * h * w).map(|_| rng.f64() as f32).collect();
+                    let yv: Vec<i32> =
+                        (0..n * h * w).map(|_| rng.below(c) as i32).collect();
+                    (
+                        Tensor::from_f32(&[n, c, h, w], lv).unwrap(),
+                        Tensor::from_i32(&[n, h, w], yv).unwrap(),
+                    )
+                }
+                "glue:stsb_s" => {
+                    let lv: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 5.0).collect();
+                    let yv: Vec<f32> = lv.iter().map(|&x| x + rng.f64() as f32).collect();
+                    (
+                        Tensor::from_f32(&[n, 1], lv).unwrap(),
+                        Tensor::from_f32(&[n], yv).unwrap(),
+                    )
+                }
+                _ => {
+                    let c = if task == "classify10" { 10 } else { 2 };
+                    let lv: Vec<f32> = (0..n * c).map(|_| rng.f64() as f32).collect();
+                    let yv: Vec<f32> = (0..n).map(|_| rng.below(c) as f32).collect();
+                    (
+                        Tensor::from_f32(&[n, c], lv).unwrap(),
+                        Tensor::from_f32(&[n], yv).unwrap(),
+                    )
+                }
+            };
+            let want = task_metric(task, &logits, &labels).unwrap();
+            let mut acc = StreamingTaskMetric::new(task).unwrap();
+            for start in (0..n).step_by(bsz) {
+                acc.push(
+                    &logits.slice_rows(start, bsz).unwrap(),
+                    &labels.slice_rows(start, bsz).unwrap(),
+                )
+                .unwrap();
+            }
+            let got = acc.finalize();
+            assert!(
+                (got - want).abs() < 1e-9,
+                "{task}: streaming {got} != batch {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_rejects_unknown_task() {
+        assert!(StreamingTaskMetric::new("nope").is_err());
+    }
+
+    #[test]
+    fn pearson_accum_matches_two_pass() {
+        let a: Vec<f64> = (0..50).map(|i| (i as f64) * 0.3 - 2.0).collect();
+        let b: Vec<f64> = a.iter().map(|x| 1.5 * x + (x * 7.0).sin()).collect();
+        let mut acc = PearsonAccum::default();
+        for (x, y) in a.iter().zip(&b) {
+            acc.push(*x, *y);
+        }
+        assert!((acc.r() - pearson(&a, &b)).abs() < 1e-12);
     }
 
     #[test]

@@ -13,17 +13,22 @@
 //! config on the *same* executable.
 
 use crate::data::{self, DataSet, ModelData};
+use crate::engine;
 use crate::manifest::{Manifest, ModelEntry};
 use crate::quant::{self, ActRanges};
 use crate::runtime::{Exe, Runtime};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-quantizer bit assignment; `None` = leave in FP32.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// `Eq + Hash` make the canonical configuration itself the key of the
+/// engine's evaluation memo.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct QuantConfig {
     pub act: Vec<Option<u8>>,
     pub w: Vec<Option<u8>>,
@@ -51,10 +56,18 @@ pub type WeightOverrides = HashMap<usize, Tensor>;
 /// A batched, device-resident evaluation set (inputs only; labels stay on
 /// the host for metric computation).
 pub struct EvalSet {
+    /// process-unique identity — the engine's FP-reference cache key
+    pub id: u64,
     pub batches: Vec<xla::PjRtBuffer>,
     pub labels: Tensor,
     pub n: usize,
     pub batch: usize,
+}
+
+static NEXT_EVAL_SET_ID: AtomicU64 = AtomicU64::new(0);
+
+fn next_eval_set_id() -> u64 {
+    NEXT_EVAL_SET_ID.fetch_add(1, Ordering::Relaxed)
 }
 
 pub struct ModelHandle {
@@ -72,6 +85,8 @@ pub struct ModelHandle {
     pub w_scales: HashMap<u8, Vec<Vec<f32>>>,
     /// forward executions performed (run-time accounting, Table 5)
     pub fwd_calls: RefCell<u64>,
+    /// evaluation-engine state: FP reference cache + config materializer
+    pub engine: engine::HandleEngine,
 }
 
 impl ModelHandle {
@@ -85,6 +100,7 @@ impl ModelHandle {
             .collect::<Result<Vec<_>>>()
             .context("uploading parameters")?;
         let md = ModelData::load(&manifest.dir, &entry.data)?;
+        let eng = engine::HandleEngine::new(&entry);
         Ok(Self {
             rt,
             entry,
@@ -95,7 +111,20 @@ impl ModelHandle {
             act_ranges: None,
             w_scales: HashMap::new(),
             fwd_calls: RefCell::new(0),
+            engine: eng,
         })
+    }
+
+    /// Device-resident trained parameters (uploaded once at open) — shared
+    /// by the forward, stats, taps and FIT executables so no caller
+    /// re-uploads them per batch.
+    pub fn param_buffers(&self) -> &[xla::PjRtBuffer] {
+        &self.param_bufs
+    }
+
+    /// Cached FP32 reference for `set` (one forward sweep on first use).
+    pub fn fp_reference(&self, set: &EvalSet) -> Result<Rc<engine::FpReference>> {
+        self.engine.reference(self, set)
     }
 
     // -- calibration ---------------------------------------------------------
@@ -124,6 +153,8 @@ impl ModelHandle {
             ranges.accumulate(&outs, set.batches.len())?;
         }
         self.act_ranges = Some(ranges);
+        // new ranges invalidate the engine's cached activation qparam rows
+        self.engine.mat.invalidate();
 
         let ratios = quant::default_ratios();
         let bits_list = self.entry.stats_bits.clone();
@@ -137,17 +168,20 @@ impl ModelHandle {
         if self.w_scales.contains_key(&bits) {
             return Ok(());
         }
-        let mut per_q = Vec::with_capacity(self.entry.n_w());
-        for wq in &self.entry.w_quantizers {
-            let w = &self.weights[wq.param_idx];
-            per_q.push(quant::weight_scales_mse(
-                w,
+        // The MSE ratio grid search is independent per quantizer and pure
+        // host math — fan it across threads (no PJRT involvement).
+        let weights = &self.weights;
+        let per_q = crate::util::par_map(&self.entry.w_quantizers, |_, wq| {
+            quant::weight_scales_mse(
+                &weights[wq.param_idx],
                 wq.channels,
                 wq.channel_axis,
                 bits,
                 ratios,
-            )?);
-        }
+            )
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
         self.w_scales.insert(bits, per_q);
         Ok(())
     }
@@ -166,7 +200,13 @@ impl ModelHandle {
             .map(|t| self.rt.buffer(t))
             .collect::<Result<Vec<_>>>()?;
         let n = batches.len() * batch;
-        Ok(EvalSet { batches, labels: ds.labels_prefix(batch)?, n, batch })
+        Ok(EvalSet {
+            id: next_eval_set_id(),
+            batches,
+            labels: ds.labels_prefix(batch)?,
+            n,
+            batch,
+        })
     }
 
     /// Device batches for raw inputs with no labels (OOD calibration).
@@ -182,6 +222,7 @@ impl ModelHandle {
         }
         let n = nb * batch;
         Ok(EvalSet {
+            id: next_eval_set_id(),
             batches,
             labels: Tensor::zeros(&[n]),
             n,
@@ -191,61 +232,11 @@ impl ModelHandle {
 
     // -- configuration materialization ---------------------------------------
 
-    /// Build the three packed quant-param tensors for a configuration.
+    /// Build the three packed quant-param tensors for a configuration —
+    /// patched incrementally from the engine's cached FP32 baseline rows
+    /// (see [`crate::engine::Materializer`]).
     pub fn qparam_tensors(&self, cfg: &QuantConfig) -> Result<(Tensor, Tensor, Tensor)> {
-        let entry = &self.entry;
-        if cfg.act.len() != entry.n_act() || cfg.w.len() != entry.n_w() {
-            bail!("config arity mismatch");
-        }
-        let ranges = self
-            .act_ranges
-            .as_ref()
-            .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
-
-        let mut act_qp = vec![0f32; entry.n_act() * 5];
-        for (i, b) in cfg.act.iter().enumerate() {
-            let row = &mut act_qp[i * 5..(i + 1) * 5];
-            match b {
-                Some(bits) => {
-                    let (s, o) = ranges.qparams(i, *bits)?;
-                    let (_, qmax) = quant::act_qrange(*bits);
-                    row.copy_from_slice(&[s, o, 0.0, qmax, 1.0]);
-                }
-                None => row.copy_from_slice(&[1.0, 0.0, 0.0, 1.0, 0.0]),
-            }
-        }
-
-        let cmax = entry.cmax;
-        let mut w_scales = vec![0f32; entry.n_w() * cmax];
-        let mut w_qmeta = vec![0f32; entry.n_w() * 3];
-        for (i, b) in cfg.w.iter().enumerate() {
-            let meta = &mut w_qmeta[i * 3..(i + 1) * 3];
-            match b {
-                Some(bits) => {
-                    let scales = self
-                        .w_scales
-                        .get(bits)
-                        .ok_or_else(|| anyhow!("weight scales for {bits} bits not prepared"))?;
-                    let sc = &scales[i];
-                    w_scales[i * cmax..i * cmax + sc.len()].copy_from_slice(sc);
-                    let (qmin, qmax) = quant::weight_qrange(*bits);
-                    meta.copy_from_slice(&[qmin, qmax, 1.0]);
-                }
-                None => {
-                    // scale 1, disabled
-                    for c in 0..cmax {
-                        w_scales[i * cmax + c] = 1.0;
-                    }
-                    meta.copy_from_slice(&[-1.0, 1.0, 0.0]);
-                }
-            }
-        }
-
-        Ok((
-            Tensor::from_f32(&[entry.n_act(), 5], act_qp)?,
-            Tensor::from_f32(&[entry.n_w(), cmax], w_scales)?,
-            Tensor::from_f32(&[entry.n_w(), 3], w_qmeta)?,
-        ))
+        self.engine.mat.tensors(self, cfg)
     }
 
     /// Upload a configuration once for repeated forward calls.
@@ -306,6 +297,11 @@ impl ModelHandle {
     }
 
     /// Concatenated logits over an eval set.
+    ///
+    /// Compat path for consumers that genuinely need the full `O(N×C)`
+    /// array (tests, Fig-2 ground-truth lists).  The hot Phase-1/Phase-2
+    /// paths stream batch-by-batch through [`crate::engine::Evaluator`]
+    /// instead and never materialize this concatenation.
     pub fn logits_on(&self, set: &EvalSet, cb: &ConfigBuffers) -> Result<Tensor> {
         let mut all: Option<(Vec<usize>, Vec<f32>)> = None;
         for xb in &set.batches {
@@ -324,10 +320,15 @@ impl ModelHandle {
         Tensor::from_f32(&shape, data)
     }
 
-    /// Task metric of a configuration over an eval set.
+    /// Task metric of a configuration over an eval set, accumulated
+    /// batch-by-batch (no host concatenation of the logits).
     pub fn eval_metric(&self, set: &EvalSet, cb: &ConfigBuffers) -> Result<f64> {
-        let logits = self.logits_on(set, cb)?;
-        crate::metrics::task_metric(&self.entry.task, &logits, &set.labels)
+        let mut acc = crate::metrics::StreamingTaskMetric::new(&self.entry.task)?;
+        for (bi, xb) in set.batches.iter().enumerate() {
+            let logits = self.forward(xb, cb)?;
+            acc.push(&logits, &set.labels.slice_rows(bi * set.batch, set.batch)?)?;
+        }
+        Ok(acc.finalize())
     }
 
     /// Convenience: metric of `cfg` with no overrides.

@@ -240,10 +240,12 @@ impl ActRanges {
             .position(|&x| x == bits)
             .ok_or_else(|| anyhow::anyhow!("bits {bits} not in stats grid {:?}", self.bits))?;
         let grid = &self.mse[aq][b];
+        // total_cmp: a NaN grid cell (degenerate stats batch) must not
+        // panic range selection
         let k = grid
             .iter()
             .enumerate()
-            .min_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .min_by(|x, y| x.1.total_cmp(y.1))
             .map(|(k, _)| k)
             .unwrap_or(self.ratios.len() - 1);
         let r = self.ratios[k] as f32;

@@ -18,20 +18,31 @@
 //!
 //! BOPs-budget search ([`bops_budget`]) needs no evaluations at all until
 //! the final report — flipping is pure ledger arithmetic.
+//!
+//! All prefix metrics run through the memoizing streaming
+//! [`crate::engine::Evaluator`] owned by [`SearchCtx`], and prefix
+//! assignments are maintained incrementally by a [`PrefixCursor`], so
+//! re-visited prefixes (including the final report) cost zero additional
+//! forward calls and `SearchRun::evals` counts *distinct* evaluations.
 
 use crate::bops;
+use crate::engine::Evaluator;
 use crate::groups::{Assignment, Candidate, Lattice};
 use crate::manifest::ModelEntry;
-use crate::model::{EvalSet, ModelHandle, WeightOverrides};
+use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
 use crate::sensitivity::{RoundedWeights, SensEntry};
 use crate::util::Timer;
 use anyhow::Result;
+use std::cell::RefCell;
 
 /// One applied flip.
 #[derive(Clone, Debug)]
 pub struct FlipStep {
     pub group: usize,
     pub cand: Candidate,
+    /// candidate the group held *before* this flip — lets a
+    /// [`PrefixCursor`] rewind without replaying the whole prefix
+    pub prev: Candidate,
     /// relative BOPs after this flip
     pub rel_bops: f64,
     /// the Phase-1 score that ordered this flip
@@ -45,8 +56,11 @@ pub struct SearchRun {
     pub applied: Vec<FlipStep>,
     pub final_rel_bops: f64,
     pub final_metric: f64,
-    /// number of full eval-set metric evaluations performed
+    /// number of *distinct* full eval-set metric evaluations performed —
+    /// re-visits of an already-measured prefix are memo hits, not evals
     pub evals: usize,
+    /// evaluations served from the engine memo (Table-5 accounting)
+    pub memo_hits: usize,
     pub wall_secs: f64,
     /// (rel_bops, metric) after each evaluated step — the pareto curve
     pub curve: Vec<(f64, f64)>,
@@ -70,10 +84,12 @@ pub fn flip_sequence(
         if bops::flip_gain(entry, &asg, e.group, e.cand) == 0 {
             continue;
         }
+        let prev = asg.per_group[e.group];
         asg.set(e.group, e.cand);
         steps.push(FlipStep {
             group: e.group,
             cand: e.cand,
+            prev,
             rel_bops: bops::rel_bops(entry, &asg),
             score: e.score,
         });
@@ -81,7 +97,8 @@ pub fn flip_sequence(
     steps
 }
 
-/// Assignment after applying the first `k` flips.
+/// Assignment after applying the first `k` flips — the from-scratch
+/// reference; the searches themselves use a [`PrefixCursor`].
 pub fn assignment_at(
     entry: &ModelEntry,
     lattice: &Lattice,
@@ -95,7 +112,44 @@ pub fn assignment_at(
     asg
 }
 
+/// Incrementally maintained prefix assignment: `seek(k)` applies or rewinds
+/// only the `|k − k'|` flips between positions instead of replaying all `k`
+/// from the baseline — the binary and interpolation searches jump around
+/// the curve, and the from-scratch walk made every probe `O(k)`.
+pub struct PrefixCursor {
+    asg: Assignment,
+    k: usize,
+}
+
+impl PrefixCursor {
+    pub fn new(entry: &ModelEntry, lattice: &Lattice) -> Self {
+        Self { asg: Assignment::baseline(entry, lattice), k: 0 }
+    }
+
+    /// The assignment after the first `k` flips (clamped to `flips.len()`).
+    pub fn seek(&mut self, flips: &[FlipStep], k: usize) -> &Assignment {
+        let k = k.min(flips.len());
+        while self.k < k {
+            let s = &flips[self.k];
+            self.asg.set(s.group, s.cand);
+            self.k += 1;
+        }
+        while self.k > k {
+            self.k -= 1;
+            let s = &flips[self.k];
+            self.asg.set(s.group, s.prev);
+        }
+        &self.asg
+    }
+}
+
 /// Shared context for the accuracy-target searches.
+///
+/// Every prefix evaluation routes through one [`Evaluator`]: metrics stream
+/// batch-by-batch and are memoized by the canonical configuration, so a
+/// prefix the search already measured — including the final report in
+/// `finish` — never re-runs the eval set.  The evaluator is
+/// per-context, keeping `evals`/`memo_hits` per-run (Table 5).
 pub struct SearchCtx<'a> {
     pub handle: &'a ModelHandle,
     pub lattice: &'a Lattice,
@@ -103,26 +157,50 @@ pub struct SearchCtx<'a> {
     pub set: &'a EvalSet,
     /// AdaRounded weights to stitch per configuration (§3.5)
     pub rounded: Option<&'a RoundedWeights>,
+    /// the memoizing streaming evaluation engine
+    pub eval: Evaluator<'a>,
+    cursor: RefCell<PrefixCursor>,
 }
 
 impl<'a> SearchCtx<'a> {
-    /// Metric of the k-flip prefix configuration.
+    pub fn new(
+        handle: &'a ModelHandle,
+        lattice: &'a Lattice,
+        flips: &'a [FlipStep],
+        set: &'a EvalSet,
+        rounded: Option<&'a RoundedWeights>,
+    ) -> Self {
+        Self {
+            cursor: RefCell::new(PrefixCursor::new(&handle.entry, lattice)),
+            eval: Evaluator::new(handle, set),
+            handle,
+            lattice,
+            flips,
+            set,
+            rounded,
+        }
+    }
+
+    /// Canonical configuration of the k-flip prefix (incremental cursor).
+    fn config_at(&self, k: usize) -> QuantConfig {
+        let mut cur = self.cursor.borrow_mut();
+        let (act, w) = cur.seek(self.flips, k).per_quantizer(&self.handle.entry);
+        QuantConfig { act, w }
+    }
+
+    /// Metric of the k-flip prefix configuration (streamed + memoized).
     pub fn eval_at(&self, k: usize) -> Result<f64> {
-        let asg = assignment_at(&self.handle.entry, self.lattice, self.flips, k);
-        let (act, w) = asg.per_quantizer(&self.handle.entry);
-        let cfg = crate::model::QuantConfig { act, w };
-        let ov = self.overrides_for(&asg);
-        let cb = self.handle.config_buffers(&cfg, &ov)?;
-        self.handle.eval_metric(self.set, &cb)
+        let cfg = self.config_at(k);
+        let ov = self.overrides_for(&cfg);
+        self.eval.metric(&cfg, &ov)
     }
 
     /// Stitch AdaRounded weights matching each parameter's current bits.
-    fn overrides_for(&self, asg: &Assignment) -> WeightOverrides {
+    fn overrides_for(&self, cfg: &QuantConfig) -> WeightOverrides {
         let mut ov = WeightOverrides::new();
         if let Some(rounded) = self.rounded {
-            let (_, wbits) = asg.per_quantizer(&self.handle.entry);
             for (i, wq) in self.handle.entry.w_quantizers.iter().enumerate() {
-                if let Some(bits) = wbits[i] {
+                if let Some(bits) = cfg.w[i] {
                     if let Some(t) = rounded.get(&(wq.param_idx, bits)) {
                         ov.insert(wq.param_idx, t.clone());
                     }
@@ -132,15 +210,18 @@ impl<'a> SearchCtx<'a> {
         ov
     }
 
-    fn finish(&self, k: usize, evals: usize, t: &Timer, curve: Vec<(f64, f64)>) -> Result<SearchRun> {
-        let asg = assignment_at(&self.handle.entry, self.lattice, self.flips, k);
+    fn finish(&self, k: usize, t: &Timer, curve: Vec<(f64, f64)>) -> Result<SearchRun> {
+        // a winning prefix measured during the search is a memo hit here —
+        // no extra eval-set pass, and `evals` stays the distinct count
         let final_metric = self.eval_at(k)?;
+        let asg = assignment_at(&self.handle.entry, self.lattice, self.flips, k);
         Ok(SearchRun {
             final_rel_bops: bops::rel_bops(&self.handle.entry, &asg),
             assignment: asg,
-            applied: self.flips[..k].to_vec(),
+            applied: self.flips[..k.min(self.flips.len())].to_vec(),
             final_metric,
-            evals: evals + 1,
+            evals: self.eval.evals(),
+            memo_hits: self.eval.memo_hits(),
             wall_secs: t.secs(),
             curve,
         })
@@ -160,11 +241,12 @@ pub fn bops_budget(ctx: &SearchCtx, budget_r: f64) -> Result<SearchRun> {
     if k < ctx.flips.len() {
         k += 1; // include the flip that crossed the budget
     }
-    ctx.finish(k, 0, &t, vec![])
+    ctx.finish(k, &t, vec![])
 }
 
 /// Full pareto sweep: evaluate after *every* flip (used to draw Fig. 2/4/5
-/// curves).  Returns the complete curve.
+/// curves).  Returns the complete curve; the final report reuses the last
+/// point's memoized metric, so `evals == flips.len() + 1`.
 pub fn full_curve(ctx: &SearchCtx) -> Result<SearchRun> {
     let t = Timer::start();
     let mut curve = Vec::with_capacity(ctx.flips.len() + 1);
@@ -174,9 +256,7 @@ pub fn full_curve(ctx: &SearchCtx) -> Result<SearchRun> {
         let m = ctx.eval_at(k)?;
         curve.push((ctx.flips[k - 1].rel_bops, m));
     }
-    let k = ctx.flips.len();
-    let evals = curve.len();
-    ctx.finish(k, evals, &t, curve)
+    ctx.finish(ctx.flips.len(), &t, curve)
 }
 
 /// Task-performance budget, sequential scheme (Algorithm 1): stop at the
@@ -184,31 +264,30 @@ pub fn full_curve(ctx: &SearchCtx) -> Result<SearchRun> {
 pub fn sequential_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
     let t = Timer::start();
     let mut curve = Vec::new();
-    let mut evals = 0usize;
     let mut best_k = 0usize;
     for k in 1..=ctx.flips.len() {
         let m = ctx.eval_at(k)?;
-        evals += 1;
         curve.push((ctx.flips[k - 1].rel_bops, m));
         if m < target {
             break;
         }
         best_k = k;
     }
-    ctx.finish(best_k, evals, &t, curve)
+    ctx.finish(best_k, &t, curve)
 }
 
 /// Binary search on the prefix length (§3.6): `O(log₂(LM))` evaluations.
 /// Finds the largest `k` with `metric(k) ≥ target`, assuming monotonicity.
+/// With the memoized finish, a run costs at most `⌈log₂(L·M)⌉ + 1` distinct
+/// prefix evaluations (the `+1` only when the winner is `k = 0`, which the
+/// loop never probes).
 pub fn binary_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
     let t = Timer::start();
     let mut curve = Vec::new();
-    let mut evals = 0usize;
     let (mut lo, mut hi) = (0usize, ctx.flips.len()); // metric(lo) ≥ target invariant
     while lo < hi {
         let mid = (lo + hi + 1) / 2;
         let m = ctx.eval_at(mid)?;
-        evals += 1;
         let r = if mid == 0 { 1.0 } else { ctx.flips[mid - 1].rel_bops };
         curve.push((r, m));
         if m >= target {
@@ -217,7 +296,7 @@ pub fn binary_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
             hi = mid - 1;
         }
     }
-    ctx.finish(lo, evals, &t, curve)
+    ctx.finish(lo, &t, curve)
 }
 
 /// Binary + interpolation hybrid (§3.6, Fig. 1): two binary steps cut the
@@ -226,19 +305,16 @@ pub fn binary_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
 pub fn hybrid_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
     let t = Timer::start();
     let mut curve = Vec::new();
-    let mut evals = 0usize;
 
     let n = ctx.flips.len();
     let mut lo = 0usize; // metric(lo) ≥ target
     let mut hi = n; //  first index where metric may be < target
     let mut m_lo = ctx.eval_at(0)?;
-    evals += 1;
     curve.push((1.0, m_lo));
     let mut m_hi = ctx.eval_at(n)?;
-    evals += 1;
     curve.push((if n == 0 { 1.0 } else { ctx.flips[n - 1].rel_bops }, m_hi));
     if m_hi >= target {
-        return ctx.finish(n, evals, &t, curve);
+        return ctx.finish(n, &t, curve);
     }
 
     // two binary steps → quarter segment
@@ -248,7 +324,6 @@ pub fn hybrid_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
         }
         let mid = (lo + hi) / 2;
         let m = ctx.eval_at(mid)?;
-        evals += 1;
         curve.push((ctx.flips[mid.max(1) - 1].rel_bops, m));
         if m >= target {
             lo = mid;
@@ -267,7 +342,6 @@ pub fn hybrid_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
         let mut probe = lo + ((span as f64) * frac) as usize;
         probe = probe.clamp(lo + 1, hi - 1);
         let m = ctx.eval_at(probe)?;
-        evals += 1;
         curve.push((ctx.flips[probe - 1].rel_bops, m));
         if m >= target {
             lo = probe;
@@ -277,7 +351,7 @@ pub fn hybrid_accuracy(ctx: &SearchCtx, target: f64) -> Result<SearchRun> {
             m_hi = m;
         }
     }
-    ctx.finish(lo, evals, &t, curve)
+    ctx.finish(lo, &t, curve)
 }
 
 #[cfg(test)]
@@ -349,5 +423,43 @@ mod tests {
         let a2 = assignment_at(&e, &l, &f, 2);
         assert_eq!(a2.per_group[1], Candidate::new(8, 8));
         assert_eq!(a2.per_group[0], Candidate::new(4, 8));
+    }
+
+    #[test]
+    fn flip_sequence_records_previous_candidate() {
+        let e = toy_entry();
+        let l = Lattice::practical();
+        // group 1 flips twice: baseline → W8A8 → W4A8
+        let s = sens(&[(1, 8, 8, 50.0), (1, 4, 8, 30.0)]);
+        let f = flip_sequence(&e, &l, &s);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].prev, l.baseline);
+        assert_eq!(f[1].prev, Candidate::new(8, 8));
+    }
+
+    #[test]
+    fn prefix_cursor_matches_assignment_at_under_random_seeks() {
+        let e = toy_entry();
+        let l = Lattice::expanded();
+        let s = sens(&[
+            (0, 8, 8, 90.0),
+            (1, 8, 8, 80.0),
+            (0, 6, 8, 70.0),
+            (1, 6, 6, 60.0),
+            (0, 4, 6, 50.0),
+            (1, 4, 4, 40.0),
+        ]);
+        let f = flip_sequence(&e, &l, &s);
+        assert!(f.len() >= 4, "toy sequence too short for the seek pattern");
+        let mut cur = PrefixCursor::new(&e, &l);
+        let mut rng = crate::util::Rng::new(0x5EEC);
+        // binary-search-style jumps: forward, backward, repeats, extremes
+        let mut ks: Vec<usize> = (0..40).map(|_| rng.below(f.len() + 1)).collect();
+        ks.extend([0, f.len(), 0, f.len() / 2, f.len() / 2, f.len() + 7]);
+        for k in ks {
+            let got = cur.seek(&f, k).clone();
+            let want = assignment_at(&e, &l, &f, k);
+            assert_eq!(got, want, "cursor diverged at k={k}");
+        }
     }
 }

@@ -10,13 +10,19 @@
 //! calibration-data variation (Fig. 2) and usable with out-of-domain data
 //! (Fig. 4).  Two baseline metrics are implemented for the Fig. 2
 //! comparison: task-accuracy degradation and the FIT (Fisher) metric.
+//!
+//! All probes run through [`crate::engine::Evaluator`]: the FP32 reference
+//! is one cached forward sweep per `(model, eval-set)` and each probe
+//! streams batch-by-batch, so a full sweep costs exactly `1 + probes`
+//! forward-sweep-equivalents with no host logit concatenation.
 
+use crate::engine::Evaluator;
 use crate::groups::{Assignment, Candidate, Lattice};
 use crate::manifest::Manifest;
 use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
 use crate::quant;
 use crate::tensor::Tensor;
-use crate::util::db10;
+use crate::util::{db10, par_map};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
@@ -66,10 +72,13 @@ pub fn sqnr_db(fp: &Tensor, q: &Tensor) -> Result<f64> {
 }
 
 /// FP32 logits over an eval set (the Phase-1 reference signal).
+///
+/// Served from the engine's per-`(model, eval-set)` reference cache — at
+/// most one forward sweep per set, no matter how many metrics, figures or
+/// repeated calls ask for it.  The concatenation is built on demand; the
+/// streaming probe paths below never need it.
 pub fn fp_logits(handle: &ModelHandle, set: &EvalSet) -> Result<Tensor> {
-    let cfg = QuantConfig::fp32(&handle.entry);
-    let cb = handle.config_buffers(&cfg, &HashMap::new())?;
-    handle.logits_on(set, &cb)
+    handle.fp_reference(set)?.concat()
 }
 
 /// Probe configuration: FP everywhere, group `g` at candidate `c`.
@@ -120,7 +129,10 @@ pub fn sensitivity_list(
         Metric::Accuracy => accuracy_scores(handle, lattice, set, rounded)?,
         Metric::Fit => fit_scores(handle, manifest, lattice, set)?,
     };
-    entries.sort_by(|x, y| y.score.partial_cmp(&x.score).unwrap());
+    // total_cmp: a single NaN score must not panic the whole pipeline —
+    // IEEE total order is defined for every bit pattern, so degenerate
+    // probes sort deterministically instead of aborting Phase 1.
+    entries.sort_by(|x, y| y.score.total_cmp(&x.score));
     Ok(entries)
 }
 
@@ -145,16 +157,17 @@ fn sqnr_scores(
     set: &EvalSet,
     rounded: Option<&RoundedWeights>,
 ) -> Result<Vec<SensEntry>> {
-    let fp = fp_logits(handle, set)?;
+    // One engine evaluator for the whole sweep: the FP reference is built
+    // (or served from cache) once, and each probe streams batch-by-batch —
+    // exactly `1 + probes` forward-sweep-equivalents, no concatenation.
+    let ev = Evaluator::new(handle, set);
     let mut out = Vec::new();
     for (g, c) in probe_targets(handle, lattice) {
         let cfg = probe_config(handle, g, c);
         let ov = rounded
             .map(|r| probe_overrides(handle, g, c, r))
             .unwrap_or_default();
-        let cb = handle.config_buffers(&cfg, &ov)?;
-        let q = handle.logits_on(set, &cb)?;
-        out.push(SensEntry { group: g, cand: c, score: sqnr_db(&fp, &q)? });
+        out.push(SensEntry { group: g, cand: c, score: ev.sqnr(&cfg, &ov)? });
     }
     Ok(out)
 }
@@ -165,14 +178,14 @@ fn accuracy_scores(
     set: &EvalSet,
     rounded: Option<&RoundedWeights>,
 ) -> Result<Vec<SensEntry>> {
+    let ev = Evaluator::new(handle, set);
     let mut out = Vec::new();
     for (g, c) in probe_targets(handle, lattice) {
         let cfg = probe_config(handle, g, c);
         let ov = rounded
             .map(|r| probe_overrides(handle, g, c, r))
             .unwrap_or_default();
-        let cb = handle.config_buffers(&cfg, &ov)?;
-        out.push(SensEntry { group: g, cand: c, score: handle.eval_metric(set, &cb)? });
+        out.push(SensEntry { group: g, cand: c, score: ev.metric(&cfg, &ov)? });
     }
     Ok(out)
 }
@@ -197,16 +210,13 @@ fn fit_scores(
         .as_ref()
         .ok_or_else(|| anyhow!("missing fit_act_shapes"))?;
 
-    // zero perturbations, uploaded once
+    // zero perturbations, uploaded once; trained parameters reused from the
+    // handle's device-resident copies (uploaded once at open)
     let pert_bufs: Vec<xla::PjRtBuffer> = shapes
         .iter()
         .map(|s| handle.rt.buffer(&Tensor::zeros(s)))
         .collect::<Result<_>>()?;
-    let param_bufs: Vec<xla::PjRtBuffer> = handle
-        .weights
-        .iter()
-        .map(|t| handle.rt.buffer(t))
-        .collect::<Result<_>>()?;
+    let param_bufs = handle.param_buffers();
 
     let abits_opts = lattice.abits_options();
     let ranges = handle
@@ -263,22 +273,20 @@ fn fit_scores(
         }
     }
 
-    // host-side weight quantization errors per wbits
+    // host-side weight quantization errors per wbits — independent pure
+    // host math per quantizer, fanned across threads
     let mut werr2: HashMap<u8, Vec<f64>> = HashMap::new();
     for &wbits in &lattice.wbits_options() {
         let scales = handle
             .w_scales
             .get(&wbits)
             .ok_or_else(|| anyhow!("weight scales for {wbits} missing"))?;
-        let mut errs = Vec::with_capacity(w_n);
-        for (i, wq) in entry.w_quantizers.iter().enumerate() {
-            errs.push(quant::weight_quant_mse(
-                &handle.weights[wq.param_idx],
-                &scales[i],
-                wq.channel_axis,
-                wbits,
-            )?);
-        }
+        let weights = &handle.weights;
+        let errs = par_map(&entry.w_quantizers, |i, wq| {
+            quant::weight_quant_mse(&weights[wq.param_idx], &scales[i], wq.channel_axis, wbits)
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
         werr2.insert(wbits, errs);
     }
 
@@ -298,28 +306,26 @@ fn fit_scores(
 }
 
 /// Per-quantizer SQNR at a fixed candidate — Fig. 3's per-network SQNR
-/// ranges.  Probes each activation / weight quantizer *individually*.
+/// ranges.  Probes each activation / weight quantizer *individually*,
+/// streaming every probe against the engine's cached FP reference.
 pub fn per_quantizer_sqnr(
     handle: &ModelHandle,
     set: &EvalSet,
     cand: Candidate,
 ) -> Result<(Vec<f64>, Vec<f64>)> {
-    let fp = fp_logits(handle, set)?;
+    let ev = Evaluator::new(handle, set);
+    let no_ov = WeightOverrides::new();
     let mut act = Vec::with_capacity(handle.entry.n_act());
     for a in 0..handle.entry.n_act() {
         let mut cfg = QuantConfig::fp32(&handle.entry);
         cfg.act[a] = Some(cand.abits);
-        let cb = handle.config_buffers(&cfg, &HashMap::new())?;
-        let q = handle.logits_on(set, &cb)?;
-        act.push(sqnr_db(&fp, &q)?);
+        act.push(ev.sqnr(&cfg, &no_ov)?);
     }
     let mut w = Vec::with_capacity(handle.entry.n_w());
     for i in 0..handle.entry.n_w() {
         let mut cfg = QuantConfig::fp32(&handle.entry);
         cfg.w[i] = Some(cand.wbits);
-        let cb = handle.config_buffers(&cfg, &HashMap::new())?;
-        let q = handle.logits_on(set, &cb)?;
-        w.push(sqnr_db(&fp, &q)?);
+        w.push(ev.sqnr(&cfg, &no_ov)?);
     }
     Ok((act, w))
 }

@@ -1,5 +1,6 @@
 //! Small shared utilities: a deterministic PRNG (no `rand` in the offline
-//! crate set), a wall-clock timer, and numeric helpers.
+//! crate set), a wall-clock timer, a scoped-thread parallel map (no `rayon`
+//! either), and numeric helpers.
 
 /// xoshiro256** seeded via splitmix64 — deterministic across platforms.
 ///
@@ -87,6 +88,53 @@ impl Timer {
     }
 }
 
+/// Order-preserving parallel map over a slice using scoped std threads —
+/// the offline crate set has no `rayon`.  Work is pulled from a shared
+/// atomic index (cheap work stealing for uneven item costs).
+///
+/// Intended for pure host math (weight-scale grid search, quantization MSE,
+/// FIT accumulation); never hand it anything touching the PJRT client,
+/// which is not thread-safe — the `T: Sync` bound enforces that for the
+/// items, and the closure must only capture `Sync` data.
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync) -> Vec<R> {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        done.push((i, f(i, &items[i])));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for w in workers {
+            for (i, r) in w.join().expect("par_map worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("par_map slot unfilled"))
+        .collect()
+}
+
 /// `10·log10(x)` with a floor to keep degenerate ratios finite.
 pub fn db10(x: f64) -> f64 {
     10.0 * x.max(1e-30).log10()
@@ -150,6 +198,21 @@ mod tests {
             let x = r.f64();
             assert!((0.0..1.0).contains(&x));
         }
+    }
+
+    #[test]
+    fn par_map_matches_sequential_in_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let got = par_map(&items, |i, &x| x * x + i as u64);
+        let want: Vec<u64> = items.iter().enumerate().map(|(i, &x)| x * x + i as u64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let none: Vec<u32> = vec![];
+        assert!(par_map(&none, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |_, &x| x + 1), vec![8]);
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! the validation metric the python build path recorded in the manifest.
 
 use mpq::coordinator::{Pipeline, SearchScheme};
+use mpq::engine::Evaluator;
 use mpq::groups::{Assignment, Candidate, Lattice};
 use mpq::manifest::Manifest;
 use mpq::model::QuantConfig;
+use mpq::search::SearchCtx;
 use mpq::sensitivity;
 use std::collections::HashMap;
 
@@ -236,6 +238,110 @@ fn weight_override_changes_logits() {
     let cb2 = p.model.config_buffers(&cfg, &ov).unwrap();
     let changed = p.model.logits_on(set, &cb2).unwrap();
     assert_ne!(base.f32s().unwrap(), changed.f32s().unwrap());
+}
+
+/// Engine contract: a full Phase-1 sensitivity sweep performs exactly
+/// `1 + probes` forward-sweep-equivalents — one cached FP reference pass
+/// plus one streamed pass per probe.
+#[test]
+fn phase1_sweep_costs_one_plus_probes_forward_sweeps() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let nb = p.calib_set().unwrap().batches.len() as u64;
+    let lat = Lattice::practical();
+    let fwd0 = *p.model.fwd_calls.borrow();
+    assert_eq!(fwd0, 0, "calibration must not run the forward executable");
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let fwd1 = *p.model.fwd_calls.borrow();
+    assert_eq!(
+        fwd1 - fwd0,
+        (1 + sens.len() as u64) * nb,
+        "sweep not 1 + probes forward-sweep-equivalents"
+    );
+    // a second sweep reuses the cached reference: exactly `probes` sweeps
+    let sens2 = p.sensitivity_sqnr(&lat).unwrap();
+    let fwd2 = *p.model.fwd_calls.borrow();
+    assert_eq!(fwd2 - fwd1, sens2.len() as u64 * nb);
+    assert!(p.model.engine.ref_hits.get() > 0);
+}
+
+/// Engine contract: repeating `eval_at(k)` for a measured prefix performs
+/// zero additional forward calls (memoization).
+#[test]
+fn repeated_eval_at_costs_zero_forward_calls() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flips = p.flips(&lat, &sens);
+    let set = p.calib_set().unwrap();
+    let ctx = SearchCtx::new(&p.model, &lat, &flips, set, None);
+    let k = flips.len().min(2);
+    let m1 = ctx.eval_at(k).unwrap();
+    let fwd = *p.model.fwd_calls.borrow();
+    let m2 = ctx.eval_at(k).unwrap();
+    assert_eq!(m1, m2);
+    assert_eq!(*p.model.fwd_calls.borrow(), fwd, "memoized eval ran forwards");
+    assert_eq!(ctx.eval.evals(), 1);
+    assert_eq!(ctx.eval.memo_hits(), 1);
+}
+
+/// Regression: `finish` reuses an already-measured winning prefix, so the
+/// eval counts are pinned — `bops_budget` = 1, `full_curve` = L+1, and
+/// `binary_accuracy` + finish ≤ ⌈log₂(L·M)⌉ + 1 — and `fwd_calls` agrees.
+#[test]
+fn search_eval_counts_pinned() {
+    let dir = skip_unless_artifacts!();
+    let mut p = pipe(&dir);
+    p.limit_val(512, 7).unwrap();
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flips = p.flips(&lat, &sens);
+    let nb_val = p.val_set().unwrap().batches.len() as u64;
+
+    let fwd0 = *p.model.fwd_calls.borrow();
+    let run = p.search_bops_budget(&lat, &flips, 0.5).unwrap();
+    assert_eq!(run.evals, 1, "bops_budget needs exactly one final eval");
+    assert_eq!(*p.model.fwd_calls.borrow() - fwd0, nb_val);
+
+    let fwd1 = *p.model.fwd_calls.borrow();
+    let curve = p.pareto_curve_val(&lat, &flips, None).unwrap();
+    assert_eq!(curve.evals, flips.len() + 1, "full_curve must not re-eval in finish");
+    assert_eq!(curve.memo_hits, 1);
+    assert_eq!(*p.model.fwd_calls.borrow() - fwd1, (flips.len() as u64 + 1) * nb_val);
+
+    let fp = p.eval_fp32().unwrap();
+    let fwd2 = *p.model.fwd_calls.borrow();
+    let bin = p
+        .search_accuracy_target(&lat, &flips, fp - 0.02, SearchScheme::Binary, None)
+        .unwrap();
+    let bound = ((flips.len() + 1) as f64).log2().ceil() as usize + 1;
+    assert!(
+        bin.evals <= bound,
+        "binary + finish used {} distinct evals, bound {bound}",
+        bin.evals
+    );
+    assert_eq!(*p.model.fwd_calls.borrow() - fwd2, bin.evals as u64 * nb_val);
+}
+
+/// Streaming SQNR through the engine equals `sqnr_db` on concatenated
+/// logits on the real artifacts, to 1e-9.
+#[test]
+fn streaming_sqnr_matches_concatenated_on_artifacts() {
+    let dir = skip_unless_artifacts!();
+    let p = pipe(&dir);
+    let set = p.calib_set().unwrap();
+    let fp = sensitivity::fp_logits(&p.model, set).unwrap();
+    let cfg = QuantConfig::fixed(&p.model.entry, 8, 8);
+    let cb = p.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+    let q = p.model.logits_on(set, &cb).unwrap();
+    let want = sensitivity::sqnr_db(&fp, &q).unwrap();
+    let ev = Evaluator::new(&p.model, set);
+    let got = ev.sqnr(&cfg, &HashMap::new()).unwrap();
+    assert!(
+        (got - want).abs() < 1e-9,
+        "streaming {got} != concatenated {want}"
+    );
 }
 
 #[test]

@@ -7,7 +7,7 @@ use mpq::groups::{Assignment, Candidate, Lattice};
 use mpq::jsonio::{self, Json};
 use mpq::manifest::{ActQ, DataFiles, Group, Layer, ModelEntry, ParamInfo, WQ};
 use mpq::metrics::kendall_tau;
-use mpq::search::{assignment_at, flip_sequence};
+use mpq::search::{assignment_at, flip_sequence, PrefixCursor};
 use mpq::sensitivity::SensEntry;
 use mpq::tensor::{io, Tensor};
 use mpq::util::Rng;
@@ -82,7 +82,7 @@ fn random_sens(rng: &mut Rng, entry: &ModelEntry, lat: &Lattice) -> Vec<SensEntr
             }
         }
     }
-    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    out.sort_by(|a, b| b.score.total_cmp(&a.score));
     out
 }
 
@@ -118,6 +118,33 @@ fn flip_sequence_invariants() {
         let final_asg = assignment_at(&entry, &lat, &flips, flips.len());
         let min_r = mpq::bops::min_rel_bops(&entry, &lat);
         assert!((mpq::bops::rel_bops(&entry, &final_asg) - min_r).abs() < 1e-9);
+    }
+}
+
+/// The incremental prefix cursor must agree with the from-scratch
+/// `assignment_at` under arbitrary forward/backward seek patterns (the
+/// binary and interpolation searches jump around the curve), and every
+/// flip's recorded `prev` must be the candidate the group actually held.
+#[test]
+fn prefix_cursor_equals_from_scratch_replay() {
+    let mut rng = Rng::new(0xCC5);
+    for case in 0..CASES {
+        let entry = random_entry(&mut rng);
+        let lat = if case % 2 == 0 { Lattice::practical() } else { Lattice::expanded() };
+        let sens = random_sens(&mut rng, &entry, &lat);
+        let flips = flip_sequence(&entry, &lat, &sens);
+        // prev chains: each flip's prev equals the assignment right before it
+        for (k, f) in flips.iter().enumerate() {
+            let before = assignment_at(&entry, &lat, &flips, k);
+            assert_eq!(f.prev, before.per_group[f.group], "prev wrong at flip {k}");
+        }
+        let mut cur = PrefixCursor::new(&entry, &lat);
+        for _ in 0..20 {
+            let k = rng.below(flips.len() + 2); // may exceed len (clamped)
+            let got = cur.seek(&flips, k).clone();
+            let want = assignment_at(&entry, &lat, &flips, k);
+            assert_eq!(got, want, "cursor diverged at k={k}");
+        }
     }
 }
 
