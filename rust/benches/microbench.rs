@@ -1,11 +1,15 @@
 //! `cargo bench --bench microbench` — hot-path microbenchmarks used by the
 //! §Perf pass: forward-pass latency per configuration, qparam
 //! materialization, config-buffer upload, SQNR aggregation, flip-sequence
-//! construction, the host-side quantization substrate, and the end-to-end
-//! engine paths (full Phase-1 sweep, Phase-2 binary search).
+//! construction, the host-side quantization substrate, the end-to-end
+//! engine paths (full Phase-1 sweep, Phase-2 binary search), and the
+//! multi-client `EvalPool` sweep at 1/2/4 workers
+//! (`phase1_pool/full_sensitivity_sweep_wN` — the cross-PR speedup gate
+//! compares w4 against w1).
 //!
 //! Results are also written to `BENCH_microbench.json` so before/after
-//! speedups are tracked across PRs.
+//! speedups are tracked across PRs (`scripts/bench_compare` fails CI on
+//! >20% regression of the gated entries against the committed baseline).
 
 use mpq::bench::{bench, bench_result, BenchResult};
 use mpq::coordinator::{Pipeline, SearchScheme};
@@ -42,8 +46,11 @@ fn main() {
         let set = pipe.calib_set().unwrap();
         let ev = mpq::engine::Evaluator::new(&pipe.model, set);
         results.push(bench_result("phase1/sqnr_probe_256imgs", 1, 5, || {
-            let pcfg =
-                sensitivity::probe_config(&pipe.model, 1, mpq::groups::Candidate::new(8, 8));
+            let pcfg = sensitivity::probe_config(
+                &pipe.model.entry,
+                1,
+                mpq::groups::Candidate::new(8, 8),
+            );
             ev.sqnr(&pcfg, &HashMap::new()).map(|_| ())
         }));
     }
@@ -120,6 +127,28 @@ fn main() {
             pipe.search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)
                 .map(|_| ())
         }));
+    }
+
+    // Phase-1 sweep through the EvalPool at 1/2/4 workers.  Each pipeline
+    // gets its own pool (N private PJRT clients + eval-set shards); the
+    // pool's probe memo is cleared inside the timed closure (O(probes)
+    // host work, negligible) so every iteration measures a real sweep
+    // rather than cache hits.  The 1-worker pool is the baseline the
+    // acceptance gate compares w4 against — same dispatch overhead, no
+    // shard parallelism.
+    {
+        let lat = Lattice::practical();
+        for workers in [1usize, 2, 4] {
+            let mut pp =
+                Pipeline::open(mpq::artifacts_dir(), "resnet_s").expect("open resnet_s");
+            pp.enable_pool(workers).expect("spawn eval pool");
+            pp.calibrate(256, 0).expect("calibrate");
+            let name = format!("phase1_pool/full_sensitivity_sweep_w{workers}");
+            results.push(bench_result(&name, 1, 3, || {
+                pp.clear_eval_memo();
+                pp.sensitivity_sqnr(&lat).map(|_| ())
+            }));
+        }
     }
 
     mpq::bench::write_json("BENCH_microbench.json", "microbench", &results)

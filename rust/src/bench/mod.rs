@@ -9,7 +9,14 @@
 //! ```
 //!
 //! [`write_json`] additionally emits the results as machine-readable JSON
-//! (`BENCH_<name>.json`) so before/after speedups are tracked across PRs.
+//! (`BENCH_<name>.json`) so before/after speedups are tracked across PRs:
+//! CI's `scripts/bench_compare` step diffs the fresh microbench JSON
+//! against the committed repo-root baseline and fails on >20% regression
+//! of the gated hot paths (`phase1/full_sensitivity_sweep`,
+//! `phase2/binary_search`) or on the evaluation pool's
+//! `phase1_pool/full_sensitivity_sweep_w4` falling under 1.8× the `_w1`
+//! baseline.  `min_s` is the comparison basis — the minimum over
+//! iterations is the noise-robust statistic for small samples.
 
 use crate::jsonio::Json;
 use crate::util::Timer;

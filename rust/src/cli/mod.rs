@@ -1,6 +1,10 @@
 //! Tiny CLI argument parser (no `clap` in the offline crate set).
 //!
 //! Grammar: `mpq <subcommand> [positional...] [--flag] [--key value]`.
+//!
+//! Shared flags get typed accessors here; notably `--workers N` sizes the
+//! multi-client evaluation pool ([`crate::pool::EvalPool`]) and defaults to
+//! the host's available parallelism.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -72,6 +76,12 @@ impl Args {
     pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
+
+    /// `--workers N` — evaluation-pool width; defaults to the host's
+    /// available parallelism ([`crate::util::default_workers`]).
+    pub fn opt_workers(&self) -> Result<usize> {
+        self.opt_usize("workers", crate::util::default_workers())
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +117,15 @@ mod tests {
         assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
         let bad = parse("--n xyz");
         assert!(bad.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn workers_flag_defaults_to_parallelism() {
+        let a = parse("run --workers 3");
+        assert_eq!(a.opt_workers().unwrap(), 3);
+        let b = parse("run");
+        assert_eq!(b.opt_workers().unwrap(), crate::util::default_workers());
+        assert!(parse("run --workers zebra").opt_workers().is_err());
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! The coordinator: wires runtime, calibration, Phase 1 and Phase 2 into
 //! the end-to-end [`Pipeline`] — the paper's Algorithm 1 as a service.
 //!
-//! A `Pipeline` owns one model. Typical flow:
+//! A `Pipeline` owns one model.  [`Pipeline::enable_pool`] attaches an
+//! N-client [`crate::pool::EvalPool`] and every probe / prefix / config
+//! evaluation after that fans out shard-parallel, bit-identical to the
+//! serial path; [`Pipeline::set_sens_cache_dir`] persists Phase-1 lists on
+//! disk so repeated drivers skip the sweep.  Typical flow:
 //!
 //! ```no_run
 //! # use mpq::coordinator::Pipeline;
@@ -18,13 +22,16 @@ use crate::adaround::{self, AdaRoundCfg};
 use crate::data::DataSet;
 use crate::groups::{Assignment, Candidate, Lattice};
 use crate::manifest::Manifest;
-use crate::model::{EvalSet, ModelHandle, QuantConfig};
+use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use crate::pool::{self, EvalPool, ProbeKind};
 use crate::runtime::Runtime;
 use crate::search::{self, FlipStep, SearchCtx, SearchRun};
-use crate::sensitivity::{self, Metric, RoundedWeights, SensEntry};
+use crate::sensitivity::{self, cache as sens_cache, Metric, RoundedWeights, SensEntry};
+use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
+use std::cell::Cell;
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 pub struct Pipeline {
@@ -35,6 +42,18 @@ pub struct Pipeline {
     pub calib_set: Option<EvalSet>,
     /// validation eval set (lazily built)
     pub val_set: Option<EvalSet>,
+    /// multi-client evaluation pool ([`Self::enable_pool`]); when present,
+    /// Phase-1 sweeps, Phase-2 prefix evaluations and one-off config
+    /// evaluations all fan out shard-parallel across its workers
+    pub pool: Option<EvalPool>,
+    /// host copies of the current calibration / validation data — what the
+    /// pool shards from, and what the sensitivity cache digests
+    calib_ds: Option<DataSet>,
+    val_ds: Option<DataSet>,
+    /// on-disk Phase-1 sensitivity cache dir (None = disabled)
+    sens_cache_dir: Option<PathBuf>,
+    sens_cache_hits: Cell<u64>,
+    sens_cache_misses: Cell<u64>,
 }
 
 impl Pipeline {
@@ -43,20 +62,91 @@ impl Pipeline {
         let manifest = Manifest::load(dir)?;
         let rt = Rc::new(Runtime::cpu()?);
         let model = ModelHandle::open(rt.clone(), &manifest, model)?;
-        Ok(Self { manifest, rt, model, calib_set: None, val_set: None })
+        Ok(Self::assemble(manifest, rt, model))
     }
 
     /// Open sharing an existing runtime (multi-model experiments reuse the
     /// PJRT client and its executable cache).
     pub fn open_with(rt: Rc<Runtime>, manifest: &Manifest, model: &str) -> Result<Self> {
         let model = ModelHandle::open(rt.clone(), manifest, model)?;
-        Ok(Self {
-            manifest: manifest.clone(),
+        Ok(Self::assemble(manifest.clone(), rt, model))
+    }
+
+    fn assemble(manifest: Manifest, rt: Rc<Runtime>, model: ModelHandle) -> Self {
+        Self {
+            manifest,
             rt,
             model,
             calib_set: None,
             val_set: None,
-        })
+            pool: None,
+            calib_ds: None,
+            val_ds: None,
+            sens_cache_dir: None,
+            sens_cache_hits: Cell::new(0),
+            sens_cache_misses: Cell::new(0),
+        }
+    }
+
+    // -- evaluation pool -------------------------------------------------------
+
+    /// Spawn an `workers`-client [`EvalPool`] for this model and route all
+    /// subsequent probe/prefix evaluations through it.  `workers == 0`
+    /// disables pooling (serial single-client path); `workers == 1` is a
+    /// valid degenerate pool (used by the equivalence tests).  Any state
+    /// already on the pipeline (calibration, eval sets) is pushed to the
+    /// new workers.
+    pub fn enable_pool(&mut self, workers: usize) -> Result<()> {
+        if workers == 0 {
+            self.pool = None;
+            return Ok(());
+        }
+        self.pool = Some(EvalPool::new(
+            &self.manifest.dir,
+            &self.model.entry.name,
+            workers,
+        )?);
+        self.pool_push_calibration()?;
+        self.pool_push_val()
+    }
+
+    /// Enable/disable the on-disk Phase-1 sensitivity cache ([`sens_cache`]).
+    pub fn set_sens_cache_dir(&mut self, dir: Option<PathBuf>) {
+        self.sens_cache_dir = dir;
+    }
+
+    /// `(hits, misses)` of the on-disk sensitivity cache for this pipeline.
+    pub fn sens_cache_stats(&self) -> (u64, u64) {
+        (self.sens_cache_hits.get(), self.sens_cache_misses.get())
+    }
+
+    /// Drop the pool's probe memo (benchmarks measure steady-state sweeps).
+    pub fn clear_eval_memo(&self) {
+        if let Some(p) = &self.pool {
+            p.clear_memo();
+        }
+    }
+
+    /// Push calibrated state + the calibration shard to the pool, and route
+    /// the FP-reference build through it (one sweep, split across workers).
+    fn pool_push_calibration(&self) -> Result<()> {
+        let Some(p) = &self.pool else { return Ok(()) };
+        if let Some(r) = &self.model.act_ranges {
+            p.set_calibration(r, &self.model.w_scales)?;
+        }
+        if let Some(ds) = &self.calib_ds {
+            p.load_set(pool::CALIB_SET, ds)?;
+            p.build_references(pool::CALIB_SET)?;
+        }
+        Ok(())
+    }
+
+    fn pool_push_val(&self) -> Result<()> {
+        let Some(p) = &self.pool else { return Ok(()) };
+        if let Some(ds) = &self.val_ds {
+            p.load_set(pool::VAL_SET, ds)?;
+        }
+        Ok(())
     }
 
     /// Select a seeded calibration subset of `n` samples, estimate all
@@ -71,15 +161,22 @@ impl Pipeline {
         let set = self.model.eval_set(ds)?;
         self.model.calibrate_ranges(&self.manifest, &set)?;
         self.calib_set = Some(set);
-        Ok(())
+        self.calib_ds = Some(ds.clone());
+        self.pool_push_calibration()
     }
 
     /// Calibrate ranges AND run Phase 1 on unlabeled out-of-domain inputs.
-    pub fn calibrate_unlabeled(&mut self, x: &crate::tensor::Tensor) -> Result<()> {
+    pub fn calibrate_unlabeled(&mut self, x: &Tensor) -> Result<()> {
         let set = self.model.eval_set_unlabeled(x)?;
         self.model.calibrate_ranges(&self.manifest, &set)?;
         self.calib_set = Some(set);
-        Ok(())
+        // zero labels keep the host-side dataset well-formed; unlabeled
+        // sets only ever serve SQNR probes, which ignore labels
+        self.calib_ds = Some(DataSet {
+            x: x.clone(),
+            y: Tensor::zeros(&[x.shape[0]]),
+        });
+        self.pool_push_calibration()
     }
 
     pub fn calib_set(&self) -> Result<&EvalSet> {
@@ -93,6 +190,8 @@ impl Pipeline {
         if self.val_set.is_none() {
             let ds = self.model.data.val.clone();
             self.val_set = Some(self.model.eval_set(&ds)?);
+            self.val_ds = Some(ds);
+            self.pool_push_val()?;
         }
         Ok(self.val_set.as_ref().unwrap())
     }
@@ -103,36 +202,71 @@ impl Pipeline {
     pub fn limit_val(&mut self, n: usize, seed: u64) -> Result<()> {
         let sub = self.model.data.val.subset(n, seed)?;
         self.val_set = Some(self.model.eval_set(&sub)?);
-        Ok(())
+        self.val_ds = Some(sub);
+        self.pool_push_val()
     }
 
     // -- Phase 1 ---------------------------------------------------------------
 
     pub fn sensitivity_sqnr(&self, lattice: &Lattice) -> Result<Vec<SensEntry>> {
-        sensitivity::sensitivity_list(
-            &self.model,
-            &self.manifest,
-            lattice,
-            self.calib_set()?,
-            Metric::Sqnr,
-            None,
-        )
+        self.sensitivity(lattice, Metric::Sqnr, None)
     }
 
+    /// Build the Phase-1 sensitivity list: served from the on-disk cache
+    /// when enabled and fresh, otherwise swept — shard-parallel through the
+    /// pool when one is attached (FIT stays serial; AdaRound-stitched
+    /// sweeps are never disk-cached since the stitched weights aren't part
+    /// of the digest).
     pub fn sensitivity(
         &self,
         lattice: &Lattice,
         metric: Metric,
         rounded: Option<&RoundedWeights>,
     ) -> Result<Vec<SensEntry>> {
-        sensitivity::sensitivity_list(
-            &self.model,
-            &self.manifest,
-            lattice,
-            self.calib_set()?,
-            metric,
-            rounded,
-        )
+        let calib = self.calib_set()?;
+        let slot = if rounded.is_none() { self.sens_cache_slot(lattice, metric) } else { None };
+        if let Some((path, _)) = &slot {
+            if let Some(list) = sens_cache::load(path)? {
+                self.sens_cache_hits.set(self.sens_cache_hits.get() + 1);
+                return Ok(list);
+            }
+            self.sens_cache_misses.set(self.sens_cache_misses.get() + 1);
+        }
+        let list = match (&self.pool, metric) {
+            (Some(p), Metric::Sqnr | Metric::Accuracy) => sensitivity::sensitivity_list_pooled(
+                p,
+                pool::CALIB_SET,
+                &self.model.entry,
+                lattice,
+                metric,
+                rounded,
+            )?,
+            _ => sensitivity::sensitivity_list(
+                &self.model,
+                &self.manifest,
+                lattice,
+                calib,
+                metric,
+                rounded,
+            )?,
+        };
+        if let Some((path, digest)) = slot {
+            sens_cache::store(&path, &self.model.entry.name, metric, digest, &list)?;
+        }
+        Ok(list)
+    }
+
+    fn sens_cache_slot(&self, lattice: &Lattice, metric: Metric) -> Option<(PathBuf, u64)> {
+        let (Some(dir), Some(ds)) = (self.sens_cache_dir.as_ref(), self.calib_ds.as_ref())
+        else {
+            return None;
+        };
+        let digest =
+            sens_cache::digest(&self.model.entry, lattice, metric, ds, &self.model.weights);
+        Some((
+            sens_cache::cache_path(dir, &self.model.entry.name, metric, digest),
+            digest,
+        ))
     }
 
     // -- AdaRound ---------------------------------------------------------------
@@ -161,14 +295,19 @@ impl Pipeline {
         search::flip_sequence(&self.model.entry, lattice, sens)
     }
 
+    /// A search context on `set`; prefix evaluations fan out through the
+    /// pool when one is enabled (`set_key` names the set's pool
+    /// registration).
     fn ctx<'a>(
         &'a self,
         lattice: &'a Lattice,
         flips: &'a [FlipStep],
         set: &'a EvalSet,
+        set_key: pool::SetKey,
         rounded: Option<&'a RoundedWeights>,
     ) -> SearchCtx<'a> {
-        SearchCtx::new(&self.model, lattice, flips, set, rounded)
+        let pooled = self.pool.as_ref().map(|p| (p, set_key));
+        SearchCtx::with_pool(&self.model, lattice, flips, set, rounded, pooled)
     }
 
     /// Phase 2 under a BOPs budget; final metric measured on the val set.
@@ -180,7 +319,7 @@ impl Pipeline {
     ) -> Result<SearchRun> {
         self.val_set()?;
         let set = self.val_set.as_ref().unwrap();
-        let ctx = SearchCtx::new(&self.model, lattice, flips, set, None);
+        let ctx = self.ctx(lattice, flips, set, pool::VAL_SET, None);
         search::bops_budget(&ctx, budget_r)
     }
 
@@ -205,10 +344,20 @@ impl Pipeline {
     /// Evaluate the FP32 model on the val set (consistency check against
     /// the manifest's `fp32_val_metric`).
     pub fn eval_fp32(&mut self) -> Result<f64> {
-        self.val_set()?;
-        let set = self.val_set.as_ref().unwrap();
         let cfg = QuantConfig::fp32(&self.model.entry);
-        self.model.eval_config(set, &cfg)
+        self.eval_val_metric(&cfg, &WeightOverrides::new())
+    }
+
+    /// One task-metric evaluation on the val set — shard-parallel through
+    /// the pool when one is enabled, single-client otherwise.
+    fn eval_val_metric(&mut self, cfg: &QuantConfig, ov: &WeightOverrides) -> Result<f64> {
+        self.val_set()?;
+        if let Some(p) = &self.pool {
+            return p.submit(pool::VAL_SET, ProbeKind::Metric, cfg, ov)?.wait();
+        }
+        let set = self.val_set.as_ref().unwrap();
+        let cb = self.model.config_buffers(cfg, ov)?;
+        self.model.eval_metric(set, &cb)
     }
 
     /// Evaluate an arbitrary assignment on the val set.
@@ -218,8 +367,6 @@ impl Pipeline {
         rounded: Option<&RoundedWeights>,
     ) -> Result<f64> {
         let (act, w) = asg.per_quantizer(&self.model.entry);
-        self.val_set()?;
-        let set = self.val_set.as_ref().unwrap();
         let cfg = QuantConfig { act, w };
         let mut ov = HashMap::new();
         if let Some(r) = rounded {
@@ -232,8 +379,7 @@ impl Pipeline {
                 }
             }
         }
-        let cb = self.model.config_buffers(&cfg, &ov)?;
-        self.model.eval_metric(set, &cb)
+        self.eval_val_metric(&cfg, &ov)
     }
 
     fn eval_cfg_with(
@@ -242,8 +388,6 @@ impl Pipeline {
         wbits: u8,
         rounded: Option<&RoundedWeights>,
     ) -> Result<f64> {
-        self.val_set()?;
-        let set = self.val_set.as_ref().unwrap();
         let mut ov = HashMap::new();
         if let Some(r) = rounded {
             for wq in &self.model.entry.w_quantizers {
@@ -252,8 +396,7 @@ impl Pipeline {
                 }
             }
         }
-        let cb = self.model.config_buffers(&cfg, &ov)?;
-        self.model.eval_metric(set, &cb)
+        self.eval_val_metric(&cfg, &ov)
     }
 
     /// Accuracy-target search with the chosen scheme; evaluations run on
@@ -268,7 +411,7 @@ impl Pipeline {
     ) -> Result<SearchRun> {
         self.val_set()?;
         let set = self.val_set.as_ref().unwrap();
-        let ctx = self.ctx(lattice, flips, set, rounded);
+        let ctx = self.ctx(lattice, flips, set, pool::VAL_SET, rounded);
         match scheme {
             SearchScheme::Sequential => search::sequential_accuracy(&ctx, target),
             SearchScheme::Binary => search::binary_accuracy(&ctx, target),
@@ -284,7 +427,7 @@ impl Pipeline {
         rounded: Option<&RoundedWeights>,
     ) -> Result<SearchRun> {
         let set = self.calib_set()?;
-        let ctx = self.ctx(lattice, flips, set, rounded);
+        let ctx = self.ctx(lattice, flips, set, pool::CALIB_SET, rounded);
         search::full_curve(&ctx)
     }
 
@@ -297,7 +440,7 @@ impl Pipeline {
     ) -> Result<SearchRun> {
         self.val_set()?;
         let set = self.val_set.as_ref().unwrap();
-        let ctx = self.ctx(lattice, flips, set, rounded);
+        let ctx = self.ctx(lattice, flips, set, pool::VAL_SET, rounded);
         search::full_curve(&ctx)
     }
 }

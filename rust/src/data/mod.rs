@@ -54,7 +54,9 @@ impl DataSet {
 
     /// Split inputs into `batch`-sized chunks, dropping a ragged tail (the
     /// executables have a static batch dimension; callers size their subsets
-    /// as multiples of `batch`).
+    /// as multiples of `batch`).  See the `EvalSet` truncation contract in
+    /// `crate::model` — [`Self::labels_prefix`] truncates identically so
+    /// inputs and labels stay aligned.
     pub fn batches(&self, batch: usize) -> Result<Vec<Tensor>> {
         let n = (self.len() / batch) * batch;
         (0..n / batch)
@@ -127,7 +129,9 @@ mod tests {
     use crate::tensor::Data;
 
     fn tmp_dataset(n: usize) -> (std::path::PathBuf, String, String) {
-        let dir = std::env::temp_dir().join("mpq_data_test");
+        // per-length dir: tests run in parallel and must not clobber each
+        // other's fixture files
+        let dir = std::env::temp_dir().join(format!("mpq_data_test_{n}"));
         std::fs::create_dir_all(&dir).unwrap();
         let x = Tensor::from_f32(&[n, 3], (0..n * 3).map(|i| i as f32).collect()).unwrap();
         let y = Tensor::from_f32(&[n], (0..n).map(|i| i as f32).collect()).unwrap();
@@ -145,6 +149,34 @@ mod tests {
         assert_eq!(bs.len(), 2); // ragged tail dropped
         assert_eq!(bs[1].shape, vec![4, 3]);
         assert_eq!(ds.labels_prefix(4).unwrap().shape, vec![8]);
+    }
+
+    /// Regression: for every dataset length that is *not* divisible by the
+    /// batch size, batching and labels must truncate to the same
+    /// `⌊len/batch⌋·batch` sample count (the EvalSet contract) — `n`
+    /// derived as `batches.len()·batch` is the number of samples that
+    /// actually run, and each batch row still matches its label.
+    #[test]
+    fn ragged_tail_truncation_is_consistent() {
+        for (len, batch) in [(11usize, 4usize), (7, 3), (9, 4), (5, 5), (13, 8)] {
+            let (dir, xf, yf) = tmp_dataset(len);
+            let ds = DataSet::load(&dir, &xf, &yf).unwrap();
+            let bs = ds.batches(batch).unwrap();
+            let want_n = (len / batch) * batch;
+            assert_eq!(bs.len(), len / batch, "len={len} batch={batch}");
+            let n = bs.len() * batch;
+            assert_eq!(n, want_n, "len={len} batch={batch}");
+            let labels = ds.labels_prefix(batch).unwrap();
+            assert_eq!(labels.shape, vec![want_n], "labels must truncate too");
+            // alignment survives truncation: y[i] == x[i,0] / 3
+            let ys = labels.f32s().unwrap();
+            for (bi, b) in bs.iter().enumerate() {
+                let xs = b.f32s().unwrap();
+                for r in 0..batch {
+                    assert_eq!(xs[r * 3] / 3.0, ys[bi * batch + r]);
+                }
+            }
+        }
     }
 
     #[test]

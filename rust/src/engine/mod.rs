@@ -24,6 +24,19 @@
 //!   configurations differ from the FP32 baseline in one group's rows, so
 //!   packed quant-param tensors are patched from a cached baseline instead
 //!   of being recomputed row-by-row per probe.
+//!
+//! §Perf — pool architecture: the engine itself stays single-threaded (its
+//! caches sit behind `RefCell` next to a `!Send` PJRT client), and
+//! [`crate::pool::EvalPool`] scales it horizontally by giving each of N
+//! worker threads a *private* engine + client + eval-set shard.  The
+//! division of labour: per-worker `HandleEngine`s cache shard references
+//! and patch shard configs; the pool front-end holds the cross-worker
+//! probe memo (a probe measured once is memoized for every later
+//! submitter, across sweeps and searches).  Exactness: shard partials are
+//! per-batch sums keyed by global batch index ([`StreamingSqnr`]) or
+//! integer counts (`StreamingTaskMetric`), reduced in batch order, so a
+//! pooled evaluation is bit-identical to the serial one for SQNR and the
+//! counting metrics (Pearson combines to float rounding).
 
 pub mod patch;
 pub mod reference;
@@ -38,19 +51,63 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
-/// References kept per model before the least-recently-filled entries are
-/// dropped.  Fig-2-style studies recalibrate dozens of times, each with a
+/// References kept per model before the least-recently-used entry is
+/// evicted.  Fig-2-style studies recalibrate dozens of times, each with a
 /// fresh eval set; an unbounded cache would pin every old set's logits.
 const MAX_CACHED_REFERENCES: usize = 4;
 
+/// LRU cache of FP32 references keyed by [`EvalSet::id`].
+///
+/// Eviction is single-entry: when the cache is full, only the
+/// least-recently-used reference is dropped, so a hot reference (the set a
+/// sweep is actively probing) survives the churn of one-shot sets instead
+/// of being flushed wholesale.
+struct RefCache {
+    map: HashMap<u64, (u64, Rc<FpReference>)>,
+    clock: u64,
+}
+
+impl RefCache {
+    fn new() -> Self {
+        Self { map: HashMap::new(), clock: 0 }
+    }
+
+    fn get(&mut self, id: u64) -> Option<Rc<FpReference>> {
+        self.clock += 1;
+        let now = self.clock;
+        self.map.get_mut(&id).map(|e| {
+            e.0 = now;
+            e.1.clone()
+        })
+    }
+
+    fn insert(&mut self, id: u64, r: Rc<FpReference>) {
+        if self.map.len() >= MAX_CACHED_REFERENCES && !self.map.contains_key(&id) {
+            if let Some(evict) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(&k, _)| k)
+            {
+                self.map.remove(&evict);
+            }
+        }
+        self.clock += 1;
+        self.map.insert(id, (self.clock, r));
+    }
+}
+
 /// Per-[`ModelHandle`] engine state: the FP32 reference cache and the
 /// incremental config materializer.  Lives on the handle so the caches are
-/// shared by every [`Evaluator`], search and sensitivity sweep on the model.
+/// shared by every [`Evaluator`], search and sensitivity sweep on the model
+/// — and, in a [`crate::pool::EvalPool`], per worker: each worker's handle
+/// caches the references for *its shard* of each eval set, so a pooled
+/// reference build costs one full-set sweep split across the workers.
 pub struct HandleEngine {
     /// incremental packed-tensor materializer (row patching)
     pub mat: Materializer,
-    /// FP32 reference per eval set, keyed by [`EvalSet::id`]
-    refs: RefCell<HashMap<u64, Rc<FpReference>>>,
+    /// FP32 reference per eval set, keyed by [`EvalSet::id`] (LRU)
+    refs: RefCell<RefCache>,
     /// reference forward sweeps actually performed
     pub ref_builds: Cell<u64>,
     /// reference requests served from cache
@@ -61,7 +118,7 @@ impl HandleEngine {
     pub fn new(entry: &ModelEntry) -> Self {
         Self {
             mat: Materializer::new(entry),
-            refs: RefCell::new(HashMap::new()),
+            refs: RefCell::new(RefCache::new()),
             ref_builds: Cell::new(0),
             ref_hits: Cell::new(0),
         }
@@ -71,17 +128,13 @@ impl HandleEngine {
     /// first use.  The reference depends only on the trained weights, so it
     /// stays valid across recalibrations of the quantizer ranges.
     pub fn reference(&self, handle: &ModelHandle, set: &EvalSet) -> Result<Rc<FpReference>> {
-        if let Some(r) = self.refs.borrow().get(&set.id) {
+        if let Some(r) = self.refs.borrow_mut().get(set.id) {
             self.ref_hits.set(self.ref_hits.get() + 1);
-            return Ok(r.clone());
+            return Ok(r);
         }
         let r = Rc::new(FpReference::build(handle, set)?);
         self.ref_builds.set(self.ref_builds.get() + 1);
-        let mut refs = self.refs.borrow_mut();
-        if refs.len() >= MAX_CACHED_REFERENCES {
-            refs.clear();
-        }
-        refs.insert(set.id, r.clone());
+        self.refs.borrow_mut().insert(set.id, r.clone());
         Ok(r)
     }
 }
@@ -207,6 +260,44 @@ mod tests {
 
     fn key(bits: Option<u8>) -> QuantConfig {
         QuantConfig { act: vec![bits; 3], w: vec![bits; 2] }
+    }
+
+    fn dummy_ref() -> Rc<FpReference> {
+        Rc::new(FpReference { batches: vec![], sig_pow: vec![], shape: vec![0] })
+    }
+
+    /// Eviction must be least-recently-used and single-entry: a hot
+    /// reference survives a cache-filling insert; exactly one cold entry
+    /// (the LRU one) is dropped.
+    #[test]
+    fn reference_cache_evicts_single_lru_entry() {
+        let mut c = RefCache::new();
+        for id in 0..MAX_CACHED_REFERENCES as u64 {
+            c.insert(id, dummy_ref());
+        }
+        // touch 0 → hottest; 1 becomes the LRU entry
+        assert!(c.get(0).is_some());
+        c.insert(99, dummy_ref());
+        assert!(c.get(0).is_some(), "hot entry must survive eviction");
+        assert_eq!(c.map.len(), MAX_CACHED_REFERENCES);
+        assert!(c.get(1).is_none(), "the LRU entry is the one evicted");
+        for id in [2u64, 3, 99] {
+            assert!(c.get(id).is_some(), "entry {id} wrongly evicted");
+        }
+    }
+
+    #[test]
+    fn reference_cache_reinsert_does_not_evict() {
+        let mut c = RefCache::new();
+        for id in 0..MAX_CACHED_REFERENCES as u64 {
+            c.insert(id, dummy_ref());
+        }
+        // overwriting a resident id must not push anything out
+        c.insert(0, dummy_ref());
+        assert_eq!(c.map.len(), MAX_CACHED_REFERENCES);
+        for id in 0..MAX_CACHED_REFERENCES as u64 {
+            assert!(c.get(id).is_some());
+        }
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! baseline rows and a per-`(quantizer, bits)` activation-row cache, so
 //! materializing any configuration is a memcpy of the baseline plus patches
 //! for only the quantized rows.
+//!
+//! In an [`crate::pool::EvalPool`] each worker owns a private materializer
+//! (on its handle's `HandleEngine`): the row caches sit behind `RefCell`
+//! and never cross threads.  The per-worker `(quantizer, bits)` row caches
+//! warm independently — at most `A × bits` cheap argmin recomputations per
+//! worker, amortized over the whole sweep — and a `Calibrate` message
+//! invalidates them exactly like a local recalibration does.
 
 use crate::manifest::ModelEntry;
 use crate::model::{ModelHandle, QuantConfig};

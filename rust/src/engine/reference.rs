@@ -14,7 +14,7 @@ use crate::model::{EvalSet, ModelHandle, QuantConfig};
 use crate::tensor::Tensor;
 use crate::util::db10;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// The FP32 reference over one eval set: per-batch logits plus per-sample
 /// signal power.
@@ -84,13 +84,21 @@ fn per_sample_power(t: &Tensor) -> Result<Vec<f64>> {
 
 /// Batch-by-batch accumulator for the network-output SQNR (Eq. 3-4).
 ///
-/// Numerically identical to [`crate::sensitivity::sqnr_db`] on the
-/// concatenated logits — same per-sample terms in the same summation order —
-/// without ever materializing the concatenation.
+/// Partial sums are kept **per batch**, keyed by the batch's global index
+/// in the eval set, and [`Self::db`] reduces them in index order.  That
+/// makes the accumulator mergeable across eval-set shards with a *bit-exact*
+/// guarantee: an [`crate::pool::EvalPool`] worker computes the same per-batch
+/// partials as the serial path and [`Self::merge`] reassembles them into the
+/// same ordered final summation, so any sharding — including none — produces
+/// the identical `f64`.  Numerically it matches
+/// [`crate::sensitivity::sqnr_db`] on the concatenated logits up to the
+/// batch-partial association, without ever materializing the concatenation.
 #[derive(Default)]
 pub struct StreamingSqnr {
-    acc: f64,
-    n: usize,
+    /// global batch index → `(Σ_i sig_i/err_i over the batch, samples)`
+    parts: BTreeMap<u64, (f64, usize)>,
+    /// next implicit index for [`Self::push`]
+    seq: u64,
 }
 
 impl StreamingSqnr {
@@ -98,9 +106,16 @@ impl StreamingSqnr {
         Self::default()
     }
 
-    /// Fold in one batch: `fp` and `q` are same-shape logits, `sig_pow` the
-    /// cached per-sample `Σ F²` for this batch.
+    /// Fold in the next batch in eval-set order: `fp` and `q` are same-shape
+    /// logits, `sig_pow` the cached per-sample `Σ F²` for this batch.
     pub fn push(&mut self, fp: &Tensor, sig_pow: &[f64], q: &Tensor) -> Result<()> {
+        let idx = self.seq;
+        self.push_at(idx, fp, sig_pow, q)
+    }
+
+    /// Fold in the batch at *global* eval-set index `idx` — pool workers use
+    /// this so a shard's partials land at their set-wide positions.
+    pub fn push_at(&mut self, idx: u64, fp: &Tensor, sig_pow: &[f64], q: &Tensor) -> Result<()> {
         if fp.shape != q.shape || fp.shape.is_empty() {
             bail!("sqnr shape mismatch {:?} vs {:?}", fp.shape, q.shape);
         }
@@ -110,21 +125,47 @@ impl StreamingSqnr {
         }
         let stride = fp.numel() / bsz;
         let (a, b) = (fp.f32s()?, q.f32s()?);
+        let mut acc = 0f64;
         for i in 0..bsz {
             let mut err = 0f64;
             for j in i * stride..(i + 1) * stride {
                 let e = a[j] as f64 - b[j] as f64;
                 err += e * e;
             }
-            self.acc += sig_pow[i] / err.max(1e-30);
+            acc += sig_pow[i] / err.max(1e-30);
         }
-        self.n += bsz;
+        if self.parts.contains_key(&idx) {
+            bail!("sqnr batch index {idx} pushed twice");
+        }
+        self.parts.insert(idx, (acc, bsz));
+        self.seq = self.seq.max(idx + 1);
         Ok(())
     }
 
-    /// `10·log10((1/N)·Σ_i sig_i/err_i)` over everything pushed so far.
+    /// Fold another accumulator (a disjoint set of batch indices) into this
+    /// one.  Index sets must not overlap — a batch measured twice is a
+    /// sharding bug, not a bigger sample.
+    pub fn merge(&mut self, other: &StreamingSqnr) -> Result<()> {
+        if let Some(dup) = other.parts.keys().find(|k| self.parts.contains_key(k)) {
+            bail!("sqnr merge: batch index {dup} present in both shards");
+        }
+        for (&idx, &part) in &other.parts {
+            self.parts.insert(idx, part);
+        }
+        self.seq = self.seq.max(other.seq);
+        Ok(())
+    }
+
+    /// `10·log10((1/N)·Σ_i sig_i/err_i)` over everything pushed so far,
+    /// reduced in global batch order.
     pub fn db(&self) -> f64 {
-        db10(self.acc / self.n.max(1) as f64)
+        let mut acc = 0f64;
+        let mut n = 0usize;
+        for &(a, bn) in self.parts.values() {
+            acc += a;
+            n += bn;
+        }
+        db10(acc / n.max(1) as f64)
     }
 }
 
@@ -183,6 +224,48 @@ mod tests {
         let sig = vec![0.0; 2];
         assert!(StreamingSqnr::new().push(&a, &sig, &b).is_err());
         assert!(StreamingSqnr::new().push(&a, &sig[..1], &a).is_err());
+    }
+
+    /// Shard-merged accumulators must be *bit-identical* to one accumulator
+    /// pushed serially — the pool's exactness guarantee.
+    #[test]
+    fn merged_shards_are_bit_identical_to_serial() {
+        let mut rng = Rng::new(97);
+        let (n, c, bsz) = (24usize, 6usize, 4usize);
+        let (fp, q) = random_pair(&mut rng, n, c);
+        let mut serial = StreamingSqnr::new();
+        // three shards with uneven batch counts, like a real pool split
+        let mut shards: Vec<StreamingSqnr> =
+            (0..3).map(|_| StreamingSqnr::new()).collect();
+        for (bi, start) in (0..n).step_by(bsz).enumerate() {
+            let fb = fp.slice_rows(start, bsz).unwrap();
+            let qb = q.slice_rows(start, bsz).unwrap();
+            let sig = per_sample_power(&fb).unwrap();
+            serial.push(&fb, &sig, &qb).unwrap();
+            let shard = if bi < 1 { 0 } else if bi < 4 { 1 } else { 2 };
+            shards[shard].push_at(bi as u64, &fb, &sig, &qb).unwrap();
+        }
+        // merge in *reverse* shard order — the BTreeMap restores batch order
+        let mut merged = StreamingSqnr::new();
+        for s in shards.iter().rev() {
+            merged.merge(s).unwrap();
+        }
+        assert_eq!(merged.db().to_bits(), serial.db().to_bits());
+    }
+
+    #[test]
+    fn merge_rejects_overlapping_batches() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let sig = per_sample_power(&t).unwrap();
+        let mut a = StreamingSqnr::new();
+        let mut b = StreamingSqnr::new();
+        a.push_at(3, &t, &sig, &t).unwrap();
+        b.push_at(3, &t, &sig, &t).unwrap();
+        assert!(a.merge(&b).is_err());
+        assert!(a.push_at(3, &t, &sig, &t).is_err());
+        // plain push continues past the highest explicit index
+        a.push(&t, &sig, &t).unwrap();
+        assert!(a.push_at(4, &t, &sig, &t).is_err());
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct Opts {
     pub models: Option<Vec<String>>,
     /// shrink workloads (CI / smoke): fewer seeds, smaller val subsets
     pub fast: bool,
+    /// evaluation-pool width (`--workers`); > 1 attaches an
+    /// [`crate::pool::EvalPool`] to every pipeline the drivers open.
+    /// Defaults to the host's available parallelism.
+    pub workers: usize,
 }
 
 impl Default for Opts {
@@ -42,6 +46,7 @@ impl Default for Opts {
             seed: 0,
             models: None,
             fast: std::env::var_os("MPQ_FAST").is_some(),
+            workers: crate::util::default_workers(),
         }
     }
 }
@@ -51,11 +56,24 @@ impl Opts {
     pub fn val_n(&self) -> usize {
         if self.fast { 512 } else { 1024 }
     }
+
+    /// On-disk Phase-1 sensitivity cache directory for the drivers:
+    /// `<artifacts>/sens_cache` by default, a path in `MPQ_SENS_CACHE`
+    /// overrides, `MPQ_SENS_CACHE=0` disables.
+    pub fn sens_cache_dir(&self) -> Option<std::path::PathBuf> {
+        match std::env::var("MPQ_SENS_CACHE") {
+            Ok(v) if v == "0" => None,
+            Ok(v) if !v.is_empty() && v != "1" => Some(std::path::PathBuf::from(v)),
+            _ => Some(self.dir.join("sens_cache")),
+        }
+    }
 }
 
 pub struct Env {
     pub manifest: Manifest,
     pub rt: Rc<Runtime>,
+    workers: usize,
+    sens_cache: Option<std::path::PathBuf>,
 }
 
 impl Env {
@@ -63,11 +81,18 @@ impl Env {
         Ok(Self {
             manifest: Manifest::load(&opts.dir)?,
             rt: Rc::new(Runtime::cpu()?),
+            workers: opts.workers,
+            sens_cache: opts.sens_cache_dir(),
         })
     }
 
     pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
-        Pipeline::open_with(self.rt.clone(), &self.manifest, model)
+        let mut pipe = Pipeline::open_with(self.rt.clone(), &self.manifest, model)?;
+        if self.workers > 1 {
+            pipe.enable_pool(self.workers)?;
+        }
+        pipe.set_sens_cache_dir(self.sens_cache.clone());
+        Ok(pipe)
     }
 
     /// Models that exist in the manifest, intersected with a default list
@@ -118,6 +143,15 @@ const CNN_MODELS: &[&str] = &[
     "deeplab_s",
 ];
 
+/// One-line per-model accounting appended to driver progress output: the
+/// on-disk sensitivity-cache hit/miss counters (ROADMAP asks reports to
+/// carry them) and the evaluation-pool width in use.
+fn pipe_note(pipe: &Pipeline) -> String {
+    let (h, m) = pipe.sens_cache_stats();
+    let w = pipe.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
+    format!("sens-cache {h}h/{m}m, pool w={w}")
+}
+
 /// MP at a BOPs budget via SQNR Phase 1 (the paper's standard pipeline).
 fn mp_at_budget(pipe: &mut Pipeline, lattice: &Lattice, budget: f64) -> Result<SearchRun> {
     let sens = pipe.sensitivity_sqnr(lattice)?;
@@ -155,7 +189,7 @@ pub fn table1(opts: &Opts) -> Result<Table> {
             f4(w6a8),
             format!("{} (r={})", f4(mp375.final_metric), f3(mp375.final_rel_bops)),
         ]);
-        println!("[table1] {m} done");
+        println!("[table1] {m} done ({})", pipe_note(&pipe));
     }
     Ok(t)
 }
@@ -190,7 +224,7 @@ pub fn table2(opts: &Opts) -> Result<Table> {
             f4(w4a8),
             format!("{} (r={})", f4(mp25.final_metric), f3(mp25.final_rel_bops)),
         ]);
-        println!("[table2] {m} done");
+        println!("[table2] {m} done ({})", pipe_note(&pipe));
     }
     Ok(t)
 }
@@ -222,7 +256,7 @@ pub fn table3(opts: &Opts) -> Result<Table> {
             f4(w8a8),
             format!("{} (r={})", f4(run.final_metric), f3(run.final_rel_bops)),
         ]);
-        println!("[table3] {m} done");
+        println!("[table3] {m} done ({})", pipe_note(&pipe));
     }
     Ok(t)
 }
@@ -272,7 +306,7 @@ pub fn table4(opts: &Opts) -> Result<Table> {
             f4(w6a8),
             format!("{} (r={})", f4(mp375.final_metric), f3(mp375.final_rel_bops)),
         ]);
-        println!("[table4] {m} done");
+        println!("[table4] {m} done ({})", pipe_note(&pipe));
     }
     Ok(t)
 }
@@ -331,10 +365,11 @@ pub fn table5(opts: &Opts) -> Result<Table> {
             ]);
         }
         println!(
-            "[table5] {m} done (fwd_calls={} ref_builds={} ref_hits={})",
+            "[table5] {m} done (fwd_calls={} ref_builds={} ref_hits={}, {})",
             pipe.model.fwd_calls.borrow(),
             pipe.model.engine.ref_builds.get(),
-            pipe.model.engine.ref_hits.get()
+            pipe.model.engine.ref_hits.get(),
+            pipe_note(&pipe)
         );
     }
     Ok(t)
@@ -420,7 +455,7 @@ pub fn fig2(opts: &Opts) -> Result<(Table, Table)> {
             let tau = kendall_tau(&canon(&sens), &gt_scores);
             ktau.row(vec![mname.into(), n.to_string(), f3(tau)]);
         }
-        println!("[fig2] metric {mname} done");
+        println!("[fig2] metric {mname} done ({})", pipe_note(&pipe));
     }
     Ok((curves, ktau))
 }
@@ -452,7 +487,7 @@ pub fn fig3(opts: &Opts) -> Result<Table> {
             format!("{:.1}", q(1.0)),
             format!("{:.1}", q(1.0) - q(0.0)),
         ]);
-        println!("[fig3] {m} done");
+        println!("[fig3] {m} done ({})", pipe_note(&pipe));
     }
     Ok(t)
 }
@@ -557,7 +592,7 @@ pub fn fig5(opts: &Opts) -> Result<Table> {
             .collect();
         t.row(vec![name.into(), pts.join(" ")]);
     }
-    println!("[fig5] {model} done");
+    println!("[fig5] {model} done ({})", pipe_note(&pipe));
     print_curves(&t, 1, "rel BOPs", "metric");
     Ok(t)
 }

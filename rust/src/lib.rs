@@ -14,7 +14,10 @@
 //!   `(model, eval-set)`, batch-streamed SQNR/task metrics (no host logit
 //!   concatenation), per-configuration memoization with hit counters next
 //!   to `fwd_calls`, and packed quant-param tensors row-patched from a
-//!   cached baseline.
+//!   cached baseline.  The [`pool`] scales that service horizontally: N
+//!   worker threads, each with a private PJRT client and an eval-set
+//!   shard, evaluate probes in parallel with results bit-identical to the
+//!   serial path (`--workers N` on the CLI).
 //! * **L2** — the model zoo, lowered once by `python/compile/aot.py` to
 //!   HLO-text artifacts whose quantizer parameters are *runtime inputs*.
 //! * **L1** — Pallas fake-quant kernels inside those artifacts.
@@ -50,6 +53,7 @@ pub mod jsonio;
 pub mod manifest;
 pub mod metrics;
 pub mod model;
+pub mod pool;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -10,7 +10,8 @@
 //! ```
 //!
 //! Common flags: `--artifacts DIR`, `--calib N`, `--seed S`,
-//! `--models a,b,c`, `--fast`, `--budget R`, `--lattice practical|expanded`.
+//! `--models a,b,c`, `--fast`, `--budget R`, `--lattice practical|expanded`,
+//! `--workers N` (evaluation-pool width, default = host parallelism).
 
 use anyhow::{bail, Result};
 use mpq::cli::Args;
@@ -28,6 +29,7 @@ fn opts_from(args: &Args) -> Result<Opts> {
     o.calib_n = args.opt_usize("calib", o.calib_n)?;
     o.seed = args.opt_u64("seed", o.seed)?;
     o.fast = o.fast || args.flag("fast");
+    o.workers = args.opt_workers()?;
     if let Some(ms) = args.opt("models") {
         o.models = Some(ms.split(',').map(String::from).collect());
     }
@@ -70,6 +72,10 @@ fn main() -> Result<()> {
             let lat = lattice_from(&args)?;
             let budget = args.opt_f64("budget", 0.5)?;
             let mut pipe = Pipeline::open(&opts.dir, model)?;
+            if opts.workers > 1 {
+                pipe.enable_pool(opts.workers)?;
+            }
+            pipe.set_sens_cache_dir(opts.sens_cache_dir());
             pipe.calibrate(opts.calib_n, opts.seed)?;
             let fp = pipe.eval_fp32()?;
             let run = pipe.mixed_precision_for_budget(&lat, budget)?;
@@ -88,6 +94,10 @@ fn main() -> Result<()> {
             let model = args.opt("model").unwrap_or("resnet_s");
             let lat = lattice_from(&args)?;
             let mut pipe = Pipeline::open(&opts.dir, model)?;
+            if opts.workers > 1 {
+                pipe.enable_pool(opts.workers)?;
+            }
+            pipe.set_sens_cache_dir(opts.sens_cache_dir());
             pipe.calibrate(opts.calib_n, opts.seed)?;
             let sens = pipe.sensitivity_sqnr(&lat)?;
             println!("{:<8} {:<8} {:>10}", "group", "cand", "Ω (dB)");
@@ -135,6 +145,8 @@ fn main() -> Result<()> {
             println!("usage: mpq <list|run|sensitivity|table1..table5|fig2..fig5|all> [flags]");
             println!("flags: --artifacts DIR --model M --models a,b --calib N --seed S");
             println!("       --budget R --lattice practical|practical_no16|expanded --fast");
+            println!("       --workers N  parallel eval-pool width (default: host parallelism;");
+            println!("                    1 = serial single-client path)");
         }
     }
     Ok(())

@@ -241,11 +241,53 @@ impl StreamingTaskMetric {
             Self::Miou { classes, inter, union } => miou_from_counts(*classes, inter, union),
         }
     }
+
+    /// Fold another accumulator — fed a *disjoint shard* of the same eval
+    /// set — into this one, so per-worker partials reduce to the full-set
+    /// metric ([`crate::pool::EvalPool`] merges shard partials in shard
+    /// order).
+    ///
+    /// Exactness: the counting metrics (top-1, F1, mIoU) accumulate integer
+    /// counts, so the merged result is *bit-identical* to single-pass
+    /// accumulation regardless of how the set was sharded.  The Pearson head
+    /// combines Welford states ([`PearsonAccum::merge`]), which matches the
+    /// single-pass result to float rounding (same caveat [`task_metric`]
+    /// already documents for streaming).
+    pub fn merge(&mut self, other: &StreamingTaskMetric) -> Result<()> {
+        match (self, other) {
+            (Self::Top1 { hits, n }, Self::Top1 { hits: h2, n: n2 }) => {
+                *hits += *h2;
+                *n += *n2;
+            }
+            (Self::F1 { tp, fp, fnn }, Self::F1 { tp: a, fp: b, fnn: c }) => {
+                *tp += *a;
+                *fp += *b;
+                *fnn += *c;
+            }
+            (Self::Pearson(p), Self::Pearson(q)) => p.merge(q),
+            (
+                Self::Miou { classes, inter, union },
+                Self::Miou { classes: c2, inter: i2, union: u2 },
+            ) => {
+                if *classes != *c2 {
+                    bail!("miou merge: {} classes vs {}", classes, c2);
+                }
+                for (x, y) in inter.iter_mut().zip(i2) {
+                    *x += *y;
+                }
+                for (x, y) in union.iter_mut().zip(u2) {
+                    *x += *y;
+                }
+            }
+            _ => bail!("cannot merge task accumulators of different tasks"),
+        }
+        Ok(())
+    }
 }
 
 /// Single-pass Pearson correlation via Welford-style co-moment updates —
 /// numerically stable without a second pass over the predictions.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct PearsonAccum {
     n: f64,
     mx: f64,
@@ -265,6 +307,29 @@ impl PearsonAccum {
         self.m2x += dx * (x - self.mx);
         self.cxy += dx * (y - self.my);
         self.m2y += dy * (y - self.my);
+    }
+
+    /// Combine with another accumulator over a disjoint sample set
+    /// (Chan et al. parallel co-moment update).  Equal to pushing the other
+    /// accumulator's samples one-by-one up to float rounding.
+    pub fn merge(&mut self, o: &PearsonAccum) {
+        if o.n == 0.0 {
+            return;
+        }
+        if self.n == 0.0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let dx = o.mx - self.mx;
+        let dy = o.my - self.my;
+        let w = self.n * o.n / n;
+        self.m2x += o.m2x + dx * dx * w;
+        self.m2y += o.m2y + dy * dy * w;
+        self.cxy += o.cxy + dx * dy * w;
+        self.mx += dx * o.n / n;
+        self.my += dy * o.n / n;
+        self.n = n;
     }
 
     pub fn r(&self) -> f64 {
@@ -301,29 +366,106 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Kendall-τ (τ-a) rank correlation — Fig. 2(d)'s sensitivity-list quality
-/// score.  O(n²), fine for lists of ≤ a few hundred quantizers.
+/// score.
+///
+/// O(n log n) via Knight's algorithm (Knight 1966): sort by `(a, b)`, count
+/// strict inversions of the `b` sequence with a merge sort (each inversion
+/// is exactly one strictly discordant pair), and correct for ties, which
+/// are neither concordant nor discordant (standard τ-a):
+///
+/// `C − D = n0 − n1 − n2 + n3 − 2·inversions`
+///
+/// with `n0` all pairs, `n1`/`n2` pairs tied in `a`/`b`, `n3` pairs tied in
+/// both.  The counts are exact integers, so on tie-free data the result is
+/// bit-identical to the quadratic pair scan this replaced.  On ties it
+/// *fixes* that scan: `f64::signum(+0.0) == 1.0`, so the old code counted
+/// a tied pair as concordant or discordant depending on element order —
+/// here tied pairs contribute zero, matching Kendall's definition.
+/// Comparisons use IEEE total order, so NaN scores sort deterministically
+/// as their own value class instead of silently dropping pairs.
 pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     let n = a.len();
     if n < 2 {
         return 0.0;
     }
-    let mut conc = 0i64;
-    let mut disc = 0i64;
-    for i in 0..n {
-        for j in i + 1..n {
-            let sx = (a[i] - a[j]).signum();
-            let sy = (b[i] - b[j]).signum();
-            let prod = sx * sy;
-            if prod > 0.0 {
-                conc += 1;
-            } else if prod < 0.0 {
-                disc += 1;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| a[i].total_cmp(&a[j]).then(b[i].total_cmp(&b[j])));
+
+    let pairs = |t: u64| t * t.saturating_sub(1) / 2;
+    // n1 (ties in a) and n3 (joint ties): groups are contiguous after the
+    // (a, b) sort.
+    let (mut n1, mut n3) = (0u64, 0u64);
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && a[idx[j]].total_cmp(&a[idx[i]]).is_eq() {
+            j += 1;
+        }
+        n1 += pairs((j - i) as u64);
+        let mut k = i;
+        while k < j {
+            let mut l = k + 1;
+            while l < j && b[idx[l]].total_cmp(&b[idx[k]]).is_eq() {
+                l += 1;
             }
+            n3 += pairs((l - k) as u64);
+            k = l;
+        }
+        i = j;
+    }
+
+    // b in a-sorted order; the merge sort counts inversions and leaves the
+    // slice sorted, which the n2 (ties in b) pass reuses.
+    let mut bs: Vec<f64> = idx.iter().map(|&i| b[i]).collect();
+    let mut buf = bs.clone();
+    let inversions = sort_count_inversions(&mut bs, &mut buf);
+    let mut n2 = 0u64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && bs[j].total_cmp(&bs[i]).is_eq() {
+            j += 1;
+        }
+        n2 += pairs((j - i) as u64);
+        i = j;
+    }
+
+    let n0 = pairs(n as u64);
+    let num = n0 as i128 - n1 as i128 - n2 as i128 + n3 as i128 - 2 * inversions as i128;
+    num as f64 / n0 as f64
+}
+
+/// Merge sort `v` ascending (IEEE total order), returning the number of
+/// strict inversions (`i < j` with `v[i] > v[j]`).  `buf` is scratch of the
+/// same length.
+fn sort_count_inversions(v: &mut [f64], buf: &mut [f64]) -> u64 {
+    let n = v.len();
+    if n < 2 {
+        return 0;
+    }
+    let mid = n / 2;
+    let mut inv = {
+        let (vl, vr) = v.split_at_mut(mid);
+        let (bl, br) = buf.split_at_mut(mid);
+        sort_count_inversions(vl, bl) + sort_count_inversions(vr, br)
+    };
+    let (mut i, mut j) = (0usize, mid);
+    for slot in buf[..n].iter_mut() {
+        if i < mid && (j >= n || !v[i].total_cmp(&v[j]).is_gt()) {
+            *slot = v[i];
+            i += 1;
+        } else {
+            if i < mid {
+                // v[j] jumps ahead of every remaining left element
+                inv += (mid - i) as u64;
+            }
+            *slot = v[j];
+            j += 1;
         }
     }
-    let total = (n * (n - 1) / 2) as f64;
-    (conc - disc) as f64 / total
+    v.copy_from_slice(&buf[..n]);
+    inv
 }
 
 fn argmax(row: &[f32]) -> usize {
@@ -460,6 +602,145 @@ mod tests {
             acc.push(*x, *y);
         }
         assert!((acc.r() - pearson(&a, &b)).abs() < 1e-12);
+    }
+
+    /// Quadratic τ-a oracle with standard tie handling — tied pairs
+    /// contribute nothing.  On tie-free data this is exactly the signum
+    /// pair scan `kendall_tau` replaced; on ties it is what that scan
+    /// *should* have computed (`signum(+0.0) == 1.0` made the old code's
+    /// tied pairs count as ±1 depending on element order).
+    fn kendall_tau_naive(a: &[f64], b: &[f64]) -> f64 {
+        use std::cmp::Ordering;
+        let n = a.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let sign = |x: f64, y: f64| match x.partial_cmp(&y) {
+            Some(Ordering::Greater) => 1i64,
+            Some(Ordering::Less) => -1,
+            _ => 0,
+        };
+        let mut num = 0i64;
+        for i in 0..n {
+            for j in i + 1..n {
+                num += sign(a[i], a[j]) * sign(b[i], b[j]);
+            }
+        }
+        num as f64 / (n * (n - 1) / 2) as f64
+    }
+
+    #[test]
+    fn kendall_tau_matches_naive_with_ties() {
+        let mut rng = crate::util::Rng::new(0xBEEF);
+        for n in [2usize, 3, 5, 17, 64, 257] {
+            // coarse grid → plenty of ties in both lists
+            let a: Vec<f64> = (0..n).map(|_| rng.below(7) as f64).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.below(5) as f64).collect();
+            let fast = kendall_tau(&a, &b);
+            let naive = kendall_tau_naive(&a, &b);
+            assert_eq!(fast.to_bits(), naive.to_bits(), "n={n}: {fast} vs {naive}");
+            // continuous scores (no ties)
+            let c: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let d: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            assert_eq!(kendall_tau(&c, &d).to_bits(), kendall_tau_naive(&c, &d).to_bits());
+        }
+    }
+
+    #[test]
+    fn kendall_tau_degenerate() {
+        assert_eq!(kendall_tau(&[], &[]), 0.0);
+        assert_eq!(kendall_tau(&[1.0], &[2.0]), 0.0);
+        // all-tied lists: every pair is a joint tie → τ = 0
+        assert_eq!(kendall_tau(&[3.0; 8], &[5.0; 8]), 0.0);
+    }
+
+    /// Shard-merged accumulators must reproduce the single-pass metric —
+    /// exactly for the counting metrics, to float rounding for Pearson.
+    #[test]
+    fn merged_shards_match_single_pass() {
+        let mut rng = crate::util::Rng::new(33);
+        let n = 24usize;
+        let bsz = 4usize;
+        for task in ["classify10", "glue:mrpc_s", "glue:stsb_s", "seg"] {
+            let (logits, labels) = match task {
+                "seg" => {
+                    let (c, h, w) = (3usize, 2usize, 2usize);
+                    let lv: Vec<f32> =
+                        (0..n * c * h * w).map(|_| rng.f64() as f32).collect();
+                    let yv: Vec<i32> =
+                        (0..n * h * w).map(|_| rng.below(c) as i32).collect();
+                    (
+                        Tensor::from_f32(&[n, c, h, w], lv).unwrap(),
+                        Tensor::from_i32(&[n, h, w], yv).unwrap(),
+                    )
+                }
+                "glue:stsb_s" => {
+                    let lv: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 5.0).collect();
+                    let yv: Vec<f32> = lv.iter().map(|&x| x + rng.f64() as f32).collect();
+                    (
+                        Tensor::from_f32(&[n, 1], lv).unwrap(),
+                        Tensor::from_f32(&[n], yv).unwrap(),
+                    )
+                }
+                _ => {
+                    let c = if task == "classify10" { 10 } else { 2 };
+                    let lv: Vec<f32> = (0..n * c).map(|_| rng.f64() as f32).collect();
+                    let yv: Vec<f32> = (0..n).map(|_| rng.below(c) as f32).collect();
+                    (
+                        Tensor::from_f32(&[n, c], lv).unwrap(),
+                        Tensor::from_f32(&[n], yv).unwrap(),
+                    )
+                }
+            };
+            let mut single = StreamingTaskMetric::new(task).unwrap();
+            // three shards of 1, 2 and 3 batches — uneven like a real pool
+            let mut shards: Vec<StreamingTaskMetric> =
+                (0..3).map(|_| StreamingTaskMetric::new(task).unwrap()).collect();
+            for (bi, start) in (0..n).step_by(bsz).enumerate() {
+                let lb = logits.slice_rows(start, bsz).unwrap();
+                let yb = labels.slice_rows(start, bsz).unwrap();
+                single.push(&lb, &yb).unwrap();
+                let shard = if bi < 1 { 0 } else if bi < 3 { 1 } else { 2 };
+                shards[shard].push(&lb, &yb).unwrap();
+            }
+            let mut merged = StreamingTaskMetric::new(task).unwrap();
+            for s in &shards {
+                merged.merge(s).unwrap();
+            }
+            let (got, want) = (merged.finalize(), single.finalize());
+            if task == "glue:stsb_s" {
+                assert!((got - want).abs() < 1e-12, "{task}: {got} vs {want}");
+            } else {
+                assert_eq!(got.to_bits(), want.to_bits(), "{task}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_tasks() {
+        let mut a = StreamingTaskMetric::new("classify10").unwrap();
+        let b = StreamingTaskMetric::new("glue:mrpc_s").unwrap();
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn pearson_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..60).map(|i| (i as f64) * 0.7 - 3.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.4 * x + (x * 3.0).cos()).collect();
+        let mut full = PearsonAccum::default();
+        let mut left = PearsonAccum::default();
+        let mut right = PearsonAccum::default();
+        for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+            full.push(x, y);
+            if i < 23 { left.push(x, y) } else { right.push(x, y) }
+        }
+        let mut merged = PearsonAccum::default();
+        merged.merge(&left); // merge into empty = copy
+        merged.merge(&right);
+        assert!((merged.r() - full.r()).abs() < 1e-12);
+        // merging an empty accumulator is a no-op
+        merged.merge(&PearsonAccum::default());
+        assert!((merged.r() - full.r()).abs() < 1e-12);
     }
 
     #[test]

@@ -55,6 +55,15 @@ pub type WeightOverrides = HashMap<usize, Tensor>;
 
 /// A batched, device-resident evaluation set (inputs only; labels stay on
 /// the host for metric computation).
+///
+/// **Truncation contract:** the lowered executables have a *static* batch
+/// dimension, so a dataset whose length is not a multiple of
+/// [`ModelEntry::batch`] is truncated to `⌊len/batch⌋·batch` samples — the
+/// ragged tail is dropped, never padded (padding would perturb batch-norm
+/// statistics and metric counts).  `n` always reports the truncated count
+/// and `labels` holds exactly `n` rows, so metrics stay consistent with
+/// what actually ran; callers that must score every sample size their
+/// subsets as batch multiples (see `DataSet::batches`).
 pub struct EvalSet {
     /// process-unique identity — the engine's FP-reference cache key
     pub id: u64,
@@ -189,6 +198,9 @@ impl ModelHandle {
     // -- eval sets -----------------------------------------------------------
 
     /// Upload a dataset subset as device batches.
+    ///
+    /// A trailing partial batch is dropped per the [`EvalSet`] truncation
+    /// contract; `n` and `labels` reflect the truncated sample count.
     pub fn eval_set(&self, ds: &DataSet) -> Result<EvalSet> {
         let batch = self.entry.batch;
         let xs = ds.batches(batch)?;
@@ -207,6 +219,34 @@ impl ModelHandle {
             n,
             batch,
         })
+    }
+
+    /// Upload an explicit list of pre-batched inputs plus their aligned
+    /// labels — an [`crate::pool::EvalPool`] worker's shard of a larger
+    /// set.  Unlike [`Self::eval_set`] an *empty* shard is legal (a pool
+    /// with more workers than batches); probe code skips it.
+    pub fn eval_set_shard(&self, batches: &[Tensor], labels: Tensor) -> Result<EvalSet> {
+        let batch = self.entry.batch;
+        for t in batches {
+            if t.shape.first().copied() != Some(batch) {
+                bail!(
+                    "shard batch has leading dim {:?}, want {batch}",
+                    t.shape.first()
+                );
+            }
+        }
+        let n = batches.len() * batch;
+        if labels.shape.first().copied().unwrap_or(0) != n {
+            bail!(
+                "shard labels have {} rows, want {n}",
+                labels.shape.first().copied().unwrap_or(0)
+            );
+        }
+        let bufs = batches
+            .iter()
+            .map(|t| self.rt.buffer(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EvalSet { id: next_eval_set_id(), batches: bufs, labels, n, batch })
     }
 
     /// Device batches for raw inputs with no labels (OOD calibration).

@@ -1,0 +1,686 @@
+//! The evaluation pool — N worker threads, each owning a **private** PJRT
+//! client, turning the single-client evaluation service into a horizontally
+//! scalable one.
+//!
+//! ## Why a pool of whole clients
+//!
+//! `xla::PjRtClient` (and everything hanging off it: compiled executables,
+//! device buffers, `Rc`-shared runtime state) is not `Send`, so PJRT state
+//! can never cross a thread boundary.  `util::par_map` therefore only ever
+//! covered pure host math, and after the engine (PR 1) removed the
+//! redundant work, Phase-1 sweeps and Phase-2 searches were compute-bound
+//! on one single-threaded client.  [`EvalPool`] sidesteps the `!Send` wall
+//! by *replication*: each worker thread builds its own [`Runtime`], its own
+//! [`ModelHandle`] (compiled forward executable + device-resident trained
+//! parameters) and uploads its own **shard** of each eval set.  Only host
+//! data crosses the channels: [`QuantConfig`]s, override [`Tensor`]s,
+//! calibration state in, streaming-accumulator partials out.
+//!
+//! ## Execution model
+//!
+//! Work is submitted at **probe granularity** ([`EvalPool::submit`] /
+//! [`EvalPool::map_probes`]): one probe = one `(config, overrides)`
+//! evaluation over one registered eval set.  Internally every probe fans
+//! out to *all* workers — each evaluates the config on its shard and
+//! returns a partial accumulator — and the pool reduces the partials.
+//! Sharding (rather than probe-per-worker placement) parallelizes both the
+//! embarrassingly parallel Phase-1 sweep *and* the inherently sequential
+//! Phase-2 searches, whose next prefix depends on the previous metric.
+//! Probes pipeline: a whole sweep is enqueued at once and each worker
+//! drains its queue at its own pace.
+//!
+//! ## Exactness guarantee
+//!
+//! Pool results are **bit-identical** to the serial path for SQNR and the
+//! counting task metrics, for any worker count:
+//!
+//! * shards are contiguous batch ranges, and each worker computes exactly
+//!   the per-batch partial sums the serial path computes;
+//! * [`StreamingSqnr`] keys partials by *global* batch index and reduces in
+//!   index order, so the final summation has the same operands in the same
+//!   order regardless of sharding;
+//! * top-1 / F1 / mIoU partials are integer counts — order-free.
+//!
+//! The one documented exception is the Pearson (STS-B) head, whose Welford
+//! states combine to the serial value up to float rounding.
+//!
+//! ## Pool-aware caches
+//!
+//! * **Memo** — the pool memoizes finished probes by
+//!   `(set, kind, config, override-digest)`, so a probe measured by any
+//!   worker is served from cache for all subsequent submitters, across
+//!   Phase-1 sweeps and Phase-2 runs alike.  [`EvalPool::set_calibration`]
+//!   and re-loading a set invalidate the affected entries.
+//! * **FP reference** — each worker's `HandleEngine` caches the FP32
+//!   reference for *its shard*, so one full-set reference build costs a
+//!   single sweep split across the workers ([`EvalPool::build_references`]
+//!   triggers it eagerly; a first SQNR probe triggers it lazily).
+
+use crate::data::DataSet;
+use crate::engine::StreamingSqnr;
+use crate::manifest::Manifest;
+use crate::metrics::StreamingTaskMetric;
+use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use crate::quant::ActRanges;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Identifies a registered eval set within the pool.
+pub type SetKey = u64;
+
+/// Conventional key for the calibration set (Phase 1).
+pub const CALIB_SET: SetKey = 0;
+/// Conventional key for the validation set (Phase 2).
+pub const VAL_SET: SetKey = 1;
+
+/// What a probe measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProbeKind {
+    /// Network-output SQNR vs the cached FP32 reference (Eq. 3).
+    Sqnr,
+    /// The model's task metric (top-1 / F1 / Pearson / mIoU).
+    Metric,
+}
+
+/// Host-only request shipped to a worker.  Everything here is `Send`; no
+/// PJRT state ever crosses the channel.
+enum Request {
+    /// Install calibrated quantizer state (host data) on the worker's handle.
+    Calibrate {
+        ranges: ActRanges,
+        w_scales: HashMap<u8, Vec<Vec<f32>>>,
+    },
+    /// Upload this worker's shard of an eval set.
+    LoadSet {
+        key: SetKey,
+        batches: Vec<Tensor>,
+        labels: Tensor,
+        first_batch: usize,
+    },
+    /// Eagerly build the FP32 reference for the worker's shard of `set`.
+    BuildReference { set: SetKey },
+    /// Evaluate one probe on the worker's shard of `set`.  Payloads sit
+    /// behind `Arc` so an N-worker broadcast is N pointer bumps, not N
+    /// deep copies of the config and (potentially large) override tensors.
+    Probe {
+        set: SetKey,
+        kind: ProbeKind,
+        cfg: Arc<QuantConfig>,
+        overrides: Arc<WeightOverrides>,
+    },
+}
+
+struct Job {
+    id: u64,
+    req: Request,
+}
+
+/// A worker's shard-local result.
+enum Partial {
+    Sqnr(StreamingSqnr),
+    Task(StreamingTaskMetric),
+    Unit,
+}
+
+type ResMsg = (u64, usize, Result<Partial, String>);
+
+/// Memo key: overrides are folded in as a content digest so AdaRound-
+/// stitched and plain evaluations of the same bit-config never alias.
+type MemoKey = (SetKey, ProbeKind, QuantConfig, u64);
+
+struct Worker {
+    tx: Option<mpsc::Sender<Job>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The multi-client evaluation pool.  See the module docs for the model.
+///
+/// The pool handle is intended to be driven from one thread (the
+/// coordinator); the workers it owns are where the parallelism lives.
+pub struct EvalPool {
+    workers: Vec<Worker>,
+    res_rx: Mutex<mpsc::Receiver<ResMsg>>,
+    /// job id → per-worker result slots, filled as workers report
+    pending: Mutex<HashMap<u64, Vec<Option<Result<Partial, String>>>>>,
+    next_id: AtomicU64,
+    memo: Mutex<HashMap<MemoKey, f64>>,
+    memo_hits: AtomicUsize,
+    memo_misses: AtomicUsize,
+    /// manifest task string — selects the accumulator used to merge
+    /// task-metric partials
+    task: String,
+    batch: usize,
+}
+
+impl EvalPool {
+    /// Spawn `workers` (≥ 1) threads, each opening `model` from the
+    /// artifacts at `dir` on a private PJRT client.  Fails if any worker
+    /// fails to initialize (artifacts missing, compile error, …).
+    pub fn new(dir: impl AsRef<Path>, model: &str, workers: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let entry = manifest.model(model)?;
+        let (task, batch) = (entry.task.clone(), entry.batch);
+
+        let n = workers.max(1);
+        let (res_tx, res_rx) = mpsc::channel::<ResMsg>();
+        let (init_tx, init_rx) = mpsc::channel::<(usize, Result<(), String>)>();
+        let mut ws = Vec::with_capacity(n);
+        for widx in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let (d, m) = (dir.clone(), model.to_string());
+            let (rtx, itx) = (res_tx.clone(), init_tx.clone());
+            let join = std::thread::Builder::new()
+                .name(format!("mpq-eval-{widx}"))
+                .spawn(move || worker_main(widx, d, m, rx, rtx, itx))
+                .map_err(|e| anyhow!("spawning eval worker {widx}: {e}"))?;
+            ws.push(Worker { tx: Some(tx), join: Some(join) });
+        }
+        drop(res_tx);
+        drop(init_tx);
+
+        let mut pool = Self {
+            workers: ws,
+            res_rx: Mutex::new(res_rx),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            memo: Mutex::new(HashMap::new()),
+            memo_hits: AtomicUsize::new(0),
+            memo_misses: AtomicUsize::new(0),
+            task,
+            batch,
+        };
+        let mut failures = Vec::new();
+        for _ in 0..n {
+            match init_rx.recv() {
+                Ok((_, Ok(()))) => {}
+                Ok((w, Err(e))) => failures.push(format!("worker {w}: {e}")),
+                Err(_) => {
+                    failures.push("a worker exited before reporting init".into());
+                    break;
+                }
+            }
+        }
+        if !failures.is_empty() {
+            pool.shutdown();
+            bail!("eval pool init failed: {}", failures.join("; "));
+        }
+        Ok(pool)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Probes actually dispatched to workers (memo misses).
+    pub fn probes_computed(&self) -> usize {
+        self.memo_misses.load(Ordering::Relaxed)
+    }
+
+    /// Probes served from the pool memo.
+    pub fn memo_hits(&self) -> usize {
+        self.memo_hits.load(Ordering::Relaxed)
+    }
+
+    /// Drop every memoized probe result (benchmarks use this to measure
+    /// steady-state sweeps rather than pure cache hits).
+    pub fn clear_memo(&self) {
+        self.memo.lock().unwrap().clear();
+    }
+
+    /// Install calibrated quantizer state on every worker.  Invalidate the
+    /// whole memo: every probe result depends on the ranges.
+    pub fn set_calibration(
+        &self,
+        ranges: &ActRanges,
+        w_scales: &HashMap<u8, Vec<Vec<f32>>>,
+    ) -> Result<()> {
+        self.memo.lock().unwrap().clear();
+        let id = self.broadcast_with(|_| Request::Calibrate {
+            ranges: ranges.clone(),
+            w_scales: w_scales.clone(),
+        })?;
+        self.wait_unit(id)
+    }
+
+    /// Register (or replace) an eval set under `key`, splitting its batches
+    /// into contiguous per-worker shards.  Stale memo entries for `key` are
+    /// dropped.  A trailing partial batch is truncated exactly like
+    /// `ModelHandle::eval_set` does.
+    pub fn load_set(&self, key: SetKey, ds: &DataSet) -> Result<()> {
+        let batches = ds.batches(self.batch)?;
+        if batches.is_empty() {
+            bail!("dataset smaller than one batch ({})", self.batch);
+        }
+        let labels = ds.labels_prefix(self.batch)?;
+        self.memo.lock().unwrap().retain(|(s, ..), _| *s != key);
+        let ranges = shard_ranges(batches.len(), self.workers.len());
+        let id = self.broadcast_with(|w| {
+            let r = &ranges[w];
+            Request::LoadSet {
+                key,
+                batches: batches[r.clone()].to_vec(),
+                // labels rows [r.start·batch, r.end·batch) — may be empty
+                labels: labels
+                    .slice_rows(r.start * self.batch, (r.end - r.start) * self.batch)
+                    .expect("labels_prefix is batch-aligned"),
+                first_batch: r.start,
+            }
+        })?;
+        self.wait_unit(id)
+    }
+
+    /// Build the FP32 reference for `set` eagerly — one full-set forward
+    /// sweep, split across the workers' shards.
+    pub fn build_references(&self, set: SetKey) -> Result<()> {
+        let id = self.broadcast_with(|_| Request::BuildReference { set })?;
+        self.wait_unit(id)
+    }
+
+    /// Submit one probe.  Served from the pool memo when an identical probe
+    /// (same set, kind, config and override content) already finished;
+    /// otherwise fanned out to every worker's shard.  The returned handle
+    /// must be waited on to collect (and memoize) the result.
+    pub fn submit(
+        &self,
+        set: SetKey,
+        kind: ProbeKind,
+        cfg: &QuantConfig,
+        overrides: &WeightOverrides,
+    ) -> Result<JobHandle<'_>> {
+        let key = (set, kind, cfg.clone(), overrides_digest(overrides));
+        if let Some(&v) = self.memo.lock().unwrap().get(&key) {
+            self.memo_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(JobHandle { pool: self, id: 0, kind, key: None, cached: Some(v) });
+        }
+        self.memo_misses.fetch_add(1, Ordering::Relaxed);
+        let cfg = Arc::new(cfg.clone());
+        let overrides = Arc::new(overrides.clone());
+        let id = self.broadcast_with(|_| Request::Probe {
+            set,
+            kind,
+            cfg: cfg.clone(),
+            overrides: overrides.clone(),
+        })?;
+        Ok(JobHandle { pool: self, id, kind, key: Some(key), cached: None })
+    }
+
+    /// Evaluate a list of probes, preserving input order in the results.
+    /// All probes are enqueued before the first wait, so the whole list
+    /// pipelines through the workers.  (Identical probes submitted in the
+    /// same call are both dispatched — the memo fills at completion; probe
+    /// lists don't repeat configurations in practice.)
+    pub fn map_probes(
+        &self,
+        set: SetKey,
+        kind: ProbeKind,
+        probes: &[(QuantConfig, WeightOverrides)],
+    ) -> Result<Vec<f64>> {
+        let handles = probes
+            .iter()
+            .map(|(cfg, ov)| self.submit(set, kind, cfg, ov))
+            .collect::<Result<Vec<_>>>()?;
+        handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    // -- internals -----------------------------------------------------------
+
+    /// Send one job (id shared, per-worker request) to every worker.
+    fn broadcast_with(&self, mk: impl Fn(usize) -> Request) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.pending
+            .lock()
+            .unwrap()
+            .insert(id, (0..self.workers.len()).map(|_| None).collect());
+        for (w, worker) in self.workers.iter().enumerate() {
+            worker
+                .tx
+                .as_ref()
+                .ok_or_else(|| anyhow!("pool is shut down"))?
+                .send(Job { id, req: mk(w) })
+                .map_err(|_| anyhow!("eval worker {w} is gone"))?;
+        }
+        Ok(id)
+    }
+
+    /// Block until every worker reported on `id`; error if any did.
+    fn collect(&self, id: u64) -> Result<Vec<Partial>> {
+        loop {
+            {
+                let mut pending = self.pending.lock().unwrap();
+                let slots = pending
+                    .get(&id)
+                    .ok_or_else(|| anyhow!("unknown or already-collected job {id}"))?;
+                if slots.iter().all(|s| s.is_some()) {
+                    let slots = pending.remove(&id).unwrap();
+                    drop(pending);
+                    let mut out = Vec::with_capacity(slots.len());
+                    for (w, s) in slots.into_iter().enumerate() {
+                        match s.unwrap() {
+                            Ok(p) => out.push(p),
+                            Err(e) => bail!("eval worker {w}: {e}"),
+                        }
+                    }
+                    return Ok(out);
+                }
+            }
+            let (jid, w, r) = {
+                let rx = self.res_rx.lock().unwrap();
+                rx.recv().map_err(|_| anyhow!("all eval workers exited"))?
+            };
+            if let Some(slots) = self.pending.lock().unwrap().get_mut(&jid) {
+                slots[w] = Some(r);
+            }
+        }
+    }
+
+    fn wait_unit(&self, id: u64) -> Result<()> {
+        for p in self.collect(id)? {
+            if !matches!(p, Partial::Unit) {
+                bail!("worker returned a value for a control job");
+            }
+        }
+        Ok(())
+    }
+
+    /// Reduce shard partials to the full-set scalar, merging in worker
+    /// (= batch) order.
+    fn finalize(&self, kind: ProbeKind, parts: Vec<Partial>) -> Result<f64> {
+        match kind {
+            ProbeKind::Sqnr => {
+                let mut acc = StreamingSqnr::new();
+                for p in parts {
+                    match p {
+                        Partial::Sqnr(s) => acc.merge(&s)?,
+                        _ => bail!("worker returned a non-SQNR partial"),
+                    }
+                }
+                Ok(acc.db())
+            }
+            ProbeKind::Metric => {
+                let mut acc = StreamingTaskMetric::new(&self.task)?;
+                for p in parts {
+                    match p {
+                        Partial::Task(t) => acc.merge(&t)?,
+                        _ => bail!("worker returned a non-metric partial"),
+                    }
+                }
+                Ok(acc.finalize())
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for w in &mut self.workers {
+            w.tx.take(); // closing the channel ends the worker's recv loop
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for EvalPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// An in-flight (or memo-served) probe.  [`Self::wait`] blocks for the
+/// result and memoizes it for every later submitter.
+pub struct JobHandle<'p> {
+    pool: &'p EvalPool,
+    id: u64,
+    kind: ProbeKind,
+    key: Option<MemoKey>,
+    cached: Option<f64>,
+}
+
+impl JobHandle<'_> {
+    pub fn wait(self) -> Result<f64> {
+        if let Some(v) = self.cached {
+            return Ok(v);
+        }
+        let parts = self.pool.collect(self.id)?;
+        let v = self.pool.finalize(self.kind, parts)?;
+        if let Some(key) = self.key {
+            self.pool.memo.lock().unwrap().insert(key, v);
+        }
+        Ok(v)
+    }
+}
+
+/// Contiguous near-even split of `n` batches over `workers` shards
+/// (earlier shards take the remainder; empty shards are legal).
+fn shard_ranges(n: usize, workers: usize) -> Vec<Range<usize>> {
+    let w = workers.max(1);
+    let (base, rem) = (n / w, n % w);
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Content digest of a probe's weight overrides (0 when empty) — part of
+/// the memo key so stitched-AdaRound and plain probes of the same bit
+/// configuration never collide.
+fn overrides_digest(ov: &WeightOverrides) -> u64 {
+    if ov.is_empty() {
+        return 0;
+    }
+    let mut keys: Vec<usize> = ov.keys().copied().collect();
+    keys.sort_unstable();
+    let mut h = crate::util::Fnv::new();
+    for k in keys {
+        h.write_usize(k);
+        h.write_tensor(&ov[&k]);
+    }
+    h.finish()
+}
+
+// -- worker side -------------------------------------------------------------
+
+/// A worker's view of one registered eval set: the device-resident shard
+/// plus where it starts in the full set.
+struct Shard {
+    set: EvalSet,
+    first_batch: usize,
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+fn worker_main(
+    widx: usize,
+    dir: PathBuf,
+    model: String,
+    rx: mpsc::Receiver<Job>,
+    res: mpsc::Sender<ResMsg>,
+    init: mpsc::Sender<(usize, Result<(), String>)>,
+) {
+    // All PJRT state is created here, inside the thread, and never leaves.
+    // Panics are caught and reported — a silently dead worker would leave
+    // the coordinator blocked on a result slot that can never fill.
+    let built = std::panic::catch_unwind(move || -> Result<ModelHandle> {
+        let manifest = Manifest::load(&dir)?;
+        let rt = Rc::new(Runtime::cpu()?);
+        ModelHandle::open(rt, &manifest, &model)
+    });
+    let mut handle = match built {
+        Ok(Ok(h)) => {
+            let _ = init.send((widx, Ok(())));
+            // release the init channel so EvalPool::new sees a disconnect
+            // (not a hang) if any *other* worker dies before reporting
+            drop(init);
+            h
+        }
+        Ok(Err(e)) => {
+            let _ = init.send((widx, Err(format!("{e:#}"))));
+            return;
+        }
+        Err(p) => {
+            let _ = init.send((widx, Err(format!("init panicked: {}", panic_text(&p)))));
+            return;
+        }
+    };
+    let mut shards: HashMap<SetKey, Shard> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        let Job { id, req } = job;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve(&mut handle, &mut shards, req)
+        }));
+        match outcome {
+            Ok(out) => {
+                if res.send((id, widx, out.map_err(|e| format!("{e:#}")))).is_err() {
+                    return; // pool dropped
+                }
+            }
+            Err(p) => {
+                // report, then exit: the handle's caches may be mid-update,
+                // so later jobs fail loudly at send() instead of computing
+                // on inconsistent state
+                let _ = res.send((id, widx, Err(format!("worker panicked: {}", panic_text(&p)))));
+                return;
+            }
+        }
+    }
+}
+
+fn serve(
+    handle: &mut ModelHandle,
+    shards: &mut HashMap<SetKey, Shard>,
+    req: Request,
+) -> Result<Partial> {
+    match req {
+        Request::Calibrate { ranges, w_scales } => {
+            handle.act_ranges = Some(ranges);
+            handle.w_scales = w_scales;
+            // new ranges invalidate the cached activation qparam rows
+            handle.engine.mat.invalidate();
+            Ok(Partial::Unit)
+        }
+        Request::LoadSet { key, batches, labels, first_batch } => {
+            let set = handle.eval_set_shard(&batches, labels)?;
+            shards.insert(key, Shard { set, first_batch });
+            Ok(Partial::Unit)
+        }
+        Request::BuildReference { set } => {
+            let shard = get_shard(shards, set)?;
+            if !shard.set.batches.is_empty() {
+                handle.engine.reference(handle, &shard.set)?;
+            }
+            Ok(Partial::Unit)
+        }
+        Request::Probe { set, kind, cfg, overrides } => {
+            let shard = get_shard(shards, set)?;
+            let (cfg, overrides) = (&*cfg, &*overrides);
+            match kind {
+                ProbeKind::Metric => {
+                    let mut acc = StreamingTaskMetric::new(&handle.entry.task)?;
+                    if !shard.set.batches.is_empty() {
+                        let cb = handle.config_buffers(cfg, overrides)?;
+                        let b = shard.set.batch;
+                        for (bi, xb) in shard.set.batches.iter().enumerate() {
+                            let logits = handle.forward(xb, &cb)?;
+                            acc.push(&logits, &shard.set.labels.slice_rows(bi * b, b)?)?;
+                        }
+                    }
+                    Ok(Partial::Task(acc))
+                }
+                ProbeKind::Sqnr => {
+                    let mut s = StreamingSqnr::new();
+                    if !shard.set.batches.is_empty() {
+                        let fp = handle.engine.reference(handle, &shard.set)?;
+                        let cb = handle.config_buffers(cfg, overrides)?;
+                        for (bi, xb) in shard.set.batches.iter().enumerate() {
+                            let q = handle.forward(xb, &cb)?;
+                            s.push_at(
+                                (shard.first_batch + bi) as u64,
+                                &fp.batches[bi],
+                                &fp.sig_pow[bi],
+                                &q,
+                            )?;
+                        }
+                    }
+                    Ok(Partial::Sqnr(s))
+                }
+            }
+        }
+    }
+}
+
+fn get_shard(shards: &HashMap<SetKey, Shard>, key: SetKey) -> Result<&Shard> {
+    shards
+        .get(&key)
+        .ok_or_else(|| anyhow!("eval set {key} not loaded into the pool"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_contiguously() {
+        for (n, w) in [(0usize, 3usize), (1, 4), (7, 3), (8, 4), (16, 5), (5, 1)] {
+            let rs = shard_ranges(n, w);
+            assert_eq!(rs.len(), w);
+            let mut next = 0usize;
+            for r in &rs {
+                assert_eq!(r.start, next, "shards must be contiguous (n={n} w={w})");
+                next = r.end;
+            }
+            assert_eq!(next, n, "shards must cover all batches (n={n} w={w})");
+            let max = rs.iter().map(|r| r.len()).max().unwrap();
+            let min = rs.iter().map(|r| r.len()).min().unwrap();
+            assert!(max - min <= 1, "shards must be near-even (n={n} w={w})");
+        }
+        assert_eq!(shard_ranges(4, 0).len(), 1, "0 workers clamps to 1");
+    }
+
+    #[test]
+    fn overrides_digest_is_content_keyed() {
+        let t1 = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let t2 = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 5.0]).unwrap();
+        let empty = WeightOverrides::new();
+        assert_eq!(overrides_digest(&empty), 0);
+        let mut a = WeightOverrides::new();
+        a.insert(0, t1.clone());
+        let mut b = WeightOverrides::new();
+        b.insert(0, t2);
+        let mut c = WeightOverrides::new();
+        c.insert(1, t1.clone());
+        let da = overrides_digest(&a);
+        assert_ne!(da, 0);
+        assert_ne!(da, overrides_digest(&b), "content change must change digest");
+        assert_ne!(da, overrides_digest(&c), "param index must change digest");
+        // digest is stable across map iteration order: rebuild in reverse
+        let mut a2 = WeightOverrides::new();
+        a2.insert(2, t1.clone());
+        a2.insert(0, t1.clone());
+        let mut a3 = WeightOverrides::new();
+        a3.insert(0, t1.clone());
+        a3.insert(2, t1);
+        assert_eq!(overrides_digest(&a2), overrides_digest(&a3));
+    }
+}

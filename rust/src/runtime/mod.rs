@@ -25,11 +25,21 @@
 //!   baseline rather than recomputed per probe;
 //! * pure host math (weight-scale grid search, quantization MSE, FIT
 //!   accumulation) fans out across threads via `util::par_map` — the PJRT
-//!   client itself is single-threaded here and is never shared across
-//!   threads.
+//!   client itself is single-threaded and is **never shared across
+//!   threads**.
+//!
+//! The client's `!Send` boundary is scaled past by *replication*, not
+//! sharing: [`crate::pool::EvalPool`] spawns N worker threads, each
+//! constructing its own `Runtime` (own `PjRtClient`, own compiled
+//! executables, own device-resident parameters) entirely inside the
+//! thread, with its own contiguous shard of each eval set.  Only host
+//! tensors and configurations cross the channels; probe results come back
+//! as per-shard streaming accumulators merged in global batch order, which
+//! is what makes pooled results bit-identical to this single-client path.
 //!
 //! Run-time accounting: `Exe::calls`, `ModelHandle::fwd_calls` and the
-//! engine's eval/memo/reference counters feed the Table-5 numbers.
+//! engine's eval/memo/reference counters feed the Table-5 numbers
+//! (per-worker in a pool; the pool adds its own probe/memo counters).
 
 use crate::tensor::{Data, Tensor};
 use anyhow::{anyhow, bail, Result};

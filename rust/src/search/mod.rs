@@ -24,12 +24,22 @@
 //! assignments are maintained incrementally by a [`PrefixCursor`], so
 //! re-visited prefixes (including the final report) cost zero additional
 //! forward calls and `SearchRun::evals` counts *distinct* evaluations.
+//!
+//! Every search here is *sequential by nature* — the next prefix to probe
+//! depends on the previous metric — so probe-level parallelism can't help.
+//! [`SearchCtx::with_pool`] instead routes each prefix evaluation through
+//! an [`crate::pool::EvalPool`], which splits the eval set across N PJRT
+//! clients: the critical path stays one probe long but each probe costs
+//! `1/N` of a sweep.  The pool's memo replaces the per-run [`Evaluator`]
+//! memo (and persists across runs on the same pool), with identical
+//! results for the counting metrics.
 
 use crate::bops;
 use crate::engine::Evaluator;
 use crate::groups::{Assignment, Candidate, Lattice};
 use crate::manifest::ModelEntry;
 use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use crate::pool::{EvalPool, ProbeKind, SetKey};
 use crate::sensitivity::{RoundedWeights, SensEntry};
 use crate::util::Timer;
 use anyhow::Result;
@@ -157,8 +167,13 @@ pub struct SearchCtx<'a> {
     pub set: &'a EvalSet,
     /// AdaRounded weights to stitch per configuration (§3.5)
     pub rounded: Option<&'a RoundedWeights>,
-    /// the memoizing streaming evaluation engine
+    /// the memoizing streaming evaluation engine (serial path)
     pub eval: Evaluator<'a>,
+    /// shard-parallel dispatch: the pool plus the key the eval set is
+    /// registered under (None = serial single-client path)
+    pool: Option<(&'a EvalPool, SetKey)>,
+    /// pool (misses, hits) at context creation — run counters are deltas
+    pool_base: (usize, usize),
     cursor: RefCell<PrefixCursor>,
 }
 
@@ -170,6 +185,24 @@ impl<'a> SearchCtx<'a> {
         set: &'a EvalSet,
         rounded: Option<&'a RoundedWeights>,
     ) -> Self {
+        Self::with_pool(handle, lattice, flips, set, rounded, None)
+    }
+
+    /// Like [`Self::new`], but prefix metrics fan out over `pool`'s workers
+    /// (`set` must already be loaded into the pool under the given key;
+    /// `SearchRun` counters then come from the pool's memo instead of the
+    /// per-run evaluator).
+    pub fn with_pool(
+        handle: &'a ModelHandle,
+        lattice: &'a Lattice,
+        flips: &'a [FlipStep],
+        set: &'a EvalSet,
+        rounded: Option<&'a RoundedWeights>,
+        pool: Option<(&'a EvalPool, SetKey)>,
+    ) -> Self {
+        let pool_base = pool
+            .map(|(p, _)| (p.probes_computed(), p.memo_hits()))
+            .unwrap_or((0, 0));
         Self {
             cursor: RefCell::new(PrefixCursor::new(&handle.entry, lattice)),
             eval: Evaluator::new(handle, set),
@@ -178,6 +211,8 @@ impl<'a> SearchCtx<'a> {
             flips,
             set,
             rounded,
+            pool,
+            pool_base,
         }
     }
 
@@ -188,11 +223,32 @@ impl<'a> SearchCtx<'a> {
         QuantConfig { act, w }
     }
 
-    /// Metric of the k-flip prefix configuration (streamed + memoized).
+    /// Metric of the k-flip prefix configuration (streamed + memoized),
+    /// shard-parallel when a pool is attached.
     pub fn eval_at(&self, k: usize) -> Result<f64> {
         let cfg = self.config_at(k);
         let ov = self.overrides_for(&cfg);
+        if let Some((pool, set)) = self.pool {
+            return pool.submit(set, ProbeKind::Metric, &cfg, &ov)?.wait();
+        }
         self.eval.metric(&cfg, &ov)
+    }
+
+    /// Distinct metric evaluations this run actually computed.
+    fn run_evals(&self) -> usize {
+        match self.pool {
+            Some((p, _)) => p.probes_computed() - self.pool_base.0,
+            None => self.eval.evals(),
+        }
+    }
+
+    /// Evaluations this run served from a memo (the pool memo persists
+    /// across runs, so earlier searches' prefixes also count as hits here).
+    fn run_memo_hits(&self) -> usize {
+        match self.pool {
+            Some((p, _)) => p.memo_hits() - self.pool_base.1,
+            None => self.eval.memo_hits(),
+        }
     }
 
     /// Stitch AdaRounded weights matching each parameter's current bits.
@@ -220,8 +276,8 @@ impl<'a> SearchCtx<'a> {
             assignment: asg,
             applied: self.flips[..k.min(self.flips.len())].to_vec(),
             final_metric,
-            evals: self.eval.evals(),
-            memo_hits: self.eval.memo_hits(),
+            evals: self.run_evals(),
+            memo_hits: self.run_memo_hits(),
             wall_secs: t.secs(),
             curve,
         })

@@ -1,0 +1,200 @@
+//! On-disk Phase-1 sensitivity-list cache.
+//!
+//! A sensitivity list is a pure function of `(trained weights, calibration
+//! data, metric, lattice)` — the activation ranges and weight scales it
+//! probes under are themselves derived from the same weights and data.  So
+//! repeated experiment drivers (re-running a table, sweeping Phase-2
+//! budgets over one Phase-1 list, reproducing figures) can skip the probe
+//! sweep entirely by persisting the list under a content digest of those
+//! inputs (ROADMAP open item).  The digest covers the trained weight
+//! tensors, not just the model name, so regenerating the artifacts with
+//! different weights invalidates old entries instead of serving them.
+//!
+//! Files are written via [`crate::jsonio`] as
+//! `sens_<model>_<metric>_<digest:016x>.json`; scores round-trip bit-exactly
+//! (Rust's `f64` `Display` is shortest-round-trip).  Lists containing
+//! non-finite scores are not cached — they aren't representable in JSON and
+//! a degenerate probe is worth re-measuring anyway.
+//!
+//! The cache is opt-in at the [`crate::coordinator::Pipeline`] level
+//! (`set_sens_cache_dir`); the experiment drivers and the CLI enable it by
+//! default under `<artifacts>/sens_cache` (`MPQ_SENS_CACHE=0` disables, a
+//! path overrides) and report hit/miss counters.
+
+use super::{Metric, SensEntry};
+use crate::data::DataSet;
+use crate::groups::{Candidate, Lattice};
+use crate::jsonio::{self, Json};
+use crate::manifest::ModelEntry;
+use crate::tensor::Tensor;
+use crate::util::Fnv;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub fn metric_tag(m: Metric) -> &'static str {
+    match m {
+        Metric::Sqnr => "sqnr",
+        Metric::Accuracy => "accuracy",
+        Metric::Fit => "fit",
+    }
+}
+
+/// Content digest of everything a sensitivity list depends on: the model
+/// identity, quantizer topology and **trained weight tensors**, the
+/// metric, the candidate lattice, and the exact calibration tensors (which
+/// also determine the MSE ranges the probes run under).
+pub fn digest(
+    entry: &ModelEntry,
+    lattice: &Lattice,
+    metric: Metric,
+    calib: &DataSet,
+    weights: &[Tensor],
+) -> u64 {
+    let mut h = Fnv::new();
+    h.write_bytes(entry.name.as_bytes());
+    h.write_usize(entry.n_act());
+    h.write_usize(entry.n_w());
+    h.write_usize(entry.groups.len());
+    h.write_bytes(metric_tag(metric).as_bytes());
+    h.write_u8(lattice.baseline.wbits);
+    h.write_u8(lattice.baseline.abits);
+    for c in &lattice.candidates {
+        h.write_u8(c.wbits);
+        h.write_u8(c.abits);
+    }
+    h.write_tensor(&calib.x);
+    h.write_tensor(&calib.y);
+    for w in weights {
+        h.write_tensor(w);
+    }
+    h.finish()
+}
+
+pub fn cache_path(dir: &Path, model: &str, metric: Metric, digest: u64) -> PathBuf {
+    dir.join(format!("sens_{model}_{}_{digest:016x}.json", metric_tag(metric)))
+}
+
+/// Load a cached list; `Ok(None)` when the file doesn't exist.
+pub fn load(path: &Path) -> Result<Option<Vec<SensEntry>>> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    let j = jsonio::parse_file(path).with_context(|| format!("sens cache {}", path.display()))?;
+    let mut out = Vec::new();
+    for e in j.req("entries")?.as_arr()? {
+        out.push(SensEntry {
+            group: e.req("group")?.as_usize()?,
+            cand: Candidate::new(
+                e.req("wbits")?.as_usize()? as u8,
+                e.req("abits")?.as_usize()? as u8,
+            ),
+            score: e.req("score")?.as_f64()?,
+        });
+    }
+    Ok(Some(out))
+}
+
+/// Persist a list.  Skipped (not an error) when any score is non-finite.
+pub fn store(
+    path: &Path,
+    model: &str,
+    metric: Metric,
+    digest: u64,
+    entries: &[SensEntry],
+) -> Result<()> {
+    if entries.iter().any(|e| !e.score.is_finite()) {
+        return Ok(());
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let arr = entries
+        .iter()
+        .map(|e| {
+            Json::Obj(vec![
+                ("group".into(), Json::Num(e.group as f64)),
+                ("wbits".into(), Json::Num(e.cand.wbits as f64)),
+                ("abits".into(), Json::Num(e.cand.abits as f64)),
+                ("score".into(), Json::Num(e.score)),
+            ])
+        })
+        .collect();
+    let j = Json::Obj(vec![
+        ("model".into(), Json::Str(model.into())),
+        ("metric".into(), Json::Str(metric_tag(metric).into())),
+        ("digest".into(), Json::Str(format!("{digest:016x}"))),
+        ("entries".into(), Json::Arr(arr)),
+    ]);
+    std::fs::write(path, j.to_string() + "\n")
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn fake_list() -> Vec<SensEntry> {
+        vec![
+            SensEntry { group: 3, cand: Candidate::new(4, 8), score: 17.25 },
+            SensEntry { group: 0, cand: Candidate::new(8, 8), score: 0.1 + 0.2 },
+            SensEntry { group: 1, cand: Candidate::new(8, 16), score: -3.5e-7 },
+        ]
+    }
+
+    fn fake_calib(seed: f32) -> DataSet {
+        DataSet {
+            x: Tensor::from_f32(&[4, 2], vec![seed, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0])
+                .unwrap(),
+            y: Tensor::from_f32(&[4], vec![0.0, 1.0, 0.0, 1.0]).unwrap(),
+        }
+    }
+
+    #[test]
+    fn store_load_roundtrips_bit_exactly() {
+        let dir = std::env::temp_dir().join("mpq_sens_cache_test");
+        let path = cache_path(&dir, "resnet_s", Metric::Sqnr, 0xabcd);
+        let list = fake_list();
+        store(&path, "resnet_s", Metric::Sqnr, 0xabcd, &list).unwrap();
+        let got = load(&path).unwrap().expect("cache file written");
+        assert_eq!(got.len(), list.len());
+        for (g, w) in got.iter().zip(&list) {
+            assert_eq!(g.group, w.group);
+            assert_eq!(g.cand, w.cand);
+            assert_eq!(g.score.to_bits(), w.score.to_bits(), "score must round-trip");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_missing_is_none_and_nonfinite_not_stored() {
+        let dir = std::env::temp_dir().join("mpq_sens_cache_test");
+        assert!(load(&cache_path(&dir, "x", Metric::Fit, 1)).unwrap().is_none());
+        let path = cache_path(&dir, "nanly", Metric::Accuracy, 2);
+        let mut list = fake_list();
+        list[1].score = f64::NAN;
+        store(&path, "nanly", Metric::Accuracy, 2, &list).unwrap();
+        assert!(load(&path).unwrap().is_none(), "non-finite lists must not be cached");
+    }
+
+    #[test]
+    fn digest_tracks_inputs() {
+        let e = crate::bops::tests_support::toy_entry();
+        let lat = Lattice::practical();
+        let ds = fake_calib(0.0);
+        let w = vec![Tensor::from_f32(&[2, 2], vec![0.5, -0.5, 1.5, -1.5]).unwrap()];
+        let d0 = digest(&e, &lat, Metric::Sqnr, &ds, &w);
+        assert_eq!(d0, digest(&e, &lat, Metric::Sqnr, &ds, &w), "digest is deterministic");
+        assert_ne!(d0, digest(&e, &lat, Metric::Accuracy, &ds, &w), "metric keyed");
+        assert_ne!(d0, digest(&e, &Lattice::expanded(), Metric::Sqnr, &ds, &w), "lattice keyed");
+        assert_ne!(d0, digest(&e, &lat, Metric::Sqnr, &fake_calib(9.0), &w), "data keyed");
+        let w2 = vec![Tensor::from_f32(&[2, 2], vec![0.5, -0.5, 1.5, 99.0]).unwrap()];
+        assert_ne!(
+            d0,
+            digest(&e, &lat, Metric::Sqnr, &ds, &w2),
+            "regenerated weights must invalidate cached lists"
+        );
+    }
+}

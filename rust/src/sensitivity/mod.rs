@@ -14,12 +14,20 @@
 //! All probes run through [`crate::engine::Evaluator`]: the FP32 reference
 //! is one cached forward sweep per `(model, eval-set)` and each probe
 //! streams batch-by-batch, so a full sweep costs exactly `1 + probes`
-//! forward-sweep-equivalents with no host logit concatenation.
+//! forward-sweep-equivalents with no host logit concatenation.  With an
+//! [`crate::pool::EvalPool`] the same sweep fans out shard-parallel across
+//! N PJRT clients ([`sensitivity_list_pooled`]), bit-identical to the
+//! serial list; completed lists can also be persisted on disk ([`cache`])
+//! keyed by `(model, calibration-data digest, metric, lattice)` so repeated
+//! experiment drivers skip the sweep entirely.
+
+pub mod cache;
 
 use crate::engine::Evaluator;
 use crate::groups::{Assignment, Candidate, Lattice};
-use crate::manifest::Manifest;
+use crate::manifest::{Manifest, ModelEntry};
 use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use crate::pool::{EvalPool, ProbeKind, SetKey};
 use crate::quant;
 use crate::tensor::Tensor;
 use crate::util::{db10, par_map};
@@ -82,9 +90,11 @@ pub fn fp_logits(handle: &ModelHandle, set: &EvalSet) -> Result<Tensor> {
 }
 
 /// Probe configuration: FP everywhere, group `g` at candidate `c`.
-pub fn probe_config(handle: &ModelHandle, g: usize, c: Candidate) -> QuantConfig {
-    let mut cfg = QuantConfig::fp32(&handle.entry);
-    let grp = &handle.entry.groups[g];
+/// Pure host math on the manifest entry — pool dispatch builds these
+/// without touching any handle.
+pub fn probe_config(entry: &ModelEntry, g: usize, c: Candidate) -> QuantConfig {
+    let mut cfg = QuantConfig::fp32(entry);
+    let grp = &entry.groups[g];
     for &a in &grp.act_q {
         cfg.act[a] = Some(c.abits);
     }
@@ -97,14 +107,14 @@ pub fn probe_config(handle: &ModelHandle, g: usize, c: Candidate) -> QuantConfig
 /// Weight overrides for a probe when AdaRound is interweaved: the group's
 /// parameters replaced by their AdaRounded version at `c.wbits`.
 pub fn probe_overrides(
-    handle: &ModelHandle,
+    entry: &ModelEntry,
     g: usize,
     c: Candidate,
     rounded: &RoundedWeights,
 ) -> WeightOverrides {
     let mut ov = WeightOverrides::new();
-    for &wq in &handle.entry.groups[g].w_q {
-        let pidx = handle.entry.w_quantizers[wq].param_idx;
+    for &wq in &entry.groups[g].w_q {
+        let pidx = entry.w_quantizers[wq].param_idx;
         if let Some(t) = rounded.get(&(pidx, c.wbits)) {
             ov.insert(pidx, t.clone());
         }
@@ -136,10 +146,55 @@ pub fn sensitivity_list(
     Ok(entries)
 }
 
-fn probe_targets(handle: &ModelHandle, lattice: &Lattice) -> Vec<(usize, Candidate)> {
+/// Phase-1 sweep dispatched through an [`EvalPool`]: the whole probe list
+/// is enqueued at once and every probe is evaluated shard-parallel across
+/// the pool's workers.
+///
+/// Produces the *same* sorted list as [`sensitivity_list`] on the same
+/// calibration data — bit-identical scores for the SQNR and counting-metric
+/// paths (see the pool's exactness guarantee), and an identical stable sort
+/// over the identical probe order.  [`Metric::Fit`] is host + FIT-executable
+/// math with no probe loop to fan out; callers fall back to the serial path
+/// for it.
+pub fn sensitivity_list_pooled(
+    pool: &EvalPool,
+    set: SetKey,
+    entry: &ModelEntry,
+    lattice: &Lattice,
+    metric: Metric,
+    rounded: Option<&RoundedWeights>,
+) -> Result<Vec<SensEntry>> {
+    let kind = match metric {
+        Metric::Sqnr => ProbeKind::Sqnr,
+        Metric::Accuracy => ProbeKind::Metric,
+        Metric::Fit => bail!("FIT sensitivity has no pooled path; use sensitivity_list"),
+    };
+    let targets = probe_targets(entry, lattice);
+    let probes: Vec<(QuantConfig, WeightOverrides)> = targets
+        .iter()
+        .map(|&(g, c)| {
+            (
+                probe_config(entry, g, c),
+                rounded
+                    .map(|r| probe_overrides(entry, g, c, r))
+                    .unwrap_or_default(),
+            )
+        })
+        .collect();
+    let scores = pool.map_probes(set, kind, &probes)?;
+    let mut entries: Vec<SensEntry> = targets
+        .iter()
+        .zip(scores)
+        .map(|(&(group, cand), score)| SensEntry { group, cand, score })
+        .collect();
+    entries.sort_by(|x, y| y.score.total_cmp(&x.score));
+    Ok(entries)
+}
+
+fn probe_targets(entry: &ModelEntry, lattice: &Lattice) -> Vec<(usize, Candidate)> {
     let mut out = Vec::new();
-    for g in 0..handle.entry.groups.len() {
-        if !Assignment::flippable(&handle.entry, g) {
+    for g in 0..entry.groups.len() {
+        if !Assignment::flippable(entry, g) {
             continue;
         }
         for &c in &lattice.candidates {
@@ -162,10 +217,10 @@ fn sqnr_scores(
     // exactly `1 + probes` forward-sweep-equivalents, no concatenation.
     let ev = Evaluator::new(handle, set);
     let mut out = Vec::new();
-    for (g, c) in probe_targets(handle, lattice) {
-        let cfg = probe_config(handle, g, c);
+    for (g, c) in probe_targets(&handle.entry, lattice) {
+        let cfg = probe_config(&handle.entry, g, c);
         let ov = rounded
-            .map(|r| probe_overrides(handle, g, c, r))
+            .map(|r| probe_overrides(&handle.entry, g, c, r))
             .unwrap_or_default();
         out.push(SensEntry { group: g, cand: c, score: ev.sqnr(&cfg, &ov)? });
     }
@@ -180,10 +235,10 @@ fn accuracy_scores(
 ) -> Result<Vec<SensEntry>> {
     let ev = Evaluator::new(handle, set);
     let mut out = Vec::new();
-    for (g, c) in probe_targets(handle, lattice) {
-        let cfg = probe_config(handle, g, c);
+    for (g, c) in probe_targets(&handle.entry, lattice) {
+        let cfg = probe_config(&handle.entry, g, c);
         let ov = rounded
-            .map(|r| probe_overrides(handle, g, c, r))
+            .map(|r| probe_overrides(&handle.entry, g, c, r))
             .unwrap_or_default();
         out.push(SensEntry { group: g, cand: c, score: ev.metric(&cfg, &ov)? });
     }
@@ -291,7 +346,7 @@ fn fit_scores(
     }
 
     let mut out = Vec::new();
-    for (g, c) in probe_targets(handle, lattice) {
+    for (g, c) in probe_targets(entry, lattice) {
         let grp = &entry.groups[g];
         let mut fit = 0f64;
         for &w in &grp.w_q {

@@ -88,6 +88,15 @@ impl Timer {
     }
 }
 
+/// Host parallelism available to worker fan-outs ([`par_map`], the
+/// [`crate::pool::EvalPool`] default and the CLI `--workers` default);
+/// 1 when the platform can't tell.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 /// Order-preserving parallel map over a slice using scoped std threads —
 /// the offline crate set has no `rayon`.  Work is pulled from a shared
 /// atomic index (cheap work stealing for uneven item costs).
@@ -95,12 +104,11 @@ impl Timer {
 /// Intended for pure host math (weight-scale grid search, quantization MSE,
 /// FIT accumulation); never hand it anything touching the PJRT client,
 /// which is not thread-safe — the `T: Sync` bound enforces that for the
-/// items, and the closure must only capture `Sync` data.
+/// items, and the closure must only capture `Sync` data.  Evaluation work
+/// that *does* need PJRT fans out through [`crate::pool::EvalPool`]
+/// instead, whose workers each own a private client.
 pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync) -> Vec<R> {
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(items.len());
+    let threads = default_workers().min(items.len());
     if threads <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
@@ -138,6 +146,75 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync)
 /// `10·log10(x)` with a floor to keep degenerate ratios finite.
 pub fn db10(x: f64) -> f64 {
     10.0 * x.max(1e-30).log10()
+}
+
+/// FNV-1a 64-bit streaming hasher — content digests for the evaluation
+/// pool's override fingerprints and the on-disk sensitivity-list cache keys
+/// (the offline crate set has no hashing crates; collision resistance
+/// needs are "don't confuse two experiment configurations", not
+/// cryptographic).
+#[derive(Clone, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+    }
+
+    pub fn write_bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    /// Fold in a tensor's shape and contents (f32 bit patterns / i32
+    /// values) — the one canonical tensor digest, shared by the pool's
+    /// override fingerprints and the sensitivity-cache keys so the two can
+    /// never drift apart.
+    pub fn write_tensor(&mut self, t: &crate::tensor::Tensor) {
+        for &d in &t.shape {
+            self.write_usize(d);
+        }
+        match &t.data {
+            crate::tensor::Data::F32(v) => {
+                for x in v {
+                    self.write_u32(x.to_bits());
+                }
+            }
+            crate::tensor::Data::I32(v) => {
+                for x in v {
+                    self.write_u32(*x as u32);
+                }
+            }
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
 }
 
 /// Mean of an f64 iterator (0.0 on empty).
@@ -219,5 +296,24 @@ mod tests {
     fn db10_floor() {
         assert!(db10(0.0).is_finite());
         assert!((db10(10.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fnv_known_vector_and_sensitivity() {
+        // FNV-1a 64 of "a" is a published test vector
+        let mut h = Fnv::new();
+        h.write_u8(b'a');
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h1 = Fnv::new();
+        h1.write_bytes(b"abc");
+        let mut h2 = Fnv::new();
+        h2.write_bytes(b"acb");
+        assert_ne!(h1.finish(), h2.finish());
+        assert_eq!(Fnv::new().finish(), Fnv::default().finish());
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
     }
 }

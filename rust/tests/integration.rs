@@ -126,7 +126,7 @@ fn lower_bits_lower_sqnr() {
 fn probe_config_only_touches_group() {
     let dir = skip_unless_artifacts!();
     let p = pipe(&dir);
-    let cfg = sensitivity::probe_config(&p.model, 1, Candidate::new(4, 8));
+    let cfg = sensitivity::probe_config(&p.model.entry, 1, Candidate::new(4, 8));
     let grp = &p.model.entry.groups[1];
     for (i, b) in cfg.act.iter().enumerate() {
         assert_eq!(b.is_some(), grp.act_q.contains(&i));
@@ -354,4 +354,133 @@ fn ood_calibration_runs() {
     let lat = Lattice::practical_no16();
     let sens = p.sensitivity_sqnr(&lat).unwrap();
     assert!(!sens.is_empty());
+}
+
+/// Acceptance: the evaluation pool must be *bit-identical* to the serial
+/// single-client path, for any worker count.  An `EvalPool` with 1 and with
+/// 4 workers must produce the same sensitivity list (same order, same score
+/// bits) and the same Phase-2 chosen prefix as the serial search.
+#[test]
+fn pool_matches_serial_bit_for_bit() {
+    let dir = skip_unless_artifacts!();
+    let lat = Lattice::practical();
+
+    // serial reference
+    let mut sp = Pipeline::open(&dir, "resnet_s").unwrap();
+    sp.calibrate(128, 0).unwrap();
+    sp.limit_val(256, 7).unwrap();
+    let ssens = sp.sensitivity_sqnr(&lat).unwrap();
+    let sflips = sp.flips(&lat, &ssens);
+    let sfp = sp.eval_fp32().unwrap();
+    let srun = sp
+        .search_accuracy_target(&lat, &sflips, sfp - 0.02, SearchScheme::Binary, None)
+        .unwrap();
+
+    for workers in [1usize, 4] {
+        let mut p = Pipeline::open(&dir, "resnet_s").unwrap();
+        p.enable_pool(workers).unwrap();
+        p.calibrate(128, 0).unwrap();
+        p.limit_val(256, 7).unwrap();
+        let sens = p.sensitivity_sqnr(&lat).unwrap();
+        assert_eq!(sens.len(), ssens.len(), "w={workers}");
+        for (a, b) in sens.iter().zip(&ssens) {
+            assert_eq!(a.group, b.group, "w={workers}: probe order diverged");
+            assert_eq!(a.cand, b.cand, "w={workers}: probe order diverged");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "w={workers}: score for (g{}, {:?}) differs: {} vs {}",
+                a.group,
+                a.cand,
+                a.score,
+                b.score
+            );
+        }
+        let flips = p.flips(&lat, &sens);
+        assert_eq!(flips.len(), sflips.len(), "w={workers}");
+        let fp = p.eval_fp32().unwrap();
+        assert_eq!(fp.to_bits(), sfp.to_bits(), "w={workers}: fp32 metric differs");
+        let run = p
+            .search_accuracy_target(&lat, &flips, fp - 0.02, SearchScheme::Binary, None)
+            .unwrap();
+        assert_eq!(
+            run.applied.len(),
+            srun.applied.len(),
+            "w={workers}: chosen prefix differs"
+        );
+        assert_eq!(
+            run.final_rel_bops.to_bits(),
+            srun.final_rel_bops.to_bits(),
+            "w={workers}"
+        );
+        assert_eq!(
+            run.final_metric.to_bits(),
+            srun.final_metric.to_bits(),
+            "w={workers}"
+        );
+    }
+}
+
+/// The pool memo must make re-visited prefixes free across runs: a second
+/// identical search computes zero new probes.
+#[test]
+fn pool_memo_is_shared_across_runs() {
+    let dir = skip_unless_artifacts!();
+    let lat = Lattice::practical();
+    let mut p = Pipeline::open(&dir, "resnet_s").unwrap();
+    p.enable_pool(2).unwrap();
+    p.calibrate(128, 0).unwrap();
+    p.limit_val(256, 7).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flips = p.flips(&lat, &sens);
+    let fp = p.eval_fp32().unwrap();
+    let first = p
+        .search_accuracy_target(&lat, &flips, fp - 0.02, SearchScheme::Binary, None)
+        .unwrap();
+    assert!(first.evals > 0);
+    let again = p
+        .search_accuracy_target(&lat, &flips, fp - 0.02, SearchScheme::Binary, None)
+        .unwrap();
+    assert_eq!(again.evals, 0, "identical re-search must be all memo hits");
+    assert!(again.memo_hits > 0);
+    assert_eq!(again.final_metric.to_bits(), first.final_metric.to_bits());
+}
+
+/// EvalSet truncation contract on the real artifacts: a dataset subset that
+/// is not a batch multiple truncates `n` and `labels` consistently.
+#[test]
+fn eval_set_truncates_ragged_subset_consistently() {
+    let dir = skip_unless_artifacts!();
+    let p = Pipeline::open(&dir, "resnet_s").unwrap();
+    let batch = p.model.entry.batch;
+    let ragged = batch + batch / 2 + 1; // strictly between 1 and 2 batches
+    let ds = p.model.data.val.take(ragged).unwrap();
+    let set = p.model.eval_set(&ds).unwrap();
+    assert_eq!(set.batches.len(), ragged / batch);
+    assert_eq!(set.n, (ragged / batch) * batch, "n must report truncated count");
+    assert_eq!(set.labels.shape[0], set.n, "labels must truncate with inputs");
+}
+
+/// On-disk sensitivity cache: second sweep is served from disk without any
+/// forward calls, bit-identically.
+#[test]
+fn sens_cache_skips_repeat_sweeps() {
+    let dir = skip_unless_artifacts!();
+    let cache = std::env::temp_dir().join("mpq_sens_cache_it");
+    std::fs::remove_dir_all(&cache).ok();
+    let lat = Lattice::practical();
+    let mut p = pipe(&dir);
+    p.set_sens_cache_dir(Some(cache.clone()));
+    let first = p.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(p.sens_cache_stats(), (0, 1), "first sweep is a miss");
+    let fwd = *p.model.fwd_calls.borrow();
+    let second = p.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(p.sens_cache_stats(), (1, 1), "second sweep must hit");
+    assert_eq!(*p.model.fwd_calls.borrow(), fwd, "cache hit must cost zero forwards");
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand));
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "scores must round-trip");
+    }
+    std::fs::remove_dir_all(&cache).ok();
 }
