@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     let args = mpq::cli::Args::from_env()?;
     let dir = mpq::artifacts_dir();
     let man = Manifest::load(&dir)?;
-    let rt = Rc::new(Runtime::cpu()?);
+    let rt = Rc::new(Runtime::for_manifest(&man)?);
     let calib_n = args.opt_usize("calib", 256)?;
     let filter: Option<Vec<String>> =
         args.opt("models").map(|s| s.split(',').map(String::from).collect());

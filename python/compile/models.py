@@ -459,6 +459,36 @@ def deeplab_s_apply(ctx, p, x):
 
 
 # ---------------------------------------------------------------------------
+# mlp_parity_s — the PJRT ↔ sim-backend parity bridge
+# ---------------------------------------------------------------------------
+# A plain dense chain whose semantics the pure-Rust sim interpreter
+# (rust/src/sim) reproduces exactly: input quantizer → [dense → relu →
+# output quantizer]* → dense → logits quantizer, weights quantized
+# per-output-channel (axis 1).  `sim::export_from_artifacts` re-exports this
+# model's weights + data as a sim zoo and the artifacts-gated parity smoke
+# test (rust/tests/sim_e2e.rs) asserts both backends agree on SQNR/metric
+# to tolerance.  Keep the topology dense-only or the export will refuse it.
+
+
+def mlp_parity_s_init(rng):
+    p = {}
+    _dense_p(p, "fc0", 3 * ds.IMG * ds.IMG, 32, rng)
+    _dense_p(p, "fc1", 32, 24, rng)
+    _dense_p(p, "fc2", 24, ds.N_CLASSES, rng)
+    return p
+
+
+def mlp_parity_s_apply(ctx, p, x):
+    h = ctx.input(x)
+    # flatten NCHW → [B, 3·IMG·IMG]: shape-only, reuses the input quantizer
+    h = QT(h.a.reshape(h.a.shape[0], -1), h.src)
+    h = ctx.dense(h, p["fc0.w"], p["fc0.b"], "fc0", act=relu)
+    h = ctx.dense(h, p["fc1.w"], p["fc1.b"], "fc1", act=relu)
+    h = ctx.dense(h, p["fc2.w"], p["fc2.b"], "fc2")
+    return h.a
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -516,5 +546,8 @@ MODELS = {
                       _img_example, dict(steps=900, lr=1e-3)),
     "deeplab_s": ModelDef("deeplab_s", "seg", deeplab_s_init, deeplab_s_apply,
                           _img_example, dict(steps=700, lr=2e-3)),
+    "mlp_parity_s": ModelDef("mlp_parity_s", "classify10", mlp_parity_s_init,
+                             mlp_parity_s_apply, _img_example,
+                             dict(steps=400, lr=2e-3)),
     **{f"bert_s_{t}": _bert_def(t) for t in ds.GLUE_TASKS},
 }

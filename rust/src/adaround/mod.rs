@@ -20,6 +20,7 @@
 use crate::manifest::Manifest;
 use crate::model::ModelHandle;
 use crate::quant;
+use crate::runtime::Buffer;
 use crate::sensitivity::RoundedWeights;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -63,7 +64,7 @@ pub struct Taps {
 pub fn capture_taps(
     handle: &ModelHandle,
     manifest: &Manifest,
-    batches: &[xla::PjRtBuffer],
+    batches: &[Buffer],
     n_batches: usize,
 ) -> Result<Taps> {
     let taps_file = handle
@@ -77,7 +78,7 @@ pub fn capture_taps(
     for xb in batches.iter().take(n_batches) {
         // trained parameters are already device-resident on the handle —
         // no per-batch re-upload
-        let mut args: Vec<&xla::PjRtBuffer> = vec![xb];
+        let mut args: Vec<&Buffer> = vec![xb];
         args.extend(handle.param_buffers().iter());
         let outs = exe.run_b(&args)?;
         if outs.len() != n_layers + 1 {
@@ -177,7 +178,7 @@ pub fn adaround_layer(
     let s_buf = handle
         .rt
         .buffer(&Tensor::from_f32(&[scales.len()], scales.to_vec())?)?;
-    let tap_bufs: Vec<xla::PjRtBuffer> = taps
+    let tap_bufs: Vec<Buffer> = taps
         .iter()
         .map(|t| handle.rt.buffer(t))
         .collect::<Result<_>>()?;
@@ -202,7 +203,7 @@ pub fn adaround_layer(
         let xb = &tap_bufs[rng.below(tap_bufs.len())];
         let v_buf = handle.rt.buffer(&v_t)?;
         let meta_buf = handle.rt.buffer(&meta)?;
-        let args: Vec<&xla::PjRtBuffer> =
+        let args: Vec<&Buffer> =
             vec![xb, &w_buf, &b_buf, &v_buf, &s_buf, &meta_buf];
         let outs = exe.run_b(&args)?;
         if outs.len() != 2 {

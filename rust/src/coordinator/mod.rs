@@ -57,16 +57,17 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Open a model from the artifacts directory with a fresh PJRT client.
+    /// Open a model from the artifacts directory with a fresh runtime on
+    /// the backend the manifest names (PJRT client or sim interpreter).
     pub fn open(dir: impl AsRef<Path>, model: &str) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Rc::new(Runtime::for_manifest(&manifest)?);
         let model = ModelHandle::open(rt.clone(), &manifest, model)?;
         Ok(Self::assemble(manifest, rt, model))
     }
 
     /// Open sharing an existing runtime (multi-model experiments reuse the
-    /// PJRT client and its executable cache).
+    /// backend client and its executable cache).
     pub fn open_with(rt: Rc<Runtime>, manifest: &Manifest, model: &str) -> Result<Self> {
         let model = ModelHandle::open(rt.clone(), manifest, model)?;
         Ok(Self::assemble(manifest.clone(), rt, model))

@@ -78,9 +78,11 @@ pub struct Env {
 
 impl Env {
     pub fn open(opts: &Opts) -> Result<Self> {
+        let manifest = Manifest::load(&opts.dir)?;
+        let rt = Rc::new(Runtime::for_manifest(&manifest)?);
         Ok(Self {
-            manifest: Manifest::load(&opts.dir)?,
-            rt: Rc::new(Runtime::cpu()?),
+            manifest,
+            rt,
             workers: opts.workers,
             sens_cache: opts.sens_cache_dir(),
         })

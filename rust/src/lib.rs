@@ -23,7 +23,12 @@
 //! * **L1** — Pallas fake-quant kernels inside those artifacts.
 //!
 //! Python never runs on the request path: everything here executes
-//! AOT-compiled artifacts through [`runtime::Runtime`].
+//! AOT-compiled artifacts through [`runtime::Runtime`] — a pluggable
+//! facade over two [`runtime::Backend`]s: the PJRT client (default, the
+//! `pjrt` cargo feature) and the pure-Rust [`sim`] interpreter, which runs
+//! the same Phase-1/Phase-2/pool stack hermetically on a synthetic
+//! linear+fake-quant model family (the always-on end-to-end test tier, see
+//! `rust/tests/README.md`).
 //!
 //! ## Quickstart
 //!
@@ -59,6 +64,7 @@ pub mod report;
 pub mod runtime;
 pub mod search;
 pub mod sensitivity;
+pub mod sim;
 pub mod tensor;
 pub mod util;
 

@@ -4,16 +4,21 @@
 //! mpq list                      inventory of models in artifacts/
 //! mpq run --model M [...]       two-phase MPQ on one model
 //! mpq sensitivity --model M     Phase-1 list only
+//! mpq sim-gen --out DIR         generate a pure-Rust sim model zoo
 //! mpq table1..table5            reproduce a paper table
 //! mpq fig2..fig5                reproduce a paper figure
 //! mpq all                       every table + figure, saved to results/
 //! ```
 //!
+//! `run`/`sensitivity` work on either backend: point `--artifacts` at a
+//! PJRT artifacts dir or at a `sim-gen` output dir — the manifest's
+//! `backend` key selects the runtime.
+//!
 //! Common flags: `--artifacts DIR`, `--calib N`, `--seed S`,
 //! `--models a,b,c`, `--fast`, `--budget R`, `--lattice practical|expanded`,
 //! `--workers N` (evaluation-pool width, default = host parallelism).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use mpq::cli::Args;
 use mpq::coordinator::Pipeline;
 use mpq::experiments::{self, Opts};
@@ -105,6 +110,32 @@ fn main() -> Result<()> {
                 println!("{:<8} {:<8} {:>10.2}", e.group, e.cand.label(), e.score);
             }
         }
+        "sim-gen" => {
+            let out = args.opt_str("out", "sim-artifacts");
+            let base = mpq::sim::SimSpec::default();
+            let dims = match args.opt("dims") {
+                Some(d) => d
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| anyhow!("--dims {d}: {e}"))?,
+                None => base.dims.clone(),
+            };
+            let spec = mpq::sim::SimSpec {
+                name: base.name.clone(),
+                batch: args.opt_usize("batch", base.batch)?,
+                dims,
+                calib_n: args.opt_usize("calib-n", base.calib_n)?,
+                val_n: args.opt_usize("val-n", base.val_n)?,
+                ood_n: args.opt_usize("ood-n", base.ood_n)?,
+                seed: args.opt_u64("sim-seed", base.seed)?,
+            };
+            mpq::sim::generate(out, &spec)?;
+            println!(
+                "wrote sim artifacts for '{}' ({:?}) to {out}",
+                spec.name, spec.dims
+            );
+        }
         "table1" => { let t = experiments::table1(&opts)?; t.print(); t.save(&rdir, "table1")?; }
         "table2" => { let t = experiments::table2(&opts)?; t.print(); t.save(&rdir, "table2")?; }
         "table3" => { let t = experiments::table3(&opts)?; t.print(); t.save(&rdir, "table3")?; }
@@ -142,11 +173,13 @@ fn main() -> Result<()> {
             b.save(&rdir, "fig2_ktau")?;
         }
         "help" | _ => {
-            println!("usage: mpq <list|run|sensitivity|table1..table5|fig2..fig5|all> [flags]");
+            println!("usage: mpq <list|run|sensitivity|sim-gen|table1..table5|fig2..fig5|all> [flags]");
             println!("flags: --artifacts DIR --model M --models a,b --calib N --seed S");
             println!("       --budget R --lattice practical|practical_no16|expanded --fast");
             println!("       --workers N  parallel eval-pool width (default: host parallelism;");
             println!("                    1 = serial single-client path)");
+            println!("sim-gen: --out DIR --dims d0,d1,..,dL --batch B --calib-n N --val-n N");
+            println!("         --ood-n N --sim-seed S  (pure-Rust backend; no PJRT needed)");
         }
     }
     Ok(())

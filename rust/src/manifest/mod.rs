@@ -14,6 +14,10 @@ use std::path::{Path, PathBuf};
 pub struct Manifest {
     pub dir: PathBuf,
     pub models: Vec<ModelEntry>,
+    /// execution backend the artifacts were built for: `"pjrt"` (HLO-text
+    /// executables, the default) or `"sim"` (pure-Rust interpreter programs
+    /// from [`crate::sim`]) — consumed by `Runtime::for_manifest`
+    pub backend: String,
 }
 
 #[derive(Clone, Debug)]
@@ -114,7 +118,14 @@ impl Manifest {
                     .with_context(|| format!("model '{name}'"))?,
             );
         }
-        Ok(Self { dir, models })
+        let backend = match j.get("backend") {
+            None => "pjrt".to_string(),
+            Some(v) => v
+                .as_str()
+                .context("manifest 'backend' must be a string")?
+                .to_string(),
+        };
+        Ok(Self { dir, models, backend })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {

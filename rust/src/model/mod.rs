@@ -16,7 +16,7 @@ use crate::data::{self, DataSet, ModelData};
 use crate::engine;
 use crate::manifest::{Manifest, ModelEntry};
 use crate::quant::{self, ActRanges};
-use crate::runtime::{Exe, Runtime};
+use crate::runtime::{Buffer, Exe, Runtime};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
@@ -67,7 +67,7 @@ pub type WeightOverrides = HashMap<usize, Tensor>;
 pub struct EvalSet {
     /// process-unique identity — the engine's FP-reference cache key
     pub id: u64,
-    pub batches: Vec<xla::PjRtBuffer>,
+    pub batches: Vec<Buffer>,
     pub labels: Tensor,
     pub n: usize,
     pub batch: usize,
@@ -85,8 +85,8 @@ pub struct ModelHandle {
     pub fwd: Rc<Exe>,
     /// host copies of the trained parameters (AdaRound math needs them)
     pub weights: Vec<Tensor>,
-    /// device-resident parameters (uploaded once)
-    param_bufs: Vec<xla::PjRtBuffer>,
+    /// backend-resident parameters (uploaded once)
+    param_bufs: Vec<Buffer>,
     pub data: ModelData,
     /// calibrated activation ranges (None until [`Self::calibrate_ranges`])
     pub act_ranges: Option<ActRanges>,
@@ -124,10 +124,10 @@ impl ModelHandle {
         })
     }
 
-    /// Device-resident trained parameters (uploaded once at open) — shared
+    /// Backend-resident trained parameters (uploaded once at open) — shared
     /// by the forward, stats, taps and FIT executables so no caller
     /// re-uploads them per batch.
-    pub fn param_buffers(&self) -> &[xla::PjRtBuffer] {
+    pub fn param_buffers(&self) -> &[Buffer] {
         &self.param_bufs
     }
 
@@ -148,7 +148,7 @@ impl ModelHandle {
             self.entry.stats_ratios.clone(),
         );
         for xb in &set.batches {
-            let mut args: Vec<&xla::PjRtBuffer> = vec![xb];
+            let mut args: Vec<&Buffer> = vec![xb];
             args.extend(self.param_bufs.iter());
             // output tuple: one captured activation tensor per quantizer
             let outs = stats.run_b(&args)?;
@@ -319,9 +319,9 @@ impl ModelHandle {
     // -- forward / metric ------------------------------------------------------
 
     /// One forward pass; returns the logits tensor for the batch.
-    pub fn forward(&self, x: &xla::PjRtBuffer, cb: &ConfigBuffers) -> Result<Tensor> {
+    pub fn forward(&self, x: &Buffer, cb: &ConfigBuffers) -> Result<Tensor> {
         *self.fwd_calls.borrow_mut() += 1;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_bufs.len() + 4);
+        let mut args: Vec<&Buffer> = Vec::with_capacity(self.param_bufs.len() + 4);
         args.push(x);
         for (i, p) in self.param_bufs.iter().enumerate() {
             args.push(cb.overrides.get(&i).unwrap_or(p));
@@ -378,10 +378,10 @@ impl ModelHandle {
     }
 }
 
-/// Device-resident packed configuration.
+/// Backend-resident packed configuration.
 pub struct ConfigBuffers {
-    pub act_qp: xla::PjRtBuffer,
-    pub w_scales: xla::PjRtBuffer,
-    pub w_qmeta: xla::PjRtBuffer,
-    pub overrides: HashMap<usize, xla::PjRtBuffer>,
+    pub act_qp: Buffer,
+    pub w_scales: Buffer,
+    pub w_qmeta: Buffer,
+    pub overrides: HashMap<usize, Buffer>,
 }

@@ -4,14 +4,15 @@
 //!
 //! ## Why a pool of whole clients
 //!
-//! `xla::PjRtClient` (and everything hanging off it: compiled executables,
+//! The PJRT client (and everything hanging off it: compiled executables,
 //! device buffers, `Rc`-shared runtime state) is not `Send`, so PJRT state
 //! can never cross a thread boundary.  `util::par_map` therefore only ever
 //! covered pure host math, and after the engine (PR 1) removed the
 //! redundant work, Phase-1 sweeps and Phase-2 searches were compute-bound
 //! on one single-threaded client.  [`EvalPool`] sidesteps the `!Send` wall
-//! by *replication*: each worker thread builds its own [`Runtime`], its own
-//! [`ModelHandle`] (compiled forward executable + device-resident trained
+//! by *replication*: each worker thread builds its own [`Runtime`] — the
+//! backend the manifest names, PJRT or the pure-Rust sim interpreter — its
+//! own [`ModelHandle`] (compiled forward executable + resident trained
 //! parameters) and uploads its own **shard** of each eval set.  Only host
 //! data crosses the channels: [`QuantConfig`]s, override [`Tensor`]s,
 //! calibration state in, streaming-accumulator partials out.
@@ -519,12 +520,13 @@ fn worker_main(
     res: mpsc::Sender<ResMsg>,
     init: mpsc::Sender<(usize, Result<(), String>)>,
 ) {
-    // All PJRT state is created here, inside the thread, and never leaves.
-    // Panics are caught and reported — a silently dead worker would leave
-    // the coordinator blocked on a result slot that can never fill.
+    // All backend state (PJRT client or sim interpreter) is created here,
+    // inside the thread, and never leaves.  Panics are caught and reported —
+    // a silently dead worker would leave the coordinator blocked on a
+    // result slot that can never fill.
     let built = std::panic::catch_unwind(move || -> Result<ModelHandle> {
         let manifest = Manifest::load(&dir)?;
-        let rt = Rc::new(Runtime::cpu()?);
+        let rt = Rc::new(Runtime::for_manifest(&manifest)?);
         ModelHandle::open(rt, &manifest, &model)
     });
     let mut handle = match built {

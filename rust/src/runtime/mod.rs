@@ -1,17 +1,31 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Execution runtime: a pluggable backend behind one [`Runtime`] facade.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `compile` → `execute_b`).  Follows /opt/xla-example/load_hlo: HLO *text*
-//! is the interchange format (64-bit-id protos from jax ≥ 0.5 are rejected
-//! by xla_extension 0.5.1), and every executable returns a 1+ element tuple
-//! (`return_tuple=True` at lowering).
+//! Everything above this layer (model handles, the evaluation engine, the
+//! pool, Phase 1/2) speaks three verbs: *compile an artifact*, *upload a
+//! host tensor*, *execute with resident buffers*.  Those verbs are the
+//! [`Backend`] / [`Executable`] traits; two implementations exist:
+//!
+//! * **PJRT** ([`pjrt`], behind the default `pjrt` cargo feature) — loads
+//!   AOT-compiled HLO-text artifacts and executes them through the `xla`
+//!   crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `compile` → `execute_b`).  Follows /opt/xla-example/load_hlo: HLO
+//!   *text* is the interchange format (64-bit-id protos from jax ≥ 0.5 are
+//!   rejected by xla_extension 0.5.1), and every executable returns a 1+
+//!   element tuple (`return_tuple=True` at lowering).
+//! * **Sim** ([`crate::sim`]) — a pure-Rust interpreter for a synthetic
+//!   linear+fake-quant model family, selected by `"backend": "sim"` in the
+//!   manifest.  It consumes the *same* packed quant-param tensors and the
+//!   same argument layout as the lowered HLO executables, so the whole
+//!   Phase-1/Phase-2/pool stack runs end-to-end on it with no PJRT
+//!   artifacts, no `xla` shared library and no skips — the hermetic test
+//!   tier (see `rust/tests/README.md`).
 //!
 //! Performance notes (§Perf): all executions go through [`Exe::run_b`] with
-//! device-resident [`xla::PjRtBuffer`] arguments — model weights and
-//! calibration batches are uploaded **once** per run (see
-//! `ModelHandle::param_buffers`), and every consumer (forward, stats, taps,
-//! FIT) shares those buffers instead of re-uploading per batch.  Above this
-//! layer, [`crate::engine`] removes the remaining per-probe redundancy:
+//! backend-resident [`Buffer`] arguments — model weights and calibration
+//! batches are uploaded **once** per run (see `ModelHandle::param_buffers`),
+//! and every consumer (forward, stats, taps, FIT) shares those buffers
+//! instead of re-uploading per batch.  Above this layer, [`crate::engine`]
+//! removes the remaining per-probe redundancy:
 //!
 //! * the FP32 reference (logits + per-sample signal power) is **one cached
 //!   forward sweep** per `(model, eval-set)`, so a Phase-1 sweep costs
@@ -28,85 +42,132 @@
 //!   client itself is single-threaded and is **never shared across
 //!   threads**.
 //!
-//! The client's `!Send` boundary is scaled past by *replication*, not
+//! The PJRT client's `!Send` boundary is scaled past by *replication*, not
 //! sharing: [`crate::pool::EvalPool`] spawns N worker threads, each
-//! constructing its own `Runtime` (own `PjRtClient`, own compiled
-//! executables, own device-resident parameters) entirely inside the
-//! thread, with its own contiguous shard of each eval set.  Only host
-//! tensors and configurations cross the channels; probe results come back
-//! as per-shard streaming accumulators merged in global batch order, which
-//! is what makes pooled results bit-identical to this single-client path.
+//! constructing its own `Runtime` (own client, own compiled executables,
+//! own resident parameters) entirely inside the thread, with its own
+//! contiguous shard of each eval set.  Only host tensors and configurations
+//! cross the channels; probe results come back as per-shard streaming
+//! accumulators merged in global batch order, which is what makes pooled
+//! results bit-identical to this single-client path.  The sim backend keeps
+//! the identical architecture (its "buffers" are host tensors), so the pool
+//! paths are exercised for real in the hermetic tier.
 //!
 //! Run-time accounting: `Exe::calls`, `ModelHandle::fwd_calls` and the
 //! engine's eval/memo/reference counters feed the Table-5 numbers
 //! (per-worker in a pool; the pool adds its own probe/memo counters).
 
-use crate::tensor::{Data, Tensor};
-use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
+/// A backend-resident buffer.  Uploaded once, referenced by every execution
+/// that needs it; which variant a `Runtime` produces is an implementation
+/// detail callers never match on.
+pub enum Buffer {
+    /// Device-resident PJRT buffer (the `pjrt` backend).
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+    /// Host-resident tensor (the sim backend's "device" is host memory).
+    Host(Tensor),
+}
+
+/// One compiled artifact: takes resident [`Buffer`]s, returns host tensors.
+pub trait Executable {
+    fn run(&self, args: &[&Buffer]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: compile artifacts, upload tensors.
+pub trait Backend {
+    /// Human-readable platform tag (diagnostics only).
+    fn platform(&self) -> String;
+    /// Parse + compile the artifact at `path`.
+    fn compile(&self, path: &Path) -> Result<Box<dyn Executable>>;
+    /// Upload a host tensor to a backend-resident buffer.
+    fn upload(&self, t: &Tensor) -> Result<Buffer>;
+}
+
 /// A compiled executable plus bookkeeping.
 pub struct Exe {
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn Executable>,
     /// number of `run*` invocations (run-time accounting for Table 5)
     pub calls: RefCell<u64>,
 }
 
-/// PJRT client wrapper with an executable cache keyed by artifact path.
+/// Backend facade with an executable cache keyed by artifact path.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     cache: RefCell<HashMap<PathBuf, Rc<Exe>>>,
 }
 
 impl Runtime {
+    fn with_backend(backend: Box<dyn Backend>) -> Self {
+        Self { backend, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// PJRT CPU backend (requires the `pjrt` feature and the
+    /// `xla_extension` shared library baked into the toolchain image).
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, cache: RefCell::new(HashMap::new()) })
+        Ok(Self::with_backend(Box::new(pjrt::PjrtBackend::cpu()?)))
+    }
+
+    /// Pure-Rust sim backend ([`crate::sim`]).
+    pub fn sim() -> Self {
+        Self::with_backend(Box::new(crate::sim::SimBackend))
+    }
+
+    /// The backend a manifest's artifacts were built for
+    /// (`manifest.json`'s `"backend"` key; `"pjrt"` when absent).
+    pub fn for_manifest(manifest: &crate::manifest::Manifest) -> Result<Self> {
+        Self::for_backend(&manifest.backend)
+    }
+
+    /// Construct by backend tag: `"pjrt"` or `"sim"`.
+    pub fn for_backend(kind: &str) -> Result<Self> {
+        match kind {
+            "sim" => Ok(Self::sim()),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Self::cpu(),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => bail!(
+                "these artifacts want the PJRT backend, but this build has \
+                 no `pjrt` feature (rebuild with default features)"
+            ),
+            k => bail!("unknown execution backend '{k}' (want 'pjrt' or 'sim')"),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
+    /// Load + compile an artifact (cached by path).
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Exe>> {
         let path = path.as_ref().to_path_buf();
         if let Some(e) = self.cache.borrow().get(&path) {
             return Ok(e.clone());
         }
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let imp = self.backend.compile(&path)?;
         let name = path
             .file_name()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_default();
-        let rc = Rc::new(Exe { name, exe, calls: RefCell::new(0) });
+        let rc = Rc::new(Exe { name, imp, calls: RefCell::new(0) });
         self.cache.borrow_mut().insert(path, rc.clone());
         Ok(rc)
     }
 
-    /// Upload a host tensor to a device buffer.
-    pub fn buffer(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        let dims = &t.shape;
-        match &t.data {
-            Data::F32(v) => self
-                .client
-                .buffer_from_host_buffer(v, dims, None)
-                .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", dims)),
-            Data::I32(v) => self
-                .client
-                .buffer_from_host_buffer(v, dims, None)
-                .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", dims)),
-        }
+    /// Upload a host tensor to a backend-resident buffer.
+    pub fn buffer(&self, t: &Tensor) -> Result<Buffer> {
+        self.backend.upload(t)
     }
 
     /// Number of distinct compiled executables (cache size).
@@ -116,50 +177,52 @@ impl Runtime {
 }
 
 impl Exe {
-    /// Execute with device buffers; returns the decomposed output tuple as
-    /// host tensors.
-    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+    /// Execute with resident buffers; returns the decomposed output tuple
+    /// as host tensors.
+    pub fn run_b(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
         *self.calls.borrow_mut() += 1;
-        let outs = self
-            .exe
-            .execute_b(args)
-            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
-        let buf = outs
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))?;
-        let lit = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))?;
-        parts.into_iter().map(literal_to_tensor).collect()
+        self.imp
+            .run(args)
+            .with_context(|| format!("executing {}", self.name))
     }
 
     /// Convenience: upload host tensors, then `run_b`.
     pub fn run(&self, rt: &Runtime, args: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let bufs: Vec<xla::PjRtBuffer> =
-            args.iter().map(|t| rt.buffer(t)).collect::<Result<_>>()?;
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let bufs: Vec<Buffer> = args.iter().map(|t| rt.buffer(t)).collect::<Result<_>>()?;
+        let refs: Vec<&Buffer> = bufs.iter().collect();
         self.run_b(&refs)
     }
 }
 
-pub fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => {
-            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
-            Tensor::from_f32(&dims, v)
+impl Buffer {
+    /// The host tensor behind a [`Buffer::Host`]; errors on a buffer that
+    /// belongs to a different backend (a PJRT buffer handed to the sim
+    /// interpreter is a wiring bug, not a downloadable value).
+    pub fn host(&self) -> Result<&Tensor> {
+        match self {
+            Buffer::Host(t) => Ok(t),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => bail!("expected a host (sim) buffer, got a PJRT buffer"),
         }
-        xla::ElementType::S32 => {
-            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
-            Tensor::from_i32(&dims, v)
-        }
-        t => bail!("unsupported output element type {t:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_backend_rejects_unknown() {
+        assert!(Runtime::for_backend("tpu-v9").is_err());
+    }
+
+    #[test]
+    fn sim_backend_constructs_and_uploads() {
+        let rt = Runtime::sim();
+        assert_eq!(rt.platform(), "sim-host");
+        assert_eq!(rt.compiled_count(), 0);
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = rt.buffer(&t).unwrap();
+        assert_eq!(b.host().unwrap(), &t);
     }
 }

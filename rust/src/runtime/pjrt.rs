@@ -1,0 +1,103 @@
+//! PJRT implementation of the execution backend (the `pjrt` cargo
+//! feature): HLO-text artifacts compiled and executed through the `xla`
+//! crate on a CPU `PjRtClient`.  See the module docs in
+//! [`crate::runtime`] for the interchange-format and threading contracts.
+
+use super::{Backend, Buffer, Executable};
+use crate::tensor::{Data, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<Box<dyn Executable>> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Box::new(PjrtExe { exe }))
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        let dims = &t.shape;
+        let buf = match &t.data {
+            Data::F32(v) => self
+                .client
+                .buffer_from_host_buffer(v, dims, None)
+                .map_err(|e| anyhow!("upload f32 {:?}: {e:?}", dims))?,
+            Data::I32(v) => self
+                .client
+                .buffer_from_host_buffer(v, dims, None)
+                .map_err(|e| anyhow!("upload i32 {:?}: {e:?}", dims))?,
+        };
+        Ok(Buffer::Pjrt(buf))
+    }
+}
+
+struct PjrtExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// error messages carry no executable name — `Exe::run_b` wraps every
+// execution error with `executing <artifact file>` generically
+impl Executable for PjrtExe {
+    fn run(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
+        let bufs: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .map(|b| match b {
+                Buffer::Pjrt(p) => Ok(p),
+                Buffer::Host(_) => Err(anyhow!("host (sim) buffer passed to PJRT")),
+            })
+            .collect::<Result<_>>()?;
+        let outs = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let buf = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts.into_iter().map(literal_to_tensor).collect()
+    }
+}
+
+pub fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Tensor::from_f32(&dims, v)
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Tensor::from_i32(&dims, v)
+        }
+        t => bail!("unsupported output element type {t:?}"),
+    }
+}

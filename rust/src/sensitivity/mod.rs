@@ -266,8 +266,8 @@ fn fit_scores(
         .ok_or_else(|| anyhow!("missing fit_act_shapes"))?;
 
     // zero perturbations, uploaded once; trained parameters reused from the
-    // handle's device-resident copies (uploaded once at open)
-    let pert_bufs: Vec<xla::PjRtBuffer> = shapes
+    // handle's resident copies (uploaded once at open)
+    let pert_bufs: Vec<crate::runtime::Buffer> = shapes
         .iter()
         .map(|s| handle.rt.buffer(&Tensor::zeros(s)))
         .collect::<Result<_>>()?;
@@ -307,7 +307,7 @@ fn fit_scores(
 
         for (bi, xb) in set.batches.iter().enumerate() {
             let yb = handle.rt.buffer(&label_batches[bi])?;
-            let mut args: Vec<&xla::PjRtBuffer> = vec![xb, &yb];
+            let mut args: Vec<&crate::runtime::Buffer> = vec![xb, &yb];
             args.extend(param_bufs.iter());
             args.extend(pert_bufs.iter());
             args.push(&qp_buf);

@@ -1,0 +1,814 @@
+//! The sim execution backend — a pure-Rust interpreter for a synthetic
+//! linear+fake-quant model family, plus the artifact generator that makes
+//! it a drop-in model zoo.
+//!
+//! ## Why it exists
+//!
+//! Every integration test used to skip without PJRT artifacts, so the
+//! Phase-1 sweep, all Phase-2 searches and the whole `pool` parallel path
+//! shipped verified only by hermetic unit tests.  The sim backend closes
+//! that gap the way QBitOpt-style reproductions validate their searches on
+//! cheap proxy evaluations: a tiny model family whose forward pass is
+//! interpretable in-process, wired behind the *same*
+//! [`crate::runtime::Backend`] trait the PJRT path implements.  The entire
+//! L3 stack — `ModelHandle::open`, range calibration, weight-scale search,
+//! the engine's reference/memo/patching, `EvalPool` sharding, every search
+//! — runs unchanged on it, end-to-end, with zero artifacts and zero skips.
+//!
+//! ## The model family
+//!
+//! `sim_mlp` is a dense chain mirroring `python/compile`'s `dense` op
+//! semantics exactly (so an HLO-lowered MLP of the same shape is
+//! comparable, see [`export_from_artifacts`]):
+//!
+//! ```text
+//! h = fq_act(x, row 0)                       # input quantizer
+//! for i in 0..L:
+//!     y = h @ fq_w(W_i, scales_i, meta_i) + b_i
+//!     if i < L-1: y = relu(y)
+//!     h = fq_act(y, row i+1)                 # layer-output quantizer
+//! logits = h
+//! ```
+//!
+//! Quantizer parameters arrive as the **same packed runtime tensors** the
+//! lowered HLO consumes (`act_qp[A,5]` rows `(scale, offset, qmin, qmax,
+//! enable)`, `w_scales[W,Cmax]`, `w_qmeta[W,3]` rows `(qmin, qmax,
+//! enable)`; see `python/compile/quantize.py` and
+//! [`crate::engine::Materializer`]), with `enable = 0` rows bypassing the
+//! quantizer exactly — FP32 evaluation is the all-disabled config on the
+//! same "executable".  Fake-quant uses [`crate::quant::fq`] (round half
+//! away from zero); the jax lowering rounds half to even, which is why
+//! PJRT↔sim parity is asserted *to tolerance*, not bit-exactly.
+//!
+//! Two artifact kinds exist, as tiny JSON programs next to the manifest:
+//! `<m>.fwd.sim.json` (quantized forward; args `x, params...,
+//! act_qp, w_scales, w_qmeta`, returns logits) and `<m>.stats.sim.json`
+//! (FP forward returning every act quantizer's input, for MSE range
+//! estimation) — the same contract as the `.hlo.txt` artifacts.
+//!
+//! Determinism: the interpreter is plain sequential f32 host math, so any
+//! sharding of an eval set reproduces the serial per-batch partials
+//! bit-exactly — the pool's exactness guarantee is *exercised*, not just
+//! asserted, by the hermetic tier (`rust/tests/sim_e2e.rs`).
+
+use crate::jsonio::{self, Json};
+use crate::metrics;
+use crate::quant;
+use crate::runtime::{Backend, Buffer, Executable};
+use crate::tensor::{io, Tensor};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// The pure-Rust execution backend (stateless; "uploads" are clones).
+pub struct SimBackend;
+
+impl Backend for SimBackend {
+    fn platform(&self) -> String {
+        "sim-host".into()
+    }
+
+    fn compile(&self, path: &Path) -> Result<Box<dyn Executable>> {
+        Ok(Box::new(SimProgram::load(path)?))
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Buffer> {
+        Ok(Buffer::Host(t.clone()))
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Forward,
+    Stats,
+}
+
+/// A parsed sim artifact: which probe it is plus the chain dimensions
+/// `d_0 → d_1 → … → d_L` (L dense layers, relu between hidden layers).
+pub struct SimProgram {
+    kind: Kind,
+    /// layer widths, length `L + 1`
+    pub dims: Vec<usize>,
+}
+
+impl SimProgram {
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = jsonio::parse_file(path)
+            .with_context(|| format!("parsing sim program {}", path.display()))?;
+        if j.req("sim_program")?.as_usize()? != 1 {
+            bail!("{}: unsupported sim program version", path.display());
+        }
+        let kind = match j.req("kind")?.as_str()? {
+            "forward" => Kind::Forward,
+            "stats" => Kind::Stats,
+            k => bail!("{}: unknown sim program kind '{k}'", path.display()),
+        };
+        let dims = j.req("dims")?.usize_vec()?;
+        if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+            bail!("{}: bad dims {dims:?}", path.display());
+        }
+        Ok(Self { kind, dims })
+    }
+
+    fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Split `args` into `(x, per-layer (w, b), trailing)`, flattening the
+    /// input to `[B, d0]` and checking every shape.
+    fn split_args<'a>(
+        &self,
+        args: &[&'a Buffer],
+        trailing: usize,
+    ) -> Result<(Vec<f32>, usize, Vec<(&'a [f32], &'a [f32])>, Vec<&'a Tensor>)> {
+        let l = self.layers();
+        if args.len() != 1 + 2 * l + trailing {
+            bail!(
+                "sim exe got {} args, want {} (x + {} params + {trailing})",
+                args.len(),
+                1 + 2 * l + trailing,
+                2 * l
+            );
+        }
+        let x = args[0].host()?;
+        let b = x.shape.first().copied().unwrap_or(0);
+        let numel: usize = x.shape[1..].iter().product();
+        if numel != self.dims[0] {
+            bail!("sim input numel {numel} != d0 {}", self.dims[0]);
+        }
+        let xv = x.f32s().context("sim input must be f32")?.to_vec();
+        let mut params = Vec::with_capacity(l);
+        for i in 0..l {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let w = args[1 + 2 * i].host()?;
+            let bias = args[2 + 2 * i].host()?;
+            if w.shape != [din, dout] {
+                bail!("sim layer {i}: weight shape {:?}, want [{din}, {dout}]", w.shape);
+            }
+            if bias.shape != [dout] {
+                bail!("sim layer {i}: bias shape {:?}, want [{dout}]", bias.shape);
+            }
+            params.push((w.f32s()?, bias.f32s()?));
+        }
+        let rest = args[1 + 2 * l..].iter().map(|a| a.host()).collect::<Result<_>>()?;
+        Ok((xv, b, params, rest))
+    }
+
+    /// Quantized forward — mirrors the lowered HLO contract:
+    /// `x, params..., act_qp[A,5], w_scales[W,Cmax], w_qmeta[W,3]` → logits.
+    fn forward(&self, args: &[&Buffer]) -> Result<Tensor> {
+        let l = self.layers();
+        let (mut h, batch, params, rest) = self.split_args(args, 3)?;
+        let (act_qp, w_scales, w_qmeta) = (rest[0], rest[1], rest[2]);
+        if act_qp.shape != [l + 1, 5] {
+            bail!("act_qp shape {:?}, want [{}, 5]", act_qp.shape, l + 1);
+        }
+        if w_qmeta.shape != [l, 3] {
+            bail!("w_qmeta shape {:?}, want [{l}, 3]", w_qmeta.shape);
+        }
+        let cmax = match w_scales.shape.as_slice() {
+            [w, c] if *w == l && *c >= self.dims[1..].iter().copied().max().unwrap_or(1) => *c,
+            s => bail!("w_scales shape {s:?} too small for dims {:?}", self.dims),
+        };
+        let (qp, sc, meta) = (act_qp.f32s()?, w_scales.f32s()?, w_qmeta.f32s()?);
+
+        fq_act(&mut h, &qp[0..5]);
+        for i in 0..l {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let (w, bias) = params[i];
+            let wq = fq_weight(w, din, dout, &sc[i * cmax..i * cmax + dout], &meta[i * 3..i * 3 + 3]);
+            let mut y = matmul_bias(&h, batch, din, &wq, dout, bias);
+            if i + 1 < l {
+                for v in &mut y {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            fq_act(&mut y, &qp[(i + 1) * 5..(i + 2) * 5]);
+            h = y;
+        }
+        Tensor::from_f32(&[batch, self.dims[l]], h)
+    }
+
+    /// FP forward returning every act quantizer's input (range
+    /// calibration): `x, params...` → one tensor per quantizer.
+    fn stats(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
+        let l = self.layers();
+        let (mut h, batch, params, _) = self.split_args(args, 0)?;
+        let mut caps = Vec::with_capacity(l + 1);
+        caps.push(Tensor::from_f32(&[batch, self.dims[0]], h.clone())?);
+        for i in 0..l {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let (w, bias) = params[i];
+            let mut y = matmul_bias(&h, batch, din, w, dout, bias);
+            if i + 1 < l {
+                for v in &mut y {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            caps.push(Tensor::from_f32(&[batch, dout], y.clone())?);
+            h = y;
+        }
+        Ok(caps)
+    }
+}
+
+impl Executable for SimProgram {
+    fn run(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
+        match self.kind {
+            Kind::Forward => Ok(vec![self.forward(args)?]),
+            Kind::Stats => self.stats(args),
+        }
+    }
+}
+
+/// In-place fake-quant of a slice under one packed `act_qp` row
+/// `(scale, offset, qmin, qmax, enable)` — `enable = 0` bypasses exactly.
+fn fq_act(v: &mut [f32], row: &[f32]) {
+    if row[4] == 0.0 {
+        return;
+    }
+    let (s, o, qmin, qmax) = (row[0], row[1], row[2], row[3]);
+    for x in v {
+        *x = quant::fq(*x, s, o, qmin, qmax);
+    }
+}
+
+/// Per-output-channel symmetric fake-quant of a `[din, dout]` weight under
+/// one packed `w_qmeta` row `(qmin, qmax, enable)` — same formula as
+/// [`quant::quantize_weight`] with `channel_axis = 1`.
+fn fq_weight(w: &[f32], din: usize, dout: usize, scales: &[f32], meta: &[f32]) -> Vec<f32> {
+    let mut out = w.to_vec();
+    if meta[2] == 0.0 {
+        return out;
+    }
+    let (qmin, qmax) = (meta[0], meta[1]);
+    for r in 0..din {
+        for c in 0..dout {
+            let i = r * dout + c;
+            out[i] = quant::fq(w[i], scales[c], 0.0, qmin, qmax);
+        }
+    }
+    out
+}
+
+/// `x[B, din] @ w[din, dout] + bias[dout]`, sequential f32 accumulation —
+/// deterministic for any sharding of the batch dimension.
+fn matmul_bias(x: &[f32], batch: usize, din: usize, w: &[f32], dout: usize, bias: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; batch * dout];
+    for r in 0..batch {
+        let xr = &x[r * din..(r + 1) * din];
+        let or = &mut out[r * dout..(r + 1) * dout];
+        for (k, &xk) in xr.iter().enumerate() {
+            let wr = &w[k * dout..(k + 1) * dout];
+            for c in 0..dout {
+                or[c] += xk * wr[c];
+            }
+        }
+        for c in 0..dout {
+            or[c] += bias[c];
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// artifact generation
+// ---------------------------------------------------------------------------
+
+/// Shape of a generated sim model zoo (one MLP model + datasets).
+#[derive(Clone, Debug)]
+pub struct SimSpec {
+    pub name: String,
+    pub batch: usize,
+    /// layer widths `d_0 → … → d_L` (last = class count)
+    pub dims: Vec<usize>,
+    pub calib_n: usize,
+    pub val_n: usize,
+    /// unlabeled out-of-domain calibration pool (0 = none)
+    pub ood_n: usize,
+    pub seed: u64,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        Self {
+            name: "sim_mlp".into(),
+            batch: 8,
+            dims: vec![16, 24, 16, 10],
+            calib_n: 192,
+            val_n: 192,
+            ood_n: 64,
+            seed: 7,
+        }
+    }
+}
+
+/// Write a complete, self-contained sim artifacts directory — manifest,
+/// program files, weights and datasets — that `Manifest::load` +
+/// `ModelHandle::open` consume exactly like a PJRT artifacts dir.
+///
+/// Labels are the FP32 model's own argmax, so `fp32_val_metric` is exactly
+/// the recorded top-1 and quantization noise degrades it smoothly (samples
+/// near the decision boundary flip first).  A couple of outlier-scaled
+/// weight columns widen the per-group sensitivity spread, so Phase-1 lists
+/// have non-trivial order and Phase-2 curves have real shape.
+pub fn generate(dir: impl AsRef<Path>, spec: &SimSpec) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    if spec.dims.len() < 2 || spec.dims.iter().any(|&d| d == 0) {
+        // same validity rule SimProgram::load applies — fail at generation,
+        // not at first open of the broken zoo
+        bail!("sim spec needs >= 1 layer of nonzero width (dims {:?})", spec.dims);
+    }
+    let l = spec.dims.len() - 1;
+    if spec.calib_n % spec.batch != 0 || spec.val_n % spec.batch != 0 {
+        bail!("calib_n/val_n must be multiples of batch (EvalSet truncation)");
+    }
+    let mut rng = Rng::new(spec.seed);
+
+    // weights: uniform in ±sqrt(6/(din+dout)); layer 1 gets two hot output
+    // columns (the outlier-channel pathology that makes MP interesting)
+    let mut weights: Vec<Tensor> = Vec::with_capacity(2 * l);
+    for i in 0..l {
+        let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+        let a = (6.0 / (din + dout) as f64).sqrt() as f32;
+        let mut w: Vec<f32> = (0..din * dout)
+            .map(|_| (rng.f64() as f32 * 2.0 - 1.0) * a)
+            .collect();
+        if i == 1.min(l - 1) {
+            for &hot in &[1usize, dout.saturating_sub(1)] {
+                if hot < dout {
+                    for r in 0..din {
+                        w[r * dout + hot] *= 6.0;
+                    }
+                }
+            }
+        }
+        weights.push(Tensor::from_f32(&[din, dout], w)?);
+        weights.push(Tensor::zeros(&[dout]));
+    }
+
+    let fwd = SimProgram { kind: Kind::Forward, dims: spec.dims.clone() };
+    let logits_of = |x: &Tensor| -> Result<Tensor> {
+        // FP32 logits via the real interpreter path (all quantizers off)
+        let act_qp = fp_act_qp(l + 1);
+        let w_scales = Tensor::from_f32(
+            &[l, spec.dims[1..].iter().copied().max().unwrap()],
+            vec![1.0; l * spec.dims[1..].iter().copied().max().unwrap()],
+        )?;
+        let w_qmeta = fp_w_qmeta(l);
+        let mut bufs: Vec<Buffer> = vec![Buffer::Host(x.clone())];
+        for t in &weights {
+            bufs.push(Buffer::Host(t.clone()));
+        }
+        bufs.push(Buffer::Host(act_qp));
+        bufs.push(Buffer::Host(w_scales));
+        bufs.push(Buffer::Host(w_qmeta));
+        let refs: Vec<&Buffer> = bufs.iter().collect();
+        fwd.forward(&refs)
+    };
+
+    let make_set = |rng: &mut Rng, n: usize| -> Result<(Tensor, Tensor, Tensor)> {
+        let d0 = spec.dims[0];
+        let x: Vec<f32> = (0..n * d0).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let x = Tensor::from_f32(&[n, d0], x)?;
+        let logits = logits_of(&x)?;
+        let (lv, c) = (logits.f32s()?, spec.dims[l]);
+        let y: Vec<f32> = (0..n)
+            .map(|i| {
+                let row = &lv[i * c..(i + 1) * c];
+                let mut best = 0usize;
+                let mut bv = f32::NEG_INFINITY;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > bv {
+                        bv = v;
+                        best = j;
+                    }
+                }
+                best as f32
+            })
+            .collect();
+        let y = Tensor::from_f32(&[n], y)?;
+        Ok((x, y, logits))
+    };
+
+    let (cx, cy, _) = make_set(&mut rng, spec.calib_n)?;
+    let (vx, vy, vlogits) = make_set(&mut rng, spec.val_n)?;
+    let fp_metric = metrics::top1(&vlogits, &vy)?;
+
+    let n = &spec.name;
+    io::write_tensors(dir.join(format!("{n}.weights.bin")), &weights)?;
+    io::write_tensors(dir.join(format!("{n}.calib.x.bin")), std::slice::from_ref(&cx))?;
+    io::write_tensors(dir.join(format!("{n}.calib.y.bin")), std::slice::from_ref(&cy))?;
+    io::write_tensors(dir.join(format!("{n}.val.x.bin")), std::slice::from_ref(&vx))?;
+    io::write_tensors(dir.join(format!("{n}.val.y.bin")), std::slice::from_ref(&vy))?;
+    let ood_file = if spec.ood_n > 0 {
+        // out-of-domain pool: shifted uniform, unlabeled (Fig. 4 path)
+        let d0 = spec.dims[0];
+        let x: Vec<f32> = (0..spec.ood_n * d0)
+            .map(|_| rng.f64() as f32 * 1.5 + 0.25)
+            .collect();
+        let t = Tensor::from_f32(&[spec.ood_n, d0], x)?;
+        io::write_tensors(dir.join(format!("{n}.ood.x.bin")), std::slice::from_ref(&t))?;
+        Some(format!("{n}.ood.x.bin"))
+    } else {
+        None
+    };
+
+    write_program(dir, &format!("{n}.fwd.sim.json"), "forward", &spec.dims)?;
+    write_program(dir, &format!("{n}.stats.sim.json"), "stats", &spec.dims)?;
+
+    let entry = mlp_entry_json(spec, fp_metric, ood_file.as_deref());
+    let manifest = Json::Obj(vec![
+        ("backend".into(), Json::Str("sim".into())),
+        ("models".into(), Json::Obj(vec![(n.clone(), entry)])),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string() + "\n")
+        .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
+    Ok(())
+}
+
+fn fp_act_qp(a: usize) -> Tensor {
+    let mut v = vec![0f32; a * 5];
+    for i in 0..a {
+        v[i * 5..(i + 1) * 5].copy_from_slice(&[1.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+    Tensor::from_f32(&[a, 5], v).unwrap()
+}
+
+fn fp_w_qmeta(w: usize) -> Tensor {
+    let mut v = vec![0f32; w * 3];
+    for i in 0..w {
+        v[i * 3..(i + 1) * 3].copy_from_slice(&[-1.0, 1.0, 0.0]);
+    }
+    Tensor::from_f32(&[w, 3], v).unwrap()
+}
+
+fn write_program(dir: &Path, file: &str, kind: &str, dims: &[usize]) -> Result<()> {
+    let j = Json::Obj(vec![
+        ("sim_program".into(), Json::Num(1.0)),
+        ("kind".into(), Json::Str(kind.into())),
+        (
+            "dims".into(),
+            Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+    ]);
+    std::fs::write(dir.join(file), j.to_string() + "\n")
+        .with_context(|| format!("writing {}/{file}", dir.display()))
+}
+
+/// The manifest entry for a generated MLP — same schema
+/// `python/compile/aot.py` emits, so `Manifest::parse_model` is untouched.
+fn mlp_entry_json(spec: &SimSpec, fp_metric: f64, ood: Option<&str>) -> Json {
+    let l = spec.dims.len() - 1;
+    let n = &spec.name;
+    let num = |x: usize| Json::Num(x as f64);
+    let mut params = Vec::new();
+    let mut act_q = vec![Json::Obj(vec![
+        ("name".into(), Json::Str("input".into())),
+        ("numel".into(), num(spec.dims[0])),
+    ])];
+    let mut w_q = Vec::new();
+    let mut layers = Vec::new();
+    let mut groups = Vec::new();
+    let mut total_macs = 0usize;
+    for i in 0..l {
+        let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+        params.push(Json::Obj(vec![
+            ("name".into(), Json::Str(format!("fc{i}.w"))),
+            ("shape".into(), Json::Arr(vec![num(din), num(dout)])),
+        ]));
+        params.push(Json::Obj(vec![
+            ("name".into(), Json::Str(format!("fc{i}.b"))),
+            ("shape".into(), Json::Arr(vec![num(dout)])),
+        ]));
+        act_q.push(Json::Obj(vec![
+            ("name".into(), Json::Str(format!("fc{i}.out"))),
+            ("numel".into(), num(dout)),
+        ]));
+        w_q.push(Json::Obj(vec![
+            ("name".into(), Json::Str(format!("fc{i}.w"))),
+            ("weight".into(), Json::Str(format!("fc{i}.w"))),
+            ("channels".into(), num(dout)),
+            ("channel_axis".into(), num(1)),
+        ]));
+        let macs = din * dout;
+        total_macs += macs;
+        layers.push(Json::Obj(vec![
+            ("name".into(), Json::Str(format!("fc{i}"))),
+            ("macs".into(), num(macs)),
+            ("w_q".into(), num(i)),
+            ("in_acts".into(), Json::Arr(vec![num(i)])),
+        ]));
+        groups.push(Json::Obj(vec![
+            ("w_q".into(), Json::Arr(vec![num(i)])),
+            ("act_q".into(), Json::Arr(vec![num(i)])),
+            ("macs".into(), num(macs)),
+        ]));
+    }
+    // the logits quantizer feeds no weighted op: weightless group, pinned
+    // to the baseline by Phase 2 (same convention as the lowered zoo)
+    groups.push(Json::Obj(vec![
+        ("w_q".into(), Json::Arr(vec![])),
+        ("act_q".into(), Json::Arr(vec![num(l)])),
+        ("macs".into(), num(0)),
+    ]));
+    Json::Obj(vec![
+        ("task".into(), Json::Str("classify10".into())),
+        ("batch".into(), num(spec.batch)),
+        (
+            "input".into(),
+            Json::Obj(vec![
+                ("shape".into(), Json::Arr(vec![num(spec.batch), num(spec.dims[0])])),
+                ("dtype".into(), Json::Str("f32".into())),
+            ]),
+        ),
+        ("forward".into(), Json::Str(format!("{n}.fwd.sim.json"))),
+        ("stats".into(), Json::Str(format!("{n}.stats.sim.json"))),
+        (
+            "stats_bits".into(),
+            Json::Arr(vec![num(4), num(6), num(8), num(16)]),
+        ),
+        (
+            "stats_ratios".into(),
+            Json::Arr(quant::default_ratios().into_iter().map(Json::Num).collect()),
+        ),
+        ("weights_file".into(), Json::Str(format!("{n}.weights.bin"))),
+        ("params".into(), Json::Arr(params)),
+        (
+            "out_shape".into(),
+            Json::Arr(vec![num(spec.batch), num(spec.dims[l])]),
+        ),
+        ("act_quantizers".into(), Json::Arr(act_q)),
+        ("w_quantizers".into(), Json::Arr(w_q)),
+        ("layers".into(), Json::Arr(layers)),
+        ("groups".into(), Json::Arr(groups)),
+        ("total_macs".into(), num(total_macs)),
+        ("cmax".into(), num(spec.dims[1..].iter().copied().max().unwrap())),
+        ("fp32_val_metric".into(), Json::Num(fp_metric)),
+        (
+            "data".into(),
+            Json::Obj(vec![
+                ("calib".into(), Json::Str(format!("{n}.calib.x.bin"))),
+                ("calib_labels".into(), Json::Str(format!("{n}.calib.y.bin"))),
+                ("val".into(), Json::Str(format!("{n}.val.x.bin"))),
+                ("val_labels".into(), Json::Str(format!("{n}.val.y.bin"))),
+                (
+                    "ood_calib".into(),
+                    ood.map(|f| Json::Str(f.into())).unwrap_or(Json::Null),
+                ),
+            ]),
+        ),
+        ("taps".into(), Json::Null),
+        ("adaround".into(), Json::Arr(vec![])),
+        ("fit".into(), Json::Null),
+        ("fit_act_shapes".into(), Json::Null),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// PJRT ↔ sim parity export
+// ---------------------------------------------------------------------------
+
+/// Re-export an HLO-lowered dense-chain model (e.g. `mlp_parity_s` from
+/// `python/compile/models.py`) as a sim artifacts directory sharing the
+/// *same* trained weights and datasets, so the two backends can be compared
+/// on identical inputs (the artifacts-gated parity smoke test).
+///
+/// Validates that the entry really is the sim family — params alternate
+/// `fc.w [din, dout]` / `fc.b [dout]`, weight quantizers are per-output
+/// channel (`channel_axis = 1`) — and fails loudly otherwise rather than
+/// silently interpreting a different graph.
+pub fn export_from_artifacts(
+    src_dir: impl AsRef<Path>,
+    model: &str,
+    out_dir: impl AsRef<Path>,
+) -> Result<()> {
+    let (src, out) = (src_dir.as_ref(), out_dir.as_ref());
+    let j = jsonio::parse_file(src.join("manifest.json"))?;
+    let entry = j
+        .req("models")?
+        .get(model)
+        .ok_or_else(|| anyhow!("model '{model}' not in {}", src.display()))?;
+
+    // recover and validate the chain dimensions from the parameter list
+    let params = entry.req("params")?.as_arr()?;
+    if params.len() < 2 || params.len() % 2 != 0 {
+        bail!("'{model}' is not a dense chain ({} params)", params.len());
+    }
+    let l = params.len() / 2;
+    let mut dims = Vec::with_capacity(l + 1);
+    for i in 0..l {
+        let w = params[2 * i].req("shape")?.usize_vec()?;
+        let b = params[2 * i + 1].req("shape")?.usize_vec()?;
+        if w.len() != 2 || b != [w[1]] {
+            bail!("'{model}' layer {i}: shapes {w:?}/{b:?} are not dense w/b");
+        }
+        if i == 0 {
+            dims.push(w[0]);
+        } else if dims[i] != w[0] {
+            bail!("'{model}' layer {i}: input dim {} != previous output {}", w[0], dims[i]);
+        }
+        dims.push(w[1]);
+    }
+    let in_numel: usize = entry
+        .req("input")?
+        .req("shape")?
+        .usize_vec()?[1..]
+        .iter()
+        .product();
+    if in_numel != dims[0] {
+        bail!("'{model}': input numel {in_numel} != first dense input {}", dims[0]);
+    }
+    let wqs = entry.req("w_quantizers")?.as_arr()?;
+    if wqs.len() != l {
+        bail!("'{model}' has {} weight quantizers, want {l} (one per dense layer)", wqs.len());
+    }
+    for (i, q) in wqs.iter().enumerate() {
+        if q.req("channel_axis")?.as_usize()? != 1 || q.req("channels")?.as_usize()? != dims[i + 1]
+        {
+            bail!("'{model}' w quantizer {i} is not per-output-channel dense");
+        }
+    }
+
+    std::fs::create_dir_all(out).with_context(|| format!("creating {}", out.display()))?;
+    let mut copy = |key: &str| -> Result<()> {
+        let f = entry.req("data")?.req(key)?.as_str()?.to_string();
+        std::fs::copy(src.join(&f), out.join(&f))
+            .with_context(|| format!("copying {f}"))?;
+        Ok(())
+    };
+    for key in ["calib", "calib_labels", "val", "val_labels"] {
+        copy(key)?;
+    }
+    let wfile = entry.req("weights_file")?.as_str()?.to_string();
+    std::fs::copy(src.join(&wfile), out.join(&wfile))
+        .with_context(|| format!("copying {wfile}"))?;
+
+    write_program(out, &format!("{model}.fwd.sim.json"), "forward", &dims)?;
+    write_program(out, &format!("{model}.stats.sim.json"), "stats", &dims)?;
+
+    // clone the entry, retargeting the executables at the sim programs and
+    // dropping PJRT-only artifacts (taps / AdaRound / FIT / OOD files that
+    // weren't copied)
+    let mut e = entry.clone();
+    obj_set(&mut e, "forward", Json::Str(format!("{model}.fwd.sim.json")));
+    obj_set(&mut e, "stats", Json::Str(format!("{model}.stats.sim.json")));
+    obj_set(&mut e, "taps", Json::Null);
+    obj_set(&mut e, "adaround", Json::Arr(vec![]));
+    obj_set(&mut e, "fit", Json::Null);
+    obj_set(&mut e, "fit_act_shapes", Json::Null);
+    if let Some(d) = e.get("data").cloned() {
+        let mut d2 = d;
+        obj_set(&mut d2, "ood_calib", Json::Null);
+        obj_set(&mut e, "data", d2);
+    }
+    let manifest = Json::Obj(vec![
+        ("backend".into(), Json::Str("sim".into())),
+        ("models".into(), Json::Obj(vec![(model.to_string(), e)])),
+    ]);
+    std::fs::write(out.join("manifest.json"), manifest.to_string() + "\n")
+        .with_context(|| format!("writing {}/manifest.json", out.display()))?;
+    Ok(())
+}
+
+/// Set (or append) a key in a `Json::Obj`.
+fn obj_set(obj: &mut Json, key: &str, val: Json) {
+    if let Json::Obj(kv) = obj {
+        if let Some(slot) = kv.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = val;
+        } else {
+            kv.push((key.to_string(), val));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("mpq_sim_unit_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn program_roundtrips_and_rejects_garbage() {
+        let d = tmp("prog");
+        write_program(&d, "p.json", "forward", &[4, 3, 2]).unwrap();
+        let p = SimProgram::load(&d.join("p.json")).unwrap();
+        assert_eq!(p.kind, Kind::Forward);
+        assert_eq!(p.dims, vec![4, 3, 2]);
+        std::fs::write(d.join("bad.json"), "{\"sim_program\":1,\"kind\":\"conv\",\"dims\":[2,2]}")
+            .unwrap();
+        assert!(SimProgram::load(&d.join("bad.json")).is_err());
+        std::fs::write(d.join("bad2.json"), "{\"sim_program\":1,\"kind\":\"forward\",\"dims\":[2]}")
+            .unwrap();
+        assert!(SimProgram::load(&d.join("bad2.json")).is_err());
+    }
+
+    /// The interpreter with all quantizers disabled must equal a plain
+    /// matmul chain, and enabled rows must equal `quant::fq` applied
+    /// element-wise — the non-gated drift guard for the fake-quant path.
+    #[test]
+    fn forward_matches_host_oracle() {
+        let dims = vec![3usize, 4, 2];
+        let prog = SimProgram { kind: Kind::Forward, dims: dims.clone() };
+        let mut rng = Rng::new(11);
+        let mut r = || rng.f64() as f32 * 2.0 - 1.0;
+        let x: Vec<f32> = (0..2 * 3).map(|_| r()).collect();
+        let w0: Vec<f32> = (0..3 * 4).map(|_| r()).collect();
+        let w1: Vec<f32> = (0..4 * 2).map(|_| r()).collect();
+        let b0: Vec<f32> = (0..4).map(|_| r()).collect();
+        let b1: Vec<f32> = (0..2).map(|_| r()).collect();
+
+        // act row 1 (hidden) enabled at 8 bits; weight 0 enabled at 4 bits
+        let mut act_qp = fp_act_qp(3).f32s().unwrap().to_vec();
+        act_qp[5..10].copy_from_slice(&[0.02, 3.0, 0.0, 255.0, 1.0]);
+        let mut meta = fp_w_qmeta(2).f32s().unwrap().to_vec();
+        meta[0..3].copy_from_slice(&[-7.0, 7.0, 1.0]);
+        let scales = vec![0.05f32, 0.07, 0.11, 0.13, 1.0, 1.0, 1.0, 1.0]; // [2, 4]
+
+        let bufs: Vec<Buffer> = vec![
+            Buffer::Host(Tensor::from_f32(&[2, 3], x.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[3, 4], w0.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[4], b0.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[4, 2], w1.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[2], b1.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[3, 5], act_qp.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[2, 4], scales.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[2, 3], meta.clone()).unwrap()),
+        ];
+        let refs: Vec<&Buffer> = bufs.iter().collect();
+        let got = prog.forward(&refs).unwrap();
+
+        // independent oracle: same math, straight-line
+        let mut h = x;
+        let mut y0 = vec![0f32; 2 * 4];
+        let wq0: Vec<f32> = (0..12)
+            .map(|i| quant::fq(w0[i], scales[i % 4], 0.0, -7.0, 7.0))
+            .collect();
+        for rix in 0..2 {
+            for c in 0..4 {
+                let mut acc = 0f32;
+                for k in 0..3 {
+                    acc += h[rix * 3 + k] * wq0[k * 4 + c];
+                }
+                acc += b0[c];
+                if acc < 0.0 {
+                    acc = 0.0;
+                }
+                y0[rix * 4 + c] = quant::fq(acc, 0.02, 3.0, 0.0, 255.0);
+            }
+        }
+        h = y0;
+        let mut y1 = vec![0f32; 2 * 2];
+        for rix in 0..2 {
+            for c in 0..2 {
+                let mut acc = 0f32;
+                for k in 0..4 {
+                    acc += h[rix * 4 + k] * w1[k * 2 + c];
+                }
+                y1[rix * 2 + c] = acc + b1[c];
+            }
+        }
+        for (g, w) in got.f32s().unwrap().iter().zip(&y1) {
+            assert_eq!(g.to_bits(), w.to_bits(), "interpreter drifted from oracle");
+        }
+    }
+
+    #[test]
+    fn generated_zoo_opens_and_reports_its_metric() {
+        let d = tmp("gen");
+        let spec = SimSpec { calib_n: 32, val_n: 32, ood_n: 16, ..Default::default() };
+        generate(&d, &spec).unwrap();
+        let man = crate::manifest::Manifest::load(&d).unwrap();
+        assert_eq!(man.backend, "sim");
+        let entry = man.model(&spec.name).unwrap();
+        assert_eq!(entry.n_w(), spec.dims.len() - 1);
+        assert_eq!(entry.n_act(), spec.dims.len());
+        crate::groups::Assignment::validate_partition(entry).unwrap();
+        assert_eq!(
+            entry.total_macs,
+            entry.groups.iter().map(|g| g.macs).sum::<u64>()
+        );
+        let rt = std::rc::Rc::new(Runtime::for_manifest(&man).unwrap());
+        let handle = crate::model::ModelHandle::open(rt, &man, &spec.name).unwrap();
+        let val = handle.data.val.clone();
+        let set = handle.eval_set(&val).unwrap();
+        let cfg = crate::model::QuantConfig::fp32(&handle.entry);
+        let fp = handle.eval_config(&set, &cfg).unwrap();
+        assert!(
+            (fp - handle.entry.fp32_val_metric).abs() < 1e-12,
+            "fp32 {fp} != recorded {}",
+            handle.entry.fp32_val_metric
+        );
+    }
+}

@@ -1,6 +1,8 @@
-//! Integration tests over the real artifacts (run `make artifacts` first;
-//! tests skip gracefully when artifacts are absent so `cargo test` stays
-//! green on a fresh checkout).
+//! Tier-2 integration tests over the real artifacts (run `make artifacts`
+//! first; tests skip gracefully when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout).  The hermetic tier-1 counterpart —
+//! the same pipeline end-to-end on the pure-Rust sim backend, never
+//! skipped — lives in `sim_e2e.rs`; see `tests/README.md`.
 //!
 //! These exercise the full L3→PJRT→L2→L1 stack on `resnet_s`, including the
 //! cross-layer numerical contract: the Rust FP32 evaluation must reproduce
@@ -16,6 +18,10 @@ use mpq::sensitivity;
 use std::collections::HashMap;
 
 fn artifacts() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the pjrt feature (PJRT artifacts unusable)");
+        return None;
+    }
     let dir = mpq::artifacts_dir();
     if dir.join("manifest.json").exists() {
         Some(dir)

@@ -3,10 +3,11 @@
 //! `mpq::util::Rng` — the offline crate set has no `proptest`, so the
 //! generator loop is explicit: 200 random cases per property.
 
+use mpq::engine::StreamingSqnr;
 use mpq::groups::{Assignment, Candidate, Lattice};
 use mpq::jsonio::{self, Json};
 use mpq::manifest::{ActQ, DataFiles, Group, Layer, ModelEntry, ParamInfo, WQ};
-use mpq::metrics::kendall_tau;
+use mpq::metrics::{kendall_tau, PearsonAccum, StreamingTaskMetric};
 use mpq::search::{assignment_at, flip_sequence, PrefixCursor};
 use mpq::sensitivity::SensEntry;
 use mpq::tensor::{io, Tensor};
@@ -259,6 +260,177 @@ fn kendall_tau_bounds_and_symmetry() {
         assert!((-1.0..=1.0).contains(&t));
         assert!((kendall_tau(&b, &a) - t).abs() < 1e-12, "not symmetric");
         assert!((kendall_tau(&a, &a) - 1.0).abs() < 1e-12);
+    }
+}
+
+/// Random shard assignment of `n` items over `k` shards (shards may be
+/// empty, hold a single item, or hold everything) plus a random merge
+/// order — the space of splits an [`mpq::pool::EvalPool`] can produce.
+fn random_split(rng: &mut Rng, n: usize) -> (Vec<usize>, Vec<usize>) {
+    let k = 1 + rng.below(n + 2); // sometimes more shards than items
+    let assign: Vec<usize> = (0..n).map(|_| rng.below(k)).collect();
+    let mut order: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut order);
+    (assign, order)
+}
+
+/// The pool exactness guarantee as a property: `StreamingSqnr` partials
+/// keyed by global batch index, merged across *any* shard split in *any*
+/// merge order — including empty and single-batch shards — are
+/// bit-identical to the serial accumulator.
+#[test]
+fn streaming_sqnr_merge_any_split_any_order_is_bit_identical() {
+    let mut rng = Rng::new(0x5A17);
+    for _ in 0..CASES {
+        let nb = 1 + rng.below(9);
+        let bsz = 1 + rng.below(5);
+        let c = 1 + rng.below(7);
+        let mut serial = StreamingSqnr::new();
+        let mut batches = Vec::new();
+        for _ in 0..nb {
+            let fp: Vec<f32> = (0..bsz * c).map(|_| rng.f64() as f32 * 4.0 - 2.0).collect();
+            let q: Vec<f32> = fp
+                .iter()
+                .map(|&x| x + (rng.f64() as f32 - 0.5) * 0.1)
+                .collect();
+            let fp = Tensor::from_f32(&[bsz, c], fp).unwrap();
+            let q = Tensor::from_f32(&[bsz, c], q).unwrap();
+            // per-sample signal power, same f64 summation as FpReference
+            let fv = fp.f32s().unwrap();
+            let sig: Vec<f64> = (0..bsz)
+                .map(|i| {
+                    let mut s = 0f64;
+                    for &x in &fv[i * c..(i + 1) * c] {
+                        s += x as f64 * x as f64;
+                    }
+                    s
+                })
+                .collect();
+            serial.push(&fp, &sig, &q).unwrap();
+            batches.push((fp, sig, q));
+        }
+        let (assign, order) = random_split(&mut rng, nb);
+        let k = order.len();
+        let mut shards: Vec<StreamingSqnr> = (0..k).map(|_| StreamingSqnr::new()).collect();
+        for (bi, (fp, sig, q)) in batches.iter().enumerate() {
+            shards[assign[bi]].push_at(bi as u64, fp, sig, q).unwrap();
+        }
+        let mut merged = StreamingSqnr::new();
+        for &s in &order {
+            merged.merge(&shards[s]).unwrap();
+        }
+        assert_eq!(
+            merged.db().to_bits(),
+            serial.db().to_bits(),
+            "nb={nb} k={k}: merged shards diverged from serial"
+        );
+    }
+}
+
+/// Same property for every task accumulator: counting metrics (top-1, F1,
+/// mIoU) merge bit-identically across arbitrary splits and orders; the
+/// Pearson head merges to the serial value within float rounding.
+#[test]
+fn task_metric_merge_any_split_any_order_matches_serial() {
+    let mut rng = Rng::new(0x7A5C);
+    for case in 0..60 {
+        for task in ["classify10", "glue:mrpc_s", "glue:stsb_s", "seg"] {
+            let nb = 1 + rng.below(7);
+            let bsz = 1 + rng.below(5);
+            let mut serial = StreamingTaskMetric::new(task).unwrap();
+            let mut batches = Vec::new();
+            for _ in 0..nb {
+                let (logits, labels) = match task {
+                    "seg" => {
+                        let (c, h, w) = (3usize, 2usize, 2usize);
+                        let lv: Vec<f32> =
+                            (0..bsz * c * h * w).map(|_| rng.f64() as f32).collect();
+                        let yv: Vec<i32> =
+                            (0..bsz * h * w).map(|_| rng.below(c) as i32).collect();
+                        (
+                            Tensor::from_f32(&[bsz, c, h, w], lv).unwrap(),
+                            Tensor::from_i32(&[bsz, h, w], yv).unwrap(),
+                        )
+                    }
+                    "glue:stsb_s" => {
+                        let lv: Vec<f32> = (0..bsz).map(|_| rng.f64() as f32 * 5.0).collect();
+                        let yv: Vec<f32> =
+                            lv.iter().map(|&x| x + rng.f64() as f32).collect();
+                        (
+                            Tensor::from_f32(&[bsz, 1], lv).unwrap(),
+                            Tensor::from_f32(&[bsz], yv).unwrap(),
+                        )
+                    }
+                    _ => {
+                        let c = if task == "classify10" { 10 } else { 2 };
+                        let lv: Vec<f32> = (0..bsz * c).map(|_| rng.f64() as f32).collect();
+                        let yv: Vec<f32> = (0..bsz).map(|_| rng.below(c) as f32).collect();
+                        (
+                            Tensor::from_f32(&[bsz, c], lv).unwrap(),
+                            Tensor::from_f32(&[bsz], yv).unwrap(),
+                        )
+                    }
+                };
+                serial.push(&logits, &labels).unwrap();
+                batches.push((logits, labels));
+            }
+            let (assign, order) = random_split(&mut rng, nb);
+            let mut shards: Vec<StreamingTaskMetric> = (0..order.len())
+                .map(|_| StreamingTaskMetric::new(task).unwrap())
+                .collect();
+            for (bi, (l, y)) in batches.iter().enumerate() {
+                shards[assign[bi]].push(l, y).unwrap();
+            }
+            let mut merged = StreamingTaskMetric::new(task).unwrap();
+            for &s in &order {
+                merged.merge(&shards[s]).unwrap();
+            }
+            let (got, want) = (merged.finalize(), serial.finalize());
+            if task == "glue:stsb_s" {
+                assert!(
+                    (got - want).abs() < 1e-12,
+                    "case {case} {task}: {got} vs {want}"
+                );
+            } else {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "case {case} {task}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+/// PearsonAccum (Chan et al. co-moment combine) under arbitrary sample
+/// splits and merge orders, including empty parts and singleton parts.
+#[test]
+fn pearson_accum_merge_any_split_any_order_matches_serial() {
+    let mut rng = Rng::new(0xC0FF);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(60);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0 - 5.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 0.7 * x + (x * 2.0).sin()).collect();
+        let mut serial = PearsonAccum::default();
+        for (&x, &y) in xs.iter().zip(&ys) {
+            serial.push(x, y);
+        }
+        let (assign, order) = random_split(&mut rng, n);
+        let mut parts: Vec<PearsonAccum> =
+            (0..order.len()).map(|_| PearsonAccum::default()).collect();
+        for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+            parts[assign[i]].push(x, y);
+        }
+        let mut merged = PearsonAccum::default();
+        for &s in &order {
+            merged.merge(&parts[s]);
+        }
+        assert!(
+            (merged.r() - serial.r()).abs() < 1e-12,
+            "merged {} vs serial {}",
+            merged.r(),
+            serial.r()
+        );
     }
 }
 

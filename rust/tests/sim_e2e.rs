@@ -1,0 +1,429 @@
+//! Hermetic end-to-end tests on the pure-Rust sim backend.
+//!
+//! These are the tier-1 counterpart of `integration.rs`: the *same*
+//! Phase-1 sweep, all four Phase-2 searches, the evaluation pool and the
+//! on-disk caches, exercised end-to-end on a generated `sim` model zoo —
+//! no PJRT artifacts, no `xla` shared library, **zero skips** (see
+//! `rust/tests/README.md` for the two test tiers).  The one exception is
+//! the PJRT↔sim parity smoke test at the bottom, which is artifacts-gated
+//! by design.
+//!
+//! Each test generates its own artifacts directory (generation is
+//! milliseconds), so tests stay parallel-safe and deterministic: the same
+//! `SimSpec` always produces byte-identical weights, data and manifest.
+
+use mpq::coordinator::{Pipeline, SearchScheme};
+use mpq::engine::Evaluator;
+use mpq::groups::{Assignment, Candidate, Lattice};
+use mpq::manifest::Manifest;
+use mpq::model::{QuantConfig, WeightOverrides};
+use mpq::pool::{ProbeKind, CALIB_SET};
+use mpq::sim::{self, SimSpec};
+use mpq::tensor::Tensor;
+use std::collections::HashMap;
+
+const MODEL: &str = "sim_mlp";
+
+/// Fresh sim artifacts under a per-test temp dir.
+fn sim_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_sim_e2e_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    sim::generate(&dir, &SimSpec::default()).expect("generate sim artifacts");
+    dir
+}
+
+fn pipe(dir: &std::path::Path) -> Pipeline {
+    let mut p = Pipeline::open(dir, MODEL).expect("open sim_mlp");
+    p.calibrate(128, 0).expect("calibrate");
+    p
+}
+
+#[test]
+fn sim_manifest_loads_and_groups_partition() {
+    let dir = sim_dir("manifest");
+    let man = Manifest::load(&dir).unwrap();
+    assert_eq!(man.backend, "sim");
+    assert!(!man.models.is_empty());
+    for m in &man.models {
+        Assignment::validate_partition(m).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        assert!(m.total_macs > 0);
+        assert_eq!(
+            m.total_macs,
+            m.groups.iter().map(|g| g.macs).sum::<u64>(),
+            "group MACs don't sum to total"
+        );
+        for l in &m.layers {
+            let gw = m
+                .groups
+                .iter()
+                .position(|g| g.w_q.contains(&l.w_q))
+                .expect("layer w_q in some group");
+            for a in &l.in_acts {
+                assert!(m.groups[gw].act_q.contains(a), "{}: act {a} not grouped", l.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_fp32_matches_recorded_metric() {
+    let dir = sim_dir("fp32");
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    let fp = p.eval_fp32().unwrap();
+    let want = p.model.entry.fp32_val_metric;
+    assert!(
+        (fp - want).abs() < 1e-12,
+        "rust fp32 {fp} != generated {want} — interpreter drift"
+    );
+}
+
+#[test]
+fn sim_lower_bits_lower_sqnr() {
+    let dir = sim_dir("monotone");
+    let p = pipe(&dir);
+    let set = p.calib_set().unwrap();
+    let ev = Evaluator::new(&p.model, set);
+    let at = |bits: u8| {
+        let cfg = QuantConfig {
+            act: vec![Some(bits); p.model.entry.n_act()],
+            w: vec![None; p.model.entry.n_w()],
+        };
+        ev.sqnr(&cfg, &HashMap::new()).unwrap()
+    };
+    let (s4, s8, s16) = (at(4), at(8), at(16));
+    assert!(s4 < s8 && s8 < s16, "SQNR not monotone: {s4} {s8} {s16}");
+    assert!(s16 > 40.0, "A16 SQNR only {s16} dB — activation path broken");
+}
+
+/// Phase 1 end-to-end: complete sorted list at `1 + probes`
+/// forward-sweep-equivalents, reference served from cache on re-sweep.
+#[test]
+fn sim_phase1_sweep_end_to_end() {
+    let dir = sim_dir("phase1");
+    let p = pipe(&dir);
+    let nb = p.calib_set().unwrap().batches.len() as u64;
+    let lat = Lattice::practical();
+    assert_eq!(*p.model.fwd_calls.borrow(), 0, "calibration must not run forward");
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flippable = (0..p.model.entry.groups.len())
+        .filter(|&g| Assignment::flippable(&p.model.entry, g))
+        .count();
+    assert_eq!(sens.len(), flippable * (lat.candidates.len() - 1));
+    for w in sens.windows(2) {
+        assert!(w[0].score >= w[1].score, "list not sorted");
+    }
+    assert!(sens.iter().all(|e| e.score.is_finite()), "degenerate probe score");
+    let fwd1 = *p.model.fwd_calls.borrow();
+    assert_eq!(fwd1, (1 + sens.len() as u64) * nb, "sweep not 1 + probes sweeps");
+    let sens2 = p.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(*p.model.fwd_calls.borrow() - fwd1, sens2.len() as u64 * nb);
+    assert!(p.model.engine.ref_hits.get() > 0);
+}
+
+/// Phase 2 end-to-end: all four searches with their pinned eval counts.
+#[test]
+fn sim_phase2_all_four_searches() {
+    let dir = sim_dir("phase2");
+    let mut p = pipe(&dir);
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    let flips = p.flips(&lat, &sens);
+    assert!(!flips.is_empty(), "no flips — degenerate sim zoo");
+    let nb_val = p.val_set().unwrap().batches.len() as u64;
+    let min_r = mpq::bops::min_rel_bops(&p.model.entry, &lat);
+
+    // 1. BOPs budget: pure ledger walk + exactly one metric evaluation
+    let fwd0 = *p.model.fwd_calls.borrow();
+    for budget in [0.75, 0.5, 0.375] {
+        let run = p.search_bops_budget(&lat, &flips, budget).unwrap();
+        assert!(
+            run.final_rel_bops <= budget + 1e-9 || (run.final_rel_bops - min_r).abs() < 1e-9,
+            "budget {budget} not met: r={}",
+            run.final_rel_bops
+        );
+        assert_eq!(run.evals, 1, "bops_budget needs exactly one final eval");
+    }
+    assert_eq!(*p.model.fwd_calls.borrow() - fwd0, 3 * nb_val);
+
+    // 2. full pareto curve: flips + 1 distinct evals, memoized finish
+    let fwd1 = *p.model.fwd_calls.borrow();
+    let curve = p.pareto_curve_val(&lat, &flips, None).unwrap();
+    assert_eq!(curve.evals, flips.len() + 1, "full_curve must not re-eval in finish");
+    assert_eq!(curve.memo_hits, 1);
+    assert_eq!(
+        *p.model.fwd_calls.borrow() - fwd1,
+        (flips.len() as u64 + 1) * nb_val
+    );
+    assert_eq!(curve.curve.len(), flips.len() + 1);
+
+    // 3/4/5. accuracy targets: a target inside the curve's metric range so
+    // every scheme has a real boundary to find
+    let fp = p.eval_fp32().unwrap();
+    let m_lo = curve.curve.iter().map(|&(_, m)| m).fold(f64::INFINITY, f64::min);
+    let target = (fp + m_lo) / 2.0;
+    let seq = p
+        .search_accuracy_target(&lat, &flips, target, SearchScheme::Sequential, None)
+        .unwrap();
+    let bin = p
+        .search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)
+        .unwrap();
+    let hyb = p
+        .search_accuracy_target(&lat, &flips, target, SearchScheme::Hybrid, None)
+        .unwrap();
+    for (name, run) in [("seq", &seq), ("bin", &bin), ("hyb", &hyb)] {
+        assert!(
+            run.final_metric >= target - 1e-9,
+            "{name} violates target: {} < {target}",
+            run.final_metric
+        );
+    }
+    let bound = ((flips.len() + 1) as f64).log2().ceil() as usize + 1;
+    assert!(bin.evals <= bound, "binary used {} evals, bound {bound}", bin.evals);
+}
+
+/// PR 2's exactness guarantee, finally exercised end-to-end: pooled
+/// Phase-1 lists and Phase-2 runs are **bit-identical** to the serial path
+/// at every worker count — byte-equal scores, identical flip sequences,
+/// byte-equal curves and final metrics.
+#[test]
+fn sim_pool_matches_serial_bit_for_bit() {
+    let dir = sim_dir("pool_bits");
+    let lat = Lattice::practical();
+
+    // serial reference
+    let mut sp = pipe(&dir);
+    let ssens = sp.sensitivity_sqnr(&lat).unwrap();
+    let sflips = sp.flips(&lat, &ssens);
+    let sfp = sp.eval_fp32().unwrap();
+    let scurve = sp.pareto_curve_val(&lat, &sflips, None).unwrap();
+    let target = (sfp + scurve.curve.iter().map(|&(_, m)| m).fold(f64::INFINITY, f64::min)) / 2.0;
+    let srun = sp
+        .search_accuracy_target(&lat, &sflips, target, SearchScheme::Binary, None)
+        .unwrap();
+
+    for workers in [1usize, 2, 4] {
+        let mut p = Pipeline::open(&dir, MODEL).unwrap();
+        p.enable_pool(workers).unwrap();
+        p.calibrate(128, 0).unwrap();
+        let sens = p.sensitivity_sqnr(&lat).unwrap();
+        assert_eq!(sens.len(), ssens.len(), "w={workers}");
+        for (a, b) in sens.iter().zip(&ssens) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "w={workers}: order diverged");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "w={workers}: score for (g{}, {:?}): {} vs {}",
+                a.group,
+                a.cand,
+                a.score,
+                b.score
+            );
+        }
+        let flips = p.flips(&lat, &sens);
+        assert_eq!(flips.len(), sflips.len(), "w={workers}");
+        for (a, b) in flips.iter().zip(&sflips) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "w={workers}: flip sequence");
+        }
+        let fp = p.eval_fp32().unwrap();
+        assert_eq!(fp.to_bits(), sfp.to_bits(), "w={workers}: fp32 metric differs");
+
+        // full curve through SearchCtx::with_pool (via the pipeline)
+        let curve = p.pareto_curve_val(&lat, &flips, None).unwrap();
+        assert_eq!(curve.curve.len(), scurve.curve.len(), "w={workers}");
+        for ((r1, m1), (r2, m2)) in curve.curve.iter().zip(&scurve.curve) {
+            assert_eq!(r1.to_bits(), r2.to_bits(), "w={workers}: curve r differs");
+            assert_eq!(m1.to_bits(), m2.to_bits(), "w={workers}: curve metric differs");
+        }
+
+        let run = p
+            .search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)
+            .unwrap();
+        assert_eq!(run.applied.len(), srun.applied.len(), "w={workers}: chosen prefix");
+        for (a, b) in run.applied.iter().zip(&srun.applied) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "w={workers}: applied flips");
+        }
+        assert_eq!(run.final_rel_bops.to_bits(), srun.final_rel_bops.to_bits(), "w={workers}");
+        assert_eq!(run.final_metric.to_bits(), srun.final_metric.to_bits(), "w={workers}");
+    }
+}
+
+/// The pool memo must be keyed by override *content*: two probes of the
+/// same bit configuration that differ only in one layer's override tensor
+/// must compute independently and never collide — and a re-submit of a
+/// finished probe must be a pure memo hit with the identical value.
+#[test]
+fn sim_pool_probe_memo_never_serves_stale_overrides() {
+    let dir = sim_dir("pool_memo");
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.enable_pool(2).unwrap();
+    p.calibrate(64, 0).unwrap();
+
+    let entry = p.model.entry.clone();
+    let cfg = QuantConfig::fixed(&entry, 8, 8);
+    let pidx = entry.w_quantizers[0].param_idx;
+    let zeros = Tensor::zeros(&entry.params[pidx].shape);
+    let halved = {
+        let w = &p.model.weights[pidx];
+        let v: Vec<f32> = w.f32s().unwrap().iter().map(|x| x * 0.5).collect();
+        Tensor::from_f32(&w.shape, v).unwrap()
+    };
+    let mut ov_a = WeightOverrides::new();
+    ov_a.insert(pidx, zeros);
+    let mut ov_b = WeightOverrides::new();
+    ov_b.insert(pidx, halved);
+
+    let pool = p.pool.as_ref().unwrap();
+    let (c0, h0) = (pool.probes_computed(), pool.memo_hits());
+    let va = pool.submit(CALIB_SET, ProbeKind::Sqnr, &cfg, &ov_a).unwrap().wait().unwrap();
+    let vb = pool.submit(CALIB_SET, ProbeKind::Sqnr, &cfg, &ov_b).unwrap().wait().unwrap();
+    let vp = pool
+        .submit(CALIB_SET, ProbeKind::Sqnr, &cfg, &WeightOverrides::new())
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(pool.probes_computed() - c0, 3, "three distinct probes must compute");
+    assert_eq!(pool.memo_hits(), h0, "no hits expected yet");
+    assert_ne!(va.to_bits(), vb.to_bits(), "override digests collided");
+    assert_ne!(va.to_bits(), vp.to_bits(), "override and plain probes collided");
+
+    let va2 = pool.submit(CALIB_SET, ProbeKind::Sqnr, &cfg, &ov_a).unwrap().wait().unwrap();
+    assert_eq!(pool.probes_computed() - c0, 3, "re-submit must not recompute");
+    assert_eq!(pool.memo_hits() - h0, 1, "re-submit must be a memo hit");
+    assert_eq!(va2.to_bits(), va.to_bits(), "memo returned a different value");
+}
+
+#[test]
+fn sim_ood_calibration_runs() {
+    let dir = sim_dir("ood");
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    let x = p.model.data.ood_calib.clone().expect("generated ood pool");
+    let sub = x.slice_rows(0, 64).unwrap();
+    p.calibrate_unlabeled(&sub).unwrap();
+    let lat = Lattice::practical_no16();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert!(!sens.is_empty());
+    assert!(sens.iter().all(|e| e.score.is_finite()));
+}
+
+/// On-disk sensitivity cache, hermetically: second sweep served from disk,
+/// bit-identically, with zero forward calls.
+#[test]
+fn sim_sens_cache_skips_repeat_sweeps() {
+    let dir = sim_dir("senscache");
+    let cache = dir.join("sens_cache");
+    let lat = Lattice::practical();
+    let mut p = pipe(&dir);
+    p.set_sens_cache_dir(Some(cache));
+    let first = p.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(p.sens_cache_stats(), (0, 1), "first sweep is a miss");
+    let fwd = *p.model.fwd_calls.borrow();
+    let second = p.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(p.sens_cache_stats(), (1, 1), "second sweep must hit");
+    assert_eq!(*p.model.fwd_calls.borrow(), fwd, "cache hit must cost zero forwards");
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand));
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "scores must round-trip");
+    }
+}
+
+/// EvalSet ragged-tail truncation contract on the sim backend.
+#[test]
+fn sim_eval_set_truncates_ragged_subset_consistently() {
+    let dir = sim_dir("ragged");
+    let p = Pipeline::open(&dir, MODEL).unwrap();
+    let batch = p.model.entry.batch;
+    let ragged = batch + batch / 2 + 1;
+    let ds = p.model.data.val.take(ragged).unwrap();
+    let set = p.model.eval_set(&ds).unwrap();
+    assert_eq!(set.batches.len(), ragged / batch);
+    assert_eq!(set.n, (ragged / batch) * batch);
+    assert_eq!(set.labels.shape[0], set.n);
+}
+
+/// Weight overrides flow through the sim forward exactly like PJRT:
+/// overriding a parameter changes the logits and disables its quantizer.
+#[test]
+fn sim_weight_override_changes_logits() {
+    let dir = sim_dir("override");
+    let p = pipe(&dir);
+    let set = p.calib_set().unwrap();
+    let cfg = QuantConfig::fp32(&p.model.entry);
+    let cb = p.model.config_buffers(&cfg, &HashMap::new()).unwrap();
+    let base = p.model.logits_on(set, &cb).unwrap();
+    let pidx = p.model.entry.w_quantizers[0].param_idx;
+    let zero = Tensor::zeros(&p.model.entry.params[pidx].shape);
+    let mut ov = HashMap::new();
+    ov.insert(pidx, zero);
+    let cb2 = p.model.config_buffers(&cfg, &ov).unwrap();
+    let changed = p.model.logits_on(set, &cb2).unwrap();
+    assert_ne!(base.f32s().unwrap(), changed.f32s().unwrap());
+}
+
+/// Mixed precision beats or matches the fixed config at the same BOPs on
+/// the sim zoo — the paper's core claim, now asserted on every CI run.
+#[test]
+fn sim_mixed_beats_or_matches_fixed_at_same_bops() {
+    let dir = sim_dir("mp_vs_fixed");
+    let mut p = pipe(&dir);
+    let lat = Lattice::practical();
+    let w8a8 = p.eval_fixed(Candidate::new(8, 8), None).unwrap();
+    let run = p.mixed_precision_for_budget(&lat, 0.5).unwrap();
+    assert!(run.final_rel_bops <= 0.5 + 1e-9);
+    assert!(
+        run.final_metric >= w8a8 - 0.08,
+        "MP {} much worse than fixed W8A8 {}",
+        run.final_metric,
+        w8a8
+    );
+}
+
+/// PJRT ↔ sim parity smoke test (artifacts-gated): the HLO-lowered
+/// `mlp_parity_s` and its sim re-export share weights and data, so the two
+/// backends must agree on the FP32 metric and on fixed-config SQNR to
+/// tolerance (not bit-exactly: jax rounds half-to-even, `quant::fq` rounds
+/// half-away, and matmul accumulation orders differ).  Guards the sim
+/// interpreter against semantic drift from the real lowering.
+#[test]
+fn pjrt_sim_parity_smoke() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the pjrt feature");
+        return;
+    }
+    let dir = mpq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {}", dir.display());
+        return;
+    }
+    if Manifest::load(&dir).map(|m| m.model("mlp_parity_s").is_err()).unwrap_or(true) {
+        eprintln!("SKIP: no mlp_parity_s in artifacts — re-run `make artifacts`");
+        return;
+    }
+    let sdir = std::env::temp_dir().join("mpq_sim_parity");
+    std::fs::remove_dir_all(&sdir).ok();
+    sim::export_from_artifacts(&dir, "mlp_parity_s", &sdir).expect("export sim twin");
+
+    let mut pj = Pipeline::open(&dir, "mlp_parity_s").unwrap();
+    let mut sm = Pipeline::open(&sdir, "mlp_parity_s").unwrap();
+    pj.calibrate(128, 0).unwrap();
+    sm.calibrate(128, 0).unwrap();
+
+    let (fp_pj, fp_sm) = (pj.eval_fp32().unwrap(), sm.eval_fp32().unwrap());
+    assert!(
+        (fp_pj - fp_sm).abs() < 0.02,
+        "FP32 metric drift: pjrt {fp_pj} vs sim {fp_sm}"
+    );
+    for (w, a) in [(8u8, 8u8), (4, 8)] {
+        let sq = |p: &Pipeline| {
+            let set = p.calib_set().unwrap();
+            let ev = Evaluator::new(&p.model, set);
+            let cfg = QuantConfig::fixed(&p.model.entry, w, a);
+            ev.sqnr(&cfg, &HashMap::new()).unwrap()
+        };
+        let (s_pj, s_sm) = (sq(&pj), sq(&sm));
+        assert!(
+            (s_pj - s_sm).abs() < 0.5,
+            "W{w}A{a} SQNR drift: pjrt {s_pj} dB vs sim {s_sm} dB"
+        );
+    }
+}
