@@ -21,12 +21,14 @@
 //! Results land in `BENCH_microbench.json`; CI diffs against the committed
 //! repo-root baseline (>20% regression on gated entries fails the build).
 
+use mpq::adaround::AdaRoundCfg;
 use mpq::bench::{bench, bench_result, BenchResult};
 use mpq::coordinator::{Pipeline, SearchScheme};
 use mpq::groups::Lattice;
 use mpq::model::QuantConfig;
+use mpq::pool::{EvalFleet, EvalPool, ProbeKind, CALIB_SET};
 use mpq::quant;
-use mpq::sensitivity;
+use mpq::sensitivity::{self, Metric};
 use mpq::sim::{self, SimSpec};
 use mpq::tensor::Tensor;
 use std::collections::HashMap;
@@ -96,6 +98,95 @@ fn sim_benches(results: &mut Vec<BenchResult>) {
             pp.sensitivity_sqnr(&lat).map(|_| ())
         }));
     }
+
+    // Pooled FIT sensitivity at 1/4 workers: shard-parallel grad²/err²
+    // accumulation through the fleet (FIT has no memo — every iteration
+    // is a full accumulation sweep).
+    for workers in [1usize, 4] {
+        let mut pp = Pipeline::open(&dir, &spec.name).expect("open sim zoo");
+        pp.enable_pool(workers).expect("spawn eval pool");
+        pp.calibrate(spec.calib_n, 0).expect("calibrate");
+        let name = format!("fit_pool_sim_w{workers}");
+        results.push(bench_result(&name, 1, 3, || {
+            pp.sensitivity(&lat, Metric::Fit, None).map(|_| ())
+        }));
+    }
+
+    // Pooled AdaRound at 1/4 workers: the (layer × wbits) jobs anneal
+    // round-robin across the fleet; taps capture stays on the driver's
+    // client and is amortized by the job compute.
+    let ar_cfg = AdaRoundCfg { steps: 40, ..Default::default() };
+    for workers in [1usize, 4] {
+        let mut pp = Pipeline::open(&dir, &spec.name).expect("open sim zoo");
+        pp.enable_pool(workers).expect("spawn eval pool");
+        pp.calibrate(spec.calib_n, 0).expect("calibrate");
+        let name = format!("adaround_pool_sim_w{workers}");
+        results.push(bench_result(&name, 1, 3, || {
+            pp.adaround(&lat, &ar_cfg).map(|_| ())
+        }));
+    }
+
+    fleet_reuse_bench(results);
+}
+
+/// Fleet-reuse entry: attach-and-probe a *second* model on a fleet that is
+/// already warm — measures the marginal cost of model sharing (no thread
+/// respawn, no recompilation; the post-loop assert makes the zero-compile
+/// claim a hard failure, not just a timing).
+fn fleet_reuse_bench(results: &mut Vec<BenchResult>) {
+    let dir = std::env::temp_dir().join("mpq_microbench_fleet");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec_a = SimSpec {
+        dims: vec![64, 96, 10],
+        calib_n: 128,
+        val_n: 64,
+        ood_n: 0,
+        ..Default::default()
+    };
+    let spec_b = SimSpec {
+        name: "sim_mlp_b".into(),
+        dims: vec![64, 96, 10],
+        calib_n: 128,
+        val_n: 64,
+        ood_n: 0,
+        seed: 13,
+        ..Default::default()
+    };
+    sim::generate_zoo(&dir, &[spec_a.clone(), spec_b.clone()]).expect("generate fleet zoo");
+    let fleet = EvalFleet::new(&dir, 2).expect("spawn fleet");
+    // warm both models: A via a full sweep, B via attach + calibrate +
+    // one probe (compiles B's forward on every worker)
+    let mut pa = Pipeline::open(&dir, &spec_a.name).expect("open A");
+    pa.attach_fleet(&fleet).expect("attach A");
+    pa.calibrate(spec_a.calib_n, 0).expect("calibrate A");
+    pa.sensitivity_sqnr(&Lattice::practical()).expect("sweep A");
+    let mut pb = Pipeline::open(&dir, &spec_b.name).expect("open B");
+    pb.attach_fleet(&fleet).expect("attach B");
+    pb.calibrate(spec_b.calib_n, 0).expect("calibrate B");
+    let cfg = QuantConfig::fixed(&pb.model.entry, 8, 8);
+    let pool_b = pb.pool.as_ref().expect("B pool");
+    pool_b
+        .submit(CALIB_SET, ProbeKind::Sqnr, &cfg, &HashMap::new())
+        .and_then(|h| h.wait())
+        .expect("warm B");
+
+    let opens_before = fleet.model_opens();
+    results.push(bench_result("fleet_sim/second_model_attach_probe", 1, 5, || {
+        // re-attach B (refcount bump on the warm fleet) and run one real
+        // probe through the fresh client; memo cleared so the probe is a
+        // genuine shard-parallel evaluation, not a cache hit
+        fleet.clear_memo();
+        let client = EvalPool::attach(&fleet, &spec_b.name)?;
+        client
+            .submit(CALIB_SET, ProbeKind::Sqnr, &cfg, &HashMap::new())?
+            .wait()
+            .map(|_| ())
+    }));
+    assert_eq!(
+        fleet.model_opens(),
+        opens_before,
+        "second-model attach recompiled executables on a warm fleet"
+    );
 }
 
 /// The original artifacts-gated PJRT benches on `resnet_s`.

@@ -9,18 +9,30 @@
 //!
 //! The split of labour follows the three-layer architecture: the per-layer
 //! loss+gradient is an AOT artifact (`<m>.ar.<layer>.hlo.txt`, lowered with
-//! `jax.value_and_grad`), while the Adam loop, β annealing and the final
-//! hard rounding run here.  Layer input activations come from the `taps`
-//! artifact, captured once per calibration batch.
+//! `jax.value_and_grad`; the sim backend's `adaround` program kind mirrors
+//! it), while the Adam loop, β annealing and the final hard rounding run
+//! here.  Layer input activations come from the `taps` artifact, captured
+//! once per calibration batch.
 //!
 //! Because AdaRound is *sequential and layer-wise* (paper §3.5), rounded
 //! weights are computed once per `(layer, wbits)` and stitched into any
 //! Phase-2 configuration — the cheap reuse the paper highlights.
+//!
+//! §Perf — fleet dispatch: the `(layer, wbits)` optimizations are mutually
+//! independent, so [`plan_jobs`] materializes each one as a self-contained
+//! [`AdaRoundJob`] (exe name, tap tensors, scales, Adam settings) and
+//! [`adaround_all_pooled`] ships them to [`crate::pool::EvalPool`] workers
+//! round-robin — layers anneal concurrently on N private clients.  A job
+//! is deterministic given its inputs (the Adam loop is seeded by
+//! `cfg.seed ^ param_idx` and the executables are deterministic per
+//! backend), so pooled results are **bit-identical** to
+//! [`adaround_all`]'s, which runs the same jobs on the caller's client.
 
 use crate::manifest::Manifest;
 use crate::model::ModelHandle;
+use crate::pool::EvalPool;
 use crate::quant;
-use crate::runtime::Buffer;
+use crate::runtime::{Buffer, Exe, Runtime};
 use crate::sensitivity::RoundedWeights;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -59,6 +71,25 @@ pub struct Taps {
     per_layer: Vec<Vec<Tensor>>,
 }
 
+/// One self-contained `(layer, wbits)` rounding optimization — everything
+/// a fleet worker (or the local client) needs, with no handle state
+/// attached.  Weights themselves are *not* shipped: workers hold their own
+/// bit-identical copy of the trained parameters.
+#[derive(Clone, Debug)]
+pub struct AdaRoundJob {
+    /// per-layer step artifact (manifest-relative file name)
+    pub exe: String,
+    /// FP layer-input activations for this layer (host tensors)
+    pub taps: Vec<Tensor>,
+    pub param_idx: usize,
+    pub bias_idx: usize,
+    /// per-channel MSE-optimal scales at `bits`
+    pub scales: Vec<f32>,
+    pub channel_axis: usize,
+    pub bits: u8,
+    pub cfg: AdaRoundCfg,
+}
+
 /// Capture layer inputs by running the FP taps executable on calibration
 /// batches.
 pub fn capture_taps(
@@ -91,21 +122,22 @@ pub fn capture_taps(
     Ok(Taps { per_layer })
 }
 
-/// Run AdaRound for every layer at each of `wbits_options`; returns the
-/// stitchable rounded-weight cache.
-pub fn adaround_all(
+/// Materialize the independent `(layer, wbits)` optimizations for every
+/// AdaRound-capable layer at each of `wbits_options`, keyed by
+/// `(param_idx, wbits)` — the unit of work both the serial and the pooled
+/// path execute.
+pub fn plan_jobs(
     handle: &ModelHandle,
-    manifest: &Manifest,
     taps: &Taps,
     wbits_options: &[u8],
     cfg: &AdaRoundCfg,
-) -> Result<RoundedWeights> {
-    let mut out = RoundedWeights::new();
+) -> Result<Vec<((usize, u8), AdaRoundJob)>> {
+    let entry = &handle.entry;
+    let mut out = Vec::new();
     for &bits in wbits_options {
-        for ar in handle.entry.adaround.clone() {
-            let pidx = handle.entry.param_idx(&ar.param)?;
-            let wq_idx = handle
-                .entry
+        for ar in &entry.adaround {
+            let pidx = entry.param_idx(&ar.param)?;
+            let wq_idx = entry
                 .w_quantizers
                 .iter()
                 .position(|q| q.param_idx == pidx)
@@ -115,53 +147,91 @@ pub fn adaround_all(
                 .get(&bits)
                 .ok_or_else(|| anyhow!("weight scales for {bits} bits missing"))?[wq_idx]
                 .clone();
-            let rounded = adaround_layer(
-                handle,
-                manifest,
-                &ar.exe,
-                &taps.per_layer[ar.tap_index],
-                pidx,
-                handle.entry.param_idx(&ar.bias)?,
-                &scales,
-                handle.entry.w_quantizers[wq_idx].channel_axis,
-                bits,
-                cfg,
-            )?;
-            out.insert((pidx, bits), rounded);
+            if ar.tap_index >= taps.per_layer.len() {
+                bail!("tap index {} out of range for {}", ar.tap_index, ar.layer);
+            }
+            out.push((
+                (pidx, bits),
+                AdaRoundJob {
+                    exe: ar.exe.clone(),
+                    taps: taps.per_layer[ar.tap_index].clone(),
+                    param_idx: pidx,
+                    bias_idx: entry.param_idx(&ar.bias)?,
+                    scales,
+                    channel_axis: entry.w_quantizers[wq_idx].channel_axis,
+                    bits,
+                    cfg: cfg.clone(),
+                },
+            ));
         }
     }
     Ok(out)
 }
 
-/// Optimize one layer's rounding variables and return the hard-rounded,
-/// fake-quantized weight tensor.
-#[allow(clippy::too_many_arguments)]
-pub fn adaround_layer(
+/// Run AdaRound for every layer at each of `wbits_options` on the caller's
+/// client; returns the stitchable rounded-weight cache.
+pub fn adaround_all(
     handle: &ModelHandle,
     manifest: &Manifest,
-    exe_file: &str,
-    taps: &[Tensor],
-    param_idx: usize,
-    bias_idx: usize,
-    scales: &[f32],
-    channel_axis: usize,
-    bits: u8,
+    taps: &Taps,
+    wbits_options: &[u8],
     cfg: &AdaRoundCfg,
+) -> Result<RoundedWeights> {
+    let mut out = RoundedWeights::new();
+    for (key, job) in plan_jobs(handle, taps, wbits_options, cfg)? {
+        let exe = handle.rt.load(manifest.path(&job.exe))?;
+        let rounded = optimize_rounding(
+            &handle.rt,
+            &exe,
+            &handle.weights[job.param_idx],
+            &handle.weights[job.bias_idx],
+            &job,
+        )?;
+        out.insert(key, rounded);
+    }
+    Ok(out)
+}
+
+/// Like [`adaround_all`], but each `(layer, wbits)` optimization is
+/// dispatched as a fleet job — independent layers anneal concurrently, and
+/// the rounded tensors are bit-identical to the serial path's.
+pub fn adaround_all_pooled(
+    pool: &EvalPool,
+    handle: &ModelHandle,
+    taps: &Taps,
+    wbits_options: &[u8],
+    cfg: &AdaRoundCfg,
+) -> Result<RoundedWeights> {
+    let planned = plan_jobs(handle, taps, wbits_options, cfg)?;
+    let keys: Vec<(usize, u8)> = planned.iter().map(|(k, _)| *k).collect();
+    let jobs: Vec<AdaRoundJob> = planned.into_iter().map(|(_, j)| j).collect();
+    let rounded = pool.adaround_jobs(jobs)?;
+    Ok(keys.into_iter().zip(rounded).collect())
+}
+
+/// Optimize one layer's rounding variables and return the hard-rounded,
+/// fake-quantized weight tensor.  Pure function of its inputs: the Adam
+/// loop is seeded from `job.cfg.seed ^ job.param_idx`, so the serial
+/// client and any fleet worker produce the same tensor.
+pub fn optimize_rounding(
+    rt: &Runtime,
+    exe: &Exe,
+    w: &Tensor,
+    b: &Tensor,
+    job: &AdaRoundJob,
 ) -> Result<Tensor> {
+    let (taps, scales, cfg) = (&job.taps, &job.scales[..], &job.cfg);
     if taps.is_empty() {
         bail!("no taps captured");
     }
-    let exe = handle.rt.load(manifest.path(exe_file))?;
-    let w = &handle.weights[param_idx];
-    let b = &handle.weights[bias_idx];
-    let (qmin, qmax) = quant::weight_qrange(bits);
+    let (qmin, qmax) = quant::weight_qrange(job.bits);
 
     // initialize V so that h(V) equals the fractional part of w/s — i.e.
     // the soft rounding starts at nearest-rounding (Nagel et al. §4)
     let wv = w.f32s()?;
     let view_shape = &w.shape;
     let mut v0 = vec![0f32; wv.len()];
-    let cview = ChannelIter::new(view_shape, scales.len(), channel_axis);
+    let cview = ChannelIter::new(view_shape, scales.len(), job.channel_axis);
     for c in 0..scales.len() {
         let s = scales[c].max(1e-12);
         cview.for_each(c, |i| {
@@ -172,23 +242,18 @@ pub fn adaround_layer(
         });
     }
 
-    // device-resident constants
-    let w_buf = handle.rt.buffer(w)?;
-    let b_buf = handle.rt.buffer(b)?;
-    let s_buf = handle
-        .rt
-        .buffer(&Tensor::from_f32(&[scales.len()], scales.to_vec())?)?;
-    let tap_bufs: Vec<Buffer> = taps
-        .iter()
-        .map(|t| handle.rt.buffer(t))
-        .collect::<Result<_>>()?;
+    // backend-resident constants
+    let w_buf = rt.buffer(w)?;
+    let b_buf = rt.buffer(b)?;
+    let s_buf = rt.buffer(&Tensor::from_f32(&[scales.len()], scales.to_vec())?)?;
+    let tap_bufs: Vec<Buffer> = taps.iter().map(|t| rt.buffer(t)).collect::<Result<_>>()?;
 
     // Adam state
     let mut v = v0;
     let mut m = vec![0f32; v.len()];
     let mut s2 = vec![0f32; v.len()];
     let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
-    let mut rng = Rng::new(cfg.seed ^ param_idx as u64);
+    let mut rng = Rng::new(cfg.seed ^ job.param_idx as u64);
     let warmup = cfg.steps / 5;
 
     for step in 0..cfg.steps {
@@ -201,10 +266,9 @@ pub fn adaround_layer(
         let meta = Tensor::from_f32(&[4], vec![qmin, qmax, beta, cfg.lambda])?;
         let v_t = Tensor::from_f32(&w.shape, v.clone())?;
         let xb = &tap_bufs[rng.below(tap_bufs.len())];
-        let v_buf = handle.rt.buffer(&v_t)?;
-        let meta_buf = handle.rt.buffer(&meta)?;
-        let args: Vec<&Buffer> =
-            vec![xb, &w_buf, &b_buf, &v_buf, &s_buf, &meta_buf];
+        let v_buf = rt.buffer(&v_t)?;
+        let meta_buf = rt.buffer(&meta)?;
+        let args: Vec<&Buffer> = vec![xb, &w_buf, &b_buf, &v_buf, &s_buf, &meta_buf];
         let outs = exe.run_b(&args)?;
         if outs.len() != 2 {
             bail!("adaround exe returned {} outputs", outs.len());

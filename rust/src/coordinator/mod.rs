@@ -1,11 +1,17 @@
 //! The coordinator: wires runtime, calibration, Phase 1 and Phase 2 into
 //! the end-to-end [`Pipeline`] — the paper's Algorithm 1 as a service.
 //!
-//! A `Pipeline` owns one model.  [`Pipeline::enable_pool`] attaches an
-//! N-client [`crate::pool::EvalPool`] and every probe / prefix / config
-//! evaluation after that fans out shard-parallel, bit-identical to the
-//! serial path; [`Pipeline::set_sens_cache_dir`] persists Phase-1 lists on
-//! disk so repeated drivers skip the sweep.  Typical flow:
+//! A `Pipeline` owns one model.  Evaluation parallelism comes from the
+//! process-wide [`crate::pool::EvalFleet`]: [`Pipeline::attach_fleet`]
+//! joins a shared fleet (multi-model drivers spawn it once;
+//! worker runtimes and compiled executables persist across models), while
+//! [`Pipeline::enable_pool`] spawns a private single-model fleet — either
+//! way every probe / prefix / config evaluation after that fans out
+//! shard-parallel, bit-identical to the serial path, and FIT sweeps and
+//! AdaRound optimizations route through the same workers.
+//! [`Pipeline::set_sens_cache_dir`] persists Phase-1 lists *and* the FP32
+//! reference on disk so repeated drivers skip both the sweep and the
+//! reference forward pass.  Typical flow:
 //!
 //! ```no_run
 //! # use mpq::coordinator::Pipeline;
@@ -20,15 +26,16 @@
 
 use crate::adaround::{self, AdaRoundCfg};
 use crate::data::DataSet;
+use crate::engine::FpReference;
 use crate::groups::{Assignment, Candidate, Lattice};
 use crate::manifest::Manifest;
 use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
-use crate::pool::{self, EvalPool, ProbeKind};
+use crate::pool::{self, EvalFleet, EvalPool, ProbeKind};
 use crate::runtime::Runtime;
 use crate::search::{self, FlipStep, SearchCtx, SearchRun};
 use crate::sensitivity::{self, cache as sens_cache, Metric, RoundedWeights, SensEntry};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::cell::Cell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -50,10 +57,13 @@ pub struct Pipeline {
     /// pool shards from, and what the sensitivity cache digests
     calib_ds: Option<DataSet>,
     val_ds: Option<DataSet>,
-    /// on-disk Phase-1 sensitivity cache dir (None = disabled)
+    /// on-disk Phase-1 sensitivity + FP32-reference cache dir
+    /// (None = disabled)
     sens_cache_dir: Option<PathBuf>,
     sens_cache_hits: Cell<u64>,
     sens_cache_misses: Cell<u64>,
+    ref_cache_hits: Cell<u64>,
+    ref_cache_misses: Cell<u64>,
 }
 
 impl Pipeline {
@@ -86,17 +96,20 @@ impl Pipeline {
             sens_cache_dir: None,
             sens_cache_hits: Cell::new(0),
             sens_cache_misses: Cell::new(0),
+            ref_cache_hits: Cell::new(0),
+            ref_cache_misses: Cell::new(0),
         }
     }
 
-    // -- evaluation pool -------------------------------------------------------
+    // -- evaluation fleet ------------------------------------------------------
 
-    /// Spawn an `workers`-client [`EvalPool`] for this model and route all
-    /// subsequent probe/prefix evaluations through it.  `workers == 0`
+    /// Spawn a **private** `workers`-client single-model fleet and route
+    /// all subsequent probe/prefix evaluations through it.  `workers == 0`
     /// disables pooling (serial single-client path); `workers == 1` is a
     /// valid degenerate pool (used by the equivalence tests).  Any state
     /// already on the pipeline (calibration, eval sets) is pushed to the
-    /// new workers.
+    /// new workers.  Multi-model drivers should share one fleet via
+    /// [`Self::attach_fleet`] instead.
     pub fn enable_pool(&mut self, workers: usize) -> Result<()> {
         if workers == 0 {
             self.pool = None;
@@ -111,7 +124,26 @@ impl Pipeline {
         self.pool_push_val()
     }
 
-    /// Enable/disable the on-disk Phase-1 sensitivity cache ([`sens_cache`]).
+    /// Attach this pipeline's model to a shared process-wide
+    /// [`EvalFleet`]: worker threads, runtimes and already-compiled
+    /// executables are reused across every model on the fleet.  Any state
+    /// already on the pipeline is pushed to the workers.
+    pub fn attach_fleet(&mut self, fleet: &Rc<EvalFleet>) -> Result<()> {
+        if fleet.dir() != self.manifest.dir {
+            bail!(
+                "fleet serves artifacts at {}, pipeline opened {}",
+                fleet.dir().display(),
+                self.manifest.dir.display()
+            );
+        }
+        self.pool = Some(EvalPool::attach(fleet, &self.model.entry.name)?);
+        self.pool_push_calibration()?;
+        self.pool_push_val()
+    }
+
+    /// Enable/disable the on-disk Phase-1 caches ([`sens_cache`]): the
+    /// sensitivity lists *and* the FP32 reference live side by side in the
+    /// same directory.
     pub fn set_sens_cache_dir(&mut self, dir: Option<PathBuf>) {
         self.sens_cache_dir = dir;
     }
@@ -121,6 +153,11 @@ impl Pipeline {
         (self.sens_cache_hits.get(), self.sens_cache_misses.get())
     }
 
+    /// `(hits, misses)` of the on-disk FP32-reference cache.
+    pub fn ref_cache_stats(&self) -> (u64, u64) {
+        (self.ref_cache_hits.get(), self.ref_cache_misses.get())
+    }
+
     /// Drop the pool's probe memo (benchmarks measure steady-state sweeps).
     pub fn clear_eval_memo(&self) {
         if let Some(p) = &self.pool {
@@ -128,18 +165,100 @@ impl Pipeline {
         }
     }
 
-    /// Push calibrated state + the calibration shard to the pool, and route
-    /// the FP-reference build through it (one sweep, split across workers).
+    /// Push calibrated state + the calibration shard to the fleet
+    /// (pipelined: the H→D shard upload overlaps the caller's subsequent
+    /// probe construction), then reconcile the FP32 reference with the
+    /// on-disk cache.
     fn pool_push_calibration(&self) -> Result<()> {
-        let Some(p) = &self.pool else { return Ok(()) };
-        if let Some(r) = &self.model.act_ranges {
-            p.set_calibration(r, &self.model.w_scales)?;
+        if let Some(p) = &self.pool {
+            if let Some(r) = &self.model.act_ranges {
+                p.set_calibration(r, &self.model.w_scales)?;
+            }
+            if let Some(ds) = &self.calib_ds {
+                p.load_set(pool::CALIB_SET, ds)?;
+            }
         }
-        if let Some(ds) = &self.calib_ds {
-            p.load_set(pool::CALIB_SET, ds)?;
-            p.build_references(pool::CALIB_SET)?;
+        self.sync_reference()
+    }
+
+    /// Reconcile the calibration set's FP32 reference with the on-disk
+    /// reference cache (stored next to the sensitivity lists, keyed by
+    /// model + calibration-data/weights digest):
+    ///
+    /// * cache **hit** — install the per-batch logits without any forward
+    ///   sweep (into every fleet worker's shard cache, or the serial
+    ///   engine);
+    /// * cache **miss**, pooled — build eagerly (one sweep split across
+    ///   the workers' shards, overlapped with later probe enqueueing),
+    ///   fetch the merged full-set logits back and persist them;
+    /// * cache **miss**, serial — stay lazy (the first SQNR probe builds
+    ///   it); [`Self::sensitivity`] persists it after the sweep;
+    /// * cache disabled — pooled keeps the eager build, serial stays lazy
+    ///   (the pre-fleet behaviour, unchanged).
+    fn sync_reference(&self) -> Result<()> {
+        let Some(ds) = &self.calib_ds else { return Ok(()) };
+        let Some(slot) = self.ref_cache_slot(ds) else {
+            if let Some(p) = &self.pool {
+                p.build_references(pool::CALIB_SET)?;
+            }
+            return Ok(());
+        };
+        match sens_cache::load_ref(&slot)? {
+            Some(batches) => {
+                self.ref_cache_hits.set(self.ref_cache_hits.get() + 1);
+                let set = self.calib_set()?;
+                if batches.len() != set.batches.len() {
+                    // digest matched but the payload doesn't — a truncated
+                    // or corrupt cache file must fail loudly, not poison
+                    // the engine (the pooled install checks the same)
+                    bail!(
+                        "reference cache {} holds {} batches, eval set has {} — \
+                         delete the stale file",
+                        slot.display(),
+                        batches.len(),
+                        set.batches.len()
+                    );
+                }
+                match &self.pool {
+                    Some(p) => p.install_references(pool::CALIB_SET, &batches)?,
+                    None => {
+                        self.model
+                            .engine
+                            .install_reference(set.id, FpReference::from_batches(batches)?);
+                    }
+                }
+            }
+            None => {
+                self.ref_cache_misses.set(self.ref_cache_misses.get() + 1);
+                if let Some(p) = &self.pool {
+                    p.build_references(pool::CALIB_SET)?;
+                    let batches = p.fetch_reference(pool::CALIB_SET)?;
+                    sens_cache::store_ref(&slot, &batches)?;
+                }
+            }
         }
         Ok(())
+    }
+
+    /// Path of the calibration FP32 reference in the on-disk cache, when
+    /// the cache is enabled.
+    fn ref_cache_slot(&self, ds: &DataSet) -> Option<PathBuf> {
+        let dir = self.sens_cache_dir.as_ref()?;
+        let digest = sens_cache::ref_digest(&self.model.entry, ds, &self.model.weights);
+        Some(sens_cache::ref_path(dir, &self.model.entry.name, digest))
+    }
+
+    /// Serial-path counterpart of the reference persistence: after a sweep
+    /// that built the reference lazily, store it if the cache wants it.
+    fn persist_serial_reference(&self) -> Result<()> {
+        let (Some(ds), Some(set)) = (&self.calib_ds, &self.calib_set) else { return Ok(()) };
+        let Some(slot) = self.ref_cache_slot(ds) else { return Ok(()) };
+        if slot.exists() {
+            return Ok(());
+        }
+        // served from the engine's in-memory cache — zero forward calls
+        let r = self.model.engine.reference(&self.model, set)?;
+        sens_cache::store_ref(&slot, &r.batches)
     }
 
     fn pool_push_val(&self) -> Result<()> {
@@ -215,9 +334,11 @@ impl Pipeline {
 
     /// Build the Phase-1 sensitivity list: served from the on-disk cache
     /// when enabled and fresh, otherwise swept — shard-parallel through the
-    /// pool when one is attached (FIT stays serial; AdaRound-stitched
-    /// sweeps are never disk-cached since the stitched weights aren't part
-    /// of the digest).
+    /// fleet when one is attached (SQNR, accuracy *and* FIT all have
+    /// pooled paths; a future metric without one falls back to the serial
+    /// path with a warning instead of erroring).  AdaRound-stitched sweeps
+    /// are never disk-cached since the stitched weights aren't part of the
+    /// digest.
     pub fn sensitivity(
         &self,
         lattice: &Lattice,
@@ -233,23 +354,43 @@ impl Pipeline {
             }
             self.sens_cache_misses.set(self.sens_cache_misses.get() + 1);
         }
-        let list = match (&self.pool, metric) {
-            (Some(p), Metric::Sqnr | Metric::Accuracy) => sensitivity::sensitivity_list_pooled(
+        let pooled = match &self.pool {
+            Some(p) if sensitivity::has_pooled_path(metric) => Some(p),
+            Some(_) => {
+                eprintln!(
+                    "[mpq] warning: Phase-1 metric {metric:?} has no pooled \
+                     implementation; falling back to the serial single-client path"
+                );
+                None
+            }
+            None => None,
+        };
+        let list = match pooled {
+            Some(p) => sensitivity::sensitivity_list_pooled(
                 p,
                 pool::CALIB_SET,
-                &self.model.entry,
-                lattice,
-                metric,
-                rounded,
-            )?,
-            _ => sensitivity::sensitivity_list(
                 &self.model,
-                &self.manifest,
                 lattice,
-                calib,
                 metric,
                 rounded,
             )?,
+            None => {
+                let list = sensitivity::sensitivity_list(
+                    &self.model,
+                    &self.manifest,
+                    lattice,
+                    calib,
+                    metric,
+                    rounded,
+                )?;
+                if metric == Metric::Sqnr {
+                    // the sweep just built the FP reference lazily —
+                    // persist it for later drivers (cache-gated no-op
+                    // otherwise)
+                    self.persist_serial_reference()?;
+                }
+                list
+            }
         };
         if let Some((path, digest)) = slot {
             sens_cache::store(&path, &self.model.entry.name, metric, digest, &list)?;
@@ -273,6 +414,9 @@ impl Pipeline {
     // -- AdaRound ---------------------------------------------------------------
 
     /// Precompute AdaRounded weights for every layer × weight-bit option.
+    /// Taps are captured once on this pipeline's client; the independent
+    /// `(layer, wbits)` optimizations then anneal concurrently across the
+    /// fleet when one is attached (bit-identical to the serial path).
     pub fn adaround(&self, lattice: &Lattice, cfg: &AdaRoundCfg) -> Result<RoundedWeights> {
         let set = self.calib_set()?;
         let taps = adaround::capture_taps(
@@ -281,13 +425,11 @@ impl Pipeline {
             &set.batches,
             cfg.tap_batches,
         )?;
-        adaround::adaround_all(
-            &self.model,
-            &self.manifest,
-            &taps,
-            &lattice.wbits_options(),
-            cfg,
-        )
+        let wbits = lattice.wbits_options();
+        match &self.pool {
+            Some(p) => adaround::adaround_all_pooled(p, &self.model, &taps, &wbits, cfg),
+            None => adaround::adaround_all(&self.model, &self.manifest, &taps, &wbits, cfg),
+        }
     }
 
     // -- Phase 2 ---------------------------------------------------------------

@@ -124,6 +124,13 @@ impl HandleEngine {
         }
     }
 
+    /// Seed the cache for `set_id` with an externally built reference
+    /// (restored from the on-disk reference cache) — later
+    /// [`Self::reference`] calls are hits, no forward sweep runs.
+    pub fn install_reference(&self, set_id: u64, r: FpReference) {
+        self.refs.borrow_mut().insert(set_id, Rc::new(r));
+    }
+
     /// The FP32 reference for `set`, building it with one forward sweep on
     /// first use.  The reference depends only on the trained weights, so it
     /// stays valid across recalibrations of the quantizer ranges.

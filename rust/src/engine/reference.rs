@@ -45,6 +45,23 @@ impl FpReference {
         Ok(Self { batches, sig_pow, shape })
     }
 
+    /// Rebuild a reference from per-batch FP32 logits (the on-disk
+    /// reference cache, or a fleet worker's shard slice of it) without any
+    /// forward sweep.  The per-sample signal power is recomputed from the
+    /// logits — a pure `f64` function of them, so a reference restored
+    /// from disk is indistinguishable from a freshly built one.
+    pub fn from_batches(batches: Vec<Tensor>) -> Result<Self> {
+        let mut sig_pow = Vec::with_capacity(batches.len());
+        let mut n = 0usize;
+        for b in &batches {
+            sig_pow.push(per_sample_power(b)?);
+            n += b.shape[0];
+        }
+        let mut shape = batches.first().map(|b| b.shape.clone()).unwrap_or_else(|| vec![0]);
+        shape[0] = n;
+        Ok(Self { batches, sig_pow, shape })
+    }
+
     /// Number of samples covered.
     pub fn n(&self) -> usize {
         self.shape[0]

@@ -15,6 +15,7 @@ use crate::coordinator::{Pipeline, SearchScheme};
 use crate::groups::{Candidate, Lattice};
 use crate::manifest::Manifest;
 use crate::metrics::kendall_tau;
+use crate::pool::EvalFleet;
 use crate::report::{f3, f4, Table};
 use crate::runtime::Runtime;
 use crate::search::SearchRun;
@@ -72,7 +73,10 @@ impl Opts {
 pub struct Env {
     pub manifest: Manifest,
     pub rt: Rc<Runtime>,
-    workers: usize,
+    /// the process-wide evaluation fleet (`--workers` > 1): spawned once
+    /// per driver run, shared by every pipeline/model the driver opens —
+    /// worker threads and compiled executables persist across models
+    fleet: Option<Rc<EvalFleet>>,
     sens_cache: Option<std::path::PathBuf>,
 }
 
@@ -80,18 +84,29 @@ impl Env {
     pub fn open(opts: &Opts) -> Result<Self> {
         let manifest = Manifest::load(&opts.dir)?;
         let rt = Rc::new(Runtime::for_manifest(&manifest)?);
+        let fleet = if opts.workers > 1 {
+            Some(EvalFleet::new(&opts.dir, opts.workers)?)
+        } else {
+            None
+        };
         Ok(Self {
             manifest,
             rt,
-            workers: opts.workers,
+            fleet,
             sens_cache: opts.sens_cache_dir(),
         })
     }
 
+    /// The shared evaluation fleet, when `--workers` enabled one (drivers
+    /// can `resize` it between phases).
+    pub fn fleet(&self) -> Option<&Rc<EvalFleet>> {
+        self.fleet.as_ref()
+    }
+
     pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
         let mut pipe = Pipeline::open_with(self.rt.clone(), &self.manifest, model)?;
-        if self.workers > 1 {
-            pipe.enable_pool(self.workers)?;
+        if let Some(fleet) = &self.fleet {
+            pipe.attach_fleet(fleet)?;
         }
         pipe.set_sens_cache_dir(self.sens_cache.clone());
         Ok(pipe)
@@ -146,12 +161,13 @@ const CNN_MODELS: &[&str] = &[
 ];
 
 /// One-line per-model accounting appended to driver progress output: the
-/// on-disk sensitivity-cache hit/miss counters (ROADMAP asks reports to
-/// carry them) and the evaluation-pool width in use.
+/// on-disk sensitivity/reference-cache hit/miss counters (ROADMAP asks
+/// reports to carry them) and the evaluation-fleet width in use.
 fn pipe_note(pipe: &Pipeline) -> String {
     let (h, m) = pipe.sens_cache_stats();
+    let (rh, rm) = pipe.ref_cache_stats();
     let w = pipe.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
-    format!("sens-cache {h}h/{m}m, pool w={w}")
+    format!("sens-cache {h}h/{m}m, ref-cache {rh}h/{rm}m, fleet w={w}")
 }
 
 /// MP at a BOPs budget via SQNR Phase 1 (the paper's standard pipeline).

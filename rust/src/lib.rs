@@ -14,10 +14,14 @@
 //!   `(model, eval-set)`, batch-streamed SQNR/task metrics (no host logit
 //!   concatenation), per-configuration memoization with hit counters next
 //!   to `fwd_calls`, and packed quant-param tensors row-patched from a
-//!   cached baseline.  The [`pool`] scales that service horizontally: N
-//!   worker threads, each with a private PJRT client and an eval-set
-//!   shard, evaluate probes in parallel with results bit-identical to the
-//!   serial path (`--workers N` on the CLI).
+//!   cached baseline.  The [`pool`] scales that service horizontally with
+//!   one elastic, process-wide **evaluation fleet**: N worker threads,
+//!   each with a private backend client, shared across every model in the
+//!   process (per-model executables compile lazily and are evicted on
+//!   detach; `resize` grows/shrinks the fleet between phases).  Probes,
+//!   FIT accumulation and AdaRound optimizations all fan out through it
+//!   with results bit-identical to the serial path (`--workers N` on the
+//!   CLI).
 //! * **L2** — the model zoo, lowered once by `python/compile/aot.py` to
 //!   HLO-text artifacts whose quantizer parameters are *runtime inputs*.
 //! * **L1** — Pallas fake-quant kernels inside those artifacts.

@@ -16,7 +16,11 @@
 //!
 //! Common flags: `--artifacts DIR`, `--calib N`, `--seed S`,
 //! `--models a,b,c`, `--fast`, `--budget R`, `--lattice practical|expanded`,
-//! `--workers N` (evaluation-pool width, default = host parallelism).
+//! `--workers N` (evaluation-fleet width, default = host parallelism).
+//! `--workers` is a **fleet-level** setting: the experiment drivers spawn
+//! one worker fleet per process and share it across every model they open
+//! (worker threads and compiled executables persist across models), while
+//! single-model commands spawn a private fleet of the same width.
 
 use anyhow::{anyhow, bail, Result};
 use mpq::cli::Args;
@@ -176,8 +180,9 @@ fn main() -> Result<()> {
             println!("usage: mpq <list|run|sensitivity|sim-gen|table1..table5|fig2..fig5|all> [flags]");
             println!("flags: --artifacts DIR --model M --models a,b --calib N --seed S");
             println!("       --budget R --lattice practical|practical_no16|expanded --fast");
-            println!("       --workers N  parallel eval-pool width (default: host parallelism;");
-            println!("                    1 = serial single-client path)");
+            println!("       --workers N  evaluation-fleet width (default: host parallelism;");
+            println!("                    one shared fleet per driver run, reused across all");
+            println!("                    models; 1 = serial single-client path)");
             println!("sim-gen: --out DIR --dims d0,d1,..,dL --batch B --calib-n N --val-n N");
             println!("         --ood-n N --sim-seed S  (pure-Rust backend; no PJRT needed)");
         }

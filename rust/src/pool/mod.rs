@@ -1,69 +1,97 @@
-//! The evaluation pool — N worker threads, each owning a **private** PJRT
-//! client, turning the single-client evaluation service into a horizontally
-//! scalable one.
+//! The evaluation fleet — one process-wide set of worker threads, each
+//! owning a **private** backend client, shared by every model and pipeline
+//! in the process.
 //!
-//! ## Why a pool of whole clients
+//! ## Why a fleet of whole clients
 //!
 //! The PJRT client (and everything hanging off it: compiled executables,
-//! device buffers, `Rc`-shared runtime state) is not `Send`, so PJRT state
-//! can never cross a thread boundary.  `util::par_map` therefore only ever
-//! covered pure host math, and after the engine (PR 1) removed the
-//! redundant work, Phase-1 sweeps and Phase-2 searches were compute-bound
-//! on one single-threaded client.  [`EvalPool`] sidesteps the `!Send` wall
-//! by *replication*: each worker thread builds its own [`Runtime`] — the
-//! backend the manifest names, PJRT or the pure-Rust sim interpreter — its
-//! own [`ModelHandle`] (compiled forward executable + resident trained
-//! parameters) and uploads its own **shard** of each eval set.  Only host
-//! data crosses the channels: [`QuantConfig`]s, override [`Tensor`]s,
-//! calibration state in, streaming-accumulator partials out.
+//! device buffers, `Rc`-shared runtime state) is not `Send`, so backend
+//! state can never cross a thread boundary.  [`EvalFleet`] sidesteps the
+//! `!Send` wall by *replication*: each worker thread builds its own
+//! [`crate::runtime::Runtime`] and, **lazily on first use**, a per-model
+//! [`crate::model::ModelHandle`] (compiled forward executable + resident
+//! trained parameters) plus its shard of each registered eval set.  Only
+//! host data crosses the channels: configs, override tensors, calibration
+//! state in; streaming-accumulator partials out.
+//!
+//! ## Elasticity and sharing (vs the PR-2 per-pipeline pool)
+//!
+//! * **One fleet per process** — [`EvalFleet::new`] spawns the workers
+//!   once; [`EvalPool::attach`] attaches a model and returns an
+//!   [`EvalPool`], the per-model view every pipeline drives.  Worker
+//!   runtimes (and their executable caches) outlive model attach/detach,
+//!   so a multi-model experiment driver pays thread spawn and runtime
+//!   construction once, and attaching a second model performs **zero
+//!   recompilations** of the first model's executables (asserted via
+//!   [`EvalFleet::worker_stats`] / [`EvalFleet::model_opens`]).  Detaching
+//!   the last client of a model evicts its handles, shards and memo
+//!   entries everywhere.
+//! * **`resize(n)`** grows or shrinks the fleet between phases: the
+//!   front-end keeps host copies of every model's calibration state and
+//!   registered datasets, re-shards them over the new worker count, and
+//!   replays them; probe results are full-set scalars, so the memo stays
+//!   valid across any resize.
+//! * **Pipelined (double-buffered) set upload** — `load_set`,
+//!   `set_calibration` and `build_references` no longer block on worker
+//!   acks.  Upload jobs ride the same FIFO queue as probes, so the
+//!   coordinator enqueues an upload and immediately continues building and
+//!   enqueueing probe work (and collecting results from other workers)
+//!   while each worker's H→D copy is in flight; a probe enqueued behind
+//!   its set's upload is correct by queue order.  Upload errors are
+//!   recorded worker-side and surfaced by the first tracked job that
+//!   touches the broken state.
 //!
 //! ## Execution model
 //!
-//! Work is submitted at **probe granularity** ([`EvalPool::submit`] /
-//! [`EvalPool::map_probes`]): one probe = one `(config, overrides)`
-//! evaluation over one registered eval set.  Internally every probe fans
-//! out to *all* workers — each evaluates the config on its shard and
-//! returns a partial accumulator — and the pool reduces the partials.
-//! Sharding (rather than probe-per-worker placement) parallelizes both the
-//! embarrassingly parallel Phase-1 sweep *and* the inherently sequential
-//! Phase-2 searches, whose next prefix depends on the previous metric.
-//! Probes pipeline: a whole sweep is enqueued at once and each worker
-//! drains its queue at its own pace.
+//! Shard-parallel work ([`EvalPool::submit`] / [`EvalPool::map_probes`] /
+//! [`EvalPool::fit_accumulate`]) broadcasts to *all* workers — each
+//! evaluates its contiguous shard and returns a partial, and the front-end
+//! reduces in global batch order.  Job-parallel work
+//! ([`EvalPool::adaround_jobs`]) dispatches each independent
+//! `(layer, wbits)` optimization to a *single* worker round-robin, so
+//! independent layers anneal concurrently.
 //!
 //! ## Exactness guarantee
 //!
-//! Pool results are **bit-identical** to the serial path for SQNR and the
-//! counting task metrics, for any worker count:
+//! Fleet results are **bit-identical** to the serial path for SQNR, the
+//! counting task metrics, FIT accumulation and AdaRound, for any worker
+//! count:
 //!
 //! * shards are contiguous batch ranges, and each worker computes exactly
-//!   the per-batch partial sums the serial path computes;
+//!   the per-batch partials the serial path computes;
 //! * [`StreamingSqnr`] keys partials by *global* batch index and reduces in
-//!   index order, so the final summation has the same operands in the same
-//!   order regardless of sharding;
-//! * top-1 / F1 / mIoU partials are integer counts — order-free.
+//!   index order; top-1 / F1 / mIoU partials are integer counts;
+//! * FIT shards return **raw per-batch** gradient/error vectors and the
+//!   front-end replays the serial `(abits, batch)` accumulation order
+//!   term by term ([`crate::sensitivity`]);
+//! * an AdaRound job is a self-contained deterministic optimization — the
+//!   same inputs anneal to the same rounding on any worker.
 //!
 //! The one documented exception is the Pearson (STS-B) head, whose Welford
 //! states combine to the serial value up to float rounding.
 //!
-//! ## Pool-aware caches
+//! ## Fleet-wide caches
 //!
-//! * **Memo** — the pool memoizes finished probes by
-//!   `(set, kind, config, override-digest)`, so a probe measured by any
-//!   worker is served from cache for all subsequent submitters, across
-//!   Phase-1 sweeps and Phase-2 runs alike.  [`EvalPool::set_calibration`]
-//!   and re-loading a set invalidate the affected entries.
-//! * **FP reference** — each worker's `HandleEngine` caches the FP32
-//!   reference for *its shard*, so one full-set reference build costs a
-//!   single sweep split across the workers ([`EvalPool::build_references`]
-//!   triggers it eagerly; a first SQNR probe triggers it lazily).
+//! * **Memo** — finished probes are memoized by
+//!   `(model, set, kind, config, override-digest)`, shared across every
+//!   client and search on the fleet.  `set_calibration` and re-loading a
+//!   set invalidate the affected entries; detach drops the model's.
+//! * **Per-worker references** — each worker's engine caches the FP32
+//!   reference for *its shard*; `build_references` triggers the build
+//!   eagerly, `install_references` seeds it from a host copy (the on-disk
+//!   reference cache), and `fetch_reference` collects the full-set
+//!   reference back for persistence.
 
+mod worker;
+
+use crate::adaround::AdaRoundJob;
 use crate::data::DataSet;
 use crate::engine::StreamingSqnr;
 use crate::manifest::Manifest;
 use crate::metrics::StreamingTaskMetric;
-use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
+use crate::model::{QuantConfig, WeightOverrides};
 use crate::quant::ActRanges;
-use crate::runtime::Runtime;
+use crate::sensitivity::FitBatchRaw;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -74,7 +102,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// Identifies a registered eval set within the pool.
+/// Identifies a registered eval set within the fleet (per model).
 pub type SetKey = u64;
 
 /// Conventional key for the calibration set (Phase 1).
@@ -92,31 +120,58 @@ pub enum ProbeKind {
 }
 
 /// Host-only request shipped to a worker.  Everything here is `Send`; no
-/// PJRT state ever crosses the channel.
+/// backend state ever crosses the channel.  Payloads sit behind `Arc` where
+/// an N-worker broadcast would otherwise deep-copy them N times.
 enum Request {
-    /// Install calibrated quantizer state (host data) on the worker's handle.
+    /// Install calibrated quantizer state (host data) on the worker's
+    /// handle for `model`.
     Calibrate {
+        model: Arc<str>,
         ranges: ActRanges,
         w_scales: HashMap<u8, Vec<Vec<f32>>>,
     },
     /// Upload this worker's shard of an eval set.
     LoadSet {
+        model: Arc<str>,
         key: SetKey,
         batches: Vec<Tensor>,
         labels: Tensor,
         first_batch: usize,
     },
     /// Eagerly build the FP32 reference for the worker's shard of `set`.
-    BuildReference { set: SetKey },
-    /// Evaluate one probe on the worker's shard of `set`.  Payloads sit
-    /// behind `Arc` so an N-worker broadcast is N pointer bumps, not N
-    /// deep copies of the config and (potentially large) override tensors.
+    BuildReference { model: Arc<str>, set: SetKey },
+    /// Seed the worker's reference cache from host logits (the on-disk
+    /// reference cache) instead of a forward sweep.
+    InstallReference {
+        model: Arc<str>,
+        set: SetKey,
+        batches: Vec<Tensor>,
+    },
+    /// Return the worker's shard of the FP32 reference (for persistence).
+    FetchReference { model: Arc<str>, set: SetKey },
+    /// Evaluate one probe on the worker's shard of `set`.
     Probe {
+        model: Arc<str>,
         set: SetKey,
         kind: ProbeKind,
         cfg: Arc<QuantConfig>,
         overrides: Arc<WeightOverrides>,
     },
+    /// FIT accumulation pass at one activation bit-width: run the FIT
+    /// executable over the worker's shard and return the **raw per-batch**
+    /// outputs, so the front-end can replay the serial accumulation order.
+    Fit {
+        model: Arc<str>,
+        set: SetKey,
+        qp: Arc<Tensor>,
+    },
+    /// One whole `(layer, wbits)` AdaRound optimization (single-worker
+    /// dispatch, not a broadcast).
+    AdaRound { model: Arc<str>, job: Arc<AdaRoundJob> },
+    /// Drop the model's handle, shards and reference caches.
+    Detach { model: Arc<str> },
+    /// Report per-worker cache counters.
+    Stats,
 }
 
 struct Job {
@@ -124,81 +179,213 @@ struct Job {
     req: Request,
 }
 
-/// A worker's shard-local result.
+/// A worker's result for one job.
 enum Partial {
     Sqnr(StreamingSqnr),
     Task(StreamingTaskMetric),
+    Fit(FitShard),
+    Batches { first_batch: usize, batches: Vec<Tensor> },
+    Rounded(Tensor),
+    Stats(WorkerStats),
     Unit,
+}
+
+/// Raw FIT outputs for one worker's shard (global batch order within).
+struct FitShard {
+    first_batch: usize,
+    raws: Vec<FitBatchRaw>,
+}
+
+/// Per-worker cache counters (compile-cache assertions in tests/benches).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerStats {
+    /// distinct executables compiled by this worker's runtime so far
+    pub compiled: usize,
+    /// model handles currently open on this worker
+    pub models_open: usize,
 }
 
 type ResMsg = (u64, usize, Result<Partial, String>);
 
-/// Memo key: overrides are folded in as a content digest so AdaRound-
-/// stitched and plain evaluations of the same bit-config never alias.
-type MemoKey = (SetKey, ProbeKind, QuantConfig, u64);
+/// Sentinel job id a worker sends right before its thread exits on a
+/// panic.  The collect loop turns it into errors on every pending slot of
+/// that worker, so jobs already pipelined into the dead worker's queue
+/// fail loudly instead of hanging the coordinator (the fleet keeps its
+/// own `res_tx` alive for elastic spawn, so channel disconnect can no
+/// longer signal total worker death).  Job ids count up from 0 and can
+/// never reach this value in practice.
+const DEATH_NOTICE: u64 = u64::MAX;
+
+/// Memo key: `(model id, set, kind, config, override digest)` — overrides
+/// are folded in as a content digest so AdaRound-stitched and plain
+/// evaluations of the same bit-config never alias, and two models' probes
+/// never collide.
+type MemoKey = (u64, SetKey, ProbeKind, QuantConfig, u64);
 
 struct Worker {
     tx: Option<mpsc::Sender<Job>>,
     join: Option<JoinHandle<()>>,
 }
 
-/// The multi-client evaluation pool.  See the module docs for the model.
+/// An in-flight tracked job: per-worker result slots plus how many are
+/// still outstanding (broadcasts expect one per worker, single-worker
+/// dispatch exactly one).
+struct Pending {
+    slots: Vec<Option<Result<Partial, String>>>,
+    remaining: usize,
+}
+
+/// Host-side replayable state for one attached model — what `resize`
+/// re-shards onto a changed worker set.
+struct ModelState {
+    id: u64,
+    attached: usize,
+    calib: Option<(ActRanges, HashMap<u8, Vec<Vec<f32>>>)>,
+    sets: HashMap<SetKey, DataSet>,
+}
+
+/// The process-wide elastic worker fleet.  See the module docs.
 ///
-/// The pool handle is intended to be driven from one thread (the
+/// The fleet handle is intended to be driven from one thread (the
 /// coordinator); the workers it owns are where the parallelism lives.
-pub struct EvalPool {
-    workers: Vec<Worker>,
+pub struct EvalFleet {
+    dir: PathBuf,
+    manifest: Manifest,
+    workers: Mutex<Vec<Worker>>,
+    /// kept alive for elastic spawn — new workers clone it
+    res_tx: mpsc::Sender<ResMsg>,
     res_rx: Mutex<mpsc::Receiver<ResMsg>>,
-    /// job id → per-worker result slots, filled as workers report
-    pending: Mutex<HashMap<u64, Vec<Option<Result<Partial, String>>>>>,
+    pending: Mutex<HashMap<u64, Pending>>,
     next_id: AtomicU64,
     memo: Mutex<HashMap<MemoKey, f64>>,
     memo_hits: AtomicUsize,
     memo_misses: AtomicUsize,
-    /// manifest task string — selects the accumulator used to merge
-    /// task-metric partials
-    task: String,
-    batch: usize,
+    /// model handles opened (= lazy compiles) across all workers, ever
+    opens: Arc<AtomicUsize>,
+    state: Mutex<HashMap<String, ModelState>>,
+    next_model_id: AtomicU64,
 }
 
-impl EvalPool {
-    /// Spawn `workers` (≥ 1) threads, each opening `model` from the
-    /// artifacts at `dir` on a private PJRT client.  Fails if any worker
-    /// fails to initialize (artifacts missing, compile error, …).
-    pub fn new(dir: impl AsRef<Path>, model: &str, workers: usize) -> Result<Self> {
+impl EvalFleet {
+    /// Spawn a fleet of `workers` (≥ 1) threads over the artifacts at
+    /// `dir`.  Workers build their private runtime at spawn; models
+    /// compile lazily on first use.
+    pub fn new(dir: impl AsRef<Path>, workers: usize) -> Result<Rc<Self>> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let entry = manifest.model(model)?;
-        let (task, batch) = (entry.task.clone(), entry.batch);
-
-        let n = workers.max(1);
         let (res_tx, res_rx) = mpsc::channel::<ResMsg>();
-        let (init_tx, init_rx) = mpsc::channel::<(usize, Result<(), String>)>();
-        let mut ws = Vec::with_capacity(n);
-        for widx in 0..n {
-            let (tx, rx) = mpsc::channel::<Job>();
-            let (d, m) = (dir.clone(), model.to_string());
-            let (rtx, itx) = (res_tx.clone(), init_tx.clone());
-            let join = std::thread::Builder::new()
-                .name(format!("mpq-eval-{widx}"))
-                .spawn(move || worker_main(widx, d, m, rx, rtx, itx))
-                .map_err(|e| anyhow!("spawning eval worker {widx}: {e}"))?;
-            ws.push(Worker { tx: Some(tx), join: Some(join) });
-        }
-        drop(res_tx);
-        drop(init_tx);
-
-        let mut pool = Self {
-            workers: ws,
+        let fleet = Rc::new(Self {
+            dir,
+            manifest,
+            workers: Mutex::new(Vec::new()),
+            res_tx,
             res_rx: Mutex::new(res_rx),
             pending: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(0),
             memo: Mutex::new(HashMap::new()),
             memo_hits: AtomicUsize::new(0),
             memo_misses: AtomicUsize::new(0),
-            task,
-            batch,
-        };
+            opens: Arc::new(AtomicUsize::new(0)),
+            state: Mutex::new(HashMap::new()),
+            next_model_id: AtomicU64::new(0),
+        });
+        fleet.spawn_workers(workers.max(1))?;
+        Ok(fleet)
+    }
+
+    /// Artifacts directory the fleet serves.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Probes actually dispatched to workers (memo misses), fleet-wide.
+    pub fn probes_computed(&self) -> usize {
+        self.memo_misses.load(Ordering::Relaxed)
+    }
+
+    /// Probes served from the fleet memo.
+    pub fn memo_hits(&self) -> usize {
+        self.memo_hits.load(Ordering::Relaxed)
+    }
+
+    /// Drop every memoized probe result (benchmarks use this to measure
+    /// steady-state sweeps rather than pure cache hits).
+    pub fn clear_memo(&self) {
+        self.memo.lock().unwrap().clear();
+    }
+
+    /// Model handles opened (compiled) by workers over the fleet's life —
+    /// the lazy-compile counter the fleet-reuse acceptance test asserts
+    /// on: re-probing an attached model must not move it.
+    pub fn model_opens(&self) -> usize {
+        self.opens.load(Ordering::Relaxed)
+    }
+
+    /// Per-worker compile-cache counters, in worker order.
+    pub fn worker_stats(&self) -> Result<Vec<WorkerStats>> {
+        let id = self.submit_broadcast(true, |_| Request::Stats)?;
+        let mut out = Vec::new();
+        for (_, p) in self.collect(id)? {
+            match p {
+                Partial::Stats(s) => out.push(s),
+                _ => bail!("worker returned a non-stats partial"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Grow or shrink the fleet to `n` workers (≥ 1) between phases.
+    /// Host-side model state (calibration, datasets) is re-sharded and
+    /// replayed onto the new worker set; the probe memo survives (probe
+    /// results are full-set values, independent of sharding).  Per-worker
+    /// reference caches are rebuilt lazily on the next SQNR probe.
+    pub fn resize(&self, n: usize) -> Result<()> {
+        let n = n.max(1);
+        if !self.pending.lock().unwrap().is_empty() {
+            bail!("fleet resize with tracked jobs still in flight");
+        }
+        let cur = self.workers();
+        if n == cur {
+            return Ok(());
+        }
+        if n < cur {
+            let removed: Vec<Worker> = self.workers.lock().unwrap().drain(n..).collect();
+            for mut w in removed {
+                w.tx.take(); // closing the channel ends the worker's loop
+                if let Some(j) = w.join.take() {
+                    let _ = j.join();
+                }
+            }
+        } else {
+            self.spawn_workers(n - cur)?;
+        }
+        self.replay_state()
+    }
+
+    // -- internals -----------------------------------------------------------
+
+    fn spawn_workers(&self, n: usize) -> Result<()> {
+        let (init_tx, init_rx) = mpsc::channel::<(usize, Result<(), String>)>();
+        {
+            let mut ws = self.workers.lock().unwrap();
+            let base = ws.len();
+            for i in 0..n {
+                let widx = base + i;
+                let (tx, rx) = mpsc::channel::<Job>();
+                let (d, rtx, itx) = (self.dir.clone(), self.res_tx.clone(), init_tx.clone());
+                let opens = self.opens.clone();
+                let join = std::thread::Builder::new()
+                    .name(format!("mpq-fleet-{widx}"))
+                    .spawn(move || worker::worker_main(widx, d, rx, rtx, itx, opens))
+                    .map_err(|e| anyhow!("spawning fleet worker {widx}: {e}"))?;
+                ws.push(Worker { tx: Some(tx), join: Some(join) });
+            }
+        }
+        drop(init_tx);
         let mut failures = Vec::new();
         for _ in 0..n {
             match init_rx.recv() {
@@ -211,62 +398,386 @@ impl EvalPool {
             }
         }
         if !failures.is_empty() {
-            pool.shutdown();
-            bail!("eval pool init failed: {}", failures.join("; "));
+            // roll back the batch we just spawned (they sit at the tail)
+            let tail: Vec<Worker> = {
+                let mut ws = self.workers.lock().unwrap();
+                let keep = ws.len().saturating_sub(n);
+                ws.drain(keep..).collect()
+            };
+            for mut w in tail {
+                w.tx.take();
+                if let Some(j) = w.join.take() {
+                    let _ = j.join();
+                }
+            }
+            bail!("fleet worker init failed: {}", failures.join("; "));
         }
-        Ok(pool)
+        Ok(())
+    }
+
+    /// Re-shard and replay every attached model's host state onto the
+    /// current worker set (after a resize).
+    fn replay_state(&self) -> Result<()> {
+        let snapshot: Vec<(String, Option<(ActRanges, HashMap<u8, Vec<Vec<f32>>>)>, Vec<(SetKey, DataSet)>)> = {
+            let st = self.state.lock().unwrap();
+            st.iter()
+                .map(|(name, ms)| {
+                    (
+                        name.clone(),
+                        ms.calib.clone(),
+                        ms.sets.iter().map(|(&k, ds)| (k, ds.clone())).collect(),
+                    )
+                })
+                .collect()
+        };
+        let n = self.workers();
+        for (name, calib, sets) in snapshot {
+            let model: Arc<str> = Arc::from(name.as_str());
+            if let Some((ranges, w_scales)) = calib {
+                self.fire(|_| Request::Calibrate {
+                    model: model.clone(),
+                    ranges: ranges.clone(),
+                    w_scales: w_scales.clone(),
+                })?;
+            }
+            let batch = self.manifest.model(&name)?.batch;
+            for (key, ds) in sets {
+                let batches = ds.batches(batch)?;
+                let labels = ds.labels_prefix(batch)?;
+                let ranges = shard_ranges(batches.len(), n);
+                self.fire(|w| {
+                    let r = &ranges[w];
+                    Request::LoadSet {
+                        model: model.clone(),
+                        key,
+                        batches: batches[r.clone()].to_vec(),
+                        labels: labels
+                            .slice_rows(r.start * batch, (r.end - r.start) * batch)
+                            .expect("labels_prefix is batch-aligned"),
+                        first_batch: r.start,
+                    }
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn detach(&self, model: &str, model_id: u64) {
+        let gone = {
+            let mut st = self.state.lock().unwrap();
+            match st.get_mut(model) {
+                Some(ms) => {
+                    ms.attached = ms.attached.saturating_sub(1);
+                    if ms.attached == 0 {
+                        st.remove(model);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                None => false,
+            }
+        };
+        if gone {
+            self.memo.lock().unwrap().retain(|k, _| k.0 != model_id);
+            let m: Arc<str> = Arc::from(model);
+            let _ = self.fire(|_| Request::Detach { model: m.clone() });
+        }
+    }
+
+    /// Send one job to every worker.  With `track`, a [`Pending`] entry is
+    /// created and [`Self::collect`] must be called; without, the job is
+    /// fire-and-forget — workers still reply, and the unknown-id replies
+    /// are dropped by the collect loop.
+    fn submit_broadcast(&self, track: bool, mk: impl Fn(usize) -> Request) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let ws = self.workers.lock().unwrap();
+        if track {
+            self.pending.lock().unwrap().insert(
+                id,
+                Pending {
+                    slots: (0..ws.len()).map(|_| None).collect(),
+                    remaining: ws.len(),
+                },
+            );
+        }
+        for (w, worker) in ws.iter().enumerate() {
+            let sent = worker
+                .tx
+                .as_ref()
+                .ok_or_else(|| anyhow!("fleet worker {w} is gone (dead or shut down)"))
+                .and_then(|tx| {
+                    tx.send(Job { id, req: mk(w) })
+                        .map_err(|_| anyhow!("fleet worker {w} is gone"))
+                });
+            if let Err(e) = sent {
+                if track {
+                    self.pending.lock().unwrap().remove(&id);
+                }
+                return Err(e);
+            }
+        }
+        Ok(id)
+    }
+
+    fn fire(&self, mk: impl Fn(usize) -> Request) -> Result<()> {
+        self.submit_broadcast(false, mk).map(|_| ())
+    }
+
+    /// Send one tracked job to a single worker.
+    fn submit_one(&self, w: usize, req: Request) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let ws = self.workers.lock().unwrap();
+        if w >= ws.len() {
+            bail!("no fleet worker {w}");
+        }
+        self.pending.lock().unwrap().insert(
+            id,
+            Pending {
+                slots: (0..ws.len()).map(|_| None).collect(),
+                remaining: 1,
+            },
+        );
+        let sent = ws[w]
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("fleet worker {w} is gone (dead or shut down)"))
+            .and_then(|tx| {
+                tx.send(Job { id, req })
+                    .map_err(|_| anyhow!("fleet worker {w} is gone"))
+            });
+        if let Err(e) = sent {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    /// Block until every expected worker reported on `id`; error if any
+    /// did.  Returns the partials in worker (= global batch) order.
+    fn collect(&self, id: u64) -> Result<Vec<(usize, Partial)>> {
+        loop {
+            {
+                let mut pending = self.pending.lock().unwrap();
+                let p = pending
+                    .get(&id)
+                    .ok_or_else(|| anyhow!("unknown or already-collected job {id}"))?;
+                if p.remaining == 0 {
+                    let p = pending.remove(&id).unwrap();
+                    drop(pending);
+                    let mut out = Vec::new();
+                    let mut errs = Vec::new();
+                    for (w, s) in p.slots.into_iter().enumerate() {
+                        match s {
+                            None => {}
+                            Some(Ok(part)) => out.push((w, part)),
+                            Some(Err(e)) => errs.push(format!("fleet worker {w}: {e}")),
+                        }
+                    }
+                    if !errs.is_empty() {
+                        bail!("{}", errs.join("; "));
+                    }
+                    return Ok(out);
+                }
+            }
+            let (jid, w, r) = {
+                let rx = self.res_rx.lock().unwrap();
+                rx.recv().map_err(|_| anyhow!("all fleet workers exited"))?
+            };
+            let mut pending = self.pending.lock().unwrap();
+            if jid == DEATH_NOTICE {
+                // the worker's thread is gone: nothing it still had queued
+                // will ever be answered — fail its slot in every in-flight
+                // job so no wait hangs, and close its sender so every
+                // later submit errors immediately instead of racing the
+                // thread teardown
+                let msg = match r {
+                    Err(e) => e,
+                    Ok(_) => "worker died".into(),
+                };
+                for p in pending.values_mut() {
+                    if w < p.slots.len() && p.slots[w].is_none() {
+                        p.slots[w] = Some(Err(msg.clone()));
+                        p.remaining -= 1;
+                    }
+                }
+                drop(pending);
+                if let Some(worker) = self.workers.lock().unwrap().get_mut(w) {
+                    worker.tx.take();
+                }
+                continue;
+            }
+            if let Some(p) = pending.get_mut(&jid) {
+                if w < p.slots.len() && p.slots[w].is_none() {
+                    p.slots[w] = Some(r);
+                    p.remaining -= 1;
+                }
+            }
+            // replies to fire-and-forget (or already-failed) jobs fall
+            // through here and are dropped
+        }
+    }
+
+    fn wait_unit(&self, id: u64) -> Result<()> {
+        for (_, p) in self.collect(id)? {
+            if !matches!(p, Partial::Unit) {
+                bail!("worker returned a value for a control job");
+            }
+        }
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.iter_mut() {
+            w.tx.take(); // closing the channel ends the worker's recv loop
+        }
+        for w in ws.iter_mut() {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+impl Drop for EvalFleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-model client of an [`EvalFleet`] — the handle pipelines and
+/// searches drive.  [`EvalPool::new`] spawns a private single-model fleet
+/// (the PR-2 shape); [`EvalPool::attach`] attaches to a shared one.
+/// Dropping the last client of a model detaches it fleet-wide.
+pub struct EvalPool {
+    fleet: Rc<EvalFleet>,
+    model: Arc<str>,
+    model_id: u64,
+    /// manifest task string — selects the accumulator used to merge
+    /// task-metric partials
+    task: String,
+    batch: usize,
+}
+
+impl EvalPool {
+    /// Spawn a private `workers`-thread fleet for one model at `dir` —
+    /// the PR-2 compatible constructor.
+    pub fn new(dir: impl AsRef<Path>, model: &str, workers: usize) -> Result<Self> {
+        Self::attach(&EvalFleet::new(dir, workers)?, model)
+    }
+
+    /// Attach `model` (validated against the manifest) to a shared fleet
+    /// and return the per-model client.  Attach counts are refcounted;
+    /// the last client's drop detaches the model fleet-wide (worker
+    /// slots, shards and memo entries are evicted).
+    pub fn attach(fleet: &Rc<EvalFleet>, model: &str) -> Result<Self> {
+        let entry = fleet.manifest.model(model)?;
+        let (task, batch) = (entry.task.clone(), entry.batch);
+        let model_id = {
+            let mut st = fleet.state.lock().unwrap();
+            let ms = st.entry(model.to_string()).or_insert_with(|| ModelState {
+                id: fleet.next_model_id.fetch_add(1, Ordering::Relaxed),
+                attached: 0,
+                calib: None,
+                sets: HashMap::new(),
+            });
+            ms.attached += 1;
+            ms.id
+        };
+        Ok(EvalPool {
+            fleet: fleet.clone(),
+            model: Arc::from(model),
+            model_id,
+            task,
+            batch,
+        })
+    }
+
+    /// The fleet this client drives (shared across models; `resize` and
+    /// the compile counters live here).
+    pub fn fleet(&self) -> &Rc<EvalFleet> {
+        &self.fleet
+    }
+
+    /// Model this client is attached to.
+    pub fn model(&self) -> &str {
+        &self.model
     }
 
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.fleet.workers()
     }
 
-    /// Probes actually dispatched to workers (memo misses).
+    /// Probes actually dispatched to workers (memo misses), fleet-wide.
     pub fn probes_computed(&self) -> usize {
-        self.memo_misses.load(Ordering::Relaxed)
+        self.fleet.probes_computed()
     }
 
-    /// Probes served from the pool memo.
+    /// Probes served from the fleet memo.
     pub fn memo_hits(&self) -> usize {
-        self.memo_hits.load(Ordering::Relaxed)
+        self.fleet.memo_hits()
     }
 
-    /// Drop every memoized probe result (benchmarks use this to measure
-    /// steady-state sweeps rather than pure cache hits).
+    /// Drop every memoized probe result (fleet-wide; benchmarks).
     pub fn clear_memo(&self) {
-        self.memo.lock().unwrap().clear();
+        self.fleet.clear_memo();
     }
 
-    /// Install calibrated quantizer state on every worker.  Invalidate the
-    /// whole memo: every probe result depends on the ranges.
+    /// Install calibrated quantizer state on every worker (pipelined, no
+    /// ack).  Invalidates this model's memo entries: every probe result
+    /// depends on the ranges.
     pub fn set_calibration(
         &self,
         ranges: &ActRanges,
         w_scales: &HashMap<u8, Vec<Vec<f32>>>,
     ) -> Result<()> {
-        self.memo.lock().unwrap().clear();
-        let id = self.broadcast_with(|_| Request::Calibrate {
+        self.fleet
+            .memo
+            .lock()
+            .unwrap()
+            .retain(|k, _| k.0 != self.model_id);
+        {
+            let mut st = self.fleet.state.lock().unwrap();
+            if let Some(ms) = st.get_mut(&*self.model) {
+                ms.calib = Some((ranges.clone(), w_scales.clone()));
+            }
+        }
+        self.fleet.fire(|_| Request::Calibrate {
+            model: self.model.clone(),
             ranges: ranges.clone(),
             w_scales: w_scales.clone(),
-        })?;
-        self.wait_unit(id)
+        })
     }
 
-    /// Register (or replace) an eval set under `key`, splitting its batches
-    /// into contiguous per-worker shards.  Stale memo entries for `key` are
-    /// dropped.  A trailing partial batch is truncated exactly like
-    /// `ModelHandle::eval_set` does.
+    /// Register (or replace) an eval set under `key`, splitting its
+    /// batches into contiguous per-worker shards (pipelined, no ack: the
+    /// H→D upload overlaps the caller's subsequent probe construction, and
+    /// probes enqueued behind it are correct by FIFO order).  Stale memo
+    /// entries for `key` are dropped.  A trailing partial batch is
+    /// truncated exactly like `ModelHandle::eval_set` does.
     pub fn load_set(&self, key: SetKey, ds: &DataSet) -> Result<()> {
         let batches = ds.batches(self.batch)?;
         if batches.is_empty() {
             bail!("dataset smaller than one batch ({})", self.batch);
         }
         let labels = ds.labels_prefix(self.batch)?;
-        self.memo.lock().unwrap().retain(|(s, ..), _| *s != key);
-        let ranges = shard_ranges(batches.len(), self.workers.len());
-        let id = self.broadcast_with(|w| {
+        self.fleet
+            .memo
+            .lock()
+            .unwrap()
+            .retain(|k, _| !(k.0 == self.model_id && k.1 == key));
+        {
+            let mut st = self.fleet.state.lock().unwrap();
+            if let Some(ms) = st.get_mut(&*self.model) {
+                ms.sets.insert(key, ds.clone());
+            }
+        }
+        let ranges = shard_ranges(batches.len(), self.workers());
+        self.fleet.fire(|w| {
             let r = &ranges[w];
             Request::LoadSet {
+                model: self.model.clone(),
                 key,
                 batches: batches[r.clone()].to_vec(),
                 // labels rows [r.start·batch, r.end·batch) — may be empty
@@ -275,21 +786,56 @@ impl EvalPool {
                     .expect("labels_prefix is batch-aligned"),
                 first_batch: r.start,
             }
-        })?;
-        self.wait_unit(id)
+        })
     }
 
     /// Build the FP32 reference for `set` eagerly — one full-set forward
-    /// sweep, split across the workers' shards.
+    /// sweep, split across the workers' shards (pipelined, no ack).
     pub fn build_references(&self, set: SetKey) -> Result<()> {
-        let id = self.broadcast_with(|_| Request::BuildReference { set })?;
-        self.wait_unit(id)
+        self.fleet.fire(|_| Request::BuildReference {
+            model: self.model.clone(),
+            set,
+        })
     }
 
-    /// Submit one probe.  Served from the pool memo when an identical probe
-    /// (same set, kind, config and override content) already finished;
-    /// otherwise fanned out to every worker's shard.  The returned handle
-    /// must be waited on to collect (and memoize) the result.
+    /// Seed every worker's reference cache for `set` from host per-batch
+    /// FP32 logits (the on-disk reference cache), skipping the forward
+    /// sweep entirely.  Blocking: install errors indicate a stale or
+    /// mis-keyed cache file and must surface at the call site.
+    pub fn install_references(&self, set: SetKey, batches: &[Tensor]) -> Result<()> {
+        let ranges = shard_ranges(batches.len(), self.workers());
+        let id = self.fleet.submit_broadcast(true, |w| Request::InstallReference {
+            model: self.model.clone(),
+            set,
+            batches: batches[ranges[w].clone()].to_vec(),
+        })?;
+        self.fleet.wait_unit(id)
+    }
+
+    /// Collect the full-set FP32 reference (per-batch logits, global batch
+    /// order) from the workers' shard caches — building shards that don't
+    /// have one yet.  Feeds the on-disk reference cache.
+    pub fn fetch_reference(&self, set: SetKey) -> Result<Vec<Tensor>> {
+        let id = self.fleet.submit_broadcast(true, |_| Request::FetchReference {
+            model: self.model.clone(),
+            set,
+        })?;
+        let mut shards: Vec<(usize, Vec<Tensor>)> = Vec::new();
+        for (_, p) in self.fleet.collect(id)? {
+            match p {
+                Partial::Batches { first_batch, batches } => shards.push((first_batch, batches)),
+                _ => bail!("worker returned a non-reference partial"),
+            }
+        }
+        shards.sort_by_key(|&(fb, _)| fb);
+        Ok(shards.into_iter().flat_map(|(_, b)| b).collect())
+    }
+
+    /// Submit one probe.  Served from the fleet memo when an identical
+    /// probe (same model, set, kind, config and override content) already
+    /// finished; otherwise fanned out to every worker's shard.  The
+    /// returned handle must be waited on to collect (and memoize) the
+    /// result.
     pub fn submit(
         &self,
         set: SetKey,
@@ -297,15 +843,16 @@ impl EvalPool {
         cfg: &QuantConfig,
         overrides: &WeightOverrides,
     ) -> Result<JobHandle<'_>> {
-        let key = (set, kind, cfg.clone(), overrides_digest(overrides));
-        if let Some(&v) = self.memo.lock().unwrap().get(&key) {
-            self.memo_hits.fetch_add(1, Ordering::Relaxed);
+        let key = (self.model_id, set, kind, cfg.clone(), overrides_digest(overrides));
+        if let Some(&v) = self.fleet.memo.lock().unwrap().get(&key) {
+            self.fleet.memo_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(JobHandle { pool: self, id: 0, kind, key: None, cached: Some(v) });
         }
-        self.memo_misses.fetch_add(1, Ordering::Relaxed);
+        self.fleet.memo_misses.fetch_add(1, Ordering::Relaxed);
         let cfg = Arc::new(cfg.clone());
         let overrides = Arc::new(overrides.clone());
-        let id = self.broadcast_with(|_| Request::Probe {
+        let id = self.fleet.submit_broadcast(true, |_| Request::Probe {
+            model: self.model.clone(),
             set,
             kind,
             cfg: cfg.clone(),
@@ -332,73 +879,75 @@ impl EvalPool {
         handles.into_iter().map(|h| h.wait()).collect()
     }
 
-    // -- internals -----------------------------------------------------------
-
-    /// Send one job (id shared, per-worker request) to every worker.
-    fn broadcast_with(&self, mk: impl Fn(usize) -> Request) -> Result<u64> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.pending
-            .lock()
-            .unwrap()
-            .insert(id, (0..self.workers.len()).map(|_| None).collect());
-        for (w, worker) in self.workers.iter().enumerate() {
-            worker
-                .tx
-                .as_ref()
-                .ok_or_else(|| anyhow!("pool is shut down"))?
-                .send(Job { id, req: mk(w) })
-                .map_err(|_| anyhow!("eval worker {w} is gone"))?;
-        }
-        Ok(id)
-    }
-
-    /// Block until every worker reported on `id`; error if any did.
-    fn collect(&self, id: u64) -> Result<Vec<Partial>> {
-        loop {
-            {
-                let mut pending = self.pending.lock().unwrap();
-                let slots = pending
-                    .get(&id)
-                    .ok_or_else(|| anyhow!("unknown or already-collected job {id}"))?;
-                if slots.iter().all(|s| s.is_some()) {
-                    let slots = pending.remove(&id).unwrap();
-                    drop(pending);
-                    let mut out = Vec::with_capacity(slots.len());
-                    for (w, s) in slots.into_iter().enumerate() {
-                        match s.unwrap() {
-                            Ok(p) => out.push(p),
-                            Err(e) => bail!("eval worker {w}: {e}"),
-                        }
+    /// Run one FIT accumulation pass per `qps` entry (one packed `act_qp`
+    /// tensor per activation bit-width) over the workers' shards of `set`,
+    /// returning the **raw per-batch** executable outputs in global batch
+    /// order — the caller replays the serial accumulation over them, which
+    /// is what makes pooled FIT bit-identical to the serial path.  All
+    /// passes are enqueued before the first wait, so they pipeline.
+    pub fn fit_accumulate(&self, set: SetKey, qps: &[Tensor]) -> Result<Vec<Vec<FitBatchRaw>>> {
+        let ids = qps
+            .iter()
+            .map(|qp| {
+                let qp = Arc::new(qp.clone());
+                self.fleet.submit_broadcast(true, |_| Request::Fit {
+                    model: self.model.clone(),
+                    set,
+                    qp: qp.clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        ids.into_iter()
+            .map(|id| {
+                let mut shards: Vec<(usize, Vec<FitBatchRaw>)> = Vec::new();
+                for (_, p) in self.fleet.collect(id)? {
+                    match p {
+                        Partial::Fit(f) => shards.push((f.first_batch, f.raws)),
+                        _ => bail!("worker returned a non-FIT partial"),
                     }
-                    return Ok(out);
                 }
-            }
-            let (jid, w, r) = {
-                let rx = self.res_rx.lock().unwrap();
-                rx.recv().map_err(|_| anyhow!("all eval workers exited"))?
-            };
-            if let Some(slots) = self.pending.lock().unwrap().get_mut(&jid) {
-                slots[w] = Some(r);
-            }
-        }
+                shards.sort_by_key(|&(fb, _)| fb);
+                Ok(shards.into_iter().flat_map(|(_, r)| r).collect())
+            })
+            .collect()
     }
 
-    fn wait_unit(&self, id: u64) -> Result<()> {
-        for p in self.collect(id)? {
-            if !matches!(p, Partial::Unit) {
-                bail!("worker returned a value for a control job");
-            }
-        }
-        Ok(())
+    /// Dispatch independent `(layer, wbits)` AdaRound optimizations across
+    /// the fleet, one job per worker round-robin, and return the rounded
+    /// weight tensors in job order.  All jobs are enqueued before the
+    /// first wait, so layers anneal concurrently.
+    pub fn adaround_jobs(&self, jobs: Vec<AdaRoundJob>) -> Result<Vec<Tensor>> {
+        let n = self.workers();
+        let ids = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, job)| {
+                self.fleet.submit_one(
+                    i % n,
+                    Request::AdaRound { model: self.model.clone(), job: Arc::new(job) },
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        ids.into_iter()
+            .map(|id| {
+                let mut parts = self.fleet.collect(id)?;
+                match (parts.len(), parts.pop()) {
+                    (1, Some((_, Partial::Rounded(t)))) => Ok(t),
+                    _ => bail!("adaround job returned an unexpected partial"),
+                }
+            })
+            .collect()
     }
+
+    // -- internals -----------------------------------------------------------
 
     /// Reduce shard partials to the full-set scalar, merging in worker
     /// (= batch) order.
-    fn finalize(&self, kind: ProbeKind, parts: Vec<Partial>) -> Result<f64> {
+    fn finalize(&self, kind: ProbeKind, parts: Vec<(usize, Partial)>) -> Result<f64> {
         match kind {
             ProbeKind::Sqnr => {
                 let mut acc = StreamingSqnr::new();
-                for p in parts {
+                for (_, p) in parts {
                     match p {
                         Partial::Sqnr(s) => acc.merge(&s)?,
                         _ => bail!("worker returned a non-SQNR partial"),
@@ -408,7 +957,7 @@ impl EvalPool {
             }
             ProbeKind::Metric => {
                 let mut acc = StreamingTaskMetric::new(&self.task)?;
-                for p in parts {
+                for (_, p) in parts {
                     match p {
                         Partial::Task(t) => acc.merge(&t)?,
                         _ => bail!("worker returned a non-metric partial"),
@@ -418,22 +967,11 @@ impl EvalPool {
             }
         }
     }
-
-    fn shutdown(&mut self) {
-        for w in &mut self.workers {
-            w.tx.take(); // closing the channel ends the worker's recv loop
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
-        }
-    }
 }
 
 impl Drop for EvalPool {
     fn drop(&mut self) {
-        self.shutdown();
+        self.fleet.detach(&self.model, self.model_id);
     }
 }
 
@@ -452,10 +990,10 @@ impl JobHandle<'_> {
         if let Some(v) = self.cached {
             return Ok(v);
         }
-        let parts = self.pool.collect(self.id)?;
+        let parts = self.pool.fleet.collect(self.id)?;
         let v = self.pool.finalize(self.kind, parts)?;
         if let Some(key) = self.key {
-            self.pool.memo.lock().unwrap().insert(key, v);
+            self.pool.fleet.memo.lock().unwrap().insert(key, v);
         }
         Ok(v)
     }
@@ -491,151 +1029,6 @@ fn overrides_digest(ov: &WeightOverrides) -> u64 {
         h.write_tensor(&ov[&k]);
     }
     h.finish()
-}
-
-// -- worker side -------------------------------------------------------------
-
-/// A worker's view of one registered eval set: the device-resident shard
-/// plus where it starts in the full set.
-struct Shard {
-    set: EvalSet,
-    first_batch: usize,
-}
-
-fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".into()
-    }
-}
-
-fn worker_main(
-    widx: usize,
-    dir: PathBuf,
-    model: String,
-    rx: mpsc::Receiver<Job>,
-    res: mpsc::Sender<ResMsg>,
-    init: mpsc::Sender<(usize, Result<(), String>)>,
-) {
-    // All backend state (PJRT client or sim interpreter) is created here,
-    // inside the thread, and never leaves.  Panics are caught and reported —
-    // a silently dead worker would leave the coordinator blocked on a
-    // result slot that can never fill.
-    let built = std::panic::catch_unwind(move || -> Result<ModelHandle> {
-        let manifest = Manifest::load(&dir)?;
-        let rt = Rc::new(Runtime::for_manifest(&manifest)?);
-        ModelHandle::open(rt, &manifest, &model)
-    });
-    let mut handle = match built {
-        Ok(Ok(h)) => {
-            let _ = init.send((widx, Ok(())));
-            // release the init channel so EvalPool::new sees a disconnect
-            // (not a hang) if any *other* worker dies before reporting
-            drop(init);
-            h
-        }
-        Ok(Err(e)) => {
-            let _ = init.send((widx, Err(format!("{e:#}"))));
-            return;
-        }
-        Err(p) => {
-            let _ = init.send((widx, Err(format!("init panicked: {}", panic_text(&p)))));
-            return;
-        }
-    };
-    let mut shards: HashMap<SetKey, Shard> = HashMap::new();
-    while let Ok(job) = rx.recv() {
-        let Job { id, req } = job;
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            serve(&mut handle, &mut shards, req)
-        }));
-        match outcome {
-            Ok(out) => {
-                if res.send((id, widx, out.map_err(|e| format!("{e:#}")))).is_err() {
-                    return; // pool dropped
-                }
-            }
-            Err(p) => {
-                // report, then exit: the handle's caches may be mid-update,
-                // so later jobs fail loudly at send() instead of computing
-                // on inconsistent state
-                let _ = res.send((id, widx, Err(format!("worker panicked: {}", panic_text(&p)))));
-                return;
-            }
-        }
-    }
-}
-
-fn serve(
-    handle: &mut ModelHandle,
-    shards: &mut HashMap<SetKey, Shard>,
-    req: Request,
-) -> Result<Partial> {
-    match req {
-        Request::Calibrate { ranges, w_scales } => {
-            handle.act_ranges = Some(ranges);
-            handle.w_scales = w_scales;
-            // new ranges invalidate the cached activation qparam rows
-            handle.engine.mat.invalidate();
-            Ok(Partial::Unit)
-        }
-        Request::LoadSet { key, batches, labels, first_batch } => {
-            let set = handle.eval_set_shard(&batches, labels)?;
-            shards.insert(key, Shard { set, first_batch });
-            Ok(Partial::Unit)
-        }
-        Request::BuildReference { set } => {
-            let shard = get_shard(shards, set)?;
-            if !shard.set.batches.is_empty() {
-                handle.engine.reference(handle, &shard.set)?;
-            }
-            Ok(Partial::Unit)
-        }
-        Request::Probe { set, kind, cfg, overrides } => {
-            let shard = get_shard(shards, set)?;
-            let (cfg, overrides) = (&*cfg, &*overrides);
-            match kind {
-                ProbeKind::Metric => {
-                    let mut acc = StreamingTaskMetric::new(&handle.entry.task)?;
-                    if !shard.set.batches.is_empty() {
-                        let cb = handle.config_buffers(cfg, overrides)?;
-                        let b = shard.set.batch;
-                        for (bi, xb) in shard.set.batches.iter().enumerate() {
-                            let logits = handle.forward(xb, &cb)?;
-                            acc.push(&logits, &shard.set.labels.slice_rows(bi * b, b)?)?;
-                        }
-                    }
-                    Ok(Partial::Task(acc))
-                }
-                ProbeKind::Sqnr => {
-                    let mut s = StreamingSqnr::new();
-                    if !shard.set.batches.is_empty() {
-                        let fp = handle.engine.reference(handle, &shard.set)?;
-                        let cb = handle.config_buffers(cfg, overrides)?;
-                        for (bi, xb) in shard.set.batches.iter().enumerate() {
-                            let q = handle.forward(xb, &cb)?;
-                            s.push_at(
-                                (shard.first_batch + bi) as u64,
-                                &fp.batches[bi],
-                                &fp.sig_pow[bi],
-                                &q,
-                            )?;
-                        }
-                    }
-                    Ok(Partial::Sqnr(s))
-                }
-            }
-        }
-    }
-}
-
-fn get_shard(shards: &HashMap<SetKey, Shard>, key: SetKey) -> Result<&Shard> {
-    shards
-        .get(&key)
-        .ok_or_else(|| anyhow!("eval set {key} not loaded into the pool"))
 }
 
 #[cfg(test)]

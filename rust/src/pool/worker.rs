@@ -1,0 +1,343 @@
+//! Fleet worker thread: one private backend client serving every attached
+//! model.
+//!
+//! A worker owns exactly one [`Runtime`] (PJRT client or sim interpreter)
+//! for its whole life, created inside the thread — PJRT state is `!Send`
+//! and never crosses the channel.  On top of that one runtime the worker
+//! keeps a **per-model slot map**: a [`ModelHandle`] (compiled forward
+//! executable + resident trained parameters + engine caches) plus the
+//! worker's shard of every eval set registered for that model.  Slots are
+//! opened **lazily on first use** and dropped on `Detach`, and because the
+//! runtime's executable cache is shared across models and outlives them
+//! (until the *worker* dies), attaching a second model never recompiles
+//! the first model's executables — the property the fleet's compile
+//! counters assert.
+//!
+//! Upload jobs (`LoadSet`, `BuildReference`, `Calibrate`) are
+//! fire-and-forget from the front-end: the worker records failures in the
+//! affected slot instead of replying, and the stored error is surfaced by
+//! the first *tracked* job (a probe, a FIT shard, a reference fetch) that
+//! touches the broken state.  The per-worker queue is FIFO, so a probe
+//! enqueued after its set's upload is always served after the upload
+//! completed — ordering, not blocking, is the correctness mechanism.
+
+use super::{FitShard, Job, Partial, ProbeKind, Request, ResMsg, SetKey, WorkerStats, DEATH_NOTICE};
+use crate::adaround;
+use crate::engine::{FpReference, StreamingSqnr};
+use crate::manifest::Manifest;
+use crate::metrics::StreamingTaskMetric;
+use crate::model::{EvalSet, ModelHandle};
+use crate::runtime::{Buffer, Runtime};
+use crate::sensitivity;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// A worker's view of one registered eval set: the resident shard plus
+/// where it starts in the full set.  `Failed` keeps the upload error of a
+/// fire-and-forget `LoadSet` so the first dependent job reports the root
+/// cause instead of a bare "set not loaded".
+enum ShardSlot {
+    Ready(Shard),
+    Failed(String),
+}
+
+struct Shard {
+    set: EvalSet,
+    first_batch: usize,
+}
+
+/// One attached model on this worker.
+struct WorkerModel {
+    handle: ModelHandle,
+    shards: HashMap<SetKey, ShardSlot>,
+    /// zero perturbation buffers for the FIT executable, uploaded once on
+    /// the first `Fit` request and reused across every bit-width pass
+    fit_perts: Option<Vec<Buffer>>,
+}
+
+/// Lazily opened model slot; a failed open is remembered so every later
+/// job for the model reports the original error instead of re-paying the
+/// open attempt.
+enum Slot {
+    Ready(WorkerModel),
+    Failed(String),
+}
+
+struct WorkerState {
+    rt: Rc<Runtime>,
+    manifest: Manifest,
+    models: HashMap<String, Slot>,
+    opens: Arc<AtomicUsize>,
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+pub(super) fn worker_main(
+    widx: usize,
+    dir: PathBuf,
+    rx: mpsc::Receiver<Job>,
+    res: mpsc::Sender<ResMsg>,
+    init: mpsc::Sender<(usize, Result<(), String>)>,
+    opens: Arc<AtomicUsize>,
+) {
+    // All backend state (PJRT client or sim interpreter) is created here,
+    // inside the thread, and never leaves.  Init only builds the runtime —
+    // models compile lazily on their first job, which is what lets one
+    // fleet serve models it has never seen at spawn time.
+    let built = std::panic::catch_unwind(move || -> Result<(Manifest, Rc<Runtime>)> {
+        let manifest = Manifest::load(&dir)?;
+        let rt = Rc::new(Runtime::for_manifest(&manifest)?);
+        Ok((manifest, rt))
+    });
+    let mut state = match built {
+        Ok(Ok((manifest, rt))) => {
+            let _ = init.send((widx, Ok(())));
+            // release the init channel so the fleet sees a disconnect (not
+            // a hang) if any *other* worker dies before reporting
+            drop(init);
+            WorkerState { rt, manifest, models: HashMap::new(), opens }
+        }
+        Ok(Err(e)) => {
+            let _ = init.send((widx, Err(format!("{e:#}"))));
+            return;
+        }
+        Err(p) => {
+            let _ = init.send((widx, Err(format!("init panicked: {}", panic_text(&p)))));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let Job { id, req } = job;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve(&mut state, req)
+        }));
+        match outcome {
+            Ok(out) => {
+                if res.send((id, widx, out.map_err(|e| format!("{e:#}")))).is_err() {
+                    return; // fleet dropped
+                }
+            }
+            Err(p) => {
+                // report the job, then announce death and exit: the slot
+                // caches may be mid-update, and jobs already queued behind
+                // this one would otherwise never be answered — the death
+                // notice fails their pending slots at the front-end and
+                // closes this worker's channel for future submits
+                let msg = format!("worker panicked: {}", panic_text(&p));
+                let _ = res.send((id, widx, Err(msg.clone())));
+                let _ = res.send((DEATH_NOTICE, widx, Err(format!("{msg} (worker exited)"))));
+                return;
+            }
+        }
+    }
+}
+
+/// Fetch (lazily opening) the slot for `name`.  Free function so callers
+/// can keep using the state's other fields while the slot is borrowed.
+fn ensure_model<'a>(
+    models: &'a mut HashMap<String, Slot>,
+    rt: &Rc<Runtime>,
+    manifest: &Manifest,
+    opens: &Arc<AtomicUsize>,
+    name: &str,
+) -> Result<&'a mut WorkerModel> {
+    if !models.contains_key(name) {
+        let slot = match ModelHandle::open(rt.clone(), manifest, name) {
+            Ok(handle) => {
+                opens.fetch_add(1, Ordering::Relaxed);
+                Slot::Ready(WorkerModel {
+                    handle,
+                    shards: HashMap::new(),
+                    fit_perts: None,
+                })
+            }
+            Err(e) => Slot::Failed(format!("{e:#}")),
+        };
+        models.insert(name.to_string(), slot);
+    }
+    match models.get_mut(name).expect("slot just inserted") {
+        Slot::Ready(m) => Ok(m),
+        Slot::Failed(e) => bail!("model '{name}' failed to open on this worker: {e}"),
+    }
+}
+
+fn shard(m: &WorkerModel, key: SetKey) -> Result<&Shard> {
+    match m.shards.get(&key) {
+        Some(ShardSlot::Ready(s)) => Ok(s),
+        Some(ShardSlot::Failed(e)) => bail!("eval set {key} failed to load on this worker: {e}"),
+        None => bail!("eval set {key} not loaded into the fleet"),
+    }
+}
+
+fn serve(state: &mut WorkerState, req: Request) -> Result<Partial> {
+    let WorkerState { rt, manifest, models, opens } = state;
+    match req {
+        Request::Calibrate { model, ranges, w_scales } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            m.handle.act_ranges = Some(ranges);
+            m.handle.w_scales = w_scales;
+            // new ranges invalidate the cached activation qparam rows
+            m.handle.engine.mat.invalidate();
+            Ok(Partial::Unit)
+        }
+        Request::LoadSet { model, key, batches, labels, first_batch } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            let slot = match m.handle.eval_set_shard(&batches, labels) {
+                Ok(set) => ShardSlot::Ready(Shard { set, first_batch }),
+                Err(e) => ShardSlot::Failed(format!("{e:#}")),
+            };
+            m.shards.insert(key, slot);
+            Ok(Partial::Unit)
+        }
+        Request::BuildReference { model, set } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            let sh = shard(m, set)?;
+            if !sh.set.batches.is_empty() {
+                m.handle.engine.reference(&m.handle, &sh.set)?;
+            }
+            Ok(Partial::Unit)
+        }
+        Request::InstallReference { model, set, batches } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            let sh = shard(m, set)?;
+            if batches.len() != sh.set.batches.len() {
+                bail!(
+                    "reference install has {} batches, shard has {}",
+                    batches.len(),
+                    sh.set.batches.len()
+                );
+            }
+            if !batches.is_empty() {
+                let fp = FpReference::from_batches(batches)?;
+                m.handle.engine.install_reference(sh.set.id, fp);
+            }
+            Ok(Partial::Unit)
+        }
+        Request::FetchReference { model, set } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            let sh = shard(m, set)?;
+            let batches = if sh.set.batches.is_empty() {
+                Vec::new()
+            } else {
+                m.handle.engine.reference(&m.handle, &sh.set)?.batches.clone()
+            };
+            Ok(Partial::Batches { first_batch: sh.first_batch, batches })
+        }
+        Request::Probe { model, set, kind, cfg, overrides } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            let m = &*m;
+            let sh = shard(m, set)?;
+            let (cfg, overrides) = (&*cfg, &*overrides);
+            match kind {
+                ProbeKind::Metric => {
+                    let mut acc = StreamingTaskMetric::new(&m.handle.entry.task)?;
+                    if !sh.set.batches.is_empty() {
+                        let cb = m.handle.config_buffers(cfg, overrides)?;
+                        let b = sh.set.batch;
+                        for (bi, xb) in sh.set.batches.iter().enumerate() {
+                            let logits = m.handle.forward(xb, &cb)?;
+                            acc.push(&logits, &sh.set.labels.slice_rows(bi * b, b)?)?;
+                        }
+                    }
+                    Ok(Partial::Task(acc))
+                }
+                ProbeKind::Sqnr => {
+                    let mut s = StreamingSqnr::new();
+                    if !sh.set.batches.is_empty() {
+                        let fp = m.handle.engine.reference(&m.handle, &sh.set)?;
+                        let cb = m.handle.config_buffers(cfg, overrides)?;
+                        for (bi, xb) in sh.set.batches.iter().enumerate() {
+                            let q = m.handle.forward(xb, &cb)?;
+                            s.push_at(
+                                (sh.first_batch + bi) as u64,
+                                &fp.batches[bi],
+                                &fp.sig_pow[bi],
+                                &q,
+                            )?;
+                        }
+                    }
+                    Ok(Partial::Sqnr(s))
+                }
+            }
+        }
+        Request::Fit { model, set, qp } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            if m.fit_perts.is_none() {
+                let shapes = m
+                    .handle
+                    .entry
+                    .fit_act_shapes
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("missing fit_act_shapes"))?;
+                m.fit_perts = Some(
+                    shapes
+                        .iter()
+                        .map(|s| rt.buffer(&Tensor::zeros(s)))
+                        .collect::<Result<_>>()?,
+                );
+            }
+            let m = &*m;
+            let sh = shard(m, set)?;
+            let entry = &m.handle.entry;
+            let fit_file = entry
+                .fit
+                .as_ref()
+                .ok_or_else(|| anyhow!("{} has no FIT artifact", entry.name))?;
+            let exe = rt.load(manifest.path(fit_file))?;
+            let pert_bufs = m.fit_perts.as_ref().expect("fit perts just built");
+            let qp_buf = rt.buffer(&qp)?;
+            let raws = sensitivity::fit_batch_raws(
+                rt,
+                &exe,
+                m.handle.param_buffers(),
+                pert_bufs,
+                &qp_buf,
+                &sh.set.batches,
+                &sh.set.labels,
+                sh.set.batch,
+            )?;
+            Ok(Partial::Fit(FitShard { first_batch: sh.first_batch, raws }))
+        }
+        Request::AdaRound { model, job } => {
+            let m = ensure_model(models, rt, manifest, opens, &model)?;
+            let m = &*m;
+            let exe = rt.load(manifest.path(&job.exe))?;
+            let n = m.handle.weights.len();
+            if job.param_idx >= n || job.bias_idx >= n {
+                bail!("adaround job param indices out of range ({n} params)");
+            }
+            let t = adaround::optimize_rounding(
+                rt,
+                &exe,
+                &m.handle.weights[job.param_idx],
+                &m.handle.weights[job.bias_idx],
+                &job,
+            )?;
+            Ok(Partial::Rounded(t))
+        }
+        Request::Detach { model } => {
+            models.remove(&*model);
+            Ok(Partial::Unit)
+        }
+        Request::Stats => Ok(Partial::Stats(WorkerStats {
+            compiled: rt.compiled_count(),
+            models_open: models
+                .values()
+                .filter(|s| matches!(s, Slot::Ready(_)))
+                .count(),
+        })),
+    }
+}

@@ -26,7 +26,7 @@ use crate::data::DataSet;
 use crate::groups::{Candidate, Lattice};
 use crate::jsonio::{self, Json};
 use crate::manifest::ModelEntry;
-use crate::tensor::Tensor;
+use crate::tensor::{io as tio, Tensor};
 use crate::util::Fnv;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -131,6 +131,60 @@ pub fn store(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// FP32 reference cache
+// ---------------------------------------------------------------------------
+//
+// The engine's FP32 reference (per-batch logits, `engine::FpReference`) is
+// a pure function of the trained weights and the calibration inputs — the
+// same dependency set as the sensitivity lists minus the metric/lattice.
+// Persisting it next to the sensitivity cache lets repeated experiment
+// drivers skip the reference forward sweep entirely (ROADMAP open item):
+// the pipeline installs the restored per-batch logits into the serial
+// engine, or ships shard slices to every fleet worker.  Files are MPQT
+// tensor concatenations (`tensor::io`), so logits round-trip bit-exactly.
+
+/// Content digest of everything the FP32 reference depends on: the model
+/// identity and **trained weight tensors** plus the exact calibration
+/// tensors.  Deliberately metric/lattice-free — one reference serves every
+/// Phase-1 metric swept on the same data.
+pub fn ref_digest(entry: &ModelEntry, calib: &DataSet, weights: &[Tensor]) -> u64 {
+    let mut h = Fnv::new();
+    h.write_bytes(entry.name.as_bytes());
+    h.write_usize(entry.batch);
+    h.write_tensor(&calib.x);
+    h.write_tensor(&calib.y);
+    for w in weights {
+        h.write_tensor(w);
+    }
+    h.finish()
+}
+
+pub fn ref_path(dir: &Path, model: &str, digest: u64) -> PathBuf {
+    dir.join(format!("ref_{model}_{digest:016x}.bin"))
+}
+
+/// Load cached per-batch FP32 logits; `Ok(None)` when the file doesn't
+/// exist.
+pub fn load_ref(path: &Path) -> Result<Option<Vec<Tensor>>> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    let ts = tio::read_tensors(path)
+        .with_context(|| format!("ref cache {}", path.display()))?;
+    Ok(Some(ts))
+}
+
+/// Persist per-batch FP32 logits (global batch order).
+pub fn store_ref(path: &Path, batches: &[Tensor]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    tio::write_tensors(path, batches)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +231,30 @@ mod tests {
         list[1].score = f64::NAN;
         store(&path, "nanly", Metric::Accuracy, 2, &list).unwrap();
         assert!(load(&path).unwrap().is_none(), "non-finite lists must not be cached");
+    }
+
+    #[test]
+    fn ref_cache_roundtrips_bit_exactly_and_tracks_inputs() {
+        let dir = std::env::temp_dir().join("mpq_ref_cache_test");
+        let e = crate::bops::tests_support::toy_entry();
+        let ds = fake_calib(0.0);
+        let w = vec![Tensor::from_f32(&[2, 2], vec![0.5, -0.5, 1.5, -1.5]).unwrap()];
+        let d0 = ref_digest(&e, &ds, &w);
+        assert_eq!(d0, ref_digest(&e, &ds, &w), "digest is deterministic");
+        assert_ne!(d0, ref_digest(&e, &fake_calib(9.0), &w), "data keyed");
+        let w2 = vec![Tensor::from_f32(&[2, 2], vec![0.5, -0.5, 1.5, 99.0]).unwrap()];
+        assert_ne!(d0, ref_digest(&e, &ds, &w2), "weights keyed");
+
+        let path = ref_path(&dir, "toy", d0);
+        assert!(load_ref(&path).unwrap().is_none(), "missing file is a miss");
+        let batches = vec![
+            Tensor::from_f32(&[2, 3], vec![0.1 + 0.2, -1.5, 3.25e-7, 0.0, -0.0, 42.0]).unwrap(),
+            Tensor::from_f32(&[2, 3], vec![9.0, 8.0, 7.0, 6.0, 5.0, 4.0]).unwrap(),
+        ];
+        store_ref(&path, &batches).unwrap();
+        let back = load_ref(&path).unwrap().expect("file written");
+        assert_eq!(back, batches, "logits must round-trip bit-exactly");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

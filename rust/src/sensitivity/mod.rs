@@ -28,7 +28,8 @@ use crate::groups::{Assignment, Candidate, Lattice};
 use crate::manifest::{Manifest, ModelEntry};
 use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
 use crate::pool::{EvalPool, ProbeKind, SetKey};
-use crate::quant;
+use crate::quant::{self, ActRanges};
+use crate::runtime::{Buffer, Exe, Runtime};
 use crate::tensor::Tensor;
 use crate::util::{db10, par_map};
 use anyhow::{anyhow, bail, Result};
@@ -49,6 +50,17 @@ pub enum Metric {
     Sqnr,
     Accuracy,
     Fit,
+}
+
+/// Does `metric` have a shard-parallel implementation in
+/// [`sensitivity_list_pooled`]?  All current metrics do; the coordinator
+/// checks this before routing a sweep through the pool and **falls back to
+/// the serial path with a warning** (instead of erroring) for any future
+/// metric that hasn't grown one yet.
+pub fn has_pooled_path(metric: Metric) -> bool {
+    match metric {
+        Metric::Sqnr | Metric::Accuracy | Metric::Fit => true,
+    }
 }
 
 /// Per-(layer-bits) AdaRounded weight tensors, keyed by
@@ -148,45 +160,52 @@ pub fn sensitivity_list(
 
 /// Phase-1 sweep dispatched through an [`EvalPool`]: the whole probe list
 /// is enqueued at once and every probe is evaluated shard-parallel across
-/// the pool's workers.
+/// the fleet's workers; [`Metric::Fit`] fans its per-`abits` accumulation
+/// passes out the same way (raw per-batch outputs merged in global batch
+/// order, see [`EvalPool::fit_accumulate`]).
 ///
 /// Produces the *same* sorted list as [`sensitivity_list`] on the same
-/// calibration data — bit-identical scores for the SQNR and counting-metric
-/// paths (see the pool's exactness guarantee), and an identical stable sort
-/// over the identical probe order.  [`Metric::Fit`] is host + FIT-executable
-/// math with no probe loop to fan out; callers fall back to the serial path
-/// for it.
+/// calibration data — bit-identical scores for the SQNR, counting-metric
+/// and FIT paths (see the pool's exactness guarantee), and an identical
+/// stable sort over the identical probe order.  Callers should check
+/// [`has_pooled_path`] first and fall back to [`sensitivity_list`] for any
+/// future metric without a pooled implementation.
 pub fn sensitivity_list_pooled(
     pool: &EvalPool,
     set: SetKey,
-    entry: &ModelEntry,
+    handle: &ModelHandle,
     lattice: &Lattice,
     metric: Metric,
     rounded: Option<&RoundedWeights>,
 ) -> Result<Vec<SensEntry>> {
-    let kind = match metric {
-        Metric::Sqnr => ProbeKind::Sqnr,
-        Metric::Accuracy => ProbeKind::Metric,
-        Metric::Fit => bail!("FIT sensitivity has no pooled path; use sensitivity_list"),
+    let entry = &handle.entry;
+    let mut entries = match metric {
+        Metric::Fit => fit_scores_pooled(pool, set, handle, lattice)?,
+        Metric::Sqnr | Metric::Accuracy => {
+            let kind = match metric {
+                Metric::Sqnr => ProbeKind::Sqnr,
+                _ => ProbeKind::Metric,
+            };
+            let targets = probe_targets(entry, lattice);
+            let probes: Vec<(QuantConfig, WeightOverrides)> = targets
+                .iter()
+                .map(|&(g, c)| {
+                    (
+                        probe_config(entry, g, c),
+                        rounded
+                            .map(|r| probe_overrides(entry, g, c, r))
+                            .unwrap_or_default(),
+                    )
+                })
+                .collect();
+            let scores = pool.map_probes(set, kind, &probes)?;
+            targets
+                .iter()
+                .zip(scores)
+                .map(|(&(group, cand), score)| SensEntry { group, cand, score })
+                .collect()
+        }
     };
-    let targets = probe_targets(entry, lattice);
-    let probes: Vec<(QuantConfig, WeightOverrides)> = targets
-        .iter()
-        .map(|&(g, c)| {
-            (
-                probe_config(entry, g, c),
-                rounded
-                    .map(|r| probe_overrides(entry, g, c, r))
-                    .unwrap_or_default(),
-            )
-        })
-        .collect();
-    let scores = pool.map_probes(set, kind, &probes)?;
-    let mut entries: Vec<SensEntry> = targets
-        .iter()
-        .zip(scores)
-        .map(|(&(group, cand), score)| SensEntry { group, cand, score })
-        .collect();
     entries.sort_by(|x, y| y.score.total_cmp(&x.score));
     Ok(entries)
 }
@@ -245,89 +264,104 @@ fn accuracy_scores(
     Ok(out)
 }
 
-/// FIT metric (Zandonati et al., used by the paper as the Fig. 2 Fisher
-/// baseline): `FIT(g,c) = Σ_w  E[g_w²]·E[Δ_w(c)²] + Σ_a E[g_a²]·E[Δ_a(c)²]`.
-/// Score is `-FIT` so that higher = less sensitive, like the other metrics.
-fn fit_scores(
-    handle: &ModelHandle,
-    manifest: &Manifest,
-    lattice: &Lattice,
-    set: &EvalSet,
-) -> Result<Vec<SensEntry>> {
-    let entry = &handle.entry;
-    let fit_file = entry
-        .fit
-        .as_ref()
-        .ok_or_else(|| anyhow!("{} has no FIT artifact", entry.name))?;
-    let exe = handle.rt.load(manifest.path(fit_file))?;
-    let shapes = entry
-        .fit_act_shapes
-        .as_ref()
-        .ok_or_else(|| anyhow!("missing fit_act_shapes"))?;
+/// Raw FIT-executable outputs for one batch: per-weight-quantizer squared
+/// loss gradients, per-activation-quantizer squared gradients, and
+/// per-activation local quantization errors.  Fleet workers ship these
+/// back **unreduced** so the front-end can replay the serial accumulation
+/// order term by term — the pooled FIT path's bit-identity mechanism.
+#[derive(Clone, Debug)]
+pub struct FitBatchRaw {
+    pub wgrad2: Vec<f32>,
+    pub agrad2: Vec<f32>,
+    pub aerr2: Vec<f32>,
+}
 
-    // zero perturbations, uploaded once; trained parameters reused from the
-    // handle's resident copies (uploaded once at open)
-    let pert_bufs: Vec<crate::runtime::Buffer> = shapes
-        .iter()
-        .map(|s| handle.rt.buffer(&Tensor::zeros(s)))
-        .collect::<Result<_>>()?;
-    let param_bufs = handle.param_buffers();
-
-    let abits_opts = lattice.abits_options();
-    let ranges = handle
-        .act_ranges
-        .as_ref()
-        .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
-
-    // label batches
-    let label_batches: Vec<Tensor> = (0..set.batches.len())
-        .map(|i| set.labels.slice_rows(i * set.batch, set.batch))
-        .collect::<Result<_>>()?;
-
-    // accumulate per-abits: agrad2[A], aerr2[A]; wgrad2[W] shared
+/// Packed `act_qp[A,5]` rows with every activation quantizer forced on at
+/// `abits` (enable irrelevant in fit mode; the exe forces quantization for
+/// the error term only) — shared by the serial and pooled FIT paths so the
+/// two can never drift apart.
+pub(crate) fn fit_act_qp(entry: &ModelEntry, ranges: &ActRanges, abits: u8) -> Result<Tensor> {
     let a_n = entry.n_act();
-    let w_n = entry.n_w();
-    let mut wgrad2 = vec![0f64; w_n];
-    let mut agrad2 = vec![0f64; a_n];
-    let mut aerr2: HashMap<u8, Vec<f64>> = HashMap::new();
+    let mut act_qp = vec![0f32; a_n * 5];
+    for i in 0..a_n {
+        let (s, o) = ranges.qparams(i, abits)?;
+        let (_, qmax) = quant::act_qrange(abits);
+        act_qp[i * 5..(i + 1) * 5].copy_from_slice(&[s, o, 0.0, qmax, 1.0]);
+    }
+    Tensor::from_f32(&[a_n, 5], act_qp)
+}
 
-    for &abits in &abits_opts {
-        // act_qp with every quantizer at `abits` (enable irrelevant in fit
-        // mode; the exe forces quantization for the error term only)
-        let mut act_qp = vec![0f32; a_n * 5];
-        for i in 0..a_n {
-            let (s, o) = ranges.qparams(i, abits)?;
-            let (_, qmax) = quant::act_qrange(abits);
-            act_qp[i * 5..(i + 1) * 5].copy_from_slice(&[s, o, 0.0, qmax, 1.0]);
+/// Run the FIT executable over `batches` and return the raw per-batch
+/// outputs.  Used by the serial sweep on the full set and by each fleet
+/// worker on its shard — the per-batch outputs are identical either way,
+/// which is what the pooled fold relies on.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fit_batch_raws(
+    rt: &Runtime,
+    exe: &Exe,
+    param_bufs: &[Buffer],
+    pert_bufs: &[Buffer],
+    qp_buf: &Buffer,
+    batches: &[Buffer],
+    labels: &Tensor,
+    batch: usize,
+) -> Result<Vec<FitBatchRaw>> {
+    let mut out = Vec::with_capacity(batches.len());
+    for (bi, xb) in batches.iter().enumerate() {
+        let yb = rt.buffer(&labels.slice_rows(bi * batch, batch)?)?;
+        let mut args: Vec<&Buffer> = vec![xb, &yb];
+        args.extend(param_bufs.iter());
+        args.extend(pert_bufs.iter());
+        args.push(qp_buf);
+        let outs = exe.run_b(&args)?;
+        if outs.len() != 4 {
+            bail!("fit exe returned {} outputs", outs.len());
         }
-        let qp_buf = handle
-            .rt
-            .buffer(&Tensor::from_f32(&[a_n, 5], act_qp)?)?;
-        let errs = aerr2.entry(abits).or_insert_with(|| vec![0f64; a_n]);
+        out.push(FitBatchRaw {
+            wgrad2: outs[1].f32s()?.to_vec(),
+            agrad2: outs[2].f32s()?.to_vec(),
+            aerr2: outs[3].f32s()?.to_vec(),
+        });
+    }
+    Ok(out)
+}
 
-        for (bi, xb) in set.batches.iter().enumerate() {
-            let yb = handle.rt.buffer(&label_batches[bi])?;
-            let mut args: Vec<&crate::runtime::Buffer> = vec![xb, &yb];
-            args.extend(param_bufs.iter());
-            args.extend(pert_bufs.iter());
-            args.push(&qp_buf);
-            let outs = exe.run_b(&args)?;
-            if outs.len() != 4 {
-                bail!("fit exe returned {} outputs", outs.len());
-            }
-            let scale = 1.0 / (set.batches.len() * abits_opts.len()) as f64;
-            for (i, v) in outs[1].f32s()?.iter().enumerate() {
-                wgrad2[i] += *v as f64 * scale; // same across abits; averaged
-            }
-            for (i, v) in outs[2].f32s()?.iter().enumerate() {
-                agrad2[i] += *v as f64 * scale;
-            }
-            for (i, v) in outs[3].f32s()?.iter().enumerate() {
-                errs[i] += *v as f64 / set.batches.len() as f64;
-            }
+/// Fold one activation-bit-width pass of raw per-batch outputs (global
+/// batch order) into the running accumulators — the exact summation the
+/// serial loop performs, term for term, so pooled and serial accumulation
+/// are bit-identical.
+fn fit_fold(
+    wgrad2: &mut [f64],
+    agrad2: &mut [f64],
+    errs: &mut [f64],
+    raws: &[FitBatchRaw],
+    nb: usize,
+    n_abits: usize,
+) {
+    let scale = 1.0 / (nb * n_abits) as f64;
+    for raw in raws {
+        for (i, v) in raw.wgrad2.iter().enumerate() {
+            wgrad2[i] += *v as f64 * scale; // same across abits; averaged
+        }
+        for (i, v) in raw.agrad2.iter().enumerate() {
+            agrad2[i] += *v as f64 * scale;
+        }
+        for (i, v) in raw.aerr2.iter().enumerate() {
+            errs[i] += *v as f64 / nb as f64;
         }
     }
+}
 
+/// Combine the accumulated Fisher terms with the host-side weight
+/// quantization errors into the final per-`(group, candidate)` list.
+fn fit_finish(
+    handle: &ModelHandle,
+    lattice: &Lattice,
+    wgrad2: &[f64],
+    agrad2: &[f64],
+    aerr2: &HashMap<u8, Vec<f64>>,
+) -> Result<Vec<SensEntry>> {
+    let entry = &handle.entry;
     // host-side weight quantization errors per wbits — independent pure
     // host math per quantizer, fanned across threads
     let mut werr2: HashMap<u8, Vec<f64>> = HashMap::new();
@@ -358,6 +392,101 @@ fn fit_scores(
         out.push(SensEntry { group: g, cand: c, score: -fit });
     }
     Ok(out)
+}
+
+/// FIT metric (Zandonati et al., used by the paper as the Fig. 2 Fisher
+/// baseline): `FIT(g,c) = Σ_w  E[g_w²]·E[Δ_w(c)²] + Σ_a E[g_a²]·E[Δ_a(c)²]`.
+/// Score is `-FIT` so that higher = less sensitive, like the other metrics.
+fn fit_scores(
+    handle: &ModelHandle,
+    manifest: &Manifest,
+    lattice: &Lattice,
+    set: &EvalSet,
+) -> Result<Vec<SensEntry>> {
+    let entry = &handle.entry;
+    let fit_file = entry
+        .fit
+        .as_ref()
+        .ok_or_else(|| anyhow!("{} has no FIT artifact", entry.name))?;
+    let exe = handle.rt.load(manifest.path(fit_file))?;
+    let shapes = entry
+        .fit_act_shapes
+        .as_ref()
+        .ok_or_else(|| anyhow!("missing fit_act_shapes"))?;
+
+    // zero perturbations, uploaded once; trained parameters reused from the
+    // handle's resident copies (uploaded once at open)
+    let pert_bufs: Vec<Buffer> = shapes
+        .iter()
+        .map(|s| handle.rt.buffer(&Tensor::zeros(s)))
+        .collect::<Result<_>>()?;
+
+    let abits_opts = lattice.abits_options();
+    let ranges = handle
+        .act_ranges
+        .as_ref()
+        .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
+
+    // accumulate per-abits: agrad2[A], aerr2[A]; wgrad2[W] shared
+    let nb = set.batches.len();
+    let mut wgrad2 = vec![0f64; entry.n_w()];
+    let mut agrad2 = vec![0f64; entry.n_act()];
+    let mut aerr2: HashMap<u8, Vec<f64>> = HashMap::new();
+    for &abits in &abits_opts {
+        let qp_buf = handle.rt.buffer(&fit_act_qp(entry, ranges, abits)?)?;
+        let raws = fit_batch_raws(
+            &handle.rt,
+            &exe,
+            handle.param_buffers(),
+            &pert_bufs,
+            &qp_buf,
+            &set.batches,
+            &set.labels,
+            set.batch,
+        )?;
+        let errs = aerr2.entry(abits).or_insert_with(|| vec![0f64; entry.n_act()]);
+        fit_fold(&mut wgrad2, &mut agrad2, errs, &raws, nb, abits_opts.len());
+    }
+    fit_finish(handle, lattice, &wgrad2, &agrad2, &aerr2)
+}
+
+/// FIT accumulation fanned out over an [`EvalPool`]'s shards: one
+/// broadcast per activation bit-width, raw per-batch outputs merged in
+/// global batch order and folded with the serial accumulation — scores
+/// **bit-identical** to [`fit_scores`] at any worker count.
+fn fit_scores_pooled(
+    pool: &EvalPool,
+    set: SetKey,
+    handle: &ModelHandle,
+    lattice: &Lattice,
+) -> Result<Vec<SensEntry>> {
+    let entry = &handle.entry;
+    if entry.fit.is_none() {
+        bail!("{} has no FIT artifact", entry.name);
+    }
+    let ranges = handle
+        .act_ranges
+        .as_ref()
+        .ok_or_else(|| anyhow!("calibrate_ranges() not run"))?;
+    let abits_opts = lattice.abits_options();
+    let qps: Vec<Tensor> = abits_opts
+        .iter()
+        .map(|&a| fit_act_qp(entry, ranges, a))
+        .collect::<Result<_>>()?;
+    let per_abits = pool.fit_accumulate(set, &qps)?;
+
+    let nb = per_abits.first().map(|r| r.len()).unwrap_or(0);
+    if nb == 0 {
+        bail!("pooled FIT accumulation saw no batches");
+    }
+    let mut wgrad2 = vec![0f64; entry.n_w()];
+    let mut agrad2 = vec![0f64; entry.n_act()];
+    let mut aerr2: HashMap<u8, Vec<f64>> = HashMap::new();
+    for (&abits, raws) in abits_opts.iter().zip(&per_abits) {
+        let errs = aerr2.entry(abits).or_insert_with(|| vec![0f64; entry.n_act()]);
+        fit_fold(&mut wgrad2, &mut agrad2, errs, raws, nb, abits_opts.len());
+    }
+    fit_finish(handle, lattice, &wgrad2, &agrad2, &aerr2)
 }
 
 /// Per-quantizer SQNR at a fixed candidate — Fig. 3's per-network SQNR

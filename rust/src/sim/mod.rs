@@ -81,6 +81,18 @@ impl Backend for SimBackend {
 enum Kind {
     Forward,
     Stats,
+    /// FP layer-input capture (+ logits) — the AdaRound taps contract.
+    /// For this dense-chain family the layer inputs *are* the activation
+    /// quantizer inputs, so the capture loop is shared with `Stats`; the
+    /// last output doubles as the logits the contract appends.
+    Taps,
+    /// One AdaRound loss+gradient step for a single dense layer
+    /// (`dims = [din, dout]`), mirroring `python/compile/aot.py`'s
+    /// `lower_adaround_step` dense branch.
+    AdaRound,
+    /// FIT probe: FP forward + per-quantizer Fisher terms, mirroring
+    /// `lower_fit` (classify10 cross-entropy loss).
+    Fit,
 }
 
 /// A parsed sim artifact: which probe it is plus the chain dimensions
@@ -101,6 +113,9 @@ impl SimProgram {
         let kind = match j.req("kind")?.as_str()? {
             "forward" => Kind::Forward,
             "stats" => Kind::Stats,
+            "taps" => Kind::Taps,
+            "adaround" => Kind::AdaRound,
+            "fit" => Kind::Fit,
             k => bail!("{}: unknown sim program kind '{k}'", path.display()),
         };
         let dims = j.req("dims")?.usize_vec()?;
@@ -214,15 +229,271 @@ impl SimProgram {
         }
         Ok(caps)
     }
+
+    /// One AdaRound step for a dense layer (`dims = [din, dout]`):
+    /// `x[B,din], w[din,dout], b[dout], v[din,dout], s[dout], meta[4]` →
+    /// `(loss, dL/dV)`, with
+    /// `loss = mean((x@W+b − x@Ŵ(V)−b)²) + λ·mean(1 − |2h−1|^β)`,
+    /// `Ŵ = s·clip(⌊W/s⌋ + h, qmin, qmax)`, `h = clip(1.2σ(V)−0.1, 0, 1)`
+    /// — the analytic gradient of what `lower_adaround_step` hands to
+    /// `jax.value_and_grad` (clip/relu subgradients taken as pass-through
+    /// on the closed interval; ties are measure-zero on this data).
+    fn adaround_step(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
+        if self.dims.len() != 2 {
+            bail!("adaround sim program wants dims [din, dout], got {:?}", self.dims);
+        }
+        let (din, dout) = (self.dims[0], self.dims[1]);
+        if args.len() != 6 {
+            bail!("adaround sim exe got {} args, want 6", args.len());
+        }
+        let x = args[0].host()?;
+        let w = args[1].host()?;
+        let b = args[2].host()?;
+        let v = args[3].host()?;
+        let s = args[4].host()?;
+        let meta = args[5].host()?;
+        let bsz = x.shape.first().copied().unwrap_or(0);
+        if x.shape != [bsz, din] || w.shape != [din, dout] || b.shape != [dout] {
+            bail!("adaround sim exe: bad x/w/b shapes {:?}/{:?}/{:?}", x.shape, w.shape, b.shape);
+        }
+        if v.shape != [din, dout] || s.shape != [dout] || meta.shape != [4] {
+            bail!("adaround sim exe: bad v/s/meta shapes {:?}/{:?}/{:?}", v.shape, s.shape, meta.shape);
+        }
+        let (xv, wv, bv) = (x.f32s()?, w.f32s()?, b.f32s()?);
+        let (vv, sv, mv) = (v.f32s()?, s.f32s()?, meta.f32s()?);
+        let (qmin, qmax, beta, lam) = (mv[0], mv[1], mv[2], mv[3]);
+
+        let n = din * dout;
+        let mut h = vec![0f32; n]; // rectified sigmoid h(V)
+        let mut dh = vec![0f32; n]; // dh/dV (0 where the clip is active)
+        let mut wq = vec![0f32; n]; // soft-quantized weight Ŵ(V)
+        let mut pass = vec![false; n]; // qmin ≤ ⌊W/s⌋+h ≤ qmax (clip pass-through)
+        for k in 0..din {
+            for c in 0..dout {
+                let i = k * dout + c;
+                let sc = sv[c].max(1e-12);
+                let sig = 1.0 / (1.0 + (-vv[i]).exp());
+                let hraw = 1.2 * sig - 0.1;
+                h[i] = hraw.clamp(0.0, 1.0);
+                dh[i] = if hraw > 0.0 && hraw < 1.0 { 1.2 * sig * (1.0 - sig) } else { 0.0 };
+                let p = (wv[i] / sc).floor() + h[i];
+                pass[i] = p >= qmin && p <= qmax;
+                wq[i] = sc * p.clamp(qmin, qmax);
+            }
+        }
+
+        let y_fp = matmul_bias(xv, bsz, din, wv, dout, bv);
+        let y_q = matmul_bias(xv, bsz, din, &wq, dout, bv);
+        let n_mse = (bsz * dout).max(1) as f32;
+        let mut mse = 0f32;
+        let mut e = vec![0f32; bsz * dout]; // y_q − y_fp
+        for j in 0..bsz * dout {
+            let d = y_fp[j] - y_q[j];
+            mse += d * d;
+            e[j] = y_q[j] - y_fp[j];
+        }
+        mse /= n_mse;
+        let mut reg = 0f32;
+        for &hi in &h {
+            reg += 1.0 - (2.0 * hi - 1.0).abs().powf(beta);
+        }
+        reg /= n as f32;
+        let loss = mse + lam * reg;
+
+        let mut g = vec![0f32; n];
+        for k in 0..din {
+            for c in 0..dout {
+                let i = k * dout + c;
+                // dMSE/dŴ_{kc} = Σ_r x_{rk} · 2(y_q − y_fp)_{rc} / n_mse
+                let mut gm = 0f32;
+                for r in 0..bsz {
+                    gm += xv[r * din + k] * e[r * dout + c];
+                }
+                gm *= 2.0 / n_mse;
+                let sc = sv[c].max(1e-12);
+                let mut gi = if pass[i] { gm * sc } else { 0.0 };
+                // d reg/dh = −β·|2h−1|^{β−1}·sign(2h−1)·2 / n
+                let t2 = 2.0 * h[i] - 1.0;
+                if t2 != 0.0 {
+                    gi += lam * (-beta * t2.abs().powf(beta - 1.0) * t2.signum() * 2.0 / n as f32);
+                }
+                g[i] = gi * dh[i];
+            }
+        }
+        Ok(vec![
+            Tensor::from_f32(&[1], vec![loss])?,
+            Tensor::from_f32(&[din, dout], g)?,
+        ])
+    }
+
+    /// FIT probe: `x, y, params..., perts..., act_qp[A,5]` →
+    /// `(loss, wgrad2[W], agrad2[A], aerr2[A])`.  FP forward with zero
+    /// perturbations added at every activation-quantizer point; loss is
+    /// classify10 cross-entropy; `*grad2` are mean squared loss-gradients
+    /// (Fisher diagonal) w.r.t. each quantized weight tensor / each
+    /// perturbation, and `aerr2` is each activation's local quantization
+    /// MSE under the given `act_qp` rows (quantization forced on) —
+    /// mirroring `lower_fit` + `QCtx.fit_mode`.
+    fn fit(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
+        let l = self.layers();
+        let want = 2 + 2 * l + (l + 1) + 1;
+        if args.len() != want {
+            bail!("fit sim exe got {} args, want {want}", args.len());
+        }
+        let x = args[0].host()?;
+        let y = args[1].host()?;
+        let bsz = x.shape.first().copied().unwrap_or(0);
+        if x.shape != [bsz, self.dims[0]] {
+            bail!("fit sim exe: input shape {:?}, want [{bsz}, {}]", x.shape, self.dims[0]);
+        }
+        let mut params = Vec::with_capacity(l);
+        for i in 0..l {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let w = args[2 + 2 * i].host()?;
+            let bias = args[3 + 2 * i].host()?;
+            if w.shape != [din, dout] || bias.shape != [dout] {
+                bail!("fit sim exe: layer {i} param shapes {:?}/{:?}", w.shape, bias.shape);
+            }
+            params.push((w.f32s()?, bias.f32s()?));
+        }
+        let mut perts = Vec::with_capacity(l + 1);
+        for (qi, a) in args[2 + 2 * l..3 + 3 * l].iter().enumerate() {
+            let p = a.host()?;
+            if p.shape != [bsz, self.dims[qi]] {
+                bail!("fit sim exe: pert {qi} shape {:?}, want [{bsz}, {}]", p.shape, self.dims[qi]);
+            }
+            perts.push(p.f32s()?);
+        }
+        let act_qp = args[want - 1].host()?;
+        if act_qp.shape != [l + 1, 5] {
+            bail!("fit sim exe: act_qp shape {:?}, want [{}, 5]", act_qp.shape, l + 1);
+        }
+        let qp = act_qp.f32s()?;
+
+        // FP forward, capturing pre-relu sums (relu mask), post-pert
+        // layer inputs, and each quantizer's local quantization error
+        let mut aerr2 = vec![0f32; l + 1];
+        let mut hs: Vec<Vec<f32>> = Vec::with_capacity(l + 1); // layer inputs (post-pert)
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(l); // pre-relu linear outputs
+        let xv = x.f32s()?;
+        aerr2[0] = forced_quant_err(xv, &qp[0..5]);
+        hs.push(xv.iter().zip(perts[0]).map(|(a, p)| a + p).collect());
+        for i in 0..l {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let (w, bias) = params[i];
+            let z = matmul_bias(&hs[i], bsz, din, w, dout, bias);
+            let a: Vec<f32> = if i + 1 < l {
+                z.iter().map(|&v| if v < 0.0 { 0.0 } else { v }).collect()
+            } else {
+                z.clone()
+            };
+            zs.push(z);
+            aerr2[i + 1] = forced_quant_err(&a, &qp[(i + 1) * 5..(i + 2) * 5]);
+            hs.push(a.iter().zip(perts[i + 1]).map(|(x, p)| x + p).collect());
+        }
+
+        // cross-entropy loss + gradient at the logits
+        let c = self.dims[l];
+        let yv = y.f32s()?;
+        if yv.len() != bsz {
+            bail!("fit sim exe: {} labels for batch {bsz}", yv.len());
+        }
+        let logits = &hs[l];
+        let mut loss = 0f32;
+        let mut gh = vec![0f32; bsz * c];
+        for r in 0..bsz {
+            let row = &logits[r * c..(r + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut se = 0f32;
+            for &v in row {
+                se += (v - m).exp();
+            }
+            let lse = m + se.ln();
+            let label = (yv[r] as usize).min(c - 1);
+            loss -= row[label] - lse;
+            for j in 0..c {
+                let soft = (row[j] - lse).exp();
+                gh[r * c + j] = (soft - if j == label { 1.0 } else { 0.0 }) / bsz as f32;
+            }
+        }
+        loss /= bsz as f32;
+
+        // backprop through the FP chain; pert gradients are the
+        // activation gradients at each quantizer point
+        let mut wgrad2 = vec![0f32; l];
+        let mut agrad2 = vec![0f32; l + 1];
+        agrad2[l] = mean_sq(&gh);
+        for i in (0..l).rev() {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let gz: Vec<f32> = if i + 1 < l {
+                gh.iter()
+                    .zip(&zs[i])
+                    .map(|(&g, &z)| if z > 0.0 { g } else { 0.0 })
+                    .collect()
+            } else {
+                gh
+            };
+            let hi = &hs[i];
+            let mut gw = vec![0f32; din * dout];
+            for r in 0..bsz {
+                for k in 0..din {
+                    let hv = hi[r * din + k];
+                    for cc in 0..dout {
+                        gw[k * dout + cc] += hv * gz[r * dout + cc];
+                    }
+                }
+            }
+            wgrad2[i] = mean_sq(&gw);
+            let w = params[i].0;
+            let mut ghp = vec![0f32; bsz * din];
+            for r in 0..bsz {
+                for k in 0..din {
+                    let mut acc = 0f32;
+                    for cc in 0..dout {
+                        acc += gz[r * dout + cc] * w[k * dout + cc];
+                    }
+                    ghp[r * din + k] = acc;
+                }
+            }
+            agrad2[i] = mean_sq(&ghp);
+            gh = ghp;
+        }
+
+        Ok(vec![
+            Tensor::from_f32(&[1], vec![loss])?,
+            Tensor::from_f32(&[l], wgrad2)?,
+            Tensor::from_f32(&[l + 1], agrad2)?,
+            Tensor::from_f32(&[l + 1], aerr2)?,
+        ])
+    }
 }
 
 impl Executable for SimProgram {
     fn run(&self, args: &[&Buffer]) -> Result<Vec<Tensor>> {
         match self.kind {
             Kind::Forward => Ok(vec![self.forward(args)?]),
-            Kind::Stats => self.stats(args),
+            // the taps contract (layer inputs + logits) coincides with the
+            // stats captures for a dense chain — see Kind::Taps
+            Kind::Stats | Kind::Taps => self.stats(args),
+            Kind::AdaRound => self.adaround_step(args),
+            Kind::Fit => self.fit(args),
         }
     }
+}
+
+/// `mean((x − fq(x, row))²)` with quantization forced on (the FIT error
+/// term; `row[4]` is ignored, mirroring `QCtx.fit_mode`).
+fn forced_quant_err(v: &[f32], row: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for &x in v {
+        let d = x - quant::fq(x, row[0], row[1], row[2], row[3]);
+        s += d * d;
+    }
+    s / v.len().max(1) as f32
+}
+
+fn mean_sq(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum::<f32>() / v.len().max(1) as f32
 }
 
 /// In-place fake-quant of a slice under one packed `act_qp` row
@@ -317,8 +588,38 @@ impl Default for SimSpec {
 /// weight columns widen the per-group sensitivity spread, so Phase-1 lists
 /// have non-trivial order and Phase-2 curves have real shape.
 pub fn generate(dir: impl AsRef<Path>, spec: &SimSpec) -> Result<()> {
+    generate_zoo(dir, std::slice::from_ref(spec))
+}
+
+/// Write a **multi-model** sim zoo: one manifest, several models (distinct
+/// names required) — the workload that exercises a shared
+/// [`crate::pool::EvalFleet`] across model attach/detach for real.
+pub fn generate_zoo(dir: impl AsRef<Path>, specs: &[SimSpec]) -> Result<()> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    if specs.is_empty() {
+        bail!("sim zoo needs at least one model spec");
+    }
+    let mut models = Vec::with_capacity(specs.len());
+    for spec in specs {
+        if models.iter().any(|(n, _)| n == &spec.name) {
+            bail!("duplicate sim model name '{}'", spec.name);
+        }
+        let entry = generate_model(dir, spec)?;
+        models.push((spec.name.clone(), entry));
+    }
+    let manifest = Json::Obj(vec![
+        ("backend".into(), Json::Str("sim".into())),
+        ("models".into(), Json::Obj(models)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string() + "\n")
+        .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
+    Ok(())
+}
+
+/// Generate one model's artifacts (programs, weights, datasets) into
+/// `dir`; returns its manifest entry.
+fn generate_model(dir: &Path, spec: &SimSpec) -> Result<Json> {
     if spec.dims.len() < 2 || spec.dims.iter().any(|&d| d == 0) {
         // same validity rule SimProgram::load applies — fail at generation,
         // not at first open of the broken zoo
@@ -421,15 +722,21 @@ pub fn generate(dir: impl AsRef<Path>, spec: &SimSpec) -> Result<()> {
 
     write_program(dir, &format!("{n}.fwd.sim.json"), "forward", &spec.dims)?;
     write_program(dir, &format!("{n}.stats.sim.json"), "stats", &spec.dims)?;
+    // AdaRound + FIT artifacts: taps (= FP layer inputs + logits), one
+    // per-layer adaround step program, and the FIT probe — so the pooled
+    // AdaRound/FIT paths run hermetically on the sim backend too
+    write_program(dir, &format!("{n}.taps.sim.json"), "taps", &spec.dims)?;
+    for i in 0..l {
+        write_program(
+            dir,
+            &format!("{n}.ar.fc{i}.sim.json"),
+            "adaround",
+            &[spec.dims[i], spec.dims[i + 1]],
+        )?;
+    }
+    write_program(dir, &format!("{n}.fit.sim.json"), "fit", &spec.dims)?;
 
-    let entry = mlp_entry_json(spec, fp_metric, ood_file.as_deref());
-    let manifest = Json::Obj(vec![
-        ("backend".into(), Json::Str("sim".into())),
-        ("models".into(), Json::Obj(vec![(n.clone(), entry)])),
-    ]);
-    std::fs::write(dir.join("manifest.json"), manifest.to_string() + "\n")
-        .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
-    Ok(())
+    Ok(mlp_entry_json(spec, fp_metric, ood_file.as_deref()))
 }
 
 fn fp_act_qp(a: usize) -> Tensor {
@@ -563,10 +870,34 @@ fn mlp_entry_json(spec: &SimSpec, fp_metric: f64, ood: Option<&str>) -> Json {
                 ),
             ]),
         ),
-        ("taps".into(), Json::Null),
-        ("adaround".into(), Json::Arr(vec![])),
-        ("fit".into(), Json::Null),
-        ("fit_act_shapes".into(), Json::Null),
+        ("taps".into(), Json::Str(format!("{n}.taps.sim.json"))),
+        (
+            "adaround".into(),
+            Json::Arr(
+                (0..l)
+                    .map(|i| {
+                        Json::Obj(vec![
+                            ("layer".into(), Json::Str(format!("fc{i}"))),
+                            ("exe".into(), Json::Str(format!("{n}.ar.fc{i}.sim.json"))),
+                            ("tap_index".into(), num(i)),
+                            ("param".into(), Json::Str(format!("fc{i}.w"))),
+                            ("bias".into(), Json::Str(format!("fc{i}.b"))),
+                            ("kind".into(), Json::Str("dense".into())),
+                            ("channels".into(), num(spec.dims[i + 1])),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("fit".into(), Json::Str(format!("{n}.fit.sim.json"))),
+        (
+            "fit_act_shapes".into(),
+            Json::Arr(
+                (0..=l)
+                    .map(|i| Json::Arr(vec![num(spec.batch), num(spec.dims[i])]))
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -782,6 +1113,234 @@ mod tests {
         for (g, w) in got.f32s().unwrap().iter().zip(&y1) {
             assert_eq!(g.to_bits(), w.to_bits(), "interpreter drifted from oracle");
         }
+    }
+
+    /// The taps program returns layer inputs + logits — for this dense
+    /// chain that is exactly the stats capture list, and `capture_taps`'s
+    /// `n_layers + 1` output contract must hold.
+    #[test]
+    fn taps_program_matches_stats_captures() {
+        let dims = vec![3usize, 4, 2];
+        let taps = SimProgram { kind: Kind::Taps, dims: dims.clone() };
+        let stats = SimProgram { kind: Kind::Stats, dims: dims.clone() };
+        let mut rng = Rng::new(3);
+        let mut r = || rng.f64() as f32 * 2.0 - 1.0;
+        let bufs: Vec<Buffer> = vec![
+            Buffer::Host(Tensor::from_f32(&[2, 3], (0..6).map(|_| r()).collect()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[3, 4], (0..12).map(|_| r()).collect()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[4], (0..4).map(|_| r()).collect()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[4, 2], (0..8).map(|_| r()).collect()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[2], (0..2).map(|_| r()).collect()).unwrap()),
+        ];
+        let refs: Vec<&Buffer> = bufs.iter().collect();
+        let (a, b) = (taps.run(&refs).unwrap(), stats.run(&refs).unwrap());
+        assert_eq!(a.len(), dims.len() - 1 + 1, "taps contract: L taps + logits");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    /// The adaround step's analytic dL/dV must match a central finite
+    /// difference of its own loss output (inputs chosen inside every
+    /// clip's interior so the loss is smooth where we probe).
+    #[test]
+    fn adaround_step_gradient_matches_finite_difference() {
+        let prog = SimProgram { kind: Kind::AdaRound, dims: vec![3, 2] };
+        let mut rng = Rng::new(5);
+        let mut r = || rng.f64() as f32 * 0.8 - 0.4;
+        let bsz = 4usize;
+        let x: Vec<f32> = (0..bsz * 3).map(|_| r()).collect();
+        let w: Vec<f32> = (0..6).map(|_| r()).collect();
+        let b: Vec<f32> = (0..2).map(|_| r()).collect();
+        let v: Vec<f32> = (0..6).map(|_| r()).collect();
+        let scales = vec![0.11f32, 0.17];
+        let meta = vec![-7.0f32, 7.0, 3.0, 0.05]; // qmin qmax beta lambda
+        let run = |vv: &[f32]| -> (f32, Vec<f32>) {
+            let bufs: Vec<Buffer> = vec![
+                Buffer::Host(Tensor::from_f32(&[bsz, 3], x.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[3, 2], w.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[2], b.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[3, 2], vv.to_vec()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[2], scales.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[4], meta.clone()).unwrap()),
+            ];
+            let refs: Vec<&Buffer> = bufs.iter().collect();
+            let outs = prog.adaround_step(&refs).unwrap();
+            (outs[0].f32s().unwrap()[0], outs[1].f32s().unwrap().to_vec())
+        };
+        let (loss, g) = run(&v);
+        assert!(loss.is_finite() && loss > 0.0, "degenerate loss {loss}");
+        let eps = 1e-3f32;
+        for i in 0..v.len() {
+            let mut vp = v.clone();
+            vp[i] += eps;
+            let mut vm = v.clone();
+            vm[i] -= eps;
+            let num = (run(&vp).0 - run(&vm).0) / (2.0 * eps);
+            let tol = 1e-3 + 0.05 * num.abs().max(g[i].abs());
+            assert!(
+                (num - g[i]).abs() < tol,
+                "dL/dV[{i}]: analytic {} vs numeric {num}",
+                g[i]
+            );
+        }
+    }
+
+    /// FIT program vs a closed-form oracle on a single dense layer (no
+    /// relu): cross-entropy gradients w.r.t. the weight and both
+    /// perturbation points, plus the forced local quantization errors.
+    #[test]
+    fn fit_program_matches_single_layer_oracle() {
+        let (bsz, din, c) = (4usize, 3usize, 4usize);
+        let prog = SimProgram { kind: Kind::Fit, dims: vec![din, c] };
+        let mut rng = Rng::new(17);
+        let mut r = || rng.f64() as f32 * 2.0 - 1.0;
+        let x: Vec<f32> = (0..bsz * din).map(|_| r()).collect();
+        let w: Vec<f32> = (0..din * c).map(|_| r()).collect();
+        let b: Vec<f32> = (0..c).map(|_| r()).collect();
+        let y: Vec<f32> = (0..bsz).map(|i| (i % c) as f32).collect();
+        // act_qp rows: input at some scale, output row too (forced on)
+        let qp: Vec<f32> = vec![0.05, 0.0, -127.0, 127.0, 1.0, 0.1, 3.0, 0.0, 255.0, 1.0];
+        let bufs: Vec<Buffer> = vec![
+            Buffer::Host(Tensor::from_f32(&[bsz, din], x.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[bsz], y.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[din, c], w.clone()).unwrap()),
+            Buffer::Host(Tensor::from_f32(&[c], b.clone()).unwrap()),
+            Buffer::Host(Tensor::zeros(&[bsz, din])),
+            Buffer::Host(Tensor::zeros(&[bsz, c])),
+            Buffer::Host(Tensor::from_f32(&[2, 5], qp.clone()).unwrap()),
+        ];
+        let refs: Vec<&Buffer> = bufs.iter().collect();
+        let outs = prog.fit(&refs).unwrap();
+        assert_eq!(outs[1].shape, [1]);
+        assert_eq!(outs[2].shape, [2]);
+        assert_eq!(outs[3].shape, [2]);
+
+        // oracle: logits = x@w+b, CE grad, gw = x^T@glog, gpert0 = glog@w^T
+        let logits = matmul_bias(&x, bsz, din, &w, c, &b);
+        let mut glog = vec![0f32; bsz * c];
+        for rix in 0..bsz {
+            let row = &logits[rix * c..(rix + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+            for j in 0..c {
+                let soft = (row[j] - lse).exp();
+                glog[rix * c + j] =
+                    (soft - if j == y[rix] as usize { 1.0 } else { 0.0 }) / bsz as f32;
+            }
+        }
+        let mut gw = vec![0f32; din * c];
+        for rix in 0..bsz {
+            for k in 0..din {
+                for j in 0..c {
+                    gw[k * c + j] += x[rix * din + k] * glog[rix * c + j];
+                }
+            }
+        }
+        let mut gp0 = vec![0f32; bsz * din];
+        for rix in 0..bsz {
+            for k in 0..din {
+                gp0[rix * din + k] =
+                    (0..c).map(|j| glog[rix * c + j] * w[k * c + j]).sum::<f32>();
+            }
+        }
+        let msq = |v: &[f32]| v.iter().map(|z| z * z).sum::<f32>() / v.len() as f32;
+        let close = |a: f32, b: f32, what: &str| {
+            assert!(
+                (a - b).abs() <= 1e-6 + 1e-4 * a.abs().max(b.abs()),
+                "{what}: {a} vs {b}"
+            );
+        };
+        close(outs[1].f32s().unwrap()[0], msq(&gw), "wgrad2");
+        close(outs[2].f32s().unwrap()[1], msq(&glog), "agrad2[logits]");
+        close(outs[2].f32s().unwrap()[0], msq(&gp0), "agrad2[input]");
+        // forced quantization errors
+        let err = |v: &[f32], row: &[f32]| -> f32 {
+            v.iter()
+                .map(|&z| {
+                    let d = z - quant::fq(z, row[0], row[1], row[2], row[3]);
+                    d * d
+                })
+                .sum::<f32>()
+                / v.len() as f32
+        };
+        close(outs[3].f32s().unwrap()[0], err(&x, &qp[0..5]), "aerr2[input]");
+        close(outs[3].f32s().unwrap()[1], err(&logits, &qp[5..10]), "aerr2[logits]");
+    }
+
+    /// Relu masking in the FIT backward pass: the input-perturbation
+    /// Fisher term of a 2-layer chain must match a finite-difference
+    /// gradient of the program's own loss output.
+    #[test]
+    fn fit_program_input_grad_matches_finite_difference() {
+        let (bsz, dims) = (2usize, vec![3usize, 4, 3]);
+        let prog = SimProgram { kind: Kind::Fit, dims: dims.clone() };
+        let mut rng = Rng::new(29);
+        let mut r = || rng.f64() as f32 * 2.0 - 1.0;
+        let x: Vec<f32> = (0..bsz * 3).map(|_| r()).collect();
+        let w0: Vec<f32> = (0..12).map(|_| r()).collect();
+        let b0: Vec<f32> = (0..4).map(|_| r()).collect();
+        let w1: Vec<f32> = (0..12).map(|_| r()).collect();
+        let b1: Vec<f32> = (0..3).map(|_| r()).collect();
+        let y = vec![0f32, 2.0];
+        let qp: Vec<f32> = (0..3).flat_map(|_| [0.05, 0.0, -127.0, 127.0, 1.0]).collect();
+        let run = |p0: &[f32]| -> (f32, Vec<f32>) {
+            let bufs: Vec<Buffer> = vec![
+                Buffer::Host(Tensor::from_f32(&[bsz, 3], x.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[bsz], y.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[3, 4], w0.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[4], b0.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[4, 3], w1.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[3], b1.clone()).unwrap()),
+                Buffer::Host(Tensor::from_f32(&[bsz, 3], p0.to_vec()).unwrap()),
+                Buffer::Host(Tensor::zeros(&[bsz, 4])),
+                Buffer::Host(Tensor::zeros(&[bsz, 3])),
+                Buffer::Host(Tensor::from_f32(&[3, 5], qp.clone()).unwrap()),
+            ];
+            let refs: Vec<&Buffer> = bufs.iter().collect();
+            let outs = prog.fit(&refs).unwrap();
+            (outs[0].f32s().unwrap()[0], outs[2].f32s().unwrap().to_vec())
+        };
+        let zeros = vec![0f32; bsz * 3];
+        let (_, agrad2) = run(&zeros);
+        // numeric dL/dpert_0, element by element
+        let eps = 5e-3f32;
+        let mut g0 = vec![0f32; bsz * 3];
+        for i in 0..g0.len() {
+            let mut pp = zeros.clone();
+            pp[i] += eps;
+            let mut pm = zeros.clone();
+            pm[i] -= eps;
+            g0[i] = (run(&pp).0 - run(&pm).0) / (2.0 * eps);
+        }
+        let num = g0.iter().map(|z| z * z).sum::<f32>() / g0.len() as f32;
+        assert!(
+            (num - agrad2[0]).abs() <= 0.1 * num.abs().max(agrad2[0].abs()) + 1e-8,
+            "agrad2[0] {} vs finite-difference {num}",
+            agrad2[0]
+        );
+    }
+
+    #[test]
+    fn generate_zoo_writes_multiple_models() {
+        let d = tmp("zoo2");
+        let a = SimSpec { calib_n: 16, val_n: 16, ood_n: 0, ..Default::default() };
+        let b = SimSpec {
+            name: "sim_mlp_b".into(),
+            dims: vec![12, 14, 10],
+            calib_n: 16,
+            val_n: 16,
+            ood_n: 0,
+            seed: 11,
+            ..Default::default()
+        };
+        generate_zoo(&d, &[a.clone(), b.clone()]).unwrap();
+        let man = crate::manifest::Manifest::load(&d).unwrap();
+        assert_eq!(man.models.len(), 2);
+        assert!(man.model(&a.name).is_ok() && man.model(&b.name).is_ok());
+        // duplicate names must be rejected
+        assert!(generate_zoo(&d, &[a.clone(), a]).is_err());
     }
 
     #[test]

@@ -12,12 +12,14 @@
 //! milliseconds), so tests stay parallel-safe and deterministic: the same
 //! `SimSpec` always produces byte-identical weights, data and manifest.
 
+use mpq::adaround::AdaRoundCfg;
 use mpq::coordinator::{Pipeline, SearchScheme};
 use mpq::engine::Evaluator;
 use mpq::groups::{Assignment, Candidate, Lattice};
 use mpq::manifest::Manifest;
 use mpq::model::{QuantConfig, WeightOverrides};
-use mpq::pool::{ProbeKind, CALIB_SET};
+use mpq::pool::{EvalFleet, ProbeKind, CALIB_SET};
+use mpq::sensitivity::Metric;
 use mpq::sim::{self, SimSpec};
 use mpq::tensor::Tensor;
 use std::collections::HashMap;
@@ -290,6 +292,239 @@ fn sim_pool_probe_memo_never_serves_stale_overrides() {
     assert_eq!(pool.probes_computed() - c0, 3, "re-submit must not recompute");
     assert_eq!(pool.memo_hits() - h0, 1, "re-submit must be a memo hit");
     assert_eq!(va2.to_bits(), va.to_bits(), "memo returned a different value");
+}
+
+/// Pooled FIT sensitivity (shard-parallel grad²/err² accumulation with
+/// the serial fold replayed over raw per-batch outputs) must be
+/// **bit-identical** to the serial FIT path at every worker count.
+#[test]
+fn sim_pooled_fit_matches_serial_bit_for_bit() {
+    let dir = sim_dir("pool_fit");
+    let lat = Lattice::practical();
+    let sp = pipe(&dir);
+    let serial = sp.sensitivity(&lat, Metric::Fit, None).unwrap();
+    assert!(!serial.is_empty());
+    assert!(serial.iter().all(|e| e.score.is_finite()), "degenerate FIT scores");
+    for workers in [1usize, 2, 4] {
+        let mut p = Pipeline::open(&dir, MODEL).unwrap();
+        p.enable_pool(workers).unwrap();
+        p.calibrate(128, 0).unwrap();
+        let pooled = p.sensitivity(&lat, Metric::Fit, None).unwrap();
+        assert_eq!(pooled.len(), serial.len(), "w={workers}");
+        for (a, b) in pooled.iter().zip(&serial) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "w={workers}: order diverged");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "w={workers}: FIT score for (g{}, {:?}): {} vs {}",
+                a.group,
+                a.cand,
+                a.score,
+                b.score
+            );
+        }
+    }
+}
+
+/// Pooled AdaRound (independent `(layer, wbits)` optimizations dispatched
+/// to fleet workers round-robin) must produce **byte-equal rounded weight
+/// tensors** vs the serial loop, at every worker count — and the stitched
+/// Phase-1 sweep over them must agree bit-for-bit too.
+#[test]
+fn sim_pooled_adaround_matches_serial_bit_for_bit() {
+    let dir = sim_dir("pool_ar");
+    let lat = Lattice::practical();
+    let cfg = AdaRoundCfg { steps: 30, ..Default::default() };
+    let sp = pipe(&dir);
+    let serial = sp.adaround(&lat, &cfg).unwrap();
+    assert!(!serial.is_empty(), "no adaround layers in the sim zoo");
+    let s_sens = sp.sensitivity(&lat, Metric::Sqnr, Some(&serial)).unwrap();
+    for workers in [1usize, 2, 4] {
+        let mut p = Pipeline::open(&dir, MODEL).unwrap();
+        p.enable_pool(workers).unwrap();
+        p.calibrate(128, 0).unwrap();
+        let pooled = p.adaround(&lat, &cfg).unwrap();
+        assert_eq!(pooled.len(), serial.len(), "w={workers}");
+        for (key, st) in &serial {
+            let pt = pooled
+                .get(key)
+                .unwrap_or_else(|| panic!("w={workers}: missing rounded {key:?}"));
+            assert_eq!(pt.shape, st.shape, "w={workers}: {key:?} shape");
+            let (pv, sv) = (pt.f32s().unwrap(), st.f32s().unwrap());
+            for (i, (a, b)) in pv.iter().zip(sv).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "w={workers}: rounded {key:?}[{i}]: {a} vs {b}"
+                );
+            }
+        }
+        let p_sens = p.sensitivity(&lat, Metric::Sqnr, Some(&pooled)).unwrap();
+        assert_eq!(p_sens.len(), s_sens.len(), "w={workers}");
+        for (a, b) in p_sens.iter().zip(&s_sens) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "w={workers}");
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "w={workers}: stitched sweep");
+        }
+    }
+}
+
+/// One fleet, two models: attaching and probing the second model must not
+/// recompile (or even re-open) the first model's executables, and the
+/// first model's results stay bit-identical before/after.
+#[test]
+fn sim_fleet_shares_workers_across_models_without_recompiling() {
+    let dir = std::env::temp_dir().join("mpq_sim_e2e_fleet2");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec_a = SimSpec::default();
+    let spec_b = SimSpec {
+        name: "sim_mlp_b".into(),
+        dims: vec![12, 18, 10],
+        seed: 23,
+        ..Default::default()
+    };
+    sim::generate_zoo(&dir, &[spec_a.clone(), spec_b.clone()]).unwrap();
+    let workers = 2usize;
+    let fleet = EvalFleet::new(&dir, workers).unwrap();
+    let lat = Lattice::practical();
+
+    let mut pa = Pipeline::open(&dir, &spec_a.name).unwrap();
+    pa.attach_fleet(&fleet).unwrap();
+    pa.calibrate(64, 0).unwrap();
+    let sa1 = pa.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(fleet.model_opens(), workers, "model A opened once per worker");
+    let stats_a = fleet.worker_stats().unwrap();
+    assert!(stats_a.iter().all(|s| s.models_open == 1));
+
+    // attach + probe the second model on the SAME fleet
+    let mut pb = Pipeline::open(&dir, &spec_b.name).unwrap();
+    pb.attach_fleet(&fleet).unwrap();
+    pb.calibrate(64, 0).unwrap();
+    let sb = pb.sensitivity_sqnr(&lat).unwrap();
+    assert!(!sb.is_empty());
+    assert_eq!(fleet.model_opens(), 2 * workers, "model B opened once per worker");
+    let stats_ab = fleet.worker_stats().unwrap();
+    for (i, (a, b)) in stats_a.iter().zip(&stats_ab).enumerate() {
+        assert_eq!(
+            b.compiled,
+            a.compiled + 1,
+            "worker {i}: attaching B must compile only B's forward"
+        );
+        assert_eq!(b.models_open, 2);
+    }
+
+    // re-sweep A on the shared fleet: ZERO recompilations, identical bits
+    pa.clear_eval_memo();
+    let sa2 = pa.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(fleet.model_opens(), 2 * workers, "re-probing A must not re-open");
+    let stats_after = fleet.worker_stats().unwrap();
+    for (i, (x, y)) in stats_ab.iter().zip(&stats_after).enumerate() {
+        assert_eq!(x.compiled, y.compiled, "worker {i}: re-probing A recompiled something");
+    }
+    assert_eq!(sa1.len(), sa2.len());
+    for (a, b) in sa1.iter().zip(&sa2) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand));
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "A diverged after B attached");
+    }
+
+    // dropping B's last client evicts its worker slots; A keeps serving
+    drop(pb);
+    let stats_drop = fleet.worker_stats().unwrap();
+    assert!(stats_drop.iter().all(|s| s.models_open == 1), "detach must evict B");
+    pa.clear_eval_memo();
+    let sa3 = pa.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(sa3[0].score.to_bits(), sa1[0].score.to_bits());
+}
+
+/// Resizing the fleet mid-run re-shards the registered sets and keeps
+/// every later sweep bit-identical to the serial reference.
+#[test]
+fn sim_fleet_resize_mid_run() {
+    let dir = sim_dir("resize");
+    let lat = Lattice::practical();
+    let serial = pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    let fleet = EvalFleet::new(&dir, 1).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let check = |p: &Pipeline, tag: &str| {
+        p.clear_eval_memo();
+        let sens = p.sensitivity_sqnr(&lat).unwrap();
+        assert_eq!(sens.len(), serial.len(), "{tag}");
+        for (a, b) in sens.iter().zip(&serial) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "{tag}");
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "{tag}: score diverged");
+        }
+    };
+    check(&p, "w=1 before resize");
+    fleet.resize(3).unwrap();
+    assert_eq!(fleet.workers(), 3);
+    check(&p, "after grow to 3");
+    fleet.resize(2).unwrap();
+    assert_eq!(fleet.workers(), 2);
+    check(&p, "after shrink to 2");
+    // Phase 2 still works across a resize (val set re-sharded too)
+    let flips = p.flips(&lat, &serial);
+    let run = p.search_bops_budget(&lat, &flips, 0.5).unwrap();
+    assert!(run.final_metric.is_finite());
+}
+
+/// On-disk FP32 reference cache: a pooled run persists the merged
+/// reference; a later serial run restores it with ZERO reference forward
+/// sweeps and produces bit-identical Phase-1 scores.
+#[test]
+fn sim_reference_cache_skips_reference_sweep() {
+    let dir = sim_dir("refcache");
+    let cache = dir.join("sens_cache");
+    let lat = Lattice::practical();
+
+    // pooled first run: reference-cache miss → build (shard-parallel),
+    // fetch back, persist
+    let mut pp = Pipeline::open(&dir, MODEL).unwrap();
+    pp.enable_pool(2).unwrap();
+    pp.set_sens_cache_dir(Some(cache.clone()));
+    pp.calibrate(128, 0).unwrap();
+    assert_eq!(pp.ref_cache_stats(), (0, 1), "first calibrate is a ref miss");
+    let sp = pp.sensitivity_sqnr(&lat).unwrap();
+    let ref_files: Vec<_> = std::fs::read_dir(&cache)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().starts_with("ref_"))
+        .collect();
+    assert_eq!(ref_files.len(), 1, "pooled run must persist the reference");
+
+    // wipe the sensitivity lists (keep the reference) so the second run
+    // actually sweeps
+    for e in std::fs::read_dir(&cache).unwrap().filter_map(|e| e.ok()) {
+        if e.file_name().to_string_lossy().starts_with("sens_") {
+            std::fs::remove_file(e.path()).unwrap();
+        }
+    }
+
+    // serial second run: reference restored from disk — no reference
+    // sweep, probe-only forward accounting, bit-identical scores
+    let mut ps = Pipeline::open(&dir, MODEL).unwrap();
+    ps.set_sens_cache_dir(Some(cache));
+    ps.calibrate(128, 0).unwrap();
+    assert_eq!(ps.ref_cache_stats(), (1, 0), "second calibrate must hit");
+    let fwd0 = *ps.model.fwd_calls.borrow();
+    let ss = ps.sensitivity_sqnr(&lat).unwrap();
+    assert_eq!(ps.model.engine.ref_builds.get(), 0, "reference must come from disk");
+    let nb = ps.calib_set().unwrap().batches.len() as u64;
+    assert_eq!(
+        *ps.model.fwd_calls.borrow() - fwd0,
+        ss.len() as u64 * nb,
+        "sweep must cost probes only — no reference sweep"
+    );
+    assert_eq!(ss.len(), sp.len());
+    for (a, b) in ss.iter().zip(&sp) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand));
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "disk-restored reference diverged from pooled-built one"
+        );
+    }
 }
 
 #[test]
