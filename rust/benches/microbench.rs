@@ -99,6 +99,39 @@ fn sim_benches(results: &mut Vec<BenchResult>) {
         }));
     }
 
+    // Self-healing overhead: the same w4 sweep with a *recurring* injected
+    // panic (one lane dies every 5th probe it serves, respawned each time;
+    // budget sized so the fleet never degrades).  Gated against the plain
+    // w1 sweep: supervised-and-dying w4 must still beat serial — respawn +
+    // state replay + requeue are bounded overhead, not a cliff.
+    {
+        let plan = mpq::pool::FaultPlan::parse("panic@1:5*,budget:64,backoff:0")
+            .expect("bench fault plan");
+        let fleet = EvalFleet::with_faults(&dir, 4, plan).expect("spawn faulted fleet");
+        let mut pp = Pipeline::open(&dir, &spec.name).expect("open sim zoo");
+        pp.attach_fleet(&fleet).expect("attach faulted fleet");
+        pp.calibrate(spec.calib_n, 0).expect("calibrate");
+        results.push(bench_result(
+            "phase1_pool_sim_faulty/full_sensitivity_sweep_w4",
+            1,
+            3,
+            || {
+                pp.clear_eval_memo();
+                pp.sensitivity_sqnr(&lat).map(|_| ())
+            },
+        ));
+        let fs = fleet.failure_stats();
+        assert!(
+            fs.worker_restarts > 0 && fs.jobs_requeued > 0,
+            "faulted bench must actually exercise the supervisor: {fs:?}"
+        );
+        assert!(
+            fs.degraded_events.is_empty(),
+            "faulted bench must stay within its restart budget: {:?}",
+            fs.degraded_events
+        );
+    }
+
     // Pooled FIT sensitivity at 1/4 workers: shard-parallel grad²/err²
     // accumulation through the fleet (FIT has no memo — every iteration
     // is a full accumulation sweep).

@@ -15,7 +15,7 @@ use crate::coordinator::{Pipeline, SearchScheme};
 use crate::groups::{Candidate, Lattice};
 use crate::manifest::Manifest;
 use crate::metrics::kendall_tau;
-use crate::pool::EvalFleet;
+use crate::pool::{EvalFleet, FaultPlan};
 use crate::report::{f3, f4, Table};
 use crate::runtime::Runtime;
 use crate::search::SearchRun;
@@ -37,6 +37,10 @@ pub struct Opts {
     /// [`crate::pool::EvalPool`] to every pipeline the drivers open.
     /// Defaults to the host's available parallelism.
     pub workers: usize,
+    /// explicit fleet fault-injection schedule (`--fault-plan`, the
+    /// `crate::pool::FaultPlan` grammar) — overrides `MPQ_FAULT_PLAN` and
+    /// the manifest's `fault_plan` key; `None` falls back to those
+    pub fault_plan: Option<String>,
 }
 
 impl Default for Opts {
@@ -48,6 +52,7 @@ impl Default for Opts {
             models: None,
             fast: std::env::var_os("MPQ_FAST").is_some(),
             workers: crate::util::default_workers(),
+            fault_plan: None,
         }
     }
 }
@@ -85,7 +90,12 @@ impl Env {
         let manifest = Manifest::load(&opts.dir)?;
         let rt = Rc::new(Runtime::for_manifest(&manifest)?);
         let fleet = if opts.workers > 1 {
-            Some(EvalFleet::new(&opts.dir, opts.workers)?)
+            Some(match &opts.fault_plan {
+                Some(spec) => {
+                    EvalFleet::with_faults(&opts.dir, opts.workers, FaultPlan::parse(spec)?)?
+                }
+                None => EvalFleet::new(&opts.dir, opts.workers)?,
+            })
         } else {
             None
         };
@@ -167,7 +177,21 @@ fn pipe_note(pipe: &Pipeline) -> String {
     let (h, m) = pipe.sens_cache_stats();
     let (rh, rm) = pipe.ref_cache_stats();
     let w = pipe.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
-    format!("sens-cache {h}h/{m}m, ref-cache {rh}h/{rm}m, fleet w={w}")
+    let mut note = format!("sens-cache {h}h/{m}m, ref-cache {rh}h/{rm}m, fleet w={w}");
+    // failure telemetry rides along only when something actually happened,
+    // so fault-free runs keep the familiar one-liner
+    if let Some(fs) = pipe.pool.as_ref().map(|p| p.fleet().failure_stats()) {
+        if fs.any() {
+            note.push_str(&format!(
+                ", faults {} (restarts {}, requeued {}, degraded {})",
+                fs.faults_injected,
+                fs.worker_restarts,
+                fs.jobs_requeued,
+                fs.degraded_events.len()
+            ));
+        }
+    }
+    note
 }
 
 /// MP at a BOPs budget via SQNR Phase 1 (the paper's standard pipeline).

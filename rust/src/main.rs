@@ -39,10 +39,35 @@ fn opts_from(args: &Args) -> Result<Opts> {
     o.seed = args.opt_u64("seed", o.seed)?;
     o.fast = o.fast || args.flag("fast");
     o.workers = args.opt_workers()?;
+    o.fault_plan = args.opt("fault-plan").map(String::from);
     if let Some(ms) = args.opt("models") {
         o.models = Some(ms.split(',').map(String::from).collect());
     }
     Ok(o)
+}
+
+/// Route probe evaluation through a worker fleet when `--workers` > 1,
+/// honoring an explicit `--fault-plan` (the self-healing harness).
+fn enable_fleet(pipe: &mut Pipeline, opts: &Opts) -> Result<()> {
+    match &opts.fault_plan {
+        Some(spec) => {
+            let plan = mpq::pool::FaultPlan::parse(spec)?;
+            let fleet = mpq::pool::EvalFleet::with_faults(&opts.dir, opts.workers, plan)?;
+            pipe.attach_fleet(&fleet)
+        }
+        None => pipe.enable_pool(opts.workers),
+    }
+}
+
+/// Print the fleet's failure telemetry after a pooled command — only when
+/// something actually happened (restart, requeue, injected fault, death).
+fn report_fleet_failures(pipe: &Pipeline) {
+    if let Some(pool) = &pipe.pool {
+        let fs = pool.fleet().failure_stats();
+        if fs.any() {
+            mpq::report::fleet_failure_table(&fs).print();
+        }
+    }
 }
 
 fn lattice_from(args: &Args) -> Result<Lattice> {
@@ -82,7 +107,7 @@ fn main() -> Result<()> {
             let budget = args.opt_f64("budget", 0.5)?;
             let mut pipe = Pipeline::open(&opts.dir, model)?;
             if opts.workers > 1 {
-                pipe.enable_pool(opts.workers)?;
+                enable_fleet(&mut pipe, &opts)?;
             }
             pipe.set_sens_cache_dir(opts.sens_cache_dir());
             pipe.calibrate(opts.calib_n, opts.seed)?;
@@ -98,13 +123,14 @@ fn main() -> Result<()> {
             for s in &run.applied {
                 println!("  group {:>3} → {}  (r→{:.3}, Ω={:.1})", s.group, s.cand.label(), s.rel_bops, s.score);
             }
+            report_fleet_failures(&pipe);
         }
         "sensitivity" => {
             let model = args.opt("model").unwrap_or("resnet_s");
             let lat = lattice_from(&args)?;
             let mut pipe = Pipeline::open(&opts.dir, model)?;
             if opts.workers > 1 {
-                pipe.enable_pool(opts.workers)?;
+                enable_fleet(&mut pipe, &opts)?;
             }
             pipe.set_sens_cache_dir(opts.sens_cache_dir());
             pipe.calibrate(opts.calib_n, opts.seed)?;
@@ -113,6 +139,7 @@ fn main() -> Result<()> {
             for e in &sens {
                 println!("{:<8} {:<8} {:>10.2}", e.group, e.cand.label(), e.score);
             }
+            report_fleet_failures(&pipe);
         }
         "sim-gen" => {
             let out = args.opt_str("out", "sim-artifacts");
@@ -133,6 +160,7 @@ fn main() -> Result<()> {
                 val_n: args.opt_usize("val-n", base.val_n)?,
                 ood_n: args.opt_usize("ood-n", base.ood_n)?,
                 seed: args.opt_u64("sim-seed", base.seed)?,
+                fault_plan: args.opt("fault-plan").map(String::from),
             };
             mpq::sim::generate(out, &spec)?;
             println!(
@@ -183,8 +211,14 @@ fn main() -> Result<()> {
             println!("       --workers N  evaluation-fleet width (default: host parallelism;");
             println!("                    one shared fleet per driver run, reused across all");
             println!("                    models; 1 = serial single-client path)");
+            println!("       --fault-plan SPEC  deterministic fleet fault injection, e.g.");
+            println!("                    'panic@1:3,budget:2,deadline:500' (also via the");
+            println!("                    MPQ_FAULT_PLAN env var or the manifest fault_plan key;");
+            println!("                    the supervisor respawns, requeues and degrades —");
+            println!("                    results stay bit-identical to the fault-free run)");
             println!("sim-gen: --out DIR --dims d0,d1,..,dL --batch B --calib-n N --val-n N");
-            println!("         --ood-n N --sim-seed S  (pure-Rust backend; no PJRT needed)");
+            println!("         --ood-n N --sim-seed S --fault-plan SPEC");
+            println!("         (pure-Rust backend; no PJRT needed)");
         }
     }
     Ok(())

@@ -18,6 +18,11 @@ pub struct Manifest {
     /// executables, the default) or `"sim"` (pure-Rust interpreter programs
     /// from [`crate::sim`]) — consumed by `Runtime::for_manifest`
     pub backend: String,
+    /// optional deterministic fault-injection schedule for the evaluation
+    /// fleet (`crate::pool::FaultPlan` grammar) — written by
+    /// `sim::generate` for hermetic fault tests; absent in production
+    /// artifacts.  `MPQ_FAULT_PLAN` and `EvalFleet::with_faults` override.
+    pub fault_plan: Option<String>,
 }
 
 #[derive(Clone, Debug)]
@@ -125,7 +130,15 @@ impl Manifest {
                 .context("manifest 'backend' must be a string")?
                 .to_string(),
         };
-        Ok(Self { dir, models, backend })
+        let fault_plan = match j.get("fault_plan") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .context("manifest 'fault_plan' must be a string")?
+                    .to_string(),
+            ),
+        };
+        Ok(Self { dir, models, backend, fault_plan })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {

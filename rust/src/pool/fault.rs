@@ -1,0 +1,384 @@
+//! Deterministic fault injection for the evaluation fleet.
+//!
+//! A [`FaultPlan`] is a seeded, fully reproducible schedule of worker
+//! failures — the test harness the self-healing fleet is verified
+//! against.  Plans are written in a tiny comma-separated grammar and can
+//! come from three places, in precedence order:
+//!
+//! 1. an explicit plan handed to [`super::EvalFleet::with_faults`]
+//!    (dedicated fault tests — wins over the environment so they stay
+//!    deterministic under the fault-injection CI job),
+//! 2. the `MPQ_FAULT_PLAN` environment variable,
+//! 3. the manifest's optional top-level `"fault_plan"` key (written by
+//!    `sim::generate` when [`crate::sim::SimSpec::fault_plan`] is set).
+//!
+//! ## Grammar
+//!
+//! Tokens are comma-separated; `L` is a worker *lane* (its spawn slot —
+//! a respawned replacement occupies the same lane, so a recurring fault
+//! re-fires on every incarnation), `N` is a 1-based event ordinal within
+//! one worker incarnation, `MS` is milliseconds.  A trailing `*` makes a
+//! fault recurring (re-arms for every incarnation of the lane); without
+//! it a fault fires exactly once across the whole fleet lifetime.
+//!
+//! | token            | effect                                              |
+//! |------------------|-----------------------------------------------------|
+//! | `panic@L:N[*]`   | lane L panics while serving its Nth probe            |
+//! | `upload@L:N[*]`  | lane L's Nth upload-class request (`LoadSet`,        |
+//! |                  | `BuildReference`, `InstallReference`) fails          |
+//! | `compile@L[:N][*]`| lane L's Nth cache-miss compile fails (default N=1) |
+//! | `slow@L:MS`      | lane L sleeps MS ms before every request             |
+//! | `stall@L:N[*]`   | lane L blocks on its Nth probe (watchdog fodder)     |
+//! | `deadline:MS`    | collect watchdog: no reply for MS ms ⇒ stuck workers |
+//! |                  | owing results are declared dead                      |
+//! | `budget:N`       | per-lane restart budget (default 3)                  |
+//! | `backoff:MS`     | respawn backoff base (default 10 ms, doubled per     |
+//! |                  | restart, capped; 0 disables the sleep)               |
+//!
+//! Every injected failure carries the literal prefix `injected fault:` in
+//! its message so tests can distinguish root-cause errors from real bugs.
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// What a single fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic while serving the Nth probe of the incarnation (1-based).
+    PanicOnProbe(usize),
+    /// Fail the Nth upload-class request (`LoadSet` / `BuildReference` /
+    /// `InstallReference`) of the incarnation.
+    UploadFail(usize),
+    /// Fail the Nth cache-miss compile of the incarnation's runtime.
+    CompileFail(usize),
+    /// Sleep this many milliseconds before every request (inherently
+    /// recurring; never consumes a fire).
+    Slow(u64),
+    /// Block (sleep far past any deadline) on the Nth probe — converted
+    /// to a death by the collect watchdog when `deadline:MS` is set.
+    StallOnProbe(usize),
+}
+
+/// One scheduled fault, bound to a worker lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    /// Worker lane (spawn slot) the fault targets.  Respawned
+    /// replacements keep their predecessor's lane.
+    pub lane: usize,
+    pub kind: FaultKind,
+    /// Recurring faults re-arm for every incarnation of the lane;
+    /// one-shot faults fire exactly once across the fleet's lifetime.
+    pub recurring: bool,
+}
+
+/// A deterministic fault schedule plus the supervisor knobs it tunes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// Collect watchdog: with no worker reply for this many ms, live
+    /// workers still owing results are declared dead.  `None` (the
+    /// production default) keeps the blocking wait.
+    pub deadline_ms: Option<u64>,
+    /// Per-lane restart budget override (default 3).
+    pub budget: Option<usize>,
+    /// Respawn backoff base in ms (default 10; doubled per restart).
+    pub backoff_ms: Option<u64>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+            && self.deadline_ms.is_none()
+            && self.budget.is_none()
+            && self.backoff_ms.is_none()
+    }
+
+    /// Parse the comma-separated fault grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split(',') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (tok, recurring) = match tok.strip_suffix('*') {
+                Some(t) => (t, true),
+                None => (tok, false),
+            };
+            let (head, rest) = match tok.split_once('@') {
+                Some((h, r)) => (h, Some(r)),
+                None => match tok.split_once(':') {
+                    Some((h, v)) => {
+                        // plan-level knobs: deadline:MS budget:N backoff:MS
+                        let v: u64 = v
+                            .trim()
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("fault plan '{raw}': {e}"))?;
+                        match h.trim() {
+                            "deadline" => plan.deadline_ms = Some(v),
+                            "budget" => plan.budget = Some(v as usize),
+                            "backoff" => plan.backoff_ms = Some(v),
+                            k => bail!("unknown fault-plan knob '{k}' in '{raw}'"),
+                        }
+                        continue;
+                    }
+                    None => bail!("fault token '{raw}' has no '@lane' target"),
+                },
+            };
+            let rest = rest.expect("fault tokens reach here only with '@'");
+            let (lane_s, arg_s) = match rest.split_once(':') {
+                Some((l, a)) => (l, Some(a)),
+                None => (rest, None),
+            };
+            let lane: usize = lane_s
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault token '{raw}': bad lane: {e}"))?;
+            let arg = |default: Option<u64>| -> Result<u64> {
+                match (arg_s, default) {
+                    (Some(a), _) => a
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("fault token '{raw}': bad count: {e}")),
+                    (None, Some(d)) => Ok(d),
+                    (None, None) => bail!("fault token '{raw}' needs ':N'"),
+                }
+            };
+            let kind = match head.trim() {
+                "panic" => FaultKind::PanicOnProbe(arg(None)? as usize),
+                "upload" => FaultKind::UploadFail(arg(None)? as usize),
+                "compile" => FaultKind::CompileFail(arg(Some(1))? as usize),
+                "slow" => FaultKind::Slow(arg(None)?),
+                "stall" => FaultKind::StallOnProbe(arg(None)? as usize),
+                k => bail!("unknown fault kind '{k}' in '{raw}'"),
+            };
+            if matches!(kind, FaultKind::PanicOnProbe(0) | FaultKind::UploadFail(0)
+                | FaultKind::CompileFail(0) | FaultKind::StallOnProbe(0))
+            {
+                bail!("fault token '{raw}': event ordinals are 1-based");
+            }
+            plan.faults.push(Fault { lane, kind, recurring });
+        }
+        Ok(plan)
+    }
+
+    /// A seeded random schedule over `lanes` workers — the property-test
+    /// generator.  Mixes panics (some recurring, to exercise budget
+    /// exhaustion and degradation), upload failures and slow workers;
+    /// never stalls (no deadline is set, so a stall would hang).  Backoff
+    /// is zeroed so supervised recovery stays fast under test.
+    pub fn random(seed: u64, lanes: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let lanes = lanes.max(1);
+        let n = 1 + rng.below(3);
+        let mut faults = Vec::with_capacity(n);
+        for _ in 0..n {
+            let lane = rng.below(lanes);
+            let kind = match rng.below(4) {
+                0 => FaultKind::UploadFail(1 + rng.below(3)),
+                1 => FaultKind::Slow(1 + rng.below(3) as u64),
+                _ => FaultKind::PanicOnProbe(1 + rng.below(5)),
+            };
+            let recurring = matches!(kind, FaultKind::PanicOnProbe(_)) && rng.below(3) == 0;
+            faults.push(Fault { lane, kind, recurring });
+        }
+        FaultPlan {
+            faults,
+            deadline_ms: None,
+            budget: Some(1 + rng.below(3)),
+            backoff_ms: Some(0),
+        }
+    }
+}
+
+/// Shared fire accounting for one fleet's plan: which faults still have
+/// firings left (one-shot faults deplete; recurring faults never do) plus
+/// the `faults_injected` telemetry counter.  One instance per fleet,
+/// shared with every worker incarnation via `Arc`.
+pub(super) struct FaultState {
+    plan: FaultPlan,
+    /// remaining firings per fault (1 for one-shot, `usize::MAX` for
+    /// recurring — never decremented)
+    fires: Vec<AtomicUsize>,
+    injected: Arc<AtomicUsize>,
+}
+
+impl FaultState {
+    pub(super) fn new(plan: FaultPlan) -> Self {
+        let fires = plan
+            .faults
+            .iter()
+            .map(|f| AtomicUsize::new(if f.recurring { usize::MAX } else { 1 }))
+            .collect();
+        Self { plan, fires, injected: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    pub(super) fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Total discrete fault firings so far (panics, upload failures,
+    /// compile failures, stalls — `slow` is continuous and not counted).
+    pub(super) fn injected(&self) -> usize {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Handle to the injected counter, for hooks that live outside the
+    /// pool (the runtime's compile-fault hook).
+    pub(super) fn injected_counter(&self) -> Arc<AtomicUsize> {
+        self.injected.clone()
+    }
+
+    /// Consume one firing of fault `i`; false once a one-shot is spent.
+    fn try_consume(&self, i: usize) -> bool {
+        let ok = self.fires[i]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| match v {
+                0 => None,
+                usize::MAX => Some(usize::MAX),
+                v => Some(v - 1),
+            })
+            .is_ok();
+        if ok {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    /// Milliseconds lane L sleeps before every request (largest wins).
+    pub(super) fn slow_ms(&self, lane: usize) -> Option<u64> {
+        self.plan
+            .faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::Slow(ms) if f.lane == lane => Some(ms),
+                _ => None,
+            })
+            .max()
+    }
+
+    /// Should lane L panic serving its `nth` probe of this incarnation?
+    pub(super) fn fire_panic(&self, lane: usize, nth: usize) -> bool {
+        self.fire_where(|f| f.lane == lane && f.kind == FaultKind::PanicOnProbe(nth))
+    }
+
+    /// Should lane L stall on its `nth` probe of this incarnation?
+    pub(super) fn fire_stall(&self, lane: usize, nth: usize) -> bool {
+        self.fire_where(|f| f.lane == lane && f.kind == FaultKind::StallOnProbe(nth))
+    }
+
+    /// Should lane L's `nth` upload-class request fail?
+    pub(super) fn fire_upload(&self, lane: usize, nth: usize) -> bool {
+        self.fire_where(|f| f.lane == lane && f.kind == FaultKind::UploadFail(nth))
+    }
+
+    /// Arm a compile fault for a fresh incarnation of lane L: returns the
+    /// 1-based cache-miss ordinal that must fail.  The fire is consumed at
+    /// arm time (the runtime hook has no channel back to this state), so a
+    /// one-shot compile fault arms exactly one incarnation.
+    pub(super) fn arm_compile(&self, lane: usize) -> Option<usize> {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if let FaultKind::CompileFail(nth) = f.kind {
+                if f.lane == lane && self.try_consume(i) {
+                    // arming is not yet a firing — the runtime hook
+                    // increments `injected` when the compile actually fails
+                    self.injected.fetch_sub(1, Ordering::Relaxed);
+                    return Some(nth);
+                }
+            }
+        }
+        None
+    }
+
+    fn fire_where(&self, pred: impl Fn(&Fault) -> bool) -> bool {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if pred(f) && self.try_consume(i) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse(
+            "panic@1:3, upload@0:2*, compile@2, slow@3:25, stall@1:4, \
+             deadline:300, budget:2, backoff:5",
+        )
+        .unwrap();
+        assert_eq!(p.deadline_ms, Some(300));
+        assert_eq!(p.budget, Some(2));
+        assert_eq!(p.backoff_ms, Some(5));
+        assert_eq!(p.faults.len(), 5);
+        assert_eq!(
+            p.faults[0],
+            Fault { lane: 1, kind: FaultKind::PanicOnProbe(3), recurring: false }
+        );
+        assert_eq!(
+            p.faults[1],
+            Fault { lane: 0, kind: FaultKind::UploadFail(2), recurring: true }
+        );
+        assert_eq!(
+            p.faults[2],
+            Fault { lane: 2, kind: FaultKind::CompileFail(1), recurring: false }
+        );
+        assert_eq!(p.faults[3], Fault { lane: 3, kind: FaultKind::Slow(25), recurring: false });
+        assert_eq!(
+            p.faults[4],
+            Fault { lane: 1, kind: FaultKind::StallOnProbe(4), recurring: false }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("panic@1").is_err(), "panic needs :N");
+        assert!(FaultPlan::parse("panic@x:1").is_err(), "bad lane");
+        assert!(FaultPlan::parse("panic@0:0").is_err(), "ordinals are 1-based");
+        assert!(FaultPlan::parse("explode@0:1").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("deadline").is_err(), "knob needs a value");
+        assert!(FaultPlan::parse("turbo:9").is_err(), "unknown knob");
+        assert!(FaultPlan::parse("").unwrap().is_empty(), "empty plan parses empty");
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn one_shot_fires_once_recurring_forever() {
+        let st = FaultState::new(FaultPlan::parse("panic@0:2,upload@1:1*").unwrap());
+        assert!(!st.fire_panic(0, 1), "wrong ordinal must not fire");
+        assert!(!st.fire_panic(1, 2), "wrong lane must not fire");
+        assert!(st.fire_panic(0, 2));
+        assert!(!st.fire_panic(0, 2), "one-shot is spent");
+        assert!(st.fire_upload(1, 1));
+        assert!(st.fire_upload(1, 1), "recurring re-fires every incarnation");
+        assert_eq!(st.injected(), 3);
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_bounded() {
+        for seed in 0..50u64 {
+            let a = FaultPlan::random(seed, 4);
+            let b = FaultPlan::random(seed, 4);
+            assert_eq!(a, b, "seed {seed}: random plan not reproducible");
+            assert!(!a.faults.is_empty() && a.faults.len() <= 3);
+            assert!(a.faults.iter().all(|f| f.lane < 4));
+            assert!(a.deadline_ms.is_none(), "random plans must never stall-and-wait");
+            assert_eq!(a.backoff_ms, Some(0), "random plans keep recovery fast");
+            // stalls would hang without a deadline; the generator must not emit them
+            assert!(a
+                .faults
+                .iter()
+                .all(|f| !matches!(f.kind, FaultKind::StallOnProbe(_))));
+        }
+        assert_ne!(
+            FaultPlan::random(1, 4),
+            FaultPlan::random(2, 4),
+            "different seeds should differ (overwhelmingly)"
+        );
+    }
+}

@@ -27,10 +27,11 @@
 //!   the last client of a model evicts its handles, shards and memo
 //!   entries everywhere.
 //! * **`resize(n)`** grows or shrinks the fleet between phases: the
-//!   front-end keeps host copies of every model's calibration state and
-//!   registered datasets, re-shards them over the new worker count, and
-//!   replays them; probe results are full-set scalars, so the memo stays
-//!   valid across any resize.
+//!   front-end keeps host copies of every model's calibration state,
+//!   registered datasets and installed FP32 references, re-shards them
+//!   over the new worker count, and replays them (references included, so
+//!   no worker pays an extra rebuild sweep); probe results are full-set
+//!   scalars, so the memo stays valid across any resize.
 //! * **Pipelined (double-buffered) set upload** — `load_set`,
 //!   `set_calibration` and `build_references` no longer block on worker
 //!   acks.  Upload jobs ride the same FIFO queue as probes, so the
@@ -70,6 +71,11 @@
 //! The one documented exception is the Pearson (STS-B) head, whose Welford
 //! states combine to the serial value up to float rounding.
 //!
+//! Because every merge is keyed by **global batch index** (not by which
+//! worker produced it), the guarantee survives worker death: a requeued or
+//! re-sharded job recomputes exactly the batch partials the dead worker
+//! owed, and the reduction is insensitive to who computed what.
+//!
 //! ## Fleet-wide caches
 //!
 //! * **Memo** — finished probes are memoized by
@@ -80,9 +86,72 @@
 //!   reference for *its shard*; `build_references` triggers the build
 //!   eagerly, `install_references` seeds it from a host copy (the on-disk
 //!   reference cache), and `fetch_reference` collects the full-set
-//!   reference back for persistence.
+//!   reference back for persistence.  The front-end retains the installed
+//!   / fetched full-set copy in host memory so respawn and resize can
+//!   re-install shards without another forward sweep.
+//!
+//! ## Failure semantics (the self-healing supervisor)
+//!
+//! The fleet is supervised: worker failure is contained, repaired and
+//! accounted for, not propagated.  The moving parts, in the order they
+//! engage:
+//!
+//! 1. **Death notices.**  A worker that panics sends one final
+//!    `DEATH_NOTICE` message and exits *without* answering the job it was
+//!    serving.  mpsc channels are FIFO per sender, so every reply the dead
+//!    incarnation did produce is already queued ahead of the notice — once
+//!    the notice is processed, no stale reply from that incarnation can
+//!    exist.
+//! 2. **Respawn with bounded restarts.**  The supervisor (which runs
+//!    inline on the coordinator thread, inside `collect` and the submit
+//!    paths) respawns the dead worker's *lane* with exponential backoff,
+//!    up to a per-lane restart budget (default 3, tunable via the fault
+//!    plan's `budget:N`).  The replacement gets a **fresh incarnation id**
+//!    (`widx`), so anything late from a previous incarnation matches no
+//!    pending slot and is dropped.
+//! 3. **State replay.**  The replacement is rebuilt from the front-end's
+//!    host copies: calibration state, its shard of every registered set,
+//!    and its slice of any retained FP32 reference (no rebuild sweep).
+//! 4. **Requeue.**  Every tracked job slot the dead incarnation still owed
+//!    (its in-flight job plus everything queued behind it) retains its
+//!    original request; the supervisor re-sends those to the replacement
+//!    under the same job id.  Merges are keyed by global batch index, so
+//!    results stay bit-identical to the fault-free run.
+//! 5. **Graceful degradation.**  When a lane exhausts its restart budget
+//!    it is *reaped* — removed from the worker vec entirely, so `workers()`
+//!    and round-robin dispatch see the true live count — and the fleet
+//!    shrinks to the survivors: host state is re-sharded over the smaller
+//!    fleet and every orphaned job is re-dispatched under the new sharding
+//!    (waiters follow a redirect from the old job id).  Only at **zero**
+//!    live workers do jobs fail, with the stored root-cause death reasons
+//!    in the error.
+//! 6. **Deadline watchdog.**  With the fault plan's `deadline:MS` set,
+//!    `collect` waits at most MS ms between worker replies; on a timeout,
+//!    every live worker still owing a result is presumed stuck and
+//!    converted into a death (respawn → requeue as above).  The marooned
+//!    thread is detached, never joined; its eventual replies carry a
+//!    retired `widx` and are dropped.  Off by default: production waits
+//!    indefinitely.
+//!
+//! Fire-and-forget uploads keep their PR-5 semantics under faults: an
+//! injected (or real) `LoadSet`/`BuildReference` failure is recorded in
+//! the worker's shard slot and surfaced by the first tracked job that
+//! touches it, with the root cause (`injected fault: …`) intact.
+//!
+//! Telemetry: [`EvalFleet::failure_stats`] reports `worker_restarts`,
+//! `jobs_requeued`, `faults_injected`, degradation events and the last
+//! death reasons.
+//!
+//! Documented limitation: a job requeued after a death observes the
+//! front-end's *latest* host state — if a set was replaced while probes on
+//! the old data were still in flight, the requeued probe evaluates the new
+//! data.  Pipelines never do this (they drain probes before reloading a
+//! set), and the property/e2e tests never hit it.
 
+mod fault;
 mod worker;
+
+pub use fault::{Fault, FaultKind, FaultPlan};
 
 use crate::adaround::AdaRoundJob;
 use crate::data::DataSet;
@@ -94,6 +163,7 @@ use crate::quant::ActRanges;
 use crate::sensitivity::FitBatchRaw;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
+use fault::FaultState;
 use std::collections::HashMap;
 use std::ops::Range;
 use std::path::{Path, PathBuf};
@@ -101,6 +171,7 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Identifies a registered eval set within the fleet (per model).
 pub type SetKey = u64;
@@ -109,6 +180,14 @@ pub type SetKey = u64;
 pub const CALIB_SET: SetKey = 0;
 /// Conventional key for the validation set (Phase 2).
 pub const VAL_SET: SetKey = 1;
+
+/// Per-lane restart budget when the fault plan doesn't override it.
+const DEFAULT_RESTART_BUDGET: usize = 3;
+/// Respawn backoff base in ms (doubled per restart, capped).
+const DEFAULT_BACKOFF_MS: u64 = 10;
+const MAX_BACKOFF_MS: u64 = 500;
+/// How many death reasons the fleet retains for error reporting.
+const LAST_DEATHS_CAP: usize = 8;
 
 /// What a probe measures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -121,7 +200,10 @@ pub enum ProbeKind {
 
 /// Host-only request shipped to a worker.  Everything here is `Send`; no
 /// backend state ever crosses the channel.  Payloads sit behind `Arc` where
-/// an N-worker broadcast would otherwise deep-copy them N times.
+/// an N-worker broadcast would otherwise deep-copy them N times.  `Clone`
+/// because tracked jobs retain their request until resolved, so the
+/// supervisor can requeue a dead worker's slots onto its replacement.
+#[derive(Clone)]
 enum Request {
     /// Install calibrated quantizer state (host data) on the worker's
     /// handle for `model`.
@@ -205,15 +287,43 @@ pub struct WorkerStats {
     pub models_open: usize,
 }
 
+/// Failure telemetry for the supervised fleet (see the module docs'
+/// failure-semantics section) — surfaced by driver reports and asserted
+/// by the self-healing acceptance tests.
+#[derive(Clone, Debug, Default)]
+pub struct FailureStats {
+    /// successful worker respawns after a death notice or watchdog firing
+    pub worker_restarts: usize,
+    /// tracked job slots re-sent to a replacement or re-dispatched onto
+    /// the survivors after a degradation
+    pub jobs_requeued: usize,
+    /// discrete fault firings from the plan (panics, upload/compile
+    /// failures, stalls; continuous `slow` lanes are not counted)
+    pub faults_injected: usize,
+    /// one entry per lane retired after exhausting its restart budget
+    pub degraded_events: Vec<String>,
+    /// most recent worker death reasons (capped ring)
+    pub last_deaths: Vec<String>,
+}
+
+impl FailureStats {
+    /// Anything worth reporting?
+    pub fn any(&self) -> bool {
+        self.worker_restarts > 0
+            || self.jobs_requeued > 0
+            || self.faults_injected > 0
+            || !self.degraded_events.is_empty()
+            || !self.last_deaths.is_empty()
+    }
+}
+
 type ResMsg = (u64, usize, Result<Partial, String>);
 
 /// Sentinel job id a worker sends right before its thread exits on a
-/// panic.  The collect loop turns it into errors on every pending slot of
-/// that worker, so jobs already pipelined into the dead worker's queue
-/// fail loudly instead of hanging the coordinator (the fleet keeps its
-/// own `res_tx` alive for elastic spawn, so channel disconnect can no
-/// longer signal total worker death).  Job ids count up from 0 and can
-/// never reach this value in practice.
+/// panic.  The supervisor turns it into a respawn of the worker's lane and
+/// a requeue of every slot the dead incarnation still owed — see the
+/// module docs' failure-semantics section.  Job ids count up from 0 and
+/// can never reach this value in practice.
 const DEATH_NOTICE: u64 = u64::MAX;
 
 /// Memo key: `(model id, set, kind, config, override digest)` — overrides
@@ -222,32 +332,63 @@ const DEATH_NOTICE: u64 = u64::MAX;
 /// never collide.
 type MemoKey = (u64, SetKey, ProbeKind, QuantConfig, u64);
 
+/// One live fleet worker.
+///
+/// * `widx` — the **incarnation id**, unique across the fleet's lifetime
+///   and stamped on every reply; a respawned replacement always gets a
+///   fresh one, so late replies from a previous incarnation match no
+///   pending slot.
+/// * `lane` — the stable **supervision slot**: a replacement keeps its
+///   predecessor's lane, which is what fault plans target and what the
+///   restart budget is counted against.  Fresh spawns (including
+///   `resize` growth) take lanes from a monotone counter, so a lane is
+///   never accidentally reused after its worker was reaped.
 struct Worker {
+    widx: usize,
+    lane: usize,
+    /// restarts consumed by this lane so far (carried across incarnations)
+    restarts: usize,
     tx: Option<mpsc::Sender<Job>>,
     join: Option<JoinHandle<()>>,
 }
 
-/// An in-flight tracked job: per-worker result slots plus how many are
-/// still outstanding (broadcasts expect one per worker, single-worker
-/// dispatch exactly one).
+/// One worker's result slot in a tracked job.  The request is retained
+/// until the slot resolves so the supervisor can requeue it if the owing
+/// incarnation dies.
+struct PendSlot {
+    /// incarnation that currently owes this slot's result
+    widx: usize,
+    req: Option<Request>,
+    res: Option<Result<Partial, String>>,
+}
+
+/// An in-flight tracked job: per-worker result slots (in dispatch = global
+/// batch order) plus how many are still outstanding.
 struct Pending {
-    slots: Vec<Option<Result<Partial, String>>>,
+    slots: Vec<PendSlot>,
     remaining: usize,
 }
 
-/// Host-side replayable state for one attached model — what `resize`
-/// re-shards onto a changed worker set.
+/// Host-side replayable state for one attached model — what `resize` and
+/// the supervisor's respawn path re-shard onto a changed worker set.
 struct ModelState {
     id: u64,
     attached: usize,
     calib: Option<(ActRanges, HashMap<u8, Vec<Vec<f32>>>)>,
     sets: HashMap<SetKey, DataSet>,
+    /// full-set FP32 reference logits retained from `install_references`
+    /// / `fetch_reference`, re-installed shard-wise on replay so restored
+    /// references survive resize and respawn without a rebuild sweep
+    refs: HashMap<SetKey, Vec<Tensor>>,
 }
 
 /// The process-wide elastic worker fleet.  See the module docs.
 ///
 /// The fleet handle is intended to be driven from one thread (the
 /// coordinator); the workers it owns are where the parallelism lives.
+/// Supervision (death handling, respawn, requeue, degradation) runs
+/// inline on the coordinator thread inside `collect` and the submit
+/// paths, so it is race-free with job dispatch by construction.
 pub struct EvalFleet {
     dir: PathBuf,
     manifest: Manifest,
@@ -264,15 +405,53 @@ pub struct EvalFleet {
     opens: Arc<AtomicUsize>,
     state: Mutex<HashMap<String, ModelState>>,
     next_model_id: AtomicU64,
+    /// monotone incarnation-id allocator (see [`Worker::widx`])
+    next_widx: AtomicUsize,
+    /// monotone lane allocator for fresh (non-replacement) spawns
+    next_lane: AtomicUsize,
+    /// fault schedule + fire accounting (empty plan in production)
+    faults: Arc<FaultState>,
+    worker_restarts: AtomicUsize,
+    jobs_requeued: AtomicUsize,
+    degraded: Mutex<Vec<String>>,
+    last_deaths: Mutex<Vec<String>>,
+    /// old job id → new job id for jobs re-dispatched after a degradation;
+    /// collectors follow (and consume) these
+    redirects: Mutex<HashMap<u64, u64>>,
 }
 
 impl EvalFleet {
     /// Spawn a fleet of `workers` (≥ 1) threads over the artifacts at
     /// `dir`.  Workers build their private runtime at spawn; models
     /// compile lazily on first use.
+    ///
+    /// The fault plan (normally empty) is resolved from, in precedence
+    /// order: the `MPQ_FAULT_PLAN` environment variable, then the
+    /// manifest's optional `"fault_plan"` key.  Use
+    /// [`EvalFleet::with_faults`] to pin one explicitly.
     pub fn new(dir: impl AsRef<Path>, workers: usize) -> Result<Rc<Self>> {
-        let dir = dir.as_ref().to_path_buf();
+        Self::build(dir.as_ref().to_path_buf(), workers, None)
+    }
+
+    /// Spawn a fleet with an explicit [`FaultPlan`] — wins over the
+    /// environment and the manifest, so dedicated fault tests stay
+    /// deterministic even under the fault-injection CI job.
+    pub fn with_faults(dir: impl AsRef<Path>, workers: usize, plan: FaultPlan) -> Result<Rc<Self>> {
+        Self::build(dir.as_ref().to_path_buf(), workers, Some(plan))
+    }
+
+    fn build(dir: PathBuf, workers: usize, explicit: Option<FaultPlan>) -> Result<Rc<Self>> {
         let manifest = Manifest::load(&dir)?;
+        let plan = match explicit {
+            Some(p) => p,
+            None => match std::env::var("MPQ_FAULT_PLAN") {
+                Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s)?,
+                _ => match manifest.fault_plan.as_deref() {
+                    Some(s) => FaultPlan::parse(s)?,
+                    None => FaultPlan::default(),
+                },
+            },
+        };
         let (res_tx, res_rx) = mpsc::channel::<ResMsg>();
         let fleet = Rc::new(Self {
             dir,
@@ -288,6 +467,14 @@ impl EvalFleet {
             opens: Arc::new(AtomicUsize::new(0)),
             state: Mutex::new(HashMap::new()),
             next_model_id: AtomicU64::new(0),
+            next_widx: AtomicUsize::new(0),
+            next_lane: AtomicUsize::new(0),
+            faults: Arc::new(FaultState::new(plan)),
+            worker_restarts: AtomicUsize::new(0),
+            jobs_requeued: AtomicUsize::new(0),
+            degraded: Mutex::new(Vec::new()),
+            last_deaths: Mutex::new(Vec::new()),
+            redirects: Mutex::new(HashMap::new()),
         });
         fleet.spawn_workers(workers.max(1))?;
         Ok(fleet)
@@ -298,8 +485,14 @@ impl EvalFleet {
         &self.dir
     }
 
+    /// Live worker count (dead lanes are reaped, so this is exact).
     pub fn workers(&self) -> usize {
         self.workers.lock().unwrap().len()
+    }
+
+    /// The fault plan this fleet was built with (empty in production).
+    pub fn fault_plan(&self) -> &FaultPlan {
+        self.faults.plan()
     }
 
     /// Probes actually dispatched to workers (memo misses), fleet-wide.
@@ -325,9 +518,21 @@ impl EvalFleet {
         self.opens.load(Ordering::Relaxed)
     }
 
+    /// Failure telemetry: restarts, requeues, injected faults, degradation
+    /// events and the last stored death reasons.
+    pub fn failure_stats(&self) -> FailureStats {
+        FailureStats {
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            jobs_requeued: self.jobs_requeued.load(Ordering::Relaxed),
+            faults_injected: self.faults.injected(),
+            degraded_events: self.degraded.lock().unwrap().clone(),
+            last_deaths: self.last_deaths.lock().unwrap().clone(),
+        }
+    }
+
     /// Per-worker compile-cache counters, in worker order.
     pub fn worker_stats(&self) -> Result<Vec<WorkerStats>> {
-        let id = self.submit_broadcast(true, |_| Request::Stats)?;
+        let id = self.submit_broadcast(true, |_, _| Request::Stats)?;
         let mut out = Vec::new();
         for (_, p) in self.collect(id)? {
             match p {
@@ -339,15 +544,17 @@ impl EvalFleet {
     }
 
     /// Grow or shrink the fleet to `n` workers (≥ 1) between phases.
-    /// Host-side model state (calibration, datasets) is re-sharded and
-    /// replayed onto the new worker set; the probe memo survives (probe
-    /// results are full-set values, independent of sharding).  Per-worker
-    /// reference caches are rebuilt lazily on the next SQNR probe.
+    /// Host-side model state (calibration, datasets, retained FP32
+    /// references) is re-sharded and replayed onto the new worker set; the
+    /// probe memo survives (probe results are full-set values, independent
+    /// of sharding).  Sets whose reference was installed or fetched are
+    /// re-installed from the host copy — no rebuild sweep.
     pub fn resize(&self, n: usize) -> Result<()> {
         let n = n.max(1);
         if !self.pending.lock().unwrap().is_empty() {
             bail!("fleet resize with tracked jobs still in flight");
         }
+        self.poll_notices()?;
         let cur = self.workers();
         if n == cur {
             return Ok(());
@@ -368,21 +575,36 @@ impl EvalFleet {
 
     // -- internals -----------------------------------------------------------
 
+    /// Spawn one worker thread on `lane` with a fresh incarnation id.
+    /// Does not wait for init and does not touch the worker vec.
+    fn spawn_one(
+        &self,
+        lane: usize,
+        init_tx: mpsc::Sender<(usize, Result<(), String>)>,
+    ) -> Result<Worker> {
+        let widx = self.next_widx.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (d, rtx) = (self.dir.clone(), self.res_tx.clone());
+        let opens = self.opens.clone();
+        let faults = self.faults.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("mpq-fleet-{widx}"))
+            .spawn(move || worker::worker_main(widx, lane, d, rx, rtx, init_tx, opens, faults))
+            .map_err(|e| anyhow!("spawning fleet worker {widx}: {e}"))?;
+        Ok(Worker { widx, lane, restarts: 0, tx: Some(tx), join: Some(join) })
+    }
+
+    /// Spawn `n` fresh workers at the tail (initial spawn and `resize`
+    /// growth), waiting for every init and rolling back the batch on any
+    /// failure.
     fn spawn_workers(&self, n: usize) -> Result<()> {
         let (init_tx, init_rx) = mpsc::channel::<(usize, Result<(), String>)>();
         {
             let mut ws = self.workers.lock().unwrap();
-            let base = ws.len();
-            for i in 0..n {
-                let widx = base + i;
-                let (tx, rx) = mpsc::channel::<Job>();
-                let (d, rtx, itx) = (self.dir.clone(), self.res_tx.clone(), init_tx.clone());
-                let opens = self.opens.clone();
-                let join = std::thread::Builder::new()
-                    .name(format!("mpq-fleet-{widx}"))
-                    .spawn(move || worker::worker_main(widx, d, rx, rtx, itx, opens))
-                    .map_err(|e| anyhow!("spawning fleet worker {widx}: {e}"))?;
-                ws.push(Worker { tx: Some(tx), join: Some(join) });
+            for _ in 0..n {
+                let lane = self.next_lane.fetch_add(1, Ordering::Relaxed);
+                let w = self.spawn_one(lane, init_tx.clone())?;
+                ws.push(w);
             }
         }
         drop(init_tx);
@@ -415,10 +637,38 @@ impl EvalFleet {
         Ok(())
     }
 
-    /// Re-shard and replay every attached model's host state onto the
-    /// current worker set (after a resize).
-    fn replay_state(&self) -> Result<()> {
-        let snapshot: Vec<(String, Option<(ActRanges, HashMap<u8, Vec<Vec<f32>>>)>, Vec<(SetKey, DataSet)>)> = {
+    /// Spawn a replacement on a dead worker's lane and wait for its init.
+    fn spawn_replacement(&self, lane: usize) -> Result<Worker> {
+        let (init_tx, init_rx) = mpsc::channel::<(usize, Result<(), String>)>();
+        let mut w = self.spawn_one(lane, init_tx)?;
+        match init_rx.recv() {
+            Ok((_, Ok(()))) => Ok(w),
+            Ok((_, Err(e))) => {
+                if let Some(j) = w.join.take() {
+                    let _ = j.join();
+                }
+                bail!("replacement init failed: {e}")
+            }
+            Err(_) => {
+                if let Some(j) = w.join.take() {
+                    let _ = j.join();
+                }
+                bail!("replacement exited before reporting init")
+            }
+        }
+    }
+
+    /// The replay requests rebuilding worker position `pos` of `n` from
+    /// host state: calibration, its shard of every set, and its slice of
+    /// every retained FP32 reference.
+    fn replay_requests_for(&self, pos: usize, n: usize) -> Result<Vec<Request>> {
+        type Snap = (
+            String,
+            Option<(ActRanges, HashMap<u8, Vec<Vec<f32>>>)>,
+            Vec<(SetKey, DataSet)>,
+            HashMap<SetKey, Vec<Tensor>>,
+        );
+        let snapshot: Vec<Snap> = {
             let st = self.state.lock().unwrap();
             st.iter()
                 .map(|(name, ms)| {
@@ -426,38 +676,86 @@ impl EvalFleet {
                         name.clone(),
                         ms.calib.clone(),
                         ms.sets.iter().map(|(&k, ds)| (k, ds.clone())).collect(),
+                        ms.refs.clone(),
                     )
                 })
                 .collect()
         };
-        let n = self.workers();
-        for (name, calib, sets) in snapshot {
+        let mut out = Vec::new();
+        for (name, calib, sets, refs) in snapshot {
             let model: Arc<str> = Arc::from(name.as_str());
             if let Some((ranges, w_scales)) = calib {
-                self.fire(|_| Request::Calibrate {
-                    model: model.clone(),
-                    ranges: ranges.clone(),
-                    w_scales: w_scales.clone(),
-                })?;
+                out.push(Request::Calibrate { model: model.clone(), ranges, w_scales });
             }
             let batch = self.manifest.model(&name)?.batch;
             for (key, ds) in sets {
                 let batches = ds.batches(batch)?;
                 let labels = ds.labels_prefix(batch)?;
-                let ranges = shard_ranges(batches.len(), n);
-                self.fire(|w| {
-                    let r = &ranges[w];
-                    Request::LoadSet {
+                let r = &shard_ranges(batches.len(), n)[pos];
+                out.push(Request::LoadSet {
+                    model: model.clone(),
+                    key,
+                    batches: batches[r.clone()].to_vec(),
+                    labels: labels
+                        .slice_rows(r.start * batch, (r.end - r.start) * batch)
+                        .expect("labels_prefix is batch-aligned"),
+                    first_batch: r.start,
+                });
+                if let Some(full) = refs.get(&key) {
+                    let rr = &shard_ranges(full.len(), n)[pos];
+                    out.push(Request::InstallReference {
                         model: model.clone(),
-                        key,
-                        batches: batches[r.clone()].to_vec(),
-                        labels: labels
-                            .slice_rows(r.start * batch, (r.end - r.start) * batch)
-                            .expect("labels_prefix is batch-aligned"),
-                        first_batch: r.start,
-                    }
-                })?;
+                        set: key,
+                        batches: full[rr.clone()].to_vec(),
+                    });
+                }
             }
+        }
+        Ok(out)
+    }
+
+    /// Re-shard and replay every attached model's host state onto the
+    /// current worker set (after a resize or a degradation).  Replay jobs
+    /// are fire-and-forget: errors are recorded worker-side and surfaced
+    /// by the first tracked job that touches the broken state.
+    fn replay_state(&self) -> Result<()> {
+        let n = self.workers();
+        if n == 0 {
+            return Ok(());
+        }
+        for pos in 0..n {
+            let reqs = self.replay_requests_for(pos, n)?;
+            let tx = {
+                let ws = self.workers.lock().unwrap();
+                ws.get(pos).and_then(|w| w.tx.clone())
+            };
+            let Some(tx) = tx else { continue };
+            for req in reqs {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                // a send failure means the worker just died; its death
+                // notice is already queued and will be handled on the next
+                // poll
+                let _ = tx.send(Job { id, req });
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay host state onto one (just-respawned) worker.
+    fn replay_worker(&self, widx: usize) -> Result<()> {
+        let (pos, n, tx) = {
+            let ws = self.workers.lock().unwrap();
+            match ws.iter().position(|w| w.widx == widx) {
+                Some(pos) => match ws[pos].tx.clone() {
+                    Some(tx) => (pos, ws.len(), tx),
+                    None => return Ok(()),
+                },
+                None => return Ok(()),
+            }
+        };
+        for req in self.replay_requests_for(pos, n)? {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Job { id, req });
         }
         Ok(())
     }
@@ -481,82 +779,417 @@ impl EvalFleet {
         if gone {
             self.memo.lock().unwrap().retain(|k, _| k.0 != model_id);
             let m: Arc<str> = Arc::from(model);
-            let _ = self.fire(|_| Request::Detach { model: m.clone() });
+            let _ = self.fire(|_, _| Request::Detach { model: m.clone() });
         }
     }
 
-    /// Send one job to every worker.  With `track`, a [`Pending`] entry is
-    /// created and [`Self::collect`] must be called; without, the job is
-    /// fire-and-forget — workers still reply, and the unknown-id replies
-    /// are dropped by the collect loop.
-    fn submit_broadcast(&self, track: bool, mk: impl Fn(usize) -> Request) -> Result<u64> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let ws = self.workers.lock().unwrap();
-        if track {
-            self.pending.lock().unwrap().insert(
-                id,
-                Pending {
-                    slots: (0..ws.len()).map(|_| None).collect(),
-                    remaining: ws.len(),
-                },
-            );
+    /// "Everything is dead" error text, carrying the stored root causes
+    /// instead of a bare channel-disconnect message.
+    fn no_workers_msg(&self) -> String {
+        let deaths = self.last_deaths.lock().unwrap();
+        if deaths.is_empty() {
+            "all fleet workers exited".to_string()
+        } else {
+            format!("all fleet workers exited; last deaths: {}", deaths.join("; "))
         }
-        for (w, worker) in ws.iter().enumerate() {
-            let sent = worker
-                .tx
-                .as_ref()
-                .ok_or_else(|| anyhow!("fleet worker {w} is gone (dead or shut down)"))
-                .and_then(|tx| {
-                    tx.send(Job { id, req: mk(w) })
-                        .map_err(|_| anyhow!("fleet worker {w} is gone"))
-                });
-            if let Err(e) = sent {
-                if track {
-                    self.pending.lock().unwrap().remove(&id);
-                }
-                return Err(e);
+    }
+
+    fn record_death(&self, widx: usize, reason: &str) {
+        let mut deaths = self.last_deaths.lock().unwrap();
+        deaths.push(format!("worker {widx}: {reason}"));
+        let overflow = deaths.len().saturating_sub(LAST_DEATHS_CAP);
+        if overflow > 0 {
+            deaths.drain(..overflow);
+        }
+    }
+
+    /// Drain every result message already queued, routing replies into
+    /// pending slots and deaths into the supervisor.  Submit paths call
+    /// this before snapshotting the worker set so they never dispatch to a
+    /// worker whose death notice is already waiting.
+    fn poll_notices(&self) -> Result<()> {
+        loop {
+            let msg = { self.res_rx.lock().unwrap().try_recv() };
+            match msg {
+                Ok(m) => self.route(m)?,
+                Err(_) => return Ok(()), // empty (the fleet's own sender keeps it connected)
             }
         }
-        Ok(id)
     }
 
-    fn fire(&self, mk: impl Fn(usize) -> Request) -> Result<()> {
+    /// Route one result message: fill the matching pending slot, or hand a
+    /// death notice to the supervisor.  Replies whose `(job, widx)` pair
+    /// matches no open slot — fire-and-forget acks, duplicates from a
+    /// retried dispatch, stragglers from a retired incarnation — are
+    /// dropped.
+    fn route(&self, (jid, w, r): ResMsg) -> Result<()> {
+        if jid == DEATH_NOTICE {
+            let reason = match r {
+                Err(e) => e,
+                Ok(_) => "worker died".into(),
+            };
+            return self.handle_death(w, &reason, true);
+        }
+        let mut pending = self.pending.lock().unwrap();
+        if let Some(p) = pending.get_mut(&jid) {
+            if let Some(slot) = p.slots.iter_mut().find(|s| s.widx == w && s.res.is_none()) {
+                slot.res = Some(r);
+                slot.req = None; // resolved — no longer needed for requeue
+                p.remaining -= 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Supervise a worker death: respawn the lane within its restart
+    /// budget (exponential backoff), replay host state onto the
+    /// replacement and requeue everything the dead incarnation owed; or,
+    /// budget exhausted, degrade to the survivors.  `true_death` means the
+    /// thread actually exited (join it); the watchdog passes `false` for a
+    /// stuck-but-alive thread, which is detached instead.
+    fn handle_death(&self, dead: usize, reason: &str, true_death: bool) -> Result<()> {
+        let (lane, restarts, join) = {
+            let mut ws = self.workers.lock().unwrap();
+            let Some(pos) = ws.iter().position(|w| w.widx == dead) else {
+                return Ok(()); // already handled (e.g. watchdog then notice)
+            };
+            let w = &mut ws[pos];
+            w.tx.take();
+            (w.lane, w.restarts, w.join.take())
+        };
+        self.record_death(dead, reason);
+        if true_death {
+            if let Some(j) = join {
+                let _ = j.join();
+            }
+        }
+        // else: drop the handle — the marooned thread's eventual replies
+        // carry a retired widx and are dropped by `route`
+
+        let budget = self.faults.plan().budget.unwrap_or(DEFAULT_RESTART_BUDGET);
+        let base = self.faults.plan().backoff_ms.unwrap_or(DEFAULT_BACKOFF_MS);
+        let mut attempts = restarts;
+        while attempts < budget {
+            let wait = backoff_ms(base, attempts);
+            if wait > 0 {
+                std::thread::sleep(Duration::from_millis(wait));
+            }
+            attempts += 1;
+            match self.spawn_replacement(lane) {
+                Ok(mut neww) => {
+                    neww.restarts = attempts;
+                    let new_widx = neww.widx;
+                    {
+                        let mut ws = self.workers.lock().unwrap();
+                        match ws.iter().position(|w| w.widx == dead) {
+                            Some(pos) => ws[pos] = neww,
+                            None => ws.push(neww), // unreachable: entries only leave via degrade
+                        }
+                    }
+                    self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    self.replay_worker(new_widx)?;
+                    self.requeue(dead, new_widx);
+                    return Ok(());
+                }
+                Err(e) => {
+                    self.record_death(dead, &format!("lane {lane} respawn attempt {attempts}: {e:#}"));
+                }
+            }
+        }
+        self.degrade(dead, lane, reason)
+    }
+
+    /// Move every unresolved slot of the dead incarnation onto its
+    /// replacement, re-sending the retained requests under the same job
+    /// ids.  Safe because the dead incarnation's replies all preceded its
+    /// death notice (per-sender FIFO) — nothing stale can fill the moved
+    /// slots, and the replacement serves its replayed state first (queue
+    /// order).
+    fn requeue(&self, dead: usize, new_widx: usize) {
+        let new_tx = {
+            let ws = self.workers.lock().unwrap();
+            ws.iter().find(|w| w.widx == new_widx).and_then(|w| w.tx.clone())
+        };
+        let mut moved = 0usize;
+        let mut pending = self.pending.lock().unwrap();
+        for (id, p) in pending.iter_mut() {
+            for slot in p.slots.iter_mut().filter(|s| s.widx == dead && s.res.is_none()) {
+                slot.widx = new_widx;
+                let sent = match (&new_tx, &slot.req) {
+                    (Some(tx), Some(req)) => tx.send(Job { id: *id, req: req.clone() }).is_ok(),
+                    _ => false,
+                };
+                if sent {
+                    moved += 1;
+                } else {
+                    slot.res = Some(Err(
+                        "job lost with its worker and could not be requeued".to_string(),
+                    ));
+                    slot.req = None;
+                    p.remaining -= 1;
+                }
+            }
+        }
+        if moved > 0 {
+            self.jobs_requeued.fetch_add(moved, Ordering::Relaxed);
+        }
+    }
+
+    /// Restart budget exhausted: reap the dead lane, shrink to the
+    /// survivors (re-sharding host state over them) and re-dispatch every
+    /// orphaned job under the new sharding.  Only at zero live workers do
+    /// the orphans fail — with the stored death reasons.
+    fn degrade(&self, dead: usize, lane: usize, reason: &str) -> Result<()> {
+        {
+            let mut ws = self.workers.lock().unwrap();
+            if let Some(pos) = ws.iter().position(|w| w.widx == dead) {
+                ws.remove(pos);
+            }
+        }
+        let survivors = self.workers();
+        self.degraded.lock().unwrap().push(format!(
+            "lane {lane} (worker {dead}) retired after exhausting its restart budget \
+             ({reason}); continuing on {survivors} worker(s)"
+        ));
+        if survivors == 0 {
+            let msg = self.no_workers_msg();
+            let mut pending = self.pending.lock().unwrap();
+            for p in pending.values_mut() {
+                for slot in p.slots.iter_mut() {
+                    if slot.res.is_none() {
+                        slot.res = Some(Err(msg.clone()));
+                        slot.req = None;
+                        p.remaining -= 1;
+                    }
+                }
+            }
+            return Ok(());
+        }
+        self.replay_state()?;
+        self.redispatch_orphans(dead)
+    }
+
+    /// Re-dispatch every tracked job the dead worker still owed as a fresh
+    /// job over the surviving fleet (the survivors' in-flight copies of
+    /// the old job are dropped — a shard under the old worker count is
+    /// useless once the fleet re-shards).  Waiters find their way to the
+    /// new id through `redirects`.
+    fn redispatch_orphans(&self, dead: usize) -> Result<()> {
+        let orphans: Vec<(u64, Pending)> = {
+            let mut pending = self.pending.lock().unwrap();
+            let ids: Vec<u64> = pending
+                .iter()
+                .filter(|(_, p)| p.slots.iter().any(|s| s.widx == dead && s.res.is_none()))
+                .map(|(&id, _)| id)
+                .collect();
+            ids.into_iter().map(|id| (id, pending.remove(&id).unwrap())).collect()
+        };
+        for (old_id, p) in orphans {
+            let req = p
+                .slots
+                .iter()
+                .find(|s| s.widx == dead && s.res.is_none())
+                .and_then(|s| s.req.clone());
+            let redo = match req {
+                // per-worker-different payload: rebuild the shards from the
+                // retained host reference
+                Some(Request::InstallReference { model, set, .. }) => {
+                    self.submit_install_from_state(&model, set)
+                }
+                // single-worker job, deterministic on any worker
+                Some(Request::AdaRound { model, job }) => {
+                    self.submit_one(0, Request::AdaRound { model, job })
+                }
+                // broadcasts with per-worker-identical payloads (probes,
+                // FIT passes, stats, reference fetches)
+                Some(req) => self.submit_broadcast(true, move |_, _| req.clone()),
+                None => Err(anyhow!(
+                    "job {old_id} was lost with worker {dead} and left no retained request"
+                )),
+            };
+            match redo {
+                Ok(new_id) => {
+                    self.jobs_requeued.fetch_add(1, Ordering::Relaxed);
+                    self.redirects.lock().unwrap().insert(old_id, new_id);
+                }
+                Err(e) => {
+                    // park a resolved-failed entry under the old id so the
+                    // waiting collector surfaces the error instead of
+                    // hitting an unknown job
+                    self.pending.lock().unwrap().insert(
+                        old_id,
+                        Pending {
+                            slots: vec![PendSlot {
+                                widx: dead,
+                                req: None,
+                                res: Some(Err(format!("{e:#}"))),
+                            }],
+                            remaining: 0,
+                        },
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fresh tracked `InstallReference` broadcast built from the retained
+    /// host reference (used when re-dispatching an orphaned install).
+    fn submit_install_from_state(&self, model: &Arc<str>, set: SetKey) -> Result<u64> {
+        let full: Vec<Tensor> = {
+            let st = self.state.lock().unwrap();
+            st.get(&**model)
+                .and_then(|ms| ms.refs.get(&set))
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow!("no retained host reference to re-dispatch the lost install job")
+                })?
+        };
+        let model = model.clone();
+        self.submit_broadcast(true, move |pos, n| Request::InstallReference {
+            model: model.clone(),
+            set,
+            batches: full[shard_ranges(full.len(), n)[pos].clone()].to_vec(),
+        })
+    }
+
+    /// Deadline watchdog: no worker replied within the plan's
+    /// `deadline:MS` window, so every live worker still owing a result is
+    /// presumed stuck and converted into a (non-joining) death — the
+    /// supervisor respawns or degrades exactly as for a panic.
+    fn watchdog_fire(&self) -> Result<()> {
+        let owing: Vec<usize> = {
+            let pending = self.pending.lock().unwrap();
+            let ws = self.workers.lock().unwrap();
+            ws.iter()
+                .filter(|w| w.tx.is_some())
+                .map(|w| w.widx)
+                .filter(|&widx| {
+                    pending
+                        .values()
+                        .any(|p| p.slots.iter().any(|s| s.widx == widx && s.res.is_none()))
+                })
+                .collect()
+        };
+        for widx in owing {
+            self.handle_death(widx, "no reply within the watchdog deadline (presumed stuck)", false)?;
+        }
+        Ok(())
+    }
+
+    /// Send one job to every live worker.  With `track`, a [`Pending`]
+    /// entry is created and [`Self::collect`] must be called; without, the
+    /// job is fire-and-forget — workers still reply, and the unknown-id
+    /// replies are dropped.  `mk(pos, n)` builds the request for worker
+    /// position `pos` of `n`, so shard-dependent payloads stay correct if
+    /// a death shrinks the fleet between attempts (each retry uses a fresh
+    /// job id, so replies to an abandoned half-dispatch can never fill the
+    /// retry's slots).
+    fn submit_broadcast(&self, track: bool, mk: impl Fn(usize, usize) -> Request) -> Result<u64> {
+        loop {
+            self.poll_notices()?;
+            let targets: Vec<(usize, mpsc::Sender<Job>)> = {
+                let ws = self.workers.lock().unwrap();
+                ws.iter()
+                    .filter_map(|w| w.tx.as_ref().map(|tx| (w.widx, tx.clone())))
+                    .collect()
+            };
+            if targets.is_empty() {
+                bail!("{}", self.no_workers_msg());
+            }
+            let n = targets.len();
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let reqs: Vec<Request> = (0..n).map(|pos| mk(pos, n)).collect();
+            if track {
+                self.pending.lock().unwrap().insert(
+                    id,
+                    Pending {
+                        slots: targets
+                            .iter()
+                            .zip(&reqs)
+                            .map(|(&(widx, _), req)| PendSlot {
+                                widx,
+                                req: Some(req.clone()),
+                                res: None,
+                            })
+                            .collect(),
+                        remaining: n,
+                    },
+                );
+            }
+            let mut ok = true;
+            for ((_, tx), req) in targets.iter().zip(reqs) {
+                if tx.send(Job { id, req }).is_err() {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return Ok(id);
+            }
+            // a target died between the snapshot and the send — its death
+            // notice is already queued (workers notify before dropping
+            // their receiver).  Abandon this dispatch and redo the whole
+            // broadcast after the supervisor has run.
+            if track {
+                self.pending.lock().unwrap().remove(&id);
+            }
+        }
+    }
+
+    fn fire(&self, mk: impl Fn(usize, usize) -> Request) -> Result<()> {
         self.submit_broadcast(false, mk).map(|_| ())
     }
 
-    /// Send one tracked job to a single worker.
+    /// Send one tracked job to a single worker (`w` is taken modulo the
+    /// live worker count, so round-robin callers stay valid across
+    /// degradations).
     fn submit_one(&self, w: usize, req: Request) -> Result<u64> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let ws = self.workers.lock().unwrap();
-        if w >= ws.len() {
-            bail!("no fleet worker {w}");
-        }
-        self.pending.lock().unwrap().insert(
-            id,
-            Pending {
-                slots: (0..ws.len()).map(|_| None).collect(),
-                remaining: 1,
-            },
-        );
-        let sent = ws[w]
-            .tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("fleet worker {w} is gone (dead or shut down)"))
-            .and_then(|tx| {
-                tx.send(Job { id, req })
-                    .map_err(|_| anyhow!("fleet worker {w} is gone"))
-            });
-        if let Err(e) = sent {
+        loop {
+            self.poll_notices()?;
+            let target = {
+                let ws = self.workers.lock().unwrap();
+                let live: Vec<(usize, mpsc::Sender<Job>)> = ws
+                    .iter()
+                    .filter_map(|wk| wk.tx.as_ref().map(|tx| (wk.widx, tx.clone())))
+                    .collect();
+                if live.is_empty() {
+                    None
+                } else {
+                    Some(live[w % live.len()].clone())
+                }
+            };
+            let Some((widx, tx)) = target else {
+                bail!("{}", self.no_workers_msg());
+            };
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            self.pending.lock().unwrap().insert(
+                id,
+                Pending {
+                    slots: vec![PendSlot { widx, req: Some(req.clone()), res: None }],
+                    remaining: 1,
+                },
+            );
+            if tx.send(Job { id, req: req.clone() }).is_ok() {
+                return Ok(id);
+            }
             self.pending.lock().unwrap().remove(&id);
-            return Err(e);
         }
-        Ok(id)
     }
 
     /// Block until every expected worker reported on `id`; error if any
-    /// did.  Returns the partials in worker (= global batch) order.
+    /// slot failed.  Returns the partials in dispatch (= global batch)
+    /// order.  Runs the supervisor inline: death notices respawn/requeue,
+    /// a degradation may redirect this job to a fresh id, and with a fault
+    /// plan deadline the watchdog converts reply-starvation into deaths.
     fn collect(&self, id: u64) -> Result<Vec<(usize, Partial)>> {
+        let mut id = id;
+        let deadline = self.faults.plan().deadline_ms;
         loop {
+            // a degradation may have re-dispatched this job under a new id
+            while let Some(new_id) = self.redirects.lock().unwrap().remove(&id) {
+                id = new_id;
+            }
             {
                 let mut pending = self.pending.lock().unwrap();
                 let p = pending
@@ -567,11 +1200,11 @@ impl EvalFleet {
                     drop(pending);
                     let mut out = Vec::new();
                     let mut errs = Vec::new();
-                    for (w, s) in p.slots.into_iter().enumerate() {
-                        match s {
+                    for s in p.slots {
+                        match s.res {
                             None => {}
-                            Some(Ok(part)) => out.push((w, part)),
-                            Some(Err(e)) => errs.push(format!("fleet worker {w}: {e}")),
+                            Some(Ok(part)) => out.push((s.widx, part)),
+                            Some(Err(e)) => errs.push(format!("fleet worker {}: {e}", s.widx)),
                         }
                     }
                     if !errs.is_empty() {
@@ -580,41 +1213,21 @@ impl EvalFleet {
                     return Ok(out);
                 }
             }
-            let (jid, w, r) = {
+            let msg = {
                 let rx = self.res_rx.lock().unwrap();
-                rx.recv().map_err(|_| anyhow!("all fleet workers exited"))?
+                match deadline {
+                    None => rx.recv().ok(),
+                    Some(ms) => rx.recv_timeout(Duration::from_millis(ms)).ok(),
+                }
             };
-            let mut pending = self.pending.lock().unwrap();
-            if jid == DEATH_NOTICE {
-                // the worker's thread is gone: nothing it still had queued
-                // will ever be answered — fail its slot in every in-flight
-                // job so no wait hangs, and close its sender so every
-                // later submit errors immediately instead of racing the
-                // thread teardown
-                let msg = match r {
-                    Err(e) => e,
-                    Ok(_) => "worker died".into(),
-                };
-                for p in pending.values_mut() {
-                    if w < p.slots.len() && p.slots[w].is_none() {
-                        p.slots[w] = Some(Err(msg.clone()));
-                        p.remaining -= 1;
-                    }
-                }
-                drop(pending);
-                if let Some(worker) = self.workers.lock().unwrap().get_mut(w) {
-                    worker.tx.take();
-                }
-                continue;
+            match msg {
+                Some(m) => self.route(m)?,
+                // with a deadline, silence past it means stuck workers
+                None if deadline.is_some() => self.watchdog_fire()?,
+                // without one, recv can only fail if the channel fully
+                // closed — which the fleet's own sender prevents
+                None => bail!("{}", self.no_workers_msg()),
             }
-            if let Some(p) = pending.get_mut(&jid) {
-                if w < p.slots.len() && p.slots[w].is_none() {
-                    p.slots[w] = Some(r);
-                    p.remaining -= 1;
-                }
-            }
-            // replies to fire-and-forget (or already-failed) jobs fall
-            // through here and are dropped
         }
     }
 
@@ -644,6 +1257,11 @@ impl Drop for EvalFleet {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Exponential respawn backoff: `base << attempt`, capped.
+fn backoff_ms(base: u64, attempt: usize) -> u64 {
+    base.saturating_mul(1u64 << attempt.min(6)).min(MAX_BACKOFF_MS)
 }
 
 /// Per-model client of an [`EvalFleet`] — the handle pipelines and
@@ -681,6 +1299,7 @@ impl EvalPool {
                 attached: 0,
                 calib: None,
                 sets: HashMap::new(),
+                refs: HashMap::new(),
             });
             ms.attached += 1;
             ms.id
@@ -743,7 +1362,7 @@ impl EvalPool {
                 ms.calib = Some((ranges.clone(), w_scales.clone()));
             }
         }
-        self.fleet.fire(|_| Request::Calibrate {
+        self.fleet.fire(|_, _| Request::Calibrate {
             model: self.model.clone(),
             ranges: ranges.clone(),
             w_scales: w_scales.clone(),
@@ -771,18 +1390,20 @@ impl EvalPool {
             let mut st = self.fleet.state.lock().unwrap();
             if let Some(ms) = st.get_mut(&*self.model) {
                 ms.sets.insert(key, ds.clone());
+                // new data invalidates any retained FP32 reference
+                ms.refs.remove(&key);
             }
         }
-        let ranges = shard_ranges(batches.len(), self.workers());
-        self.fleet.fire(|w| {
-            let r = &ranges[w];
+        let batch = self.batch;
+        self.fleet.fire(|w, n| {
+            let r = &shard_ranges(batches.len(), n)[w];
             Request::LoadSet {
                 model: self.model.clone(),
                 key,
                 batches: batches[r.clone()].to_vec(),
                 // labels rows [r.start·batch, r.end·batch) — may be empty
                 labels: labels
-                    .slice_rows(r.start * self.batch, (r.end - r.start) * self.batch)
+                    .slice_rows(r.start * batch, (r.end - r.start) * batch)
                     .expect("labels_prefix is batch-aligned"),
                 first_batch: r.start,
             }
@@ -792,7 +1413,7 @@ impl EvalPool {
     /// Build the FP32 reference for `set` eagerly — one full-set forward
     /// sweep, split across the workers' shards (pipelined, no ack).
     pub fn build_references(&self, set: SetKey) -> Result<()> {
-        self.fleet.fire(|_| Request::BuildReference {
+        self.fleet.fire(|_, _| Request::BuildReference {
             model: self.model.clone(),
             set,
         })
@@ -801,22 +1422,29 @@ impl EvalPool {
     /// Seed every worker's reference cache for `set` from host per-batch
     /// FP32 logits (the on-disk reference cache), skipping the forward
     /// sweep entirely.  Blocking: install errors indicate a stale or
-    /// mis-keyed cache file and must surface at the call site.
+    /// mis-keyed cache file and must surface at the call site.  The host
+    /// copy is retained so resize and respawn replay re-install it.
     pub fn install_references(&self, set: SetKey, batches: &[Tensor]) -> Result<()> {
-        let ranges = shard_ranges(batches.len(), self.workers());
-        let id = self.fleet.submit_broadcast(true, |w| Request::InstallReference {
+        {
+            let mut st = self.fleet.state.lock().unwrap();
+            if let Some(ms) = st.get_mut(&*self.model) {
+                ms.refs.insert(set, batches.to_vec());
+            }
+        }
+        let id = self.fleet.submit_broadcast(true, |w, n| Request::InstallReference {
             model: self.model.clone(),
             set,
-            batches: batches[ranges[w].clone()].to_vec(),
+            batches: batches[shard_ranges(batches.len(), n)[w].clone()].to_vec(),
         })?;
         self.fleet.wait_unit(id)
     }
 
     /// Collect the full-set FP32 reference (per-batch logits, global batch
     /// order) from the workers' shard caches — building shards that don't
-    /// have one yet.  Feeds the on-disk reference cache.
+    /// have one yet.  Feeds the on-disk reference cache; the collected
+    /// copy is retained host-side for resize/respawn replay.
     pub fn fetch_reference(&self, set: SetKey) -> Result<Vec<Tensor>> {
-        let id = self.fleet.submit_broadcast(true, |_| Request::FetchReference {
+        let id = self.fleet.submit_broadcast(true, |_, _| Request::FetchReference {
             model: self.model.clone(),
             set,
         })?;
@@ -828,7 +1456,14 @@ impl EvalPool {
             }
         }
         shards.sort_by_key(|&(fb, _)| fb);
-        Ok(shards.into_iter().flat_map(|(_, b)| b).collect())
+        let full: Vec<Tensor> = shards.into_iter().flat_map(|(_, b)| b).collect();
+        {
+            let mut st = self.fleet.state.lock().unwrap();
+            if let Some(ms) = st.get_mut(&*self.model) {
+                ms.refs.insert(set, full.clone());
+            }
+        }
+        Ok(full)
     }
 
     /// Submit one probe.  Served from the fleet memo when an identical
@@ -851,7 +1486,7 @@ impl EvalPool {
         self.fleet.memo_misses.fetch_add(1, Ordering::Relaxed);
         let cfg = Arc::new(cfg.clone());
         let overrides = Arc::new(overrides.clone());
-        let id = self.fleet.submit_broadcast(true, |_| Request::Probe {
+        let id = self.fleet.submit_broadcast(true, |_, _| Request::Probe {
             model: self.model.clone(),
             set,
             kind,
@@ -890,7 +1525,7 @@ impl EvalPool {
             .iter()
             .map(|qp| {
                 let qp = Arc::new(qp.clone());
-                self.fleet.submit_broadcast(true, |_| Request::Fit {
+                self.fleet.submit_broadcast(true, |_, _| Request::Fit {
                     model: self.model.clone(),
                     set,
                     qp: qp.clone(),
@@ -923,7 +1558,7 @@ impl EvalPool {
             .enumerate()
             .map(|(i, job)| {
                 self.fleet.submit_one(
-                    i % n,
+                    i % n.max(1),
                     Request::AdaRound { model: self.model.clone(), job: Arc::new(job) },
                 )
             })
@@ -1077,5 +1712,14 @@ mod tests {
         a3.insert(0, t1.clone());
         a3.insert(2, t1);
         assert_eq!(overrides_digest(&a2), overrides_digest(&a3));
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_ms(10, 0), 10);
+        assert_eq!(backoff_ms(10, 1), 20);
+        assert_eq!(backoff_ms(10, 3), 80);
+        assert_eq!(backoff_ms(10, 20), MAX_BACKOFF_MS, "capped");
+        assert_eq!(backoff_ms(0, 5), 0, "backoff:0 disables the sleep");
     }
 }

@@ -21,6 +21,7 @@
 //! enqueued after its set's upload is always served after the upload
 //! completed — ordering, not blocking, is the correctness mechanism.
 
+use super::fault::FaultState;
 use super::{FitShard, Job, Partial, ProbeKind, Request, ResMsg, SetKey, WorkerStats, DEATH_NOTICE};
 use crate::adaround;
 use crate::engine::{FpReference, StreamingSqnr};
@@ -87,20 +88,28 @@ fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
 
 pub(super) fn worker_main(
     widx: usize,
+    lane: usize,
     dir: PathBuf,
     rx: mpsc::Receiver<Job>,
     res: mpsc::Sender<ResMsg>,
     init: mpsc::Sender<(usize, Result<(), String>)>,
     opens: Arc<AtomicUsize>,
+    faults: Arc<FaultState>,
 ) {
     // All backend state (PJRT client or sim interpreter) is created here,
     // inside the thread, and never leaves.  Init only builds the runtime —
     // models compile lazily on their first job, which is what lets one
     // fleet serve models it has never seen at spawn time.
-    let built = std::panic::catch_unwind(move || -> Result<(Manifest, Rc<Runtime>)> {
-        let manifest = Manifest::load(&dir)?;
-        let rt = Rc::new(Runtime::for_manifest(&manifest)?);
-        Ok((manifest, rt))
+    let built = std::panic::catch_unwind({
+        let faults = faults.clone();
+        move || -> Result<(Manifest, Rc<Runtime>)> {
+            let manifest = Manifest::load(&dir)?;
+            let rt = Rc::new(Runtime::for_manifest(&manifest)?);
+            if let Some(nth) = faults.arm_compile(lane) {
+                rt.inject_compile_fault(nth, faults.injected_counter());
+            }
+            Ok((manifest, rt))
+        }
     });
     let mut state = match built {
         Ok(Ok((manifest, rt))) => {
@@ -119,9 +128,43 @@ pub(super) fn worker_main(
             return;
         }
     };
+    // per-incarnation event counters the fault plan keys on: a respawned
+    // replacement starts from zero, which is what lets a *recurring* fault
+    // fire once per incarnation while one-shot faults deplete globally
+    let slow = faults.slow_ms(lane);
+    let mut probes_served = 0usize;
+    let mut uploads_served = 0usize;
     while let Ok(job) = rx.recv() {
         let Job { id, req } = job;
+        if let Some(ms) = slow {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        let is_probe = matches!(req, Request::Probe { .. });
+        let is_upload = matches!(
+            req,
+            Request::LoadSet { .. } | Request::BuildReference { .. } | Request::InstallReference { .. }
+        );
+        if is_probe {
+            probes_served += 1;
+            if faults.fire_stall(lane, probes_served) {
+                // block far past any configured deadline; the collect
+                // watchdog converts this lane into a death and the stale
+                // reply (if the thread ever wakes) carries a retired widx
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        if is_upload {
+            uploads_served += 1;
+        }
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if is_probe && faults.fire_panic(lane, probes_served) {
+                panic!("injected fault: worker panic on probe {probes_served} (lane {lane})");
+            }
+            if is_upload && faults.fire_upload(lane, uploads_served) {
+                let msg =
+                    format!("injected fault: upload failure on request {uploads_served} (lane {lane})");
+                return inject_upload_failure(&mut state, &req, msg);
+            }
             serve(&mut state, req)
         }));
         match outcome {
@@ -131,17 +174,34 @@ pub(super) fn worker_main(
                 }
             }
             Err(p) => {
-                // report the job, then announce death and exit: the slot
-                // caches may be mid-update, and jobs already queued behind
-                // this one would otherwise never be answered — the death
-                // notice fails their pending slots at the front-end and
-                // closes this worker's channel for future submits
+                // announce death and exit WITHOUT failing the job: the
+                // supervisor respawns this lane and requeues every
+                // unresolved slot (this job and everything still in the
+                // dead queue), so in-flight work survives the panic.  The
+                // per-sender FIFO guarantees all of this incarnation's
+                // replies precede the notice — after it, no stale reply
+                // from this widx can exist.
                 let msg = format!("worker panicked: {}", panic_text(&p));
-                let _ = res.send((id, widx, Err(msg.clone())));
                 let _ = res.send((DEATH_NOTICE, widx, Err(format!("{msg} (worker exited)"))));
                 return;
             }
         }
+    }
+}
+
+/// An injected upload failure, recorded exactly like a real one: the
+/// target shard slot is poisoned so the first *tracked* job that touches
+/// it surfaces the root cause (`LoadSet`/`BuildReference` are
+/// fire-and-forget); a tracked `InstallReference` fails directly.
+fn inject_upload_failure(state: &mut WorkerState, req: &Request, msg: String) -> Result<Partial> {
+    let WorkerState { rt, manifest, models, opens } = state;
+    match req {
+        Request::LoadSet { model, key, .. } | Request::BuildReference { model, set: key, .. } => {
+            let m = ensure_model(models, rt, manifest, opens, model)?;
+            m.shards.insert(*key, ShardSlot::Failed(msg));
+            Ok(Partial::Unit)
+        }
+        _ => bail!("{msg}"),
     }
 }
 

@@ -116,6 +116,24 @@ pub fn f4(x: f64) -> String {
     format!("{x:.4}")
 }
 
+/// Render the evaluation fleet's failure telemetry
+/// ([`crate::pool::FailureStats`]) as a [`Table`] — counters first, then
+/// one row per degradation event and stored death reason, so driver
+/// reports carry the self-healing story alongside the paper numbers.
+pub fn fleet_failure_table(stats: &crate::pool::FailureStats) -> Table {
+    let mut t = Table::new("Fleet failures — supervision telemetry", &["event", "detail"]);
+    t.row(vec!["worker_restarts".into(), stats.worker_restarts.to_string()]);
+    t.row(vec!["jobs_requeued".into(), stats.jobs_requeued.to_string()]);
+    t.row(vec!["faults_injected".into(), stats.faults_injected.to_string()]);
+    for d in &stats.degraded_events {
+        t.row(vec!["degraded".into(), d.clone()]);
+    }
+    for d in &stats.last_deaths {
+        t.row(vec!["death".into(), d.clone()]);
+    }
+    t
+}
+
 /// Default results directory, overridable with `MPQ_RESULTS`.
 pub fn results_dir() -> std::path::PathBuf {
     std::env::var_os("MPQ_RESULTS")

@@ -105,11 +105,19 @@ pub struct Exe {
 pub struct Runtime {
     backend: Box<dyn Backend>,
     cache: RefCell<HashMap<PathBuf, Rc<Exe>>>,
+    /// armed compile fault (deterministic fault-injection harness, see
+    /// `pool::fault`): `(cache-miss compiles left before failing, counter
+    /// bumped when the fault actually fires)`
+    compile_fault: RefCell<Option<(usize, std::sync::Arc<std::sync::atomic::AtomicUsize>)>>,
 }
 
 impl Runtime {
     fn with_backend(backend: Box<dyn Backend>) -> Self {
-        Self { backend, cache: RefCell::new(HashMap::new()) }
+        Self {
+            backend,
+            cache: RefCell::new(HashMap::new()),
+            compile_fault: RefCell::new(None),
+        }
     }
 
     /// PJRT CPU backend (requires the `pjrt` feature and the
@@ -149,11 +157,43 @@ impl Runtime {
         self.backend.platform()
     }
 
+    /// Arm an injected compile failure: the `nth` (1-based) cache-miss
+    /// compile after this call fails with an `injected fault:` error, then
+    /// the hook disarms.  Cache hits don't count — only real compiles.
+    /// Part of the deterministic fault-injection harness (`pool::fault`);
+    /// `fired` is bumped when the failure actually triggers.
+    pub fn inject_compile_fault(
+        &self,
+        nth: usize,
+        fired: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    ) {
+        *self.compile_fault.borrow_mut() = Some((nth.max(1), fired));
+    }
+
     /// Load + compile an artifact (cached by path).
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Rc<Exe>> {
         let path = path.as_ref().to_path_buf();
         if let Some(e) = self.cache.borrow().get(&path) {
             return Ok(e.clone());
+        }
+        let fire = {
+            let mut armed = self.compile_fault.borrow_mut();
+            match armed.as_mut() {
+                Some((left, fired)) if *left <= 1 => {
+                    let fired = fired.clone();
+                    *armed = None; // disarm — the fault fires exactly once
+                    Some(fired)
+                }
+                Some((left, _)) => {
+                    *left -= 1;
+                    None
+                }
+                None => None,
+            }
+        };
+        if let Some(fired) = fire {
+            fired.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            bail!("injected fault: compile failure for {}", path.display());
         }
         let imp = self.backend.compile(&path)?;
         let name = path
@@ -214,6 +254,21 @@ mod tests {
     #[test]
     fn for_backend_rejects_unknown() {
         assert!(Runtime::for_backend("tpu-v9").is_err());
+    }
+
+    #[test]
+    fn injected_compile_fault_fires_once_then_disarms() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let rt = Runtime::sim();
+        let fired = std::sync::Arc::new(AtomicUsize::new(0));
+        rt.inject_compile_fault(1, fired.clone());
+        let err = format!("{:#}", rt.load("/nonexistent/prog.json").unwrap_err());
+        assert!(err.contains("injected fault"), "unexpected error: {err}");
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
+        // disarmed: the next miss reaches the real backend (file error)
+        let err2 = format!("{:#}", rt.load("/nonexistent/prog.json").unwrap_err());
+        assert!(!err2.contains("injected fault"), "hook must disarm: {err2}");
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -562,6 +562,11 @@ pub struct SimSpec {
     /// unlabeled out-of-domain calibration pool (0 = none)
     pub ood_n: usize,
     pub seed: u64,
+    /// optional fault-injection schedule written into the manifest's
+    /// `"fault_plan"` key (`crate::pool::FaultPlan` grammar) — lets a
+    /// generated zoo carry a deterministic failure scenario for the
+    /// self-healing fleet tests; `None` (the default) omits the key
+    pub fault_plan: Option<String>,
 }
 
 impl Default for SimSpec {
@@ -574,6 +579,7 @@ impl Default for SimSpec {
             val_n: 192,
             ood_n: 64,
             seed: 7,
+            fault_plan: None,
         }
     }
 }
@@ -608,10 +614,16 @@ pub fn generate_zoo(dir: impl AsRef<Path>, specs: &[SimSpec]) -> Result<()> {
         let entry = generate_model(dir, spec)?;
         models.push((spec.name.clone(), entry));
     }
-    let manifest = Json::Obj(vec![
+    let mut top = vec![
         ("backend".into(), Json::Str("sim".into())),
         ("models".into(), Json::Obj(models)),
-    ]);
+    ];
+    // first spec with a fault plan wins (the plan is fleet-wide, not
+    // per-model)
+    if let Some(plan) = specs.iter().find_map(|s| s.fault_plan.clone()) {
+        top.push(("fault_plan".into(), Json::Str(plan)));
+    }
+    let manifest = Json::Obj(top);
     std::fs::write(dir.join("manifest.json"), manifest.to_string() + "\n")
         .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
     Ok(())

@@ -434,6 +434,67 @@ fn pearson_accum_merge_any_split_any_order_matches_serial() {
     }
 }
 
+/// The self-healing supervisor as a property: under arbitrary seeded
+/// fault schedules ([`mpq::pool::FaultPlan::random`] — panics including
+/// recurring ones that exhaust the restart budget, upload failures, slow
+/// lanes; never stalls, so no deadline is needed), a supervised Phase-1
+/// sweep either completes **byte-equal** to the serial oracle or fails
+/// with the injected root cause in the error — and never hangs
+/// (completing every seeded case *is* the liveness assertion).
+#[test]
+fn supervised_fleet_under_random_faults_matches_serial_or_reports_cause() {
+    use mpq::coordinator::Pipeline;
+    use mpq::pool::{EvalFleet, FaultPlan};
+
+    let dir = std::env::temp_dir().join("mpq_prop_faults");
+    std::fs::remove_dir_all(&dir).ok();
+    mpq::sim::generate(&dir, &mpq::sim::SimSpec::default()).unwrap();
+    let lat = Lattice::practical();
+    let mut sp = Pipeline::open(&dir, "sim_mlp").unwrap();
+    sp.calibrate(128, 0).unwrap();
+    let serial = sp.sensitivity_sqnr(&lat).unwrap();
+
+    for seed in 0..12u64 {
+        let plan = FaultPlan::random(seed, 3);
+        let fleet = EvalFleet::with_faults(&dir, 3, plan.clone()).unwrap();
+        let mut p = Pipeline::open(&dir, "sim_mlp").unwrap();
+        p.attach_fleet(&fleet).unwrap();
+        p.calibrate(128, 0).unwrap();
+        match p.sensitivity_sqnr(&lat) {
+            Ok(sens) => {
+                assert_eq!(sens.len(), serial.len(), "seed {seed} ({plan:?}): list length");
+                for (a, b) in sens.iter().zip(&serial) {
+                    assert_eq!(
+                        (a.group, a.cand),
+                        (b.group, b.cand),
+                        "seed {seed} ({plan:?}): order diverged"
+                    );
+                    assert_eq!(
+                        a.score.to_bits(),
+                        b.score.to_bits(),
+                        "seed {seed} ({plan:?}): supervised sweep diverged from serial"
+                    );
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("injected fault"),
+                    "seed {seed} ({plan:?}): failure must carry the injected \
+                     root cause, got: {msg}"
+                );
+            }
+        }
+        let fs = fleet.failure_stats();
+        if !fs.degraded_events.is_empty() {
+            assert!(
+                fs.faults_injected > 0 && !fs.last_deaths.is_empty(),
+                "seed {seed}: degradation without recorded deaths: {fs:?}"
+            );
+        }
+    }
+}
+
 #[test]
 fn candidate_labels_parse_back() {
     for w in [4u8, 6, 8] {

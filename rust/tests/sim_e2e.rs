@@ -18,8 +18,8 @@ use mpq::engine::Evaluator;
 use mpq::groups::{Assignment, Candidate, Lattice};
 use mpq::manifest::Manifest;
 use mpq::model::{QuantConfig, WeightOverrides};
-use mpq::pool::{EvalFleet, ProbeKind, CALIB_SET};
-use mpq::sensitivity::Metric;
+use mpq::pool::{EvalFleet, FaultPlan, ProbeKind, CALIB_SET};
+use mpq::sensitivity::{Metric, SensEntry};
 use mpq::sim::{self, SimSpec};
 use mpq::tensor::Tensor;
 use std::collections::HashMap;
@@ -611,6 +611,186 @@ fn sim_mixed_beats_or_matches_fixed_at_same_bops() {
         run.final_metric,
         w8a8
     );
+}
+
+// ---------------------------------------------------------------------------
+// Self-healing fleet: deterministic fault injection, supervised recovery.
+// The plans are explicit (`with_faults`), so these stay deterministic even
+// under the fault-injection CI job's MPQ_FAULT_PLAN.
+// ---------------------------------------------------------------------------
+
+/// Two Phase-1 lists agree in order and **bit-for-bit** scores.
+fn assert_sens_bits(got: &[SensEntry], want: &[SensEntry], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: list length");
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand), "{tag}: order diverged");
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "{tag}: score for (g{}, {:?}): {} vs {}",
+            a.group,
+            a.cand,
+            a.score,
+            b.score
+        );
+    }
+}
+
+/// ISSUE-6 acceptance #1: a worker panics while serving its 3rd probe, mid
+/// Phase-1 sweep at w=4.  The supervisor respawns the lane, replays its
+/// state and requeues everything it owed — the sweep completes with
+/// exactly one restart and scores/curves **byte-equal** to the serial
+/// oracle (and hence to the fault-free w=4 run, which
+/// `sim_pool_matches_serial_bit_for_bit` pins to the same bits).
+#[test]
+fn sim_fleet_survives_worker_panic_mid_sweep() {
+    let dir = sim_dir("heal_panic");
+    let lat = Lattice::practical();
+
+    let mut sp = pipe(&dir);
+    let ssens = sp.sensitivity_sqnr(&lat).unwrap();
+    let sflips = sp.flips(&lat, &ssens);
+    let scurve = sp.pareto_curve_val(&lat, &sflips, None).unwrap();
+
+    let plan = FaultPlan::parse("panic@1:3,backoff:0").unwrap();
+    let fleet = EvalFleet::with_faults(&dir, 4, plan).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &ssens, "panic@1:3 w=4");
+
+    let fs = fleet.failure_stats();
+    assert_eq!(fs.faults_injected, 1, "the panic must fire exactly once");
+    assert_eq!(fs.worker_restarts, 1, "one respawn heals the fleet");
+    assert!(fs.jobs_requeued > 0, "the dead worker's slots must be requeued");
+    assert!(fs.degraded_events.is_empty(), "death within budget must not degrade");
+    assert_eq!(fleet.workers(), 4, "fleet back at full strength");
+    assert!(
+        fs.last_deaths.iter().any(|d| d.contains("injected fault")),
+        "death reason must carry the injected root cause: {:?}",
+        fs.last_deaths
+    );
+
+    // Phase 2 on the healed fleet: byte-equal pareto curve
+    let flips = p.flips(&lat, &sens);
+    let curve = p.pareto_curve_val(&lat, &flips, None).unwrap();
+    assert_eq!(curve.curve.len(), scurve.curve.len());
+    for ((r1, m1), (r2, m2)) in curve.curve.iter().zip(&scurve.curve) {
+        assert_eq!(r1.to_bits(), r2.to_bits(), "curve r diverged after healing");
+        assert_eq!(m1.to_bits(), m2.to_bits(), "curve metric diverged after healing");
+    }
+}
+
+/// ISSUE-6 acceptance #2: a *recurring* panic exhausts the lane's restart
+/// budget — the fleet degrades gracefully to the survivors (reaping the
+/// lane, re-sharding state, re-dispatching orphans) and the run completes
+/// with the same bits; later sweeps on the shrunken fleet stay exact too.
+#[test]
+fn sim_fleet_degrades_after_restart_budget() {
+    let dir = sim_dir("heal_degrade");
+    let lat = Lattice::practical();
+    let serial = pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    // lane 1 panics on the FIRST probe of every incarnation; budget 2 →
+    // two respawns burn, the third death retires the lane
+    let plan = FaultPlan::parse("panic@1:1*,budget:2,backoff:0").unwrap();
+    let fleet = EvalFleet::with_faults(&dir, 3, plan).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &serial, "degraded sweep");
+
+    let fs = fleet.failure_stats();
+    assert_eq!(fs.worker_restarts, 2, "budget 2 allows exactly two respawns");
+    assert_eq!(fs.faults_injected, 3, "one panic per incarnation");
+    assert_eq!(fs.degraded_events.len(), 1, "one lane retired: {:?}", fs.degraded_events);
+    assert!(fs.jobs_requeued > 0);
+    assert_eq!(fleet.workers(), 2, "dead lane must be reaped from the live count");
+    assert!(
+        fs.degraded_events[0].contains("restart budget"),
+        "event must say why: {}",
+        fs.degraded_events[0]
+    );
+
+    // the survivors keep serving fresh (non-memoized) sweeps exactly
+    p.clear_eval_memo();
+    let again = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&again, &serial, "post-degradation re-sweep");
+    assert_eq!(
+        fleet.failure_stats().faults_injected,
+        3,
+        "retired lane must not fire again"
+    );
+}
+
+/// Deadline watchdog: a stuck (stalled, not dead) worker is converted into
+/// a death after `deadline:MS` of reply silence — respawned, requeued, and
+/// the sweep still finishes bit-identical to serial.  The marooned thread
+/// is detached; its eventual replies carry a retired incarnation id and
+/// are dropped.
+#[test]
+fn sim_fleet_watchdog_converts_stuck_worker_into_death() {
+    let dir = sim_dir("heal_watchdog");
+    let lat = Lattice::practical();
+    let serial = pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    let plan = FaultPlan::parse("stall@0:2,deadline:400,backoff:0").unwrap();
+    let fleet = EvalFleet::with_faults(&dir, 2, plan).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &serial, "watchdog sweep");
+
+    let fs = fleet.failure_stats();
+    assert_eq!(fs.faults_injected, 1, "the stall must fire exactly once");
+    // ≥, not ==: in a pathological scheduling pause the watchdog may also
+    // presume a healthy worker stuck — recovery keeps the bits identical
+    // either way, which is what the sweep assertion above pins
+    assert!(fs.worker_restarts >= 1, "the stuck lane must be respawned");
+    assert!(fs.jobs_requeued > 0, "the stalled probe must be requeued");
+    assert!(fs.degraded_events.is_empty());
+    assert_eq!(fleet.workers(), 2);
+    assert!(
+        fs.last_deaths.iter().any(|d| d.contains("watchdog")),
+        "death reason must name the watchdog: {:?}",
+        fs.last_deaths
+    );
+}
+
+/// An injected upload failure poisons one worker's calibration shard; the
+/// first probe that touches it surfaces the **root cause** (not a bare
+/// "set not loaded"), and re-pushing the set recovers the fleet to
+/// bit-identical results — PR-5's fire-and-forget upload semantics under
+/// faults.
+#[test]
+fn sim_fleet_surfaces_injected_upload_root_cause() {
+    let dir = sim_dir("heal_upload");
+    let lat = Lattice::practical();
+    let serial = pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    // lane 0's first upload is its CALIB_SET shard (val loads lazily)
+    let plan = FaultPlan::parse("upload@0:1,backoff:0").unwrap();
+    let fleet = EvalFleet::with_faults(&dir, 2, plan).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let err = p.sensitivity_sqnr(&lat).expect_err("poisoned shard must fail the sweep");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("injected fault") && msg.contains("upload failure"),
+        "sweep error must surface the injected root cause, got: {msg}"
+    );
+    let fs = fleet.failure_stats();
+    assert_eq!(fs.faults_injected, 1);
+    assert_eq!(fs.worker_restarts, 0, "an upload failure is not a death");
+
+    // recovery: re-pushing calibration re-uploads the set (fault depleted)
+    p.calibrate(128, 0).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &serial, "post-recovery sweep");
 }
 
 /// PJRT ↔ sim parity smoke test (artifacts-gated): the HLO-lowered
