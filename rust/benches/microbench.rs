@@ -73,6 +73,23 @@ fn sim_benches(results: &mut Vec<BenchResult>) {
         pipe.sensitivity_sqnr(&lat).map(|_| ())
     }));
 
+    // Journal overhead: the same serial sweep, but with a fresh run
+    // journal appended at every probe barrier (each iteration reopens the
+    // journal non-resumed so all probes record, none skip).  CI's
+    // bench_compare gates this against the plain sweep above: durability
+    // must cost <5% of Phase-1 wall time.
+    {
+        let jpath = dir.join("bench_journal.mpqj");
+        let mut pj = Pipeline::open(&dir, &spec.name).expect("open sim zoo");
+        pj.calibrate(spec.calib_n, 0).expect("calibrate");
+        results.push(bench_result("resume_sim/journal_overhead", 1, 3, || {
+            let stats = std::rc::Rc::new(mpq::store::StoreStats::default());
+            let j = mpq::store::RunJournal::open(&jpath, false, stats)?;
+            pj.set_journal(Some(std::rc::Rc::new(j)));
+            pj.sensitivity_sqnr(&lat).map(|_| ())
+        }));
+    }
+
     pipe.limit_val(spec.val_n, 7).expect("limit val");
     let sens = pipe.sensitivity_sqnr(&lat).expect("phase 1");
     let flips = pipe.flips(&lat, &sens);

@@ -28,15 +28,25 @@
 //! backend), so pooled results are **bit-identical** to
 //! [`adaround_all`]'s, which runs the same jobs on the caller's client.
 
-use crate::manifest::Manifest;
+//!
+//! With a [`crate::store::JournalScope`] attached, every completed
+//! `(layer, wbits)` rounded tensor is appended to the crash-safe run
+//! journal (MPQT-encoded, keyed by the AdaRound-scope content digest),
+//! and a `--resume` run replays journaled tensors bit-exactly, running
+//! only the optimizations the crash interrupted; when *all* are
+//! journaled the caller can skip tap capture entirely
+//! ([`expected_keys`]).
+
+use crate::manifest::{Manifest, ModelEntry};
 use crate::model::ModelHandle;
 use crate::pool::EvalPool;
 use crate::quant;
 use crate::runtime::{Buffer, Exe, Runtime};
 use crate::sensitivity::RoundedWeights;
-use crate::tensor::Tensor;
+use crate::store::{self, JournalScope};
+use crate::tensor::{io as tio, Tensor};
 use crate::util::Rng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// AdaRound optimizer settings.
 #[derive(Clone, Debug)]
@@ -168,25 +178,82 @@ pub fn plan_jobs(
     Ok(out)
 }
 
+/// Every `(param_idx, wbits)` key a full AdaRound pass over
+/// `wbits_options` produces — computable *without* taps or scales, so a
+/// resuming caller can test journal completeness (and skip tap capture)
+/// before doing any work.  Same iteration order as [`plan_jobs`].
+pub fn expected_keys(entry: &ModelEntry, wbits_options: &[u8]) -> Result<Vec<(usize, u8)>> {
+    let mut out = Vec::new();
+    for &bits in wbits_options {
+        for ar in &entry.adaround {
+            out.push((entry.param_idx(&ar.param)?, bits));
+        }
+    }
+    Ok(out)
+}
+
+/// Journal lookup of one rounded tensor (MPQT payload, bit-exact).
+pub fn journal_lookup(journal: &JournalScope, key: (usize, u8)) -> Result<Option<Tensor>> {
+    let k = store::adaround_key(journal.base, key.0, key.1);
+    match journal.journal.lookup(store::kind::ADAROUND, k) {
+        None => Ok(None),
+        Some(payload) => {
+            let mut ts = tio::decode_tensors(&payload)
+                .with_context(|| format!("journaled AdaRound tensor for {key:?}"))?;
+            if ts.len() != 1 {
+                bail!("journaled AdaRound record for {key:?} holds {} tensors", ts.len());
+            }
+            Ok(Some(ts.pop().unwrap()))
+        }
+    }
+}
+
+fn journal_record(journal: Option<&JournalScope>, key: (usize, u8), t: &Tensor) -> Result<()> {
+    if let Some(j) = journal {
+        j.journal.record(
+            store::kind::ADAROUND,
+            store::adaround_key(j.base, key.0, key.1),
+            &tio::encode_tensors(std::slice::from_ref(t)),
+        )?;
+    }
+    Ok(())
+}
+
+/// Run one planned `(layer, wbits)` job on the caller's client — the unit
+/// both [`adaround_all`] and a resumed partial pass execute.
+pub fn run_job(handle: &ModelHandle, manifest: &Manifest, job: &AdaRoundJob) -> Result<Tensor> {
+    let exe = handle.rt.load(manifest.path(&job.exe))?;
+    optimize_rounding(
+        &handle.rt,
+        &exe,
+        &handle.weights[job.param_idx],
+        &handle.weights[job.bias_idx],
+        job,
+    )
+}
+
 /// Run AdaRound for every layer at each of `wbits_options` on the caller's
-/// client; returns the stitchable rounded-weight cache.
+/// client; returns the stitchable rounded-weight cache.  With a journal
+/// attached, journaled `(layer, wbits)` tensors are replayed bit-exactly
+/// and each freshly optimized tensor is appended as a barrier.
 pub fn adaround_all(
     handle: &ModelHandle,
     manifest: &Manifest,
     taps: &Taps,
     wbits_options: &[u8],
     cfg: &AdaRoundCfg,
+    journal: Option<&JournalScope>,
 ) -> Result<RoundedWeights> {
     let mut out = RoundedWeights::new();
     for (key, job) in plan_jobs(handle, taps, wbits_options, cfg)? {
-        let exe = handle.rt.load(manifest.path(&job.exe))?;
-        let rounded = optimize_rounding(
-            &handle.rt,
-            &exe,
-            &handle.weights[job.param_idx],
-            &handle.weights[job.bias_idx],
-            &job,
-        )?;
+        if let Some(j) = journal {
+            if let Some(t) = journal_lookup(j, key)? {
+                out.insert(key, t);
+                continue;
+            }
+        }
+        let rounded = run_job(handle, manifest, &job)?;
+        journal_record(journal, key, &rounded)?;
         out.insert(key, rounded);
     }
     Ok(out)
@@ -194,19 +261,40 @@ pub fn adaround_all(
 
 /// Like [`adaround_all`], but each `(layer, wbits)` optimization is
 /// dispatched as a fleet job — independent layers anneal concurrently, and
-/// the rounded tensors are bit-identical to the serial path's.
+/// the rounded tensors are bit-identical to the serial path's.  Journaled
+/// jobs never enter the fleet; fresh results are journaled in dispatch
+/// order as they are collected.
 pub fn adaround_all_pooled(
     pool: &EvalPool,
     handle: &ModelHandle,
     taps: &Taps,
     wbits_options: &[u8],
     cfg: &AdaRoundCfg,
+    journal: Option<&JournalScope>,
 ) -> Result<RoundedWeights> {
     let planned = plan_jobs(handle, taps, wbits_options, cfg)?;
-    let keys: Vec<(usize, u8)> = planned.iter().map(|(k, _)| *k).collect();
-    let jobs: Vec<AdaRoundJob> = planned.into_iter().map(|(_, j)| j).collect();
-    let rounded = pool.adaround_jobs(jobs)?;
-    Ok(keys.into_iter().zip(rounded).collect())
+    let mut out = RoundedWeights::new();
+    let mut todo_keys = Vec::new();
+    let mut todo_jobs = Vec::new();
+    for (key, job) in planned {
+        match journal.map(|j| journal_lookup(j, key)).transpose()?.flatten() {
+            Some(t) => {
+                out.insert(key, t);
+            }
+            None => {
+                todo_keys.push(key);
+                todo_jobs.push(job);
+            }
+        }
+    }
+    if !todo_jobs.is_empty() {
+        let rounded = pool.adaround_jobs(todo_jobs)?;
+        for (key, t) in todo_keys.into_iter().zip(rounded) {
+            journal_record(journal, key, &t)?;
+            out.insert(key, t);
+        }
+    }
+    Ok(out)
 }
 
 /// Optimize one layer's rounding variables and return the hard-rounded,

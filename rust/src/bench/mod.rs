@@ -91,7 +91,7 @@ pub fn write_json(
     path: impl AsRef<std::path::Path>,
     bench_name: &str,
     results: &[BenchResult],
-) -> std::io::Result<()> {
+) -> anyhow::Result<()> {
     let entries: Vec<(String, Json)> = results
         .iter()
         .map(|r| {
@@ -110,7 +110,8 @@ pub fn write_json(
         ("bench".into(), Json::Str(bench_name.into())),
         ("results".into(), Json::Obj(entries)),
     ]);
-    std::fs::write(path, j.to_string() + "\n")
+    // atomic temp+rename: a bench_compare gate never reads a torn file
+    crate::store::atomic_write(path, (j.to_string() + "\n").as_bytes())
 }
 
 /// Standard bench preamble: header + artifacts guard.  Returns false (and

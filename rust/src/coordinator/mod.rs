@@ -11,7 +11,24 @@
 //! AdaRound optimizations route through the same workers.
 //! [`Pipeline::set_sens_cache_dir`] persists Phase-1 lists *and* the FP32
 //! reference on disk so repeated drivers skip both the sweep and the
-//! reference forward pass.  Typical flow:
+//! reference forward pass.
+//!
+//! # Durability & resume
+//!
+//! [`Pipeline::set_journal`] attaches a crash-safe
+//! [`RunJournal`](crate::store::RunJournal): each completed Phase-1
+//! `(group, candidate)` probe, each Phase-2 prefix evaluation and each
+//! AdaRounded `(layer, wbits)` tensor is appended *after* it completes and
+//! *before* any dependent work starts, keyed by a scope digest over
+//! everything the result depends on (model identity, trained weights, the
+//! exact calibration/validation tensors, lattice, metric — plus the flip
+//! sequence for searches and the full optimizer config for AdaRound).  On
+//! `--resume` the journal replays and matching records are served back
+//! bit-exactly, so a killed run re-runs **zero** completed probes or
+//! AdaRound layers; a journal written under different data, bits or
+//! rounding never matches and is simply ignored.  Corrupt or truncated
+//! cache files degrade to a miss (quarantined to `<name>.corrupt`, counted
+//! in [`Pipeline::store_stats`]) instead of failing the run.  Typical flow:
 //!
 //! ```no_run
 //! # use mpq::coordinator::Pipeline;
@@ -34,7 +51,9 @@ use crate::pool::{self, EvalFleet, EvalPool, ProbeKind};
 use crate::runtime::Runtime;
 use crate::search::{self, FlipStep, SearchCtx, SearchRun};
 use crate::sensitivity::{self, cache as sens_cache, Metric, RoundedWeights, SensEntry};
+use crate::store::{self, JournalScope, RunJournal, StoreStats};
 use crate::tensor::Tensor;
+use crate::util::Fnv;
 use anyhow::{anyhow, bail, Result};
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -64,6 +83,12 @@ pub struct Pipeline {
     sens_cache_misses: Cell<u64>,
     ref_cache_hits: Cell<u64>,
     ref_cache_misses: Cell<u64>,
+    /// crash-safe run journal ([`Self::set_journal`]); `None` = journaling
+    /// disabled, everything recomputes
+    journal: Option<Rc<RunJournal>>,
+    /// durability telemetry, shared with the journal and the on-disk
+    /// caches so replay/skip/corruption counters land in one place
+    store_stats: Rc<StoreStats>,
 }
 
 impl Pipeline {
@@ -98,6 +123,8 @@ impl Pipeline {
             sens_cache_misses: Cell::new(0),
             ref_cache_hits: Cell::new(0),
             ref_cache_misses: Cell::new(0),
+            journal: None,
+            store_stats: Rc::new(StoreStats::default()),
         }
     }
 
@@ -146,6 +173,23 @@ impl Pipeline {
     /// same directory.
     pub fn set_sens_cache_dir(&mut self, dir: Option<PathBuf>) {
         self.sens_cache_dir = dir;
+    }
+
+    /// Attach (or detach) the crash-safe run journal.  The pipeline adopts
+    /// the journal's [`StoreStats`], so replay/skip counters from the
+    /// journal and corruption counters from the caches are one set.
+    pub fn set_journal(&mut self, journal: Option<Rc<RunJournal>>) {
+        if let Some(j) = &journal {
+            self.store_stats = Rc::clone(j.stats());
+        }
+        self.journal = journal;
+    }
+
+    /// Durability telemetry: journal appends/replays/skips/truncations and
+    /// cache-corruption counters (drivers report these next to the fleet's
+    /// failure stats).
+    pub fn store_stats(&self) -> &StoreStats {
+        &self.store_stats
     }
 
     /// `(hits, misses)` of the on-disk sensitivity cache for this pipeline.
@@ -197,31 +241,41 @@ impl Pipeline {
     ///   (the pre-fleet behaviour, unchanged).
     fn sync_reference(&self) -> Result<()> {
         let Some(ds) = &self.calib_ds else { return Ok(()) };
-        let Some(slot) = self.ref_cache_slot(ds) else {
+        let Some((slot, digest)) = self.ref_cache_slot(ds) else {
             if let Some(p) = &self.pool {
                 p.build_references(pool::CALIB_SET)?;
             }
             return Ok(());
         };
-        match sens_cache::load_ref(&slot)? {
-            Some(batches) => {
-                self.ref_cache_hits.set(self.ref_cache_hits.get() + 1);
-                let set = self.calib_set()?;
-                if batches.len() != set.batches.len() {
-                    // digest matched but the payload doesn't — a truncated
-                    // or corrupt cache file must fail loudly, not poison
-                    // the engine (the pooled install checks the same)
-                    bail!(
-                        "reference cache {} holds {} batches, eval set has {} — \
-                         delete the stale file",
-                        slot.display(),
+        let mut cached = sens_cache::load_ref(&slot, digest, &self.store_stats)?;
+        if let Some(batches) = &cached {
+            // digest and checksum passed but the shape doesn't match the
+            // eval set — degrade to a quarantined miss and rebuild, never
+            // poison the engine with a wrong-shaped reference
+            let set = self.calib_set()?;
+            if batches.len() != set.batches.len() {
+                store::quarantine(
+                    &slot,
+                    &self.store_stats,
+                    &format!(
+                        "reference cache holds {} batches, eval set has {}",
                         batches.len(),
                         set.batches.len()
-                    );
-                }
+                    ),
+                );
+                self.store_stats
+                    .cache_corrupt_misses
+                    .set(self.store_stats.cache_corrupt_misses.get() + 1);
+                cached = None;
+            }
+        }
+        match cached {
+            Some(batches) => {
+                self.ref_cache_hits.set(self.ref_cache_hits.get() + 1);
                 match &self.pool {
                     Some(p) => p.install_references(pool::CALIB_SET, &batches)?,
                     None => {
+                        let set = self.calib_set()?;
                         self.model
                             .engine
                             .install_reference(set.id, FpReference::from_batches(batches)?);
@@ -233,32 +287,35 @@ impl Pipeline {
                 if let Some(p) = &self.pool {
                     p.build_references(pool::CALIB_SET)?;
                     let batches = p.fetch_reference(pool::CALIB_SET)?;
-                    sens_cache::store_ref(&slot, &batches)?;
+                    sens_cache::store_ref(&slot, digest, &batches)?;
                 }
             }
         }
         Ok(())
     }
 
-    /// Path of the calibration FP32 reference in the on-disk cache, when
-    /// the cache is enabled.
-    fn ref_cache_slot(&self, ds: &DataSet) -> Option<PathBuf> {
+    /// Path and content digest of the calibration FP32 reference in the
+    /// on-disk cache, when the cache is enabled.
+    fn ref_cache_slot(&self, ds: &DataSet) -> Option<(PathBuf, u64)> {
         let dir = self.sens_cache_dir.as_ref()?;
         let digest = sens_cache::ref_digest(&self.model.entry, ds, &self.model.weights);
-        Some(sens_cache::ref_path(dir, &self.model.entry.name, digest))
+        Some((
+            sens_cache::ref_path(dir, &self.model.entry.name, digest),
+            digest,
+        ))
     }
 
     /// Serial-path counterpart of the reference persistence: after a sweep
     /// that built the reference lazily, store it if the cache wants it.
     fn persist_serial_reference(&self) -> Result<()> {
         let (Some(ds), Some(set)) = (&self.calib_ds, &self.calib_set) else { return Ok(()) };
-        let Some(slot) = self.ref_cache_slot(ds) else { return Ok(()) };
+        let Some((slot, digest)) = self.ref_cache_slot(ds) else { return Ok(()) };
         if slot.exists() {
             return Ok(());
         }
         // served from the engine's in-memory cache — zero forward calls
         let r = self.model.engine.reference(&self.model, set)?;
-        sens_cache::store_ref(&slot, &r.batches)
+        sens_cache::store_ref(&slot, digest, &r.batches)
     }
 
     fn pool_push_val(&self) -> Result<()> {
@@ -348,12 +405,13 @@ impl Pipeline {
         let calib = self.calib_set()?;
         let slot = if rounded.is_none() { self.sens_cache_slot(lattice, metric) } else { None };
         if let Some((path, _)) = &slot {
-            if let Some(list) = sens_cache::load(path)? {
+            if let Some(list) = sens_cache::load(path, &self.store_stats)? {
                 self.sens_cache_hits.set(self.sens_cache_hits.get() + 1);
                 return Ok(list);
             }
             self.sens_cache_misses.set(self.sens_cache_misses.get() + 1);
         }
+        let jscope = self.phase1_scope(lattice, metric, rounded);
         let pooled = match &self.pool {
             Some(p) if sensitivity::has_pooled_path(metric) => Some(p),
             Some(_) => {
@@ -373,6 +431,7 @@ impl Pipeline {
                 lattice,
                 metric,
                 rounded,
+                jscope.as_ref(),
             )?,
             None => {
                 let list = sensitivity::sensitivity_list(
@@ -382,6 +441,7 @@ impl Pipeline {
                     calib,
                     metric,
                     rounded,
+                    jscope.as_ref(),
                 )?;
                 if metric == Metric::Sqnr {
                     // the sweep just built the FP reference lazily —
@@ -411,13 +471,60 @@ impl Pipeline {
         ))
     }
 
+    /// Journal scope for a Phase-1 sweep: the sensitivity-cache digest
+    /// (model identity + weights + lattice + metric + exact calibration
+    /// tensors), with the stitched AdaRound tensors folded in when the
+    /// sweep runs on rounded weights — a journal written under different
+    /// data, bits or rounding never replays.
+    fn phase1_scope(
+        &self,
+        lattice: &Lattice,
+        metric: Metric,
+        rounded: Option<&RoundedWeights>,
+    ) -> Option<JournalScope> {
+        let j = self.journal.as_ref()?;
+        let ds = self.calib_ds.as_ref()?;
+        let mut base =
+            sens_cache::digest(&self.model.entry, lattice, metric, ds, &self.model.weights);
+        if let Some(r) = rounded {
+            let mut h = Fnv::new();
+            h.write_u64(base);
+            h.write_u64(rounded_digest(r));
+            base = h.finish();
+        }
+        Some(JournalScope::new(Rc::clone(j), base))
+    }
+
     // -- AdaRound ---------------------------------------------------------------
 
     /// Precompute AdaRounded weights for every layer × weight-bit option.
     /// Taps are captured once on this pipeline's client; the independent
     /// `(layer, wbits)` optimizations then anneal concurrently across the
     /// fleet when one is attached (bit-identical to the serial path).
+    /// With a run journal attached, already-optimized tensors replay from
+    /// it — and when the journal covers *every* `(layer, wbits)` pair, the
+    /// tap capture (a full forward sweep) is skipped entirely.
     pub fn adaround(&self, lattice: &Lattice, cfg: &AdaRoundCfg) -> Result<RoundedWeights> {
+        let wbits = lattice.wbits_options();
+        let jscope = self.adaround_scope(cfg);
+        if let Some(j) = &jscope {
+            let keys = adaround::expected_keys(&self.model.entry, &wbits)?;
+            let complete = !keys.is_empty()
+                && keys.iter().all(|&(p, b)| {
+                    j.journal
+                        .contains(store::kind::ADAROUND, store::adaround_key(j.base, p, b))
+                });
+            if complete {
+                let mut out = RoundedWeights::new();
+                for key in keys {
+                    let t = adaround::journal_lookup(j, key)?.ok_or_else(|| {
+                        anyhow!("journaled AdaRound record for {key:?} vanished mid-run")
+                    })?;
+                    out.insert(key, t);
+                }
+                return Ok(out);
+            }
+        }
         let set = self.calib_set()?;
         let taps = adaround::capture_taps(
             &self.model,
@@ -425,11 +532,43 @@ impl Pipeline {
             &set.batches,
             cfg.tap_batches,
         )?;
-        let wbits = lattice.wbits_options();
         match &self.pool {
-            Some(p) => adaround::adaround_all_pooled(p, &self.model, &taps, &wbits, cfg),
-            None => adaround::adaround_all(&self.model, &self.manifest, &taps, &wbits, cfg),
+            Some(p) => {
+                adaround::adaround_all_pooled(p, &self.model, &taps, &wbits, cfg, jscope.as_ref())
+            }
+            None => adaround::adaround_all(
+                &self.model,
+                &self.manifest,
+                &taps,
+                &wbits,
+                cfg,
+                jscope.as_ref(),
+            ),
         }
+    }
+
+    /// Journal scope for AdaRound: model identity + trained weights +
+    /// exact calibration tensors + every optimizer hyperparameter
+    /// (bit-exact floats), so a rounded tensor only ever replays into an
+    /// identical optimization.
+    fn adaround_scope(&self, cfg: &AdaRoundCfg) -> Option<JournalScope> {
+        let j = self.journal.as_ref()?;
+        let ds = self.calib_ds.as_ref()?;
+        let mut h = Fnv::new();
+        h.write_bytes(self.model.entry.name.as_bytes());
+        for w in &self.model.weights {
+            h.write_tensor(w);
+        }
+        h.write_tensor(&ds.x);
+        h.write_tensor(&ds.y);
+        h.write_usize(cfg.steps);
+        h.write_u32(cfg.lr.to_bits());
+        h.write_u32(cfg.lambda.to_bits());
+        h.write_u32(cfg.beta_hi.to_bits());
+        h.write_u32(cfg.beta_lo.to_bits());
+        h.write_usize(cfg.tap_batches);
+        h.write_u64(cfg.seed);
+        Some(JournalScope::new(Rc::clone(j), h.finish()))
     }
 
     // -- Phase 2 ---------------------------------------------------------------
@@ -440,7 +579,8 @@ impl Pipeline {
 
     /// A search context on `set`; prefix evaluations fan out through the
     /// pool when one is enabled (`set_key` names the set's pool
-    /// registration).
+    /// registration) and journal/replay through the run journal when one
+    /// is attached.
     fn ctx<'a>(
         &'a self,
         lattice: &'a Lattice,
@@ -450,7 +590,58 @@ impl Pipeline {
         rounded: Option<&'a RoundedWeights>,
     ) -> SearchCtx<'a> {
         let pooled = self.pool.as_ref().map(|p| (p, set_key));
-        SearchCtx::with_pool(&self.model, lattice, flips, set, rounded, pooled)
+        let mut ctx = SearchCtx::with_pool(&self.model, lattice, flips, set, rounded, pooled);
+        if let Some(scope) = self.search_scope(lattice, flips, set_key, rounded) {
+            ctx = ctx.with_journal(scope);
+        }
+        ctx
+    }
+
+    /// Journal scope for a Phase-2 search: model identity + weights + the
+    /// host copy of the evaluated set + lattice + the **exact flip
+    /// sequence** (group, bits, score and BOPs bits per step) + stitched
+    /// rounding.  A journaled prefix index `k` only means something under
+    /// this exact ordering, so any of these changing voids the records.
+    fn search_scope(
+        &self,
+        lattice: &Lattice,
+        flips: &[FlipStep],
+        set_key: pool::SetKey,
+        rounded: Option<&RoundedWeights>,
+    ) -> Option<JournalScope> {
+        let j = self.journal.as_ref()?;
+        let ds = if set_key == pool::CALIB_SET {
+            self.calib_ds.as_ref()?
+        } else {
+            self.val_ds.as_ref()?
+        };
+        let mut h = Fnv::new();
+        h.write_bytes(self.model.entry.name.as_bytes());
+        for w in &self.model.weights {
+            h.write_tensor(w);
+        }
+        h.write_u64(set_key);
+        h.write_tensor(&ds.x);
+        h.write_tensor(&ds.y);
+        h.write_u8(lattice.baseline.wbits);
+        h.write_u8(lattice.baseline.abits);
+        for c in &lattice.candidates {
+            h.write_u8(c.wbits);
+            h.write_u8(c.abits);
+        }
+        for f in flips {
+            h.write_usize(f.group);
+            h.write_u8(f.cand.wbits);
+            h.write_u8(f.cand.abits);
+            h.write_u8(f.prev.wbits);
+            h.write_u8(f.prev.abits);
+            h.write_u64(f.rel_bops.to_bits());
+            h.write_u64(f.score.to_bits());
+        }
+        if let Some(r) = rounded {
+            h.write_u64(rounded_digest(r));
+        }
+        Some(JournalScope::new(Rc::clone(j), h.finish()))
     }
 
     /// Phase 2 under a BOPs budget; final metric measured on the val set.
@@ -586,6 +777,21 @@ impl Pipeline {
         let ctx = self.ctx(lattice, flips, set, pool::VAL_SET, rounded);
         search::full_curve(&ctx)
     }
+}
+
+/// Digest of stitched AdaRound tensors: sorted `(param_idx, wbits)` keys,
+/// each folded with its full tensor content — deterministic regardless of
+/// `HashMap` iteration order.
+fn rounded_digest(r: &RoundedWeights) -> u64 {
+    let mut keys: Vec<_> = r.keys().copied().collect();
+    keys.sort_unstable();
+    let mut h = Fnv::new();
+    for (p, b) in keys {
+        h.write_usize(p);
+        h.write_u8(b);
+        h.write_tensor(&r[&(p, b)]);
+    }
+    h.finish()
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

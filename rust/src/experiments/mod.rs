@@ -20,6 +20,7 @@ use crate::report::{f3, f4, Table};
 use crate::runtime::Runtime;
 use crate::search::SearchRun;
 use crate::sensitivity::{self, Metric};
+use crate::store::{RunJournal, StoreStats};
 use anyhow::{Context, Result};
 use std::rc::Rc;
 
@@ -41,6 +42,10 @@ pub struct Opts {
     /// `crate::pool::FaultPlan` grammar) — overrides `MPQ_FAULT_PLAN` and
     /// the manifest's `fault_plan` key; `None` falls back to those
     pub fault_plan: Option<String>,
+    /// `--resume`: replay the run journal and skip completed Phase-1
+    /// probes / prefix evaluations / AdaRound layers instead of starting
+    /// the journal fresh
+    pub resume: bool,
 }
 
 impl Default for Opts {
@@ -53,6 +58,7 @@ impl Default for Opts {
             fast: std::env::var_os("MPQ_FAST").is_some(),
             workers: crate::util::default_workers(),
             fault_plan: None,
+            resume: false,
         }
     }
 }
@@ -73,6 +79,47 @@ impl Opts {
             _ => Some(self.dir.join("sens_cache")),
         }
     }
+
+    /// Crash-safe run-journal path for the drivers:
+    /// `<artifacts>/journal.mpqj` by default, a path in `MPQ_JOURNAL`
+    /// overrides, `MPQ_JOURNAL=0` disables journaling entirely.
+    pub fn journal_path(&self) -> Option<std::path::PathBuf> {
+        match std::env::var("MPQ_JOURNAL") {
+            Ok(v) if v == "0" => None,
+            Ok(v) if !v.is_empty() && v != "1" => Some(std::path::PathBuf::from(v)),
+            _ => Some(self.dir.join("journal.mpqj")),
+        }
+    }
+}
+
+/// Resolve the effective fault plan the way the fleet does — explicit
+/// `--fault-plan` over `MPQ_FAULT_PLAN` over the manifest's `fault_plan`
+/// key — so `crash@PHASE:N` barriers fire identically in serial runs
+/// (where no fleet exists to do the resolving).
+fn resolve_fault_plan(opts: &Opts, manifest: &Manifest) -> Result<FaultPlan> {
+    if let Some(spec) = &opts.fault_plan {
+        return FaultPlan::parse(spec);
+    }
+    match std::env::var("MPQ_FAULT_PLAN") {
+        Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s),
+        _ => match manifest.fault_plan.as_deref() {
+            Some(s) => FaultPlan::parse(s),
+            None => Ok(FaultPlan::default()),
+        },
+    }
+}
+
+/// Open the crash-safe run journal for a driver/CLI run: path from
+/// [`Opts::journal_path`] (`None` = journaling disabled), fresh unless
+/// `--resume`, with any `crash@PHASE:N` barriers from the effective fault
+/// plan armed.
+pub fn open_journal(opts: &Opts, manifest: &Manifest) -> Result<Option<Rc<RunJournal>>> {
+    let Some(path) = opts.journal_path() else { return Ok(None) };
+    let stats = Rc::new(StoreStats::default());
+    let barriers = resolve_fault_plan(opts, manifest)?.crash_barriers();
+    Ok(Some(Rc::new(
+        RunJournal::open(&path, opts.resume, stats)?.with_crash_barriers(barriers),
+    )))
 }
 
 pub struct Env {
@@ -83,6 +130,9 @@ pub struct Env {
     /// worker threads and compiled executables persist across models
     fleet: Option<Rc<EvalFleet>>,
     sens_cache: Option<std::path::PathBuf>,
+    /// crash-safe run journal shared by every pipeline the driver opens
+    /// (`--resume` replays it; `MPQ_JOURNAL=0` disables)
+    journal: Option<Rc<RunJournal>>,
 }
 
 impl Env {
@@ -99,11 +149,13 @@ impl Env {
         } else {
             None
         };
+        let journal = open_journal(opts, &manifest)?;
         Ok(Self {
             manifest,
             rt,
             fleet,
             sens_cache: opts.sens_cache_dir(),
+            journal,
         })
     }
 
@@ -115,11 +167,17 @@ impl Env {
 
     pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
         let mut pipe = Pipeline::open_with(self.rt.clone(), &self.manifest, model)?;
+        pipe.set_sens_cache_dir(self.sens_cache.clone());
+        pipe.set_journal(self.journal.clone());
         if let Some(fleet) = &self.fleet {
             pipe.attach_fleet(fleet)?;
         }
-        pipe.set_sens_cache_dir(self.sens_cache.clone());
         Ok(pipe)
+    }
+
+    /// The shared run journal, when journaling is enabled.
+    pub fn journal(&self) -> Option<&Rc<RunJournal>> {
+        self.journal.as_ref()
     }
 
     /// Models that exist in the manifest, intersected with a default list
@@ -188,6 +246,25 @@ fn pipe_note(pipe: &Pipeline) -> String {
                 fs.worker_restarts,
                 fs.jobs_requeued,
                 fs.degraded_events.len()
+            ));
+        }
+    }
+    // durability telemetry likewise rides along only when the journal or
+    // the caches actually did something
+    let ss = pipe.store_stats();
+    if ss.any() {
+        note.push_str(&format!(
+            ", journal {}a/{}r/{}s",
+            ss.journal_appended.get(),
+            ss.journal_replayed.get(),
+            ss.journal_skips.get()
+        ));
+        if ss.any_degraded() {
+            note.push_str(&format!(
+                " (truncated {}, corrupt-miss {}, quarantined {})",
+                ss.journal_truncations.get(),
+                ss.cache_corrupt_misses.get(),
+                ss.files_quarantined.get()
             ));
         }
     }
@@ -449,12 +526,14 @@ pub fn fig2(opts: &Opts) -> Result<(Table, Table)> {
     let gt = {
         let ds = pipe.model.data.val.clone();
         let set = pipe.model.eval_set(&ds)?;
+        // ground truth is a one-off diagnostic sweep — never journaled
         sensitivity::sensitivity_list(
             &pipe.model,
             &pipe.manifest,
             &lat,
             &set,
             Metric::Accuracy,
+            None,
             None,
         )?
     };

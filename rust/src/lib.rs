@@ -69,6 +69,7 @@ pub mod runtime;
 pub mod search;
 pub mod sensitivity;
 pub mod sim;
+pub mod store;
 pub mod tensor;
 pub mod util;
 

@@ -40,6 +40,7 @@ fn opts_from(args: &Args) -> Result<Opts> {
     o.fast = o.fast || args.flag("fast");
     o.workers = args.opt_workers()?;
     o.fault_plan = args.opt("fault-plan").map(String::from);
+    o.resume = args.flag("resume");
     if let Some(ms) = args.opt("models") {
         o.models = Some(ms.split(',').map(String::from).collect());
     }
@@ -68,6 +69,23 @@ fn report_fleet_failures(pipe: &Pipeline) {
             mpq::report::fleet_failure_table(&fs).print();
         }
     }
+}
+
+/// Print the durability telemetry (journal replay/skips, quarantined
+/// caches) — only when the journal or the caches actually did something.
+fn report_store_stats(pipe: &Pipeline) {
+    let ss = pipe.store_stats();
+    if ss.any() {
+        mpq::report::store_stats_table(ss).print();
+    }
+}
+
+/// Attach the crash-safe run journal to a single-model command's pipeline
+/// (`--resume` replays it; `MPQ_JOURNAL=0` disables).
+fn attach_journal(pipe: &mut Pipeline, opts: &Opts) -> Result<()> {
+    let journal = experiments::open_journal(opts, &pipe.manifest)?;
+    pipe.set_journal(journal);
+    Ok(())
 }
 
 fn lattice_from(args: &Args) -> Result<Lattice> {
@@ -110,6 +128,7 @@ fn main() -> Result<()> {
                 enable_fleet(&mut pipe, &opts)?;
             }
             pipe.set_sens_cache_dir(opts.sens_cache_dir());
+            attach_journal(&mut pipe, &opts)?;
             pipe.calibrate(opts.calib_n, opts.seed)?;
             let fp = pipe.eval_fp32()?;
             let run = pipe.mixed_precision_for_budget(&lat, budget)?;
@@ -124,6 +143,7 @@ fn main() -> Result<()> {
                 println!("  group {:>3} → {}  (r→{:.3}, Ω={:.1})", s.group, s.cand.label(), s.rel_bops, s.score);
             }
             report_fleet_failures(&pipe);
+            report_store_stats(&pipe);
         }
         "sensitivity" => {
             let model = args.opt("model").unwrap_or("resnet_s");
@@ -133,6 +153,7 @@ fn main() -> Result<()> {
                 enable_fleet(&mut pipe, &opts)?;
             }
             pipe.set_sens_cache_dir(opts.sens_cache_dir());
+            attach_journal(&mut pipe, &opts)?;
             pipe.calibrate(opts.calib_n, opts.seed)?;
             let sens = pipe.sensitivity_sqnr(&lat)?;
             println!("{:<8} {:<8} {:>10}", "group", "cand", "Ω (dB)");
@@ -140,6 +161,7 @@ fn main() -> Result<()> {
                 println!("{:<8} {:<8} {:>10.2}", e.group, e.cand.label(), e.score);
             }
             report_fleet_failures(&pipe);
+            report_store_stats(&pipe);
         }
         "sim-gen" => {
             let out = args.opt_str("out", "sim-artifacts");
@@ -215,7 +237,13 @@ fn main() -> Result<()> {
             println!("                    'panic@1:3,budget:2,deadline:500' (also via the");
             println!("                    MPQ_FAULT_PLAN env var or the manifest fault_plan key;");
             println!("                    the supervisor respawns, requeues and degrades —");
-            println!("                    results stay bit-identical to the fault-free run)");
+            println!("                    results stay bit-identical to the fault-free run);");
+            println!("                    'crash@PHASE:N' aborts the coordinator at its Nth");
+            println!("                    run-journal barrier (crash-recovery testing)");
+            println!("       --resume     replay the run journal (<artifacts>/journal.mpqj,");
+            println!("                    MPQ_JOURNAL overrides path, =0 disables): completed");
+            println!("                    Phase-1 probes, search prefixes and AdaRound layers");
+            println!("                    are served back bit-exactly instead of re-run");
             println!("sim-gen: --out DIR --dims d0,d1,..,dL --batch B --calib-n N --val-n N");
             println!("         --ood-n N --sim-seed S --fault-plan SPEC");
             println!("         (pure-Rust backend; no PJRT needed)");

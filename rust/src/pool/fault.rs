@@ -29,6 +29,10 @@
 //! | `compile@L[:N][*]`| lane L's Nth cache-miss compile fails (default N=1) |
 //! | `slow@L:MS`      | lane L sleeps MS ms before every request             |
 //! | `stall@L:N[*]`   | lane L blocks on its Nth probe (watchdog fodder)     |
+//! | `crash@PHASE:N`  | the *coordinator process* aborts at its Nth run-     |
+//! |                  | journal barrier (after the record is durable) — the  |
+//! |                  | `--resume` crash-recovery fault; lane-less, never    |
+//! |                  | fires worker-side                                    |
 //! | `deadline:MS`    | collect watchdog: no reply for MS ms ⇒ stuck workers |
 //! |                  | owing results are declared dead                      |
 //! | `budget:N`       | per-lane restart budget (default 3)                  |
@@ -59,6 +63,11 @@ pub enum FaultKind {
     /// Block (sleep far past any deadline) on the Nth probe — converted
     /// to a death by the collect watchdog when `deadline:MS` is set.
     StallOnProbe(usize),
+    /// Abort the coordinator *process* at its Nth run-journal barrier
+    /// (1-based), after the Nth record is durable — `crash@PHASE:N`.
+    /// Lane-less: workers never fire it; the `RunJournal` does, via
+    /// [`FaultPlan::crash_barriers`].
+    CrashAtBarrier(usize),
 }
 
 /// One scheduled fault, bound to a worker lane.
@@ -93,6 +102,23 @@ impl FaultPlan {
             && self.deadline_ms.is_none()
             && self.budget.is_none()
             && self.backoff_ms.is_none()
+    }
+
+    /// Sorted 1-based journal-barrier ordinals of every `crash@PHASE:N`
+    /// fault in the plan — consumed by `store::RunJournal`, never by
+    /// workers (the worker-side fire predicates match on exact kinds).
+    pub fn crash_barriers(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::CrashAtBarrier(n) => Some(n as u64),
+                _ => None,
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// Parse the comma-separated fault grammar (see the module docs).
@@ -132,6 +158,26 @@ impl FaultPlan {
                 Some((l, a)) => (l, Some(a)),
                 None => (rest, None),
             };
+            if head.trim() == "crash" {
+                // coordinator-side fault: lane-less, targets the journal
+                if lane_s.trim() != "PHASE" {
+                    bail!("fault token '{raw}': crash targets 'PHASE' (crash@PHASE:N)");
+                }
+                let nth = match arg_s {
+                    Some(a) => a.trim().parse::<u64>().map_err(|e| {
+                        anyhow::anyhow!("fault token '{raw}': bad barrier ordinal: {e}")
+                    })? as usize,
+                    None => bail!("fault token '{raw}' needs ':N'"),
+                };
+                if nth == 0 {
+                    bail!("fault token '{raw}': event ordinals are 1-based");
+                }
+                // lane is meaningless for a coordinator fault; `recurring`
+                // is accepted but irrelevant (the process dies on fire)
+                plan.faults
+                    .push(Fault { lane: 0, kind: FaultKind::CrashAtBarrier(nth), recurring });
+                continue;
+            }
             let lane: usize = lane_s
                 .trim()
                 .parse()
@@ -333,6 +379,28 @@ mod tests {
             p.faults[4],
             Fault { lane: 1, kind: FaultKind::StallOnProbe(4), recurring: false }
         );
+    }
+
+    #[test]
+    fn parses_crash_barriers() {
+        let p = FaultPlan::parse("crash@PHASE:3, slow@0:2, crash@PHASE:1").unwrap();
+        assert_eq!(p.crash_barriers(), vec![1, 3]);
+        assert_eq!(
+            p.faults[0],
+            Fault { lane: 0, kind: FaultKind::CrashAtBarrier(3), recurring: false }
+        );
+        // crash faults are coordinator-side: no worker predicate fires them
+        let st = FaultState::new(p);
+        for nth in 1..=4 {
+            assert!(!st.fire_panic(0, nth));
+            assert!(!st.fire_stall(0, nth));
+            assert!(!st.fire_upload(0, nth));
+        }
+        assert!(st.arm_compile(0).is_none());
+        assert_eq!(st.injected(), 0);
+        assert!(FaultPlan::parse("crash@0:1").is_err(), "crash targets PHASE");
+        assert!(FaultPlan::parse("crash@PHASE:0").is_err(), "ordinals are 1-based");
+        assert!(FaultPlan::parse("crash@PHASE").is_err(), "crash needs :N");
     }
 
     #[test]

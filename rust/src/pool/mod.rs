@@ -147,6 +147,24 @@
 //! the old data were still in flight, the requeued probe evaluates the new
 //! data.  Pipelines never do this (they drain probes before reloading a
 //! set), and the property/e2e tests never hit it.
+//!
+//! ## Durability & resume (process-boundary crashes)
+//!
+//! The supervisor above covers worker-*thread* death; death of the whole
+//! coordinator process is covered one layer up by the write-ahead run
+//! journal ([`crate::store::RunJournal`], attached via
+//! `Pipeline::set_journal`).  The pooled paths participate symmetrically
+//! with the serial ones: `sensitivity_list_pooled` replays journaled
+//! probes *before* anything enters the fleet (a replayed probe is never
+//! submitted) and journals each fresh score in submission order as its
+//! wait completes, so barrier ordinals are deterministic at any worker
+//! count; `adaround_all_pooled` does the same per `(layer, wbits)` job.
+//! Since pooled results are bit-identical to serial ones (the exactness
+//! guarantee), a journal written by a pooled run resumes a serial run and
+//! vice versa, at any worker count.  The `crash@PHASE:N` fault-plan clause
+//! (see [`FaultPlan`]) aborts the process at the Nth journal barrier —
+//! write-ahead order, *after* the record is durable — which is how the
+//! `resume_e2e` kill/restart matrix drives every crash point.
 
 mod fault;
 mod worker;

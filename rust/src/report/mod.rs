@@ -93,12 +93,13 @@ impl Table {
         print!("{}", self.render());
     }
 
-    /// Save both renderings under `results/<stem>.{txt,csv}`.
+    /// Save both renderings under `results/<stem>.{txt,csv}` (atomic
+    /// temp+rename — a crash mid-save never leaves a half-written report).
     pub fn save(&self, results_dir: impl AsRef<Path>, stem: &str) -> Result<()> {
         let dir = results_dir.as_ref();
         std::fs::create_dir_all(dir)?;
-        std::fs::write(dir.join(format!("{stem}.txt")), self.render())?;
-        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        crate::store::atomic_write(dir.join(format!("{stem}.txt")), self.render().as_bytes())?;
+        crate::store::atomic_write(dir.join(format!("{stem}.csv")), self.to_csv().as_bytes())?;
         Ok(())
     }
 }
@@ -131,6 +132,21 @@ pub fn fleet_failure_table(stats: &crate::pool::FailureStats) -> Table {
     for d in &stats.last_deaths {
         t.row(vec!["death".into(), d.clone()]);
     }
+    t
+}
+
+/// Render the durability telemetry ([`crate::store::StoreStats`]) as a
+/// [`Table`] — journal traffic first, then the degradation counters, so
+/// resumed / corruption-degraded runs surface their story next to the
+/// fleet failure table.
+pub fn store_stats_table(stats: &crate::store::StoreStats) -> Table {
+    let mut t = Table::new("Store — durability telemetry", &["event", "count"]);
+    t.row(vec!["journal_appended".into(), stats.journal_appended.get().to_string()]);
+    t.row(vec!["journal_replayed".into(), stats.journal_replayed.get().to_string()]);
+    t.row(vec!["journal_skips".into(), stats.journal_skips.get().to_string()]);
+    t.row(vec!["journal_truncations".into(), stats.journal_truncations.get().to_string()]);
+    t.row(vec!["cache_corrupt_misses".into(), stats.cache_corrupt_misses.get().to_string()]);
+    t.row(vec!["files_quarantined".into(), stats.files_quarantined.get().to_string()]);
     t
 }
 

@@ -33,6 +33,13 @@
 //! `1/N` of a sweep.  The pool's memo replaces the per-run [`Evaluator`]
 //! memo (and persists across runs on the same pool), with identical
 //! results for the counting metrics.
+//!
+//! With [`SearchCtx::with_journal`] attached, every evaluated prefix
+//! metric is additionally appended to the crash-safe run journal (keyed
+//! by the search-scope content digest + the prefix length `k`), and a
+//! `--resume` run serves journaled prefixes back bit-exactly before
+//! touching the engine or the pool — the search replays its own decision
+//! sequence and continues from the first unevaluated prefix.
 
 use crate::bops;
 use crate::engine::Evaluator;
@@ -41,6 +48,7 @@ use crate::manifest::ModelEntry;
 use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
 use crate::pool::{EvalPool, ProbeKind, SetKey};
 use crate::sensitivity::{RoundedWeights, SensEntry};
+use crate::store::{self, JournalScope};
 use crate::util::Timer;
 use anyhow::Result;
 use std::cell::RefCell;
@@ -175,6 +183,10 @@ pub struct SearchCtx<'a> {
     /// pool (misses, hits) at context creation — run counters are deltas
     pool_base: (usize, usize),
     cursor: RefCell<PrefixCursor>,
+    /// run journal scoped to this search (model/data/lattice/flip-sequence
+    /// digest): every evaluated prefix metric is appended as a barrier and
+    /// `--resume` serves it back without touching the engine or the pool
+    journal: Option<JournalScope>,
 }
 
 impl<'a> SearchCtx<'a> {
@@ -213,7 +225,17 @@ impl<'a> SearchCtx<'a> {
             rounded,
             pool,
             pool_base,
+            journal: None,
         }
+    }
+
+    /// Attach a run-journal scope: evaluated prefixes are journaled at
+    /// `eval_key(scope.base, k)` and replayed on `--resume`.  Journal
+    /// skips count as neither `evals` nor `memo_hits` — the counters keep
+    /// describing what this process actually did.
+    pub fn with_journal(mut self, scope: JournalScope) -> Self {
+        self.journal = Some(scope);
+        self
     }
 
     /// Canonical configuration of the k-flip prefix (incremental cursor).
@@ -224,14 +246,28 @@ impl<'a> SearchCtx<'a> {
     }
 
     /// Metric of the k-flip prefix configuration (streamed + memoized),
-    /// shard-parallel when a pool is attached.
+    /// shard-parallel when a pool is attached, journal-replayed on resume.
     pub fn eval_at(&self, k: usize) -> Result<f64> {
+        if let Some(j) = &self.journal {
+            if let Some(m) = j
+                .journal
+                .lookup_f64(store::kind::SEARCH_EVAL, store::eval_key(j.base, k))
+            {
+                return Ok(m);
+            }
+        }
         let cfg = self.config_at(k);
         let ov = self.overrides_for(&cfg);
-        if let Some((pool, set)) = self.pool {
-            return pool.submit(set, ProbeKind::Metric, &cfg, &ov)?.wait();
+        let m = if let Some((pool, set)) = self.pool {
+            pool.submit(set, ProbeKind::Metric, &cfg, &ov)?.wait()?
+        } else {
+            self.eval.metric(&cfg, &ov)?
+        };
+        if let Some(j) = &self.journal {
+            j.journal
+                .record_f64(store::kind::SEARCH_EVAL, store::eval_key(j.base, k), m)?;
         }
-        self.eval.metric(&cfg, &ov)
+        Ok(m)
     }
 
     /// Distinct metric evaluations this run actually computed.

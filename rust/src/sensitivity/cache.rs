@@ -20,12 +20,23 @@
 //! (`set_sens_cache_dir`); the experiment drivers and the CLI enable it by
 //! default under `<artifacts>/sens_cache` (`MPQ_SENS_CACHE=0` disables, a
 //! path overrides) and report hit/miss counters.
+//!
+//! **Corruption degrades to a miss, never a failed run**: both caches are
+//! checksummed (an FNV field in the JSON; the framed
+//! [`crate::store`] blob container for the binary reference), loads verify
+//! before trusting, and a corrupt/truncated/half-written file is
+//! quarantined as `<name>.corrupt` with a warning and a
+//! [`crate::store::StoreStats`] counter bump — the sweep then simply
+//! regenerates it.  All persists go through the atomic temp+fsync+rename
+//! helper, so concurrent runs sharing a cache dir never observe partial
+//! files.
 
 use super::{Metric, SensEntry};
 use crate::data::DataSet;
 use crate::groups::{Candidate, Lattice};
 use crate::jsonio::{self, Json};
 use crate::manifest::ModelEntry;
+use crate::store::{self, StoreStats};
 use crate::tensor::{io as tio, Tensor};
 use crate::util::Fnv;
 use anyhow::{Context, Result};
@@ -74,11 +85,40 @@ pub fn cache_path(dir: &Path, model: &str, metric: Metric, digest: u64) -> PathB
     dir.join(format!("sens_{model}_{}_{digest:016x}.json", metric_tag(metric)))
 }
 
-/// Load a cached list; `Ok(None)` when the file doesn't exist.
-pub fn load(path: &Path) -> Result<Option<Vec<SensEntry>>> {
+/// FNV checksum over a list's semantic content (group, candidate, exact
+/// score bits per entry) — the integrity field `store`/`load` verify.
+fn entries_checksum(entries: &[SensEntry]) -> u64 {
+    let mut h = Fnv::new();
+    for e in entries {
+        h.write_usize(e.group);
+        h.write_u8(e.cand.wbits);
+        h.write_u8(e.cand.abits);
+        h.write_u64(e.score.to_bits());
+    }
+    h.finish()
+}
+
+/// Load a cached list; `Ok(None)` when the file doesn't exist **or** is
+/// corrupt — a file that fails to parse or fails its checksum (including
+/// pre-checksum legacy files) is quarantined and treated as a miss, never
+/// an error: the sweep regenerates it.
+pub fn load(path: &Path, stats: &StoreStats) -> Result<Option<Vec<SensEntry>>> {
     if !path.exists() {
         return Ok(None);
     }
+    match try_load(path) {
+        Ok(out) => Ok(Some(out)),
+        Err(e) => {
+            store::quarantine(path, stats, &format!("corrupt sens cache ({e:#})"));
+            stats
+                .cache_corrupt_misses
+                .set(stats.cache_corrupt_misses.get() + 1);
+            Ok(None)
+        }
+    }
+}
+
+fn try_load(path: &Path) -> Result<Vec<SensEntry>> {
     let j = jsonio::parse_file(path).with_context(|| format!("sens cache {}", path.display()))?;
     let mut out = Vec::new();
     for e in j.req("entries")?.as_arr()? {
@@ -91,7 +131,13 @@ pub fn load(path: &Path) -> Result<Option<Vec<SensEntry>>> {
             score: e.req("score")?.as_f64()?,
         });
     }
-    Ok(Some(out))
+    let want = u64::from_str_radix(j.req("checksum")?.as_str()?, 16)
+        .context("bad checksum field")?;
+    let got = entries_checksum(&out);
+    if want != got {
+        anyhow::bail!("checksum mismatch: file says {want:016x}, content is {got:016x}");
+    }
+    Ok(out)
 }
 
 /// Persist a list.  Skipped (not an error) when any score is non-finite.
@@ -104,10 +150,6 @@ pub fn store(
 ) -> Result<()> {
     if entries.iter().any(|e| !e.score.is_finite()) {
         return Ok(());
-    }
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)
-            .with_context(|| format!("creating {}", parent.display()))?;
     }
     let arr = entries
         .iter()
@@ -124,9 +166,10 @@ pub fn store(
         ("model".into(), Json::Str(model.into())),
         ("metric".into(), Json::Str(metric_tag(metric).into())),
         ("digest".into(), Json::Str(format!("{digest:016x}"))),
+        ("checksum".into(), Json::Str(format!("{:016x}", entries_checksum(entries)))),
         ("entries".into(), Json::Arr(arr)),
     ]);
-    std::fs::write(path, j.to_string() + "\n")
+    store::atomic_write(path, (j.to_string() + "\n").as_bytes())
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(())
 }
@@ -141,8 +184,11 @@ pub fn store(
 // Persisting it next to the sensitivity cache lets repeated experiment
 // drivers skip the reference forward sweep entirely (ROADMAP open item):
 // the pipeline installs the restored per-batch logits into the serial
-// engine, or ships shard slices to every fleet worker.  Files are MPQT
-// tensor concatenations (`tensor::io`), so logits round-trip bit-exactly.
+// engine, or ships shard slices to every fleet worker.  Files are a
+// `store` blob (checksummed framed container, keyed by the content
+// digest) wrapping an MPQT tensor concatenation (`tensor::io`), so logits
+// round-trip bit-exactly and any corruption — including a payload bit
+// flip raw MPQT could not detect — degrades to a quarantined miss.
 
 /// Content digest of everything the FP32 reference depends on: the model
 /// identity and **trained weight tensors** plus the exact calibration
@@ -165,23 +211,33 @@ pub fn ref_path(dir: &Path, model: &str, digest: u64) -> PathBuf {
 }
 
 /// Load cached per-batch FP32 logits; `Ok(None)` when the file doesn't
-/// exist.
-pub fn load_ref(path: &Path) -> Result<Option<Vec<Tensor>>> {
-    if !path.exists() {
-        return Ok(None);
+/// exist **or** is corrupt/stale — bad container, failed checksum, digest
+/// mismatch, undecodable payload and pre-container legacy files are all
+/// quarantined and treated as a miss, never an error.
+pub fn load_ref(path: &Path, digest: u64, stats: &StoreStats) -> Result<Option<Vec<Tensor>>> {
+    let miss = |e: anyhow::Error| {
+        store::quarantine(path, stats, &format!("corrupt ref cache ({e:#})"));
+        stats
+            .cache_corrupt_misses
+            .set(stats.cache_corrupt_misses.get() + 1);
+        Ok(None)
+    };
+    match store::read_blob(path, digest) {
+        Ok(None) => Ok(None),
+        Ok(Some(payload)) => match tio::decode_tensors(&payload)
+            .with_context(|| format!("ref cache {}", path.display()))
+        {
+            Ok(ts) => Ok(Some(ts)),
+            Err(e) => miss(e),
+        },
+        Err(e) => miss(e),
     }
-    let ts = tio::read_tensors(path)
-        .with_context(|| format!("ref cache {}", path.display()))?;
-    Ok(Some(ts))
 }
 
-/// Persist per-batch FP32 logits (global batch order).
-pub fn store_ref(path: &Path, batches: &[Tensor]) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)
-            .with_context(|| format!("creating {}", parent.display()))?;
-    }
-    tio::write_tensors(path, batches)
+/// Persist per-batch FP32 logits (global batch order) under their content
+/// digest, atomically.
+pub fn store_ref(path: &Path, digest: u64, batches: &[Tensor]) -> Result<()> {
+    store::write_blob(path, digest, &tio::encode_tensors(batches))
         .with_context(|| format!("writing {}", path.display()))
 }
 
@@ -209,28 +265,70 @@ mod tests {
     #[test]
     fn store_load_roundtrips_bit_exactly() {
         let dir = std::env::temp_dir().join("mpq_sens_cache_test");
+        let stats = StoreStats::default();
         let path = cache_path(&dir, "resnet_s", Metric::Sqnr, 0xabcd);
         let list = fake_list();
         store(&path, "resnet_s", Metric::Sqnr, 0xabcd, &list).unwrap();
-        let got = load(&path).unwrap().expect("cache file written");
+        let got = load(&path, &stats).unwrap().expect("cache file written");
         assert_eq!(got.len(), list.len());
         for (g, w) in got.iter().zip(&list) {
             assert_eq!(g.group, w.group);
             assert_eq!(g.cand, w.cand);
             assert_eq!(g.score.to_bits(), w.score.to_bits(), "score must round-trip");
         }
+        assert!(!stats.any(), "clean roundtrip must not report degradation");
         std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn load_missing_is_none_and_nonfinite_not_stored() {
         let dir = std::env::temp_dir().join("mpq_sens_cache_test");
-        assert!(load(&cache_path(&dir, "x", Metric::Fit, 1)).unwrap().is_none());
+        let stats = StoreStats::default();
+        assert!(load(&cache_path(&dir, "x", Metric::Fit, 1), &stats).unwrap().is_none());
         let path = cache_path(&dir, "nanly", Metric::Accuracy, 2);
         let mut list = fake_list();
         list[1].score = f64::NAN;
         store(&path, "nanly", Metric::Accuracy, 2, &list).unwrap();
-        assert!(load(&path).unwrap().is_none(), "non-finite lists must not be cached");
+        assert!(
+            load(&path, &stats).unwrap().is_none(),
+            "non-finite lists must not be cached"
+        );
+        assert_eq!(stats.cache_corrupt_misses.get(), 0);
+    }
+
+    #[test]
+    fn corrupt_sens_cache_quarantines_to_miss() {
+        let dir = std::env::temp_dir().join("mpq_sens_cache_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = cache_path(&dir, "m", Metric::Sqnr, 0x77);
+        let list = fake_list();
+
+        // truncated JSON
+        store(&path, "m", Metric::Sqnr, 0x77, &list).unwrap();
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let stats = StoreStats::default();
+        assert!(load(&path, &stats).unwrap().is_none(), "truncation is a miss");
+        assert_eq!(stats.cache_corrupt_misses.get(), 1);
+        assert_eq!(stats.files_quarantined.get(), 1);
+        assert!(!path.exists(), "bad file moved aside");
+        let q = dir.join(format!("{}.corrupt", path.file_name().unwrap().to_string_lossy()));
+        assert!(q.exists(), "quarantined copy kept for post-mortem");
+
+        // tampered score: parses fine, fails the checksum
+        store(&path, "m", Metric::Sqnr, 0x77, &list).unwrap();
+        let tampered = std::fs::read_to_string(&path).unwrap().replace("17.25", "18.25");
+        assert_ne!(tampered, std::fs::read_to_string(&path).unwrap());
+        std::fs::write(&path, tampered).unwrap();
+        let stats = StoreStats::default();
+        assert!(load(&path, &stats).unwrap().is_none(), "checksum mismatch is a miss");
+        assert_eq!(stats.cache_corrupt_misses.get(), 1);
+
+        // legacy file without a checksum field: regenerate, don't trust
+        std::fs::write(&path, "{\"entries\": []}\n").unwrap();
+        let stats = StoreStats::default();
+        assert!(load(&path, &stats).unwrap().is_none());
+        assert_eq!(stats.cache_corrupt_misses.get(), 1);
     }
 
     #[test]
@@ -246,14 +344,33 @@ mod tests {
         assert_ne!(d0, ref_digest(&e, &ds, &w2), "weights keyed");
 
         let path = ref_path(&dir, "toy", d0);
-        assert!(load_ref(&path).unwrap().is_none(), "missing file is a miss");
+        let stats = StoreStats::default();
+        assert!(load_ref(&path, d0, &stats).unwrap().is_none(), "missing file is a miss");
         let batches = vec![
             Tensor::from_f32(&[2, 3], vec![0.1 + 0.2, -1.5, 3.25e-7, 0.0, -0.0, 42.0]).unwrap(),
             Tensor::from_f32(&[2, 3], vec![9.0, 8.0, 7.0, 6.0, 5.0, 4.0]).unwrap(),
         ];
-        store_ref(&path, &batches).unwrap();
-        let back = load_ref(&path).unwrap().expect("file written");
+        store_ref(&path, d0, &batches).unwrap();
+        let back = load_ref(&path, d0, &stats).unwrap().expect("file written");
         assert_eq!(back, batches, "logits must round-trip bit-exactly");
+        assert!(!stats.any(), "clean roundtrip must not report degradation");
+
+        // flip one payload bit: raw MPQT could not catch this — the blob
+        // container's checksum must, degrading to a quarantined miss
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_ref(&path, d0, &stats).unwrap().is_none(), "bit flip is a miss");
+        assert_eq!(stats.cache_corrupt_misses.get(), 1);
+        assert_eq!(stats.files_quarantined.get(), 1);
+        assert!(!path.exists());
+
+        // digest mismatch (stale file for other weights): miss as well
+        store_ref(&path, d0, &batches).unwrap();
+        let stats = StoreStats::default();
+        assert!(load_ref(&path, d0 ^ 1, &stats).unwrap().is_none(), "stale digest is a miss");
+        assert_eq!(stats.cache_corrupt_misses.get(), 1);
         std::fs::remove_file(&path).ok();
     }
 

@@ -20,6 +20,15 @@
 //! serial list; completed lists can also be persisted on disk ([`cache`])
 //! keyed by `(model, calibration-data digest, metric, lattice)` so repeated
 //! experiment drivers skip the sweep entirely.
+//!
+//! With a [`crate::store::JournalScope`] attached, every completed probe
+//! score is appended to the crash-safe run journal as it lands (keyed by
+//! the sweep's content digest + the probe's `(group, wbits, abits)`), and
+//! a `--resume` run skips exactly the journaled probes — serial and
+//! pooled sweeps alike, scores bit-equal to an uninterrupted run.  FIT is
+//! journaled at sweep granularity (its per-abits accumulation passes
+//! share work across every probe, so per-probe checkpoints would not be
+//! independently resumable).
 
 pub mod cache;
 
@@ -30,6 +39,7 @@ use crate::model::{EvalSet, ModelHandle, QuantConfig, WeightOverrides};
 use crate::pool::{EvalPool, ProbeKind, SetKey};
 use crate::quant::{self, ActRanges};
 use crate::runtime::{Buffer, Exe, Runtime};
+use crate::store::{self, JournalScope};
 use crate::tensor::Tensor;
 use crate::util::{db10, par_map};
 use anyhow::{anyhow, bail, Result};
@@ -138,6 +148,8 @@ pub fn probe_overrides(
 /// lowest score (Algorithm 1's sort).
 ///
 /// `rounded`: pass AdaRounded weights to interweave AdaRound into Phase 1.
+/// `journal`: append each completed probe to the run journal and skip
+/// probes a `--resume` replay already holds.
 pub fn sensitivity_list(
     handle: &ModelHandle,
     manifest: &Manifest,
@@ -145,11 +157,12 @@ pub fn sensitivity_list(
     set: &EvalSet,
     metric: Metric,
     rounded: Option<&RoundedWeights>,
+    journal: Option<&JournalScope>,
 ) -> Result<Vec<SensEntry>> {
     let mut entries = match metric {
-        Metric::Sqnr => sqnr_scores(handle, lattice, set, rounded)?,
-        Metric::Accuracy => accuracy_scores(handle, lattice, set, rounded)?,
-        Metric::Fit => fit_scores(handle, manifest, lattice, set)?,
+        Metric::Sqnr => sqnr_scores(handle, lattice, set, rounded, journal)?,
+        Metric::Accuracy => accuracy_scores(handle, lattice, set, rounded, journal)?,
+        Metric::Fit => fit_scores(handle, manifest, lattice, set, journal)?,
     };
     // total_cmp: a single NaN score must not panic the whole pipeline —
     // IEEE total order is defined for every bit pattern, so degenerate
@@ -177,32 +190,63 @@ pub fn sensitivity_list_pooled(
     lattice: &Lattice,
     metric: Metric,
     rounded: Option<&RoundedWeights>,
+    journal: Option<&JournalScope>,
 ) -> Result<Vec<SensEntry>> {
     let entry = &handle.entry;
     let mut entries = match metric {
-        Metric::Fit => fit_scores_pooled(pool, set, handle, lattice)?,
+        Metric::Fit => fit_scores_pooled(pool, set, handle, lattice, journal)?,
         Metric::Sqnr | Metric::Accuracy => {
             let kind = match metric {
                 Metric::Sqnr => ProbeKind::Sqnr,
                 _ => ProbeKind::Metric,
             };
             let targets = probe_targets(entry, lattice);
-            let probes: Vec<(QuantConfig, WeightOverrides)> = targets
+            // replay first: journaled probes never re-enter the fleet;
+            // the rest are enqueued at once (shard-parallel), each score
+            // journaled as its wait completes — submission order, so
+            // barrier ordinals are deterministic
+            let mut scores: Vec<Option<f64>> = targets
                 .iter()
                 .map(|&(g, c)| {
-                    (
-                        probe_config(entry, g, c),
-                        rounded
-                            .map(|r| probe_overrides(entry, g, c, r))
-                            .unwrap_or_default(),
-                    )
+                    journal.and_then(|j| {
+                        j.journal.lookup_f64(
+                            store::kind::PROBE,
+                            store::probe_key(j.base, g, c.wbits, c.abits),
+                        )
+                    })
                 })
                 .collect();
-            let scores = pool.map_probes(set, kind, &probes)?;
+            let mut pending = Vec::new();
+            for (i, &(g, c)) in targets.iter().enumerate() {
+                if scores[i].is_some() {
+                    continue;
+                }
+                let cfg = probe_config(entry, g, c);
+                let ov = rounded
+                    .map(|r| probe_overrides(entry, g, c, r))
+                    .unwrap_or_default();
+                pending.push((i, pool.submit(set, kind, &cfg, &ov)?));
+            }
+            for (i, h) in pending {
+                let s = h.wait()?;
+                if let Some(j) = journal {
+                    let (g, c) = targets[i];
+                    j.journal.record_f64(
+                        store::kind::PROBE,
+                        store::probe_key(j.base, g, c.wbits, c.abits),
+                        s,
+                    )?;
+                }
+                scores[i] = Some(s);
+            }
             targets
                 .iter()
                 .zip(scores)
-                .map(|(&(group, cand), score)| SensEntry { group, cand, score })
+                .map(|(&(group, cand), score)| SensEntry {
+                    group,
+                    cand,
+                    score: score.expect("every probe replayed or evaluated"),
+                })
                 .collect()
         }
     };
@@ -225,11 +269,33 @@ fn probe_targets(entry: &ModelEntry, lattice: &Lattice) -> Vec<(usize, Candidate
     out
 }
 
+/// Serve one probe from the journal, or compute it with `f` and append it
+/// as a journal barrier — the shared skeleton of the serial sweeps.
+fn probe_journaled(
+    journal: Option<&JournalScope>,
+    g: usize,
+    c: Candidate,
+    f: impl FnOnce() -> Result<f64>,
+) -> Result<f64> {
+    let key = journal.map(|j| store::probe_key(j.base, g, c.wbits, c.abits));
+    if let (Some(j), Some(k)) = (journal, key) {
+        if let Some(s) = j.journal.lookup_f64(store::kind::PROBE, k) {
+            return Ok(s);
+        }
+    }
+    let s = f()?;
+    if let (Some(j), Some(k)) = (journal, key) {
+        j.journal.record_f64(store::kind::PROBE, k, s)?;
+    }
+    Ok(s)
+}
+
 fn sqnr_scores(
     handle: &ModelHandle,
     lattice: &Lattice,
     set: &EvalSet,
     rounded: Option<&RoundedWeights>,
+    journal: Option<&JournalScope>,
 ) -> Result<Vec<SensEntry>> {
     // One engine evaluator for the whole sweep: the FP reference is built
     // (or served from cache) once, and each probe streams batch-by-batch —
@@ -237,11 +303,14 @@ fn sqnr_scores(
     let ev = Evaluator::new(handle, set);
     let mut out = Vec::new();
     for (g, c) in probe_targets(&handle.entry, lattice) {
-        let cfg = probe_config(&handle.entry, g, c);
-        let ov = rounded
-            .map(|r| probe_overrides(&handle.entry, g, c, r))
-            .unwrap_or_default();
-        out.push(SensEntry { group: g, cand: c, score: ev.sqnr(&cfg, &ov)? });
+        let score = probe_journaled(journal, g, c, || {
+            let cfg = probe_config(&handle.entry, g, c);
+            let ov = rounded
+                .map(|r| probe_overrides(&handle.entry, g, c, r))
+                .unwrap_or_default();
+            ev.sqnr(&cfg, &ov)
+        })?;
+        out.push(SensEntry { group: g, cand: c, score });
     }
     Ok(out)
 }
@@ -251,15 +320,19 @@ fn accuracy_scores(
     lattice: &Lattice,
     set: &EvalSet,
     rounded: Option<&RoundedWeights>,
+    journal: Option<&JournalScope>,
 ) -> Result<Vec<SensEntry>> {
     let ev = Evaluator::new(handle, set);
     let mut out = Vec::new();
     for (g, c) in probe_targets(&handle.entry, lattice) {
-        let cfg = probe_config(&handle.entry, g, c);
-        let ov = rounded
-            .map(|r| probe_overrides(&handle.entry, g, c, r))
-            .unwrap_or_default();
-        out.push(SensEntry { group: g, cand: c, score: ev.metric(&cfg, &ov)? });
+        let score = probe_journaled(journal, g, c, || {
+            let cfg = probe_config(&handle.entry, g, c);
+            let ov = rounded
+                .map(|r| probe_overrides(&handle.entry, g, c, r))
+                .unwrap_or_default();
+            ev.metric(&cfg, &ov)
+        })?;
+        out.push(SensEntry { group: g, cand: c, score });
     }
     Ok(out)
 }
@@ -394,6 +467,55 @@ fn fit_finish(
     Ok(out)
 }
 
+/// FIT journals at sweep granularity: its per-abits accumulation passes
+/// are shared across *all* probes, so a partial sweep is not resumable —
+/// either every `(group, candidate)` score is in the journal (replay the
+/// whole list, zero compute) or the full sweep runs and records them all.
+fn fit_journal_replay(
+    entry: &ModelEntry,
+    lattice: &Lattice,
+    journal: Option<&JournalScope>,
+) -> Option<Vec<SensEntry>> {
+    let j = journal?;
+    let targets = probe_targets(entry, lattice);
+    let complete = targets.iter().all(|&(g, c)| {
+        j.journal
+            .contains(store::kind::PROBE, store::probe_key(j.base, g, c.wbits, c.abits))
+    });
+    if !complete {
+        return None;
+    }
+    Some(
+        targets
+            .iter()
+            .map(|&(group, cand)| SensEntry {
+                group,
+                cand,
+                score: j
+                    .journal
+                    .lookup_f64(
+                        store::kind::PROBE,
+                        store::probe_key(j.base, group, cand.wbits, cand.abits),
+                    )
+                    .expect("completeness checked above"),
+            })
+            .collect(),
+    )
+}
+
+fn fit_journal_record(entries: &[SensEntry], journal: Option<&JournalScope>) -> Result<()> {
+    if let Some(j) = journal {
+        for e in entries {
+            j.journal.record_f64(
+                store::kind::PROBE,
+                store::probe_key(j.base, e.group, e.cand.wbits, e.cand.abits),
+                e.score,
+            )?;
+        }
+    }
+    Ok(())
+}
+
 /// FIT metric (Zandonati et al., used by the paper as the Fig. 2 Fisher
 /// baseline): `FIT(g,c) = Σ_w  E[g_w²]·E[Δ_w(c)²] + Σ_a E[g_a²]·E[Δ_a(c)²]`.
 /// Score is `-FIT` so that higher = less sensitive, like the other metrics.
@@ -402,7 +524,11 @@ fn fit_scores(
     manifest: &Manifest,
     lattice: &Lattice,
     set: &EvalSet,
+    journal: Option<&JournalScope>,
 ) -> Result<Vec<SensEntry>> {
+    if let Some(list) = fit_journal_replay(&handle.entry, lattice, journal) {
+        return Ok(list);
+    }
     let entry = &handle.entry;
     let fit_file = entry
         .fit
@@ -447,7 +573,9 @@ fn fit_scores(
         let errs = aerr2.entry(abits).or_insert_with(|| vec![0f64; entry.n_act()]);
         fit_fold(&mut wgrad2, &mut agrad2, errs, &raws, nb, abits_opts.len());
     }
-    fit_finish(handle, lattice, &wgrad2, &agrad2, &aerr2)
+    let out = fit_finish(handle, lattice, &wgrad2, &agrad2, &aerr2)?;
+    fit_journal_record(&out, journal)?;
+    Ok(out)
 }
 
 /// FIT accumulation fanned out over an [`EvalPool`]'s shards: one
@@ -459,7 +587,11 @@ fn fit_scores_pooled(
     set: SetKey,
     handle: &ModelHandle,
     lattice: &Lattice,
+    journal: Option<&JournalScope>,
 ) -> Result<Vec<SensEntry>> {
+    if let Some(list) = fit_journal_replay(&handle.entry, lattice, journal) {
+        return Ok(list);
+    }
     let entry = &handle.entry;
     if entry.fit.is_none() {
         bail!("{} has no FIT artifact", entry.name);
@@ -486,7 +618,9 @@ fn fit_scores_pooled(
         let errs = aerr2.entry(abits).or_insert_with(|| vec![0f64; entry.n_act()]);
         fit_fold(&mut wgrad2, &mut agrad2, errs, raws, nb, abits_opts.len());
     }
-    fit_finish(handle, lattice, &wgrad2, &agrad2, &aerr2)
+    let out = fit_finish(handle, lattice, &wgrad2, &agrad2, &aerr2)?;
+    fit_journal_record(&out, journal)?;
+    Ok(out)
 }
 
 /// Per-quantizer SQNR at a fixed candidate — Fig. 3's per-network SQNR

@@ -1,0 +1,817 @@
+//! Durable run layer: atomic persisted writes, a checksummed framed
+//! record container, and the crash-safe **write-ahead run journal**.
+//!
+//! The pipeline's expensive phases — the Phase-1 probe sweep, Phase-2
+//! prefix evaluations and the per-`(layer, wbits)` AdaRound optimizations
+//! — are exactly the work an OOM kill, a preempted node or a ctrl-C
+//! throws away.  This module gives the coordinator process-boundary
+//! durability, the same discipline the fleet supervisor (PR 6) applies to
+//! worker threads:
+//!
+//! * [`atomic_write`] / [`AtomicFile`] — every final-path persist in the
+//!   crate (sensitivity cache, reference cache, bench JSON, report files)
+//!   goes through temp-file + fsync + rename, so concurrent runs sharing
+//!   an artifacts dir never observe half-written files.
+//! * **Framed records** — `len · kind · digest · checksum · payload`
+//!   frames behind a versioned magic header ([`FILE_MAGIC`]).  Checksums
+//!   are FNV-1a over the frame content, so truncation and bit flips are
+//!   *detected*, never parsed into garbage.  [`write_blob`]/[`read_blob`]
+//!   wrap a single payload (the FP32 reference cache) in the same
+//!   container.
+//! * [`RunJournal`] — an append-only frame log (`journal.mpqj` in the
+//!   artifacts dir by default) the coordinator appends to at **phase
+//!   barriers**: each completed Phase-1 `(group, candidate)` probe score,
+//!   each Phase-2 evaluated prefix `(k, metric)`, each AdaRound
+//!   `(layer, wbits)` rounded tensor.  Every record is keyed by the same
+//!   content digests the sens/ref caches use, so a journal from different
+//!   weights/data/config is *ignored*, never trusted.  `--resume` replays
+//!   the journal and skips completed work in both the serial and pooled
+//!   paths, with results byte-equal to an uninterrupted run.
+//!
+//! **Durability model:** each appended record is a single `write(2)` that
+//! reaches the kernel before the barrier counter advances, so records
+//! survive any *process* death — including the `crash@PHASE:N` fault,
+//! which aborts at the Nth barrier *after* the Nth record is durable
+//! (write-ahead order).  Cache files additionally fsync before rename
+//! (power-safe).  A torn final record (machine crash mid-append) fails
+//! its checksum on the next open and the journal is truncated back to the
+//! last valid record — losing at most the in-flight barrier, never
+//! corrupting earlier ones.
+//!
+//! Telemetry lands in [`StoreStats`], surfaced by the drivers next to the
+//! fleet's `FailureStats`.
+
+use crate::util::Fnv;
+use anyhow::{bail, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 8-byte container header: magic + little-endian format version.
+pub const FILE_MAGIC: &[u8; 4] = b"MPQJ";
+pub const FORMAT_VERSION: u16 = 1;
+/// Frame header bytes: `u32 len · u16 kind · u16 reserved · u64 digest ·
+/// u64 checksum`.
+const FRAME_HEADER: usize = 4 + 2 + 2 + 8 + 8;
+const FILE_HEADER: usize = 8;
+
+/// Record kinds — what a frame's payload means.
+pub mod kind {
+    /// Phase-1 probe score: payload = `f64` score bits (LE).
+    pub const PROBE: u16 = 1;
+    /// Phase-2 prefix evaluation: payload = `f64` metric bits (LE).
+    pub const SEARCH_EVAL: u16 = 2;
+    /// AdaRound rounded tensor: payload = one MPQT-encoded tensor.
+    pub const ADAROUND: u16 = 3;
+    /// Single-payload blob container ([`super::write_blob`]).
+    pub const BLOB: u16 = 4;
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry
+// ---------------------------------------------------------------------------
+
+/// Durability telemetry, reported by the drivers next to the fleet's
+/// `FailureStats`.  Shared `Rc`-style between the journal, the caches and
+/// the pipeline (all on the coordinator thread).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    /// journal records appended (= barriers crossed) this process
+    pub journal_appended: Cell<u64>,
+    /// valid records replayed from an existing journal at `--resume`
+    pub journal_replayed: Cell<u64>,
+    /// completed work units skipped because the journal already held them
+    pub journal_skips: Cell<u64>,
+    /// journals truncated back to their last valid record
+    pub journal_truncations: Cell<u64>,
+    /// corrupt/truncated cache files degraded to a miss
+    pub cache_corrupt_misses: Cell<u64>,
+    /// bad files renamed to `<name>.corrupt` (or deleted) for post-mortem
+    pub files_quarantined: Cell<u64>,
+}
+
+impl StoreStats {
+    pub fn any(&self) -> bool {
+        self.journal_appended.get() != 0
+            || self.journal_replayed.get() != 0
+            || self.journal_skips.get() != 0
+            || self.journal_truncations.get() != 0
+            || self.cache_corrupt_misses.get() != 0
+            || self.files_quarantined.get() != 0
+    }
+
+    /// Did any *degradation* happen (corruption, truncation, quarantine)?
+    /// Plain journaling traffic doesn't count.
+    pub fn any_degraded(&self) -> bool {
+        self.journal_truncations.get() != 0
+            || self.cache_corrupt_misses.get() != 0
+            || self.files_quarantined.get() != 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomic writes
+// ---------------------------------------------------------------------------
+
+/// Monotonic discriminator so concurrent writers in one process never
+/// collide on a temp name (different processes differ by pid).
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn temp_path_for(path: &Path) -> PathBuf {
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".into());
+    path.with_file_name(format!(
+        ".{name}.tmp.{}.{seq}",
+        std::process::id()
+    ))
+}
+
+/// A file that becomes visible at its final path only on [`commit`]
+/// (temp file in the same directory + fsync + rename).  Dropping without
+/// committing removes the temp file — a crash mid-write leaves at worst
+/// an orphaned `.tmp` file, never a half-written final path.
+///
+/// [`commit`]: AtomicFile::commit
+pub struct AtomicFile {
+    tmp: PathBuf,
+    dest: PathBuf,
+    file: Option<std::fs::File>,
+}
+
+impl AtomicFile {
+    pub fn create(dest: impl AsRef<Path>) -> Result<Self> {
+        let dest = dest.as_ref().to_path_buf();
+        if let Some(parent) = dest.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let tmp = temp_path_for(&dest);
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating temp file {}", tmp.display()))?;
+        Ok(Self { tmp, dest, file: Some(file) })
+    }
+
+    /// fsync the data, rename over the destination, best-effort sync the
+    /// directory so the rename itself is durable.
+    pub fn commit(mut self) -> Result<()> {
+        let file = self.file.take().expect("commit called once");
+        file.sync_all()
+            .with_context(|| format!("syncing {}", self.tmp.display()))?;
+        drop(file);
+        std::fs::rename(&self.tmp, &self.dest).with_context(|| {
+            format!("renaming {} -> {}", self.tmp.display(), self.dest.display())
+        })?;
+        if let Some(parent) = self.dest.parent() {
+            if !parent.as_os_str().is_empty() {
+                // directory fsync is advisory: some filesystems refuse
+                // opening a directory for sync — the rename is already
+                // atomic for concurrent readers either way
+                if let Ok(d) = std::fs::File::open(parent) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::io::Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.file.as_mut().expect("not committed").write(buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.file.as_mut().expect("not committed").flush()
+    }
+}
+
+impl Drop for AtomicFile {
+    fn drop(&mut self) {
+        if self.file.take().is_some() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Atomically replace `path` with `bytes` (temp file + fsync + rename).
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let mut f = AtomicFile::create(path.as_ref())?;
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    f.commit()
+}
+
+/// Move a corrupt file out of the way as `<name>.corrupt` (replacing any
+/// previous quarantine; falling back to deletion), warn, and count it.
+/// Never errors: quarantine is already the degraded path.
+pub fn quarantine(path: &Path, stats: &StoreStats, why: &str) {
+    let q = {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "file".into());
+        path.with_file_name(format!("{name}.corrupt"))
+    };
+    let _ = std::fs::remove_file(&q);
+    let moved = std::fs::rename(path, &q).is_ok();
+    if !moved {
+        let _ = std::fs::remove_file(path);
+    }
+    eprintln!(
+        "[mpq] warning: {why}: quarantined {} ({})",
+        path.display(),
+        if moved { "kept as .corrupt" } else { "deleted" }
+    );
+    stats.files_quarantined.set(stats.files_quarantined.get() + 1);
+}
+
+// ---------------------------------------------------------------------------
+// Framed records
+// ---------------------------------------------------------------------------
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub kind: u16,
+    pub digest: u64,
+    pub payload: Vec<u8>,
+}
+
+fn frame_checksum(kind: u16, digest: u64, payload: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u32(kind as u32);
+    h.write_u64(digest);
+    h.write_bytes(payload);
+    h.finish()
+}
+
+/// The container header every framed file starts with.
+pub fn file_header() -> [u8; FILE_HEADER] {
+    let mut h = [0u8; FILE_HEADER];
+    h[..4].copy_from_slice(FILE_MAGIC);
+    h[4..6].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    // h[6..8] = flags, reserved
+    h
+}
+
+/// Encode one frame: `u32 len · u16 kind · u16 reserved · u64 digest ·
+/// u64 checksum · payload` (all little-endian).
+pub fn encode_record(kind: u16, digest: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&digest.to_le_bytes());
+    out.extend_from_slice(&frame_checksum(kind, digest, payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Sequentially decode the frames after the file header.  Returns the
+/// valid records and the byte offset of the end of the last valid frame —
+/// any trailing bytes past it are a torn append or corruption.  Never
+/// errors and never panics: the first bad frame simply ends the valid
+/// prefix.
+pub fn decode_records(bytes: &[u8]) -> (Vec<Record>, usize) {
+    let mut out = Vec::new();
+    let mut off = FILE_HEADER.min(bytes.len());
+    loop {
+        let rest = &bytes[off..];
+        if rest.len() < FRAME_HEADER {
+            break;
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+        if rest.len() - FRAME_HEADER < len {
+            break; // truncated payload (or absurd corrupted length)
+        }
+        let kind = u16::from_le_bytes(rest[4..6].try_into().unwrap());
+        let digest = u64::from_le_bytes(rest[8..16].try_into().unwrap());
+        let checksum = u64::from_le_bytes(rest[16..24].try_into().unwrap());
+        let payload = &rest[FRAME_HEADER..FRAME_HEADER + len];
+        if frame_checksum(kind, digest, payload) != checksum {
+            break;
+        }
+        out.push(Record { kind, digest, payload: payload.to_vec() });
+        off += FRAME_HEADER + len;
+    }
+    (out, off)
+}
+
+/// Is `bytes` a well-formed container header of the current version?
+pub fn header_ok(bytes: &[u8]) -> bool {
+    bytes.len() >= FILE_HEADER
+        && &bytes[..4] == FILE_MAGIC
+        && u16::from_le_bytes(bytes[4..6].try_into().unwrap()) == FORMAT_VERSION
+}
+
+// ---------------------------------------------------------------------------
+// Single-payload blobs (the reference cache's container)
+// ---------------------------------------------------------------------------
+
+/// Atomically write a single checksummed payload under `digest` (used by
+/// the FP32 reference cache: payload = MPQT tensor concatenation).
+pub fn write_blob(path: impl AsRef<Path>, digest: u64, payload: &[u8]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(FILE_HEADER + FRAME_HEADER + payload.len());
+    bytes.extend_from_slice(&file_header());
+    bytes.extend_from_slice(&encode_record(kind::BLOB, digest, payload));
+    atomic_write(path, &bytes)
+}
+
+/// Read a [`write_blob`] file back.  `Ok(None)` when the file doesn't
+/// exist; `Err` on any corruption (bad header, failed checksum, trailing
+/// bytes, digest mismatch) — callers degrade that to a quarantined miss.
+pub fn read_blob(path: impl AsRef<Path>, expect_digest: u64) -> Result<Option<Vec<u8>>> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Ok(None);
+    }
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if !header_ok(&bytes) {
+        bail!("{}: bad or outdated container header", path.display());
+    }
+    let (mut records, end) = decode_records(&bytes);
+    if records.len() != 1 || end != bytes.len() {
+        bail!(
+            "{}: corrupt blob ({} valid records, {} trailing bytes)",
+            path.display(),
+            records.len(),
+            bytes.len() - end
+        );
+    }
+    let r = records.pop().unwrap();
+    if r.kind != kind::BLOB || r.digest != expect_digest {
+        bail!(
+            "{}: blob digest {:016x} does not match expected {expect_digest:016x}",
+            path.display(),
+            r.digest
+        );
+    }
+    Ok(Some(r.payload))
+}
+
+// ---------------------------------------------------------------------------
+// Record-key derivations (shared by writers and resume readers)
+// ---------------------------------------------------------------------------
+
+fn combine(base: u64, tag: u8, fields: &[u64]) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(base);
+    h.write_u8(tag);
+    for &f in fields {
+        h.write_u64(f);
+    }
+    h.finish()
+}
+
+/// Journal key of a Phase-1 probe: `base` is the sensitivity-sweep
+/// content digest (`sensitivity::cache::digest`, plus the rounded-weights
+/// digest when AdaRound is interweaved).
+pub fn probe_key(base: u64, group: usize, wbits: u8, abits: u8) -> u64 {
+    combine(base, b'p', &[group as u64, wbits as u64, abits as u64])
+}
+
+/// Journal key of a Phase-2 prefix evaluation: `base` is the search-scope
+/// digest (model/weights/eval-data/lattice/flip-sequence/rounded).
+pub fn eval_key(base: u64, k: usize) -> u64 {
+    combine(base, b'e', &[k as u64])
+}
+
+/// Journal key of an AdaRound optimization: `base` is the AdaRound-scope
+/// digest (model/weights/calibration-data/optimizer config).
+pub fn adaround_key(base: u64, param_idx: usize, wbits: u8) -> u64 {
+    combine(base, b'a', &[param_idx as u64, wbits as u64])
+}
+
+/// `f64` payload encoding (bit-exact round-trip).
+pub fn f64_payload(x: f64) -> [u8; 8] {
+    x.to_bits().to_le_bytes()
+}
+
+/// Decode a [`f64_payload`]; `None` on wrong length (corruption is caught
+/// by the frame checksum; this guards mixed-kind programming errors).
+pub fn payload_f64(p: &[u8]) -> Option<f64> {
+    let arr: [u8; 8] = p.try_into().ok()?;
+    Some(f64::from_bits(u64::from_le_bytes(arr)))
+}
+
+// ---------------------------------------------------------------------------
+// The write-ahead run journal
+// ---------------------------------------------------------------------------
+
+/// Append-only write-ahead journal of completed pipeline work.
+///
+/// * [`open`](RunJournal::open) with `resume = false` starts a fresh
+///   journal (truncating any previous one); with `resume = true` it
+///   replays every valid record into memory — a corrupt or torn tail is
+///   truncated away (counted in [`StoreStats::journal_truncations`]), a
+///   bad header quarantines the whole file and starts fresh.
+/// * [`lookup`](RunJournal::lookup) serves replayed/recorded payloads by
+///   `(kind, key)`; callers skip the work a hit represents.
+/// * [`record`](RunJournal::record) appends one frame — a **barrier**:
+///   the frame reaches the kernel before the barrier counter advances,
+///   and a `crash@PHASE:N` fault scheduled via
+///   [`with_crash_barriers`](RunJournal::with_crash_barriers) fires
+///   *after* the Nth record is durable (write-ahead order), panicking
+///   with the standard `injected fault:` prefix.
+///
+/// Keys must be derived from content digests ([`probe_key`] /
+/// [`eval_key`] / [`adaround_key`]) so records from a different
+/// model/data/config simply never match — stale journals are ignored,
+/// not trusted.
+pub struct RunJournal {
+    path: PathBuf,
+    file: RefCell<std::fs::File>,
+    records: RefCell<HashMap<(u16, u64), Vec<u8>>>,
+    barriers: Cell<u64>,
+    crash_at: Vec<u64>,
+    stats: Rc<StoreStats>,
+}
+
+impl RunJournal {
+    /// Open (resume) or start (fresh) the journal at `path`.
+    pub fn open(path: impl AsRef<Path>, resume: bool, stats: Rc<StoreStats>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let mut records = HashMap::new();
+        if resume && path.exists() {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading journal {}", path.display()))?;
+            if !bytes.is_empty() && !header_ok(&bytes) {
+                quarantine(&path, &stats, "journal has a bad or outdated header");
+            } else if !bytes.is_empty() {
+                let (recs, valid_end) = decode_records(&bytes);
+                if valid_end < bytes.len() {
+                    eprintln!(
+                        "[mpq] warning: journal {} has {} corrupt/torn trailing \
+                         bytes — truncating to the last valid record ({} kept)",
+                        path.display(),
+                        bytes.len() - valid_end,
+                        recs.len()
+                    );
+                    let f = std::fs::OpenOptions::new()
+                        .write(true)
+                        .open(&path)
+                        .with_context(|| format!("truncating {}", path.display()))?;
+                    f.set_len(valid_end as u64)
+                        .with_context(|| format!("truncating {}", path.display()))?;
+                    stats
+                        .journal_truncations
+                        .set(stats.journal_truncations.get() + 1);
+                }
+                stats
+                    .journal_replayed
+                    .set(stats.journal_replayed.get() + recs.len() as u64);
+                for r in recs {
+                    records.insert((r.kind, r.digest), r.payload);
+                }
+            }
+        }
+        // an empty file (death between create and header write) restarts
+        // fresh too — appending to it would produce a headerless journal
+        let fresh = !resume
+            || std::fs::metadata(&path).map(|m| m.len() == 0).unwrap_or(true);
+        let mut opts = std::fs::OpenOptions::new();
+        if fresh {
+            opts.write(true).create(true).truncate(true);
+        } else {
+            opts.append(true);
+        }
+        let mut file = opts
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        if fresh {
+            file.write_all(&file_header())
+                .with_context(|| format!("writing journal header {}", path.display()))?;
+        }
+        Ok(Self {
+            path,
+            file: RefCell::new(file),
+            records: RefCell::new(records),
+            barriers: Cell::new(0),
+            crash_at: Vec::new(),
+            stats,
+        })
+    }
+
+    /// Schedule `crash@PHASE:N` faults: the process panics right after the
+    /// Nth appended record becomes durable (1-based ordinals).
+    pub fn with_crash_barriers(mut self, ordinals: Vec<u64>) -> Self {
+        self.crash_at = ordinals;
+        self
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn stats(&self) -> &Rc<StoreStats> {
+        &self.stats
+    }
+
+    /// Records currently known (replayed + appended).
+    pub fn len(&self) -> usize {
+        self.records.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Barriers crossed (records appended) by *this* process.
+    pub fn barriers(&self) -> u64 {
+        self.barriers.get()
+    }
+
+    /// Payload stored under `(kind, key)`, if the journal holds one.
+    /// Counts a skip: a hit means the caller avoids redoing the work.
+    pub fn lookup(&self, kind: u16, key: u64) -> Option<Vec<u8>> {
+        let hit = self.records.borrow().get(&(kind, key)).cloned();
+        if hit.is_some() {
+            self.stats.journal_skips.set(self.stats.journal_skips.get() + 1);
+        }
+        hit
+    }
+
+    /// Does the journal hold `(kind, key)`?  (No skip accounting — used
+    /// for completeness checks before committing to a journaled path.)
+    pub fn contains(&self, kind: u16, key: u64) -> bool {
+        self.records.borrow().contains_key(&(kind, key))
+    }
+
+    /// Append one record — a journal **barrier**.  Idempotent per key: a
+    /// record already present (e.g. replayed) is not re-appended and does
+    /// not advance the barrier counter.
+    pub fn record(&self, kind: u16, key: u64, payload: &[u8]) -> Result<()> {
+        if self.records.borrow().contains_key(&(kind, key)) {
+            return Ok(());
+        }
+        {
+            let mut f = self.file.borrow_mut();
+            // one unbuffered write_all = the frame reaches the kernel
+            // before we count the barrier (survives process death; a torn
+            // tail from a machine crash is truncated on the next open)
+            f.write_all(&encode_record(kind, key, payload))
+                .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        }
+        self.records.borrow_mut().insert((kind, key), payload.to_vec());
+        self.stats.journal_appended.set(self.stats.journal_appended.get() + 1);
+        let n = self.barriers.get() + 1;
+        self.barriers.set(n);
+        if self.crash_at.contains(&n) {
+            panic!("injected fault: crash@PHASE:{n}");
+        }
+        Ok(())
+    }
+
+    /// Convenience: journaled `f64` (scores/metrics), bit-exact.
+    pub fn lookup_f64(&self, kind: u16, key: u64) -> Option<f64> {
+        self.lookup(kind, key).and_then(|p| payload_f64(&p))
+    }
+
+    pub fn record_f64(&self, kind: u16, key: u64, x: f64) -> Result<()> {
+        self.record(kind, key, &f64_payload(x))
+    }
+}
+
+/// A journal handle scoped to one unit of work: the shared [`RunJournal`]
+/// plus the **base content digest** every record key is derived from
+/// (the sensitivity-sweep digest for Phase-1 probes, the search-scope
+/// digest for Phase-2 evaluations, the AdaRound-scope digest for rounded
+/// tensors).  Cloning shares the journal.
+#[derive(Clone)]
+pub struct JournalScope {
+    pub journal: Rc<RunJournal>,
+    pub base: u64,
+}
+
+impl JournalScope {
+    pub fn new(journal: Rc<RunJournal>, base: u64) -> Self {
+        Self { journal, base }
+    }
+
+    /// The same journal under a different base digest.
+    pub fn rebase(&self, base: u64) -> Self {
+        Self { journal: self.journal.clone(), base }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("mpq_store_test").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_survives_abandon() {
+        let d = tdir("atomic");
+        let p = d.join("x.json");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second");
+        // an abandoned (dropped) writer must not touch the destination
+        {
+            let mut f = AtomicFile::create(&p).unwrap();
+            f.write_all(b"half-written garbage").unwrap();
+            // dropped without commit
+        }
+        assert_eq!(std::fs::read(&p).unwrap(), b"second");
+        // and leaves no temp litter behind
+        let stray: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(stray.is_empty(), "leftover temp files: {stray:?}");
+    }
+
+    #[test]
+    fn frames_roundtrip_and_detect_corruption() {
+        let payload = b"hello frames";
+        let mut bytes = file_header().to_vec();
+        bytes.extend_from_slice(&encode_record(kind::PROBE, 0xabcd, payload));
+        bytes.extend_from_slice(&encode_record(kind::ADAROUND, 0x1234, b""));
+        assert!(header_ok(&bytes));
+        let (recs, end) = decode_records(&bytes);
+        assert_eq!(end, bytes.len());
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].kind, kind::PROBE);
+        assert_eq!(recs[0].digest, 0xabcd);
+        assert_eq!(recs[0].payload, payload);
+        assert_eq!(recs[1].payload, b"");
+
+        // flip one payload bit → that record and everything after it drops
+        let mut bad = bytes.clone();
+        let payload_off = FILE_HEADER + FRAME_HEADER + 3;
+        bad[payload_off] ^= 0x40;
+        let (recs2, end2) = decode_records(&bad);
+        assert!(recs2.is_empty());
+        assert_eq!(end2, FILE_HEADER);
+
+        // truncate mid-second-record → first survives
+        let cut = FILE_HEADER + FRAME_HEADER + payload.len() + 5;
+        let (recs3, end3) = decode_records(&bytes[..cut]);
+        assert_eq!(recs3.len(), 1);
+        assert_eq!(end3, FILE_HEADER + FRAME_HEADER + payload.len());
+    }
+
+    #[test]
+    fn blob_roundtrip_and_digest_check() {
+        let d = tdir("blob");
+        let p = d.join("ref.bin");
+        assert!(read_blob(&p, 7).unwrap().is_none(), "missing file is a miss");
+        write_blob(&p, 7, b"payload bytes").unwrap();
+        assert_eq!(read_blob(&p, 7).unwrap().unwrap(), b"payload bytes");
+        assert!(read_blob(&p, 8).is_err(), "digest mismatch must be rejected");
+        // corrupt one byte anywhere → error, never garbage
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 2] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_blob(&p, 7).is_err());
+    }
+
+    #[test]
+    fn journal_appends_replays_and_truncates_torn_tail() {
+        let d = tdir("journal");
+        let p = d.join("journal.mpqj");
+        let stats = Rc::new(StoreStats::default());
+        {
+            let j = RunJournal::open(&p, false, stats.clone()).unwrap();
+            j.record_f64(kind::PROBE, probe_key(9, 0, 4, 8), 17.25).unwrap();
+            j.record_f64(kind::PROBE, probe_key(9, 1, 4, 8), -0.5).unwrap();
+            j.record(kind::ADAROUND, adaround_key(9, 2, 4), b"tensorish").unwrap();
+            assert_eq!(j.barriers(), 3);
+            // idempotent per key: no duplicate frame, no extra barrier
+            j.record_f64(kind::PROBE, probe_key(9, 0, 4, 8), 17.25).unwrap();
+            assert_eq!(j.barriers(), 3);
+        }
+        assert_eq!(stats.journal_appended.get(), 3);
+
+        // append a torn half-frame as a machine-crash tail
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[0x99; 11]).unwrap();
+        }
+        let stats2 = Rc::new(StoreStats::default());
+        let j = RunJournal::open(&p, true, stats2.clone()).unwrap();
+        assert_eq!(stats2.journal_replayed.get(), 3);
+        assert_eq!(stats2.journal_truncations.get(), 1);
+        assert_eq!(
+            j.lookup_f64(kind::PROBE, probe_key(9, 0, 4, 8)),
+            Some(17.25)
+        );
+        assert_eq!(
+            j.lookup(kind::ADAROUND, adaround_key(9, 2, 4)).unwrap(),
+            b"tensorish"
+        );
+        assert_eq!(j.lookup(kind::PROBE, probe_key(8, 0, 4, 8)), None, "stale base ignored");
+        assert_eq!(stats2.journal_skips.get(), 2);
+        // appending after resume continues the same file
+        j.record_f64(kind::SEARCH_EVAL, eval_key(9, 3), 0.75).unwrap();
+        drop(j);
+        let stats3 = Rc::new(StoreStats::default());
+        let j2 = RunJournal::open(&p, true, stats3.clone()).unwrap();
+        assert_eq!(stats3.journal_replayed.get(), 4);
+        assert_eq!(stats3.journal_truncations.get(), 0, "clean tail: no truncation");
+        assert_eq!(j2.lookup_f64(kind::SEARCH_EVAL, eval_key(9, 3)), Some(0.75));
+    }
+
+    #[test]
+    fn journal_fresh_open_discards_and_bad_header_quarantines() {
+        let d = tdir("journal_fresh");
+        let p = d.join("journal.mpqj");
+        let stats = Rc::new(StoreStats::default());
+        {
+            let j = RunJournal::open(&p, false, stats.clone()).unwrap();
+            j.record_f64(kind::PROBE, 1, 1.0).unwrap();
+        }
+        // resume=false truncates: the old record is gone
+        {
+            let j = RunJournal::open(&p, false, stats.clone()).unwrap();
+            assert!(j.is_empty());
+        }
+        // garbage header: quarantined, journal starts fresh
+        std::fs::write(&p, b"not a journal at all").unwrap();
+        let stats2 = Rc::new(StoreStats::default());
+        let j = RunJournal::open(&p, true, stats2.clone()).unwrap();
+        assert!(j.is_empty());
+        assert_eq!(stats2.files_quarantined.get(), 1);
+        assert!(d.join("journal.mpqj.corrupt").exists());
+        j.record_f64(kind::PROBE, 1, 2.0).unwrap();
+        let j2 = RunJournal::open(&p, true, Rc::new(StoreStats::default())).unwrap();
+        assert_eq!(j2.lookup_f64(kind::PROBE, 1), Some(2.0));
+    }
+
+    #[test]
+    fn crash_barrier_fires_after_record_is_durable() {
+        let d = tdir("crash");
+        let p = d.join("journal.mpqj");
+        let stats = Rc::new(StoreStats::default());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let j = RunJournal::open(&p, false, stats.clone())
+                .unwrap()
+                .with_crash_barriers(vec![2]);
+            j.record_f64(kind::PROBE, 1, 1.5).unwrap();
+            j.record_f64(kind::PROBE, 2, 2.5).unwrap(); // fires here
+            j.record_f64(kind::PROBE, 3, 3.5).unwrap();
+        }));
+        let err = caught.expect_err("crash fault must fire");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault: crash@PHASE:2"), "{msg}");
+        // write-ahead: records 1 AND 2 are durable, record 3 never ran
+        let j = RunJournal::open(&p, true, Rc::new(StoreStats::default())).unwrap();
+        assert_eq!(j.lookup_f64(kind::PROBE, 1), Some(1.5));
+        assert_eq!(j.lookup_f64(kind::PROBE, 2), Some(2.5));
+        assert_eq!(j.lookup_f64(kind::PROBE, 3), None);
+    }
+
+    #[test]
+    fn keys_are_distinct_across_kind_and_fields() {
+        let ks = [
+            probe_key(1, 0, 4, 8),
+            probe_key(1, 1, 4, 8),
+            probe_key(1, 0, 8, 8),
+            probe_key(2, 0, 4, 8),
+            eval_key(1, 0),
+            eval_key(1, 1),
+            adaround_key(1, 0, 4),
+            adaround_key(1, 0, 8),
+        ];
+        for i in 0..ks.len() {
+            for j in i + 1..ks.len() {
+                assert_ne!(ks[i], ks[j], "key collision at {i},{j}");
+            }
+        }
+        let x = -3.25e-7f64;
+        assert_eq!(payload_f64(&f64_payload(x)), Some(x));
+        assert!(payload_f64(b"short").is_none());
+        let nan = f64::from_bits(0x7ff8_dead_beef_0001);
+        assert_eq!(
+            payload_f64(&f64_payload(nan)).unwrap().to_bits(),
+            nan.to_bits(),
+            "NaN payloads must round-trip bit-exactly"
+        );
+    }
+}

@@ -5,6 +5,14 @@
 //! `u32 magic "MPQT"` · `u8 dtype (0=f32,1=i32)` · `u8 ndim` ·
 //! `u16 reserved` · `u32 dims[ndim]` · payload.  Files may concatenate
 //! several tensors.
+//!
+//! Decoding is hardened against truncated and bit-flipped inputs: the
+//! payload size is bounds-checked (`checked_mul`, compared against the
+//! bytes actually available) *before* any allocation, so a corrupted
+//! dim can neither OOM the process nor produce garbage-shaped tensors —
+//! every structural problem is a clean `Err` with context.  Writes go
+//! through [`crate::store::AtomicFile`] (temp + fsync + rename), so
+//! concurrent readers never observe a half-written file.
 
 use super::{Data, Tensor};
 use anyhow::{anyhow, bail, Context, Result};
@@ -12,53 +20,149 @@ use std::io::{Read, Write};
 
 pub const MAGIC: u32 = 0x4D50_5154;
 
-pub fn read_tensor(r: &mut impl Read) -> Result<Option<Tensor>> {
-    let mut hdr = [0u8; 8];
-    match r.read_exact(&mut hdr[..1]) {
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        other => other.context("reading header")?,
+/// Decode one tensor from the front of `bytes`.  Returns the tensor and
+/// the number of bytes it occupied; `Ok(None)` on an empty slice (clean
+/// end of a concatenated stream).  Truncation, bad magic, unknown dtype
+/// and overflowing dims are all explicit errors — never a panic, an
+/// unbounded allocation, or silently wrong data.
+pub fn decode_tensor(bytes: &[u8]) -> Result<Option<(Tensor, usize)>> {
+    if bytes.is_empty() {
+        return Ok(None);
     }
-    r.read_exact(&mut hdr[1..])?;
-    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if bytes.len() < 8 {
+        bail!("truncated MPQT header ({} bytes left)", bytes.len());
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
     if magic != MAGIC {
         bail!("bad MPQT magic {magic:#x}");
     }
-    let dtype = hdr[4];
-    let ndim = hdr[5] as usize;
-    let mut dims = vec![0usize; ndim];
-    let mut d4 = [0u8; 4];
-    for d in dims.iter_mut() {
-        r.read_exact(&mut d4)?;
-        *d = u32::from_le_bytes(d4) as usize;
+    let dtype = bytes[4];
+    if dtype > 1 {
+        bail!("unknown dtype tag {dtype}");
     }
-    let n: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
-    let mut raw = vec![0u8; n * 4];
-    r.read_exact(&mut raw)?;
+    let ndim = bytes[5] as usize;
+    let dims_end = 8 + ndim * 4;
+    if bytes.len() < dims_end {
+        bail!("truncated MPQT dims (ndim={ndim}, {} bytes left)", bytes.len());
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    let mut n: usize = 1;
+    for d in 0..ndim {
+        let v = u32::from_le_bytes(bytes[8 + d * 4..12 + d * 4].try_into().unwrap()) as usize;
+        n = n
+            .checked_mul(v)
+            .ok_or_else(|| anyhow!("MPQT dims overflow: {dims:?} x {v}"))?;
+        dims.push(v);
+    }
+    let payload = n
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("MPQT payload size overflows ({n} elements)"))?;
+    // bound BEFORE allocating: a bit-flipped dim must not OOM the process
+    if bytes.len() - dims_end < payload {
+        bail!(
+            "truncated MPQT payload: need {payload} bytes for shape {dims:?}, \
+             {} left",
+            bytes.len() - dims_end
+        );
+    }
+    let raw = &bytes[dims_end..dims_end + payload];
     let data = match dtype {
         0 => Data::F32(
             raw.chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect(),
         ),
-        1 => Data::I32(
+        _ => Data::I32(
             raw.chunks_exact(4)
                 .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                 .collect(),
         ),
-        d => bail!("unknown dtype tag {d}"),
+    };
+    Ok(Some((Tensor { shape: dims, data }, dims_end + payload)))
+}
+
+/// Decode a full concatenated MPQT byte stream (e.g. a journal payload).
+pub fn decode_tensors(mut bytes: &[u8]) -> Result<Vec<Tensor>> {
+    let mut out = Vec::new();
+    while let Some((t, used)) = decode_tensor(bytes)? {
+        out.push(t);
+        bytes = &bytes[used..];
+    }
+    Ok(out)
+}
+
+/// Encode tensors as a concatenated MPQT byte stream.
+pub fn encode_tensors(ts: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in ts {
+        write_tensor(&mut out, t).expect("Vec<u8> writes are infallible");
+    }
+    out
+}
+
+/// Streaming single-tensor read.  `Ok(None)` at a clean end-of-stream.
+/// Allocation is bounded by the bytes the reader actually yields (a
+/// corrupted dim count hits end-of-stream and errors, it does not
+/// pre-allocate), but prefer [`decode_tensor`] when the input is already
+/// in memory — it validates sizes up front.
+pub fn read_tensor(r: &mut impl Read) -> Result<Option<Tensor>> {
+    let mut hdr = [0u8; 8];
+    match r.read_exact(&mut hdr[..1]) {
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        other => other.context("reading header")?,
+    }
+    r.read_exact(&mut hdr[1..]).context("truncated MPQT header")?;
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad MPQT magic {magic:#x}");
+    }
+    let dtype = hdr[4];
+    if dtype > 1 {
+        bail!("unknown dtype tag {dtype}");
+    }
+    let ndim = hdr[5] as usize;
+    let mut dims = vec![0usize; ndim];
+    let mut d4 = [0u8; 4];
+    let mut n: usize = 1;
+    for d in dims.iter_mut() {
+        r.read_exact(&mut d4).context("truncated MPQT dims")?;
+        *d = u32::from_le_bytes(d4) as usize;
+        n = n
+            .checked_mul(*d)
+            .ok_or_else(|| anyhow!("MPQT dims overflow at {d}"))?;
+    }
+    let payload = n
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("MPQT payload size overflows ({n} elements)"))?;
+    // read incrementally via take(): allocation tracks bytes actually
+    // present, so a bit-flipped dim errors out instead of OOMing
+    let mut raw = Vec::new();
+    let got = r
+        .take(payload as u64)
+        .read_to_end(&mut raw)
+        .context("reading MPQT payload")?;
+    if got < payload {
+        bail!("truncated MPQT payload: need {payload} bytes for shape {dims:?}, got {got}");
+    }
+    let data = match dtype {
+        0 => Data::F32(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        _ => Data::I32(
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
     };
     Ok(Some(Tensor { shape: dims, data }))
 }
 
 pub fn read_tensors(path: impl AsRef<std::path::Path>) -> Result<Vec<Tensor>> {
-    let f = std::fs::File::open(path.as_ref())
+    let bytes = std::fs::read(path.as_ref())
         .map_err(|e| anyhow!("opening {}: {e}", path.as_ref().display()))?;
-    let mut r = std::io::BufReader::new(f);
-    let mut out = Vec::new();
-    while let Some(t) = read_tensor(&mut r)? {
-        out.push(t);
-    }
-    Ok(out)
+    decode_tensors(&bytes).with_context(|| format!("decoding {}", path.as_ref().display()))
 }
 
 pub fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
@@ -84,12 +188,14 @@ pub fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
 }
 
 pub fn write_tensors(path: impl AsRef<std::path::Path>, ts: &[Tensor]) -> Result<()> {
-    let f = std::fs::File::create(path)?;
+    let f = crate::store::AtomicFile::create(path)?;
     let mut w = std::io::BufWriter::new(f);
     for t in ts {
         write_tensor(&mut w, t)?;
     }
-    Ok(())
+    w.into_inner()
+        .map_err(|e| anyhow!("flushing tensor file: {e}"))?
+        .commit()
 }
 
 #[cfg(test)]
@@ -105,7 +211,11 @@ mod tests {
         let p = dir.join("roundtrip.bin");
         write_tensors(&p, &[a.clone(), b.clone()]).unwrap();
         let back = read_tensors(&p).unwrap();
-        assert_eq!(back, vec![a, b]);
+        assert_eq!(back, vec![a.clone(), b.clone()]);
+        // slice codec agrees with the file codec
+        let bytes = encode_tensors(&[a.clone(), b.clone()]);
+        assert_eq!(bytes, std::fs::read(&p).unwrap());
+        assert_eq!(decode_tensors(&bytes).unwrap(), vec![a, b]);
     }
 
     #[test]
@@ -124,5 +234,23 @@ mod tests {
         let p = dir.join("bad.bin");
         std::fs::write(&p, [0u8; 16]).unwrap();
         assert!(read_tensors(&p).is_err());
+    }
+
+    #[test]
+    fn corrupt_dims_error_without_allocating() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut bytes = encode_tensors(std::slice::from_ref(&t));
+        // blow up dim 0 to ~4 billion: must be a clean error, not an OOM
+        bytes[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_tensors(&bytes).unwrap_err().to_string();
+        assert!(err.contains("MPQT"), "unexpected error: {err}");
+        // truncation mid-payload is an error too, at every cut point
+        let bytes = encode_tensors(std::slice::from_ref(&t));
+        for cut in 1..bytes.len() {
+            assert!(
+                decode_tensors(&bytes[..cut]).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
     }
 }

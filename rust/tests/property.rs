@@ -10,6 +10,7 @@ use mpq::manifest::{ActQ, DataFiles, Group, Layer, ModelEntry, ParamInfo, WQ};
 use mpq::metrics::{kendall_tau, PearsonAccum, StreamingTaskMetric};
 use mpq::search::{assignment_at, flip_sequence, PrefixCursor};
 use mpq::sensitivity::SensEntry;
+use mpq::store;
 use mpq::tensor::{io, Tensor};
 use mpq::util::Rng;
 
@@ -491,6 +492,183 @@ fn supervised_fleet_under_random_faults_matches_serial_or_reports_cause() {
                 fs.faults_injected > 0 && !fs.last_deaths.is_empty(),
                 "seed {seed}: degradation without recorded deaths: {fs:?}"
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Durable-store corruption properties: arbitrarily mutilated bytes must
+// never panic, never decode into records/tensors that were not written —
+// the worst allowed outcome is a clean error or a shorter valid prefix.
+// ---------------------------------------------------------------------------
+
+/// Random framed-journal image: header + `n` records with unique digests
+/// and random payloads.  Returns the records and the encoded bytes.
+fn random_journal_image(rng: &mut Rng, case: usize) -> (Vec<store::Record>, Vec<u8>) {
+    let n = 1 + rng.below(6);
+    let mut recs = Vec::new();
+    let mut bytes = store::file_header().to_vec();
+    for i in 0..n {
+        let kind = [
+            store::kind::PROBE,
+            store::kind::SEARCH_EVAL,
+            store::kind::ADAROUND,
+            store::kind::BLOB,
+        ][rng.below(4)];
+        // unique per (case, i): a corrupted record must never be able to
+        // masquerade as a different original one
+        let digest = ((case as u64) << 32) | ((i as u64) << 16) | rng.below(1 << 16) as u64;
+        let payload: Vec<u8> = (0..rng.below(40)).map(|_| rng.below(256) as u8).collect();
+        bytes.extend_from_slice(&store::encode_record(kind, digest, &payload));
+        recs.push(store::Record { kind, digest, payload });
+    }
+    (recs, bytes)
+}
+
+/// Truncation at EVERY byte offset: `decode_records` returns exactly the
+/// records that fit whole — always a prefix of what was written.
+#[test]
+fn journal_decode_any_truncation_keeps_valid_prefix() {
+    let mut rng = Rng::new(0x70);
+    for case in 0..40 {
+        let (recs, bytes) = random_journal_image(&mut rng, case);
+        for cut in 0..=bytes.len() {
+            let (got, end) = store::decode_records(&bytes[..cut]);
+            assert!(end <= cut, "valid end past the truncation point");
+            assert!(got.len() <= recs.len(), "truncation invented records");
+            assert_eq!(got, recs[..got.len()], "cut={cut}: decoded a non-prefix");
+        }
+    }
+}
+
+/// A bit flip at EVERY post-header offset: the checksum ends the valid
+/// prefix at (or before) the flipped frame — records are served verbatim
+/// or not at all, never altered.
+#[test]
+fn journal_decode_any_bitflip_keeps_valid_prefix() {
+    let mut rng = Rng::new(0x71);
+    let hdr = store::file_header().len();
+    for case in 0..25 {
+        let (recs, bytes) = random_journal_image(&mut rng, case);
+        for off in hdr..bytes.len() {
+            let mut m = bytes.clone();
+            m[off] ^= 1 << rng.below(8);
+            let (got, _) = store::decode_records(&m);
+            // frames wholly before the flip are untouched; the flipped one
+            // fails its checksum (reserved bytes are the benign exception)
+            for (i, r) in got.iter().enumerate() {
+                assert_eq!(
+                    (r.kind, r.digest, &r.payload),
+                    (recs[i].kind, recs[i].digest, &recs[i].payload),
+                    "off={off}: bit flip altered record {i} instead of dropping it"
+                );
+            }
+        }
+    }
+}
+
+/// `RunJournal::open(resume)` on arbitrarily mutilated files: never
+/// panics, never fails the run — a bad header quarantines, a bad tail
+/// truncates, and every replayed payload is byte-equal to what was
+/// written.
+#[test]
+fn journal_open_survives_arbitrary_corruption() {
+    use std::rc::Rc;
+    let mut rng = Rng::new(0x72);
+    let dir = std::env::temp_dir().join("mpq_prop_journal");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..60 {
+        let (recs, bytes) = random_journal_image(&mut rng, case);
+        let mut m = bytes.clone();
+        match case % 3 {
+            0 => m.truncate(rng.below(m.len() + 1)),
+            1 => {
+                let off = rng.below(m.len());
+                m[off] ^= 1 << rng.below(8);
+            }
+            _ => {
+                m.truncate(rng.below(m.len() + 1));
+                if !m.is_empty() {
+                    let off = rng.below(m.len());
+                    m[off] ^= 1 << rng.below(8);
+                }
+            }
+        }
+        let p = dir.join(format!("j{case}.mpqj"));
+        std::fs::write(&p, &m).unwrap();
+        let stats = Rc::new(mpq::store::StoreStats::default());
+        let j = mpq::store::RunJournal::open(&p, true, Rc::clone(&stats))
+            .unwrap_or_else(|e| panic!("case {case}: corrupt journal failed the open: {e:#}"));
+        assert!(
+            stats.journal_replayed.get() as usize <= recs.len(),
+            "case {case}: replayed more records than were written"
+        );
+        for r in &recs {
+            if let Some(got) = j.lookup(r.kind, r.digest) {
+                assert_eq!(got, r.payload, "case {case}: replayed payload altered");
+            }
+        }
+        // the journal must be append-ready after recovery
+        j.record(store::kind::PROBE, u64::MAX - case as u64, &[1, 2, 3]).unwrap();
+    }
+}
+
+/// MPQT streams truncated at every offset: `decode_tensors` either errors
+/// cleanly or returns an exact prefix of the encoded tensors — never a
+/// panic, an unbounded allocation, or reshaped data.
+#[test]
+fn tensor_decode_any_truncation_errs_or_prefix() {
+    let mut rng = Rng::new(0x73);
+    for _ in 0..30 {
+        let nt = 1 + rng.below(3);
+        let ts: Vec<Tensor> = (0..nt)
+            .map(|_| {
+                let shape: Vec<usize> = (0..1 + rng.below(3)).map(|_| 1 + rng.below(5)).collect();
+                let n: usize = shape.iter().product();
+                Tensor::from_f32(&shape, (0..n).map(|_| rng.f64() as f32).collect()).unwrap()
+            })
+            .collect();
+        let bytes = io::encode_tensors(&ts);
+        for cut in 0..=bytes.len() {
+            if let Ok(got) = io::decode_tensors(&bytes[..cut]) {
+                assert_eq!(got, ts[..got.len()], "cut={cut}: decoded a non-prefix");
+            }
+        }
+    }
+}
+
+/// MPQT bit flips at every offset never panic or over-allocate, and a
+/// corrupted checksummed blob ([`mpq::store::read_blob`]) is always a
+/// clean error or the original payload — never garbage.
+#[test]
+fn tensor_and_blob_decode_bitflips_never_panic() {
+    let mut rng = Rng::new(0x74);
+    let dir = std::env::temp_dir().join("mpq_prop_blob");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..30 {
+        let shape = vec![2 + rng.below(4), 1 + rng.below(4)];
+        let n: usize = shape.iter().product();
+        let t = Tensor::from_f32(&shape, (0..n).map(|_| rng.f64() as f32).collect()).unwrap();
+        let bytes = io::encode_tensors(std::slice::from_ref(&t));
+        for off in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[off] ^= 1 << rng.below(8);
+            // any outcome but a panic/OOM is in-contract for raw MPQT; the
+            // journal/blob checksum layer is what detects payload flips
+            let _ = io::decode_tensors(&m);
+        }
+        let payload = bytes;
+        let p = dir.join(format!("b{case}.blob"));
+        store::write_blob(&p, 0xD1CE + case as u64, &payload).unwrap();
+        let stored = std::fs::read(&p).unwrap();
+        let off = rng.below(stored.len());
+        let mut m = stored;
+        m[off] ^= 1 << rng.below(8);
+        std::fs::write(&p, &m).unwrap();
+        match store::read_blob(&p, 0xD1CE + case as u64) {
+            Ok(Some(got)) => assert_eq!(got, payload, "case {case}: blob flip served garbage"),
+            Ok(None) | Err(_) => {}
         }
     }
 }

@@ -1,0 +1,286 @@
+//! Crash/resume end-to-end tests on the pure-Rust sim backend (tier 1).
+//!
+//! The durability contract under test (see `src/store`): a pipeline killed
+//! at **any** run-journal barrier (`crash@PHASE:N` aborts the coordinator
+//! right after the Nth record is durable) and restarted with `--resume`
+//! must reproduce the uninterrupted run **byte-for-byte** — sensitivity
+//! lists, search curves, AdaRounded tensors and the rendered report — while
+//! re-executing *zero* completed work units: every journaled record is
+//! served back, only the remainder is computed and appended.  The matrix
+//! covers the serial path and pooled fleets at 1/2/4 workers, every crash
+//! ordinal in turn.
+//!
+//! Corruption is exercised end-to-end too: a torn journal tail or a
+//! bit-flipped record degrades to the last valid prefix (the rest is
+//! recomputed, results unchanged), and a corrupt header quarantines the
+//! file and restarts fresh — never a panic, never a wrong result.
+
+use mpq::adaround::AdaRoundCfg;
+use mpq::coordinator::Pipeline;
+use mpq::groups::Lattice;
+use mpq::sim::{self, SimSpec};
+use mpq::store::{RunJournal, StoreStats};
+use mpq::tensor::io as tio;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+const MODEL: &str = "sim_mlp";
+const CALIB_N: usize = 64;
+
+/// Fresh sim artifacts under a per-test temp dir (generation is
+/// deterministic: same spec → byte-identical weights and data).
+fn sim_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_resume_e2e_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = SimSpec { calib_n: CALIB_N, val_n: 64, ood_n: 0, ..Default::default() };
+    sim::generate(&dir, &spec).expect("generate sim artifacts");
+    dir
+}
+
+/// Everything one pipeline run produces, in bit-exact form, plus the
+/// durability counters the assertions key on.
+struct RunOut {
+    /// (group, wbits, abits, score bits) per Phase-1 entry
+    sens: Vec<(usize, u8, u8, u64)>,
+    /// (rel_bops bits, metric bits) per pareto-curve point
+    curve: Vec<(u64, u64)>,
+    /// sorted (param_idx, wbits) → MPQT-encoded rounded tensor
+    rounded: Vec<((usize, u8), Vec<u8>)>,
+    /// rendered final report (the byte-equality target for reports)
+    report: String,
+    /// forward batches the *coordinator* engine ran (serial work proxy)
+    fwd_calls: u64,
+    appended: u64,
+    replayed: u64,
+    skips: u64,
+    truncations: u64,
+    quarantined: u64,
+}
+
+/// One full mini-pipeline — calibrate, Phase-1 SQNR sweep, pareto curve on
+/// the calibration set, AdaRound — against the journal at
+/// `<dir>/journal.mpqj`.  `workers == 0` is the serial path.
+fn run_n(
+    dir: &Path,
+    workers: usize,
+    resume: bool,
+    crash: Vec<u64>,
+    calib_n: usize,
+) -> anyhow::Result<RunOut> {
+    let stats = Rc::new(StoreStats::default());
+    let journal = RunJournal::open(dir.join("journal.mpqj"), resume, Rc::clone(&stats))?
+        .with_crash_barriers(crash);
+    let mut p = Pipeline::open(dir, MODEL)?;
+    if workers > 0 {
+        p.enable_pool(workers)?;
+    }
+    p.set_journal(Some(Rc::new(journal)));
+    p.calibrate(calib_n, 0)?;
+    let lat = Lattice::practical();
+    let sens = p.sensitivity_sqnr(&lat)?;
+    let flips = p.flips(&lat, &sens);
+    let curve_run = p.pareto_curve(&lat, &flips, None)?;
+    let ar_cfg = AdaRoundCfg { steps: 8, ..Default::default() };
+    let rounded = p.adaround(&lat, &ar_cfg)?;
+
+    let mut report = mpq::report::Table::new("resume e2e", &["k", "rel_bops", "metric"]);
+    for (i, (r, m)) in curve_run.curve.iter().enumerate() {
+        report.row(vec![
+            i.to_string(),
+            format!("{:016x}", r.to_bits()),
+            format!("{:016x}", m.to_bits()),
+        ]);
+    }
+    let mut keys: Vec<_> = rounded.keys().copied().collect();
+    keys.sort_unstable();
+    Ok(RunOut {
+        sens: sens
+            .iter()
+            .map(|e| (e.group, e.cand.wbits, e.cand.abits, e.score.to_bits()))
+            .collect(),
+        curve: curve_run.curve.iter().map(|&(r, m)| (r.to_bits(), m.to_bits())).collect(),
+        rounded: keys
+            .into_iter()
+            .map(|k| (k, tio::encode_tensors(std::slice::from_ref(&rounded[&k]))))
+            .collect(),
+        report: report.render(),
+        fwd_calls: *p.model.fwd_calls.borrow(),
+        appended: stats.journal_appended.get(),
+        replayed: stats.journal_replayed.get(),
+        skips: stats.journal_skips.get(),
+        truncations: stats.journal_truncations.get(),
+        quarantined: stats.files_quarantined.get(),
+    })
+}
+
+fn run(dir: &Path, workers: usize, resume: bool, crash: Vec<u64>) -> anyhow::Result<RunOut> {
+    run_n(dir, workers, resume, crash, CALIB_N)
+}
+
+/// Start a fresh run armed to abort at journal barrier `n` and assert it
+/// actually died there (write-ahead: the Nth record is durable first).
+fn run_crashing(dir: &Path, workers: usize, n: u64) {
+    let res = catch_unwind(AssertUnwindSafe(|| run(dir, workers, false, vec![n])));
+    let err = match res {
+        Err(payload) => payload,
+        Ok(r) => panic!(
+            "crash@PHASE:{n} did not fire (run finished: {:?})",
+            r.map(|o| o.appended)
+        ),
+    };
+    let msg = err
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| err.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string panic>");
+    assert!(msg.contains("crash@PHASE"), "unexpected panic: {msg}");
+}
+
+fn assert_same_outputs(base: &RunOut, got: &RunOut, what: &str) {
+    assert_eq!(base.sens, got.sens, "{what}: sensitivity lists differ");
+    assert_eq!(base.curve, got.curve, "{what}: search curves differ");
+    assert_eq!(base.rounded, got.rounded, "{what}: rounded tensors differ");
+    assert_eq!(base.report, got.report, "{what}: rendered reports differ");
+}
+
+/// Kill at every barrier ordinal in turn, resume, and demand byte-equal
+/// outputs with zero re-executed completed units.
+fn crash_matrix(dir: &Path, workers: usize, base: &RunOut) {
+    let total = base.appended;
+    assert!(total >= 10, "w{workers}: expected a real barrier count, got {total}");
+    for n in 1..=total {
+        run_crashing(dir, workers, n);
+        let resumed = run(dir, workers, true, vec![]).unwrap();
+        assert_same_outputs(base, &resumed, &format!("w{workers} crash@{n}"));
+        assert_eq!(resumed.replayed, n, "w{workers} crash@{n}: replayed records");
+        assert!(
+            resumed.skips >= n,
+            "w{workers} crash@{n}: only {} journal skips for {n} replayed records",
+            resumed.skips
+        );
+        assert_eq!(
+            resumed.appended,
+            total - n,
+            "w{workers} crash@{n}: completed work was re-executed"
+        );
+    }
+}
+
+#[test]
+fn crash_at_every_barrier_then_resume_serial() {
+    let dir = sim_dir("serial");
+    let base = run(&dir, 0, false, vec![]).unwrap();
+    crash_matrix(&dir, 0, &base);
+}
+
+#[test]
+fn crash_at_every_barrier_then_resume_w1() {
+    let dir = sim_dir("w1");
+    let serial = run(&dir, 0, false, vec![]).unwrap();
+    let base = run(&dir, 1, false, vec![]).unwrap();
+    assert_same_outputs(&serial, &base, "pooled w1 vs serial");
+    assert_eq!(serial.appended, base.appended, "barrier counts diverge pooled vs serial");
+    crash_matrix(&dir, 1, &base);
+}
+
+#[test]
+fn crash_at_every_barrier_then_resume_w2() {
+    let dir = sim_dir("w2");
+    let serial = run(&dir, 0, false, vec![]).unwrap();
+    let base = run(&dir, 2, false, vec![]).unwrap();
+    assert_same_outputs(&serial, &base, "pooled w2 vs serial");
+    crash_matrix(&dir, 2, &base);
+}
+
+#[test]
+fn crash_at_every_barrier_then_resume_w4() {
+    let dir = sim_dir("w4");
+    let serial = run(&dir, 0, false, vec![]).unwrap();
+    let base = run(&dir, 4, false, vec![]).unwrap();
+    assert_same_outputs(&serial, &base, "pooled w4 vs serial");
+    crash_matrix(&dir, 4, &base);
+}
+
+/// A journal holding the complete run replays everything: the resumed
+/// serial run must not issue a single forward batch.
+#[test]
+fn completed_journal_resumes_with_zero_forward_work() {
+    let dir = sim_dir("full");
+    let base = run(&dir, 0, false, vec![]).unwrap();
+    let resumed = run(&dir, 0, true, vec![]).unwrap();
+    assert_same_outputs(&base, &resumed, "full resume");
+    assert_eq!(resumed.replayed, base.appended);
+    assert_eq!(resumed.appended, 0, "fully journaled resume appended new records");
+    assert_eq!(resumed.fwd_calls, 0, "fully journaled resume ran forward batches");
+}
+
+/// Changing the run inputs (here: the calibration subset) moves every
+/// scope digest, so a stale journal replays nothing into the changed run.
+#[test]
+fn stale_journal_never_replays_into_changed_run() {
+    let dir = sim_dir("stale");
+    let base = run(&dir, 0, false, vec![]).unwrap();
+    let changed = run_n(&dir, 0, true, vec![], CALIB_N / 2).unwrap();
+    assert_eq!(changed.replayed, base.appended, "stale records still replay at open");
+    assert_eq!(changed.skips, 0, "stale journal records matched a changed run");
+    assert!(changed.appended > 0, "changed run journaled nothing");
+}
+
+/// A write torn mid-record (process died during the final append) is
+/// truncated back to the last valid record; only that one unit recomputes.
+#[test]
+fn torn_journal_tail_truncates_and_resumes_byte_equal() {
+    let dir = sim_dir("torn");
+    let base = run(&dir, 0, false, vec![]).unwrap();
+    let jpath = dir.join("journal.mpqj");
+    let len = std::fs::metadata(&jpath).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&jpath).unwrap();
+    f.set_len(len - 5).unwrap();
+    drop(f);
+    let resumed = run(&dir, 0, true, vec![]).unwrap();
+    assert_same_outputs(&base, &resumed, "torn tail");
+    assert_eq!(resumed.truncations, 1, "torn tail not detected");
+    assert_eq!(resumed.replayed, base.appended - 1, "exactly the torn record is lost");
+    assert_eq!(resumed.appended, 1, "only the torn record recomputes");
+}
+
+/// A bit flip mid-file invalidates that record's checksum: replay keeps
+/// the valid prefix, recomputes the rest, and the results don't change.
+#[test]
+fn corrupt_journal_record_degrades_to_valid_prefix() {
+    let dir = sim_dir("bitflip");
+    let base = run(&dir, 0, false, vec![]).unwrap();
+    let jpath = dir.join("journal.mpqj");
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&jpath, &bytes).unwrap();
+    let resumed = run(&dir, 0, true, vec![]).unwrap();
+    assert_same_outputs(&base, &resumed, "bit flip");
+    assert_eq!(resumed.truncations, 1, "corrupt frame not truncated");
+    assert!(resumed.replayed < base.appended, "corrupt record still replayed");
+    assert_eq!(
+        resumed.appended + resumed.replayed,
+        base.appended,
+        "lost records must be recomputed, nothing more"
+    );
+}
+
+/// A destroyed header quarantines the file (`journal.mpqj.corrupt`) and
+/// restarts journaling from scratch — the run itself is unaffected.
+#[test]
+fn corrupt_journal_header_quarantines_and_restarts_fresh() {
+    let dir = sim_dir("badheader");
+    let base = run(&dir, 0, false, vec![]).unwrap();
+    let jpath = dir.join("journal.mpqj");
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    bytes[0] ^= 0xff;
+    std::fs::write(&jpath, &bytes).unwrap();
+    let resumed = run(&dir, 0, true, vec![]).unwrap();
+    assert_same_outputs(&base, &resumed, "bad header");
+    assert_eq!(resumed.replayed, 0);
+    assert_eq!(resumed.quarantined, 1, "bad-header journal not quarantined");
+    assert_eq!(resumed.appended, base.appended, "fresh journal must hold the full run");
+    assert!(dir.join("journal.mpqj.corrupt").exists(), "quarantine file missing");
+}
