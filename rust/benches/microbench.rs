@@ -10,7 +10,8 @@
 //! * **sim section (always runs, hermetic)** — a generated sim-backend zoo
 //!   (`mpq::sim`) sized so probe compute dominates dispatch, producing
 //!   `phase1_sim/...`, `phase2_sim/...` and
-//!   `phase1_pool_sim/full_sensitivity_sweep_w{1,2,4}` on every machine,
+//!   `phase1_pool_sim/full_sensitivity_sweep_w{1,2,4}` and the daemon's
+//!   `serve_sim/submit_roundtrip_p{50,90,99}` on every machine,
 //!   toolchain-only.  These are the entries `scripts/bench_compare` gates
 //!   on in CI — including the pool w4-vs-w1 speedup check — so the gate is
 //!   no longer vacuous without PJRT artifacts.
@@ -177,6 +178,7 @@ fn sim_benches(results: &mut Vec<BenchResult>) {
     }
 
     fleet_reuse_bench(results);
+    serve_submit_bench(results);
 }
 
 /// Fleet-reuse entry: attach-and-probe a *second* model on a fleet that is
@@ -237,6 +239,81 @@ fn fleet_reuse_bench(results: &mut Vec<BenchResult>) {
         opens_before,
         "second-model attach recompiled executables on a warm fleet"
     );
+}
+
+/// Daemon control-plane latency: submit→ACK round trips over the Unix
+/// socket against a held daemon (`--hold` stages jobs without running
+/// them), so the measurement is the wire protocol + admission + fsynced
+/// job record — no pipeline compute.  Reported as p50/p90/p99 over the
+/// sorted per-submit latencies (one percentile per JSON entry; min/mean/
+/// max all carry the percentile so `bench_compare`'s `min_s` basis works
+/// unchanged).
+fn serve_submit_bench(results: &mut Vec<BenchResult>) {
+    use mpq::serve::daemon::{self, ServeCfg};
+    use mpq::serve::{Client, JobPolicy};
+
+    let dir = std::env::temp_dir().join("mpq_microbench_serve");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = SimSpec {
+        dims: vec![8, 10, 6],
+        calib_n: 16,
+        val_n: 8,
+        ood_n: 0,
+        ..Default::default()
+    };
+    sim::generate(&dir, &spec).expect("generate serve sim artifacts");
+
+    const N: usize = 200;
+    let cfg = ServeCfg {
+        dir: dir.clone(),
+        socket: dir.join("bench.sock"),
+        state_dir: dir.join("mpqd"),
+        workers: 1,
+        max_idle: 1,
+        max_jobs: N + 8, // every timed submit must be admitted
+        fault_plan: None,
+        hold: true,
+    };
+    let sock = cfg.socket.clone();
+    let daemon = std::thread::spawn(move || daemon::run(cfg));
+    let mut client = None;
+    for _ in 0..1000 {
+        match Client::connect(&sock) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
+    let mut client = client.expect("mpqd never came up");
+    let policy = JobPolicy::default();
+    for _ in 0..8 {
+        client.status().expect("warmup status");
+    }
+    let mut lat = Vec::with_capacity(N);
+    for _ in 0..N {
+        let t0 = std::time::Instant::now();
+        client.submit(&spec.name, &policy).expect("submit");
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    client.shutdown().expect("shutdown");
+    daemon.join().expect("daemon thread").expect("daemon run");
+
+    lat.sort_by(f64::total_cmp);
+    for (tag, q) in [("p50", 0.50), ("p90", 0.90), ("p99", 0.99)] {
+        let v = lat[((N as f64 * q) as usize).min(N - 1)];
+        let r = BenchResult {
+            name: format!("serve_sim/submit_roundtrip_{tag}"),
+            min_s: v,
+            mean_s: v,
+            max_s: v,
+            iters: N,
+        };
+        r.print();
+        results.push(r);
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// The original artifacts-gated PJRT benches on `resnet_s`.

@@ -228,47 +228,12 @@ const CNN_MODELS: &[&str] = &[
     "deeplab_s",
 ];
 
-/// One-line per-model accounting appended to driver progress output: the
-/// on-disk sensitivity/reference-cache hit/miss counters (ROADMAP asks
-/// reports to carry them) and the evaluation-fleet width in use.
+/// One-line per-model accounting appended to driver progress output —
+/// the consolidated [`crate::telemetry::Snapshot`]'s compact form (cache
+/// hit/miss counters, fleet width, and failure/durability sections when
+/// those subsystems did something).
 fn pipe_note(pipe: &Pipeline) -> String {
-    let (h, m) = pipe.sens_cache_stats();
-    let (rh, rm) = pipe.ref_cache_stats();
-    let w = pipe.pool.as_ref().map(|p| p.workers()).unwrap_or(0);
-    let mut note = format!("sens-cache {h}h/{m}m, ref-cache {rh}h/{rm}m, fleet w={w}");
-    // failure telemetry rides along only when something actually happened,
-    // so fault-free runs keep the familiar one-liner
-    if let Some(fs) = pipe.pool.as_ref().map(|p| p.fleet().failure_stats()) {
-        if fs.any() {
-            note.push_str(&format!(
-                ", faults {} (restarts {}, requeued {}, degraded {})",
-                fs.faults_injected,
-                fs.worker_restarts,
-                fs.jobs_requeued,
-                fs.degraded_events.len()
-            ));
-        }
-    }
-    // durability telemetry likewise rides along only when the journal or
-    // the caches actually did something
-    let ss = pipe.store_stats();
-    if ss.any() {
-        note.push_str(&format!(
-            ", journal {}a/{}r/{}s",
-            ss.journal_appended.get(),
-            ss.journal_replayed.get(),
-            ss.journal_skips.get()
-        ));
-        if ss.any_degraded() {
-            note.push_str(&format!(
-                " (truncated {}, corrupt-miss {}, quarantined {})",
-                ss.journal_truncations.get(),
-                ss.cache_corrupt_misses.get(),
-                ss.files_quarantined.get()
-            ));
-        }
-    }
-    note
+    crate::telemetry::Snapshot::from_pipeline(pipe).note()
 }
 
 /// MP at a BOPs budget via SQNR Phase 1 (the paper's standard pipeline).

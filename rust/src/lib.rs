@@ -21,7 +21,9 @@
 //!   detach; `resize` grows/shrinks the fleet between phases).  Probes,
 //!   FIT accumulation and AdaRound optimizations all fan out through it
 //!   with results bit-identical to the serial path (`--workers N` on the
-//!   CLI).
+//!   CLI).  The [`serve`] daemon (`mpq serve`) exposes that fleet as a
+//!   service: concurrent jobs over a Unix socket, phase-interleaved
+//!   scheduling, streamed progress, per-job crash/resume journals.
 //! * **L2** — the model zoo, lowered once by `python/compile/aot.py` to
 //!   HLO-text artifacts whose quantizer parameters are *runtime inputs*.
 //! * **L1** — Pallas fake-quant kernels inside those artifacts.
@@ -68,8 +70,10 @@ pub mod report;
 pub mod runtime;
 pub mod search;
 pub mod sensitivity;
+pub mod serve;
 pub mod sim;
 pub mod store;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

@@ -190,6 +190,19 @@ fn main() -> Result<()> {
                 spec.name, spec.dims
             );
         }
+        "serve" => {
+            let cfg = mpq::serve::ServeCfg::from_args(&args)?;
+            println!(
+                "mpqd: serving {} on {} (workers {}, max-jobs {}, max-idle {})",
+                cfg.dir.display(),
+                cfg.socket.display(),
+                cfg.workers,
+                cfg.max_jobs,
+                cfg.max_idle
+            );
+            mpq::serve::run(cfg)?;
+        }
+        "client" => mpq::serve::client::cli(&args)?,
         "table1" => { let t = experiments::table1(&opts)?; t.print(); t.save(&rdir, "table1")?; }
         "table2" => { let t = experiments::table2(&opts)?; t.print(); t.save(&rdir, "table2")?; }
         "table3" => { let t = experiments::table3(&opts)?; t.print(); t.save(&rdir, "table3")?; }
@@ -227,7 +240,7 @@ fn main() -> Result<()> {
             b.save(&rdir, "fig2_ktau")?;
         }
         "help" | _ => {
-            println!("usage: mpq <list|run|sensitivity|sim-gen|table1..table5|fig2..fig5|all> [flags]");
+            println!("usage: mpq <list|run|sensitivity|sim-gen|serve|client|table1..table5|fig2..fig5|all> [flags]");
             println!("flags: --artifacts DIR --model M --models a,b --calib N --seed S");
             println!("       --budget R --lattice practical|practical_no16|expanded --fast");
             println!("       --workers N  evaluation-fleet width (default: host parallelism;");
@@ -247,6 +260,12 @@ fn main() -> Result<()> {
             println!("sim-gen: --out DIR --dims d0,d1,..,dL --batch B --calib-n N --val-n N");
             println!("         --ood-n N --sim-seed S --fault-plan SPEC");
             println!("         (pure-Rust backend; no PJRT needed)");
+            println!("serve:   --socket PATH --artifacts DIR [--state-dir DIR] [--workers N]");
+            println!("         [--max-jobs N] [--max-idle N] [--hold]  long-running daemon:");
+            println!("         one shared fleet, concurrent jobs, per-job crash/resume journals");
+            println!("client:  <submit|status|watch|cancel|release|shutdown> --socket PATH");
+            println!("         [--model M --calib N --seed S --priority P --eval-budget N");
+            println!("          --no-adaround --adaround-steps N --job J]");
         }
     }
     Ok(())

@@ -25,7 +25,14 @@
 //!   recompilations** of the first model's executables (asserted via
 //!   [`EvalFleet::worker_stats`] / [`EvalFleet::model_opens`]).  Detaching
 //!   the last client of a model evicts its handles, shards and memo
-//!   entries everywhere.
+//!   entries everywhere — eagerly by default, or deferred through the
+//!   **idle-model warm list** ([`EvalFleet::set_max_idle`]): with a
+//!   budget of `n`, the last detach parks the model (host state, worker
+//!   slots, memo entries and open handles intact) and only the
+//!   least-recently-idled overflow past `n` is evicted, so a long-lived
+//!   daemon under model churn bounds resident compiled executables while
+//!   re-attaching a warm model costs zero recompiles *and* zero
+//!   re-opens.
 //! * **`resize(n)`** grows or shrinks the fleet between phases: the
 //!   front-end keeps host copies of every model's calibration state,
 //!   registered datasets and installed FP32 references, re-shards them
@@ -422,6 +429,11 @@ pub struct EvalFleet {
     /// model handles opened (= lazy compiles) across all workers, ever
     opens: Arc<AtomicUsize>,
     state: Mutex<HashMap<String, ModelState>>,
+    /// idle (refcount-zero) models kept warm, least-recently-idled first;
+    /// bounded by `max_idle` (see [`EvalFleet::set_max_idle`])
+    warm: Mutex<Vec<String>>,
+    /// idle-model retention budget: 0 = evict eagerly on last detach
+    max_idle: AtomicUsize,
     next_model_id: AtomicU64,
     /// monotone incarnation-id allocator (see [`Worker::widx`])
     next_widx: AtomicUsize,
@@ -484,6 +496,8 @@ impl EvalFleet {
             memo_misses: AtomicUsize::new(0),
             opens: Arc::new(AtomicUsize::new(0)),
             state: Mutex::new(HashMap::new()),
+            warm: Mutex::new(Vec::new()),
+            max_idle: AtomicUsize::new(0),
             next_model_id: AtomicU64::new(0),
             next_widx: AtomicUsize::new(0),
             next_lane: AtomicUsize::new(0),
@@ -534,6 +548,30 @@ impl EvalFleet {
     /// on: re-probing an attached model must not move it.
     pub fn model_opens(&self) -> usize {
         self.opens.load(Ordering::Relaxed)
+    }
+
+    /// Bound the number of **idle** (refcount-zero) models kept resident
+    /// after their last client detaches.  `0` — the default — evicts
+    /// eagerly on last detach, the historical behavior.  `n > 0` keeps up
+    /// to `n` recently-idled models warm (host state, worker slots, memo
+    /// entries and open handles all survive), so re-attaching one costs
+    /// zero recompiles *and* zero re-opens; overflow evicts the
+    /// least-recently-idled model.  A long-lived daemon under model churn
+    /// uses this to bound resident compiled executables.  Shrinking the
+    /// budget evicts the overflow immediately.
+    pub fn set_max_idle(&self, n: usize) {
+        self.max_idle.store(n, Ordering::Relaxed);
+        self.trim_warm();
+    }
+
+    /// Current idle-model retention budget.
+    pub fn max_idle(&self) -> usize {
+        self.max_idle.load(Ordering::Relaxed)
+    }
+
+    /// Idle models currently kept warm (least-recently-idled first).
+    pub fn warm_models(&self) -> Vec<String> {
+        self.warm.lock().unwrap().clone()
     }
 
     /// Failure telemetry: restarts, requeues, injected faults, degradation
@@ -778,26 +816,63 @@ impl EvalFleet {
         Ok(())
     }
 
-    fn detach(&self, model: &str, model_id: u64) {
-        let gone = {
+    /// Drop one client's reference.  At refcount zero the model either
+    /// evicts immediately (`max_idle == 0`) or parks on the warm list,
+    /// evicting the least-recently-idled overflow.
+    fn detach(&self, model: &str) {
+        let evict_now = {
             let mut st = self.state.lock().unwrap();
             match st.get_mut(model) {
                 Some(ms) => {
                     ms.attached = ms.attached.saturating_sub(1);
-                    if ms.attached == 0 {
-                        st.remove(model);
-                        true
+                    if ms.attached != 0 {
+                        return;
+                    }
+                    if self.max_idle.load(Ordering::Relaxed) == 0 {
+                        st.remove(model).map(|ms| ms.id)
                     } else {
-                        false
+                        let mut warm = self.warm.lock().unwrap();
+                        warm.retain(|m| m != model);
+                        warm.push(model.to_string());
+                        None
                     }
                 }
-                None => false,
+                None => return,
             }
         };
-        if gone {
-            self.memo.lock().unwrap().retain(|k, _| k.0 != model_id);
-            let m: Arc<str> = Arc::from(model);
-            let _ = self.fire(|_, _| Request::Detach { model: m.clone() });
+        match evict_now {
+            Some(id) => self.evict(model, id),
+            None => self.trim_warm(),
+        }
+    }
+
+    /// Purge an evicted model's memo entries and broadcast the worker-side
+    /// detach (fire-and-forget; the host-side `ModelState` is already
+    /// removed by the caller).
+    fn evict(&self, model: &str, model_id: u64) {
+        self.memo.lock().unwrap().retain(|k, _| k.0 != model_id);
+        let m: Arc<str> = Arc::from(model);
+        let _ = self.fire(|_, _| Request::Detach { model: m.clone() });
+    }
+
+    /// Evict least-recently-idled warm models until the warm list fits
+    /// the idle budget.
+    fn trim_warm(&self) {
+        let victims: Vec<(String, u64)> = {
+            let mut st = self.state.lock().unwrap();
+            let mut warm = self.warm.lock().unwrap();
+            let max_idle = self.max_idle.load(Ordering::Relaxed);
+            let mut out = Vec::new();
+            while warm.len() > max_idle {
+                let victim = warm.remove(0);
+                if let Some(ms) = st.remove(&victim) {
+                    out.push((victim, ms.id));
+                }
+            }
+            out
+        };
+        for (name, id) in victims {
+            self.evict(&name, id);
         }
     }
 
@@ -1305,8 +1380,11 @@ impl EvalPool {
 
     /// Attach `model` (validated against the manifest) to a shared fleet
     /// and return the per-model client.  Attach counts are refcounted;
-    /// the last client's drop detaches the model fleet-wide (worker
-    /// slots, shards and memo entries are evicted).
+    /// the last client's drop detaches the model fleet-wide — eagerly
+    /// (worker slots, shards and memo entries evicted) or onto the warm
+    /// list when the fleet keeps idle models resident
+    /// ([`EvalFleet::set_max_idle`]); attaching a warm model revives it
+    /// with zero recompiles and zero re-opens.
     pub fn attach(fleet: &Rc<EvalFleet>, model: &str) -> Result<Self> {
         let entry = fleet.manifest.model(model)?;
         let (task, batch) = (entry.task.clone(), entry.batch);
@@ -1320,6 +1398,8 @@ impl EvalPool {
                 refs: HashMap::new(),
             });
             ms.attached += 1;
+            // a warm model is idle no longer
+            fleet.warm.lock().unwrap().retain(|m| m != model);
             ms.id
         };
         Ok(EvalPool {
@@ -1624,7 +1704,7 @@ impl EvalPool {
 
 impl Drop for EvalPool {
     fn drop(&mut self) {
-        self.fleet.detach(&self.model, self.model_id);
+        self.fleet.detach(&self.model);
     }
 }
 
@@ -1730,6 +1810,66 @@ mod tests {
         a3.insert(0, t1.clone());
         a3.insert(2, t1);
         assert_eq!(overrides_digest(&a2), overrides_digest(&a3));
+    }
+
+    #[test]
+    fn idle_model_eviction_is_lru_and_bounds_residency() {
+        let dir = std::env::temp_dir().join("mpq_pool_evict_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = |name: &str| crate::sim::SimSpec {
+            name: name.into(),
+            batch: 4,
+            dims: vec![8, 10, 6],
+            calib_n: 8,
+            val_n: 8,
+            ood_n: 0,
+            ..Default::default()
+        };
+        crate::sim::generate_zoo(&dir, &[spec("ev_a"), spec("ev_b")]).unwrap();
+        let fleet = EvalFleet::new(&dir, 1).unwrap();
+        fleet.set_max_idle(1);
+
+        // A tracked request that lazily opens the model on the worker: the
+        // fetch itself fails (no set loaded) but `ensure_model` has already
+        // run, and the tracked round trip synchronizes the open counter.
+        let open = |name: &str| {
+            let pool = EvalPool::attach(&fleet, name).unwrap();
+            assert!(pool.fetch_reference(CALIB_SET).is_err());
+            pool
+        };
+
+        let a = open("ev_a");
+        assert_eq!(fleet.model_opens(), 1);
+        drop(a); // last detach parks it on the warm list
+        assert_eq!(fleet.warm_models(), vec!["ev_a".to_string()]);
+        let a = open("ev_a");
+        assert_eq!(fleet.model_opens(), 1, "warm re-attach must not re-open");
+        assert!(fleet.warm_models().is_empty(), "an attached model is not idle");
+        drop(a);
+
+        let b = open("ev_b");
+        assert_eq!(fleet.model_opens(), 2);
+        drop(b); // warm would be [ev_a, ev_b] — budget 1 evicts ev_a (LRU)
+        assert_eq!(fleet.warm_models(), vec!["ev_b".to_string()]);
+
+        let a = open("ev_a");
+        assert_eq!(fleet.model_opens(), 3, "an evicted model re-opens on attach");
+        let compiled = fleet.worker_stats().unwrap()[0].compiled;
+        drop(a); // warm would be [ev_b, ev_a] — evicts ev_b
+        assert_eq!(fleet.warm_models(), vec!["ev_a".to_string()]);
+        let b = open("ev_b");
+        assert_eq!(fleet.model_opens(), 4);
+        assert_eq!(
+            fleet.worker_stats().unwrap()[0].compiled,
+            compiled,
+            "re-opens hit the runtime executable cache — never a recompile"
+        );
+        drop(b);
+
+        // shrinking the budget to zero evicts everything idle immediately
+        fleet.set_max_idle(0);
+        assert!(fleet.warm_models().is_empty());
+        assert!(fleet.state.lock().unwrap().is_empty(), "no resident models at budget 0");
     }
 
     #[test]

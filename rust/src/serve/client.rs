@@ -1,0 +1,167 @@
+//! Thin `mpqd` client: one Unix-socket connection speaking
+//! [`super::proto`], plus the `mpq client <sub>` CLI entry.
+//!
+//! Request methods (`submit`/`status`/`cancel`/`release`/`shutdown`) are
+//! strict request→reply pairs on one connection.  [`Client::watch`]
+//! converts the connection into a one-way event stream for a job and
+//! blocks until the job's final report (or failure) arrives.
+
+use crate::cli::Args;
+use crate::jsonio::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use super::job::JobPolicy;
+use super::proto::{self, msg};
+
+pub struct Client {
+    stream: UnixStream,
+}
+
+impl Client {
+    pub fn connect(socket: impl AsRef<Path>) -> Result<Self> {
+        let mut stream = UnixStream::connect(socket.as_ref())
+            .with_context(|| format!("connecting {}", socket.as_ref().display()))?;
+        proto::handshake(&mut stream)?;
+        Ok(Self { stream })
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, model: &str, policy: &JobPolicy) -> Result<u64> {
+        let payload = Json::Obj(vec![
+            ("model".into(), Json::Str(model.to_string())),
+            ("policy".into(), policy.to_json()),
+        ]);
+        proto::send(&mut self.stream, msg::SUBMIT, 0, &payload)?;
+        let (kind, job, p) = self.expect_reply()?;
+        match kind {
+            msg::ACK => Ok(job),
+            msg::ERR => bail!("submit refused: {}", err_text(&p)),
+            other => bail!("unexpected reply kind {other} to submit"),
+        }
+    }
+
+    /// The daemon's full state: job table, schedule log, telemetry.
+    pub fn status(&mut self) -> Result<Json> {
+        proto::send(&mut self.stream, msg::STATUS, 0, &Json::Null)?;
+        let (kind, _, p) = self.expect_reply()?;
+        match kind {
+            msg::STATE => Ok(p),
+            msg::ERR => bail!("status failed: {}", err_text(&p)),
+            other => bail!("unexpected reply kind {other} to status"),
+        }
+    }
+
+    pub fn cancel(&mut self, job: u64) -> Result<()> {
+        proto::send(&mut self.stream, msg::CANCEL, job, &Json::Null)?;
+        self.expect_ack("cancel")
+    }
+
+    /// Start held jobs (`mpq serve --hold` staging).
+    pub fn release(&mut self) -> Result<()> {
+        proto::send(&mut self.stream, msg::RELEASE, 0, &Json::Null)?;
+        self.expect_ack("release")
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        proto::send(&mut self.stream, msg::SHUTDOWN, 0, &Json::Null)?;
+        self.expect_ack("shutdown")
+    }
+
+    /// Subscribe to `job` and block until its final report.  Progress
+    /// messages (`{phase}` at phase starts, `{barrier, kind}` at journal
+    /// appends) are handed to `on_event` as they stream in; the returned
+    /// payload is the daemon's `{job, result, durability}` object.
+    /// Consumes the client: the connection is an event stream afterwards.
+    pub fn watch(mut self, job: u64, mut on_event: impl FnMut(&Json)) -> Result<Json> {
+        proto::send(&mut self.stream, msg::SUBSCRIBE, job, &Json::Null)?;
+        let (kind, _, p) = self.expect_reply()?;
+        match kind {
+            msg::ACK => {}
+            msg::ERR => bail!("subscribe refused: {}", err_text(&p)),
+            other => bail!("unexpected reply kind {other} to subscribe"),
+        }
+        loop {
+            let Some((kind, _, p)) = proto::recv(&mut self.stream)? else {
+                bail!("daemon closed the stream before a result (job cancelled or daemon exited)");
+            };
+            match kind {
+                msg::EVENT => on_event(&p),
+                msg::RESULT => return Ok(p),
+                msg::ERR => bail!("job {job} failed: {}", err_text(&p)),
+                other => bail!("unexpected stream kind {other}"),
+            }
+        }
+    }
+
+    fn expect_reply(&mut self) -> Result<proto::Msg> {
+        match proto::recv(&mut self.stream)? {
+            Some(m) => Ok(m),
+            None => bail!("daemon closed the connection"),
+        }
+    }
+
+    fn expect_ack(&mut self, what: &str) -> Result<()> {
+        let (kind, _, p) = self.expect_reply()?;
+        match kind {
+            msg::ACK => Ok(()),
+            msg::ERR => bail!("{what} refused: {}", err_text(&p)),
+            other => bail!("unexpected reply kind {other} to {what}"),
+        }
+    }
+}
+
+fn err_text(p: &Json) -> String {
+    match p.get("error") {
+        Some(v) => v.as_str().map(String::from).unwrap_or_else(|_| p.to_string()),
+        None => "unknown error".to_string(),
+    }
+}
+
+/// `mpq client <submit|status|watch|cancel|release|shutdown> --socket P`
+pub fn cli(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("status");
+    let socket = args.opt_str("socket", "mpqd.sock");
+    let mut client = Client::connect(socket)?;
+    match sub {
+        "submit" => {
+            let model = args.opt("model").context("submit needs --model")?;
+            let mut policy = JobPolicy::default();
+            policy.calib_n = args.opt_usize("calib", policy.calib_n)?;
+            policy.seed = args.opt_u64("seed", policy.seed)?;
+            if let Some(v) = args.opt("priority") {
+                policy.priority = v.parse().map_err(|e| anyhow!("--priority {v}: {e}"))?;
+            }
+            if let Some(v) = args.opt("eval-budget") {
+                policy.eval_budget =
+                    Some(v.parse().map_err(|e| anyhow!("--eval-budget {v}: {e}"))?);
+            }
+            policy.adaround = !args.flag("no-adaround");
+            policy.adaround_steps = args.opt_usize("adaround-steps", policy.adaround_steps)?;
+            let id = client.submit(model, &policy)?;
+            println!("job {id}");
+        }
+        "status" => println!("{}", client.status()?.to_string()),
+        "watch" => {
+            let job = args.opt_u64("job", 0)?;
+            let result = client.watch(job, |e| println!("event {}", e.to_string()))?;
+            println!("{}", result.to_string());
+        }
+        "cancel" => {
+            let job = args.opt_u64("job", 0)?;
+            client.cancel(job)?;
+            println!("cancelled job {job}");
+        }
+        "release" => {
+            client.release()?;
+            println!("released");
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("daemon shutting down");
+        }
+        other => bail!("unknown client subcommand '{other}'"),
+    }
+    Ok(())
+}

@@ -1,0 +1,771 @@
+//! `mpqd` — the quantization daemon.
+//!
+//! One process owns one [`EvalFleet`] and multiplexes many quantization
+//! jobs onto it.  Connections arrive over a Unix domain socket speaking
+//! the [`super::proto`] frame protocol; a per-connection handler thread
+//! translates frames into [`Ctl`] messages over an mpsc channel, and a
+//! single-threaded scheduler (the thread that called [`run`]) owns every
+//! `!Send` piece — the runtime, the fleet, the pipelines — and
+//! interleaves jobs one **phase step** at a time.
+//!
+//! Scheduling: runnable jobs are ordered by `(priority desc, least
+//! recently stepped, id)`, which degenerates to FIFO round-robin between
+//! equal-priority jobs — two concurrent jobs alternate phases on the
+//! shared fleet.  Admission control refuses submits beyond
+//! [`ServeCfg::max_jobs`] resident (queued + running) jobs.
+//!
+//! Durability: every job persists a state record
+//! (`state_dir/job_<id>.json`, written with fsync + rename) and journals
+//! its evaluation barriers to `state_dir/job_<id>.mpqj`.  A killed
+//! daemon restarts, reloads the records, and re-queues anything that was
+//! queued or running — the journal replays completed units bit-exactly,
+//! so no finished work is re-executed.  Finished jobs keep their result
+//! payload on disk (`job_<id>.result.json`); the journal is deleted only
+//! after the `done` record is durable.
+
+use crate::cli::Args;
+use crate::coordinator::Pipeline;
+use crate::jsonio::{self, Json};
+use crate::manifest::Manifest;
+use crate::pool::{EvalFleet, FaultPlan};
+use crate::runtime::Runtime;
+use crate::store::{self, RunJournal, StoreStats};
+use crate::telemetry::{FleetTelemetry, Snapshot, StoreCounters};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use super::job::{JobPolicy, JobRun};
+use super::proto::{self, msg};
+
+/// Daemon configuration (CLI: `mpq serve`).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// artifacts directory (manifest + model binaries + datasets)
+    pub dir: PathBuf,
+    /// Unix socket path; a stale file is replaced on startup
+    pub socket: PathBuf,
+    /// job records, journals and result payloads live here
+    pub state_dir: PathBuf,
+    /// evaluation-fleet width (min 1)
+    pub workers: usize,
+    /// idle models kept warm on the fleet after their last job detaches
+    pub max_idle: usize,
+    /// admission cap: max queued + running jobs
+    pub max_jobs: usize,
+    /// deterministic fault injection for job journals (`crash@PHASE:N`)
+    pub fault_plan: Option<String>,
+    /// start with the scheduler held (jobs queue until `Release`) — lets
+    /// tests stage several submissions before any work begins
+    pub hold: bool,
+}
+
+impl ServeCfg {
+    /// `mpq serve --socket PATH [--artifacts DIR] [--state-dir DIR]
+    /// [--workers N] [--max-idle N] [--max-jobs N] [--fault-plan SPEC]
+    /// [--hold]`
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let dir: PathBuf = args.opt_str("artifacts", "artifacts").into();
+        let state_dir = match args.opt("state-dir") {
+            Some(s) => s.into(),
+            None => dir.join("mpqd"),
+        };
+        let socket = match args.opt("socket") {
+            Some(s) => s.into(),
+            None => dir.join("mpqd.sock"),
+        };
+        Ok(Self {
+            dir,
+            socket,
+            state_dir,
+            workers: args.opt_workers()?,
+            max_idle: args.opt_usize("max-idle", 2)?,
+            max_jobs: args.opt_usize("max-jobs", 4)?,
+            fault_plan: args.opt("fault-plan").map(String::from),
+            hold: args.flag("hold"),
+        })
+    }
+}
+
+/// Control messages from connection handlers to the scheduler.  Replies
+/// travel back over per-request channels so handlers never touch `!Send`
+/// daemon state.
+enum Ctl {
+    Submit { model: String, policy: JobPolicy, reply: Sender<Result<u64, String>> },
+    Status { reply: Sender<Json> },
+    Cancel { job: u64, reply: Sender<Result<(), String>> },
+    Subscribe { job: u64, tx: Sender<Vec<u8>>, reply: Sender<Result<(), String>> },
+    Release,
+    Shutdown,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    fn label(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    model: String,
+    policy: JobPolicy,
+    state: JobState,
+    run: Option<JobRun>,
+    journal: Option<Rc<RunJournal>>,
+    /// per-job durability counters (shared with the journal + pipeline)
+    stats: Rc<StoreStats>,
+    result: Option<Json>,
+    error: Option<String>,
+    /// progress subscribers; encoded frames fan out over these
+    subs: Rc<RefCell<Vec<Sender<Vec<u8>>>>>,
+    /// scheduler clock of this job's most recent step (round-robin key)
+    last_step: u64,
+}
+
+impl Job {
+    fn new(id: u64, model: String, policy: JobPolicy) -> Self {
+        Self {
+            id,
+            model,
+            policy,
+            state: JobState::Queued,
+            run: None,
+            journal: None,
+            stats: Rc::new(StoreStats::default()),
+            result: None,
+            error: None,
+            subs: Rc::new(RefCell::new(Vec::new())),
+            last_step: 0,
+        }
+    }
+}
+
+struct Daemon {
+    cfg: ServeCfg,
+    manifest: Manifest,
+    rt: Rc<Runtime>,
+    fleet: Rc<EvalFleet>,
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    held: bool,
+    /// `"<id>:<phase>"` per executed step, served by `Status` — the
+    /// interleaving tests read the schedule from here
+    sched_log: Vec<String>,
+    step_counter: u64,
+}
+
+/// Run the daemon on the calling thread until a `Shutdown` message
+/// arrives.  Binds `cfg.socket`, restores persisted jobs from
+/// `cfg.state_dir` (queued/running records resume automatically), and
+/// on shutdown parks running jobs back to `queued` (fsynced) so the next
+/// start continues them.
+pub fn run(cfg: ServeCfg) -> Result<()> {
+    std::fs::create_dir_all(&cfg.state_dir)
+        .with_context(|| format!("creating {}", cfg.state_dir.display()))?;
+    let manifest = Manifest::load(&cfg.dir)?;
+    let rt = Rc::new(Runtime::for_manifest(&manifest)?);
+    let fleet = EvalFleet::new(&cfg.dir, cfg.workers.max(1))?;
+    fleet.set_max_idle(cfg.max_idle);
+    let (jobs, next_id) = load_jobs(&cfg.state_dir)?;
+
+    let _ = std::fs::remove_file(&cfg.socket);
+    let listener = UnixListener::bind(&cfg.socket)
+        .with_context(|| format!("binding {}", cfg.socket.display()))?;
+    let (ctl_tx, ctl_rx): (Sender<Ctl>, Receiver<Ctl>) = channel();
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = stop.clone();
+        let ctl = ctl_tx;
+        thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { break };
+                let ctl = ctl.clone();
+                thread::spawn(move || serve_conn(stream, ctl));
+            }
+        })
+    };
+
+    let socket = cfg.socket.clone();
+    let held = cfg.hold;
+    let mut d = Daemon {
+        cfg,
+        manifest,
+        rt,
+        fleet,
+        jobs,
+        next_id,
+        held,
+        sched_log: Vec::new(),
+        step_counter: 0,
+    };
+
+    let mut shutdown = false;
+    while !shutdown {
+        // absorb every pending control message first (cheap), then either
+        // run one phase step or block for the next message
+        while let Ok(m) = ctl_rx.try_recv() {
+            if d.handle(m) {
+                shutdown = true;
+                break;
+            }
+        }
+        if shutdown {
+            break;
+        }
+        let next = if d.held { None } else { d.pick() };
+        match next {
+            Some(id) => d.step_one(id),
+            None => match ctl_rx.recv() {
+                Ok(m) => shutdown = d.handle(m),
+                Err(_) => shutdown = true,
+            },
+        }
+    }
+
+    d.park_running();
+    stop.store(true, Ordering::SeqCst);
+    let _ = UnixStream::connect(&socket); // unblock the accept loop
+    let _ = accept.join();
+    let _ = std::fs::remove_file(&socket);
+    Ok(())
+}
+
+impl Daemon {
+    /// Process one control message; `true` means shut down.
+    fn handle(&mut self, m: Ctl) -> bool {
+        match m {
+            Ctl::Submit { model, policy, reply } => {
+                let r = self.admit(model, policy).map_err(|e| format!("{e:#}"));
+                let _ = reply.send(r);
+            }
+            Ctl::Status { reply } => {
+                let _ = reply.send(self.status_json());
+            }
+            Ctl::Cancel { job, reply } => {
+                let r = self.cancel(job).map_err(|e| format!("{e:#}"));
+                let _ = reply.send(r);
+            }
+            Ctl::Subscribe { job, tx, reply } => self.subscribe(job, tx, reply),
+            Ctl::Release => self.held = false,
+            Ctl::Shutdown => return true,
+        }
+        false
+    }
+
+    fn admit(&mut self, model: String, policy: JobPolicy) -> Result<u64> {
+        let resident = self
+            .jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Queued | JobState::Running))
+            .count();
+        if resident >= self.cfg.max_jobs {
+            bail!(
+                "admission refused: {resident} resident jobs at the max_jobs={} cap",
+                self.cfg.max_jobs
+            );
+        }
+        if !self.manifest.models.iter().any(|m| m.name == model) {
+            bail!("unknown model '{model}'");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.insert(id, Job::new(id, model, policy));
+        self.persist(id)?;
+        Ok(id)
+    }
+
+    fn cancel(&mut self, id: u64) -> Result<()> {
+        let journal_path = {
+            let Some(j) = self.jobs.get_mut(&id) else {
+                bail!("no such job {id}")
+            };
+            if !matches!(j.state, JobState::Queued | JobState::Running) {
+                bail!("job {id} is already {}", j.state.label());
+            }
+            j.state = JobState::Cancelled;
+            j.run = None; // drops the pipeline → detaches the model
+            let p = j.journal.as_ref().map(|r| r.path().to_path_buf());
+            j.journal = None;
+            p
+        };
+        self.persist(id)?;
+        if let Some(p) = journal_path {
+            let _ = std::fs::remove_file(p);
+        }
+        self.broadcast(
+            id,
+            proto::encode(
+                msg::EVENT,
+                id,
+                &Json::Obj(vec![("cancelled".into(), Json::Bool(true))]),
+            ),
+        );
+        self.jobs.get_mut(&id).unwrap().subs.borrow_mut().clear();
+        Ok(())
+    }
+
+    fn subscribe(&mut self, id: u64, tx: Sender<Vec<u8>>, reply: Sender<Result<(), String>>) {
+        let Some(state) = self.jobs.get(&id).map(|j| j.state) else {
+            let _ = reply.send(Err(format!("no such job {id}")));
+            return;
+        };
+        let _ = reply.send(Ok(()));
+        match state {
+            JobState::Done => {
+                if let Some(payload) = self.result_payload(id) {
+                    let _ = tx.send(proto::encode(msg::RESULT, id, &payload));
+                }
+            }
+            JobState::Failed => {
+                let err = self.jobs[&id].error.clone().unwrap_or_default();
+                let _ = tx.send(proto::encode(
+                    msg::ERR,
+                    id,
+                    &Json::Obj(vec![("error".into(), Json::Str(err))]),
+                ));
+            }
+            JobState::Cancelled => {
+                let _ = tx.send(proto::encode(
+                    msg::EVENT,
+                    id,
+                    &Json::Obj(vec![("cancelled".into(), Json::Bool(true))]),
+                ));
+            }
+            JobState::Queued | JobState::Running => {
+                self.jobs[&id].subs.borrow_mut().push(tx);
+            }
+        }
+    }
+
+    /// Next runnable job: highest priority first, then least recently
+    /// stepped (round-robin), then id (FIFO).
+    fn pick(&self) -> Option<u64> {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Queued | JobState::Running))
+            .min_by_key(|j| (std::cmp::Reverse(j.policy.priority), j.last_step, j.id))
+            .map(|j| j.id)
+    }
+
+    /// Run one phase of one job (starting it first if queued).
+    fn step_one(&mut self, id: u64) {
+        if self.jobs[&id].run.is_none() {
+            if let Err(e) = self.start(id) {
+                self.fail(id, &format!("{e:#}"));
+                return;
+            }
+        }
+        let phase = self.jobs[&id].run.as_ref().unwrap().phase();
+        self.step_counter += 1;
+        let clock = self.step_counter;
+        self.sched_log.push(format!("{id}:{}", phase.label()));
+        self.broadcast(
+            id,
+            proto::encode(
+                msg::EVENT,
+                id,
+                &Json::Obj(vec![("phase".into(), Json::Str(phase.label().into()))]),
+            ),
+        );
+        let res = {
+            let j = self.jobs.get_mut(&id).unwrap();
+            j.last_step = clock;
+            j.run.as_mut().unwrap().step()
+        };
+        match res {
+            Ok(_) => {
+                if self.jobs[&id].run.as_ref().unwrap().done() {
+                    self.finish(id);
+                }
+            }
+            Err(e) => self.fail(id, &format!("{e:#}")),
+        }
+    }
+
+    /// Open the job's journal + pipeline and attach it to the fleet.
+    fn start(&mut self, id: u64) -> Result<()> {
+        let (model, policy, subs) = {
+            let j = &self.jobs[&id];
+            (j.model.clone(), j.policy.clone(), j.subs.clone())
+        };
+        let stats = Rc::new(StoreStats::default());
+        let jpath = self.cfg.state_dir.join(format!("job_{id}.mpqj"));
+        let mut journal = RunJournal::open(&jpath, true, stats.clone())?;
+        if let Some(spec) = &self.cfg.fault_plan {
+            journal = journal.with_crash_barriers(FaultPlan::parse(spec)?.crash_barriers());
+        }
+        let journal = Rc::new(journal);
+        journal.set_notifier(move |n, kind| {
+            let bytes = proto::encode(
+                msg::EVENT,
+                id,
+                &Json::Obj(vec![
+                    ("barrier".into(), Json::Num(n as f64)),
+                    ("kind".into(), Json::Num(kind as f64)),
+                ]),
+            );
+            subs.borrow_mut().retain(|tx| tx.send(bytes.clone()).is_ok());
+        });
+        let mut pipe = Pipeline::open_with(self.rt.clone(), &self.manifest, &model)?;
+        pipe.set_journal(Some(journal.clone()));
+        pipe.attach_fleet(&self.fleet)?;
+        {
+            let j = self.jobs.get_mut(&id).unwrap();
+            j.stats = stats;
+            j.journal = Some(journal.clone());
+            j.run = Some(JobRun::new(model, pipe, Some(journal), policy));
+            j.state = JobState::Running;
+        }
+        self.persist(id)
+    }
+
+    fn finish(&mut self, id: u64) {
+        let result = {
+            let j = &self.jobs[&id];
+            match j.run.as_ref().expect("finish on a running job").result() {
+                Ok(r) => r,
+                Err(e) => return self.fail(id, &format!("{e:#}")),
+            }
+        };
+        let rpath = self.cfg.state_dir.join(format!("job_{id}.result.json"));
+        if let Err(e) = store::atomic_write(&rpath, result.to_string().as_bytes()) {
+            return self.fail(id, &format!("persisting result: {e:#}"));
+        }
+        let journal_path = {
+            let j = self.jobs.get_mut(&id).unwrap();
+            j.state = JobState::Done;
+            j.result = Some(result);
+            j.run = None; // detach the model (fleet may keep it warm)
+            let p = j.journal.as_ref().map(|r| r.path().to_path_buf());
+            j.journal = None;
+            p
+        };
+        if let Err(e) = self.persist(id) {
+            eprintln!("[mpqd] warning: persisting job {id} state: {e:#}");
+        }
+        // only after the `done` record is durable may the journal go
+        if let Some(p) = journal_path {
+            let _ = std::fs::remove_file(p);
+        }
+        if let Some(payload) = self.result_payload(id) {
+            self.broadcast(id, proto::encode(msg::RESULT, id, &payload));
+        }
+        self.jobs.get_mut(&id).unwrap().subs.borrow_mut().clear();
+    }
+
+    /// Fail a job.  Its journal file is deliberately kept: completed
+    /// barriers replay on a future resubmission.
+    fn fail(&mut self, id: u64, err: &str) {
+        {
+            let j = self.jobs.get_mut(&id).unwrap();
+            j.state = JobState::Failed;
+            j.error = Some(err.to_string());
+            j.run = None;
+            j.journal = None;
+        }
+        if let Err(e) = self.persist(id) {
+            eprintln!("[mpqd] warning: persisting job {id} state: {e:#}");
+        }
+        self.broadcast(
+            id,
+            proto::encode(
+                msg::ERR,
+                id,
+                &Json::Obj(vec![("error".into(), Json::Str(err.to_string()))]),
+            ),
+        );
+        self.jobs.get_mut(&id).unwrap().subs.borrow_mut().clear();
+    }
+
+    /// Shutdown path: running jobs go back to `queued` (fsynced record,
+    /// journal kept) so the next daemon start resumes them.
+    fn park_running(&mut self) {
+        let ids: Vec<u64> = self.jobs.keys().copied().collect();
+        for id in ids {
+            let parked = {
+                let j = self.jobs.get_mut(&id).unwrap();
+                if j.state == JobState::Running {
+                    j.state = JobState::Queued;
+                    j.run = None;
+                    j.journal = None;
+                    true
+                } else {
+                    false
+                }
+            };
+            if parked {
+                if let Err(e) = self.persist(id) {
+                    eprintln!("[mpqd] warning: parking job {id}: {e:#}");
+                }
+            }
+        }
+    }
+
+    fn broadcast(&self, id: u64, bytes: Vec<u8>) {
+        if let Some(j) = self.jobs.get(&id) {
+            j.subs.borrow_mut().retain(|tx| tx.send(bytes.clone()).is_ok());
+        }
+    }
+
+    fn result_payload(&self, id: u64) -> Option<Json> {
+        let j = self.jobs.get(&id)?;
+        let result = j.result.clone()?;
+        Some(Json::Obj(vec![
+            ("job".into(), Json::Num(id as f64)),
+            ("result".into(), result),
+            (
+                "durability".into(),
+                Json::Obj(vec![
+                    ("appended".into(), Json::Num(j.stats.journal_appended.get() as f64)),
+                    ("replayed".into(), Json::Num(j.stats.journal_replayed.get() as f64)),
+                    ("skips".into(), Json::Num(j.stats.journal_skips.get() as f64)),
+                ]),
+            ),
+        ]))
+    }
+
+    /// The `Status` reply: job table, schedule log, and one consolidated
+    /// telemetry snapshot (fleet counters + summed per-job durability).
+    fn status_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .jobs
+            .values()
+            .map(|j| {
+                let phase = match &j.run {
+                    Some(r) => r.phase().label(),
+                    None => j.state.label(),
+                };
+                Json::Obj(vec![
+                    ("id".into(), Json::Num(j.id as f64)),
+                    ("model".into(), Json::Str(j.model.clone())),
+                    ("state".into(), Json::Str(j.state.label().into())),
+                    ("phase".into(), Json::Str(phase.into())),
+                    ("priority".into(), Json::Num(j.policy.priority as f64)),
+                    (
+                        "journal".into(),
+                        Json::Obj(vec![
+                            ("appended".into(), Json::Num(j.stats.journal_appended.get() as f64)),
+                            ("replayed".into(), Json::Num(j.stats.journal_replayed.get() as f64)),
+                            ("skips".into(), Json::Num(j.stats.journal_skips.get() as f64)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let mut store_total = StoreCounters::default();
+        for j in self.jobs.values() {
+            let c = StoreCounters::from_stats(&j.stats);
+            store_total.journal_appended += c.journal_appended;
+            store_total.journal_replayed += c.journal_replayed;
+            store_total.journal_skips += c.journal_skips;
+            store_total.journal_truncations += c.journal_truncations;
+            store_total.cache_corrupt_misses += c.cache_corrupt_misses;
+            store_total.files_quarantined += c.files_quarantined;
+        }
+        let snap = Snapshot {
+            sens_cache: (0, 0),
+            ref_cache: (0, 0),
+            store: store_total,
+            fleet: Some(FleetTelemetry::collect(&self.fleet)),
+        };
+        Json::Obj(vec![
+            ("jobs".into(), Json::Arr(jobs)),
+            ("held".into(), Json::Bool(self.held)),
+            (
+                "warm_models".into(),
+                Json::Arr(self.fleet.warm_models().into_iter().map(Json::Str).collect()),
+            ),
+            (
+                "sched_log".into(),
+                Json::Arr(self.sched_log.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            ("telemetry".into(), snap.to_json()),
+        ])
+    }
+
+    /// Durably record one job's state (`job_<id>.json`, fsync + rename).
+    fn persist(&self, id: u64) -> Result<()> {
+        let j = &self.jobs[&id];
+        let obj = Json::Obj(vec![
+            ("id".into(), Json::Num(j.id as f64)),
+            ("model".into(), Json::Str(j.model.clone())),
+            ("state".into(), Json::Str(j.state.label().into())),
+            ("policy".into(), j.policy.to_json()),
+            (
+                "error".into(),
+                match &j.error {
+                    Some(e) => Json::Str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        store::atomic_write(
+            self.cfg.state_dir.join(format!("job_{id}.json")),
+            obj.to_string().as_bytes(),
+        )
+    }
+}
+
+/// Restore persisted job records.  `queued`/`running` records come back
+/// as `Queued` (auto-resume — their journals replay completed work);
+/// terminal records keep their state, and `done` jobs reload their
+/// result payload.
+fn load_jobs(state_dir: &Path) -> Result<(BTreeMap<u64, Job>, u64)> {
+    let mut jobs = BTreeMap::new();
+    let mut next_id = 1;
+    let Ok(rd) = std::fs::read_dir(state_dir) else {
+        return Ok((jobs, next_id));
+    };
+    let mut paths: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        let Some(stem) = name.strip_prefix("job_").and_then(|s| s.strip_suffix(".json")) else {
+            continue;
+        };
+        let Ok(id) = stem.parse::<u64>() else {
+            continue; // job_<id>.result.json and foreign files land here
+        };
+        let rec = jsonio::parse_file(&p).with_context(|| format!("job record {}", p.display()))?;
+        let model = rec.req("model")?.as_str()?.to_string();
+        let policy = JobPolicy::from_json(rec.get("policy"))?;
+        let state = match rec.req("state")?.as_str()? {
+            "queued" | "running" => JobState::Queued,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            other => bail!("job {id}: unknown persisted state '{other}'"),
+        };
+        let mut job = Job::new(id, model, policy);
+        job.state = state;
+        job.error = match rec.get("error") {
+            Some(v) if !v.is_null() => Some(v.as_str()?.to_string()),
+            _ => None,
+        };
+        if state == JobState::Done {
+            let rp = state_dir.join(format!("job_{id}.result.json"));
+            if let Ok(r) = jsonio::parse_file(&rp) {
+                job.result = Some(r);
+            }
+        }
+        next_id = next_id.max(id + 1);
+        jobs.insert(id, job);
+    }
+    Ok((jobs, next_id))
+}
+
+/// Per-connection handler: frames in, [`Ctl`] across, frames out.
+fn serve_conn(mut stream: UnixStream, ctl: Sender<Ctl>) {
+    let _ = conn_loop(&mut stream, ctl);
+}
+
+fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
+    proto::handshake(stream)?;
+    loop {
+        let Some((kind, job, payload)) = proto::recv(stream)? else {
+            return Ok(());
+        };
+        match kind {
+            msg::SUBMIT => {
+                let model = payload.req("model")?.as_str()?.to_string();
+                let policy = JobPolicy::from_json(payload.get("policy"))?;
+                let (rtx, rrx) = channel();
+                if ctl.send(Ctl::Submit { model, policy, reply: rtx }).is_err() {
+                    return Ok(());
+                }
+                match rrx.recv() {
+                    Ok(Ok(id)) => proto::send(
+                        stream,
+                        msg::ACK,
+                        id,
+                        &Json::Obj(vec![("job".into(), Json::Num(id as f64))]),
+                    )?,
+                    Ok(Err(e)) => proto::send_err(stream, 0, &e)?,
+                    Err(_) => return Ok(()),
+                }
+            }
+            msg::STATUS => {
+                let (rtx, rrx) = channel();
+                if ctl.send(Ctl::Status { reply: rtx }).is_err() {
+                    return Ok(());
+                }
+                match rrx.recv() {
+                    Ok(state) => proto::send(stream, msg::STATE, 0, &state)?,
+                    Err(_) => return Ok(()),
+                }
+            }
+            msg::CANCEL => {
+                let (rtx, rrx) = channel();
+                if ctl.send(Ctl::Cancel { job, reply: rtx }).is_err() {
+                    return Ok(());
+                }
+                match rrx.recv() {
+                    Ok(Ok(())) => proto::send(stream, msg::ACK, job, &Json::Null)?,
+                    Ok(Err(e)) => proto::send_err(stream, job, &e)?,
+                    Err(_) => return Ok(()),
+                }
+            }
+            msg::SUBSCRIBE => {
+                let (etx, erx) = channel::<Vec<u8>>();
+                let (rtx, rrx) = channel();
+                if ctl.send(Ctl::Subscribe { job, tx: etx, reply: rtx }).is_err() {
+                    return Ok(());
+                }
+                match rrx.recv() {
+                    Ok(Ok(())) => proto::send(stream, msg::ACK, job, &Json::Null)?,
+                    Ok(Err(e)) => {
+                        proto::send_err(stream, job, &e)?;
+                        continue;
+                    }
+                    Err(_) => return Ok(()),
+                }
+                // the connection is a one-way event stream from here on;
+                // it closes when the job reaches a terminal state (the
+                // scheduler drops our sender)
+                while let Ok(bytes) = erx.recv() {
+                    stream.write_all(&bytes).context("forwarding event")?;
+                    stream.flush().context("flushing event")?;
+                }
+                return Ok(());
+            }
+            msg::RELEASE => {
+                if ctl.send(Ctl::Release).is_err() {
+                    return Ok(());
+                }
+                proto::send(stream, msg::ACK, 0, &Json::Null)?;
+            }
+            msg::SHUTDOWN => {
+                let _ = ctl.send(Ctl::Shutdown);
+                proto::send(stream, msg::ACK, 0, &Json::Null)?;
+                return Ok(());
+            }
+            other => proto::send_err(stream, job, &format!("unknown message kind {other}"))?,
+        }
+    }
+}

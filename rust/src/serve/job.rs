@@ -1,0 +1,356 @@
+//! One quantization job: policy, phase state machine, and the final
+//! report payload.
+//!
+//! A job runs the paper's full pipeline — calibrate → Phase-1 SQNR
+//! sensitivity → Phase-2 pareto search → AdaRound — as a sequence of
+//! [`JobRun::step`] calls, one **phase** per call.  The daemon scheduler
+//! interleaves many jobs by round-robining steps across them; the serial
+//! reference path ([`run_local`]) drives the identical state machine to
+//! completion in one loop, so daemon results are byte-equal to the
+//! serial CLI path *by construction* (pooled evaluation is bit-identical
+//! to serial at any worker count, and the report encodes every float as
+//! its exact bit pattern).
+//!
+//! Durability: each phase journals its own barriers (probe scores,
+//! prefix evaluations, rounded tensors) through the pipeline's attached
+//! [`RunJournal`], so a killed daemon re-steps a resumed job through the
+//! same phases and every completed unit is served from the journal.
+
+use crate::adaround::AdaRoundCfg;
+use crate::coordinator::Pipeline;
+use crate::groups::Lattice;
+use crate::jsonio::Json;
+use crate::manifest::Manifest;
+use crate::runtime::Runtime;
+use crate::search::SearchRun;
+use crate::sensitivity::{RoundedWeights, SensEntry};
+use crate::store::{RunJournal, StoreStats};
+use crate::util::Fnv;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Per-job execution policy, carried in the `Submit` payload.
+#[derive(Clone, Debug)]
+pub struct JobPolicy {
+    /// calibration subset size
+    pub calib_n: usize,
+    /// calibration subset seed
+    pub seed: u64,
+    /// higher runs first; FIFO (by id) within a priority
+    pub priority: i64,
+    /// per-job eval budget: max journal barriers (probe scores + prefix
+    /// evals + rounded layers) this job may append before it is failed
+    pub eval_budget: Option<u64>,
+    /// run the AdaRound phase
+    pub adaround: bool,
+    pub adaround_steps: usize,
+}
+
+impl Default for JobPolicy {
+    fn default() -> Self {
+        Self {
+            calib_n: 64,
+            seed: 0,
+            priority: 0,
+            eval_budget: None,
+            adaround: true,
+            adaround_steps: 8,
+        }
+    }
+}
+
+impl JobPolicy {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("calib_n".into(), Json::Num(self.calib_n as f64)),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("priority".into(), Json::Num(self.priority as f64)),
+            (
+                "eval_budget".into(),
+                match self.eval_budget {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("adaround".into(), Json::Bool(self.adaround)),
+            ("adaround_steps".into(), Json::Num(self.adaround_steps as f64)),
+        ])
+    }
+
+    /// Decode a policy; absent keys (or an absent/null object) keep their
+    /// defaults, so clients only send what they override.
+    pub fn from_json(j: Option<&Json>) -> Result<Self> {
+        let mut p = Self::default();
+        let Some(j) = j else { return Ok(p) };
+        if j.is_null() {
+            return Ok(p);
+        }
+        if let Some(v) = j.get("calib_n") {
+            p.calib_n = v.as_usize()?;
+        }
+        if let Some(v) = j.get("seed") {
+            p.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.get("priority") {
+            p.priority = v.as_f64()? as i64;
+        }
+        if let Some(v) = j.get("eval_budget") {
+            p.eval_budget = if v.is_null() { None } else { Some(v.as_f64()? as u64) };
+        }
+        if let Some(v) = j.get("adaround") {
+            p.adaround = matches!(v, Json::Bool(true));
+        }
+        if let Some(v) = j.get("adaround_steps") {
+            p.adaround_steps = v.as_usize()?;
+        }
+        Ok(p)
+    }
+}
+
+/// Pipeline phases, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Calibrate,
+    Sensitivity,
+    Search,
+    AdaRound,
+    Done,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Calibrate => "calibrate",
+            Phase::Sensitivity => "sensitivity",
+            Phase::Search => "search",
+            Phase::AdaRound => "adaround",
+            Phase::Done => "done",
+        }
+    }
+}
+
+/// The resumable per-job state machine.  Holds the job's [`Pipeline`]
+/// (and through it the per-model `EvalPool` attachment — dropping a
+/// `JobRun` detaches the model from the fleet) plus every intermediate
+/// the later phases need.
+pub struct JobRun {
+    model: String,
+    pipe: Pipeline,
+    journal: Option<Rc<RunJournal>>,
+    policy: JobPolicy,
+    lattice: Lattice,
+    phase: Phase,
+    sens: Option<Vec<SensEntry>>,
+    curve: Option<SearchRun>,
+    rounded: Option<RoundedWeights>,
+}
+
+impl JobRun {
+    pub fn new(
+        model: String,
+        pipe: Pipeline,
+        journal: Option<Rc<RunJournal>>,
+        policy: JobPolicy,
+    ) -> Self {
+        Self {
+            model,
+            pipe,
+            journal,
+            policy,
+            lattice: Lattice::practical(),
+            phase: Phase::Calibrate,
+            sens: None,
+            curve: None,
+            rounded: None,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    /// Run the current phase to its end and advance.  Returns the phase
+    /// that was executed.  The per-job eval budget is enforced at the
+    /// phase boundary: a job that appended more journal barriers than its
+    /// budget fails here (completed barriers stay durable, so a resubmit
+    /// with a bigger budget resumes instead of restarting).
+    pub fn step(&mut self) -> Result<Phase> {
+        let cur = self.phase;
+        match cur {
+            Phase::Calibrate => {
+                self.pipe.calibrate(self.policy.calib_n, self.policy.seed)?;
+                self.phase = Phase::Sensitivity;
+            }
+            Phase::Sensitivity => {
+                self.sens = Some(self.pipe.sensitivity_sqnr(&self.lattice)?);
+                self.phase = Phase::Search;
+            }
+            Phase::Search => {
+                let sens = self.sens.as_ref().expect("sensitivity ran");
+                let flips = self.pipe.flips(&self.lattice, sens);
+                self.curve = Some(self.pipe.pareto_curve(&self.lattice, &flips, None)?);
+                self.phase = if self.policy.adaround { Phase::AdaRound } else { Phase::Done };
+            }
+            Phase::AdaRound => {
+                let cfg = AdaRoundCfg {
+                    steps: self.policy.adaround_steps,
+                    ..Default::default()
+                };
+                self.rounded = Some(self.pipe.adaround(&self.lattice, &cfg)?);
+                self.phase = Phase::Done;
+            }
+            Phase::Done => {}
+        }
+        if let (Some(j), Some(budget)) = (&self.journal, self.policy.eval_budget) {
+            if j.barriers() > budget {
+                bail!(
+                    "eval budget exceeded: {} journal barriers > budget {budget}",
+                    j.barriers()
+                );
+            }
+        }
+        Ok(cur)
+    }
+
+    /// The final report payload.  Floats are encoded as 16-hex-digit bit
+    /// patterns (JSON numbers do not round-trip `f64` bits), so two runs
+    /// produced equal payloads iff their results are **bit-identical**.
+    pub fn result(&self) -> Result<Json> {
+        if self.phase != Phase::Done {
+            bail!("job still in phase {}", self.phase.label());
+        }
+        let sens = self.sens.as_ref().expect("done implies sensitivity");
+        let curve = self.curve.as_ref().expect("done implies search");
+        Ok(Json::Obj(vec![
+            ("model".into(), Json::Str(self.model.clone())),
+            (
+                "sens".into(),
+                Json::Arr(
+                    sens.iter()
+                        .map(|e| {
+                            Json::Arr(vec![
+                                Json::Num(e.group as f64),
+                                Json::Num(e.cand.wbits as f64),
+                                Json::Num(e.cand.abits as f64),
+                                Json::Str(hex64(e.score.to_bits())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "curve".into(),
+                Json::Arr(
+                    curve
+                        .curve
+                        .iter()
+                        .map(|&(b, m)| {
+                            Json::Arr(vec![
+                                Json::Str(hex64(b.to_bits())),
+                                Json::Str(hex64(m.to_bits())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "adaround".into(),
+                match &self.rounded {
+                    Some(r) => Json::Str(hex64(rounded_digest(r))),
+                    None => Json::Null,
+                },
+            ),
+        ]))
+    }
+}
+
+fn hex64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Content digest of the AdaRounded tensors: sorted `(param_idx, wbits)`
+/// keys, each folded with its full tensor content — deterministic
+/// regardless of `HashMap` iteration order.
+fn rounded_digest(r: &RoundedWeights) -> u64 {
+    let mut keys: Vec<_> = r.keys().copied().collect();
+    keys.sort_unstable();
+    let mut h = Fnv::new();
+    for (p, b) in keys {
+        h.write_usize(p);
+        h.write_u8(b);
+        h.write_tensor(&r[&(p, b)]);
+    }
+    h.finish()
+}
+
+/// The serial single-process reference path: the exact state machine the
+/// daemon steps, run to completion in one loop.  `workers == 0` stays
+/// serial; `workers > 1` uses a private pool (bit-identical either way).
+/// `journal_path` arms crash/resume; `None` runs unjournaled.
+pub fn run_local(
+    dir: &Path,
+    model: &str,
+    policy: &JobPolicy,
+    workers: usize,
+    journal_path: Option<&Path>,
+) -> Result<Json> {
+    let manifest = Manifest::load(dir)?;
+    let rt = Rc::new(Runtime::for_manifest(&manifest)?);
+    let mut pipe = Pipeline::open_with(rt, &manifest, model)?;
+    let journal = match journal_path {
+        Some(p) => Some(Rc::new(RunJournal::open(p, true, Rc::new(StoreStats::default()))?)),
+        None => None,
+    };
+    pipe.set_journal(journal.clone());
+    if workers > 1 {
+        pipe.enable_pool(workers)?;
+    }
+    let mut run = JobRun::new(model.to_string(), pipe, journal, policy.clone());
+    while !run.done() {
+        run.step()?;
+    }
+    run.result()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_roundtrips_and_defaults_apply() {
+        let p = JobPolicy {
+            calib_n: 32,
+            seed: 9,
+            priority: -2,
+            eval_budget: Some(500),
+            adaround: false,
+            adaround_steps: 4,
+        };
+        let back = JobPolicy::from_json(Some(&p.to_json())).unwrap();
+        assert_eq!(back.calib_n, 32);
+        assert_eq!(back.seed, 9);
+        assert_eq!(back.priority, -2);
+        assert_eq!(back.eval_budget, Some(500));
+        assert!(!back.adaround);
+        assert_eq!(back.adaround_steps, 4);
+
+        let d = JobPolicy::from_json(None).unwrap();
+        assert_eq!(d.calib_n, JobPolicy::default().calib_n);
+        let partial = crate::jsonio::parse(r#"{"calib_n": 16}"#).unwrap();
+        let d = JobPolicy::from_json(Some(&partial)).unwrap();
+        assert_eq!(d.calib_n, 16);
+        assert_eq!(d.adaround_steps, JobPolicy::default().adaround_steps);
+        assert_eq!(d.eval_budget, None);
+    }
+
+    #[test]
+    fn phases_run_in_order() {
+        assert_eq!(Phase::Calibrate.label(), "calibrate");
+        assert_eq!(Phase::Done.label(), "done");
+    }
+}

@@ -1,0 +1,76 @@
+//! `mpqd` — quantization as a service.
+//!
+//! A long-running daemon that owns one process-wide evaluation fleet
+//! ([`crate::pool::EvalFleet`]) and multiplexes many quantization jobs
+//! onto it: each job runs the paper's full pipeline (calibrate → Phase-1
+//! SQNR sensitivity → Phase-2 pareto search → AdaRound) and jobs whose
+//! model is already resident on the fleet start at zero recompiles.
+//!
+//! ```text
+//! mpq serve  --socket PATH [--artifacts DIR] [--state-dir DIR]
+//!            [--workers N] [--max-idle N] [--max-jobs N] [--hold]
+//! mpq client submit  --socket PATH --model M [--calib N] [--priority P]
+//! mpq client status|watch|cancel|release|shutdown --socket PATH [--job J]
+//! ```
+//!
+//! # Wire protocol
+//!
+//! Everything on the socket is an MPQJ checksummed frame (the same
+//! `u32 len · u16 kind · u16 reserved · u64 digest · u64 checksum ·
+//! payload` layout the run journal uses on disk — [`crate::store`]),
+//! preceded by a mutual 8-byte MPQJ container-header handshake.  The
+//! frame's `kind` is the message kind, the `digest` field carries the
+//! job id, and payloads are small JSON objects capped at
+//! [`proto::MAX_FRAME`]:
+//!
+//! | kind        | dir | payload                                        |
+//! |-------------|-----|------------------------------------------------|
+//! | `SUBMIT`    | c→d | `{model, policy?}`                             |
+//! | `STATUS`    | c→d | —                                              |
+//! | `CANCEL`    | c→d | — (job in digest)                              |
+//! | `SUBSCRIBE` | c→d | — (job in digest; connection becomes a stream) |
+//! | `RELEASE`   | c→d | — (start jobs staged under `--hold`)           |
+//! | `SHUTDOWN`  | c→d | —                                              |
+//! | `ACK`/`ERR` | d→c | `{job}` / `{error}`                            |
+//! | `EVENT`     | d→c | `{phase}` or `{barrier, kind}` or `{cancelled}`|
+//! | `RESULT`    | d→c | `{job, result, durability}`                    |
+//! | `STATE`     | d→c | `{jobs, held, warm_models, sched_log, telemetry}` |
+//!
+//! This is a **control plane**: tensors, datasets and executables never
+//! ride the socket — jobs name a model from the daemon's artifacts
+//! manifest and all bulk data moves through the filesystem and the
+//! fleet's own channels.
+//!
+//! # Admission and scheduling
+//!
+//! `Submit` is refused once `max_jobs` jobs are resident (queued +
+//! running) — clients see a bounded, immediate `ERR` instead of an
+//! unbounded queue.  Runnable jobs are ordered by `(priority desc,
+//! least-recently-stepped, id)`: strict priority first, FIFO among
+//! equals, and because the scheduler runs one *phase* per pick, equal
+//! jobs round-robin phase-by-phase across the shared fleet.  A job whose
+//! model another job just left warm ([`EvalFleet::set_max_idle`],
+//! `--max-idle`) reattaches with zero recompiles.
+//!
+//! # Crash / restart semantics
+//!
+//! Every state transition is fsynced to `state_dir/job_<id>.json`
+//! (atomic temp + rename) *before* it is acted on, and each running job
+//! appends its evaluation barriers to a per-job journal
+//! `state_dir/job_<id>.mpqj`.  A killed daemon restarts, reloads the
+//! records, re-queues anything `queued`/`running`, and the journal
+//! replays completed probes/prefix-evals/AdaRound layers bit-exactly —
+//! zero completed units re-execute.  Job results are durable
+//! (`job_<id>.result.json` before the `done` record; the journal is
+//! removed only after), `Cancel` removes the journal and record
+//! atomically, and a clean `Shutdown` parks running jobs back to
+//! `queued` so nothing is stranded.
+
+pub mod client;
+pub mod daemon;
+pub mod job;
+pub mod proto;
+
+pub use client::Client;
+pub use daemon::{run, ServeCfg};
+pub use job::{run_local, JobPolicy, JobRun, Phase};

@@ -1,0 +1,164 @@
+//! The `mpqd` wire protocol: MPQJ checksummed frames over a Unix domain
+//! socket.
+//!
+//! Every message is one [`crate::store`] frame — `u32 len · u16 kind ·
+//! u16 reserved · u64 digest · u64 checksum · payload` — written with
+//! [`crate::store::write_frame`] and read with
+//! [`crate::store::read_frame`].  The `kind` field carries the message
+//! kind ([`msg`]), the `digest` field carries the **job id** for
+//! job-scoped messages (0 otherwise), and the payload is a small JSON
+//! object ([`crate::jsonio`]).  Payloads are bounded by [`MAX_FRAME`]:
+//! this is a control plane — tensors and datasets never ride it; jobs
+//! reference artifact paths and the daemon reads them from disk.
+//!
+//! Connections open with a mutual 8-byte MPQJ container-header handshake
+//! ([`handshake`]), so either side rejects a non-mpqd peer before
+//! parsing anything.
+
+use crate::jsonio::{self, Json};
+use crate::store;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Control-plane payload cap (1 MiB).  Control messages are small and
+/// bounded; anything bigger is corruption or abuse.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Message kinds.  Requests are 16..32, replies/events 32..48 — disjoint
+/// from the journal's record kinds (1..=4) so a frame can never be
+/// mistaken for the wrong plane.
+pub mod msg {
+    /// client → daemon: `{model, policy?}`; digest 0
+    pub const SUBMIT: u16 = 16;
+    /// client → daemon: empty payload; digest 0
+    pub const STATUS: u16 = 17;
+    /// client → daemon: empty payload; digest = job id
+    pub const CANCEL: u16 = 18;
+    /// client → daemon: empty payload; digest = job id — converts the
+    /// connection into a one-way event stream for that job
+    pub const SUBSCRIBE: u16 = 19;
+    /// client → daemon: start held jobs (`--hold` admission staging)
+    pub const RELEASE: u16 = 20;
+    /// client → daemon: drain, persist and exit
+    pub const SHUTDOWN: u16 = 21;
+
+    /// daemon → client: request accepted (`{job}` for submits)
+    pub const ACK: u16 = 32;
+    /// daemon → client: request rejected / job failed (`{error}`)
+    pub const ERR: u16 = 33;
+    /// daemon → client: streamed progress (`{phase}` at phase barriers,
+    /// `{barrier, kind}` at journal append points); digest = job id
+    pub const EVENT: u16 = 34;
+    /// daemon → client: final report `{job, result, durability}`
+    pub const RESULT: u16 = 35;
+    /// daemon → client: the `Status` reply (jobs + telemetry snapshot)
+    pub const STATE: u16 = 36;
+}
+
+/// Mutual protocol handshake: write our MPQJ container header, read and
+/// validate the peer's.  Both sides write first (8 bytes fit any socket
+/// buffer, so this cannot deadlock).
+pub fn handshake(stream: &mut (impl Read + Write)) -> Result<()> {
+    stream
+        .write_all(&store::file_header())
+        .context("writing protocol handshake")?;
+    stream.flush().context("flushing protocol handshake")?;
+    let mut hdr = [0u8; 8];
+    stream
+        .read_exact(&mut hdr)
+        .context("reading protocol handshake")?;
+    if !store::header_ok(&hdr) {
+        bail!("peer is not an mpqd endpoint (bad MPQJ handshake)");
+    }
+    Ok(())
+}
+
+/// Send one message: JSON payload under `kind` with `job` in the digest
+/// field (0 for daemon-scoped messages).
+pub fn send(w: &mut impl Write, kind: u16, job: u64, payload: &Json) -> Result<()> {
+    store::write_frame(w, kind, job, payload.to_string().as_bytes())
+}
+
+/// Encode one message to bytes (the daemon fans these out to
+/// subscribers through plain byte channels).
+pub fn encode(kind: u16, job: u64, payload: &Json) -> Vec<u8> {
+    store::encode_record(kind, job, payload.to_string().as_bytes())
+}
+
+/// An `ERR` reply.
+pub fn send_err(w: &mut impl Write, job: u64, error: &str) -> Result<()> {
+    send(
+        w,
+        msg::ERR,
+        job,
+        &Json::Obj(vec![("error".into(), Json::Str(error.into()))]),
+    )
+}
+
+/// One decoded message: `(kind, job, payload)`.
+pub type Msg = (u16, u64, Json);
+
+/// Read one message; `Ok(None)` on clean EOF.  An empty payload decodes
+/// as `Json::Null`.
+pub fn recv(r: &mut impl Read) -> Result<Option<Msg>> {
+    let Some(frame) = store::read_frame(r, MAX_FRAME)? else {
+        return Ok(None);
+    };
+    let payload = if frame.payload.is_empty() {
+        Json::Null
+    } else {
+        let text = std::str::from_utf8(&frame.payload).context("frame payload is not UTF-8")?;
+        jsonio::parse(text).context("frame payload is not JSON")?
+    };
+    Ok(Some((frame.kind, frame.digest, payload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_roundtrip_over_a_byte_stream() {
+        let mut buf = Vec::new();
+        let payload = Json::Obj(vec![("model".into(), Json::Str("m".into()))]);
+        send(&mut buf, msg::SUBMIT, 0, &payload).unwrap();
+        buf.extend_from_slice(&encode(msg::EVENT, 3, &Json::Null));
+        send_err(&mut buf, 9, "nope").unwrap();
+        let mut r: &[u8] = &buf;
+        let (k, j, p) = recv(&mut r).unwrap().unwrap();
+        assert_eq!((k, j), (msg::SUBMIT, 0));
+        assert_eq!(p.req("model").unwrap().as_str().unwrap(), "m");
+        let (k, j, p) = recv(&mut r).unwrap().unwrap();
+        assert_eq!((k, j), (msg::EVENT, 3));
+        assert!(p.is_null());
+        let (k, j, p) = recv(&mut r).unwrap().unwrap();
+        assert_eq!((k, j), (msg::ERR, 9));
+        assert_eq!(p.req("error").unwrap().as_str().unwrap(), "nope");
+        assert!(recv(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn handshake_rejects_a_non_mpqd_peer() {
+        // a duplex fake: read side serves garbage, write side discards
+        struct Fake {
+            input: std::io::Cursor<Vec<u8>>,
+        }
+        impl Read for Fake {
+            fn read(&mut self, b: &mut [u8]) -> std::io::Result<usize> {
+                self.input.read(b)
+            }
+        }
+        impl Write for Fake {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut good = Fake { input: std::io::Cursor::new(store::file_header().to_vec()) };
+        assert!(handshake(&mut good).is_ok());
+        let mut bad = Fake { input: std::io::Cursor::new(b"HTTP/1.1".to_vec()) };
+        assert!(handshake(&mut bad).is_err());
+    }
+}

@@ -312,6 +312,57 @@ pub fn header_ok(bytes: &[u8]) -> bool {
 }
 
 // ---------------------------------------------------------------------------
+// Streamed frames (the daemon wire protocol's unit)
+// ---------------------------------------------------------------------------
+
+/// Write one frame to a byte stream and flush it.  Same frame layout as
+/// [`encode_record`]; `mpqd` uses this over a Unix socket with the frame's
+/// `digest` field carrying the job id.
+pub fn write_frame(w: &mut impl Write, kind: u16, digest: u64, payload: &[u8]) -> Result<()> {
+    w.write_all(&encode_record(kind, digest, payload))
+        .context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame from a byte stream.  `Ok(None)` on a clean EOF at a
+/// frame boundary; errors on a mid-frame EOF, a payload longer than
+/// `max_len` (bounded control-plane messages — a huge length is either
+/// corruption or abuse) or a checksum mismatch.  Blocks until a full
+/// frame arrives, so it is only suitable for sequenced request/reply or
+/// subscription streams, which is all the daemon protocol contains.
+pub fn read_frame(r: &mut impl std::io::Read, max_len: usize) -> Result<Option<Record>> {
+    let mut hdr = [0u8; FRAME_HEADER];
+    let mut got = 0;
+    while got < hdr.len() {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!("stream ended mid frame header ({got}/{FRAME_HEADER} bytes)");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    if len > max_len {
+        bail!("frame payload {len} bytes exceeds the {max_len}-byte control-plane cap");
+    }
+    let kind = u16::from_le_bytes(hdr[4..6].try_into().unwrap());
+    let digest = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    let checksum = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    if frame_checksum(kind, digest, &payload) != checksum {
+        bail!("frame checksum mismatch (kind {kind}, {len}-byte payload)");
+    }
+    Ok(Some(Record { kind, digest, payload }))
+}
+
+// ---------------------------------------------------------------------------
 // Single-payload blobs (the reference cache's container)
 // ---------------------------------------------------------------------------
 
@@ -433,6 +484,10 @@ pub struct RunJournal {
     barriers: Cell<u64>,
     crash_at: Vec<u64>,
     stats: Rc<StoreStats>,
+    /// Barrier observer `(ordinal, kind)` — the daemon turns journal
+    /// append points into streamed progress events.  Called after the
+    /// record is durable and before any injected crash fires.
+    notify: RefCell<Option<Box<dyn Fn(u64, u16)>>>,
 }
 
 impl RunJournal {
@@ -503,6 +558,7 @@ impl RunJournal {
             barriers: Cell::new(0),
             crash_at: Vec::new(),
             stats,
+            notify: RefCell::new(None),
         })
     }
 
@@ -511,6 +567,13 @@ impl RunJournal {
     pub fn with_crash_barriers(mut self, ordinals: Vec<u64>) -> Self {
         self.crash_at = ordinals;
         self
+    }
+
+    /// Install a barrier observer, called with `(ordinal, kind)` after
+    /// each record becomes durable (and before any injected crash fires,
+    /// so a subscriber sees the progress event the journal will replay).
+    pub fn set_notifier(&self, f: impl Fn(u64, u16) + 'static) {
+        *self.notify.borrow_mut() = Some(Box::new(f));
     }
 
     pub fn path(&self) -> &Path {
@@ -570,6 +633,9 @@ impl RunJournal {
         self.stats.journal_appended.set(self.stats.journal_appended.get() + 1);
         let n = self.barriers.get() + 1;
         self.barriers.set(n);
+        if let Some(f) = self.notify.borrow().as_ref() {
+            f(n, kind);
+        }
         if self.crash_at.contains(&n) {
             panic!("injected fault: crash@PHASE:{n}");
         }
@@ -670,6 +736,47 @@ mod tests {
         let (recs3, end3) = decode_records(&bytes[..cut]);
         assert_eq!(recs3.len(), 1);
         assert_eq!(end3, FILE_HEADER + FRAME_HEADER + payload.len());
+    }
+
+    #[test]
+    fn stream_frames_roundtrip_eof_and_caps() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind::PROBE, 42, b"first").unwrap();
+        write_frame(&mut buf, kind::BLOB, 7, b"").unwrap();
+        let mut r: &[u8] = &buf;
+        let a = read_frame(&mut r, 1024).unwrap().unwrap();
+        assert_eq!((a.kind, a.digest, a.payload.as_slice()), (kind::PROBE, 42, &b"first"[..]));
+        let b = read_frame(&mut r, 1024).unwrap().unwrap();
+        assert_eq!((b.kind, b.digest, b.payload.as_slice()), (kind::BLOB, 7, &b""[..]));
+        assert!(read_frame(&mut r, 1024).unwrap().is_none(), "clean EOF is None");
+
+        // payload over the cap is rejected before any allocation
+        let mut r2: &[u8] = &buf;
+        assert!(read_frame(&mut r2, 4).is_err());
+        // EOF mid-header and mid-payload are errors, not None
+        let mut torn: &[u8] = &buf[..10];
+        assert!(read_frame(&mut torn, 1024).is_err());
+        let mut torn2: &[u8] = &buf[..FRAME_HEADER + 2];
+        assert!(read_frame(&mut torn2, 1024).is_err());
+        // a flipped payload bit fails the checksum
+        let mut bad = buf.clone();
+        bad[FRAME_HEADER + 1] ^= 0x10;
+        let mut r3: &[u8] = &bad;
+        assert!(read_frame(&mut r3, 1024).is_err());
+    }
+
+    #[test]
+    fn journal_notifier_sees_every_barrier_in_order() {
+        let d = tdir("notify");
+        let p = d.join("journal.mpqj");
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        let j = RunJournal::open(&p, false, Rc::new(StoreStats::default())).unwrap();
+        let sink = seen.clone();
+        j.set_notifier(move |n, k| sink.borrow_mut().push((n, k)));
+        j.record_f64(kind::PROBE, 1, 0.5).unwrap();
+        j.record(kind::ADAROUND, 2, b"t").unwrap();
+        j.record_f64(kind::PROBE, 1, 0.5).unwrap(); // duplicate: no event
+        assert_eq!(*seen.borrow(), vec![(1, kind::PROBE), (2, kind::ADAROUND)]);
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! One consolidated view of the crate's runtime counters.
+//!
+//! Before this module every subsystem reported its own numbers through
+//! its own door: the fleet's `model_opens`/`probes_computed`/`memo_hits`
+//! and per-worker [`WorkerStats`], the supervisor's [`FailureStats`], the
+//! pipeline's sens/ref cache hit/miss cells, and the durable store's
+//! [`StoreStats`].  The drivers stitched a human one-liner together ad
+//! hoc and nothing machine-readable existed at all.
+//!
+//! [`Snapshot`] is the single collection point:
+//!
+//! * [`Snapshot::from_pipeline`] gathers every counter a pipeline can see
+//!   (drivers call it once per model),
+//!   [`Snapshot::from_parts`] builds one from a fleet + store pair (the
+//!   daemon's `Status` reply, where no single pipeline is in scope).
+//! * [`Snapshot::note`] renders the exact compact one-liner the drivers
+//!   have always printed (conditional sections appear only when their
+//!   subsystem actually did something).
+//! * [`Snapshot::to_json`] is the machine-readable form: one JSON object,
+//!   stable keys, served verbatim by `mpqd`'s `Status` reply and written
+//!   next to the driver reports.
+//!
+//! Collection is cheap (atomic loads and `Cell` reads); only
+//! [`FleetTelemetry::collect_full`] talks to the workers (a tracked
+//! `Stats` broadcast), so use it only between phases — the plain
+//! [`collect`](FleetTelemetry::collect) never touches the fleet's job
+//! channels.
+
+use crate::coordinator::Pipeline;
+use crate::jsonio::Json;
+use crate::pool::{EvalFleet, FailureStats, WorkerStats};
+use crate::store::StoreStats;
+
+/// Fleet-side counters: compile/memo accounting, failure telemetry and
+/// (optionally) the per-worker compile caches.
+#[derive(Clone, Debug)]
+pub struct FleetTelemetry {
+    pub workers: usize,
+    /// model handles opened (= lazy compiles) across all workers, ever
+    pub model_opens: usize,
+    /// probes dispatched to workers (memo misses)
+    pub probes_computed: usize,
+    pub memo_hits: usize,
+    pub failures: FailureStats,
+    /// per-worker compile-cache counters; empty unless collected via
+    /// [`collect_full`](FleetTelemetry::collect_full)
+    pub worker_stats: Vec<WorkerStats>,
+}
+
+impl FleetTelemetry {
+    /// Cheap collection: counter loads only, no worker traffic.
+    pub fn collect(fleet: &EvalFleet) -> Self {
+        Self {
+            workers: fleet.workers(),
+            model_opens: fleet.model_opens(),
+            probes_computed: fleet.probes_computed(),
+            memo_hits: fleet.memo_hits(),
+            failures: fleet.failure_stats(),
+            worker_stats: Vec::new(),
+        }
+    }
+
+    /// Also query each worker's compile cache (a tracked broadcast — only
+    /// call between phases).  Worker-stat failures degrade to an empty
+    /// list rather than failing the snapshot.
+    pub fn collect_full(fleet: &EvalFleet) -> Self {
+        let mut t = Self::collect(fleet);
+        t.worker_stats = fleet.worker_stats().unwrap_or_default();
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("workers".into(), num(self.workers as u64)),
+            ("model_opens".into(), num(self.model_opens as u64)),
+            ("probes_computed".into(), num(self.probes_computed as u64)),
+            ("memo_hits".into(), num(self.memo_hits as u64)),
+            (
+                "failures".into(),
+                Json::Obj(vec![
+                    ("worker_restarts".into(), num(self.failures.worker_restarts as u64)),
+                    ("jobs_requeued".into(), num(self.failures.jobs_requeued as u64)),
+                    ("faults_injected".into(), num(self.failures.faults_injected as u64)),
+                    (
+                        "degraded_events".into(),
+                        Json::Arr(
+                            self.failures
+                                .degraded_events
+                                .iter()
+                                .map(|s| Json::Str(s.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "last_deaths".into(),
+                        Json::Arr(
+                            self.failures
+                                .last_deaths
+                                .iter()
+                                .map(|s| Json::Str(s.clone()))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "worker_stats".into(),
+                Json::Arr(
+                    self.worker_stats
+                        .iter()
+                        .map(|w| {
+                            Json::Obj(vec![
+                                ("compiled".into(), num(w.compiled as u64)),
+                                ("models_open".into(), num(w.models_open as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Plain-value copy of [`StoreStats`] (which is `Cell`-based and
+/// deliberately not `Clone`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreCounters {
+    pub journal_appended: u64,
+    pub journal_replayed: u64,
+    pub journal_skips: u64,
+    pub journal_truncations: u64,
+    pub cache_corrupt_misses: u64,
+    pub files_quarantined: u64,
+}
+
+impl StoreCounters {
+    pub fn from_stats(ss: &StoreStats) -> Self {
+        Self {
+            journal_appended: ss.journal_appended.get(),
+            journal_replayed: ss.journal_replayed.get(),
+            journal_skips: ss.journal_skips.get(),
+            journal_truncations: ss.journal_truncations.get(),
+            cache_corrupt_misses: ss.cache_corrupt_misses.get(),
+            files_quarantined: ss.files_quarantined.get(),
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        self.journal_appended != 0
+            || self.journal_replayed != 0
+            || self.journal_skips != 0
+            || self.any_degraded()
+    }
+
+    pub fn any_degraded(&self) -> bool {
+        self.journal_truncations != 0
+            || self.cache_corrupt_misses != 0
+            || self.files_quarantined != 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("journal_appended".into(), num(self.journal_appended)),
+            ("journal_replayed".into(), num(self.journal_replayed)),
+            ("journal_skips".into(), num(self.journal_skips)),
+            ("journal_truncations".into(), num(self.journal_truncations)),
+            ("cache_corrupt_misses".into(), num(self.cache_corrupt_misses)),
+            ("files_quarantined".into(), num(self.files_quarantined)),
+        ])
+    }
+}
+
+/// The consolidated counter snapshot.  See the module docs.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// on-disk Phase-1 sensitivity cache `(hits, misses)`
+    pub sens_cache: (u64, u64),
+    /// on-disk FP32-reference cache `(hits, misses)`
+    pub ref_cache: (u64, u64),
+    pub store: StoreCounters,
+    /// present when an evaluation fleet is in play
+    pub fleet: Option<FleetTelemetry>,
+}
+
+impl Snapshot {
+    /// Everything one pipeline can see: its cache cells, its store stats
+    /// and (when pooled) the attached fleet's counters.
+    pub fn from_pipeline(pipe: &Pipeline) -> Self {
+        Self {
+            sens_cache: pipe.sens_cache_stats(),
+            ref_cache: pipe.ref_cache_stats(),
+            store: StoreCounters::from_stats(pipe.store_stats()),
+            fleet: pipe.pool.as_ref().map(|p| FleetTelemetry::collect(p.fleet())),
+        }
+    }
+
+    /// Snapshot from a fleet + store pair with no pipeline in scope (the
+    /// daemon's `Status` reply; cache cells live per-pipeline so they
+    /// read zero here).
+    pub fn from_parts(fleet: Option<&EvalFleet>, store: &StoreStats) -> Self {
+        Self {
+            sens_cache: (0, 0),
+            ref_cache: (0, 0),
+            store: StoreCounters::from_stats(store),
+            fleet: fleet.map(FleetTelemetry::collect),
+        }
+    }
+
+    /// The drivers' compact one-line accounting.  Failure and durability
+    /// sections appear only when those subsystems actually did something,
+    /// so fault-free runs keep the familiar short form.
+    pub fn note(&self) -> String {
+        let (h, m) = self.sens_cache;
+        let (rh, rm) = self.ref_cache;
+        let w = self.fleet.as_ref().map(|f| f.workers).unwrap_or(0);
+        let mut note = format!("sens-cache {h}h/{m}m, ref-cache {rh}h/{rm}m, fleet w={w}");
+        if let Some(f) = &self.fleet {
+            if f.failures.any() {
+                note.push_str(&format!(
+                    ", faults {} (restarts {}, requeued {}, degraded {})",
+                    f.failures.faults_injected,
+                    f.failures.worker_restarts,
+                    f.failures.jobs_requeued,
+                    f.failures.degraded_events.len()
+                ));
+            }
+        }
+        if self.store.any() {
+            note.push_str(&format!(
+                ", journal {}a/{}r/{}s",
+                self.store.journal_appended,
+                self.store.journal_replayed,
+                self.store.journal_skips
+            ));
+            if self.store.any_degraded() {
+                note.push_str(&format!(
+                    " (truncated {}, corrupt-miss {}, quarantined {})",
+                    self.store.journal_truncations,
+                    self.store.cache_corrupt_misses,
+                    self.store.files_quarantined
+                ));
+            }
+        }
+        note
+    }
+
+    /// The machine-readable form: one JSON object with stable keys.
+    pub fn to_json(&self) -> Json {
+        let mut obj = vec![
+            (
+                "sens_cache".into(),
+                Json::Obj(vec![
+                    ("hits".into(), num(self.sens_cache.0)),
+                    ("misses".into(), num(self.sens_cache.1)),
+                ]),
+            ),
+            (
+                "ref_cache".into(),
+                Json::Obj(vec![
+                    ("hits".into(), num(self.ref_cache.0)),
+                    ("misses".into(), num(self.ref_cache.1)),
+                ]),
+            ),
+            ("store".into(), self.store.to_json()),
+        ];
+        obj.push((
+            "fleet".into(),
+            match &self.fleet {
+                Some(f) => f.to_json(),
+                None => Json::Null,
+            },
+        ));
+        Json::Obj(obj)
+    }
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            sens_cache: (3, 1),
+            ref_cache: (2, 0),
+            store: StoreCounters {
+                journal_appended: 5,
+                journal_replayed: 2,
+                journal_skips: 2,
+                ..Default::default()
+            },
+            fleet: Some(FleetTelemetry {
+                workers: 4,
+                model_opens: 2,
+                probes_computed: 10,
+                memo_hits: 6,
+                failures: FailureStats::default(),
+                worker_stats: vec![WorkerStats { compiled: 1, models_open: 1 }],
+            }),
+        }
+    }
+
+    #[test]
+    fn note_matches_the_historical_driver_format() {
+        let mut s = sample();
+        assert_eq!(
+            s.note(),
+            "sens-cache 3h/1m, ref-cache 2h/0m, fleet w=4, journal 5a/2r/2s"
+        );
+        s.store = StoreCounters::default();
+        s.fleet = None;
+        assert_eq!(s.note(), "sens-cache 3h/1m, ref-cache 2h/0m, fleet w=0");
+        s.store.files_quarantined = 1;
+        assert_eq!(
+            s.note(),
+            "sens-cache 3h/1m, ref-cache 2h/0m, fleet w=0, journal 0a/0r/0s \
+             (truncated 0, corrupt-miss 0, quarantined 1)"
+        );
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_parser() {
+        let s = sample();
+        let text = s.to_json().to_string();
+        let back = crate::jsonio::parse(&text).unwrap();
+        assert_eq!(
+            back.req("store").unwrap().req("journal_appended").unwrap().as_f64().unwrap(),
+            5.0
+        );
+        assert_eq!(back.req("fleet").unwrap().req("workers").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(
+            back.req("fleet").unwrap().req("worker_stats").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        let none = Snapshot { fleet: None, ..s };
+        let back2 = crate::jsonio::parse(&none.to_json().to_string()).unwrap();
+        assert!(back2.req("fleet").unwrap().is_null());
+    }
+}

@@ -1,0 +1,371 @@
+//! `mpqd` daemon end-to-end tests on the pure-Rust sim backend (tier 1,
+//! hermetic — no PJRT, no network, one Unix socket per test).
+//!
+//! Contracts under test (see `src/serve`):
+//!
+//! * **Concurrency**: two jobs over different sim-zoo models interleave
+//!   phase-by-phase on one shared fleet, stream progress events, and
+//!   their final reports are byte-equal to the serial single-job path.
+//!   A resubmission whose model is still warm on the fleet opens zero
+//!   new model handles (zero recompiles).
+//! * **Crash/resume**: a daemon killed mid-job (`crash@PHASE:N` on the
+//!   job journal) restarts on the same state dir, auto-resumes the job,
+//!   replays exactly the N completed units and recomputes only the rest
+//!   — byte-equal result.
+//! * **Admission + cancel**: submits beyond `max_jobs` are refused with
+//!   a bounded error; cancel frees the slot and strands neither journal
+//!   nor temp files; shutdown removes the socket.
+//! * **Priority**: a high-priority job owns the schedule until done;
+//!   equal-priority jobs round-robin.
+
+use mpq::serve::daemon::{self, ServeCfg};
+use mpq::serve::{run_local, Client, JobPolicy};
+use mpq::sim::{self, SimSpec};
+use std::path::{Path, PathBuf};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Two-model sim zoo under a per-test temp dir (generation is
+/// deterministic: same specs → byte-identical artifacts).
+fn zoo_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_serve_e2e_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let a = SimSpec {
+        name: "srv_a".into(),
+        batch: 4,
+        dims: vec![8, 10, 6],
+        calib_n: 32,
+        val_n: 16,
+        ood_n: 0,
+        seed: 7,
+        fault_plan: None,
+    };
+    let b = SimSpec { name: "srv_b".into(), dims: vec![8, 12, 6], seed: 11, ..a.clone() };
+    sim::generate_zoo(&dir, &[a, b]).expect("generate sim zoo");
+    dir
+}
+
+fn small_policy() -> JobPolicy {
+    JobPolicy { calib_n: 16, adaround_steps: 4, ..Default::default() }
+}
+
+fn cfg(dir: &Path, sock: &Path, state: &Path) -> ServeCfg {
+    ServeCfg {
+        dir: dir.to_path_buf(),
+        socket: sock.to_path_buf(),
+        state_dir: state.to_path_buf(),
+        workers: 2,
+        max_idle: 2,
+        max_jobs: 4,
+        fault_plan: None,
+        hold: false,
+    }
+}
+
+fn spawn_daemon(cfg: ServeCfg) -> thread::JoinHandle<anyhow::Result<()>> {
+    thread::spawn(move || daemon::run(cfg))
+}
+
+/// Connect and prove liveness with a `status` round trip — a stale
+/// socket from a killed daemon accepts connections but can't answer.
+fn connect(socket: &Path) -> Client {
+    for _ in 0..1000 {
+        if let Ok(mut c) = Client::connect(socket) {
+            if c.status().is_ok() {
+                return c;
+            }
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("daemon on {} never became reachable", socket.display());
+}
+
+fn result_text(payload: &mpq::jsonio::Json) -> String {
+    payload.req("result").unwrap().to_string()
+}
+
+fn durability(payload: &mpq::jsonio::Json, field: &str) -> u64 {
+    payload.req("durability").unwrap().req(field).unwrap().as_f64().unwrap() as u64
+}
+
+fn sched_log(status: &mpq::jsonio::Json) -> Vec<String> {
+    status
+        .req("sched_log")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.as_str().unwrap().to_string())
+        .collect()
+}
+
+fn model_opens(status: &mpq::jsonio::Json) -> u64 {
+    status
+        .req("telemetry")
+        .unwrap()
+        .req("fleet")
+        .unwrap()
+        .req("model_opens")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64
+}
+
+#[test]
+fn concurrent_jobs_interleave_and_match_serial() {
+    let dir = zoo_dir("conc");
+    let policy = small_policy();
+    let base_a = run_local(&dir, "srv_a", &policy, 0, None).unwrap().to_string();
+    let base_b = run_local(&dir, "srv_b", &policy, 0, None).unwrap().to_string();
+
+    let sock = dir.join("d.sock");
+    let mut dc = cfg(&dir, &sock, &dir.join("mpqd"));
+    dc.hold = true; // stage both jobs before any work starts
+    let h = spawn_daemon(dc);
+    let mut c = connect(&sock);
+    let ida = c.submit("srv_a", &policy).unwrap();
+    let idb = c.submit("srv_b", &policy).unwrap();
+
+    let wa = connect(&sock);
+    let wb = connect(&sock);
+    let ta = thread::spawn(move || {
+        let mut events = Vec::new();
+        let res = wa.watch(ida, |e| events.push(e.to_string())).unwrap();
+        (events, res)
+    });
+    let tb = thread::spawn(move || {
+        let mut events = Vec::new();
+        let res = wb.watch(idb, |e| events.push(e.to_string())).unwrap();
+        (events, res)
+    });
+    thread::sleep(Duration::from_millis(150)); // let both subscriptions land
+    c.release().unwrap();
+
+    let (ev_a, res_a) = ta.join().unwrap();
+    let (ev_b, res_b) = tb.join().unwrap();
+
+    // final reports byte-equal to the serial single-job path
+    assert_eq!(result_text(&res_a), base_a, "daemon result for srv_a differs from serial");
+    assert_eq!(result_text(&res_b), base_b, "daemon result for srv_b differs from serial");
+    assert!(durability(&res_a, "appended") > 0, "job journaled nothing");
+    assert_eq!(durability(&res_a, "replayed"), 0, "fresh job replayed a journal");
+
+    // progress streamed: phase barriers and journal append points
+    assert!(
+        ev_a.iter().any(|e| e.contains("\"phase\"")),
+        "no phase events for srv_a: {ev_a:?}"
+    );
+    assert!(
+        ev_a.iter().any(|e| e.contains("\"barrier\"")),
+        "no journal-barrier events for srv_a: {ev_a:?}"
+    );
+    assert!(ev_b.iter().any(|e| e.contains("\"phase\"")), "no phase events for srv_b");
+
+    // the two jobs interleaved phase-by-phase on the one fleet
+    let st = c.status().unwrap();
+    let log = sched_log(&st);
+    let first_b = log
+        .iter()
+        .position(|s| s.starts_with(&format!("{idb}:")))
+        .expect("job b never scheduled");
+    let last_a = log
+        .iter()
+        .rposition(|s| s.starts_with(&format!("{ida}:")))
+        .expect("job a never scheduled");
+    assert!(first_b < last_a, "jobs ran serially, no interleave: {log:?}");
+
+    // both models parked warm; a resubmission opens zero new handles
+    let warm = st.req("warm_models").unwrap().to_string();
+    assert!(
+        warm.contains("srv_a") && warm.contains("srv_b"),
+        "models not kept warm: {warm}"
+    );
+    let opens_before = model_opens(&st);
+    let id3 = c.submit("srv_a", &policy).unwrap();
+    let res3 = connect(&sock).watch(id3, |_| {}).unwrap();
+    assert_eq!(result_text(&res3), base_a, "warm-model rerun differs");
+    let opens_after = model_opens(&c.status().unwrap());
+    assert_eq!(
+        opens_after, opens_before,
+        "warm-model job re-opened (recompiled) model handles"
+    );
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+    assert!(!sock.exists(), "socket file left behind after shutdown");
+    let stranded: Vec<String> = std::fs::read_dir(dir.join("mpqd"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".mpqj") || n.contains(".tmp."))
+        .collect();
+    assert!(stranded.is_empty(), "stranded files after clean shutdown: {stranded:?}");
+}
+
+#[test]
+fn killed_daemon_restarts_and_resumes_from_journal() {
+    const CRASH_AT: u64 = 5;
+    let dir = zoo_dir("crash");
+    let policy = small_policy();
+    let base = run_local(&dir, "srv_a", &policy, 0, None).unwrap().to_string();
+
+    // clean daemon run first: learn the job's total barrier count
+    let sock1 = dir.join("d1.sock");
+    let h1 = spawn_daemon(cfg(&dir, &sock1, &dir.join("mpqd1")));
+    let mut c1 = connect(&sock1);
+    let id = c1.submit("srv_a", &policy).unwrap();
+    let res = connect(&sock1).watch(id, |_| {}).unwrap();
+    assert_eq!(result_text(&res), base);
+    let total = durability(&res, "appended");
+    assert!(total > CRASH_AT, "need more than {CRASH_AT} barriers, got {total}");
+    c1.shutdown().unwrap();
+    h1.join().unwrap().unwrap();
+
+    // kill the daemon mid-job at journal barrier CRASH_AT
+    let sock2 = dir.join("d2.sock");
+    let state2 = dir.join("mpqd2");
+    let mut crash_cfg = cfg(&dir, &sock2, &state2);
+    crash_cfg.fault_plan = Some(format!("crash@PHASE:{CRASH_AT}"));
+    let h2 = spawn_daemon(crash_cfg);
+    let mut c2 = connect(&sock2);
+    let jid = c2.submit("srv_a", &policy).unwrap();
+    let err = h2.join().expect_err("daemon survived its crash barrier");
+    let msg = err
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| err.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string panic>");
+    assert!(msg.contains("crash@PHASE"), "unexpected panic: {msg}");
+    assert!(
+        state2.join(format!("job_{jid}.mpqj")).exists(),
+        "job journal missing after the kill"
+    );
+
+    // restart on the same state dir: the job auto-resumes, replays the
+    // CRASH_AT durable units and recomputes exactly the remainder
+    let h3 = spawn_daemon(cfg(&dir, &sock2, &state2));
+    let resumed = connect(&sock2).watch(jid, |_| {}).unwrap();
+    assert_eq!(result_text(&resumed), base, "resumed result differs from serial");
+    assert_eq!(durability(&resumed, "replayed"), CRASH_AT, "replayed unit count");
+    assert_eq!(
+        durability(&resumed, "appended"),
+        total - CRASH_AT,
+        "completed units were re-executed after restart"
+    );
+    let mut c3 = connect(&sock2);
+    c3.shutdown().unwrap();
+    h3.join().unwrap().unwrap();
+}
+
+#[test]
+fn admission_cap_and_cancel_leave_nothing_stranded() {
+    let dir = zoo_dir("adm");
+    let policy = small_policy();
+    let sock = dir.join("d.sock");
+    let state = dir.join("mpqd");
+    let mut dc = cfg(&dir, &sock, &state);
+    dc.workers = 1;
+    dc.max_idle = 0;
+    dc.max_jobs = 2;
+    dc.hold = true;
+    let h = spawn_daemon(dc);
+    let mut c = connect(&sock);
+
+    let id1 = c.submit("srv_a", &policy).unwrap();
+    let id2 = c.submit("srv_b", &policy).unwrap();
+    let err = c.submit("srv_a", &policy).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("admission refused"),
+        "expected an admission error, got: {err:#}"
+    );
+    assert!(c.submit("nope_model", &policy).is_err(), "unknown model admitted");
+
+    // cancel frees the residency slot; a second cancel is refused
+    c.cancel(id2).unwrap();
+    let id3 = c.submit("srv_b", &policy).unwrap();
+    assert!(c.cancel(id2).is_err(), "double cancel succeeded");
+
+    c.release().unwrap();
+    let base_a = run_local(&dir, "srv_a", &policy, 0, None).unwrap().to_string();
+    let base_b = run_local(&dir, "srv_b", &policy, 0, None).unwrap().to_string();
+    let r1 = connect(&sock).watch(id1, |_| {}).unwrap();
+    let r3 = connect(&sock).watch(id3, |_| {}).unwrap();
+    assert_eq!(result_text(&r1), base_a);
+    assert_eq!(result_text(&r3), base_b);
+
+    let st = c.status().unwrap();
+    let j2 = st
+        .req("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|j| j.req("id").unwrap().as_f64().unwrap() as u64 == id2)
+        .expect("cancelled job fell out of the table");
+    assert_eq!(j2.req("state").unwrap().as_str().unwrap(), "cancelled");
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+    assert!(!sock.exists(), "socket file left behind");
+    let stranded: Vec<String> = std::fs::read_dir(&state)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".mpqj") || n.contains(".tmp."))
+        .collect();
+    assert!(stranded.is_empty(), "cancel/shutdown stranded files: {stranded:?}");
+}
+
+#[test]
+fn priority_runs_first_then_equals_round_robin() {
+    let dir = zoo_dir("prio");
+    let policy = small_policy();
+    let hi = JobPolicy { priority: 9, ..policy.clone() };
+    let sock = dir.join("d.sock");
+    let mut dc = cfg(&dir, &sock, &dir.join("mpqd"));
+    dc.workers = 1;
+    dc.max_jobs = 8;
+    dc.hold = true;
+    let h = spawn_daemon(dc);
+    let mut c = connect(&sock);
+
+    let a = c.submit("srv_a", &policy).unwrap();
+    let b = c.submit("srv_b", &policy).unwrap();
+    let p = c.submit("srv_b", &hi).unwrap();
+    c.release().unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let log: Vec<String> = loop {
+        let st = c.status().unwrap();
+        let done = st
+            .req("jobs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .all(|j| j.req("state").unwrap().as_str().unwrap() == "done");
+        if done {
+            break sched_log(&st);
+        }
+        assert!(Instant::now() < deadline, "jobs never finished");
+        thread::sleep(Duration::from_millis(20));
+    };
+
+    // the priority-9 job owns the schedule for all four of its phases
+    for (i, entry) in log.iter().take(4).enumerate() {
+        assert!(
+            entry.starts_with(&format!("{p}:")),
+            "step {i} went to {entry}, not the priority job: {log:?}"
+        );
+    }
+    // the equal-priority pair round-robins phase by phase
+    assert!(
+        log[4].starts_with(&format!("{a}:"))
+            && log[5].starts_with(&format!("{b}:"))
+            && log[6].starts_with(&format!("{a}:")),
+        "equal-priority jobs did not round-robin: {log:?}"
+    );
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+}
