@@ -9,12 +9,15 @@
 //!
 //! * **sim section (always runs, hermetic)** — a generated sim-backend zoo
 //!   (`mpq::sim`) sized so probe compute dominates dispatch, producing
-//!   `phase1_sim/...`, `phase2_sim/...` and
-//!   `phase1_pool_sim/full_sensitivity_sweep_w{1,2,4}` and the daemon's
-//!   `serve_sim/submit_roundtrip_p{50,90,99}` on every machine,
-//!   toolchain-only.  These are the entries `scripts/bench_compare` gates
-//!   on in CI — including the pool w4-vs-w1 speedup check — so the gate is
-//!   no longer vacuous without PJRT artifacts.
+//!   `phase1_sim/...`, `phase2_sim/...`,
+//!   `phase1_pool_sim/full_sensitivity_sweep_w{1,2,4}`, the daemon's
+//!   `serve_sim/submit_roundtrip_p{50,90,99}`, the process-lane IPC
+//!   substrate `ipc_sim/roundtrip_{1k,64k,1m}_p{50,90,99}` and the
+//!   subprocess-fleet sweep `phase1_proc_sim/full_sensitivity_sweep_w{1,4}`
+//!   on every machine, toolchain-only.  These are the entries
+//!   `scripts/bench_compare` gates on in CI — including the pool w4-vs-w1
+//!   and process-lane w4-vs-w1 speedup checks — so the gate is no longer
+//!   vacuous without PJRT artifacts.
 //! * **PJRT section (artifacts-gated)** — the original `resnet_s` entries
 //!   (`phase1/...`, `phase2/...`, `phase1_pool/..._wN`), skipped without
 //!   `make artifacts`.
@@ -179,6 +182,102 @@ fn sim_benches(results: &mut Vec<BenchResult>) {
 
     fleet_reuse_bench(results);
     serve_submit_bench(results);
+    ipc_bench(results);
+    proc_fleet_bench(results);
+}
+
+/// Process-lane IPC substrate latency: one MPQJ frame down a Unix socket
+/// pair, echoed back by a peer thread (`store::read_frame` →
+/// `store::write_frame`, the exact framing `pool/transport.rs` rides),
+/// at the control-plane size (1 KiB), the bulk threshold (64 KiB ≫ the
+/// 16 KiB control/bulk cutoff) and a full activation-shard-sized payload
+/// (1 MiB).  Reported as p50/p90/p99 per size, same percentile encoding
+/// as the serve entries.
+fn ipc_bench(results: &mut Vec<BenchResult>) {
+    use std::os::unix::net::UnixStream;
+
+    const N: usize = 200;
+    const MAX: usize = 1 << 30; // the transport's MAX_IPC_FRAME
+    let (mut a, b) = UnixStream::pair().expect("socketpair");
+    let echo = std::thread::spawn(move || {
+        let mut b = b;
+        while let Ok(Some(rec)) = mpq::store::read_frame(&mut b, MAX) {
+            if mpq::store::write_frame(&mut b, rec.kind, rec.digest, &rec.payload).is_err() {
+                break;
+            }
+        }
+    });
+
+    for (tag, size) in [("1k", 1usize << 10), ("64k", 64 << 10), ("1m", 1 << 20)] {
+        let payload = vec![0xA5u8; size];
+        let mut roundtrip = |i: u64| {
+            mpq::store::write_frame(&mut a, 64, i, &payload).expect("ipc write");
+            let rec = mpq::store::read_frame(&mut a, MAX).expect("ipc read").expect("ipc eof");
+            assert_eq!(rec.payload.len(), size, "echo garbled the frame");
+        };
+        for i in 0..8 {
+            roundtrip(i); // warmup
+        }
+        let mut lat = Vec::with_capacity(N);
+        for i in 0..N {
+            let t0 = std::time::Instant::now();
+            roundtrip(i as u64);
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        lat.sort_by(f64::total_cmp);
+        for (ptag, q) in [("p50", 0.50), ("p90", 0.90), ("p99", 0.99)] {
+            let v = lat[((N as f64 * q) as usize).min(N - 1)];
+            let r = BenchResult {
+                name: format!("ipc_sim/roundtrip_{tag}_{ptag}"),
+                min_s: v,
+                mean_s: v,
+                max_s: v,
+                iters: N,
+            };
+            r.print();
+            results.push(r);
+        }
+    }
+    drop(a); // EOF ends the echo loop
+    echo.join().expect("echo thread");
+}
+
+/// Phase-1 sweep through **process-backed** worker lanes
+/// (`EvalFleet::new_proc` → `mpq worker` subprocesses over the socket
+/// transport) at 1 and 4 lanes — the distributed counterpart of the
+/// `phase1_pool_sim` entries.  `bench_compare` gates w1 >= 1.2x w4 live:
+/// four processes must beat one despite tensors crossing process
+/// boundaries, or the transport has become the bottleneck.
+fn proc_fleet_bench(results: &mut Vec<BenchResult>) {
+    std::env::set_var("MPQ_WORKER_BIN", env!("CARGO_BIN_EXE_mpq"));
+    let dir = std::env::temp_dir().join("mpq_microbench_proc");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = SimSpec {
+        dims: vec![128, 160, 160, 10],
+        calib_n: 512,
+        val_n: 256,
+        ood_n: 0,
+        ..Default::default()
+    };
+    sim::generate(&dir, &spec).expect("generate proc sim artifacts");
+    let lat = Lattice::practical();
+    for workers in [1usize, 4] {
+        let fleet = EvalFleet::new_proc(&dir, workers).expect("spawn proc fleet");
+        let mut pp = Pipeline::open(&dir, &spec.name).expect("open sim zoo");
+        pp.attach_fleet(&fleet).expect("attach proc fleet");
+        pp.calibrate(spec.calib_n, 0).expect("calibrate");
+        let name = format!("phase1_proc_sim/full_sensitivity_sweep_w{workers}");
+        results.push(bench_result(&name, 1, 3, || {
+            pp.clear_eval_memo();
+            pp.sensitivity_sqnr(&lat).map(|_| ())
+        }));
+        assert_eq!(
+            fleet.failure_stats().worker_restarts,
+            0,
+            "proc bench must run clean — a dying lane poisons the timing"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Fleet-reuse entry: attach-and-probe a *second* model on a fleet that is

@@ -173,6 +173,24 @@ impl StreamingSqnr {
         Ok(())
     }
 
+    /// Decompose into `(seq, [(global batch index, Σ sig/err, samples)])`
+    /// for wire transport: the process-lane codec ships the exact partial
+    /// sums so a remote shard merges bit-identically to an in-process one.
+    pub(crate) fn to_parts(&self) -> (u64, Vec<(u64, f64, usize)>) {
+        (
+            self.seq,
+            self.parts.iter().map(|(&i, &(a, n))| (i, a, n)).collect(),
+        )
+    }
+
+    /// Rebuild from [`Self::to_parts`] output (inverse, bit-exact).
+    pub(crate) fn from_parts(seq: u64, parts: impl IntoIterator<Item = (u64, f64, usize)>) -> Self {
+        Self {
+            parts: parts.into_iter().map(|(i, a, n)| (i, (a, n))).collect(),
+            seq,
+        }
+    }
+
     /// `10·log10((1/N)·Σ_i sig_i/err_i)` over everything pushed so far,
     /// reduced in global batch order.
     pub fn db(&self) -> f64 {

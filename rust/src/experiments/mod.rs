@@ -46,6 +46,9 @@ pub struct Opts {
     /// probes / prefix evaluations / AdaRound layers instead of starting
     /// the journal fresh
     pub resume: bool,
+    /// `--proc`: run fleet lanes as `mpq worker` subprocesses (see the
+    /// process-lanes section of [`crate::pool`]) instead of threads
+    pub proc: bool,
 }
 
 impl Default for Opts {
@@ -59,6 +62,7 @@ impl Default for Opts {
             workers: crate::util::default_workers(),
             fault_plan: None,
             resume: false,
+            proc: false,
         }
     }
 }
@@ -140,11 +144,15 @@ impl Env {
         let manifest = Manifest::load(&opts.dir)?;
         let rt = Rc::new(Runtime::for_manifest(&manifest)?);
         let fleet = if opts.workers > 1 {
-            Some(match &opts.fault_plan {
-                Some(spec) => {
+            Some(match (&opts.fault_plan, opts.proc) {
+                (Some(spec), false) => {
                     EvalFleet::with_faults(&opts.dir, opts.workers, FaultPlan::parse(spec)?)?
                 }
-                None => EvalFleet::new(&opts.dir, opts.workers)?,
+                (Some(spec), true) => {
+                    EvalFleet::with_faults_proc(&opts.dir, opts.workers, FaultPlan::parse(spec)?)?
+                }
+                (None, false) => EvalFleet::new(&opts.dir, opts.workers)?,
+                (None, true) => EvalFleet::new_proc(&opts.dir, opts.workers)?,
             })
         } else {
             None

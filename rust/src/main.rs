@@ -41,6 +41,7 @@ fn opts_from(args: &Args) -> Result<Opts> {
     o.workers = args.opt_workers()?;
     o.fault_plan = args.opt("fault-plan").map(String::from);
     o.resume = args.flag("resume");
+    o.proc = args.flag("proc");
     if let Some(ms) = args.opt("models") {
         o.models = Some(ms.split(',').map(String::from).collect());
     }
@@ -48,16 +49,21 @@ fn opts_from(args: &Args) -> Result<Opts> {
 }
 
 /// Route probe evaluation through a worker fleet when `--workers` > 1,
-/// honoring an explicit `--fault-plan` (the self-healing harness).
+/// honoring an explicit `--fault-plan` (the self-healing harness) and
+/// `--proc` (subprocess lanes instead of threads).
 fn enable_fleet(pipe: &mut Pipeline, opts: &Opts) -> Result<()> {
-    match &opts.fault_plan {
-        Some(spec) => {
-            let plan = mpq::pool::FaultPlan::parse(spec)?;
-            let fleet = mpq::pool::EvalFleet::with_faults(&opts.dir, opts.workers, plan)?;
-            pipe.attach_fleet(&fleet)
-        }
-        None => pipe.enable_pool(opts.workers),
-    }
+    let plan = opts
+        .fault_plan
+        .as_deref()
+        .map(mpq::pool::FaultPlan::parse)
+        .transpose()?;
+    let fleet = match (plan, opts.proc) {
+        (Some(plan), true) => mpq::pool::EvalFleet::with_faults_proc(&opts.dir, opts.workers, plan)?,
+        (Some(plan), false) => mpq::pool::EvalFleet::with_faults(&opts.dir, opts.workers, plan)?,
+        (None, true) => mpq::pool::EvalFleet::new_proc(&opts.dir, opts.workers)?,
+        (None, false) => return pipe.enable_pool(opts.workers),
+    };
+    pipe.attach_fleet(&fleet)
 }
 
 /// Print the fleet's failure telemetry after a pooled command — only when
@@ -203,6 +209,20 @@ fn main() -> Result<()> {
             mpq::serve::run(cfg)?;
         }
         "client" => mpq::serve::client::cli(&args)?,
+        "worker" => {
+            // internal: the process-lane entrypoint `EvalFleet::new_proc`
+            // coordinators spawn (see the pool module docs) — not for
+            // interactive use
+            let socket = args
+                .opt("socket")
+                .ok_or_else(|| anyhow!("worker needs --socket PATH (spawned by a coordinator)"))?;
+            let lane = args.opt_usize("lane", 0)?;
+            let compile_fault = match args.opt("compile-fault") {
+                Some(v) => Some(v.parse::<usize>().map_err(|e| anyhow!("--compile-fault {v}: {e}"))?),
+                None => None,
+            };
+            mpq::pool::run_worker_child(std::path::Path::new(socket), &opts.dir, lane, compile_fault)?;
+        }
         "table1" => { let t = experiments::table1(&opts)?; t.print(); t.save(&rdir, "table1")?; }
         "table2" => { let t = experiments::table2(&opts)?; t.print(); t.save(&rdir, "table2")?; }
         "table3" => { let t = experiments::table3(&opts)?; t.print(); t.save(&rdir, "table3")?; }
@@ -246,6 +266,9 @@ fn main() -> Result<()> {
             println!("       --workers N  evaluation-fleet width (default: host parallelism;");
             println!("                    one shared fleet per driver run, reused across all");
             println!("                    models; 1 = serial single-client path)");
+            println!("       --proc       run fleet lanes as mpq worker subprocesses over");
+            println!("                    Unix sockets (MPQJ frames; results stay byte-equal");
+            println!("                    to serial); lane death heals via the supervisor");
             println!("       --fault-plan SPEC  deterministic fleet fault injection, e.g.");
             println!("                    'panic@1:3,budget:2,deadline:500' (also via the");
             println!("                    MPQ_FAULT_PLAN env var or the manifest fault_plan key;");
@@ -266,6 +289,8 @@ fn main() -> Result<()> {
             println!("client:  <submit|status|watch|cancel|release|shutdown> --socket PATH");
             println!("         [--model M --calib N --seed S --priority P --eval-budget N");
             println!("          --no-adaround --adaround-steps N --job J]");
+            println!("worker:  --socket PATH --artifacts DIR [--lane N] [--compile-fault N]");
+            println!("         (internal: process-lane entrypoint, spawned by --proc fleets)");
         }
     }
     Ok(())

@@ -339,6 +339,18 @@ impl PearsonAccum {
             self.cxy / (self.m2x * self.m2y).sqrt()
         }
     }
+
+    /// The raw Welford state `[n, mx, my, m2x, m2y, cxy]` for wire
+    /// transport — shipped bit-exact so a process-lane merge reproduces the
+    /// in-process result to the last ulp.
+    pub(crate) fn raw(&self) -> [f64; 6] {
+        [self.n, self.mx, self.my, self.m2x, self.m2y, self.cxy]
+    }
+
+    /// Rebuild from [`Self::raw`] output (inverse, bit-exact).
+    pub(crate) fn from_raw(v: [f64; 6]) -> Self {
+        Self { n: v[0], mx: v[1], my: v[2], m2x: v[3], m2y: v[4], cxy: v[5] }
+    }
 }
 
 /// Pearson correlation of two equal-length vectors.

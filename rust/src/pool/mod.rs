@@ -155,6 +155,36 @@
 //! data.  Pipelines never do this (they drain probes before reloading a
 //! set), and the property/e2e tests never hit it.
 //!
+//! ## Process lanes (`EvalFleet::new_proc`)
+//!
+//! The same fleet can run its lanes as **`mpq worker` subprocesses**
+//! instead of threads.  Each process lane is a private Unix socket plus a
+//! pair of bridge threads adapting the fleet's mpsc seam to the wire: the
+//! serving loop in the child is the same `pool/worker.rs` code, and the
+//! job/reply surface crosses the socket as MPQJ checksummed frames
+//! (`pool/transport.rs`), with tensors above a **16 KiB control/bulk
+//! threshold** shipped as out-of-line framed MPQT payloads.  Floats cross
+//! the wire as raw bits, so process-lane results remain **byte-equal to
+//! serial** at any lane count — the thread-fleet exactness guarantee
+//! survives the address-space boundary.
+//!
+//! Supervision generalizes rather than changes: a worker process that
+//! panics, exits, or is SIGKILLed closes its socket, the lane's reader
+//! converts the EOF into the same `DEATH_NOTICE` a panicking thread
+//! sends, and respawn / host-state replay / requeue / degradation
+//! proceed identically.  Fault plans apply to process lanes too —
+//! directives are computed **coordinator-side** per job (preserving
+//! global one-shot depletion and per-incarnation recurrence) and ride
+//! the JOB frame; `panic@` becomes a real process death in the child.
+//! The coordinator re-executes its own binary for workers; set
+//! `MPQ_WORKER_BIN` when the current executable is not `mpq` (tests and
+//! benches point it at the built binary).
+//!
+//! Two child-side counters are process-local by construction:
+//! [`EvalFleet::model_opens`] counts in-process lanes only, and an
+//! injected compile fault's firing is not reflected in the parent's
+//! `faults_injected` telemetry.  The dist tier asserts on neither.
+//!
 //! ## Durability & resume (process-boundary crashes)
 //!
 //! The supervisor above covers worker-*thread* death; death of the whole
@@ -174,6 +204,8 @@
 //! `resume_e2e` kill/restart matrix drives every crash point.
 
 mod fault;
+mod proc;
+mod transport;
 mod worker;
 
 pub use fault::{Fault, FaultKind, FaultPlan};
@@ -375,6 +407,33 @@ struct Worker {
     restarts: usize,
     tx: Option<mpsc::Sender<Job>>,
     join: Option<JoinHandle<()>>,
+    /// present on process lanes: the subprocess + its bridge threads
+    proc: Option<proc::ProcLane>,
+}
+
+impl Worker {
+    /// Phase one of a deliberate close: mark a process lane's teardown
+    /// intentional (so its reader doesn't report the EOF as a death) and
+    /// drop the job sender, which ends the lane's serving loop.
+    fn close_begin(&mut self) {
+        if let Some(p) = &self.proc {
+            p.begin_close();
+        }
+        self.tx.take();
+    }
+
+    /// Phase two: join the worker thread (thread lanes) or the bridge
+    /// threads + child process (process lanes).  Callers run phase one on
+    /// *every* worker being closed before running phase two on any, so
+    /// lanes drain concurrently.
+    fn close_finish(&mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(p) = self.proc.take() {
+            p.finish_close();
+        }
+    }
 }
 
 /// One worker's result slot in a tracked job.  The request is retained
@@ -439,6 +498,8 @@ pub struct EvalFleet {
     next_widx: AtomicUsize,
     /// monotone lane allocator for fresh (non-replacement) spawns
     next_lane: AtomicUsize,
+    /// spawn lanes as `mpq worker` subprocesses instead of threads
+    proc: bool,
     /// fault schedule + fire accounting (empty plan in production)
     faults: Arc<FaultState>,
     worker_restarts: AtomicUsize,
@@ -460,17 +521,38 @@ impl EvalFleet {
     /// manifest's optional `"fault_plan"` key.  Use
     /// [`EvalFleet::with_faults`] to pin one explicitly.
     pub fn new(dir: impl AsRef<Path>, workers: usize) -> Result<Rc<Self>> {
-        Self::build(dir.as_ref().to_path_buf(), workers, None)
+        Self::build(dir.as_ref().to_path_buf(), workers, None, false)
     }
 
     /// Spawn a fleet with an explicit [`FaultPlan`] — wins over the
     /// environment and the manifest, so dedicated fault tests stay
     /// deterministic even under the fault-injection CI job.
     pub fn with_faults(dir: impl AsRef<Path>, workers: usize, plan: FaultPlan) -> Result<Rc<Self>> {
-        Self::build(dir.as_ref().to_path_buf(), workers, Some(plan))
+        Self::build(dir.as_ref().to_path_buf(), workers, Some(plan), false)
     }
 
-    fn build(dir: PathBuf, workers: usize, explicit: Option<FaultPlan>) -> Result<Rc<Self>> {
+    /// Spawn a fleet of `workers` **subprocess** lanes (`mpq worker`, see
+    /// the module docs' process-lanes section) instead of threads.  Same
+    /// API, same exactness guarantee, same supervisor — but a lane death
+    /// is a real process death (SIGKILL-grade), and lane state lives in a
+    /// separate address space.
+    pub fn new_proc(dir: impl AsRef<Path>, workers: usize) -> Result<Rc<Self>> {
+        Self::build(dir.as_ref().to_path_buf(), workers, None, true)
+    }
+
+    /// Process lanes with an explicit [`FaultPlan`] (the dist-tier fault
+    /// harness).  Fault decisions stay coordinator-side — see
+    /// [`transport::FaultDirective`] — so plan semantics match thread
+    /// lanes exactly.
+    pub fn with_faults_proc(
+        dir: impl AsRef<Path>,
+        workers: usize,
+        plan: FaultPlan,
+    ) -> Result<Rc<Self>> {
+        Self::build(dir.as_ref().to_path_buf(), workers, Some(plan), true)
+    }
+
+    fn build(dir: PathBuf, workers: usize, explicit: Option<FaultPlan>, proc: bool) -> Result<Rc<Self>> {
         let manifest = Manifest::load(&dir)?;
         let plan = match explicit {
             Some(p) => p,
@@ -501,6 +583,7 @@ impl EvalFleet {
             next_model_id: AtomicU64::new(0),
             next_widx: AtomicUsize::new(0),
             next_lane: AtomicUsize::new(0),
+            proc,
             faults: Arc::new(FaultState::new(plan)),
             worker_restarts: AtomicUsize::new(0),
             jobs_requeued: AtomicUsize::new(0),
@@ -520,6 +603,18 @@ impl EvalFleet {
     /// Live worker count (dead lanes are reaped, so this is exact).
     pub fn workers(&self) -> usize {
         self.workers.lock().unwrap().len()
+    }
+
+    /// Per-worker subprocess pids, in worker order (`None` for thread
+    /// lanes).  The dist-tier supervision tests SIGKILL one of these and
+    /// assert the fleet heals.
+    pub fn proc_pids(&self) -> Vec<Option<u32>> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|w| w.proc.as_ref().map(|p| p.pid()))
+            .collect()
     }
 
     /// The fault plan this fleet was built with (empty in production).
@@ -616,12 +711,12 @@ impl EvalFleet {
             return Ok(());
         }
         if n < cur {
-            let removed: Vec<Worker> = self.workers.lock().unwrap().drain(n..).collect();
-            for mut w in removed {
-                w.tx.take(); // closing the channel ends the worker's loop
-                if let Some(j) = w.join.take() {
-                    let _ = j.join();
-                }
+            let mut removed: Vec<Worker> = self.workers.lock().unwrap().drain(n..).collect();
+            for w in removed.iter_mut() {
+                w.close_begin(); // closing the channel ends the worker's loop
+            }
+            for w in removed.iter_mut() {
+                w.close_finish();
             }
         } else {
             self.spawn_workers(n - cur)?;
@@ -631,8 +726,9 @@ impl EvalFleet {
 
     // -- internals -----------------------------------------------------------
 
-    /// Spawn one worker thread on `lane` with a fresh incarnation id.
-    /// Does not wait for init and does not touch the worker vec.
+    /// Spawn one worker (thread or, with `new_proc`, subprocess) on `lane`
+    /// with a fresh incarnation id.  Does not wait for init and does not
+    /// touch the worker vec.
     fn spawn_one(
         &self,
         lane: usize,
@@ -640,6 +736,19 @@ impl EvalFleet {
     ) -> Result<Worker> {
         let widx = self.next_widx.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Job>();
+        if self.proc {
+            let pl = proc::spawn_proc_worker(
+                widx,
+                lane,
+                &self.dir,
+                rx,
+                self.res_tx.clone(),
+                init_tx,
+                &self.faults,
+            )
+            .map_err(|e| anyhow!("spawning fleet worker process {widx}: {e:#}"))?;
+            return Ok(Worker { widx, lane, restarts: 0, tx: Some(tx), join: None, proc: Some(pl) });
+        }
         let (d, rtx) = (self.dir.clone(), self.res_tx.clone());
         let opens = self.opens.clone();
         let faults = self.faults.clone();
@@ -647,7 +756,7 @@ impl EvalFleet {
             .name(format!("mpq-fleet-{widx}"))
             .spawn(move || worker::worker_main(widx, lane, d, rx, rtx, init_tx, opens, faults))
             .map_err(|e| anyhow!("spawning fleet worker {widx}: {e}"))?;
-        Ok(Worker { widx, lane, restarts: 0, tx: Some(tx), join: Some(join) })
+        Ok(Worker { widx, lane, restarts: 0, tx: Some(tx), join: Some(join), proc: None })
     }
 
     /// Spawn `n` fresh workers at the tail (initial spawn and `resize`
@@ -677,16 +786,16 @@ impl EvalFleet {
         }
         if !failures.is_empty() {
             // roll back the batch we just spawned (they sit at the tail)
-            let tail: Vec<Worker> = {
+            let mut tail: Vec<Worker> = {
                 let mut ws = self.workers.lock().unwrap();
                 let keep = ws.len().saturating_sub(n);
                 ws.drain(keep..).collect()
             };
-            for mut w in tail {
-                w.tx.take();
-                if let Some(j) = w.join.take() {
-                    let _ = j.join();
-                }
+            for w in tail.iter_mut() {
+                w.close_begin();
+            }
+            for w in tail.iter_mut() {
+                w.close_finish();
             }
             bail!("fleet worker init failed: {}", failures.join("; "));
         }
@@ -700,15 +809,13 @@ impl EvalFleet {
         match init_rx.recv() {
             Ok((_, Ok(()))) => Ok(w),
             Ok((_, Err(e))) => {
-                if let Some(j) = w.join.take() {
-                    let _ = j.join();
-                }
+                w.close_begin();
+                w.close_finish();
                 bail!("replacement init failed: {e}")
             }
             Err(_) => {
-                if let Some(j) = w.join.take() {
-                    let _ = j.join();
-                }
+                w.close_begin();
+                w.close_finish();
                 bail!("replacement exited before reporting init")
             }
         }
@@ -941,14 +1048,14 @@ impl EvalFleet {
     /// thread actually exited (join it); the watchdog passes `false` for a
     /// stuck-but-alive thread, which is detached instead.
     fn handle_death(&self, dead: usize, reason: &str, true_death: bool) -> Result<()> {
-        let (lane, restarts, join) = {
+        let (lane, restarts, join, proc) = {
             let mut ws = self.workers.lock().unwrap();
             let Some(pos) = ws.iter().position(|w| w.widx == dead) else {
                 return Ok(()); // already handled (e.g. watchdog then notice)
             };
             let w = &mut ws[pos];
             w.tx.take();
-            (w.lane, w.restarts, w.join.take())
+            (w.lane, w.restarts, w.join.take(), w.proc.take())
         };
         self.record_death(dead, reason);
         if true_death {
@@ -958,6 +1065,14 @@ impl EvalFleet {
         }
         // else: drop the handle — the marooned thread's eventual replies
         // carry a retired widx and are dropped by `route`
+        if let Some(p) = proc {
+            // unlike a marooned thread, a stuck subprocess *can* be
+            // reclaimed: reap kills it (raising `closing` first, so the
+            // reader's post-kill EOF emits no second notice) and joins the
+            // bridge threads.  For a true death the child already exited
+            // and this just collects the corpse.
+            p.reap();
+        }
 
         let budget = self.faults.plan().budget.unwrap_or(DEFAULT_RESTART_BUDGET);
         let base = self.faults.plan().backoff_ms.unwrap_or(DEFAULT_BACKOFF_MS);
@@ -1336,12 +1451,10 @@ impl EvalFleet {
     fn shutdown(&self) {
         let mut ws = self.workers.lock().unwrap();
         for w in ws.iter_mut() {
-            w.tx.take(); // closing the channel ends the worker's recv loop
+            w.close_begin(); // closing the channel ends the worker's recv loop
         }
         for w in ws.iter_mut() {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
+            w.close_finish();
         }
     }
 }
@@ -1355,6 +1468,19 @@ impl Drop for EvalFleet {
 /// Exponential respawn backoff: `base << attempt`, capped.
 fn backoff_ms(base: u64, attempt: usize) -> u64 {
     base.saturating_mul(1u64 << attempt.min(6)).min(MAX_BACKOFF_MS)
+}
+
+/// The `mpq worker` subprocess entrypoint (see the module docs' process-
+/// lanes section): connect back to the coordinator's socket, handshake,
+/// then serve framed jobs until the coordinator half-closes the lane.
+/// Spawned by [`EvalFleet::new_proc`] fleets; never started by hand.
+pub fn run_worker_child(
+    socket: &Path,
+    dir: &Path,
+    lane: usize,
+    compile_fault: Option<usize>,
+) -> Result<()> {
+    proc::run_worker(socket, dir, lane, compile_fault)
 }
 
 /// Per-model client of an [`EvalFleet`] — the handle pipelines and

@@ -1,0 +1,383 @@
+//! Process-backed fleet lanes: each worker is an `mpq worker` subprocess
+//! speaking the [`super::transport`] frame protocol over a private Unix
+//! socket.
+//!
+//! The fleet's internal seam stays the mpsc job/result channels — a
+//! process lane is a pair of **bridge threads** that adapt them to the
+//! socket: the *feeder* drains the lane's job queue, computes each job's
+//! [`FaultDirective`] coordinator-side (global fault-plan depletion lives
+//! here, where the shared [`FaultState`] is), and writes JOB frames; the
+//! *reader* forwards INIT and REPLY frames back onto the fleet's channels
+//! and converts a broken or closed socket into the same `DEATH_NOTICE`
+//! a panicking thread lane sends.  The supervisor above needs no new
+//! cases: a SIGKILLed subprocess *is* a death notice, and respawn /
+//! host-state replay / requeue proceed exactly as for threads.
+//!
+//! Clean shutdown is a two-phase close mirrored on the channel seam:
+//! dropping the lane's job sender ends the feeder, which half-closes the
+//! socket; the child drains, sees EOF, and exits; the reader sees EOF
+//! with the `closing` flag up and exits silently.  `reap` (supervised
+//! teardown of a lane that is *presumed stuck*) inverts the order — kill
+//! the child first so both bridge threads unblock, then join them.
+
+use super::fault::FaultState;
+use super::transport::{self, FaultDirective};
+use super::worker;
+use super::{Job, Request, ResMsg, DEATH_NOTICE};
+use crate::serve::proto;
+use anyhow::{Context, Result};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long the coordinator waits for a freshly spawned worker process to
+/// connect back and complete the protocol handshake.
+const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
+
+/// One process lane: the subprocess plus its two bridge threads.
+pub(super) struct ProcLane {
+    child: Child,
+    /// raised before any deliberate teardown so the reader does not
+    /// mistake the resulting EOF for a crash and emit a death notice
+    closing: Arc<AtomicBool>,
+    feeder: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl ProcLane {
+    /// The worker process id (tests SIGKILL it to exercise supervision).
+    pub(super) fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// Phase one of a clean close: mark the teardown deliberate.  The
+    /// caller drops the lane's job sender next, which unwinds feeder →
+    /// child → reader without a death notice.
+    pub(super) fn begin_close(&self) {
+        self.closing.store(true, Ordering::SeqCst);
+    }
+
+    /// Phase two of a clean close: join the bridge threads, then reap the
+    /// (already exited) child.  `Child::wait` caches the exit status, so
+    /// a second wait on an already-reaped child is harmless.
+    pub(super) fn finish_close(mut self) {
+        if let Some(f) = self.feeder.take() {
+            let _ = f.join();
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+        let _ = self.child.wait();
+    }
+
+    /// Supervised teardown of a lane presumed dead or stuck: kill the
+    /// child *first* so a feeder blocked on a full socket buffer (or a
+    /// reader blocked on a stalled child) unblocks, then join.  Unlike a
+    /// marooned thread lane, a stuck subprocess can always be reclaimed.
+    pub(super) fn reap(mut self) {
+        self.closing.store(true, Ordering::SeqCst);
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        if let Some(f) = self.feeder.take() {
+            let _ = f.join();
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+/// Spawn one process lane: bind a private socket, launch `mpq worker`,
+/// wait for it to connect and handshake, then stand up the bridge
+/// threads.
+///
+/// Failure reporting follows the thread lanes' contract: infrastructure
+/// failures the caller can do nothing about mid-loop (bind, spawn, thread
+/// spawn) are hard `Err`s, while *worker-side* setup failures (it exited,
+/// never connected, or flunked the handshake) are reported through the
+/// init channel — exactly where a thread lane's failed `init_state`
+/// lands — so `spawn_workers`' existing init-collection path handles
+/// both lane kinds uniformly.
+pub(super) fn spawn_proc_worker(
+    widx: usize,
+    lane: usize,
+    dir: &Path,
+    rx: mpsc::Receiver<Job>,
+    res: mpsc::Sender<ResMsg>,
+    init: mpsc::Sender<(usize, Result<(), String>)>,
+    faults: &Arc<FaultState>,
+) -> Result<ProcLane> {
+    let sock = std::env::temp_dir().join(format!("mpq-worker-{}-{widx}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let listener = UnixListener::bind(&sock)
+        .with_context(|| format!("binding worker socket {}", sock.display()))?;
+
+    // The coordinator re-executes itself by default; MPQ_WORKER_BIN
+    // overrides for harnesses whose current_exe is not the mpq binary
+    // (integration tests and benches point it at CARGO_BIN_EXE_mpq).
+    let exe = match std::env::var_os("MPQ_WORKER_BIN") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::env::current_exe().context("resolving the mpq binary for worker spawn")?,
+    };
+    let mut cmd = Command::new(&exe);
+    cmd.arg("worker")
+        .arg("--socket")
+        .arg(&sock)
+        .arg("--artifacts")
+        .arg(dir)
+        .arg("--lane")
+        .arg(lane.to_string())
+        .stdin(Stdio::null());
+    if let Some(nth) = faults.arm_compile(lane) {
+        cmd.arg("--compile-fault").arg(nth.to_string());
+    }
+    let mut child = cmd
+        .spawn()
+        .with_context(|| format!("spawning worker process {}", exe.display()))?;
+    let closing = Arc::new(AtomicBool::new(false));
+
+    // Poll accept so a child that dies before connecting (bad binary,
+    // immediate crash) is diagnosed by its exit status instead of a
+    // 10-second timeout.
+    listener
+        .set_nonblocking(true)
+        .context("setting worker listener non-blocking")?;
+    let deadline = Instant::now() + CONNECT_DEADLINE;
+    let accepted = loop {
+        match listener.accept() {
+            Ok((stream, _)) => break Ok(stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                match child.try_wait() {
+                    Ok(Some(status)) => {
+                        break Err(format!("worker process exited before connecting ({status})"))
+                    }
+                    Ok(None) => {}
+                    Err(e) => break Err(format!("waiting on worker process: {e}")),
+                }
+                if Instant::now() >= deadline {
+                    break Err(format!(
+                        "worker process did not connect within {}s",
+                        CONNECT_DEADLINE.as_secs()
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => break Err(format!("accepting worker connection: {e}")),
+        }
+    };
+    // single-connection socket: unlink as soon as the accept resolved
+    let _ = std::fs::remove_file(&sock);
+
+    let setup = accepted.and_then(|mut stream| {
+        let ready = (|| -> Result<()> {
+            stream.set_nonblocking(false)?;
+            stream.set_read_timeout(Some(CONNECT_DEADLINE))?;
+            proto::handshake(&mut stream)?;
+            stream.set_read_timeout(None)?;
+            Ok(())
+        })();
+        match ready {
+            Ok(()) => Ok(stream),
+            Err(e) => Err(format!("worker handshake failed: {e:#}")),
+        }
+    });
+    let stream = match setup {
+        Ok(s) => s,
+        Err(msg) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            let _ = init.send((widx, Err(msg)));
+            return Ok(ProcLane { child, closing, feeder: None, reader: None });
+        }
+    };
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            let _ = init.send((widx, Err(format!("cloning worker socket: {e}"))));
+            return Ok(ProcLane { child, closing, feeder: None, reader: None });
+        }
+    };
+
+    let feeder = std::thread::Builder::new()
+        .name(format!("mpq-proc-feed-{widx}"))
+        .spawn({
+            let faults = faults.clone();
+            move || feed_loop(writer, rx, faults, lane)
+        })
+        .context("spawning process-lane feeder thread")?;
+    let reader = match std::thread::Builder::new()
+        .name(format!("mpq-proc-read-{widx}"))
+        .spawn({
+            let closing = closing.clone();
+            move || read_loop(stream, widx, res, init, closing)
+        }) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            let _ = feeder.join();
+            return Err(e).context("spawning process-lane reader thread");
+        }
+    };
+    Ok(ProcLane { child, closing, feeder: Some(feeder), reader: Some(reader) })
+}
+
+/// Bridge the lane's job queue onto the socket.  Fault decisions are made
+/// here, coordinator-side, per job: the shared [`FaultState`] keeps its
+/// global one-shot depletion and per-incarnation recurrence semantics
+/// (this thread's counters reset with each respawn, exactly like a thread
+/// lane's), and the resulting [`FaultDirective`] rides the JOB frame.
+fn feed_loop(mut w: UnixStream, rx: mpsc::Receiver<Job>, faults: Arc<FaultState>, lane: usize) {
+    let slow = faults.slow_ms(lane).unwrap_or(0);
+    let mut probes = 0usize;
+    let mut uploads = 0usize;
+    while let Ok(Job { id, req }) = rx.recv() {
+        let mut d = FaultDirective { slow_ms: slow, ..Default::default() };
+        if matches!(req, Request::Probe { .. }) {
+            probes += 1;
+            d.probes = probes as u64;
+            d.stall = faults.fire_stall(lane, probes);
+            d.panic = faults.fire_panic(lane, probes);
+        }
+        if matches!(
+            req,
+            Request::LoadSet { .. } | Request::BuildReference { .. } | Request::InstallReference { .. }
+        ) {
+            uploads += 1;
+            d.uploads = uploads as u64;
+            d.upload_fail = faults.fire_upload(lane, uploads);
+        }
+        if transport::write_job(&mut w, id, &req, &d).is_err() {
+            // broken socket: the reader reports the death; nothing to do
+            // here but stop feeding (the unsent job stays in its tracked
+            // slot and is requeued by the supervisor)
+            break;
+        }
+    }
+    // half-close so the child's read_job sees a clean EOF and exits
+    let _ = w.shutdown(std::net::Shutdown::Write);
+}
+
+/// Bridge the socket back onto the fleet's channels: first the one-time
+/// INIT outcome, then replies until EOF or error — which, unless the
+/// teardown was deliberate, becomes the lane's death notice.
+fn read_loop(
+    mut stream: UnixStream,
+    widx: usize,
+    res: mpsc::Sender<ResMsg>,
+    init: mpsc::Sender<(usize, Result<(), String>)>,
+    closing: Arc<AtomicBool>,
+) {
+    match transport::read_init(&mut stream) {
+        Ok(Some(outcome)) => {
+            let failed = outcome.is_err();
+            let _ = init.send((widx, outcome));
+            if failed {
+                // the child exits after reporting a failed init; no death
+                // notice — spawn_workers surfaces the init error itself
+                return;
+            }
+        }
+        Ok(None) => {
+            let _ = init.send((widx, Err("worker process exited during init".into())));
+            return;
+        }
+        Err(e) => {
+            let _ = init.send((widx, Err(format!("worker process init failed: {e:#}"))));
+            return;
+        }
+    }
+    // release the init channel so the fleet sees a disconnect (not a
+    // hang) if any *other* worker dies before reporting
+    drop(init);
+    loop {
+        match transport::read_reply(&mut stream) {
+            Ok(Some((id, out))) => {
+                if res.send((id, widx, out)).is_err() {
+                    return; // fleet dropped
+                }
+            }
+            Ok(None) => {
+                if !closing.load(Ordering::SeqCst) {
+                    let _ = res.send((
+                        DEATH_NOTICE,
+                        widx,
+                        Err("worker process exited unexpectedly (socket closed)".into()),
+                    ));
+                }
+                return;
+            }
+            Err(e) => {
+                if !closing.load(Ordering::SeqCst) {
+                    let _ = res.send((
+                        DEATH_NOTICE,
+                        widx,
+                        Err(format!("worker process connection failed: {e:#}")),
+                    ));
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// The `mpq worker` subprocess entrypoint: connect back to the
+/// coordinator, handshake, build the backend state, then serve framed
+/// jobs until the coordinator half-closes the socket.
+///
+/// Injected `panic@` faults are deliberately **uncaught** here: a process
+/// lane's panic is a process death (exit 101 → socket EOF → death notice
+/// at the coordinator), which is precisely how supervision generalizes
+/// from caught thread panics to SIGKILL-grade failures.
+pub(super) fn run_worker(
+    socket: &Path,
+    dir: &Path,
+    lane: usize,
+    compile_fault: Option<usize>,
+) -> Result<()> {
+    let mut stream = UnixStream::connect(socket)
+        .with_context(|| format!("connecting to coordinator socket {}", socket.display()))?;
+    proto::handshake(&mut stream).context("coordinator handshake")?;
+    let opens = Arc::new(AtomicUsize::new(0));
+    let cf = compile_fault.map(|nth| (nth, Arc::new(AtomicUsize::new(0))));
+    let mut state = match worker::init_state(dir, opens, cf) {
+        Ok(state) => {
+            transport::write_init(&mut stream, &Ok(()))?;
+            state
+        }
+        Err(e) => {
+            transport::write_init(&mut stream, &Err(format!("{e:#}")))?;
+            return Ok(());
+        }
+    };
+    while let Some((id, req, d)) = transport::read_job(&mut stream)? {
+        if d.slow_ms > 0 {
+            std::thread::sleep(Duration::from_millis(d.slow_ms));
+        }
+        if d.stall {
+            // block far past any configured deadline; the collect watchdog
+            // converts this lane into a death and reaps the process
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+        if d.panic {
+            panic!("injected fault: worker panic on probe {} (lane {lane})", d.probes);
+        }
+        let out = if d.upload_fail {
+            worker::inject_upload_failure(
+                &mut state,
+                &req,
+                format!("injected fault: upload failure on request {} (lane {lane})", d.uploads),
+            )
+        } else {
+            worker::serve(&mut state, req)
+        };
+        transport::write_reply(&mut stream, id, &out.map_err(|e| format!("{e:#}")))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,1090 @@
+//! Wire codec for process-backed fleet lanes: the coordinator↔worker
+//! job/reply surface as MPQJ checksummed frames over a byte stream.
+//!
+//! Every message is one **control frame** ([`crate::store::write_frame`]
+//! format: `u32 len · u16 kind · u16 reserved · u64 digest · u64 checksum ·
+//! payload`) whose digest carries the job id, optionally followed by
+//! out-of-line **bulk frames** carrying framed MPQT tensor payloads.  The
+//! control payload opens with a `u32` bulk-frame count, so the reader knows
+//! exactly how many BULK frames to consume before the next message — no
+//! sentinels, no lookahead.
+//!
+//! Tensors below [`CONTROL_BULK_THRESHOLD`] ride inline in the control
+//! frame; larger ones are shipped as one BULK frame each, in field order.
+//! The threshold keeps control messages small (cheap checksums, bounded
+//! copies) while large shard uploads stream as their own checksummed
+//! frames.  Floats cross the wire as `to_bits` little-endian words, so
+//! every partial (SQNR sums, Welford states, FIT raws) is **bit-exact**
+//! end to end — the property that keeps process lanes byte-equal to
+//! serial.
+//!
+//! Message kinds live at 64.. — disjoint from the journal's record kinds
+//! (1..=4) and the serve control plane (16..48), so a frame can never be
+//! mistaken for the wrong plane.
+
+use super::{FitShard, Partial, ProbeKind, Request, WorkerStats};
+use crate::adaround::{AdaRoundCfg, AdaRoundJob};
+use crate::engine::StreamingSqnr;
+use crate::metrics::{PearsonAccum, StreamingTaskMetric};
+use crate::model::QuantConfig;
+use crate::quant::ActRanges;
+use crate::sensitivity::FitBatchRaw;
+use crate::store;
+use crate::tensor::{io as tio, Tensor};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// Tensor payloads at or below this many encoded bytes ride inline in the
+/// control frame; larger ones ship as out-of-line BULK frames.  16 KiB
+/// keeps every non-tensor control message a single small frame while shard
+/// uploads (hundreds of KiB per batch) stream as their own frames.
+pub(super) const CONTROL_BULK_THRESHOLD: usize = 16 * 1024;
+
+/// Per-frame size cap on the worker lane (1 GiB).  This is a data plane —
+/// unlike the serve control plane's 1 MiB cap, shard uploads are the whole
+/// point — but a bound still turns a corrupt length word into an error
+/// instead of an allocation bomb.
+pub(super) const MAX_IPC_FRAME: usize = 1 << 30;
+
+/// Frame kinds for the worker lane (64.. — disjoint from journal kinds
+/// 1..=4 and serve kinds 16..48).
+mod wire {
+    /// coordinator → worker: one job; digest = job id
+    pub const JOB: u16 = 64;
+    /// worker → coordinator: one reply; digest = job id
+    pub const REPLY: u16 = 65;
+    /// either direction: out-of-line MPQT tensor payload; digest = job id
+    pub const BULK: u16 = 66;
+    /// worker → coordinator: init outcome, sent once after the handshake
+    pub const INIT: u16 = 67;
+}
+
+fn kind_name(kind: u16) -> &'static str {
+    match kind {
+        wire::JOB => "JOB",
+        wire::REPLY => "REPLY",
+        wire::BULK => "BULK",
+        wire::INIT => "INIT",
+        _ => "UNKNOWN",
+    }
+}
+
+/// Per-job fault instructions, computed **coordinator-side** from the
+/// fleet-shared [`super::fault::FaultState`] and shipped with each job.
+/// Deciding at the parent preserves the fault plan's global semantics —
+/// one-shot faults deplete across the whole fleet, recurring faults re-arm
+/// per incarnation — which a child process (fresh counters every respawn)
+/// could not reproduce on its own.  `probes`/`uploads` carry the lane's
+/// per-incarnation event ordinals so injected panic messages match the
+/// thread lanes' byte for byte.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(super) struct FaultDirective {
+    pub slow_ms: u64,
+    pub stall: bool,
+    pub panic: bool,
+    pub upload_fail: bool,
+    pub probes: u64,
+    pub uploads: u64,
+}
+
+// ---------------------------------------------------------------------------
+// primitive encoder / decoder
+// ---------------------------------------------------------------------------
+
+/// Control-frame body under construction, plus the out-of-line bulk
+/// payloads referenced by it (in field order).
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+    bulk: Vec<Vec<u8>>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, v: &str) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+    fn u8s(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    /// One tensor slot: MPQT-encoded, inline (`tag 0`) when small, as the
+    /// next BULK frame (`tag 1`) when over [`CONTROL_BULK_THRESHOLD`].
+    fn tensor(&mut self, t: &Tensor) {
+        let raw = tio::encode_tensors(std::slice::from_ref(t));
+        if raw.len() <= CONTROL_BULK_THRESHOLD {
+            self.u8(0);
+            self.u8s(&raw);
+        } else {
+            self.u8(1);
+            self.bulk.push(raw);
+        }
+    }
+    fn tensors(&mut self, ts: &[Tensor]) {
+        self.usize(ts.len());
+        for t in ts {
+            self.tensor(t);
+        }
+    }
+}
+
+/// Cursor over a received control-frame body plus its bulk payloads.
+struct Dec {
+    buf: Vec<u8>,
+    pos: usize,
+    bulk: std::vec::IntoIter<Vec<u8>>,
+}
+
+impl Dec {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "truncated control frame: need {n} bytes at offset {} of {}",
+                    self.pos,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b} in control frame"),
+        }
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("usize field overflows this platform")
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)
+            .context("string field is not UTF-8")?
+            .to_string())
+    }
+    fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn tensor(&mut self) -> Result<Tensor> {
+        let raw = match self.u8()? {
+            0 => self.u8s()?,
+            1 => self
+                .bulk
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("control frame references a missing BULK frame"))?,
+            t => bail!("invalid tensor slot tag {t}"),
+        };
+        let (t, used) = tio::decode_tensor(&raw)?
+            .ok_or_else(|| anyhow::anyhow!("empty MPQT payload in tensor slot"))?;
+        if used != raw.len() {
+            bail!("trailing bytes after MPQT tensor ({used} of {} used)", raw.len());
+        }
+        Ok(t)
+    }
+    fn tensors(&mut self) -> Result<Vec<Tensor>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.tensor()).collect()
+    }
+    /// Assert the whole message was consumed — a length mismatch means the
+    /// two ends disagree on the schema, which must fail loudly.
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "control frame has {} undecoded trailing bytes",
+                self.buf.len() - self.pos
+            );
+        }
+        if self.bulk.len() != 0 {
+            bail!("{} unconsumed BULK frames after message", self.bulk.len());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one message: the control frame (payload = `u32` bulk count + body)
+/// followed by its BULK frames, all stamped with `id` in the digest field.
+fn write_msg(w: &mut impl Write, kind: u16, id: u64, enc: Enc) -> Result<()> {
+    let mut payload = Vec::with_capacity(4 + enc.buf.len());
+    payload.extend_from_slice(&(enc.bulk.len() as u32).to_le_bytes());
+    payload.extend_from_slice(&enc.buf);
+    if payload.len() > MAX_IPC_FRAME {
+        bail!(
+            "{} control frame is {} bytes, over the {MAX_IPC_FRAME}-byte cap",
+            kind_name(kind),
+            payload.len()
+        );
+    }
+    store::write_frame(w, kind, id, &payload)
+        .with_context(|| format!("writing {} frame", kind_name(kind)))?;
+    for b in &enc.bulk {
+        if b.len() > MAX_IPC_FRAME {
+            bail!("BULK frame is {} bytes, over the {MAX_IPC_FRAME}-byte cap", b.len());
+        }
+        store::write_frame(w, wire::BULK, id, b).context("writing BULK frame")?;
+    }
+    Ok(())
+}
+
+/// Read one message of the expected kind; `Ok(None)` on clean EOF before
+/// any frame.  Consumes exactly the declared BULK frames, validating that
+/// each carries the control frame's job id.
+fn read_msg(r: &mut impl Read, want: u16) -> Result<Option<(u64, Dec)>> {
+    let Some(frame) = store::read_frame(r, MAX_IPC_FRAME)
+        .with_context(|| format!("reading {} frame", kind_name(want)))?
+    else {
+        return Ok(None);
+    };
+    if frame.kind != want {
+        bail!(
+            "expected a {} frame, got {} (kind {})",
+            kind_name(want),
+            kind_name(frame.kind),
+            frame.kind
+        );
+    }
+    if frame.payload.len() < 4 {
+        bail!("{} control frame shorter than its bulk-count word", kind_name(want));
+    }
+    let nbulk = u32::from_le_bytes(frame.payload[..4].try_into().unwrap()) as usize;
+    let mut bulk = Vec::with_capacity(nbulk);
+    for i in 0..nbulk {
+        let Some(b) = store::read_frame(r, MAX_IPC_FRAME).context("reading BULK frame")? else {
+            bail!("stream ended at BULK frame {i} of {nbulk}");
+        };
+        if b.kind != wire::BULK {
+            bail!("expected a BULK frame, got {} (kind {})", kind_name(b.kind), b.kind);
+        }
+        if b.digest != frame.digest {
+            bail!(
+                "BULK frame for job {} interleaved into job {}'s message",
+                b.digest,
+                frame.digest
+            );
+        }
+        bulk.push(b.payload);
+    }
+    Ok(Some((
+        frame.digest,
+        Dec { buf: frame.payload, pos: 4, bulk: bulk.into_iter() },
+    )))
+}
+
+// ---------------------------------------------------------------------------
+// sub-codecs
+// ---------------------------------------------------------------------------
+
+fn enc_opt_u8s(e: &mut Enc, v: &[Option<u8>]) {
+    e.u32(v.len() as u32);
+    for x in v {
+        match x {
+            Some(b) => {
+                e.u8(1);
+                e.u8(*b);
+            }
+            None => {
+                e.u8(0);
+                e.u8(0);
+            }
+        }
+    }
+}
+
+fn dec_opt_u8s(d: &mut Dec) -> Result<Vec<Option<u8>>> {
+    let n = d.u32()? as usize;
+    (0..n)
+        .map(|_| {
+            let flag = d.u8()?;
+            let v = d.u8()?;
+            match flag {
+                0 => Ok(None),
+                1 => Ok(Some(v)),
+                f => bail!("invalid Option flag {f}"),
+            }
+        })
+        .collect()
+}
+
+fn enc_cfg(e: &mut Enc, cfg: &QuantConfig) {
+    enc_opt_u8s(e, &cfg.act);
+    enc_opt_u8s(e, &cfg.w);
+}
+
+fn dec_cfg(d: &mut Dec) -> Result<QuantConfig> {
+    Ok(QuantConfig { act: dec_opt_u8s(d)?, w: dec_opt_u8s(d)? })
+}
+
+/// Sorted by key so the encoding is deterministic (hash order is not).
+fn enc_overrides(e: &mut Enc, ov: &HashMap<usize, Tensor>) {
+    let mut keys: Vec<usize> = ov.keys().copied().collect();
+    keys.sort_unstable();
+    e.usize(keys.len());
+    for k in keys {
+        e.usize(k);
+        e.tensor(&ov[&k]);
+    }
+}
+
+fn dec_overrides(d: &mut Dec) -> Result<HashMap<usize, Tensor>> {
+    let n = d.usize()?;
+    let mut out = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let k = d.usize()?;
+        out.insert(k, d.tensor()?);
+    }
+    Ok(out)
+}
+
+fn enc_ranges(e: &mut Enc, r: &ActRanges) {
+    e.u32(r.minmax.len() as u32);
+    for &(lo, hi) in &r.minmax {
+        e.f32(lo);
+        e.f32(hi);
+    }
+    e.u32(r.mse.len() as u32);
+    for per_layer in &r.mse {
+        e.u32(per_layer.len() as u32);
+        for per_bits in per_layer {
+            e.f64s(per_bits);
+        }
+    }
+    e.u8s(&r.bits);
+    e.f64s(&r.ratios);
+}
+
+fn dec_ranges(d: &mut Dec) -> Result<ActRanges> {
+    let n = d.u32()? as usize;
+    let minmax = (0..n)
+        .map(|_| Ok((d.f32()?, d.f32()?)))
+        .collect::<Result<Vec<_>>>()?;
+    let n = d.u32()? as usize;
+    let mse = (0..n)
+        .map(|_| {
+            let m = d.u32()? as usize;
+            (0..m).map(|_| d.f64s()).collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ActRanges { minmax, mse, bits: d.u8s()?, ratios: d.f64s()? })
+}
+
+/// Sorted by bit-width key for a deterministic encoding.
+fn enc_w_scales(e: &mut Enc, ws: &HashMap<u8, Vec<Vec<f32>>>) {
+    let mut keys: Vec<u8> = ws.keys().copied().collect();
+    keys.sort_unstable();
+    e.u32(keys.len() as u32);
+    for k in keys {
+        e.u8(k);
+        let per_layer = &ws[&k];
+        e.u32(per_layer.len() as u32);
+        for v in per_layer {
+            e.f32s(v);
+        }
+    }
+}
+
+fn dec_w_scales(d: &mut Dec) -> Result<HashMap<u8, Vec<Vec<f32>>>> {
+    let n = d.u32()? as usize;
+    let mut out = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let k = d.u8()?;
+        let m = d.u32()? as usize;
+        let per_layer = (0..m).map(|_| d.f32s()).collect::<Result<Vec<_>>>()?;
+        out.insert(k, per_layer);
+    }
+    Ok(out)
+}
+
+fn enc_adaround(e: &mut Enc, j: &AdaRoundJob) {
+    e.str(&j.exe);
+    e.tensors(&j.taps);
+    e.usize(j.param_idx);
+    e.usize(j.bias_idx);
+    e.f32s(&j.scales);
+    e.usize(j.channel_axis);
+    e.u8(j.bits);
+    e.usize(j.cfg.steps);
+    e.f32(j.cfg.lr);
+    e.f32(j.cfg.lambda);
+    e.f32(j.cfg.beta_hi);
+    e.f32(j.cfg.beta_lo);
+    e.usize(j.cfg.tap_batches);
+    e.u64(j.cfg.seed);
+}
+
+fn dec_adaround(d: &mut Dec) -> Result<AdaRoundJob> {
+    Ok(AdaRoundJob {
+        exe: d.str()?,
+        taps: d.tensors()?,
+        param_idx: d.usize()?,
+        bias_idx: d.usize()?,
+        scales: d.f32s()?,
+        channel_axis: d.usize()?,
+        bits: d.u8()?,
+        cfg: AdaRoundCfg {
+            steps: d.usize()?,
+            lr: d.f32()?,
+            lambda: d.f32()?,
+            beta_hi: d.f32()?,
+            beta_lo: d.f32()?,
+            tap_batches: d.usize()?,
+            seed: d.u64()?,
+        },
+    })
+}
+
+fn enc_directive(e: &mut Enc, d: &FaultDirective) {
+    e.u64(d.slow_ms);
+    e.bool(d.stall);
+    e.bool(d.panic);
+    e.bool(d.upload_fail);
+    e.u64(d.probes);
+    e.u64(d.uploads);
+}
+
+fn dec_directive(d: &mut Dec) -> Result<FaultDirective> {
+    Ok(FaultDirective {
+        slow_ms: d.u64()?,
+        stall: d.bool()?,
+        panic: d.bool()?,
+        upload_fail: d.bool()?,
+        probes: d.u64()?,
+        uploads: d.u64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// request codec
+// ---------------------------------------------------------------------------
+
+fn enc_request(e: &mut Enc, req: &Request) {
+    match req {
+        Request::Calibrate { model, ranges, w_scales } => {
+            e.u8(0);
+            e.str(model);
+            enc_ranges(e, ranges);
+            enc_w_scales(e, w_scales);
+        }
+        Request::LoadSet { model, key, batches, labels, first_batch } => {
+            e.u8(1);
+            e.str(model);
+            e.u64(*key);
+            e.tensors(batches);
+            e.tensor(labels);
+            e.usize(*first_batch);
+        }
+        Request::BuildReference { model, set } => {
+            e.u8(2);
+            e.str(model);
+            e.u64(*set);
+        }
+        Request::InstallReference { model, set, batches } => {
+            e.u8(3);
+            e.str(model);
+            e.u64(*set);
+            e.tensors(batches);
+        }
+        Request::FetchReference { model, set } => {
+            e.u8(4);
+            e.str(model);
+            e.u64(*set);
+        }
+        Request::Probe { model, set, kind, cfg, overrides } => {
+            e.u8(5);
+            e.str(model);
+            e.u64(*set);
+            e.u8(match kind {
+                ProbeKind::Sqnr => 0,
+                ProbeKind::Metric => 1,
+            });
+            enc_cfg(e, cfg);
+            enc_overrides(e, overrides);
+        }
+        Request::Fit { model, set, qp } => {
+            e.u8(6);
+            e.str(model);
+            e.u64(*set);
+            e.tensor(qp);
+        }
+        Request::AdaRound { model, job } => {
+            e.u8(7);
+            e.str(model);
+            enc_adaround(e, job);
+        }
+        Request::Detach { model } => {
+            e.u8(8);
+            e.str(model);
+        }
+        Request::Stats => e.u8(9),
+    }
+}
+
+fn dec_request(d: &mut Dec) -> Result<Request> {
+    Ok(match d.u8()? {
+        0 => Request::Calibrate {
+            model: d.str()?.into(),
+            ranges: dec_ranges(d)?,
+            w_scales: dec_w_scales(d)?,
+        },
+        1 => Request::LoadSet {
+            model: d.str()?.into(),
+            key: d.u64()?,
+            batches: d.tensors()?,
+            labels: d.tensor()?,
+            first_batch: d.usize()?,
+        },
+        2 => Request::BuildReference { model: d.str()?.into(), set: d.u64()? },
+        3 => Request::InstallReference {
+            model: d.str()?.into(),
+            set: d.u64()?,
+            batches: d.tensors()?,
+        },
+        4 => Request::FetchReference { model: d.str()?.into(), set: d.u64()? },
+        5 => Request::Probe {
+            model: d.str()?.into(),
+            set: d.u64()?,
+            kind: match d.u8()? {
+                0 => ProbeKind::Sqnr,
+                1 => ProbeKind::Metric,
+                k => bail!("invalid probe kind {k}"),
+            },
+            cfg: Arc::new(dec_cfg(d)?),
+            overrides: Arc::new(dec_overrides(d)?),
+        },
+        6 => Request::Fit {
+            model: d.str()?.into(),
+            set: d.u64()?,
+            qp: Arc::new(d.tensor()?),
+        },
+        7 => Request::AdaRound { model: d.str()?.into(), job: Arc::new(dec_adaround(d)?) },
+        8 => Request::Detach { model: d.str()?.into() },
+        9 => Request::Stats,
+        t => bail!("invalid request tag {t}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// reply codec
+// ---------------------------------------------------------------------------
+
+fn enc_reply(e: &mut Enc, res: &Result<Partial, String>) {
+    match res {
+        Err(msg) => {
+            e.u8(0);
+            e.str(msg);
+        }
+        Ok(Partial::Sqnr(s)) => {
+            e.u8(1);
+            let (seq, parts) = s.to_parts();
+            e.u64(seq);
+            e.usize(parts.len());
+            for (idx, acc, n) in parts {
+                e.u64(idx);
+                e.f64(acc);
+                e.usize(n);
+            }
+        }
+        Ok(Partial::Task(t)) => {
+            e.u8(2);
+            match t {
+                StreamingTaskMetric::Top1 { hits, n } => {
+                    e.u8(0);
+                    e.usize(*hits);
+                    e.usize(*n);
+                }
+                StreamingTaskMetric::F1 { tp, fp, fnn } => {
+                    e.u8(1);
+                    e.f64(*tp);
+                    e.f64(*fp);
+                    e.f64(*fnn);
+                }
+                StreamingTaskMetric::Pearson(p) => {
+                    e.u8(2);
+                    for v in p.raw() {
+                        e.f64(v);
+                    }
+                }
+                StreamingTaskMetric::Miou { classes, inter, union } => {
+                    e.u8(3);
+                    e.usize(*classes);
+                    e.f64s(inter);
+                    e.f64s(union);
+                }
+            }
+        }
+        Ok(Partial::Fit(f)) => {
+            e.u8(3);
+            e.usize(f.first_batch);
+            e.usize(f.raws.len());
+            for r in &f.raws {
+                e.f32s(&r.wgrad2);
+                e.f32s(&r.agrad2);
+                e.f32s(&r.aerr2);
+            }
+        }
+        Ok(Partial::Batches { first_batch, batches }) => {
+            e.u8(4);
+            e.usize(*first_batch);
+            e.tensors(batches);
+        }
+        Ok(Partial::Rounded(t)) => {
+            e.u8(5);
+            e.tensor(t);
+        }
+        Ok(Partial::Stats(s)) => {
+            e.u8(6);
+            e.usize(s.compiled);
+            e.usize(s.models_open);
+        }
+        Ok(Partial::Unit) => e.u8(7),
+    }
+}
+
+fn dec_reply(d: &mut Dec) -> Result<Result<Partial, String>> {
+    Ok(match d.u8()? {
+        0 => Err(d.str()?),
+        1 => {
+            let seq = d.u64()?;
+            let n = d.usize()?;
+            let parts = (0..n)
+                .map(|_| Ok((d.u64()?, d.f64()?, d.usize()?)))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Partial::Sqnr(StreamingSqnr::from_parts(seq, parts)))
+        }
+        2 => Ok(Partial::Task(match d.u8()? {
+            0 => StreamingTaskMetric::Top1 { hits: d.usize()?, n: d.usize()? },
+            1 => StreamingTaskMetric::F1 { tp: d.f64()?, fp: d.f64()?, fnn: d.f64()? },
+            2 => {
+                let mut raw = [0f64; 6];
+                for v in &mut raw {
+                    *v = d.f64()?;
+                }
+                StreamingTaskMetric::Pearson(PearsonAccum::from_raw(raw))
+            }
+            3 => StreamingTaskMetric::Miou {
+                classes: d.usize()?,
+                inter: d.f64s()?,
+                union: d.f64s()?,
+            },
+            t => bail!("invalid task accumulator tag {t}"),
+        })),
+        3 => {
+            let first_batch = d.usize()?;
+            let n = d.usize()?;
+            let raws = (0..n)
+                .map(|_| {
+                    Ok(FitBatchRaw {
+                        wgrad2: d.f32s()?,
+                        agrad2: d.f32s()?,
+                        aerr2: d.f32s()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Partial::Fit(FitShard { first_batch, raws }))
+        }
+        4 => Ok(Partial::Batches { first_batch: d.usize()?, batches: d.tensors()? }),
+        5 => Ok(Partial::Rounded(d.tensor()?)),
+        6 => Ok(Partial::Stats(WorkerStats { compiled: d.usize()?, models_open: d.usize()? })),
+        7 => Ok(Partial::Unit),
+        t => bail!("invalid reply tag {t}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// public message API
+// ---------------------------------------------------------------------------
+
+/// Ship one job (request + fault directive) under `id`.
+pub(super) fn write_job(
+    w: &mut impl Write,
+    id: u64,
+    req: &Request,
+    d: &FaultDirective,
+) -> Result<()> {
+    let mut e = Enc::default();
+    enc_directive(&mut e, d);
+    enc_request(&mut e, req);
+    write_msg(w, wire::JOB, id, e)
+}
+
+/// Receive one job; `Ok(None)` on clean EOF (coordinator closed the lane).
+pub(super) fn read_job(r: &mut impl Read) -> Result<Option<(u64, Request, FaultDirective)>> {
+    let Some((id, mut d)) = read_msg(r, wire::JOB)? else {
+        return Ok(None);
+    };
+    let directive = dec_directive(&mut d)?;
+    let req = dec_request(&mut d)?;
+    d.done()?;
+    Ok(Some((id, req, directive)))
+}
+
+/// Ship one reply under `id`.
+pub(super) fn write_reply(
+    w: &mut impl Write,
+    id: u64,
+    res: &Result<Partial, String>,
+) -> Result<()> {
+    let mut e = Enc::default();
+    enc_reply(&mut e, res);
+    write_msg(w, wire::REPLY, id, e)
+}
+
+/// Receive one reply; `Ok(None)` on clean EOF (worker exited).
+pub(super) fn read_reply(r: &mut impl Read) -> Result<Option<(u64, Result<Partial, String>)>> {
+    let Some((id, mut d)) = read_msg(r, wire::REPLY)? else {
+        return Ok(None);
+    };
+    let res = dec_reply(&mut d)?;
+    d.done()?;
+    Ok(Some((id, res)))
+}
+
+/// Ship the worker's one-time init outcome.
+pub(super) fn write_init(w: &mut impl Write, res: &Result<(), String>) -> Result<()> {
+    let mut e = Enc::default();
+    match res {
+        Ok(()) => e.u8(1),
+        Err(msg) => {
+            e.u8(0);
+            e.str(msg);
+        }
+    }
+    write_msg(w, wire::INIT, 0, e)
+}
+
+/// Receive the init outcome; `Ok(None)` on EOF before it arrived (the
+/// worker process died during init).
+pub(super) fn read_init(r: &mut impl Read) -> Result<Option<Result<(), String>>> {
+    let Some((_, mut d)) = read_msg(r, wire::INIT)? else {
+        return Ok(None);
+    };
+    let res = match d.u8()? {
+        1 => Ok(()),
+        0 => Err(d.str()?),
+        t => bail!("invalid init tag {t}"),
+    };
+    d.done()?;
+    Ok(Some(res))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Encode → decode → re-encode; byte equality proves the decode is a
+    /// faithful inverse (all sub-codecs sort map keys, so the encoding is
+    /// deterministic).
+    fn job_roundtrips(req: Request, d: FaultDirective) -> (u64, Request, FaultDirective) {
+        let mut buf = Vec::new();
+        write_job(&mut buf, 42, &req, &d).unwrap();
+        let mut r: &[u8] = &buf;
+        let (id, got, gd) = read_job(&mut r).unwrap().unwrap();
+        assert!(read_job(&mut r).unwrap().is_none(), "trailing data after message");
+        let mut again = Vec::new();
+        write_job(&mut again, 42, &got, &gd).unwrap();
+        assert_eq!(buf, again, "re-encode of the decoded job differs");
+        assert_eq!(d, gd);
+        (id, got, gd)
+    }
+
+    fn reply_roundtrips(res: Result<Partial, String>) -> Result<Partial, String> {
+        let mut buf = Vec::new();
+        write_reply(&mut buf, 7, &res).unwrap();
+        let mut r: &[u8] = &buf;
+        let (id, got) = read_reply(&mut r).unwrap().unwrap();
+        assert_eq!(id, 7);
+        assert!(read_reply(&mut r).unwrap().is_none());
+        let mut again = Vec::new();
+        write_reply(&mut again, 7, &got).unwrap();
+        assert_eq!(buf, again, "re-encode of the decoded reply differs");
+        got
+    }
+
+    fn tensor(n: usize) -> Tensor {
+        Tensor::from_f32(&[n], (0..n).map(|i| i as f32 * 0.5 - 3.0).collect()).unwrap()
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        let mut w_scales = HashMap::new();
+        w_scales.insert(4u8, vec![vec![0.5f32, 0.25], vec![1.0]]);
+        w_scales.insert(8u8, vec![vec![2.0f32]]);
+        let ranges = ActRanges {
+            minmax: vec![(-1.5, 2.5), (0.0, 1.0)],
+            mse: vec![vec![vec![0.1, 0.2], vec![0.3]], vec![]],
+            bits: vec![4, 8],
+            ratios: vec![0.9, 1.1],
+        };
+        job_roundtrips(
+            Request::Calibrate { model: "m".into(), ranges, w_scales },
+            FaultDirective { slow_ms: 5, probes: 1, ..Default::default() },
+        );
+
+        let (_, got, _) = job_roundtrips(
+            Request::LoadSet {
+                model: "m".into(),
+                key: 1,
+                batches: vec![tensor(8), tensor(8)],
+                labels: tensor(4),
+                first_batch: 3,
+            },
+            FaultDirective::default(),
+        );
+        match got {
+            Request::LoadSet { first_batch, batches, .. } => {
+                assert_eq!(first_batch, 3);
+                assert_eq!(batches.len(), 2);
+            }
+            _ => panic!("wrong variant decoded"),
+        }
+
+        job_roundtrips(
+            Request::BuildReference { model: "m".into(), set: 0 },
+            FaultDirective { upload_fail: true, uploads: 2, ..Default::default() },
+        );
+        job_roundtrips(
+            Request::InstallReference { model: "m".into(), set: 1, batches: vec![tensor(6)] },
+            FaultDirective::default(),
+        );
+        job_roundtrips(
+            Request::FetchReference { model: "m".into(), set: 1 },
+            FaultDirective::default(),
+        );
+
+        let mut overrides = HashMap::new();
+        overrides.insert(2usize, tensor(3));
+        overrides.insert(0usize, tensor(5));
+        job_roundtrips(
+            Request::Probe {
+                model: "m".into(),
+                set: 0,
+                kind: ProbeKind::Metric,
+                cfg: Arc::new(QuantConfig {
+                    act: vec![Some(8), None, Some(4)],
+                    w: vec![None, Some(2)],
+                }),
+                overrides: Arc::new(overrides),
+            },
+            FaultDirective { panic: true, probes: 9, ..Default::default() },
+        );
+
+        job_roundtrips(
+            Request::Fit { model: "m".into(), set: 0, qp: Arc::new(tensor(12)) },
+            FaultDirective::default(),
+        );
+        job_roundtrips(
+            Request::AdaRound {
+                model: "m".into(),
+                job: Arc::new(AdaRoundJob {
+                    exe: "tap.bin".into(),
+                    taps: vec![tensor(10)],
+                    param_idx: 1,
+                    bias_idx: 2,
+                    scales: vec![0.5, 0.25],
+                    channel_axis: 0,
+                    bits: 4,
+                    cfg: AdaRoundCfg {
+                        steps: 100,
+                        lr: 1e-2,
+                        lambda: 0.01,
+                        beta_hi: 20.0,
+                        beta_lo: 2.0,
+                        tap_batches: 4,
+                        seed: 77,
+                    },
+                }),
+            },
+            FaultDirective::default(),
+        );
+        job_roundtrips(Request::Detach { model: "m".into() }, FaultDirective::default());
+        job_roundtrips(Request::Stats, FaultDirective { stall: true, probes: 3, ..Default::default() });
+    }
+
+    #[test]
+    fn every_reply_variant_roundtrips_bit_exact() {
+        reply_roundtrips(Err("worker exploded".into()));
+        // NaN and signed-zero partials must survive bit-exactly: the codec
+        // ships to_bits words, never a float format.
+        let sqnr = StreamingSqnr::from_parts(
+            5,
+            [(0u64, f64::NAN, 4usize), (4, -0.0, 4), (2, 1.5e-300, 4)],
+        );
+        match reply_roundtrips(Ok(Partial::Sqnr(sqnr))) {
+            Ok(Partial::Sqnr(s)) => {
+                let (seq, parts) = s.to_parts();
+                assert_eq!(seq, 5);
+                assert!(parts[0].1.is_nan());
+                assert_eq!(parts[1].0, 2);
+            }
+            _ => panic!("wrong reply decoded"),
+        }
+        reply_roundtrips(Ok(Partial::Task(StreamingTaskMetric::Top1 { hits: 3, n: 9 })));
+        reply_roundtrips(Ok(Partial::Task(StreamingTaskMetric::F1 {
+            tp: 1.0,
+            fp: 0.5,
+            fnn: 0.25,
+        })));
+        reply_roundtrips(Ok(Partial::Task(StreamingTaskMetric::Pearson(
+            PearsonAccum::from_raw([4.0, 0.1, -0.2, 2.0, 3.0, -1.0]),
+        ))));
+        reply_roundtrips(Ok(Partial::Task(StreamingTaskMetric::Miou {
+            classes: 3,
+            inter: vec![1.0, 2.0, 3.0],
+            union: vec![4.0, 5.0, 6.0],
+        })));
+        reply_roundtrips(Ok(Partial::Fit(FitShard {
+            first_batch: 2,
+            raws: vec![FitBatchRaw {
+                wgrad2: vec![0.1, f32::NAN],
+                agrad2: vec![0.2],
+                aerr2: vec![],
+            }],
+        })));
+        reply_roundtrips(Ok(Partial::Batches {
+            first_batch: 1,
+            batches: vec![tensor(4), tensor(2)],
+        }));
+        reply_roundtrips(Ok(Partial::Rounded(tensor(7))));
+        reply_roundtrips(Ok(Partial::Stats(WorkerStats { compiled: 2, models_open: 1 })));
+        reply_roundtrips(Ok(Partial::Unit));
+    }
+
+    #[test]
+    fn large_tensors_ship_as_bulk_frames() {
+        // 5000 f32s ≫ the 16 KiB threshold → exactly one BULK frame.
+        let big = tensor(5000);
+        let mut buf = Vec::new();
+        write_job(
+            &mut buf,
+            3,
+            &Request::Fit { model: "m".into(), set: 0, qp: Arc::new(big.clone()) },
+            &FaultDirective::default(),
+        )
+        .unwrap();
+        // frame-level structure: one JOB control frame + one BULK frame
+        let mut r: &[u8] = &buf;
+        let ctl = store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().unwrap();
+        assert_eq!((ctl.kind, ctl.digest), (wire::JOB, 3));
+        assert!(
+            ctl.payload.len() < CONTROL_BULK_THRESHOLD,
+            "control frame must stay small when tensors go out of line"
+        );
+        let blk = store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().unwrap();
+        assert_eq!((blk.kind, blk.digest), (wire::BULK, 3));
+        assert!(store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().is_none());
+        // and the message-level decode reassembles the tensor bit-exactly
+        let mut r: &[u8] = &buf;
+        let (_, req, _) = read_job(&mut r).unwrap().unwrap();
+        match req {
+            Request::Fit { qp, .. } => {
+                assert_eq!(qp.shape, big.shape);
+                assert_eq!(qp.f32s().unwrap(), big.f32s().unwrap());
+            }
+            _ => panic!("wrong variant decoded"),
+        }
+        // a small tensor stays inline: single frame, no BULK
+        let mut buf = Vec::new();
+        write_job(
+            &mut buf,
+            4,
+            &Request::Fit { model: "m".into(), set: 0, qp: Arc::new(tensor(8)) },
+            &FaultDirective::default(),
+        )
+        .unwrap();
+        let mut r: &[u8] = &buf;
+        store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().unwrap();
+        assert!(store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn init_outcomes_roundtrip() {
+        for res in [Ok(()), Err("runtime failed to start".to_string())] {
+            let mut buf = Vec::new();
+            write_init(&mut buf, &res).unwrap();
+            let mut r: &[u8] = &buf;
+            assert_eq!(read_init(&mut r).unwrap().unwrap(), res);
+            assert!(read_init(&mut r).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_and_truncation_fail_loudly() {
+        let mut buf = Vec::new();
+        write_reply(&mut buf, 1, &Ok(Partial::Unit)).unwrap();
+        let mut r: &[u8] = &buf;
+        let err = read_job(&mut r).unwrap_err().to_string();
+        assert!(err.contains("JOB") && err.contains("REPLY"), "{err}");
+
+        let mut buf = Vec::new();
+        write_job(&mut buf, 1, &Request::Stats, &FaultDirective::default()).unwrap();
+        let mut r: &[u8] = &buf[..buf.len() - 1];
+        assert!(read_job(&mut r).is_err(), "truncated frame must error, not EOF");
+    }
+}

@@ -33,7 +33,7 @@ use crate::sensitivity;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -69,11 +69,35 @@ enum Slot {
     Failed(String),
 }
 
-struct WorkerState {
+/// The per-incarnation serving state: one private runtime plus the lazy
+/// per-model slot map.  Shared between the thread lanes (built inline in
+/// [`worker_main`]) and the process lanes (built by the `mpq worker`
+/// subprocess via [`init_state`]).
+pub(super) struct WorkerState {
     rt: Rc<Runtime>,
     manifest: Manifest,
     models: HashMap<String, Slot>,
     opens: Arc<AtomicUsize>,
+}
+
+/// Build a worker incarnation's backend state: load the manifest, stand up
+/// the private runtime, and arm an optional injected compile fault
+/// (`(1-based cache-miss ordinal, fired-counter)`).  Thread lanes pass the
+/// fleet-shared fault state's arming; the `mpq worker` subprocess passes
+/// the ordinal it received on its command line with a process-local
+/// counter (compile-fire telemetry stays child-side — documented in the
+/// module docs of [`super`]).
+pub(super) fn init_state(
+    dir: &Path,
+    opens: Arc<AtomicUsize>,
+    compile_fault: Option<(usize, Arc<AtomicUsize>)>,
+) -> Result<WorkerState> {
+    let manifest = Manifest::load(dir)?;
+    let rt = Rc::new(Runtime::for_manifest(&manifest)?);
+    if let Some((nth, counter)) = compile_fault {
+        rt.inject_compile_fault(nth, counter);
+    }
+    Ok(WorkerState { rt, manifest, models: HashMap::new(), opens })
 }
 
 fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
@@ -102,22 +126,18 @@ pub(super) fn worker_main(
     // fleet serve models it has never seen at spawn time.
     let built = std::panic::catch_unwind({
         let faults = faults.clone();
-        move || -> Result<(Manifest, Rc<Runtime>)> {
-            let manifest = Manifest::load(&dir)?;
-            let rt = Rc::new(Runtime::for_manifest(&manifest)?);
-            if let Some(nth) = faults.arm_compile(lane) {
-                rt.inject_compile_fault(nth, faults.injected_counter());
-            }
-            Ok((manifest, rt))
+        move || {
+            let cf = faults.arm_compile(lane).map(|n| (n, faults.injected_counter()));
+            init_state(&dir, opens, cf)
         }
     });
     let mut state = match built {
-        Ok(Ok((manifest, rt))) => {
+        Ok(Ok(state)) => {
             let _ = init.send((widx, Ok(())));
             // release the init channel so the fleet sees a disconnect (not
             // a hang) if any *other* worker dies before reporting
             drop(init);
-            WorkerState { rt, manifest, models: HashMap::new(), opens }
+            state
         }
         Ok(Err(e)) => {
             let _ = init.send((widx, Err(format!("{e:#}"))));
@@ -193,7 +213,11 @@ pub(super) fn worker_main(
 /// target shard slot is poisoned so the first *tracked* job that touches
 /// it surfaces the root cause (`LoadSet`/`BuildReference` are
 /// fire-and-forget); a tracked `InstallReference` fails directly.
-fn inject_upload_failure(state: &mut WorkerState, req: &Request, msg: String) -> Result<Partial> {
+pub(super) fn inject_upload_failure(
+    state: &mut WorkerState,
+    req: &Request,
+    msg: String,
+) -> Result<Partial> {
     let WorkerState { rt, manifest, models, opens } = state;
     match req {
         Request::LoadSet { model, key, .. } | Request::BuildReference { model, set: key, .. } => {
@@ -242,7 +266,7 @@ fn shard(m: &WorkerModel, key: SetKey) -> Result<&Shard> {
     }
 }
 
-fn serve(state: &mut WorkerState, req: Request) -> Result<Partial> {
+pub(super) fn serve(state: &mut WorkerState, req: Request) -> Result<Partial> {
     let WorkerState { rt, manifest, models, opens } = state;
     match req {
         Request::Calibrate { model, ranges, w_scales } => {

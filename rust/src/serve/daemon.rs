@@ -51,7 +51,8 @@ use super::proto::{self, msg};
 pub struct ServeCfg {
     /// artifacts directory (manifest + model binaries + datasets)
     pub dir: PathBuf,
-    /// Unix socket path; a stale file is replaced on startup
+    /// Unix socket path; a stale file is replaced on startup, but a
+    /// socket with a live listener behind it refuses the start
     pub socket: PathBuf,
     /// job records, journals and result payloads live here
     pub state_dir: PathBuf,
@@ -191,7 +192,7 @@ pub fn run(cfg: ServeCfg) -> Result<()> {
     fleet.set_max_idle(cfg.max_idle);
     let (jobs, next_id) = load_jobs(&cfg.state_dir)?;
 
-    let _ = std::fs::remove_file(&cfg.socket);
+    claim_socket(&cfg.socket)?;
     let listener = UnixListener::bind(&cfg.socket)
         .with_context(|| format!("binding {}", cfg.socket.display()))?;
     let (ctl_tx, ctl_rx): (Sender<Ctl>, Receiver<Ctl>) = channel();
@@ -265,6 +266,7 @@ impl Daemon {
                 let _ = reply.send(r);
             }
             Ctl::Status { reply } => {
+                self.prune_subs();
                 let _ = reply.send(self.status_json());
             }
             Ctl::Cancel { job, reply } => {
@@ -320,7 +322,7 @@ impl Daemon {
         }
         self.broadcast(
             id,
-            proto::encode(
+            encode_or_err(
                 msg::EVENT,
                 id,
                 &Json::Obj(vec![("cancelled".into(), Json::Bool(true))]),
@@ -339,19 +341,19 @@ impl Daemon {
         match state {
             JobState::Done => {
                 if let Some(payload) = self.result_payload(id) {
-                    let _ = tx.send(proto::encode(msg::RESULT, id, &payload));
+                    let _ = tx.send(encode_or_err(msg::RESULT, id, &payload));
                 }
             }
             JobState::Failed => {
                 let err = self.jobs[&id].error.clone().unwrap_or_default();
-                let _ = tx.send(proto::encode(
+                let _ = tx.send(encode_or_err(
                     msg::ERR,
                     id,
                     &Json::Obj(vec![("error".into(), Json::Str(err))]),
                 ));
             }
             JobState::Cancelled => {
-                let _ = tx.send(proto::encode(
+                let _ = tx.send(encode_or_err(
                     msg::EVENT,
                     id,
                     &Json::Obj(vec![("cancelled".into(), Json::Bool(true))]),
@@ -387,7 +389,7 @@ impl Daemon {
         self.sched_log.push(format!("{id}:{}", phase.label()));
         self.broadcast(
             id,
-            proto::encode(
+            encode_or_err(
                 msg::EVENT,
                 id,
                 &Json::Obj(vec![("phase".into(), Json::Str(phase.label().into()))]),
@@ -422,7 +424,7 @@ impl Daemon {
         }
         let journal = Rc::new(journal);
         journal.set_notifier(move |n, kind| {
-            let bytes = proto::encode(
+            let bytes = encode_or_err(
                 msg::EVENT,
                 id,
                 &Json::Obj(vec![
@@ -474,7 +476,7 @@ impl Daemon {
             let _ = std::fs::remove_file(p);
         }
         if let Some(payload) = self.result_payload(id) {
-            self.broadcast(id, proto::encode(msg::RESULT, id, &payload));
+            self.broadcast(id, encode_or_err(msg::RESULT, id, &payload));
         }
         self.jobs.get_mut(&id).unwrap().subs.borrow_mut().clear();
     }
@@ -494,7 +496,7 @@ impl Daemon {
         }
         self.broadcast(
             id,
-            proto::encode(
+            encode_or_err(
                 msg::ERR,
                 id,
                 &Json::Obj(vec![("error".into(), Json::Str(err.to_string()))]),
@@ -527,9 +529,24 @@ impl Daemon {
         }
     }
 
+    /// Fan one encoded frame out to a job's subscribers, pruning every
+    /// channel whose receiving connection is gone.
     fn broadcast(&self, id: u64, bytes: Vec<u8>) {
         if let Some(j) = self.jobs.get(&id) {
             j.subs.borrow_mut().retain(|tx| tx.send(bytes.clone()).is_ok());
+        }
+    }
+
+    /// Reap subscribers whose connection is gone without waiting for the
+    /// next event: a zero-length probe goes down each channel.  A live
+    /// forwarding loop peeks its socket and keeps going; one whose peer
+    /// hung up exits, dropping its receiver, so the *next* probe's send
+    /// errors and the channel is pruned.  Detection is two-phase, but a
+    /// disconnected `watch` client can no longer park its channel and
+    /// queued frames on a job for the job's lifetime.
+    fn prune_subs(&self) {
+        for j in self.jobs.values() {
+            j.subs.borrow_mut().retain(|tx| tx.send(Vec::new()).is_ok());
         }
     }
 
@@ -567,6 +584,7 @@ impl Daemon {
                     ("state".into(), Json::Str(j.state.label().into())),
                     ("phase".into(), Json::Str(phase.into())),
                     ("priority".into(), Json::Num(j.policy.priority as f64)),
+                    ("subscribers".into(), Json::Num(j.subs.borrow().len() as f64)),
                     (
                         "journal".into(),
                         Json::Obj(vec![
@@ -632,6 +650,55 @@ impl Daemon {
     }
 }
 
+/// Claim the socket path before binding.  A leftover file is probed, not
+/// blindly unlinked: if anything accepts a connection there — a live
+/// `mpqd` (answers the handshake) or any other listener — starting a
+/// second daemon would silently strand the first one's clients, so we
+/// refuse.  Only a dead socket (nothing accepting) is stale and safe to
+/// remove.
+fn claim_socket(path: &Path) -> Result<()> {
+    if !path.exists() {
+        return Ok(());
+    }
+    match UnixStream::connect(path) {
+        Ok(mut peer) => {
+            let _ = peer.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+            if proto::handshake(&mut peer).is_ok() {
+                bail!(
+                    "a live mpqd already serves {} — refusing to start a second \
+                     daemon on the same socket (shut it down first, or pick \
+                     another --socket)",
+                    path.display()
+                );
+            }
+            bail!(
+                "{} has a live listener that does not speak the mpqd protocol — \
+                 refusing to unlink it",
+                path.display()
+            );
+        }
+        Err(_) => {
+            // nothing accepting: a stale file from a crashed daemon
+            std::fs::remove_file(path)
+                .with_context(|| format!("removing stale socket {}", path.display()))
+        }
+    }
+}
+
+/// Encode a fan-out frame.  An oversize payload degrades to a tiny `ERR`
+/// frame naming the kind, so subscribers receive a decodable error
+/// instead of a frame their `recv` would reject at the cap.
+fn encode_or_err(kind: u16, id: u64, payload: &Json) -> Vec<u8> {
+    proto::encode(kind, id, payload).unwrap_or_else(|e| {
+        proto::encode(
+            msg::ERR,
+            id,
+            &Json::Obj(vec![("error".into(), Json::Str(format!("{e:#}")))]),
+        )
+        .expect("an ERR frame is far below MAX_FRAME")
+    })
+}
+
 /// Restore persisted job records.  `queued`/`running` records come back
 /// as `Queued` (auto-resume — their journals replay completed work);
 /// terminal records keep their state, and `done` jobs reload their
@@ -683,6 +750,26 @@ fn load_jobs(state_dir: &Path) -> Result<(BTreeMap<u64, Job>, u64)> {
 /// Per-connection handler: frames in, [`Ctl`] across, frames out.
 fn serve_conn(mut stream: UnixStream, ctl: Sender<Ctl>) {
     let _ = conn_loop(&mut stream, ctl);
+}
+
+/// Has the peer hung up?  A non-blocking `peek` distinguishes a closed
+/// connection (`Ok(0)` / a hard error) from an idle one (`WouldBlock`,
+/// or buffered bytes we leave in place).
+fn conn_closed(stream: &UnixStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let closed = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    if stream.set_nonblocking(false).is_err() {
+        return true;
+    }
+    closed
 }
 
 fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
@@ -749,6 +836,17 @@ fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
                 // it closes when the job reaches a terminal state (the
                 // scheduler drops our sender)
                 while let Ok(bytes) = erx.recv() {
+                    // an empty message is the scheduler's liveness probe
+                    // (`prune_subs`); `write_all(&[])` makes no syscall, so
+                    // probe the socket itself and exit if the watcher is
+                    // gone — the next prune then errors on our dropped
+                    // receiver and removes the channel
+                    if bytes.is_empty() {
+                        if conn_closed(stream) {
+                            return Ok(());
+                        }
+                        continue;
+                    }
                     stream.write_all(&bytes).context("forwarding event")?;
                     stream.flush().context("flushing event")?;
                 }

@@ -73,16 +73,54 @@ pub fn handshake(stream: &mut (impl Read + Write)) -> Result<()> {
     Ok(())
 }
 
+/// Human-readable name of a message kind, used in cap-violation errors.
+pub fn kind_name(kind: u16) -> &'static str {
+    match kind {
+        msg::SUBMIT => "SUBMIT",
+        msg::STATUS => "STATUS",
+        msg::CANCEL => "CANCEL",
+        msg::SUBSCRIBE => "SUBSCRIBE",
+        msg::RELEASE => "RELEASE",
+        msg::SHUTDOWN => "SHUTDOWN",
+        msg::ACK => "ACK",
+        msg::ERR => "ERR",
+        msg::EVENT => "EVENT",
+        msg::RESULT => "RESULT",
+        msg::STATE => "STATE",
+        _ => "UNKNOWN",
+    }
+}
+
+/// Serialize a payload, enforcing [`MAX_FRAME`] on the send side: a peer
+/// whose `recv` rejects an oversize frame can only report an opaque cap
+/// error, so the writer must refuse first, naming the message kind.
+fn encode_payload(kind: u16, payload: &Json) -> Result<String> {
+    let text = payload.to_string();
+    if text.len() > MAX_FRAME {
+        bail!(
+            "{} payload is {} bytes, over the {MAX_FRAME}-byte control-plane cap; \
+             control messages must stay small — ship bulk data out of band",
+            kind_name(kind),
+            text.len(),
+        );
+    }
+    Ok(text)
+}
+
 /// Send one message: JSON payload under `kind` with `job` in the digest
-/// field (0 for daemon-scoped messages).
+/// field (0 for daemon-scoped messages).  Fails (writing nothing) when
+/// the payload exceeds [`MAX_FRAME`].
 pub fn send(w: &mut impl Write, kind: u16, job: u64, payload: &Json) -> Result<()> {
-    store::write_frame(w, kind, job, payload.to_string().as_bytes())
+    let text = encode_payload(kind, payload)?;
+    store::write_frame(w, kind, job, text.as_bytes())
 }
 
 /// Encode one message to bytes (the daemon fans these out to
-/// subscribers through plain byte channels).
-pub fn encode(kind: u16, job: u64, payload: &Json) -> Vec<u8> {
-    store::encode_record(kind, job, payload.to_string().as_bytes())
+/// subscribers through plain byte channels).  Enforces [`MAX_FRAME`]
+/// like [`send`].
+pub fn encode(kind: u16, job: u64, payload: &Json) -> Result<Vec<u8>> {
+    let text = encode_payload(kind, payload)?;
+    Ok(store::encode_record(kind, job, text.as_bytes()))
 }
 
 /// An `ERR` reply.
@@ -122,7 +160,7 @@ mod tests {
         let mut buf = Vec::new();
         let payload = Json::Obj(vec![("model".into(), Json::Str("m".into()))]);
         send(&mut buf, msg::SUBMIT, 0, &payload).unwrap();
-        buf.extend_from_slice(&encode(msg::EVENT, 3, &Json::Null));
+        buf.extend_from_slice(&encode(msg::EVENT, 3, &Json::Null).unwrap());
         send_err(&mut buf, 9, "nope").unwrap();
         let mut r: &[u8] = &buf;
         let (k, j, p) = recv(&mut r).unwrap().unwrap();
@@ -135,6 +173,26 @@ mod tests {
         assert_eq!((k, j), (msg::ERR, 9));
         assert_eq!(p.req("error").unwrap().as_str().unwrap(), "nope");
         assert!(recv(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn send_enforces_the_frame_cap_at_the_exact_boundary() {
+        // a plain ASCII string payload serializes as itself plus the two
+        // surrounding quote bytes, so the cap is hit exactly
+        let fits = Json::Str("x".repeat(MAX_FRAME - 2));
+        let mut buf = Vec::new();
+        send(&mut buf, msg::RESULT, 7, &fits).unwrap();
+        let mut r: &[u8] = &buf;
+        let (k, j, p) = recv(&mut r).unwrap().unwrap();
+        assert_eq!((k, j), (msg::RESULT, 7));
+        assert_eq!(p.as_str().unwrap().len(), MAX_FRAME - 2);
+
+        let over = Json::Str("x".repeat(MAX_FRAME - 1));
+        let mut buf = Vec::new();
+        let err = send(&mut buf, msg::RESULT, 7, &over).unwrap_err().to_string();
+        assert!(err.contains("RESULT"), "cap error must name the message kind: {err}");
+        assert!(buf.is_empty(), "nothing may reach the wire on a cap violation");
+        assert!(encode(msg::STATE, 0, &over).is_err());
     }
 
     #[test]

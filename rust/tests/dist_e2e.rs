@@ -1,0 +1,275 @@
+//! Hermetic end-to-end tests for the **process-backed** worker fleet
+//! (`EvalFleet::new_proc` → `mpq worker` subprocesses over Unix-socket
+//! MPQJ frames; see `src/pool/transport.rs` and `src/pool/proc.rs`).
+//!
+//! These are the distributed-tier counterpart of the `sim_e2e.rs` pool
+//! tests: the *same* Phase-1 sweep and Phase-2 searches, on the same
+//! generated sim zoo, but with every worker lane running in its own OS
+//! process.  The contract is unchanged — **bit-identical** to the serial
+//! path at every lane count — plus real process supervision: a SIGKILLed
+//! worker heals through the same death-notice → respawn → replay →
+//! requeue machinery the thread lanes use, with byte-equal results.
+//!
+//! The worker executable is this crate's own `mpq` binary, resolved via
+//! `MPQ_WORKER_BIN` (cargo builds it for integration tests and exposes
+//! the path as `CARGO_BIN_EXE_mpq`).
+//!
+//! Deliberately absent: assertions on `fleet.model_opens()` or on death
+//! reasons carrying the injected panic message.  Both counters live in
+//! the child process for `--proc` lanes (the parent observes only the
+//! socket closing), which the pool module docs call out as the two
+//! telemetry caveats of process lanes.
+
+use mpq::coordinator::{Pipeline, SearchScheme};
+use mpq::groups::Lattice;
+use mpq::pool::{EvalFleet, FaultPlan};
+use mpq::sensitivity::SensEntry;
+use mpq::sim::{self, SimSpec};
+
+const MODEL: &str = "sim_mlp";
+
+/// Point the fleet at this test build's own `mpq` binary (once per
+/// process; every test needs it before constructing a `--proc` fleet).
+fn worker_bin_env() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var("MPQ_WORKER_BIN", env!("CARGO_BIN_EXE_mpq")));
+}
+
+/// Fresh sim artifacts under a per-test temp dir.
+fn sim_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_dist_e2e_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    sim::generate(&dir, &SimSpec::default()).expect("generate sim artifacts");
+    dir
+}
+
+fn serial_pipe(dir: &std::path::Path) -> Pipeline {
+    let mut p = Pipeline::open(dir, MODEL).expect("open sim_mlp");
+    p.calibrate(128, 0).expect("calibrate");
+    p
+}
+
+/// Two Phase-1 lists agree in order and **bit-for-bit** scores.
+fn assert_sens_bits(got: &[SensEntry], want: &[SensEntry], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: list length");
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand), "{tag}: order diverged");
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "{tag}: score for (g{}, {:?}): {} vs {}",
+            a.group,
+            a.cand,
+            a.score,
+            b.score
+        );
+    }
+}
+
+/// The tentpole contract: Phase-1 sweeps and Phase-2 searches on process
+/// lanes are **bit-identical** to the serial path at every lane count.
+/// Every request/reply crosses the socket codec here — probes, set
+/// uploads, reference build/fetch, fit, stats — so this is also the
+/// end-to-end exercise of `pool/transport.rs` on real traffic.
+#[test]
+fn dist_proc_lanes_match_serial_bit_for_bit() {
+    worker_bin_env();
+    let dir = sim_dir("bits");
+    let lat = Lattice::practical();
+
+    // serial reference
+    let mut sp = serial_pipe(&dir);
+    let ssens = sp.sensitivity_sqnr(&lat).unwrap();
+    let sflips = sp.flips(&lat, &ssens);
+    let sfp = sp.eval_fp32().unwrap();
+    let scurve = sp.pareto_curve_val(&lat, &sflips, None).unwrap();
+    let target = (sfp + scurve.curve.iter().map(|&(_, m)| m).fold(f64::INFINITY, f64::min)) / 2.0;
+    let srun = sp
+        .search_accuracy_target(&lat, &sflips, target, SearchScheme::Binary, None)
+        .unwrap();
+
+    for workers in [1usize, 2, 4] {
+        let fleet = EvalFleet::new_proc(&dir, workers).unwrap();
+        let mut p = Pipeline::open(&dir, MODEL).unwrap();
+        p.attach_fleet(&fleet).unwrap();
+        p.calibrate(128, 0).unwrap();
+
+        let pids = fleet.proc_pids();
+        assert_eq!(pids.len(), workers, "w={workers}: one lane per worker");
+        assert!(
+            pids.iter().all(|p| p.is_some()),
+            "w={workers}: every lane must be process-backed, got {pids:?}"
+        );
+
+        let sens = p.sensitivity_sqnr(&lat).unwrap();
+        assert_sens_bits(&sens, &ssens, &format!("w={workers} sweep"));
+
+        let flips = p.flips(&lat, &sens);
+        assert_eq!(flips.len(), sflips.len(), "w={workers}");
+        let fp = p.eval_fp32().unwrap();
+        assert_eq!(fp.to_bits(), sfp.to_bits(), "w={workers}: fp32 metric differs");
+
+        let curve = p.pareto_curve_val(&lat, &flips, None).unwrap();
+        assert_eq!(curve.curve.len(), scurve.curve.len(), "w={workers}");
+        for ((r1, m1), (r2, m2)) in curve.curve.iter().zip(&scurve.curve) {
+            assert_eq!(r1.to_bits(), r2.to_bits(), "w={workers}: curve r differs");
+            assert_eq!(m1.to_bits(), m2.to_bits(), "w={workers}: curve metric differs");
+        }
+
+        let run = p
+            .search_accuracy_target(&lat, &flips, target, SearchScheme::Binary, None)
+            .unwrap();
+        assert_eq!(run.applied.len(), srun.applied.len(), "w={workers}: chosen prefix");
+        for (a, b) in run.applied.iter().zip(&srun.applied) {
+            assert_eq!((a.group, a.cand), (b.group, b.cand), "w={workers}: applied flips");
+        }
+        assert_eq!(run.final_rel_bops.to_bits(), srun.final_rel_bops.to_bits(), "w={workers}");
+        assert_eq!(run.final_metric.to_bits(), srun.final_metric.to_bits(), "w={workers}");
+
+        // worker stats cross the wire too (Stats request / reply codec);
+        // per-child model counts are accurate — each child opened the one
+        // attached model
+        let stats = fleet.worker_stats().unwrap();
+        assert_eq!(stats.len(), workers, "w={workers}");
+        assert!(
+            stats.iter().all(|s| s.models_open == 1),
+            "w={workers}: each child serves exactly one model"
+        );
+
+        let fs = fleet.failure_stats();
+        assert_eq!(fs.worker_restarts, 0, "w={workers}: clean run must not respawn");
+        assert!(fs.degraded_events.is_empty(), "w={workers}");
+    }
+}
+
+/// Resizing a process-lane fleet mid-run spawns/reaps real subprocesses
+/// and replays host state into the newcomers; sweeps stay bit-identical
+/// through a grow and a shrink.
+#[test]
+fn dist_proc_fleet_resize_mid_run() {
+    worker_bin_env();
+    let dir = sim_dir("resize");
+    let lat = Lattice::practical();
+    let serial = serial_pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    let fleet = EvalFleet::new_proc(&dir, 1).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let check = |p: &Pipeline, tag: &str| {
+        p.clear_eval_memo();
+        let sens = p.sensitivity_sqnr(&lat).unwrap();
+        assert_sens_bits(&sens, &serial, tag);
+    };
+    check(&p, "w=1 before resize");
+    fleet.resize(3).unwrap();
+    assert_eq!(fleet.workers(), 3);
+    assert!(fleet.proc_pids().iter().all(|p| p.is_some()), "grown lanes are processes");
+    check(&p, "after grow to 3");
+    fleet.resize(2).unwrap();
+    assert_eq!(fleet.workers(), 2);
+    check(&p, "after shrink to 2");
+    // Phase 2 still works across a resize (val set re-sharded too)
+    let flips = p.flips(&lat, &serial);
+    let run = p.search_bops_budget(&lat, &flips, 0.5).unwrap();
+    assert!(run.final_metric.is_finite());
+}
+
+/// The acceptance SIGKILL: a worker **process** is killed dead from the
+/// outside (no cooperation, no unwinding — the hardest death a thread
+/// lane can't even express).  The feeder/reader bridge turns the closed
+/// socket into a death notice; the supervisor respawns the lane, replays
+/// its host state (calibration shard, reference), requeues what the dead
+/// incarnation owed, and the sweep finishes **byte-equal** to serial with
+/// exactly one restart.
+#[test]
+fn dist_proc_fleet_survives_sigkill_mid_sweep() {
+    worker_bin_env();
+    let dir = sim_dir("sigkill");
+    let lat = Lattice::practical();
+    let serial = serial_pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    let fleet = EvalFleet::new_proc(&dir, 4).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+
+    // murder lane 1 after calibration has pushed host state everywhere
+    let victim = fleet.proc_pids()[1].expect("lane 1 is process-backed");
+    let status = std::process::Command::new("kill")
+        .args(["-9", &victim.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(status.success(), "kill -9 {victim} failed");
+
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &serial, "post-SIGKILL sweep");
+
+    let fs = fleet.failure_stats();
+    assert_eq!(fs.worker_restarts, 1, "one respawn heals the fleet: {fs:?}");
+    assert!(fs.degraded_events.is_empty(), "death within budget must not degrade");
+    assert_eq!(fleet.workers(), 4, "fleet back at full strength");
+    assert!(
+        fs.last_deaths.iter().any(|d| d.contains("worker process")),
+        "death reason must name the process exit: {:?}",
+        fs.last_deaths
+    );
+    assert!(
+        fleet.proc_pids().iter().all(|p| p.is_some()),
+        "the replacement lane must be process-backed too"
+    );
+
+    // the healed fleet keeps serving fresh sweeps exactly
+    p.clear_eval_memo();
+    let again = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&again, &serial, "re-sweep on the healed fleet");
+    assert_eq!(fleet.failure_stats().worker_restarts, 1, "no further respawns");
+}
+
+/// `panic@LANE:N` fault clauses extend to process lanes: the directive is
+/// computed coordinator-side and shipped with the job; the child's panic
+/// is deliberately uncaught, so the injected fault becomes a real process
+/// death (exit 101 → socket EOF → death notice) and the supervisor heals
+/// it like any other — byte-equal results, exactly one restart.
+#[test]
+fn dist_proc_fleet_heals_injected_panic() {
+    worker_bin_env();
+    let dir = sim_dir("panic");
+    let lat = Lattice::practical();
+    let serial = serial_pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    let plan = FaultPlan::parse("panic@1:3,backoff:0").unwrap();
+    let fleet = EvalFleet::with_faults_proc(&dir, 4, plan).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &serial, "panic@1:3 proc w=4");
+
+    let fs = fleet.failure_stats();
+    assert_eq!(fs.faults_injected, 1, "the panic must fire exactly once: {fs:?}");
+    assert_eq!(fs.worker_restarts, 1, "one respawn heals the fleet");
+    assert!(fs.jobs_requeued > 0, "the dead process's slots must be requeued");
+    assert!(fs.degraded_events.is_empty());
+    assert_eq!(fleet.workers(), 4);
+}
+
+/// Per-lane latency faults (`slow@LANE:MS`) ship as directives too — a
+/// continuously slowed process lane changes timing only, never bits.
+/// This is what the `rust-hermetic-dist` CI variant relies on.
+#[test]
+fn dist_proc_fleet_exact_under_slow_lanes() {
+    worker_bin_env();
+    let dir = sim_dir("slow");
+    let lat = Lattice::practical();
+    let serial = serial_pipe(&dir).sensitivity_sqnr(&lat).unwrap();
+
+    let plan = FaultPlan::parse("slow@0:2,slow@1:5").unwrap();
+    let fleet = EvalFleet::with_faults_proc(&dir, 2, plan).unwrap();
+    let mut p = Pipeline::open(&dir, MODEL).unwrap();
+    p.attach_fleet(&fleet).unwrap();
+    p.calibrate(128, 0).unwrap();
+    let sens = p.sensitivity_sqnr(&lat).unwrap();
+    assert_sens_bits(&sens, &serial, "slow proc lanes");
+    assert_eq!(fleet.failure_stats().worker_restarts, 0, "slow is not a death");
+}

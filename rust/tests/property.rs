@@ -673,6 +673,109 @@ fn tensor_and_blob_decode_bitflips_never_panic() {
     }
 }
 
+/// An adversarial byte stream for [`store::read_frame`]: serves at most
+/// `frag` bytes per `read`, injects a spurious `ErrorKind::Interrupted`
+/// every `interrupt_nth`-th call, and ends at `data.len()`.  A call
+/// budget proportional to the stream length turns any retry spin into a
+/// loud failure instead of a hung test.
+struct FragReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    frag: usize,
+    interrupt_nth: usize,
+    calls: usize,
+    max_calls: usize,
+}
+
+impl<'a> FragReader<'a> {
+    fn new(data: &'a [u8], frag: usize, interrupt_nth: usize) -> Self {
+        // worst case: one byte per successful call, one interrupt each
+        let max_calls = 4 * (data.len() + 8);
+        Self { data, pos: 0, frag, interrupt_nth, calls: 0, max_calls }
+    }
+}
+
+impl std::io::Read for FragReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.calls += 1;
+        assert!(
+            self.calls <= self.max_calls,
+            "read_frame is spinning: {} calls on a {}-byte stream",
+            self.calls,
+            self.data.len()
+        );
+        if self.interrupt_nth > 0 && self.calls % self.interrupt_nth == 0 {
+            return Err(std::io::Error::from(std::io::ErrorKind::Interrupted));
+        }
+        let n = buf.len().min(self.frag).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// [`store::read_frame`] over adversarially fragmented streams — 1-byte
+/// reads, injected `Interrupted` errors, EOF cuts at every offset (mid
+/// header and mid payload included): it yields exactly the records a
+/// whole-buffer decode yields, never panics, and never spins.  This is
+/// the socket-facing contract the serve protocol and the process-lane
+/// transport both build on: a Unix stream hands back arbitrary fragments,
+/// and a signal-interrupted `read(2)` surfaces as `Interrupted`.
+#[test]
+fn frame_reads_over_fragmented_streams_match_whole_buffer_decode() {
+    let mut rng = Rng::new(0x75);
+    let hdr = store::file_header().len();
+    for case in 0..25 {
+        let (recs, bytes) = random_journal_image(&mut rng, case);
+        let body = &bytes[hdr..]; // read_frame consumes bare frames
+        // cumulative frame boundaries: boundary[i] = end of record i
+        let mut boundary = vec![0usize];
+        for r in &recs {
+            let len = store::encode_record(r.kind, r.digest, &r.payload).len();
+            boundary.push(boundary.last().unwrap() + len);
+        }
+
+        // full stream, every fragmentation × interruption pattern: the
+        // complete record sequence, terminated by a clean Ok(None)
+        for frag in [1usize, 2, 7, usize::MAX] {
+            for interrupt_nth in [0usize, 2, 5] {
+                let mut r = FragReader::new(body, frag, interrupt_nth);
+                let mut got = Vec::new();
+                while let Some(rec) = store::read_frame(&mut r, 1 << 20)
+                    .unwrap_or_else(|e| panic!("case {case} frag={frag}: {e:#}"))
+                {
+                    got.push(rec);
+                }
+                assert_eq!(got, recs, "case {case} frag={frag} int={interrupt_nth}");
+            }
+        }
+
+        // EOF at EVERY offset, worst-case 1-byte fragments: whole frames
+        // before the cut are served verbatim; a boundary cut ends with a
+        // clean Ok(None); a mid-frame cut is an error — never a panic,
+        // never an invented or altered record
+        for cut in 0..=body.len() {
+            let mut r = FragReader::new(&body[..cut], 1, 3);
+            let mut got = Vec::new();
+            let tail = loop {
+                match store::read_frame(&mut r, 1 << 20) {
+                    Ok(Some(rec)) => got.push(rec),
+                    Ok(None) => break Ok(()),
+                    Err(e) => break Err(e),
+                }
+            };
+            let whole = boundary.iter().filter(|&&b| b <= cut).count() - 1;
+            assert_eq!(got.len(), whole, "case {case} cut={cut}: wrong record count");
+            assert_eq!(got, recs[..whole], "case {case} cut={cut}: non-prefix");
+            if boundary.contains(&cut) {
+                assert!(tail.is_ok(), "case {case} cut={cut}: boundary EOF must be clean");
+            } else {
+                assert!(tail.is_err(), "case {case} cut={cut}: mid-frame EOF must error");
+            }
+        }
+    }
+}
+
 #[test]
 fn candidate_labels_parse_back() {
     for w in [4u8, 6, 8] {

@@ -316,6 +316,117 @@ fn admission_cap_and_cancel_leave_nothing_stranded() {
     assert!(stranded.is_empty(), "cancel/shutdown stranded files: {stranded:?}");
 }
 
+/// Socket claiming: a second daemon pointed at a **live** daemon's
+/// socket must refuse to start (a blind unlink would strand the first
+/// daemon's clients on a dead inode); a live listener that is not mpqd
+/// is refused too; only a genuinely stale socket file — nothing
+/// accepting behind it — is unlinked and rebound.
+#[test]
+fn second_daemon_on_a_live_socket_is_refused() {
+    let dir = zoo_dir("claim");
+    let sock = dir.join("d.sock");
+    let h = spawn_daemon(cfg(&dir, &sock, &dir.join("mpqd")));
+    let mut c = connect(&sock);
+
+    // a second daemon on the same socket: refused, and the error says why
+    let err = daemon::run(cfg(&dir, &sock, &dir.join("mpqd_b")))
+        .expect_err("second daemon started on a live socket");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("live mpqd"), "refusal must name the live daemon: {msg}");
+
+    // the first daemon is unharmed — same socket, still answering
+    assert!(sock.exists(), "refused start unlinked the live socket");
+    c.status().expect("first daemon stopped answering after the refused start");
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+
+    // a live listener that is NOT mpqd (accepts, never handshakes): the
+    // claim probe times out on the handshake and refuses to unlink it
+    let squatter = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+    let err = daemon::run(cfg(&dir, &sock, &dir.join("mpqd_c")))
+        .expect_err("daemon started over a foreign listener");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("does not speak"),
+        "refusal must name the protocol mismatch: {msg}"
+    );
+    assert!(sock.exists(), "foreign live socket was unlinked");
+    drop(squatter);
+
+    // now the file is stale (nothing accepting): claimed and rebound
+    let h2 = spawn_daemon(cfg(&dir, &sock, &dir.join("mpqd_d")));
+    let mut c2 = connect(&sock);
+    c2.shutdown().unwrap();
+    h2.join().unwrap().unwrap();
+    assert!(!sock.exists());
+}
+
+fn job_subscribers(status: &mpq::jsonio::Json, id: u64) -> u64 {
+    status
+        .req("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|j| j.req("id").unwrap().as_f64().unwrap() as u64 == id)
+        .expect("job missing from the status table")
+        .req("subscribers")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64
+}
+
+/// Subscriber-leak regression: a `watch` client that disconnects without
+/// its job reaching a terminal state must not park its channel (and every
+/// queued frame) on the job forever.  `Status` probes the fan-out list;
+/// the dropped watcher's connection thread notices its dead socket and
+/// exits, and the next probe prunes the channel — the count observably
+/// returns to zero while the job is still resident.
+#[test]
+fn dropped_watcher_is_pruned_from_subscribers() {
+    use mpq::jsonio::Json;
+    use mpq::serve::proto::{self, msg};
+
+    let dir = zoo_dir("subs");
+    let sock = dir.join("d.sock");
+    let mut dc = cfg(&dir, &sock, &dir.join("mpqd"));
+    dc.hold = true; // keep the job resident (queued) for the whole test
+    let h = spawn_daemon(dc);
+    let mut c = connect(&sock);
+    let id = c.submit("srv_a", &small_policy()).unwrap();
+
+    // raw subscription so the test controls the connection's lifetime
+    let mut s = std::os::unix::net::UnixStream::connect(&sock).unwrap();
+    proto::handshake(&mut s).unwrap();
+    proto::send(&mut s, msg::SUBSCRIBE, id, &Json::Null).unwrap();
+    let (kind, _, _) = proto::recv(&mut s).unwrap().expect("subscribe ack");
+    assert_eq!(kind, msg::ACK, "subscribe refused");
+    assert_eq!(
+        job_subscribers(&c.status().unwrap(), id),
+        1,
+        "subscription never landed"
+    );
+
+    // hang up without cancelling; the daemon must notice on its own
+    drop(s);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        // detection is two-phase (probe wakes the conn thread, the next
+        // probe reaps the dropped channel), hence the bounded poll
+        if job_subscribers(&c.status().unwrap(), id) == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "dropped watcher still subscribed after 10s — fan-out leak"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+}
+
 #[test]
 fn priority_runs_first_then_equals_round_robin() {
     let dir = zoo_dir("prio");
