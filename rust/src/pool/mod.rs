@@ -158,7 +158,10 @@
 //! ## Process lanes (`EvalFleet::new_proc`)
 //!
 //! The same fleet can run its lanes as **`mpq worker` subprocesses**
-//! instead of threads.  Each process lane is a private Unix socket plus a
+//! instead of threads.  Each process lane is a private Unix socket (bound
+//! inside a freshly created mode-0700 rendezvous directory whose name is
+//! unique per spawn — pid plus a process-wide sequence — so concurrent
+//! fleets never collide and no other local user can connect first) plus a
 //! pair of bridge threads adapting the fleet's mpsc seam to the wire: the
 //! serving loop in the child is the same `pool/worker.rs` code, and the
 //! job/reply surface crosses the socket as MPQJ checksummed frames

@@ -26,10 +26,11 @@ use super::worker;
 use super::{Job, Request, ResMsg, DEATH_NOTICE};
 use crate::serve::proto;
 use anyhow::{Context, Result};
+use std::os::unix::fs::DirBuilderExt;
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -37,6 +38,24 @@ use std::time::{Duration, Instant};
 /// How long the coordinator waits for a freshly spawned worker process to
 /// connect back and complete the protocol handshake.
 const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Process-wide spawn counter folded into every rendezvous path.  Worker
+/// indices restart at 0 per fleet, so two fleets in one process (parallel
+/// integration tests, embedders with several pools) would otherwise race
+/// on the same socket name; this sequence makes each spawn's path unique
+/// for the life of the process.
+static SPAWN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Owns the per-spawn private rendezvous directory; best-effort removal on
+/// drop covers every early-return path, and the deliberate `drop` after
+/// accept keeps the socket's lifetime to the rendezvous window.
+struct RendezvousDir(PathBuf);
+
+impl Drop for RendezvousDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
 
 /// One process lane: the subprocess plus its two bridge threads.
 pub(super) struct ProcLane {
@@ -111,8 +130,20 @@ pub(super) fn spawn_proc_worker(
     init: mpsc::Sender<(usize, Result<(), String>)>,
     faults: &Arc<FaultState>,
 ) -> Result<ProcLane> {
-    let sock = std::env::temp_dir().join(format!("mpq-worker-{}-{widx}.sock", std::process::id()));
-    let _ = std::fs::remove_file(&sock);
+    // Rendezvous in a freshly created mode-0700 directory whose name is
+    // unique across every fleet in this process (pid + spawn sequence):
+    // no other local user can connect before our child does, and no
+    // pre-bind unlink is needed — if the path somehow exists, creation
+    // fails loudly instead of clobbering a live fleet's listener.
+    let seq = SPAWN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let rdv = RendezvousDir(
+        std::env::temp_dir().join(format!("mpq-worker-{}-{seq}", std::process::id())),
+    );
+    let mut db = std::fs::DirBuilder::new();
+    db.mode(0o700);
+    db.create(&rdv.0)
+        .with_context(|| format!("creating worker rendezvous dir {}", rdv.0.display()))?;
+    let sock = rdv.0.join("worker.sock");
     let listener = UnixListener::bind(&sock)
         .with_context(|| format!("binding worker socket {}", sock.display()))?;
 
@@ -169,8 +200,9 @@ pub(super) fn spawn_proc_worker(
             Err(e) => break Err(format!("accepting worker connection: {e}")),
         }
     };
-    // single-connection socket: unlink as soon as the accept resolved
-    let _ = std::fs::remove_file(&sock);
+    // single-connection socket: remove the rendezvous dir (and the socket
+    // inside it) as soon as the accept resolved
+    drop(rdv);
 
     let setup = accepted.and_then(|mut stream| {
         let ready = (|| -> Result<()> {

@@ -315,6 +315,18 @@ fn read_msg(r: &mut impl Read, want: u16) -> Result<Option<(u64, Dec)>> {
         bail!("{} control frame shorter than its bulk-count word", kind_name(want));
     }
     let nbulk = u32::from_le_bytes(frame.payload[..4].try_into().unwrap()) as usize;
+    // Every BULK frame is referenced by a tag-1 tensor slot in the control
+    // body, which costs at least one body byte — so a declared count above
+    // the body length is corruption, caught here before it can drive a
+    // multi-gigabyte preallocation and 4G blocking reads.
+    if nbulk > frame.payload.len() - 4 {
+        bail!(
+            "{} control frame declares {nbulk} BULK frames but its body is \
+             only {} bytes — corrupt bulk-count word",
+            kind_name(want),
+            frame.payload.len() - 4
+        );
+    }
     let mut bulk = Vec::with_capacity(nbulk);
     for i in 0..nbulk {
         let Some(b) = store::read_frame(r, MAX_IPC_FRAME).context("reading BULK frame")? else {

@@ -654,8 +654,9 @@ impl Daemon {
 /// blindly unlinked: if anything accepts a connection there — a live
 /// `mpqd` (answers the handshake) or any other listener — starting a
 /// second daemon would silently strand the first one's clients, so we
-/// refuse.  Only a dead socket (nothing accepting) is stale and safe to
-/// remove.
+/// refuse.  Only a definitively dead socket — connect fails with
+/// `ECONNREFUSED` — is stale and safe to remove; ambiguous probe errors
+/// also refuse, since a saturated healthy daemon must not lose its socket.
 fn claim_socket(path: &Path) -> Result<()> {
     if !path.exists() {
         return Ok(());
@@ -677,11 +678,22 @@ fn claim_socket(path: &Path) -> Result<()> {
                 path.display()
             );
         }
-        Err(_) => {
-            // nothing accepting: a stale file from a crashed daemon
+        // ECONNREFUSED is the one definitive dead-listener signal: the
+        // file exists but no process holds it.  Anything else (EAGAIN from
+        // a saturated but healthy daemon's full backlog, EACCES, …) is not
+        // proof of staleness, so refuse rather than steal the socket.
+        Err(e) if e.kind() == std::io::ErrorKind::ConnectionRefused => {
             std::fs::remove_file(path)
                 .with_context(|| format!("removing stale socket {}", path.display()))
         }
+        // the file vanished between exists() and connect(): nothing to claim
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => bail!(
+            "probing {} failed with '{e}' — cannot tell whether a live mpqd \
+             holds it, refusing to unlink (remove the socket manually if the \
+             daemon is known dead)",
+            path.display()
+        ),
     }
 }
 
