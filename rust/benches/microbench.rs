@@ -184,6 +184,7 @@ fn sim_benches(results: &mut Vec<BenchResult>) {
     serve_submit_bench(results);
     ipc_bench(results);
     proc_fleet_bench(results);
+    chaos_heartbeat_bench(results);
 }
 
 /// Process-lane IPC substrate latency: one MPQJ frame down a Unix socket
@@ -277,6 +278,50 @@ fn proc_fleet_bench(results: &mut Vec<BenchResult>) {
             "proc bench must run clean — a dying lane poisons the timing"
         );
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Heartbeat overhead: the `phase1_proc_sim` w4 sweep again, but with an
+/// aggressive 25 ms ping interval (10× the default rate) so the PING/PONG
+/// traffic and the per-frame wire seam are maximally present in the timed
+/// window.  `bench_compare` gates this against the plain w4 sweep
+/// (`--speedup ...w4:chaos_sim/heartbeat_overhead:0.95`): liveness must
+/// cost under ~5% of Phase-1 wall time or the chaos hardening regressed
+/// the hot path.
+fn chaos_heartbeat_bench(results: &mut Vec<BenchResult>) {
+    std::env::set_var("MPQ_WORKER_BIN", env!("CARGO_BIN_EXE_mpq"));
+    std::env::set_var("MPQ_HEARTBEAT_MS", "25");
+    let dir = std::env::temp_dir().join("mpq_microbench_chaos");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = SimSpec {
+        dims: vec![128, 160, 160, 10],
+        calib_n: 512,
+        val_n: 256,
+        ood_n: 0,
+        ..Default::default()
+    };
+    sim::generate(&dir, &spec).expect("generate chaos sim artifacts");
+    let lat = Lattice::practical();
+    {
+        let fleet = EvalFleet::new_proc(&dir, 4).expect("spawn proc fleet");
+        let mut pp = Pipeline::open(&dir, &spec.name).expect("open sim zoo");
+        pp.attach_fleet(&fleet).expect("attach proc fleet");
+        pp.calibrate(spec.calib_n, 0).expect("calibrate");
+        results.push(bench_result("chaos_sim/heartbeat_overhead", 1, 3, || {
+            pp.clear_eval_memo();
+            pp.sensitivity_sqnr(&lat).map(|_| ())
+        }));
+        assert_eq!(
+            fleet.failure_stats().worker_restarts,
+            0,
+            "heartbeat bench must run clean — a liveness death poisons the timing"
+        );
+        assert!(
+            fleet.wire_counters().heartbeats_sent > 0,
+            "pings must actually flow while the sweep is timed"
+        );
+    }
+    std::env::remove_var("MPQ_HEARTBEAT_MS");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -275,7 +275,12 @@ fn main() -> Result<()> {
             println!("                    the supervisor respawns, requeues and degrades —");
             println!("                    results stay bit-identical to the fault-free run);");
             println!("                    'crash@PHASE:N' aborts the coordinator at its Nth");
-            println!("                    run-journal barrier (crash-recovery testing)");
+            println!("                    run-journal barrier (crash-recovery testing);");
+            println!("                    wire chaos for --proc lanes and mpqd replies:");
+            println!("                    'wdrop@L:N' 'wcorrupt@L:N' 'wsplit@L:N' 'wreset@L:N'");
+            println!("                    'wdelay@L:MS' hit lane L's Nth outbound frame, and");
+            println!("                    'wseed:S' derives a randomized per-lane schedule");
+            println!("                    (MPQ_HEARTBEAT_MS tunes lane liveness pings; 0 = off)");
             println!("       --resume     replay the run journal (<artifacts>/journal.mpqj,");
             println!("                    MPQ_JOURNAL overrides path, =0 disables): completed");
             println!("                    Phase-1 probes, search prefixes and AdaRound layers");
@@ -284,11 +289,16 @@ fn main() -> Result<()> {
             println!("         --ood-n N --sim-seed S --fault-plan SPEC");
             println!("         (pure-Rust backend; no PJRT needed)");
             println!("serve:   --socket PATH --artifacts DIR [--state-dir DIR] [--workers N]");
-            println!("         [--max-jobs N] [--max-idle N] [--hold]  long-running daemon:");
-            println!("         one shared fleet, concurrent jobs, per-job crash/resume journals");
+            println!("         [--max-jobs N] [--max-idle N] [--hold] [--io-timeout-ms MS]");
+            println!("         long-running daemon: one shared fleet, concurrent jobs, per-job");
+            println!("         crash/resume journals; overload sheds with typed RETRY_AFTER;");
+            println!("         io timeout bounds mid-frame stalls on every connection (0 = off)");
             println!("client:  <submit|status|watch|cancel|release|shutdown> --socket PATH");
             println!("         [--model M --calib N --seed S --priority P --eval-budget N");
+            println!("          --deadline-ms MS --idem KEY --io-timeout-ms MS");
             println!("          --no-adaround --adaround-steps N --job J]");
+            println!("         submits retry with backoff under an idempotency key: a retried");
+            println!("         submit of a finished job returns its durable result, never re-runs");
             println!("worker:  --socket PATH --artifacts DIR [--lane N] [--compile-fault N]");
             println!("         (internal: process-lane entrypoint, spawned by --proc fleets)");
         }

@@ -39,6 +39,35 @@
 //! | `backoff:MS`     | respawn backoff base (default 10 ms, doubled per     |
 //! |                  | restart, capped; 0 disables the sleep)               |
 //!
+//! ## Wire faults
+//!
+//! The wire-fault family injects at the framed-socket seam
+//! ([`super::wire`], wrapping `store::write_frame`) instead of inside
+//! worker compute, so both socket control planes — the proc-lane
+//! transport (`pool/transport.rs`) and the `mpqd` job protocol
+//! (`serve/proto.rs`) — are covered by one mechanism.  Here `N` counts
+//! *frames written* on the lane's connection (1-based; PING and BULK
+//! frames count too).  For proc fleets `L` is the worker lane; for
+//! `mpqd` it is the connection ordinal modulo the daemon's wire-lane
+//! count.
+//!
+//! | token              | effect                                             |
+//! |--------------------|----------------------------------------------------|
+//! | `wdrop@L:N[*]`     | swallow lane L's Nth outbound frame (the peer      |
+//! |                    | never sees it — reply starvation, watchdog fodder) |
+//! | `wcorrupt@L:N[*]`  | flip a post-checksum bit in the Nth frame so the   |
+//! |                    | reader must reject it (`frame checksum mismatch`)  |
+//! | `wdelay@L:MS`      | stall MS ms mid-frame on every write (continuous,  |
+//! |                    | like `slow@`; timing only, never consumes a fire)  |
+//! | `wsplit@L:N[*]`    | torn write: emit a partial prefix of the Nth frame |
+//! |                    | then fail the connection                           |
+//! | `wreset@L:N[*]`    | fail the connection instead of writing frame N     |
+//! | `wseed:SEED`       | seeded random one-shot wire schedule; a lane's     |
+//! |                    | clauses depend only on `(SEED, L)`, so the         |
+//! |                    | schedule is identical at any lane count.  Implies  |
+//! |                    | `deadline:2000` unless a deadline is given (frame  |
+//! |                    | drops need the collect watchdog to heal).          |
+//!
 //! Every injected failure carries the literal prefix `injected fault:` in
 //! its message so tests can distinguish root-cause errors from real bugs.
 
@@ -68,6 +97,37 @@ pub enum FaultKind {
     /// Lane-less: workers never fire it; the `RunJournal` does, via
     /// [`FaultPlan::crash_barriers`].
     CrashAtBarrier(usize),
+    /// Swallow the lane's Nth outbound frame — `wdrop@L:N`.  Wire kinds
+    /// are consumed by [`super::wire::WireFaults`], never by the
+    /// worker-side `FaultState` predicates.
+    WireDrop(usize),
+    /// Flip a post-checksum bit in the lane's Nth outbound frame so the
+    /// reader must reject it — `wcorrupt@L:N`.
+    WireCorrupt(usize),
+    /// Stall this many milliseconds mid-frame on every write on the lane
+    /// (continuous, like `Slow`; never consumes a fire) — `wdelay@L:MS`.
+    WireDelay(u64),
+    /// Torn write: emit a partial prefix of the lane's Nth frame, then
+    /// fail the connection — `wsplit@L:N`.
+    WireSplit(usize),
+    /// Fail the connection instead of writing the lane's Nth frame —
+    /// `wreset@L:N`.
+    WireReset(usize),
+}
+
+impl FaultKind {
+    /// Wire kinds live at the framed-socket seam ([`super::wire`]) and
+    /// are invisible to the worker-side `FaultState` predicates.
+    pub fn is_wire(self) -> bool {
+        matches!(
+            self,
+            FaultKind::WireDrop(_)
+                | FaultKind::WireCorrupt(_)
+                | FaultKind::WireDelay(_)
+                | FaultKind::WireSplit(_)
+                | FaultKind::WireReset(_)
+        )
+    }
 }
 
 /// One scheduled fault, bound to a worker lane.
@@ -94,6 +154,10 @@ pub struct FaultPlan {
     pub budget: Option<usize>,
     /// Respawn backoff base in ms (default 10; doubled per restart).
     pub backoff_ms: Option<u64>,
+    /// Seed for a derived per-lane random wire schedule (`wseed:SEED`).
+    /// Lane L's derived clauses depend only on `(seed, L)`, never on the
+    /// lane count — see [`FaultPlan::wire_faults_for_lane`].
+    pub wire_seed: Option<u64>,
 }
 
 impl FaultPlan {
@@ -102,6 +166,45 @@ impl FaultPlan {
             && self.deadline_ms.is_none()
             && self.budget.is_none()
             && self.backoff_ms.is_none()
+            && self.wire_seed.is_none()
+    }
+
+    /// Does this plan carry any wire-seam injection (explicit wire
+    /// clauses or a `wseed` schedule)?  Gates construction of the
+    /// [`super::wire::WireFaults`] state.
+    pub fn has_wire_faults(&self) -> bool {
+        self.wire_seed.is_some() || self.faults.iter().any(|f| f.kind.is_wire())
+    }
+
+    /// Every wire fault targeting `lane`: the plan's explicit wire
+    /// clauses plus, when `wseed:SEED` is set, a derived schedule seeded
+    /// by `(SEED, lane)` only — the same lane gets the same clauses at
+    /// any lane count (the determinism property `property.rs` pins).
+    /// The derived schedule is deliberately gentle: at most one one-shot
+    /// fault per lane (roughly half the lanes draw none), so a default
+    /// restart budget always heals it and results stay byte-equal.
+    pub fn wire_faults_for_lane(&self, lane: usize) -> Vec<Fault> {
+        let mut out: Vec<Fault> = self
+            .faults
+            .iter()
+            .filter(|f| f.kind.is_wire() && f.lane == lane)
+            .copied()
+            .collect();
+        if let Some(seed) = self.wire_seed {
+            let mut rng =
+                Rng::new(seed ^ (lane as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            if rng.below(2) == 0 {
+                let kind = match rng.below(5) {
+                    0 => FaultKind::WireDrop(1 + rng.below(6)),
+                    1 => FaultKind::WireCorrupt(1 + rng.below(6)),
+                    2 => FaultKind::WireSplit(1 + rng.below(6)),
+                    3 => FaultKind::WireReset(1 + rng.below(6)),
+                    _ => FaultKind::WireDelay(1 + rng.below(5) as u64),
+                };
+                out.push(Fault { lane, kind, recurring: false });
+            }
+        }
+        out
     }
 
     /// Sorted 1-based journal-barrier ordinals of every `crash@PHASE:N`
@@ -146,6 +249,7 @@ impl FaultPlan {
                             "deadline" => plan.deadline_ms = Some(v),
                             "budget" => plan.budget = Some(v as usize),
                             "backoff" => plan.backoff_ms = Some(v),
+                            "wseed" => plan.wire_seed = Some(v),
                             k => bail!("unknown fault-plan knob '{k}' in '{raw}'"),
                         }
                         continue;
@@ -198,14 +302,26 @@ impl FaultPlan {
                 "compile" => FaultKind::CompileFail(arg(Some(1))? as usize),
                 "slow" => FaultKind::Slow(arg(None)?),
                 "stall" => FaultKind::StallOnProbe(arg(None)? as usize),
+                "wdrop" => FaultKind::WireDrop(arg(None)? as usize),
+                "wcorrupt" => FaultKind::WireCorrupt(arg(None)? as usize),
+                "wdelay" => FaultKind::WireDelay(arg(None)?),
+                "wsplit" => FaultKind::WireSplit(arg(None)? as usize),
+                "wreset" => FaultKind::WireReset(arg(None)? as usize),
                 k => bail!("unknown fault kind '{k}' in '{raw}'"),
             };
             if matches!(kind, FaultKind::PanicOnProbe(0) | FaultKind::UploadFail(0)
-                | FaultKind::CompileFail(0) | FaultKind::StallOnProbe(0))
+                | FaultKind::CompileFail(0) | FaultKind::StallOnProbe(0)
+                | FaultKind::WireDrop(0) | FaultKind::WireCorrupt(0)
+                | FaultKind::WireSplit(0) | FaultKind::WireReset(0))
             {
                 bail!("fault token '{raw}': event ordinals are 1-based");
             }
             plan.faults.push(Fault { lane, kind, recurring });
+        }
+        if plan.wire_seed.is_some() {
+            // a derived schedule may drop frames; without a collect
+            // watchdog the starved reply would hang forever
+            plan.deadline_ms.get_or_insert(2000);
         }
         Ok(plan)
     }
@@ -235,6 +351,7 @@ impl FaultPlan {
             deadline_ms: None,
             budget: Some(1 + rng.below(3)),
             backoff_ms: Some(0),
+            wire_seed: None,
         }
     }
 }
@@ -425,6 +542,64 @@ mod tests {
         assert!(st.fire_upload(1, 1));
         assert!(st.fire_upload(1, 1), "recurring re-fires every incarnation");
         assert_eq!(st.injected(), 3);
+    }
+
+    #[test]
+    fn parses_wire_grammar() {
+        let p = FaultPlan::parse("wdrop@0:2, wcorrupt@1:1*, wdelay@2:15, wsplit@0:3, wreset@3:1")
+            .unwrap();
+        assert_eq!(p.faults.len(), 5);
+        assert!(p.has_wire_faults());
+        assert_eq!(p.faults[0], Fault { lane: 0, kind: FaultKind::WireDrop(2), recurring: false });
+        assert_eq!(
+            p.faults[1],
+            Fault { lane: 1, kind: FaultKind::WireCorrupt(1), recurring: true }
+        );
+        assert_eq!(p.faults[2], Fault { lane: 2, kind: FaultKind::WireDelay(15), recurring: false });
+        assert_eq!(p.faults[3], Fault { lane: 0, kind: FaultKind::WireSplit(3), recurring: false });
+        assert_eq!(p.faults[4], Fault { lane: 3, kind: FaultKind::WireReset(1), recurring: false });
+        assert!(p.faults.iter().all(|f| f.kind.is_wire()));
+        assert_eq!(p.wire_faults_for_lane(0).len(), 2, "lane 0 owns wdrop + wsplit");
+        assert_eq!(p.wire_faults_for_lane(9).len(), 0);
+        // wire kinds are invisible to the worker-side fire predicates
+        let st = FaultState::new(p);
+        for nth in 1..=4 {
+            assert!(!st.fire_panic(0, nth) && !st.fire_stall(0, nth) && !st.fire_upload(0, nth));
+        }
+        assert_eq!(st.injected(), 0);
+        assert!(FaultPlan::parse("wdrop@0:0").is_err(), "ordinals are 1-based");
+        assert!(FaultPlan::parse("wdrop@0").is_err(), "wdrop needs :N");
+        assert!(FaultPlan::parse("wfoo@0:1").is_err(), "unknown wire kind");
+    }
+
+    #[test]
+    fn wseed_schedules_are_lane_count_independent() {
+        let p = FaultPlan::parse("wseed:42").unwrap();
+        assert!(p.has_wire_faults());
+        assert!(p.faults.is_empty(), "wseed alone adds no explicit clauses");
+        assert_eq!(p.deadline_ms, Some(2000), "wseed implies a collect watchdog");
+        assert_eq!(
+            FaultPlan::parse("wseed:42, deadline:500").unwrap().deadline_ms,
+            Some(500),
+            "an explicit deadline wins"
+        );
+        for lane in 0..16 {
+            let a = p.wire_faults_for_lane(lane);
+            let b = p.wire_faults_for_lane(lane);
+            assert_eq!(a, b, "lane {lane}: derived schedule not reproducible");
+            assert!(a.len() <= 1, "derived schedule is at most one fault per lane");
+            for f in &a {
+                assert!(f.kind.is_wire() && !f.recurring && f.lane == lane);
+            }
+        }
+        // at least one lane in 16 draws a fault for this seed, and the
+        // schedule differs across seeds (overwhelmingly)
+        assert!((0..16).any(|l| !p.wire_faults_for_lane(l).is_empty()));
+        let q = FaultPlan::parse("wseed:43").unwrap();
+        assert_ne!(
+            (0..16).map(|l| p.wire_faults_for_lane(l)).collect::<Vec<_>>(),
+            (0..16).map(|l| q.wire_faults_for_lane(l)).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

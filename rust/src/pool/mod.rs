@@ -188,6 +188,39 @@
 //! injected compile fault's firing is not reflected in the parent's
 //! `faults_injected` telemetry.  The dist tier asserts on neither.
 //!
+//! ### Heartbeats and liveness
+//!
+//! A process lane is also **heartbeated**: whenever a lane's job queue is
+//! idle for `MPQ_HEARTBEAT_MS` ms (default 250; `0` disables), its feeder
+//! writes a PING frame, and a dedicated socket-reader thread in the child
+//! answers PONG immediately — even while the worker's main thread is deep
+//! in a compute, an injected `slow@`, or a `stall@` (both threads share
+//! one mutex-guarded writer, locked across whole frames).  The
+//! coordinator's reader carries a liveness read-timeout of
+//! `max(8 × interval, 1000 ms)`: a lane producing **no frame at all** —
+//! neither reply nor pong — for that long is declared dead ("worker
+//! heartbeat missed"), reaped, and respawned through the ordinary
+//! supervision path.  Healthy-but-busy lanes never trip it; only a
+//! wedged, stopped (SIGSTOP-grade), or silently disconnected peer does.
+//!
+//! ### Wire faults (transport chaos)
+//!
+//! The fault grammar's **wire family** (`wdrop@L:N`, `wcorrupt@L:N`,
+//! `wdelay@L:MS`, `wsplit@L:N`, `wreset@L:N`, and the randomized
+//! `wseed:S` schedule — see `pool/fault.rs`) injects faults at the
+//! frame-write seam ([`WireConn`], wrapping `store::write_frame`) on the
+//! **coordinator side** of each lane's socket, counting that lane's
+//! outbound control frames 1-based (PINGs and BULK frames included).
+//! Injection is write-side only, so the peer exercises its *real* decode
+//! and rejection paths: a corrupted frame is caught by the checksum, a
+//! torn `wsplit` surfaces as "stream ended mid frame", a `wdrop`ped JOB
+//! starves the reply until the deadline watchdog fires.  Every recovery
+//! then flows through the existing supervisor (death → respawn → replay
+//! → requeue), which is the point: the chaos tier proves byte-equal
+//! results *after* healing, with [`EvalFleet::wire_counters`] exposing
+//! what was injected and `"injected fault:"` in every death reason it
+//! caused.
+//!
 //! ## Durability & resume (process-boundary crashes)
 //!
 //! The supervisor above covers worker-*thread* death; death of the whole
@@ -209,9 +242,11 @@
 mod fault;
 mod proc;
 mod transport;
+pub mod wire;
 mod worker;
 
 pub use fault::{Fault, FaultKind, FaultPlan};
+pub use wire::{WireConn, WireCounters, WireFaults, WireStats};
 
 use crate::adaround::AdaRoundJob;
 use crate::data::DataSet;
@@ -505,6 +540,12 @@ pub struct EvalFleet {
     proc: bool,
     /// fault schedule + fire accounting (empty plan in production)
     faults: Arc<FaultState>,
+    /// wire-level chaos telemetry (heartbeats, injected frames, liveness
+    /// deaths); always allocated so counters read zero without a plan
+    wire_stats: Arc<WireStats>,
+    /// materialized per-lane wire-fault schedule; `None` without wire
+    /// clauses, so the hot path stays a single branch on a plain option
+    wire_faults: Option<Arc<WireFaults>>,
     worker_restarts: AtomicUsize,
     jobs_requeued: AtomicUsize,
     degraded: Mutex<Vec<String>>,
@@ -568,6 +609,9 @@ impl EvalFleet {
             },
         };
         let (res_tx, res_rx) = mpsc::channel::<ResMsg>();
+        // materialize the wire schedule before FaultState consumes the plan
+        let wire_stats = Arc::new(WireStats::default());
+        let wire_faults = WireFaults::new(&plan, workers.max(1), wire_stats.clone());
         let fleet = Rc::new(Self {
             dir,
             manifest,
@@ -588,6 +632,8 @@ impl EvalFleet {
             next_lane: AtomicUsize::new(0),
             proc,
             faults: Arc::new(FaultState::new(plan)),
+            wire_stats,
+            wire_faults,
             worker_restarts: AtomicUsize::new(0),
             jobs_requeued: AtomicUsize::new(0),
             degraded: Mutex::new(Vec::new()),
@@ -684,6 +730,13 @@ impl EvalFleet {
         }
     }
 
+    /// Wire-level chaos telemetry: heartbeats sent, liveness deaths,
+    /// frames dropped/corrupted/split/reset by the injection seam.  All
+    /// zeros in production (no wire plan, heartbeats healthy).
+    pub fn wire_counters(&self) -> WireCounters {
+        self.wire_stats.counters()
+    }
+
     /// Per-worker compile-cache counters, in worker order.
     pub fn worker_stats(&self) -> Result<Vec<WorkerStats>> {
         let id = self.submit_broadcast(true, |_, _| Request::Stats)?;
@@ -748,6 +801,8 @@ impl EvalFleet {
                 self.res_tx.clone(),
                 init_tx,
                 &self.faults,
+                self.wire_faults.clone(),
+                self.wire_stats.clone(),
             )
             .map_err(|e| anyhow!("spawning fleet worker process {widx}: {e:#}"))?;
             return Ok(Worker { widx, lane, restarts: 0, tx: Some(tx), join: None, proc: Some(pl) });

@@ -22,22 +22,45 @@
 
 use super::fault::FaultState;
 use super::transport::{self, FaultDirective};
+use super::wire::{WireConn, WireFaults, WireStats};
 use super::worker;
 use super::{Job, Request, ResMsg, DEATH_NOTICE};
 use crate::serve::proto;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::os::unix::fs::DirBuilderExt;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// How long the coordinator waits for a freshly spawned worker process to
 /// connect back and complete the protocol handshake.
 const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Default coordinator→worker heartbeat interval (ms).  Overridable via
+/// `MPQ_HEARTBEAT_MS`; `0` disables heartbeats (and with them the
+/// liveness read timeout — production blocking semantics).
+const DEFAULT_HEARTBEAT_MS: u64 = 250;
+
+/// Heartbeat interval in ms (`MPQ_HEARTBEAT_MS`, default 250; 0 = off).
+fn heartbeat_ms() -> u64 {
+    match std::env::var("MPQ_HEARTBEAT_MS") {
+        Ok(s) => s.trim().parse().unwrap_or(DEFAULT_HEARTBEAT_MS),
+        Err(_) => DEFAULT_HEARTBEAT_MS,
+    }
+}
+
+/// Liveness deadline: a lane that produces no frame (reply *or* pong) for
+/// this long is declared dead.  Generous multiple of the ping interval so
+/// scheduler jitter never kills a healthy lane; the worker's dedicated
+/// socket-reader thread answers pings even mid-compute, so only a truly
+/// wedged (or disconnected) peer goes silent this long.
+fn liveness_ms(hb: u64) -> u64 {
+    (hb * 8).max(1000)
+}
 
 /// Process-wide spawn counter folded into every rendezvous path.  Worker
 /// indices restart at 0 per fleet, so two fleets in one process (parallel
@@ -129,6 +152,8 @@ pub(super) fn spawn_proc_worker(
     res: mpsc::Sender<ResMsg>,
     init: mpsc::Sender<(usize, Result<(), String>)>,
     faults: &Arc<FaultState>,
+    wire: Option<Arc<WireFaults>>,
+    wire_stats: Arc<WireStats>,
 ) -> Result<ProcLane> {
     // Rendezvous in a freshly created mode-0700 directory whose name is
     // unique across every fleet in this process (pid + spawn sequence):
@@ -204,12 +229,21 @@ pub(super) fn spawn_proc_worker(
     // inside it) as soon as the accept resolved
     drop(rdv);
 
+    let hb = heartbeat_ms();
     let setup = accepted.and_then(|mut stream| {
         let ready = (|| -> Result<()> {
             stream.set_nonblocking(false)?;
             stream.set_read_timeout(Some(CONNECT_DEADLINE))?;
             proto::handshake(&mut stream)?;
-            stream.set_read_timeout(None)?;
+            // with heartbeats on, the read timeout becomes the liveness
+            // deadline: the worker's reader thread pongs every ping even
+            // mid-compute, so a window with no frame at all means the
+            // peer is wedged or gone.  hb=0 restores blocking reads.
+            stream.set_read_timeout(if hb > 0 {
+                Some(Duration::from_millis(liveness_ms(hb)))
+            } else {
+                None
+            })?;
             Ok(())
         })();
         match ready {
@@ -240,14 +274,16 @@ pub(super) fn spawn_proc_worker(
         .name(format!("mpq-proc-feed-{widx}"))
         .spawn({
             let faults = faults.clone();
-            move || feed_loop(writer, rx, faults, lane)
+            let conn = WireConn::new(wire.clone(), lane);
+            let stats = wire_stats.clone();
+            move || feed_loop(writer, rx, faults, lane, conn, stats, hb)
         })
         .context("spawning process-lane feeder thread")?;
     let reader = match std::thread::Builder::new()
         .name(format!("mpq-proc-read-{widx}"))
         .spawn({
             let closing = closing.clone();
-            move || read_loop(stream, widx, res, init, closing)
+            move || read_loop(stream, widx, lane, res, init, closing, wire, wire_stats, hb)
         }) {
         Ok(r) => r,
         Err(e) => {
@@ -265,11 +301,44 @@ pub(super) fn spawn_proc_worker(
 /// global one-shot depletion and per-incarnation recurrence semantics
 /// (this thread's counters reset with each respawn, exactly like a thread
 /// lane's), and the resulting [`FaultDirective`] rides the JOB frame.
-fn feed_loop(mut w: UnixStream, rx: mpsc::Receiver<Job>, faults: Arc<FaultState>, lane: usize) {
+///
+/// With heartbeats on, an idle queue turns into a PING every `hb` ms — so
+/// a lane waiting for work (or waiting on a long compute; the queue is
+/// drained by the child's reader thread) keeps proving the path to the
+/// worker is alive, and the worker keeps proving it can answer.  Every
+/// frame — job or ping — goes through the lane's [`WireConn`], so wire
+/// faults hit the heartbeat path too.
+fn feed_loop(
+    mut w: UnixStream,
+    rx: mpsc::Receiver<Job>,
+    faults: Arc<FaultState>,
+    lane: usize,
+    conn: WireConn,
+    stats: Arc<WireStats>,
+    hb: u64,
+) {
     let slow = faults.slow_ms(lane).unwrap_or(0);
     let mut probes = 0usize;
     let mut uploads = 0usize;
-    while let Ok(Job { id, req }) = rx.recv() {
+    let mut ping_seq = 0u64;
+    loop {
+        let job = if hb == 0 {
+            rx.recv().map_err(|_| ())
+        } else {
+            match rx.recv_timeout(Duration::from_millis(hb)) {
+                Ok(j) => Ok(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    ping_seq += 1;
+                    stats.heartbeats_sent.fetch_add(1, Ordering::Relaxed);
+                    if transport::write_ping(&mut w, &conn, ping_seq).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => Err(()),
+            }
+        };
+        let Ok(Job { id, req }) = job else { break };
         let mut d = FaultDirective { slow_ms: slow, ..Default::default() };
         if matches!(req, Request::Probe { .. }) {
             probes += 1;
@@ -285,27 +354,55 @@ fn feed_loop(mut w: UnixStream, rx: mpsc::Receiver<Job>, faults: Arc<FaultState>
             d.uploads = uploads as u64;
             d.upload_fail = faults.fire_upload(lane, uploads);
         }
-        if transport::write_job(&mut w, id, &req, &d).is_err() {
-            // broken socket: the reader reports the death; nothing to do
-            // here but stop feeding (the unsent job stays in its tracked
-            // slot and is requeued by the supervisor)
+        if transport::write_job(&mut w, &conn, id, &req, &d).is_err() {
+            // broken socket (or an injected wsplit/wreset): the reader
+            // reports the death; nothing to do here but stop feeding (the
+            // unsent job stays in its tracked slot and is requeued by the
+            // supervisor)
             break;
         }
     }
-    // half-close so the child's read_job sees a clean EOF and exits
+    // half-close so the child's read loop sees a clean EOF and exits
     let _ = w.shutdown(std::net::Shutdown::Write);
+}
+
+/// Does this error chain bottom out in a read-timeout (the liveness
+/// deadline elapsing with no frame at all)?
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        })
+    })
 }
 
 /// Bridge the socket back onto the fleet's channels: first the one-time
 /// INIT outcome, then replies until EOF or error — which, unless the
-/// teardown was deliberate, becomes the lane's death notice.
+/// teardown was deliberate, becomes the lane's death notice.  A liveness
+/// timeout (no reply *or* pong within the deadline) is a distinct death
+/// reason; when the lane's wire plan fired recently, the injected root
+/// cause is appended so chaos errors always name the fault.
+#[allow(clippy::too_many_arguments)]
 fn read_loop(
     mut stream: UnixStream,
     widx: usize,
+    lane: usize,
     res: mpsc::Sender<ResMsg>,
     init: mpsc::Sender<(usize, Result<(), String>)>,
     closing: Arc<AtomicBool>,
+    wire: Option<Arc<WireFaults>>,
+    stats: Arc<WireStats>,
+    hb: u64,
 ) {
+    let enrich = |msg: String| -> String {
+        match wire.as_ref().and_then(|w| w.last_for(lane)) {
+            Some(cause) => format!("{msg}; after {cause}"),
+            None => msg,
+        }
+    };
     match transport::read_init(&mut stream) {
         Ok(Some(outcome)) => {
             let failed = outcome.is_err();
@@ -340,18 +437,23 @@ fn read_loop(
                     let _ = res.send((
                         DEATH_NOTICE,
                         widx,
-                        Err("worker process exited unexpectedly (socket closed)".into()),
+                        Err(enrich("worker process exited unexpectedly (socket closed)".into())),
                     ));
                 }
                 return;
             }
             Err(e) => {
                 if !closing.load(Ordering::SeqCst) {
-                    let _ = res.send((
-                        DEATH_NOTICE,
-                        widx,
-                        Err(format!("worker process connection failed: {e:#}")),
-                    ));
+                    let msg = if hb > 0 && is_timeout(&e) {
+                        stats.heartbeat_deaths.fetch_add(1, Ordering::Relaxed);
+                        format!(
+                            "worker heartbeat missed (no frame within {}ms)",
+                            liveness_ms(hb)
+                        )
+                    } else {
+                        format!("worker process connection failed: {e:#}")
+                    };
+                    let _ = res.send((DEATH_NOTICE, widx, Err(enrich(msg))));
                 }
                 return;
             }
@@ -363,10 +465,20 @@ fn read_loop(
 /// coordinator, handshake, build the backend state, then serve framed
 /// jobs until the coordinator half-closes the socket.
 ///
-/// Injected `panic@` faults are deliberately **uncaught** here: a process
-/// lane's panic is a process death (exit 101 → socket EOF → death notice
-/// at the coordinator), which is precisely how supervision generalizes
-/// from caught thread panics to SIGKILL-grade failures.
+/// Two threads: a dedicated **socket reader** answers PING frames with
+/// PONGs the instant they arrive and forwards JOB frames over an internal
+/// channel, while the main thread computes and writes replies.  Both
+/// write through one mutex-guarded clone of the stream, and the lock is
+/// held across whole frames, so a PONG can never interleave mid-reply.
+/// This split is what makes the coordinator's liveness deadline sound:
+/// a worker deep in a long compute (or an injected `slow@`/`stall@`)
+/// still pongs, so only a truly wedged or dead process goes silent.
+///
+/// Injected `panic@` faults are deliberately **uncaught**, and run on the
+/// main thread: a process lane's panic is a process death (exit 101 →
+/// socket EOF → death notice at the coordinator), which is precisely how
+/// supervision generalizes from caught thread panics to SIGKILL-grade
+/// failures.
 pub(super) fn run_worker(
     socket: &Path,
     dir: &Path,
@@ -376,25 +488,58 @@ pub(super) fn run_worker(
     let mut stream = UnixStream::connect(socket)
         .with_context(|| format!("connecting to coordinator socket {}", socket.display()))?;
     proto::handshake(&mut stream).context("coordinator handshake")?;
+    let writer = Arc::new(Mutex::new(
+        stream.try_clone().context("cloning worker socket for replies")?,
+    ));
+
+    // Stand the reader up before the (potentially slow) backend init so
+    // pings sent during compilation are answered too.
+    let (jtx, jrx) = mpsc::channel();
+    let reader = std::thread::Builder::new()
+        .name(format!("mpq-worker-read-{lane}"))
+        .spawn({
+            let writer = writer.clone();
+            move || -> Result<()> {
+                loop {
+                    match transport::read_job_or_ping(&mut stream)? {
+                        Some(transport::WorkerIn::Ping(seq)) => {
+                            let mut w = writer.lock().unwrap();
+                            transport::write_pong(&mut *w, seq)?;
+                        }
+                        Some(transport::WorkerIn::Job(id, req, d)) => {
+                            if jtx.send((id, req, d)).is_err() {
+                                return Ok(()); // main thread gone
+                            }
+                        }
+                        // coordinator half-closed: clean end of the stream
+                        None => return Ok(()),
+                    }
+                }
+            }
+        })
+        .context("spawning worker socket-reader thread")?;
+
     let opens = Arc::new(AtomicUsize::new(0));
     let cf = compile_fault.map(|nth| (nth, Arc::new(AtomicUsize::new(0))));
     let mut state = match worker::init_state(dir, opens, cf) {
         Ok(state) => {
-            transport::write_init(&mut stream, &Ok(()))?;
+            transport::write_init(&mut *writer.lock().unwrap(), &Ok(()))?;
             state
         }
         Err(e) => {
-            transport::write_init(&mut stream, &Err(format!("{e:#}")))?;
+            transport::write_init(&mut *writer.lock().unwrap(), &Err(format!("{e:#}")))?;
             return Ok(());
         }
     };
-    while let Some((id, req, d)) = transport::read_job(&mut stream)? {
+    while let Ok((id, req, d)) = jrx.recv() {
         if d.slow_ms > 0 {
             std::thread::sleep(Duration::from_millis(d.slow_ms));
         }
         if d.stall {
-            // block far past any configured deadline; the collect watchdog
-            // converts this lane into a death and reaps the process
+            // block far past any configured deadline; the reader thread
+            // keeps answering pings, so it is the collect watchdog — not
+            // the liveness timeout — that converts this lane into a death
+            // and reaps the process, exactly as for thread lanes
             std::thread::sleep(Duration::from_secs(3600));
         }
         if d.panic {
@@ -409,7 +554,13 @@ pub(super) fn run_worker(
         } else {
             worker::serve(&mut state, req)
         };
-        transport::write_reply(&mut stream, id, &out.map_err(|e| format!("{e:#}")))?;
+        transport::write_reply(&mut *writer.lock().unwrap(), id, &out.map_err(|e| format!("{e:#}")))?;
     }
-    Ok(())
+    // The reader ended the job stream: a clean half-close (Ok) or a wire
+    // error (torn frame, checksum mismatch) that must surface as this
+    // process's exit status so the coordinator's EOF death carries it.
+    match reader.join() {
+        Ok(r) => r,
+        Err(_) => bail!("worker socket-reader thread panicked"),
+    }
 }

@@ -22,6 +22,7 @@
 //! (1..=4) and the serve control plane (16..48), so a frame can never be
 //! mistaken for the wrong plane.
 
+use super::wire::WireConn;
 use super::{FitShard, Partial, ProbeKind, Request, WorkerStats};
 use crate::adaround::{AdaRoundCfg, AdaRoundJob};
 use crate::engine::StreamingSqnr;
@@ -50,7 +51,7 @@ pub(super) const MAX_IPC_FRAME: usize = 1 << 30;
 
 /// Frame kinds for the worker lane (64.. — disjoint from journal kinds
 /// 1..=4 and serve kinds 16..48).
-mod wire {
+mod kinds {
     /// coordinator → worker: one job; digest = job id
     pub const JOB: u16 = 64;
     /// worker → coordinator: one reply; digest = job id
@@ -59,14 +60,23 @@ mod wire {
     pub const BULK: u16 = 66;
     /// worker → coordinator: init outcome, sent once after the handshake
     pub const INIT: u16 = 67;
+    /// coordinator → worker: liveness heartbeat; digest = ping sequence,
+    /// empty payload.  A raw frame, not a message — no bulk-count word.
+    pub const PING: u16 = 68;
+    /// worker → coordinator: heartbeat answer echoing the ping sequence.
+    /// Sent by the worker's socket-reader thread even while a long
+    /// compute is in flight, so a busy lane never reads as dead.
+    pub const PONG: u16 = 69;
 }
 
 fn kind_name(kind: u16) -> &'static str {
     match kind {
-        wire::JOB => "JOB",
-        wire::REPLY => "REPLY",
-        wire::BULK => "BULK",
-        wire::INIT => "INIT",
+        kinds::JOB => "JOB",
+        kinds::REPLY => "REPLY",
+        kinds::BULK => "BULK",
+        kinds::INIT => "INIT",
+        kinds::PING => "PING",
+        kinds::PONG => "PONG",
         _ => "UNKNOWN",
     }
 }
@@ -272,7 +282,10 @@ impl Dec {
 
 /// Write one message: the control frame (payload = `u32` bulk count + body)
 /// followed by its BULK frames, all stamped with `id` in the digest field.
-fn write_msg(w: &mut impl Write, kind: u16, id: u64, enc: Enc) -> Result<()> {
+/// Every frame goes through the caller's [`WireConn`] — the single seam
+/// where the fault plan's wire clauses inject (pass [`WireConn::off`] for
+/// worker-side writers; injection is coordinator-side only).
+fn write_msg(w: &mut impl Write, conn: &WireConn, kind: u16, id: u64, enc: Enc) -> Result<()> {
     let mut payload = Vec::with_capacity(4 + enc.buf.len());
     payload.extend_from_slice(&(enc.bulk.len() as u32).to_le_bytes());
     payload.extend_from_slice(&enc.buf);
@@ -283,26 +296,40 @@ fn write_msg(w: &mut impl Write, kind: u16, id: u64, enc: Enc) -> Result<()> {
             payload.len()
         );
     }
-    store::write_frame(w, kind, id, &payload)
+    conn.write_frame(w, kind, id, &payload)
         .with_context(|| format!("writing {} frame", kind_name(kind)))?;
     for b in &enc.bulk {
         if b.len() > MAX_IPC_FRAME {
             bail!("BULK frame is {} bytes, over the {MAX_IPC_FRAME}-byte cap", b.len());
         }
-        store::write_frame(w, wire::BULK, id, b).context("writing BULK frame")?;
+        conn.write_frame(w, kinds::BULK, id, b).context("writing BULK frame")?;
     }
     Ok(())
 }
 
 /// Read one message of the expected kind; `Ok(None)` on clean EOF before
 /// any frame.  Consumes exactly the declared BULK frames, validating that
-/// each carries the control frame's job id.
+/// each carries the control frame's job id.  Heartbeat PONGs can
+/// interleave between any two worker→coordinator messages (they exist to
+/// reset the reader's liveness timer and carry nothing) — they are
+/// consumed and skipped here.
 fn read_msg(r: &mut impl Read, want: u16) -> Result<Option<(u64, Dec)>> {
-    let Some(frame) = store::read_frame(r, MAX_IPC_FRAME)
-        .with_context(|| format!("reading {} frame", kind_name(want)))?
-    else {
-        return Ok(None);
+    let frame = loop {
+        let Some(frame) = store::read_frame(r, MAX_IPC_FRAME)
+            .with_context(|| format!("reading {} frame", kind_name(want)))?
+        else {
+            return Ok(None);
+        };
+        if frame.kind == kinds::PONG {
+            continue;
+        }
+        break frame;
     };
+    parse_msg(frame, r, want).map(Some)
+}
+
+/// Validate a control frame's kind and consume its declared BULK frames.
+fn parse_msg(frame: store::Record, r: &mut impl Read, want: u16) -> Result<(u64, Dec)> {
     if frame.kind != want {
         bail!(
             "expected a {} frame, got {} (kind {})",
@@ -332,7 +359,7 @@ fn read_msg(r: &mut impl Read, want: u16) -> Result<Option<(u64, Dec)>> {
         let Some(b) = store::read_frame(r, MAX_IPC_FRAME).context("reading BULK frame")? else {
             bail!("stream ended at BULK frame {i} of {nbulk}");
         };
-        if b.kind != wire::BULK {
+        if b.kind != kinds::BULK {
             bail!("expected a BULK frame, got {} (kind {})", kind_name(b.kind), b.kind);
         }
         if b.digest != frame.digest {
@@ -344,10 +371,10 @@ fn read_msg(r: &mut impl Read, want: u16) -> Result<Option<(u64, Dec)>> {
         }
         bulk.push(b.payload);
     }
-    Ok(Some((
+    Ok((
         frame.digest,
         Dec { buf: frame.payload, pos: 4, bulk: bulk.into_iter() },
-    )))
+    ))
 }
 
 // ---------------------------------------------------------------------------
@@ -773,9 +800,19 @@ fn dec_reply(d: &mut Dec) -> Result<Result<Partial, String>> {
 // public message API
 // ---------------------------------------------------------------------------
 
-/// Ship one job (request + fault directive) under `id`.
+/// What the worker's socket-reader sees next: a job to serve, or a
+/// liveness ping to answer immediately.
+pub(super) enum WorkerIn {
+    Job(u64, Request, FaultDirective),
+    /// carries the coordinator's ping sequence, echoed back in the PONG
+    Ping(u64),
+}
+
+/// Ship one job (request + fault directive) under `id`, through the
+/// lane's wire seam.
 pub(super) fn write_job(
     w: &mut impl Write,
+    conn: &WireConn,
     id: u64,
     req: &Request,
     d: &FaultDirective,
@@ -783,21 +820,49 @@ pub(super) fn write_job(
     let mut e = Enc::default();
     enc_directive(&mut e, d);
     enc_request(&mut e, req);
-    write_msg(w, wire::JOB, id, e)
+    write_msg(w, conn, kinds::JOB, id, e)
 }
 
-/// Receive one job; `Ok(None)` on clean EOF (coordinator closed the lane).
-pub(super) fn read_job(r: &mut impl Read) -> Result<Option<(u64, Request, FaultDirective)>> {
-    let Some((id, mut d)) = read_msg(r, wire::JOB)? else {
+/// Receive one job or heartbeat ping; `Ok(None)` on clean EOF
+/// (coordinator closed the lane).
+pub(super) fn read_job_or_ping(r: &mut impl Read) -> Result<Option<WorkerIn>> {
+    let Some(frame) = store::read_frame(r, MAX_IPC_FRAME).context("reading JOB frame")? else {
         return Ok(None);
     };
+    if frame.kind == kinds::PING {
+        return Ok(Some(WorkerIn::Ping(frame.digest)));
+    }
+    let (id, mut d) = parse_msg(frame, r, kinds::JOB)?;
     let directive = dec_directive(&mut d)?;
     let req = dec_request(&mut d)?;
     d.done()?;
-    Ok(Some((id, req, directive)))
+    Ok(Some(WorkerIn::Job(id, req, directive)))
 }
 
-/// Ship one reply under `id`.
+/// Receive one job, rejecting pings (codec tests and single-message
+/// readers; the worker serving loop uses [`read_job_or_ping`]).
+pub(super) fn read_job(r: &mut impl Read) -> Result<Option<(u64, Request, FaultDirective)>> {
+    match read_job_or_ping(r)? {
+        None => Ok(None),
+        Some(WorkerIn::Job(id, req, d)) => Ok(Some((id, req, d))),
+        Some(WorkerIn::Ping(_)) => bail!("unexpected PING frame where a JOB was required"),
+    }
+}
+
+/// Coordinator → worker liveness probe (raw frame, no bulk-count word).
+/// Goes through the wire seam, so wire faults can drop or corrupt pings
+/// like any other frame.
+pub(super) fn write_ping(w: &mut impl Write, conn: &WireConn, seq: u64) -> Result<()> {
+    conn.write_frame(w, kinds::PING, seq, &[]).context("writing PING frame")
+}
+
+/// Worker → coordinator heartbeat answer.  Callers hold the worker's
+/// shared writer lock, so a pong never interleaves mid-message.
+pub(super) fn write_pong(w: &mut impl Write, seq: u64) -> Result<()> {
+    store::write_frame(w, kinds::PONG, seq, &[]).context("writing PONG frame")
+}
+
+/// Ship one reply under `id` (worker-side: no injection).
 pub(super) fn write_reply(
     w: &mut impl Write,
     id: u64,
@@ -805,12 +870,14 @@ pub(super) fn write_reply(
 ) -> Result<()> {
     let mut e = Enc::default();
     enc_reply(&mut e, res);
-    write_msg(w, wire::REPLY, id, e)
+    write_msg(w, &WireConn::off(), kinds::REPLY, id, e)
 }
 
 /// Receive one reply; `Ok(None)` on clean EOF (worker exited).
+/// Interleaved PONGs are consumed silently — each received frame,
+/// pong or reply, resets the caller's read-timeout liveness clock.
 pub(super) fn read_reply(r: &mut impl Read) -> Result<Option<(u64, Result<Partial, String>)>> {
-    let Some((id, mut d)) = read_msg(r, wire::REPLY)? else {
+    let Some((id, mut d)) = read_msg(r, kinds::REPLY)? else {
         return Ok(None);
     };
     let res = dec_reply(&mut d)?;
@@ -818,7 +885,7 @@ pub(super) fn read_reply(r: &mut impl Read) -> Result<Option<(u64, Result<Partia
     Ok(Some((id, res)))
 }
 
-/// Ship the worker's one-time init outcome.
+/// Ship the worker's one-time init outcome (worker-side: no injection).
 pub(super) fn write_init(w: &mut impl Write, res: &Result<(), String>) -> Result<()> {
     let mut e = Enc::default();
     match res {
@@ -828,13 +895,14 @@ pub(super) fn write_init(w: &mut impl Write, res: &Result<(), String>) -> Result
             e.str(msg);
         }
     }
-    write_msg(w, wire::INIT, 0, e)
+    write_msg(w, &WireConn::off(), kinds::INIT, 0, e)
 }
 
 /// Receive the init outcome; `Ok(None)` on EOF before it arrived (the
-/// worker process died during init).
+/// worker process died during init).  Tolerates a PONG arriving first —
+/// the feeder may ping before the worker's init completes.
 pub(super) fn read_init(r: &mut impl Read) -> Result<Option<Result<(), String>>> {
-    let Some((_, mut d)) = read_msg(r, wire::INIT)? else {
+    let Some((_, mut d)) = read_msg(r, kinds::INIT)? else {
         return Ok(None);
     };
     let res = match d.u8()? {
@@ -855,12 +923,12 @@ mod tests {
     /// deterministic).
     fn job_roundtrips(req: Request, d: FaultDirective) -> (u64, Request, FaultDirective) {
         let mut buf = Vec::new();
-        write_job(&mut buf, 42, &req, &d).unwrap();
+        write_job(&mut buf, &WireConn::off(), 42, &req, &d).unwrap();
         let mut r: &[u8] = &buf;
         let (id, got, gd) = read_job(&mut r).unwrap().unwrap();
         assert!(read_job(&mut r).unwrap().is_none(), "trailing data after message");
         let mut again = Vec::new();
-        write_job(&mut again, 42, &got, &gd).unwrap();
+        write_job(&mut again, &WireConn::off(), 42, &got, &gd).unwrap();
         assert_eq!(buf, again, "re-encode of the decoded job differs");
         assert_eq!(d, gd);
         (id, got, gd)
@@ -1035,6 +1103,7 @@ mod tests {
         let mut buf = Vec::new();
         write_job(
             &mut buf,
+            &WireConn::off(),
             3,
             &Request::Fit { model: "m".into(), set: 0, qp: Arc::new(big.clone()) },
             &FaultDirective::default(),
@@ -1043,13 +1112,13 @@ mod tests {
         // frame-level structure: one JOB control frame + one BULK frame
         let mut r: &[u8] = &buf;
         let ctl = store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().unwrap();
-        assert_eq!((ctl.kind, ctl.digest), (wire::JOB, 3));
+        assert_eq!((ctl.kind, ctl.digest), (kinds::JOB, 3));
         assert!(
             ctl.payload.len() < CONTROL_BULK_THRESHOLD,
             "control frame must stay small when tensors go out of line"
         );
         let blk = store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().unwrap();
-        assert_eq!((blk.kind, blk.digest), (wire::BULK, 3));
+        assert_eq!((blk.kind, blk.digest), (kinds::BULK, 3));
         assert!(store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().is_none());
         // and the message-level decode reassembles the tensor bit-exactly
         let mut r: &[u8] = &buf;
@@ -1065,6 +1134,7 @@ mod tests {
         let mut buf = Vec::new();
         write_job(
             &mut buf,
+            &WireConn::off(),
             4,
             &Request::Fit { model: "m".into(), set: 0, qp: Arc::new(tensor(8)) },
             &FaultDirective::default(),
@@ -1073,6 +1143,50 @@ mod tests {
         let mut r: &[u8] = &buf;
         store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().unwrap();
         assert!(store::read_frame(&mut r, MAX_IPC_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn heartbeats_interleave_transparently() {
+        // PING surfaces to the worker's serving loop as WorkerIn::Ping
+        let mut buf = Vec::new();
+        write_ping(&mut buf, &WireConn::off(), 11).unwrap();
+        write_job(&mut buf, &WireConn::off(), 5, &Request::Stats, &FaultDirective::default())
+            .unwrap();
+        let mut r: &[u8] = &buf;
+        match read_job_or_ping(&mut r).unwrap().unwrap() {
+            WorkerIn::Ping(seq) => assert_eq!(seq, 11),
+            WorkerIn::Job(..) => panic!("ping decoded as a job"),
+        }
+        match read_job_or_ping(&mut r).unwrap().unwrap() {
+            WorkerIn::Job(id, Request::Stats, _) => assert_eq!(id, 5),
+            _ => panic!("job after ping decoded wrong"),
+        }
+        assert!(read_job_or_ping(&mut r).unwrap().is_none());
+        // ...but the strict single-message reader rejects it
+        let mut buf = Vec::new();
+        write_ping(&mut buf, &WireConn::off(), 1).unwrap();
+        let mut r: &[u8] = &buf;
+        assert!(read_job(&mut r).is_err());
+
+        // PONGs vanish inside the coordinator-side readers: replies and
+        // init outcomes decode as if the pongs were never there
+        let mut buf = Vec::new();
+        write_pong(&mut buf, 1).unwrap();
+        write_reply(&mut buf, 9, &Ok(Partial::Unit)).unwrap();
+        write_pong(&mut buf, 2).unwrap();
+        write_pong(&mut buf, 3).unwrap();
+        write_reply(&mut buf, 10, &Err("boom".into())).unwrap();
+        let mut r: &[u8] = &buf;
+        let (id, res) = read_reply(&mut r).unwrap().unwrap();
+        assert!(matches!((id, res), (9, Ok(Partial::Unit))));
+        let (id, res) = read_reply(&mut r).unwrap().unwrap();
+        assert_eq!((id, res.unwrap_err().as_str()), (10, "boom"));
+        assert!(read_reply(&mut r).unwrap().is_none());
+        let mut buf = Vec::new();
+        write_pong(&mut buf, 4).unwrap();
+        write_init(&mut buf, &Ok(())).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_init(&mut r).unwrap().unwrap(), Ok(()));
     }
 
     #[test]
@@ -1095,7 +1209,8 @@ mod tests {
         assert!(err.contains("JOB") && err.contains("REPLY"), "{err}");
 
         let mut buf = Vec::new();
-        write_job(&mut buf, 1, &Request::Stats, &FaultDirective::default()).unwrap();
+        write_job(&mut buf, &WireConn::off(), 1, &Request::Stats, &FaultDirective::default())
+            .unwrap();
         let mut r: &[u8] = &buf[..buf.len() - 1];
         assert!(read_job(&mut r).is_err(), "truncated frame must error, not EOF");
     }

@@ -1,0 +1,451 @@
+//! The wire seam: fault injection + telemetry for framed-socket I/O.
+//!
+//! Both socket control planes — the proc-lane worker transport
+//! (`pool/transport.rs`) and the `mpqd` job protocol (`serve/proto.rs`)
+//! — funnel every frame through a [`WireConn`], a thin wrapper over
+//! [`store::write_frame`]/[`store::read_frame`].  With no wire faults
+//! armed the wrapper is pass-through; with a [`WireFaults`] state
+//! attached it realizes the `wdrop`/`wcorrupt`/`wdelay`/`wsplit`/
+//! `wreset` clauses of the [`FaultPlan`](super::FaultPlan) grammar
+//! **on the write side only**, so the *reader* always exercises its
+//! real decode/reject paths (checksum mismatch, torn frame, clean EOF)
+//! rather than a mock.
+//!
+//! Frame ordinals are per-connection: a [`WireConn`] counts the frames
+//! written through it, and `wdrop@L:3` fires on the 3rd frame written
+//! on lane L's connection (PING and BULK frames count).  A respawned
+//! worker gets a fresh `WireConn`, so — exactly like the compute-fault
+//! family — ordinals are per *incarnation* while one-shot consumption
+//! is fleet-lifetime (shared [`WireFaults`]).
+//!
+//! [`WireStats`] is the always-on counter block (heartbeats, deadline
+//! cancels, sheds, retries live here too, incremented by the fleet /
+//! daemon / client directly); [`WireCounters`] is its plain snapshot
+//! for `telemetry::Snapshot`.
+
+use super::fault::{Fault, FaultKind, FaultPlan};
+use crate::store::{self, Record};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Always-on wire telemetry, shared by every connection of one fleet or
+/// daemon.  Injection counters are bumped by [`WireConn`]; the liveness
+/// / deadline / retry / shed counters are bumped by the code that owns
+/// those policies (supervisor, daemon scheduler, client).
+#[derive(Debug, Default)]
+pub struct WireStats {
+    /// Frames swallowed by `wdrop`.
+    pub frames_dropped: AtomicU64,
+    /// Frames bit-flipped by `wcorrupt` (reader must checksum-reject).
+    pub frames_corrupted: AtomicU64,
+    /// Frames stalled mid-write by `wdelay`.
+    pub frames_delayed: AtomicU64,
+    /// Torn partial writes from `wsplit`.
+    pub splits: AtomicU64,
+    /// Connections failed by `wreset`.
+    pub resets: AtomicU64,
+    /// Heartbeat PING frames sent by the coordinator.
+    pub heartbeats_sent: AtomicU64,
+    /// Lanes declared dead for missing the liveness deadline.
+    pub heartbeat_deaths: AtomicU64,
+    /// Client-side reconnect/resubmit attempts.
+    pub retries: AtomicU64,
+    /// Jobs cancelled for exceeding their per-job deadline.
+    pub deadline_cancels: AtomicU64,
+    /// Submissions shed with a typed `RETRY_AFTER` reply.
+    pub sheds: AtomicU64,
+}
+
+impl WireStats {
+    /// Plain snapshot for telemetry.
+    pub fn counters(&self) -> WireCounters {
+        WireCounters {
+            frames_dropped: self.frames_dropped.load(Ordering::Relaxed),
+            frames_corrupted: self.frames_corrupted.load(Ordering::Relaxed),
+            frames_delayed: self.frames_delayed.load(Ordering::Relaxed),
+            splits: self.splits.load(Ordering::Relaxed),
+            resets: self.resets.load(Ordering::Relaxed),
+            heartbeats_sent: self.heartbeats_sent.load(Ordering::Relaxed),
+            heartbeat_deaths: self.heartbeat_deaths.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            deadline_cancels: self.deadline_cancels.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of [`WireStats`] — the `telemetry::Snapshot.wire` field.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireCounters {
+    pub frames_dropped: u64,
+    pub frames_corrupted: u64,
+    pub frames_delayed: u64,
+    pub splits: u64,
+    pub resets: u64,
+    pub heartbeats_sent: u64,
+    pub heartbeat_deaths: u64,
+    pub retries: u64,
+    pub deadline_cancels: u64,
+    pub sheds: u64,
+}
+
+impl WireCounters {
+    /// Anything nonzero?  Gates the conditional telemetry note section.
+    pub fn any(&self) -> bool {
+        *self != WireCounters::default()
+    }
+
+    /// Field-wise accumulate (for merging fleet + daemon stats).
+    pub fn add(&mut self, o: &WireCounters) {
+        self.frames_dropped += o.frames_dropped;
+        self.frames_corrupted += o.frames_corrupted;
+        self.frames_delayed += o.frames_delayed;
+        self.splits += o.splits;
+        self.resets += o.resets;
+        self.heartbeats_sent += o.heartbeats_sent;
+        self.heartbeat_deaths += o.heartbeat_deaths;
+        self.retries += o.retries;
+        self.deadline_cancels += o.deadline_cancels;
+        self.sheds += o.sheds;
+    }
+
+    /// Total discrete wire faults injected (delay is continuous and
+    /// excluded, mirroring how `slow@` is not counted by `FaultState`).
+    pub fn injected(&self) -> u64 {
+        self.frames_dropped + self.frames_corrupted + self.splits + self.resets
+    }
+}
+
+/// One armed wire clause with its remaining-fire accounting (`1` for
+/// one-shot, `usize::MAX` for recurring — mirrors `FaultState`).
+struct WireClause {
+    lane: usize,
+    kind: FaultKind,
+    fires: AtomicUsize,
+}
+
+/// Fleet-lifetime wire-fault state: the materialized clauses (explicit
+/// wire tokens plus the `wseed`-derived per-lane schedule), the shared
+/// [`WireStats`], and the last fault fired per lane — used to enrich a
+/// death reason so a wire-caused death names the injected root cause.
+pub struct WireFaults {
+    clauses: Vec<WireClause>,
+    stats: Arc<WireStats>,
+    last: Mutex<HashMap<usize, String>>,
+}
+
+impl WireFaults {
+    /// Materialize the plan's wire schedule over `lanes` connections
+    /// (plus any explicit clause targeting a lane beyond that — a later
+    /// `resize` may grow into it).  `None` when the plan carries no
+    /// wire faults, keeping the fast path allocation-free.  `wseed`
+    /// derivation only covers lanes below `lanes`; lanes added by a
+    /// later resize get no derived clauses.
+    pub fn new(plan: &FaultPlan, lanes: usize, stats: Arc<WireStats>) -> Option<Arc<Self>> {
+        if !plan.has_wire_faults() {
+            return None;
+        }
+        let mut faults: Vec<Fault> = Vec::new();
+        for lane in 0..lanes.max(1) {
+            faults.extend(plan.wire_faults_for_lane(lane));
+        }
+        faults.extend(
+            plan.faults
+                .iter()
+                .filter(|f| f.kind.is_wire() && f.lane >= lanes.max(1))
+                .copied(),
+        );
+        let clauses = faults
+            .into_iter()
+            .map(|f| WireClause {
+                lane: f.lane,
+                kind: f.kind,
+                fires: AtomicUsize::new(if f.recurring { usize::MAX } else { 1 }),
+            })
+            .collect();
+        Some(Arc::new(Self { clauses, stats, last: Mutex::new(HashMap::new()) }))
+    }
+
+    /// The shared counter block.
+    pub fn stats(&self) -> &WireStats {
+        &self.stats
+    }
+
+    /// Description of the last wire fault fired on `lane` — appended to
+    /// a death reason so supervision errors name the injected cause.
+    pub fn last_for(&self, lane: usize) -> Option<String> {
+        self.last.lock().unwrap().get(&lane).cloned()
+    }
+
+    /// Continuous mid-frame delay for `lane` (largest wins, like
+    /// `slow@`); never consumes a fire.
+    fn delay_ms(&self, lane: usize) -> Option<u64> {
+        self.clauses
+            .iter()
+            .filter_map(|c| match c.kind {
+                FaultKind::WireDelay(ms) if c.lane == lane => Some(ms),
+                _ => None,
+            })
+            .max()
+    }
+
+    /// Fire-and-consume the first discrete clause matching frame `nth`
+    /// on `lane`.
+    fn fire(&self, lane: usize, nth: usize) -> Option<FaultKind> {
+        for c in &self.clauses {
+            let hit = match c.kind {
+                FaultKind::WireDrop(n)
+                | FaultKind::WireCorrupt(n)
+                | FaultKind::WireSplit(n)
+                | FaultKind::WireReset(n) => c.lane == lane && n == nth,
+                _ => false,
+            };
+            if hit
+                && c.fires
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| match v {
+                        0 => None,
+                        usize::MAX => Some(usize::MAX),
+                        v => Some(v - 1),
+                    })
+                    .is_ok()
+            {
+                return Some(c.kind);
+            }
+        }
+        None
+    }
+
+    fn note(&self, lane: usize, msg: &str) {
+        self.last.lock().unwrap().insert(lane, msg.to_string());
+    }
+}
+
+/// Per-connection frame I/O seam.  All frame writes on a faultable
+/// connection go through [`WireConn::write_frame`]; reads go through
+/// [`WireConn::read_frame`] (pass-through today — injection is
+/// write-side so readers exercise their genuine reject paths).
+pub struct WireConn {
+    faults: Option<Arc<WireFaults>>,
+    lane: usize,
+    writes: AtomicUsize,
+}
+
+impl WireConn {
+    /// A connection with injection disabled (worker-side writers, and
+    /// every caller running without a wire plan).
+    pub fn off() -> Self {
+        Self { faults: None, lane: 0, writes: AtomicUsize::new(0) }
+    }
+
+    /// A connection bound to `lane`'s clauses in the shared state.
+    pub fn new(faults: Option<Arc<WireFaults>>, lane: usize) -> Self {
+        Self { faults, lane, writes: AtomicUsize::new(0) }
+    }
+
+    /// Write one frame, realizing any armed wire fault for this frame
+    /// ordinal.  Injected failures carry the `injected fault:` prefix.
+    pub fn write_frame(&self, w: &mut impl Write, kind: u16, digest: u64, payload: &[u8]) -> Result<()> {
+        let Some(f) = &self.faults else {
+            return store::write_frame(w, kind, digest, payload);
+        };
+        let nth = self.writes.fetch_add(1, Ordering::Relaxed) + 1;
+        let lane = self.lane;
+        match f.fire(lane, nth) {
+            Some(FaultKind::WireDrop(_)) => {
+                f.stats.frames_dropped.fetch_add(1, Ordering::Relaxed);
+                f.note(lane, &format!("injected fault: wire drop (lane {lane}, frame {nth})"));
+                return Ok(()); // the peer never sees this frame
+            }
+            Some(FaultKind::WireReset(_)) => {
+                f.stats.resets.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("injected fault: wire reset (lane {lane}, frame {nth})");
+                f.note(lane, &msg);
+                return Err(anyhow!(msg));
+            }
+            Some(FaultKind::WireCorrupt(_)) => {
+                f.stats.frames_corrupted.fetch_add(1, Ordering::Relaxed);
+                f.note(
+                    lane,
+                    &format!("injected fault: wire corrupt (lane {lane}, frame {nth})"),
+                );
+                // flip a bit in the last byte — payload (or the checksum
+                // itself when the payload is empty), never the length
+                // header, so the reader consumes the whole frame and
+                // must reject it with a checksum mismatch
+                let mut bytes = store::encode_record(kind, digest, payload);
+                let i = bytes.len() - 1;
+                bytes[i] ^= 0x01;
+                w.write_all(&bytes)?;
+                w.flush()?;
+                return Ok(());
+            }
+            Some(FaultKind::WireSplit(_)) => {
+                f.stats.splits.fetch_add(1, Ordering::Relaxed);
+                let bytes = store::encode_record(kind, digest, payload);
+                let cut = (bytes.len() / 2).max(1);
+                let msg = format!(
+                    "injected fault: wire split (lane {lane}, frame {nth}, {cut}/{} bytes)",
+                    bytes.len()
+                );
+                f.note(lane, &msg);
+                // torn prefix, then the connection is declared failed
+                let _ = w.write_all(&bytes[..cut]).and_then(|_| w.flush());
+                return Err(anyhow!(msg));
+            }
+            _ => {}
+        }
+        if let Some(ms) = f.delay_ms(lane) {
+            f.stats.frames_delayed.fetch_add(1, Ordering::Relaxed);
+            let bytes = store::encode_record(kind, digest, payload);
+            let cut = bytes.len() / 2;
+            w.write_all(&bytes[..cut])?;
+            w.flush()?;
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            w.write_all(&bytes[cut..])?;
+            w.flush()?;
+            return Ok(());
+        }
+        store::write_frame(w, kind, digest, payload)
+    }
+
+    /// Read one frame.  Pass-through to [`store::read_frame`] — the
+    /// seam exists so a future read-side family (and the multi-host
+    /// lift) lands here without touching the callers again.
+    pub fn read_frame(&self, r: &mut impl Read, max_len: usize) -> Result<Option<Record>> {
+        store::read_frame(r, max_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn faults(spec: &str, lanes: usize) -> Arc<WireFaults> {
+        WireFaults::new(&FaultPlan::parse(spec).unwrap(), lanes, Arc::new(WireStats::default()))
+            .expect("plan has wire faults")
+    }
+
+    fn read_all(bytes: &[u8]) -> Vec<Record> {
+        let mut r = std::io::Cursor::new(bytes);
+        let mut out = Vec::new();
+        while let Some(rec) = store::read_frame(&mut r, 1 << 20).unwrap() {
+            out.push(rec);
+        }
+        out
+    }
+
+    #[test]
+    fn off_conn_is_pass_through() {
+        let conn = WireConn::off();
+        let mut buf = Vec::new();
+        conn.write_frame(&mut buf, 7, 99, b"payload").unwrap();
+        let recs = read_all(&buf);
+        assert_eq!(recs.len(), 1);
+        assert_eq!((recs[0].kind, recs[0].digest, recs[0].payload.as_slice()), (7, 99, &b"payload"[..]));
+    }
+
+    #[test]
+    fn drop_swallows_exactly_the_nth_frame() {
+        let f = faults("wdrop@0:2", 1);
+        let conn = WireConn::new(Some(f.clone()), 0);
+        let mut buf = Vec::new();
+        for i in 0..4u64 {
+            conn.write_frame(&mut buf, 1, i, b"x").unwrap();
+        }
+        let digests: Vec<u64> = read_all(&buf).iter().map(|r| r.digest).collect();
+        assert_eq!(digests, vec![0, 2, 3], "frame 2 (digest 1) was dropped");
+        assert_eq!(f.stats().counters().frames_dropped, 1);
+        assert!(f.last_for(0).unwrap().contains("injected fault: wire drop"));
+        assert!(f.last_for(1).is_none());
+    }
+
+    #[test]
+    fn corrupt_forces_a_checksum_rejection() {
+        let f = faults("wcorrupt@0:1", 1);
+        let conn = WireConn::new(Some(f), 0);
+        let mut buf = Vec::new();
+        conn.write_frame(&mut buf, 1, 5, b"payload").unwrap();
+        let mut r = std::io::Cursor::new(&buf);
+        let err = store::read_frame(&mut r, 1 << 20).unwrap_err();
+        assert!(format!("{err:#}").contains("frame checksum mismatch"), "got: {err:#}");
+        // empty payload: the flipped bit lands in the checksum itself
+        let f = faults("wcorrupt@0:1", 1);
+        let conn = WireConn::new(Some(f), 0);
+        let mut buf = Vec::new();
+        conn.write_frame(&mut buf, 1, 5, b"").unwrap();
+        let err = store::read_frame(&mut std::io::Cursor::new(&buf), 1 << 20).unwrap_err();
+        assert!(format!("{err:#}").contains("frame checksum mismatch"), "got: {err:#}");
+    }
+
+    #[test]
+    fn split_and_reset_fail_the_writer_with_typed_errors() {
+        let f = faults("wsplit@0:1, wreset@1:1", 2);
+        let conn = WireConn::new(Some(f.clone()), 0);
+        let mut buf = Vec::new();
+        let err = conn.write_frame(&mut buf, 1, 5, b"payload").unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault: wire split"));
+        assert!(!buf.is_empty() && buf.len() < store::encode_record(1, 5, b"payload").len());
+        // the torn prefix must not decode as a record
+        let err = store::read_frame(&mut std::io::Cursor::new(&buf), 1 << 20).unwrap_err();
+        assert!(format!("{err:#}").contains("mid frame"), "got: {err:#}");
+
+        let conn = WireConn::new(Some(f.clone()), 1);
+        let mut buf = Vec::new();
+        let err = conn.write_frame(&mut buf, 1, 5, b"payload").unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault: wire reset"));
+        assert!(buf.is_empty(), "reset writes nothing");
+        let c = f.stats().counters();
+        assert_eq!((c.splits, c.resets, c.injected()), (1, 1, 2));
+    }
+
+    #[test]
+    fn delay_is_continuous_and_frames_stay_intact() {
+        let f = faults("wdelay@0:1", 1);
+        let conn = WireConn::new(Some(f.clone()), 0);
+        let mut buf = Vec::new();
+        for i in 0..3u64 {
+            conn.write_frame(&mut buf, 1, i, b"abc").unwrap();
+        }
+        assert_eq!(read_all(&buf).len(), 3, "delayed frames decode cleanly");
+        assert_eq!(f.stats().counters().frames_delayed, 3);
+        assert_eq!(f.stats().counters().injected(), 0, "delay is not a discrete fault");
+    }
+
+    #[test]
+    fn one_shot_consumption_spans_incarnations() {
+        // a respawned lane gets a fresh WireConn (ordinals reset) but the
+        // shared one-shot clause is already spent
+        let f = faults("wdrop@0:1", 1);
+        let conn = WireConn::new(Some(f.clone()), 0);
+        let mut buf = Vec::new();
+        conn.write_frame(&mut buf, 1, 0, b"x").unwrap();
+        assert!(buf.is_empty(), "first incarnation: frame 1 dropped");
+        let conn2 = WireConn::new(Some(f.clone()), 0);
+        let mut buf2 = Vec::new();
+        conn2.write_frame(&mut buf2, 1, 0, b"x").unwrap();
+        assert_eq!(read_all(&buf2).len(), 1, "respawn: one-shot already spent");
+        // recurring re-fires on every incarnation
+        let f = faults("wdrop@0:1*", 1);
+        for _ in 0..3 {
+            let conn = WireConn::new(Some(f.clone()), 0);
+            let mut buf = Vec::new();
+            conn.write_frame(&mut buf, 1, 0, b"x").unwrap();
+            assert!(buf.is_empty());
+        }
+        assert_eq!(f.stats().counters().frames_dropped, 3);
+    }
+
+    #[test]
+    fn counters_merge_and_gate() {
+        let mut a = WireCounters::default();
+        assert!(!a.any());
+        let b = WireCounters { sheds: 2, retries: 1, ..Default::default() };
+        a.add(&b);
+        a.add(&b);
+        assert!(a.any());
+        assert_eq!((a.sheds, a.retries), (4, 2));
+    }
+}

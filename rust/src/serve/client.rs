@@ -5,40 +5,149 @@
 //! strict request→reply pairs on one connection.  [`Client::watch`]
 //! converts the connection into a one-way event stream for a job and
 //! blocks until the job's final report (or failure) arrives.
+//!
+//! ## Chaos posture
+//!
+//! The client is built to survive a hostile wire:
+//!
+//! * **Connect deadline** — [`Client::connect`] retries a refused or
+//!   absent socket briefly, then fails with a typed *"daemon unreachable
+//!   at `<path>`"* error naming the socket, never hangs.
+//! * **Symmetric I/O timeouts** — reads and writes carry the same
+//!   `io_timeout_ms` the daemon applies (default
+//!   [`DEFAULT_IO_TIMEOUT_MS`](super::daemon::DEFAULT_IO_TIMEOUT_MS)),
+//!   so a mid-frame stall on either side is bounded.
+//! * **Idempotent submit retry** — every submit carries an idempotency
+//!   key.  On a transport error (timeout, torn frame, reset) the client
+//!   reconnects and resubmits with bounded exponential backoff; the
+//!   daemon maps the key back to the already-admitted job, so a retried
+//!   submit of a completed job returns the durable result and **never
+//!   re-executes**.  A typed `ERR` reply fails fast — only transport
+//!   trouble and sheds retry.
+//! * **Shed handling** — a `RETRY_AFTER` reply (admission shed) sleeps
+//!   the hinted delay plus backoff and resubmits, up to the retry
+//!   budget.
 
 use crate::cli::Args;
 use crate::jsonio::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::os::unix::net::UnixStream;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
+use super::daemon::{io_timeout_opt, DEFAULT_IO_TIMEOUT_MS};
 use super::job::JobPolicy;
 use super::proto::{self, msg};
 
+/// Transport-retry budget: a submit survives this many reconnect/shed
+/// rounds before the underlying error surfaces.
+const DEFAULT_RETRIES: u32 = 3;
+
+/// First backoff step (ms); doubles per attempt, capped at [`BACKOFF_CAP_MS`].
+const BACKOFF_BASE_MS: u64 = 25;
+const BACKOFF_CAP_MS: u64 = 500;
+
+/// Bounded exponential backoff for attempt `n` (1-based).
+fn backoff(base_ms: u64, attempt: u32) -> Duration {
+    let exp = base_ms.saturating_mul(1u64 << attempt.saturating_sub(1).min(10));
+    Duration::from_millis(exp.min(BACKOFF_CAP_MS))
+}
+
 pub struct Client {
     stream: UnixStream,
+    socket: PathBuf,
+    io: Option<Duration>,
+    retries: u32,
 }
 
 impl Client {
+    /// Connect with the default I/O timeout.
     pub fn connect(socket: impl AsRef<Path>) -> Result<Self> {
-        let mut stream = UnixStream::connect(socket.as_ref())
-            .with_context(|| format!("connecting {}", socket.as_ref().display()))?;
-        proto::handshake(&mut stream)?;
-        Ok(Self { stream })
+        Self::connect_with(socket, DEFAULT_IO_TIMEOUT_MS)
     }
 
-    /// Submit a job; returns its id.
+    /// Connect with an explicit I/O timeout in ms (`0` = blocking I/O).
+    /// The same value bounds the connect attempt: a socket nobody serves
+    /// fails with a typed "daemon unreachable" error after at most this
+    /// long (refused connects are retried inside the window, so a daemon
+    /// mid-startup is not a spurious failure).
+    pub fn connect_with(socket: impl AsRef<Path>, io_timeout_ms: u64) -> Result<Self> {
+        let socket = socket.as_ref().to_path_buf();
+        let io = io_timeout_opt(io_timeout_ms);
+        let stream = dial(&socket, io)?;
+        Ok(Self { stream, socket, io, retries: DEFAULT_RETRIES })
+    }
+
+    /// Override the transport-retry budget (tests pin this).
+    pub fn set_retries(&mut self, n: u32) {
+        self.retries = n;
+    }
+
+    /// Drop the (possibly broken) connection and dial a fresh one.
+    fn reconnect(&mut self) -> Result<()> {
+        self.stream = dial(&self.socket, self.io)?;
+        Ok(())
+    }
+
+    /// Submit a job; returns its id.  Carries an auto-generated
+    /// idempotency key, so the internal transport retry can never admit
+    /// the job twice.
     pub fn submit(&mut self, model: &str, policy: &JobPolicy) -> Result<u64> {
+        let key = fresh_idem_key(model);
+        self.submit_idem(model, policy, &key)
+    }
+
+    /// Submit with a caller-chosen idempotency key.  Submitting the same
+    /// key again — even from a new client, even after the daemon
+    /// restarted — returns the existing job's id instead of admitting a
+    /// duplicate; fetch its durable result with [`Client::watch`].
+    pub fn submit_idem(&mut self, model: &str, policy: &JobPolicy, idem: &str) -> Result<u64> {
         let payload = Json::Obj(vec![
             ("model".into(), Json::Str(model.to_string())),
             ("policy".into(), policy.to_json()),
+            ("idem".into(), Json::Str(idem.to_string())),
         ]);
-        proto::send(&mut self.stream, msg::SUBMIT, 0, &payload)?;
-        let (kind, job, p) = self.expect_reply()?;
-        match kind {
-            msg::ACK => Ok(job),
-            msg::ERR => bail!("submit refused: {}", err_text(&p)),
-            other => bail!("unexpected reply kind {other} to submit"),
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let r = (|| -> Result<proto::Msg> {
+                proto::send(&mut self.stream, msg::SUBMIT, 0, &payload)?;
+                self.expect_reply()
+            })();
+            match r {
+                Ok((msg::ACK, job, _)) => return Ok(job),
+                // a typed refusal is final: retrying cannot change it
+                Ok((msg::ERR, _, p)) => bail!("submit refused: {}", err_text(&p)),
+                Ok((msg::RETRY_AFTER, _, p)) => {
+                    let hint = p
+                        .get("retry_after_ms")
+                        .and_then(|v| v.as_f64().ok())
+                        .unwrap_or(BACKOFF_BASE_MS as f64) as u64;
+                    if attempt > self.retries {
+                        bail!("submit shed {attempt} times: {}", err_text(&p));
+                    }
+                    std::thread::sleep(backoff(hint.max(1), attempt));
+                }
+                Ok((other, _, _)) => bail!("unexpected reply kind {other} to submit"),
+                Err(e) => {
+                    // transport trouble (timeout, torn/corrupt frame,
+                    // reset): reconnect and resubmit — the idem key makes
+                    // the retry safe
+                    if attempt > self.retries {
+                        return Err(e.context(format!(
+                            "submit failed after {attempt} attempts (socket {})",
+                            self.socket.display()
+                        )));
+                    }
+                    std::thread::sleep(backoff(BACKOFF_BASE_MS, attempt));
+                    if let Err(de) = self.reconnect() {
+                        if attempt >= self.retries {
+                            return Err(de);
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -82,6 +191,10 @@ impl Client {
             msg::ERR => bail!("subscribe refused: {}", err_text(&p)),
             other => bail!("unexpected reply kind {other} to subscribe"),
         }
+        // A long phase may legitimately stream nothing for far longer
+        // than the I/O timeout; once subscribed, event arrival has no
+        // deadline (the terminal RESULT/ERR frame is what ends the wait).
+        let _ = self.stream.set_read_timeout(None);
         loop {
             let Some((kind, _, p)) = proto::recv(&mut self.stream)? else {
                 bail!("daemon closed the stream before a result (job cancelled or daemon exited)");
@@ -112,6 +225,51 @@ impl Client {
     }
 }
 
+/// Dial the daemon within a deadline.  Connect errors (refused, absent)
+/// retry on a short cadence inside the window — a daemon mid-startup is
+/// reachable a few ms later — then surface as one typed error naming the
+/// socket.  Handshake failures are not retried: a peer that answers but
+/// speaks the wrong protocol will not improve.
+fn dial(socket: &Path, io: Option<Duration>) -> Result<UnixStream> {
+    let window = io.unwrap_or(Duration::from_millis(DEFAULT_IO_TIMEOUT_MS));
+    let deadline = Instant::now() + window;
+    loop {
+        match UnixStream::connect(socket) {
+            Ok(mut s) => {
+                let _ = s.set_read_timeout(io);
+                let _ = s.set_write_timeout(io);
+                proto::handshake(&mut s)
+                    .with_context(|| format!("handshaking {}", socket.display()))?;
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "daemon unreachable at {}: {e} (no listener within {}ms)",
+                        socket.display(),
+                        window.as_millis()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// A process-unique idempotency key: pid + a process-wide sequence + the
+/// model name + a wall-clock component (so two *processes* with the same
+/// pid across reboots still diverge).  Stable for the lifetime of one
+/// submit call, including its internal retries.
+fn fresh_idem_key(model: &str) -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!("c{}-{model}-{n}-{t:x}", std::process::id())
+}
+
 fn err_text(p: &Json) -> String {
     match p.get("error") {
         Some(v) => v.as_str().map(String::from).unwrap_or_else(|_| p.to_string()),
@@ -119,11 +277,13 @@ fn err_text(p: &Json) -> String {
     }
 }
 
-/// `mpq client <submit|status|watch|cancel|release|shutdown> --socket P`
+/// `mpq client <submit|status|watch|cancel|release|shutdown> --socket P
+/// [--io-timeout-ms MS]`
 pub fn cli(args: &Args) -> Result<()> {
     let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("status");
     let socket = args.opt_str("socket", "mpqd.sock");
-    let mut client = Client::connect(socket)?;
+    let io_ms = args.opt_usize("io-timeout-ms", DEFAULT_IO_TIMEOUT_MS as usize)? as u64;
+    let mut client = Client::connect_with(socket, io_ms)?;
     match sub {
         "submit" => {
             let model = args.opt("model").context("submit needs --model")?;
@@ -137,9 +297,16 @@ pub fn cli(args: &Args) -> Result<()> {
                 policy.eval_budget =
                     Some(v.parse().map_err(|e| anyhow!("--eval-budget {v}: {e}"))?);
             }
+            if let Some(v) = args.opt("deadline-ms") {
+                policy.deadline_ms =
+                    Some(v.parse().map_err(|e| anyhow!("--deadline-ms {v}: {e}"))?);
+            }
             policy.adaround = !args.flag("no-adaround");
             policy.adaround_steps = args.opt_usize("adaround-steps", policy.adaround_steps)?;
-            let id = client.submit(model, &policy)?;
+            let id = match args.opt("idem") {
+                Some(key) => client.submit_idem(model, &policy, key)?,
+                None => client.submit(model, &policy)?,
+            };
             println!("job {id}");
         }
         "status" => println!("{}", client.status()?.to_string()),

@@ -27,13 +27,13 @@ use crate::cli::Args;
 use crate::coordinator::Pipeline;
 use crate::jsonio::{self, Json};
 use crate::manifest::Manifest;
-use crate::pool::{EvalFleet, FaultPlan};
+use crate::pool::{EvalFleet, FaultPlan, WireConn, WireFaults, WireStats};
 use crate::runtime::Runtime;
 use crate::store::{self, RunJournal, StoreStats};
 use crate::telemetry::{FleetTelemetry, Snapshot, StoreCounters};
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
@@ -42,6 +42,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread;
+use std::time::Instant;
 
 use super::job::{JobPolicy, JobRun};
 use super::proto::{self, msg};
@@ -63,16 +64,24 @@ pub struct ServeCfg {
     /// admission cap: max queued + running jobs
     pub max_jobs: usize,
     /// deterministic fault injection for job journals (`crash@PHASE:N`)
+    /// and, via the wire clauses (`wdrop@…`, `wseed:…`), the daemon's
+    /// reply control plane
     pub fault_plan: Option<String>,
     /// start with the scheduler held (jobs queue until `Release`) — lets
     /// tests stage several submissions before any work begins
     pub hold: bool,
+    /// per-connection socket I/O timeout in ms, applied symmetrically to
+    /// daemon reads/writes and (through [`super::client::Client`]) the
+    /// client side.  Bounds a *mid-frame* stall, never client think-time:
+    /// the connection loop idles on a peek, so a quiet-but-healthy client
+    /// is never dropped.  `0` disables (blocking I/O).
+    pub io_timeout_ms: u64,
 }
 
 impl ServeCfg {
     /// `mpq serve --socket PATH [--artifacts DIR] [--state-dir DIR]
     /// [--workers N] [--max-idle N] [--max-jobs N] [--fault-plan SPEC]
-    /// [--hold]`
+    /// [--hold] [--io-timeout-ms MS]`
     pub fn from_args(args: &Args) -> Result<Self> {
         let dir: PathBuf = args.opt_str("artifacts", "artifacts").into();
         let state_dir = match args.opt("state-dir") {
@@ -92,15 +101,43 @@ impl ServeCfg {
             max_jobs: args.opt_usize("max-jobs", 4)?,
             fault_plan: args.opt("fault-plan").map(String::from),
             hold: args.flag("hold"),
+            io_timeout_ms: args.opt_usize("io-timeout-ms", DEFAULT_IO_TIMEOUT_MS as usize)? as u64,
         })
     }
+
+    /// The connection I/O timeout as a `set_read_timeout`-shaped option.
+    pub fn io_timeout(&self) -> Option<std::time::Duration> {
+        io_timeout_opt(self.io_timeout_ms)
+    }
+}
+
+/// Default per-connection I/O timeout (ms) — both planes, both sides.
+pub const DEFAULT_IO_TIMEOUT_MS: u64 = 2000;
+
+/// Wire-fault lanes for daemon connections: connection `n` maps to fault
+/// lane `n % CONN_LANES`, so a `wseed` schedule covers early connections
+/// distinctly and then cycles.
+const CONN_LANES: usize = 8;
+
+/// `0` means "no timeout" on both `set_read_timeout` and
+/// `set_write_timeout`, which take `None` for that.
+pub fn io_timeout_opt(ms: u64) -> Option<std::time::Duration> {
+    (ms > 0).then(|| std::time::Duration::from_millis(ms))
 }
 
 /// Control messages from connection handlers to the scheduler.  Replies
 /// travel back over per-request channels so handlers never touch `!Send`
 /// daemon state.
 enum Ctl {
-    Submit { model: String, policy: JobPolicy, reply: Sender<Result<u64, String>> },
+    Submit {
+        model: String,
+        policy: JobPolicy,
+        /// client-chosen idempotency key: a resubmit bearing the key of an
+        /// already-admitted job returns that job's id instead of admitting
+        /// a duplicate, so retry-after-timeout can never double-execute
+        idem: Option<String>,
+        reply: Sender<Result<u64, String>>,
+    },
     Status { reply: Sender<Json> },
     Cancel { job: u64, reply: Sender<Result<(), String>> },
     Subscribe { job: u64, tx: Sender<Vec<u8>>, reply: Sender<Result<(), String>> },
@@ -133,7 +170,13 @@ struct Job {
     id: u64,
     model: String,
     policy: JobPolicy,
+    /// client idempotency key (persisted; survives restart)
+    idem: Option<String>,
     state: JobState,
+    /// wall clock of the job's first start — the `deadline_ms` anchor.
+    /// Not persisted: a restarted daemon restarts the clock, which only
+    /// ever grants a resumed job *more* time.
+    started: Option<Instant>,
     run: Option<JobRun>,
     journal: Option<Rc<RunJournal>>,
     /// per-job durability counters (shared with the journal + pipeline)
@@ -152,7 +195,9 @@ impl Job {
             id,
             model,
             policy,
+            idem: None,
             state: JobState::Queued,
+            started: None,
             run: None,
             journal: None,
             stats: Rc::new(StoreStats::default()),
@@ -170,6 +215,11 @@ struct Daemon {
     rt: Rc<Runtime>,
     fleet: Rc<EvalFleet>,
     jobs: BTreeMap<u64, Job>,
+    /// idempotency key → job id (rebuilt from persisted records on start)
+    idem: HashMap<String, u64>,
+    /// serve-plane wire telemetry (sheds, deadline cancels, injected
+    /// reply-path faults); connection handlers share it
+    wire_stats: Arc<WireStats>,
     next_id: u64,
     held: bool,
     /// `"<id>:<phase>"` per executed step, served by `Status` — the
@@ -191,8 +241,22 @@ pub fn run(cfg: ServeCfg) -> Result<()> {
     let fleet = EvalFleet::new(&cfg.dir, cfg.workers.max(1))?;
     fleet.set_max_idle(cfg.max_idle);
     let (jobs, next_id) = load_jobs(&cfg.state_dir)?;
+    let idem: HashMap<String, u64> = jobs
+        .values()
+        .filter_map(|j| j.idem.clone().map(|k| (k, j.id)))
+        .collect();
 
-    claim_socket(&cfg.socket)?;
+    // The daemon's own wire-fault seam comes ONLY from the explicit
+    // `--fault-plan` (never `MPQ_FAULT_PLAN`): the env var targets the
+    // fleet, and a chaos CI run must not silently corrupt the daemon's
+    // replies unless a test asked for exactly that.
+    let wire_stats = Arc::new(WireStats::default());
+    let wire_faults = match &cfg.fault_plan {
+        Some(spec) => WireFaults::new(&FaultPlan::parse(spec)?, CONN_LANES, wire_stats.clone()),
+        None => None,
+    };
+
+    claim_socket(&cfg.socket, cfg.io_timeout())?;
     let listener = UnixListener::bind(&cfg.socket)
         .with_context(|| format!("binding {}", cfg.socket.display()))?;
     let (ctl_tx, ctl_rx): (Sender<Ctl>, Receiver<Ctl>) = channel();
@@ -200,14 +264,26 @@ pub fn run(cfg: ServeCfg) -> Result<()> {
     let accept = {
         let stop = stop.clone();
         let ctl = ctl_tx;
+        let io = cfg.io_timeout();
+        let wire_faults = wire_faults.clone();
+        let wire_stats = wire_stats.clone();
         thread::spawn(move || {
+            let mut conn_seq = 0usize;
             for conn in listener.incoming() {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = conn else { break };
+                // symmetric I/O deadlines: a peer stalling mid-frame (or
+                // never draining its socket) times the connection out
+                // instead of wedging its handler thread forever
+                let _ = stream.set_read_timeout(io);
+                let _ = stream.set_write_timeout(io);
                 let ctl = ctl.clone();
-                thread::spawn(move || serve_conn(stream, ctl));
+                let conn = WireConn::new(wire_faults.clone(), conn_seq % CONN_LANES);
+                let stats = wire_stats.clone();
+                conn_seq += 1;
+                thread::spawn(move || serve_conn(stream, ctl, conn, stats));
             }
         })
     };
@@ -220,6 +296,8 @@ pub fn run(cfg: ServeCfg) -> Result<()> {
         rt,
         fleet,
         jobs,
+        idem,
+        wire_stats,
         next_id,
         held,
         sched_log: Vec::new(),
@@ -261,8 +339,8 @@ impl Daemon {
     /// Process one control message; `true` means shut down.
     fn handle(&mut self, m: Ctl) -> bool {
         match m {
-            Ctl::Submit { model, policy, reply } => {
-                let r = self.admit(model, policy).map_err(|e| format!("{e:#}"));
+            Ctl::Submit { model, policy, idem, reply } => {
+                let r = self.admit(model, policy, idem).map_err(|e| format!("{e:#}"));
                 let _ = reply.send(r);
             }
             Ctl::Status { reply } => {
@@ -280,12 +358,43 @@ impl Daemon {
         false
     }
 
-    fn admit(&mut self, model: String, policy: JobPolicy) -> Result<u64> {
+    fn admit(&mut self, model: String, policy: JobPolicy, idem: Option<String>) -> Result<u64> {
         let resident = self
             .jobs
             .values()
             .filter(|j| matches!(j.state, JobState::Queued | JobState::Running))
             .count();
+        // Idempotency first — before the admission cap: a retried submit
+        // of a job that is already resident (or already finished) must
+        // return its id, never a duplicate and never a shed.  The durable
+        // result, if any, is then fetched by id; the job is NOT re-run.
+        // One exception re-queues: a **failed** job resubmitted under its
+        // key is revived in place — same id, same kept journal (completed
+        // barriers replay), the *new* policy applies (e.g. a longer
+        // `deadline_ms` after a deadline cancel) and the deadline clock
+        // restarts.  Revival takes a residency slot, so it respects the cap.
+        if let Some(key) = &idem {
+            if let Some(&id) = self.idem.get(key) {
+                // a known key means the client resent after losing a reply
+                self.wire_stats.retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let failed = self.jobs.get(&id).is_some_and(|j| j.state == JobState::Failed);
+                if failed {
+                    if resident >= self.cfg.max_jobs {
+                        bail!(
+                            "admission refused: {resident} resident jobs at the max_jobs={} cap",
+                            self.cfg.max_jobs
+                        );
+                    }
+                    let j = self.jobs.get_mut(&id).unwrap();
+                    j.state = JobState::Queued;
+                    j.error = None;
+                    j.started = None;
+                    j.policy = policy;
+                    self.persist(id)?;
+                }
+                return Ok(id);
+            }
+        }
         if resident >= self.cfg.max_jobs {
             bail!(
                 "admission refused: {resident} resident jobs at the max_jobs={} cap",
@@ -297,7 +406,12 @@ impl Daemon {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.jobs.insert(id, Job::new(id, model, policy));
+        let mut job = Job::new(id, model, policy);
+        job.idem = idem.clone();
+        self.jobs.insert(id, job);
+        if let Some(key) = idem {
+            self.idem.insert(key, id);
+        }
         self.persist(id)?;
         Ok(id)
     }
@@ -375,11 +489,28 @@ impl Daemon {
             .map(|j| j.id)
     }
 
-    /// Run one phase of one job (starting it first if queued).
+    /// Run one phase of one job (starting it first if queued).  The
+    /// per-job `deadline_ms` is enforced here, at phase granularity: an
+    /// expired job is failed *before* paying for another phase.  `fail`
+    /// keeps the journal, so the cancel is graceful — completed barriers
+    /// replay on a resubmit with a longer deadline.
     fn step_one(&mut self, id: u64) {
         if self.jobs[&id].run.is_none() {
             if let Err(e) = self.start(id) {
                 self.fail(id, &format!("{e:#}"));
+                return;
+            }
+        }
+        if let (Some(deadline), Some(started)) =
+            (self.jobs[&id].policy.deadline_ms, self.jobs[&id].started)
+        {
+            let elapsed = started.elapsed().as_millis() as u64;
+            if elapsed > deadline {
+                self.wire_stats.deadline_cancels.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.fail(
+                    id,
+                    &format!("deadline exceeded: job ran {elapsed}ms, deadline_ms={deadline}"),
+                );
                 return;
             }
         }
@@ -443,6 +574,9 @@ impl Daemon {
             j.journal = Some(journal.clone());
             j.run = Some(JobRun::new(model, pipe, Some(journal), policy));
             j.state = JobState::Running;
+            if j.started.is_none() {
+                j.started = Some(Instant::now());
+            }
         }
         self.persist(id)
     }
@@ -606,11 +740,16 @@ impl Daemon {
             store_total.cache_corrupt_misses += c.cache_corrupt_misses;
             store_total.files_quarantined += c.files_quarantined;
         }
+        // one consolidated wire view: the fleet's socket plane plus the
+        // daemon's own (sheds, deadline cancels, reply-path injections)
+        let mut wire = self.fleet.wire_counters();
+        wire.add(&self.wire_stats.counters());
         let snap = Snapshot {
             sens_cache: (0, 0),
             ref_cache: (0, 0),
             store: store_total,
             fleet: Some(FleetTelemetry::collect(&self.fleet)),
+            wire,
         };
         Json::Obj(vec![
             ("jobs".into(), Json::Arr(jobs)),
@@ -636,6 +775,13 @@ impl Daemon {
             ("state".into(), Json::Str(j.state.label().into())),
             ("policy".into(), j.policy.to_json()),
             (
+                "idem".into(),
+                match &j.idem {
+                    Some(k) => Json::Str(k.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
                 "error".into(),
                 match &j.error {
                     Some(e) => Json::Str(e.clone()),
@@ -657,13 +803,15 @@ impl Daemon {
 /// refuse.  Only a definitively dead socket — connect fails with
 /// `ECONNREFUSED` — is stale and safe to remove; ambiguous probe errors
 /// also refuse, since a saturated healthy daemon must not lose its socket.
-fn claim_socket(path: &Path) -> Result<()> {
+/// The probe's read deadline is the configured `--io-timeout-ms`, so a
+/// chaos-tier daemon with a tight timeout also probes tightly.
+fn claim_socket(path: &Path, io: Option<std::time::Duration>) -> Result<()> {
     if !path.exists() {
         return Ok(());
     }
     match UnixStream::connect(path) {
         Ok(mut peer) => {
-            let _ = peer.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+            let _ = peer.set_read_timeout(io);
             if proto::handshake(&mut peer).is_ok() {
                 bail!(
                     "a live mpqd already serves {} — refusing to start a second \
@@ -743,6 +891,10 @@ fn load_jobs(state_dir: &Path) -> Result<(BTreeMap<u64, Job>, u64)> {
         };
         let mut job = Job::new(id, model, policy);
         job.state = state;
+        job.idem = match rec.get("idem") {
+            Some(v) if !v.is_null() => Some(v.as_str()?.to_string()),
+            _ => None,
+        };
         job.error = match rec.get("error") {
             Some(v) if !v.is_null() => Some(v.as_str()?.to_string()),
             _ => None,
@@ -760,8 +912,8 @@ fn load_jobs(state_dir: &Path) -> Result<(BTreeMap<u64, Job>, u64)> {
 }
 
 /// Per-connection handler: frames in, [`Ctl`] across, frames out.
-fn serve_conn(mut stream: UnixStream, ctl: Sender<Ctl>) {
-    let _ = conn_loop(&mut stream, ctl);
+fn serve_conn(mut stream: UnixStream, ctl: Sender<Ctl>, conn: WireConn, stats: Arc<WireStats>) {
+    let _ = conn_loop(&mut stream, ctl, &conn, &stats);
 }
 
 /// Has the peer hung up?  A non-blocking `peek` distinguishes a closed
@@ -784,9 +936,40 @@ fn conn_closed(stream: &UnixStream) -> bool {
     closed
 }
 
-fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
+/// Shed backoff hint (ms) carried in `RETRY_AFTER` replies.  Small: the
+/// cap usually clears within a phase step, and clients add exponential
+/// backoff on top.
+const SHED_RETRY_MS: u64 = 50;
+
+fn err_json(e: &str) -> Json {
+    Json::Obj(vec![("error".into(), Json::Str(e.into()))])
+}
+
+fn conn_loop(
+    stream: &mut UnixStream,
+    ctl: Sender<Ctl>,
+    conn: &WireConn,
+    stats: &WireStats,
+) -> Result<()> {
     proto::handshake(stream)?;
     loop {
+        // Idle-tolerant read: the connection's read timeout bounds a
+        // *mid-frame* stall, never client think-time.  Peek until the
+        // next frame's first byte shows up; each timeout tick just loops.
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return Ok(()), // clean EOF between frames
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e).context("polling connection for the next frame"),
+        }
         let Some((kind, job, payload)) = proto::recv(stream)? else {
             return Ok(());
         };
@@ -794,18 +977,29 @@ fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
             msg::SUBMIT => {
                 let model = payload.req("model")?.as_str()?.to_string();
                 let policy = JobPolicy::from_json(payload.get("policy"))?;
+                let idem = match payload.get("idem") {
+                    Some(v) if !v.is_null() => Some(v.as_str()?.to_string()),
+                    _ => None,
+                };
                 let (rtx, rrx) = channel();
-                if ctl.send(Ctl::Submit { model, policy, reply: rtx }).is_err() {
+                if ctl.send(Ctl::Submit { model, policy, idem, reply: rtx }).is_err() {
                     return Ok(());
                 }
                 match rrx.recv() {
-                    Ok(Ok(id)) => proto::send(
+                    Ok(Ok(id)) => proto::send_via(
                         stream,
+                        conn,
                         msg::ACK,
                         id,
                         &Json::Obj(vec![("job".into(), Json::Num(id as f64))]),
                     )?,
-                    Ok(Err(e)) => proto::send_err(stream, 0, &e)?,
+                    Ok(Err(e)) if e.contains("admission refused") => {
+                        // overload is a *typed, retryable* condition, not
+                        // a submit failure: shed with a backoff hint
+                        stats.sheds.fetch_add(1, Ordering::Relaxed);
+                        proto::send_retry_after(stream, conn, SHED_RETRY_MS, &e)?;
+                    }
+                    Ok(Err(e)) => proto::send_via(stream, conn, msg::ERR, 0, &err_json(&e))?,
                     Err(_) => return Ok(()),
                 }
             }
@@ -815,7 +1009,7 @@ fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
                     return Ok(());
                 }
                 match rrx.recv() {
-                    Ok(state) => proto::send(stream, msg::STATE, 0, &state)?,
+                    Ok(state) => proto::send_via(stream, conn, msg::STATE, 0, &state)?,
                     Err(_) => return Ok(()),
                 }
             }
@@ -825,8 +1019,8 @@ fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
                     return Ok(());
                 }
                 match rrx.recv() {
-                    Ok(Ok(())) => proto::send(stream, msg::ACK, job, &Json::Null)?,
-                    Ok(Err(e)) => proto::send_err(stream, job, &e)?,
+                    Ok(Ok(())) => proto::send_via(stream, conn, msg::ACK, job, &Json::Null)?,
+                    Ok(Err(e)) => proto::send_via(stream, conn, msg::ERR, job, &err_json(&e))?,
                     Err(_) => return Ok(()),
                 }
             }
@@ -837,9 +1031,9 @@ fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
                     return Ok(());
                 }
                 match rrx.recv() {
-                    Ok(Ok(())) => proto::send(stream, msg::ACK, job, &Json::Null)?,
+                    Ok(Ok(())) => proto::send_via(stream, conn, msg::ACK, job, &Json::Null)?,
                     Ok(Err(e)) => {
-                        proto::send_err(stream, job, &e)?;
+                        proto::send_via(stream, conn, msg::ERR, job, &err_json(&e))?;
                         continue;
                     }
                     Err(_) => return Ok(()),
@@ -868,14 +1062,20 @@ fn conn_loop(stream: &mut UnixStream, ctl: Sender<Ctl>) -> Result<()> {
                 if ctl.send(Ctl::Release).is_err() {
                     return Ok(());
                 }
-                proto::send(stream, msg::ACK, 0, &Json::Null)?;
+                proto::send_via(stream, conn, msg::ACK, 0, &Json::Null)?;
             }
             msg::SHUTDOWN => {
                 let _ = ctl.send(Ctl::Shutdown);
-                proto::send(stream, msg::ACK, 0, &Json::Null)?;
+                proto::send_via(stream, conn, msg::ACK, 0, &Json::Null)?;
                 return Ok(());
             }
-            other => proto::send_err(stream, job, &format!("unknown message kind {other}"))?,
+            other => proto::send_via(
+                stream,
+                conn,
+                msg::ERR,
+                job,
+                &err_json(&format!("unknown message kind {other}")),
+            )?,
         }
     }
 }

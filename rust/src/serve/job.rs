@@ -42,6 +42,12 @@ pub struct JobPolicy {
     /// per-job eval budget: max journal barriers (probe scores + prefix
     /// evals + rounded layers) this job may append before it is failed
     pub eval_budget: Option<u64>,
+    /// per-job wall-clock deadline: a job still unfinished this many ms
+    /// after it first started running is failed ("deadline exceeded") at
+    /// the next phase boundary.  Completed journal barriers stay durable,
+    /// so a resubmit with a longer deadline *resumes* rather than
+    /// restarts — the same contract as `eval_budget`.
+    pub deadline_ms: Option<u64>,
     /// run the AdaRound phase
     pub adaround: bool,
     pub adaround_steps: usize,
@@ -54,6 +60,7 @@ impl Default for JobPolicy {
             seed: 0,
             priority: 0,
             eval_budget: None,
+            deadline_ms: None,
             adaround: true,
             adaround_steps: 8,
         }
@@ -70,6 +77,13 @@ impl JobPolicy {
                 "eval_budget".into(),
                 match self.eval_budget {
                     Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "deadline_ms".into(),
+                match self.deadline_ms {
+                    Some(d) => Json::Num(d as f64),
                     None => Json::Null,
                 },
             ),
@@ -97,6 +111,9 @@ impl JobPolicy {
         }
         if let Some(v) = j.get("eval_budget") {
             p.eval_budget = if v.is_null() { None } else { Some(v.as_f64()? as u64) };
+        }
+        if let Some(v) = j.get("deadline_ms") {
+            p.deadline_ms = if v.is_null() { None } else { Some(v.as_f64()? as u64) };
         }
         if let Some(v) = j.get("adaround") {
             p.adaround = matches!(v, Json::Bool(true));
@@ -328,6 +345,7 @@ mod tests {
             seed: 9,
             priority: -2,
             eval_budget: Some(500),
+            deadline_ms: Some(1500),
             adaround: false,
             adaround_steps: 4,
         };
@@ -336,6 +354,7 @@ mod tests {
         assert_eq!(back.seed, 9);
         assert_eq!(back.priority, -2);
         assert_eq!(back.eval_budget, Some(500));
+        assert_eq!(back.deadline_ms, Some(1500));
         assert!(!back.adaround);
         assert_eq!(back.adaround_steps, 4);
 
@@ -346,6 +365,7 @@ mod tests {
         assert_eq!(d.calib_n, 16);
         assert_eq!(d.adaround_steps, JobPolicy::default().adaround_steps);
         assert_eq!(d.eval_budget, None);
+        assert_eq!(d.deadline_ms, None);
     }
 
     #[test]

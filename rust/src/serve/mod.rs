@@ -9,7 +9,9 @@
 //! ```text
 //! mpq serve  --socket PATH [--artifacts DIR] [--state-dir DIR]
 //!            [--workers N] [--max-idle N] [--max-jobs N] [--hold]
+//!            [--io-timeout-ms MS]
 //! mpq client submit  --socket PATH --model M [--calib N] [--priority P]
+//!            [--deadline-ms MS] [--idem KEY] [--io-timeout-ms MS]
 //! mpq client status|watch|cancel|release|shutdown --socket PATH [--job J]
 //! ```
 //!
@@ -35,22 +37,46 @@
 //! | `EVENT`     | d→c | `{phase}` or `{barrier, kind}` or `{cancelled}`|
 //! | `RESULT`    | d→c | `{job, result, durability}`                    |
 //! | `STATE`     | d→c | `{jobs, held, warm_models, sched_log, telemetry}` |
+//! | `RETRY_AFTER` | d→c | `{retry_after_ms, error}` (admission shed)   |
 //!
 //! This is a **control plane**: tensors, datasets and executables never
 //! ride the socket — jobs name a model from the daemon's artifacts
 //! manifest and all bulk data moves through the filesystem and the
 //! fleet's own channels.
 //!
+//! # Timeouts, retries and chaos hardening
+//!
+//! Both sides of the socket run under one symmetric I/O deadline
+//! (`--io-timeout-ms`, default 2000; `0` disables): a peer that stalls
+//! **mid-frame** — or never drains its receive buffer — times out and
+//! loses the connection, while an *idle* peer is never dropped (the
+//! daemon's connection loop peeks between frames, and `watch` lifts the
+//! read deadline once subscribed, since a long phase may stream nothing
+//! for minutes).  Client submits carry an **idempotency key** (`{model,
+//! policy?, idem?}`): on a transport error the client reconnects and
+//! resubmits with bounded exponential backoff, and the daemon maps the
+//! key to the already-admitted job — a retried submit of a finished job
+//! returns the durable result without re-executing anything, across
+//! daemon restarts (the key is persisted in the job record).  Overload
+//! is a typed `RETRY_AFTER` shed, not an error; per-job `deadline_ms`
+//! cancels an overrunning job at the next phase boundary while keeping
+//! its journal, so a resubmit resumes.  The whole plane is exercised by
+//! the chaos tier: the fault grammar's wire clauses (`wdrop@…`,
+//! `wcorrupt@…`, `wseed:…` — see `pool/fault.rs`) inject into the
+//! daemon's replies via `--fault-plan`, and every injected fault either
+//! heals through retry or surfaces naming itself.
+//!
 //! # Admission and scheduling
 //!
 //! `Submit` is refused once `max_jobs` jobs are resident (queued +
-//! running) — clients see a bounded, immediate `ERR` instead of an
-//! unbounded queue.  Runnable jobs are ordered by `(priority desc,
-//! least-recently-stepped, id)`: strict priority first, FIFO among
-//! equals, and because the scheduler runs one *phase* per pick, equal
-//! jobs round-robin phase-by-phase across the shared fleet.  A job whose
-//! model another job just left warm ([`EvalFleet::set_max_idle`],
-//! `--max-idle`) reattaches with zero recompiles.
+//! running) — clients see a bounded, immediate `RETRY_AFTER` shed
+//! instead of an unbounded queue.  Runnable jobs are ordered by
+//! `(priority desc, least-recently-stepped, id)`: strict priority first,
+//! FIFO among equals, and because the scheduler runs one *phase* per
+//! pick, equal jobs round-robin phase-by-phase across the shared fleet.
+//! A job whose model another job just left warm
+//! ([`EvalFleet::set_max_idle`], `--max-idle`) reattaches with zero
+//! recompiles.
 //!
 //! # Crash / restart semantics
 //!

@@ -16,6 +16,7 @@
 //! parsing anything.
 
 use crate::jsonio::{self, Json};
+use crate::pool::WireConn;
 use crate::store;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -53,6 +54,10 @@ pub mod msg {
     pub const RESULT: u16 = 35;
     /// daemon → client: the `Status` reply (jobs + telemetry snapshot)
     pub const STATE: u16 = 36;
+    /// daemon → client: overload shed — admission refused *for now*;
+    /// `{retry_after_ms, error}`.  A typed signal (distinct from `ERR`)
+    /// so clients back off and retry instead of failing the submit.
+    pub const RETRY_AFTER: u16 = 37;
 }
 
 /// Mutual protocol handshake: write our MPQJ container header, read and
@@ -87,6 +92,7 @@ pub fn kind_name(kind: u16) -> &'static str {
         msg::EVENT => "EVENT",
         msg::RESULT => "RESULT",
         msg::STATE => "STATE",
+        msg::RETRY_AFTER => "RETRY_AFTER",
         _ => "UNKNOWN",
     }
 }
@@ -111,8 +117,17 @@ fn encode_payload(kind: u16, payload: &Json) -> Result<String> {
 /// field (0 for daemon-scoped messages).  Fails (writing nothing) when
 /// the payload exceeds [`MAX_FRAME`].
 pub fn send(w: &mut impl Write, kind: u16, job: u64, payload: &Json) -> Result<()> {
+    send_via(w, &WireConn::off(), kind, job, payload)
+}
+
+/// [`send`] through a wire-fault seam: the daemon routes every reply
+/// through its connection's [`WireConn`], so `wdrop`/`wcorrupt`/… clauses
+/// in a serve fault plan hit this control plane exactly as they hit the
+/// fleet's.  With [`WireConn::off`] this **is** `send` — zero overhead,
+/// identical bytes.
+pub fn send_via(w: &mut impl Write, conn: &WireConn, kind: u16, job: u64, payload: &Json) -> Result<()> {
     let text = encode_payload(kind, payload)?;
-    store::write_frame(w, kind, job, text.as_bytes())
+    conn.write_frame(w, kind, job, text.as_bytes())
 }
 
 /// Encode one message to bytes (the daemon fans these out to
@@ -130,6 +145,28 @@ pub fn send_err(w: &mut impl Write, job: u64, error: &str) -> Result<()> {
         msg::ERR,
         job,
         &Json::Obj(vec![("error".into(), Json::Str(error.into()))]),
+    )
+}
+
+/// A `RETRY_AFTER` shed reply: the request was refused *for now*; a
+/// well-behaved client waits `retry_after_ms` (plus jitter/backoff) and
+/// resubmits.  The error text still names the admission rule so a
+/// non-retrying caller sees a useful message.
+pub fn send_retry_after(
+    w: &mut impl Write,
+    conn: &WireConn,
+    retry_after_ms: u64,
+    error: &str,
+) -> Result<()> {
+    send_via(
+        w,
+        conn,
+        msg::RETRY_AFTER,
+        0,
+        &Json::Obj(vec![
+            ("retry_after_ms".into(), Json::Num(retry_after_ms as f64)),
+            ("error".into(), Json::Str(error.into())),
+        ]),
     )
 }
 
@@ -193,6 +230,40 @@ mod tests {
         assert!(err.contains("RESULT"), "cap error must name the message kind: {err}");
         assert!(buf.is_empty(), "nothing may reach the wire on a cap violation");
         assert!(encode(msg::STATE, 0, &over).is_err());
+    }
+
+    #[test]
+    fn retry_after_is_a_typed_shed_reply() {
+        let mut buf = Vec::new();
+        send_retry_after(&mut buf, &WireConn::off(), 40, "admission refused: at capacity").unwrap();
+        let mut r: &[u8] = &buf;
+        let (k, j, p) = recv(&mut r).unwrap().unwrap();
+        assert_eq!((k, j), (msg::RETRY_AFTER, 0));
+        assert_eq!(p.req("retry_after_ms").unwrap().as_f64().unwrap() as u64, 40);
+        assert!(p.req("error").unwrap().as_str().unwrap().contains("admission refused"));
+        assert_eq!(kind_name(msg::RETRY_AFTER), "RETRY_AFTER");
+    }
+
+    #[test]
+    fn send_via_routes_through_the_wire_fault_seam() {
+        use crate::pool::{FaultPlan, WireFaults, WireStats};
+        use std::sync::Arc;
+
+        // a corrupt clause on frame 1 of lane 0: the bytes reach the
+        // stream but recv must reject them with a checksum error
+        let plan = FaultPlan::parse("wcorrupt@0:1").unwrap();
+        let wf = WireFaults::new(&plan, 1, Arc::new(WireStats::default())).unwrap();
+        let conn = WireConn::new(Some(wf), 0);
+        let mut buf = Vec::new();
+        send_via(&mut buf, &conn, msg::ACK, 5, &Json::Null).unwrap();
+        let mut r: &[u8] = &buf;
+        let err = recv(&mut r).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // the second frame through the same conn is clean (one-shot)
+        let mut buf = Vec::new();
+        send_via(&mut buf, &conn, msg::ACK, 6, &Json::Null).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(recv(&mut r).unwrap().unwrap().1, 6);
     }
 
     #[test]

@@ -28,7 +28,7 @@
 
 use crate::coordinator::Pipeline;
 use crate::jsonio::Json;
-use crate::pool::{EvalFleet, FailureStats, WorkerStats};
+use crate::pool::{EvalFleet, FailureStats, WireCounters, WorkerStats};
 use crate::store::StoreStats;
 
 /// Fleet-side counters: compile/memo accounting, failure telemetry and
@@ -180,6 +180,9 @@ pub struct Snapshot {
     pub store: StoreCounters,
     /// present when an evaluation fleet is in play
     pub fleet: Option<FleetTelemetry>,
+    /// wire-plane counters (heartbeats, injected transport faults,
+    /// sheds, deadline cancels); all-zero in a healthy fault-free run
+    pub wire: WireCounters,
 }
 
 impl Snapshot {
@@ -191,6 +194,11 @@ impl Snapshot {
             ref_cache: pipe.ref_cache_stats(),
             store: StoreCounters::from_stats(pipe.store_stats()),
             fleet: pipe.pool.as_ref().map(|p| FleetTelemetry::collect(p.fleet())),
+            wire: pipe
+                .pool
+                .as_ref()
+                .map(|p| p.fleet().wire_counters())
+                .unwrap_or_default(),
         }
     }
 
@@ -203,6 +211,7 @@ impl Snapshot {
             ref_cache: (0, 0),
             store: StoreCounters::from_stats(store),
             fleet: fleet.map(FleetTelemetry::collect),
+            wire: fleet.map(|f| f.wire_counters()).unwrap_or_default(),
         }
     }
 
@@ -241,6 +250,17 @@ impl Snapshot {
                 ));
             }
         }
+        if self.wire.any() {
+            note.push_str(&format!(
+                ", wire inj {} (hb {}p/{}x, retries {}, sheds {}, deadline-cancels {})",
+                self.wire.injected(),
+                self.wire.heartbeats_sent,
+                self.wire.heartbeat_deaths,
+                self.wire.retries,
+                self.wire.sheds,
+                self.wire.deadline_cancels
+            ));
+        }
         note
     }
 
@@ -269,6 +289,21 @@ impl Snapshot {
                 Some(f) => f.to_json(),
                 None => Json::Null,
             },
+        ));
+        obj.push((
+            "wire".into(),
+            Json::Obj(vec![
+                ("frames_dropped".into(), num(self.wire.frames_dropped)),
+                ("frames_corrupted".into(), num(self.wire.frames_corrupted)),
+                ("frames_delayed".into(), num(self.wire.frames_delayed)),
+                ("splits".into(), num(self.wire.splits)),
+                ("resets".into(), num(self.wire.resets)),
+                ("heartbeats_sent".into(), num(self.wire.heartbeats_sent)),
+                ("heartbeat_deaths".into(), num(self.wire.heartbeat_deaths)),
+                ("retries".into(), num(self.wire.retries)),
+                ("deadline_cancels".into(), num(self.wire.deadline_cancels)),
+                ("sheds".into(), num(self.wire.sheds)),
+            ]),
         ));
         Json::Obj(obj)
     }
@@ -300,6 +335,7 @@ mod tests {
                 failures: FailureStats::default(),
                 worker_stats: vec![WorkerStats { compiled: 1, models_open: 1 }],
             }),
+            wire: WireCounters::default(),
         }
     }
 
@@ -338,5 +374,30 @@ mod tests {
         let none = Snapshot { fleet: None, ..s };
         let back2 = crate::jsonio::parse(&none.to_json().to_string()).unwrap();
         assert!(back2.req("fleet").unwrap().is_null());
+    }
+
+    #[test]
+    fn wire_counters_surface_only_when_something_happened() {
+        let mut s = sample();
+        // all-zero wire: the note keeps its historical shape
+        assert!(!s.note().contains("wire"), "{}", s.note());
+        let w = s.to_json().to_string();
+        let back = crate::jsonio::parse(&w).unwrap();
+        assert_eq!(
+            back.req("wire").unwrap().req("heartbeats_sent").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        s.wire.frames_dropped = 2;
+        s.wire.heartbeats_sent = 7;
+        s.wire.heartbeat_deaths = 1;
+        s.wire.sheds = 3;
+        assert_eq!(s.wire.injected(), 2);
+        let note = s.note();
+        assert!(
+            note.contains("wire inj 2 (hb 7p/1x, retries 0, sheds 3, deadline-cancels 0)"),
+            "{note}"
+        );
+        let back = crate::jsonio::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.req("wire").unwrap().req("sheds").unwrap().as_f64().unwrap(), 3.0);
     }
 }

@@ -1,0 +1,553 @@
+//! Wire-level chaos tier (hermetic — no network, no PJRT): deterministic
+//! transport fault injection across **both** socket control planes, the
+//! proc-fleet coordinator↔worker sockets (`src/pool`) and the mpqd
+//! client↔daemon socket (`src/serve`).
+//!
+//! Contracts under test (ISSUE 10 acceptance):
+//!
+//! * **Every single-clause wire fault** (`wdrop`/`wcorrupt`/`wsplit`/
+//!   `wreset`/`wdelay`) injected at the framing seam heals through the
+//!   existing supervision machinery — respawn, replay, requeue, collect
+//!   deadline — and the Phase-1 sweep stays **byte-equal** to the serial
+//!   oracle.  Death reasons name the injected fault.
+//! * **Randomized schedules** (`wseed:S`): byte-equal results or a typed
+//!   error naming the injected fault.  Never a hang — every scenario runs
+//!   under a hard watchdog timeout.
+//! * **Heartbeats**: a SIGSTOPped worker answers nothing; the liveness
+//!   deadline (no frame within the window) converts the frozen peer into
+//!   a death notice and a respawn with no fault plan at all.
+//! * **Client retry + idempotency**: corrupted/dropped daemon replies are
+//!   absorbed by bounded exponential backoff under an idempotency key —
+//!   one admission, never a duplicate; a retried submit after a daemon
+//!   kill resumes the kept journal and **never re-executes completed
+//!   barriers** (`replayed == N` asserted).
+//! * **Overload + deadlines**: past `max_jobs` the daemon sheds with a
+//!   typed `RETRY_AFTER`; per-job `deadline_ms` cancels gracefully at a
+//!   phase boundary, keeps the journal, and an idem-keyed resubmit
+//!   revives the same job and replays it.
+//! * **No strands**: chaos runs leave no `job_*` journals or temp files.
+
+use mpq::coordinator::Pipeline;
+use mpq::groups::Lattice;
+use mpq::pool::{EvalFleet, FaultPlan};
+use mpq::sensitivity::SensEntry;
+use mpq::serve::daemon::{self, ServeCfg};
+use mpq::serve::{run_local, Client, JobPolicy};
+use mpq::sim::{self, SimSpec};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+const MODEL: &str = "sim_mlp";
+
+/// Once per process: point proc fleets at this build's own `mpq` binary
+/// and shorten the heartbeat so liveness deaths fire within test budgets
+/// (liveness window = `max(8·hb, 1000)` ms — still 1 s here).
+fn chaos_env() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        std::env::set_var("MPQ_WORKER_BIN", env!("CARGO_BIN_EXE_mpq"));
+        std::env::set_var("MPQ_HEARTBEAT_MS", "50");
+    });
+}
+
+/// Fresh sim artifacts under a per-test temp dir.
+fn sim_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_chaos_e2e_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    sim::generate(&dir, &SimSpec::default()).expect("generate sim artifacts");
+    dir
+}
+
+/// Serial-oracle Phase-1 sweep (no fleet attached).
+fn serial_sens(dir: &Path) -> Vec<SensEntry> {
+    let mut p = Pipeline::open(dir, MODEL).expect("open sim_mlp");
+    p.calibrate(128, 0).expect("calibrate");
+    p.sensitivity_sqnr(&Lattice::practical()).expect("serial sweep")
+}
+
+/// Two Phase-1 lists agree in order and **bit-for-bit** scores.
+fn assert_sens_bits(got: &[SensEntry], want: &[SensEntry], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: list length");
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!((a.group, a.cand), (b.group, b.cand), "{tag}: order diverged");
+        assert_eq!(
+            a.score.to_bits(),
+            b.score.to_bits(),
+            "{tag}: score for (g{}, {:?}): {} vs {}",
+            a.group,
+            a.cand,
+            a.score,
+            b.score
+        );
+    }
+}
+
+/// Zero-hangs guarantee, enforced: every chaos scenario runs on its own
+/// thread under a hard watchdog.  A scenario that outlives `secs` fails
+/// the test instead of wedging the suite (fleets are `!Send`, so the
+/// scenario builds everything inside the thread and ships plain data out).
+fn run_with_timeout<T: Send + 'static>(
+    tag: &str,
+    secs: u64,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = thread::Builder::new()
+        .name(format!("chaos-{tag}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .expect("spawn chaos scenario thread");
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            h.join().expect("scenario thread died after reporting");
+            v
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => match h.join() {
+            Err(p) => std::panic::resume_unwind(p),
+            Ok(()) => unreachable!("scenario thread exited without a result"),
+        },
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{tag}: scenario hung past {secs}s — liveness violated")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// proc-fleet plane
+// ---------------------------------------------------------------------------
+
+/// Tentpole, clause by clause: each wire-fault kind fires exactly once on
+/// a real worker socket and the sweep still comes back byte-equal.  The
+/// mangling clauses must turn into a worker death whose reason names the
+/// injected fault; a delayed frame must never count as one.
+#[test]
+fn every_wire_fault_clause_heals_to_byte_equal_results() {
+    chaos_env();
+    let dir = sim_dir("clauses");
+    let serial = serial_sens(&dir);
+
+    for clause in ["wdrop@1:3", "wcorrupt@1:3", "wsplit@1:3", "wreset@1:3", "wdelay@1:40"] {
+        // the collect deadline is the net under a silently dropped JOB
+        // frame (nothing errors — the reply just never comes); backoff:0
+        // keeps respawns instant
+        let spec = format!("{clause},deadline:2000,backoff:0");
+        let (sens, fs, wc) = {
+            let dir = dir.clone();
+            run_with_timeout(clause, 300, move || {
+                let plan = FaultPlan::parse(&spec).expect("parse wire plan");
+                let fleet = EvalFleet::with_faults_proc(&dir, 2, plan).expect("proc fleet");
+                let mut p = Pipeline::open(&dir, MODEL).unwrap();
+                p.attach_fleet(&fleet).unwrap();
+                p.calibrate(128, 0).unwrap();
+                let sens = p.sensitivity_sqnr(&Lattice::practical()).unwrap();
+                (sens, fleet.failure_stats(), fleet.wire_counters())
+            })
+        };
+        assert_sens_bits(&sens, &serial, clause);
+        match clause.split('@').next().unwrap() {
+            "wdelay" => {
+                assert!(wc.frames_delayed >= 1, "{clause}: no frame was delayed: {wc:?}");
+                assert_eq!(wc.injected(), 0, "{clause}: a delay is not an injected mangle");
+                assert_eq!(fs.worker_restarts, 0, "{clause}: a delay is not a death: {fs:?}");
+            }
+            "wdrop" => {
+                // a dropped frame heals silently (a lost PING) or through
+                // the collect deadline (a lost JOB) — either way the sweep
+                // above already came back byte-equal
+                assert_eq!(wc.injected(), 1, "{clause}: one-shot fault count: {wc:?}");
+            }
+            _ => {
+                assert_eq!(wc.injected(), 1, "{clause}: one-shot fault count: {wc:?}");
+                assert!(
+                    fs.worker_restarts >= 1,
+                    "{clause}: a mangled frame must kill and respawn the lane: {fs:?}"
+                );
+                assert!(
+                    fs.last_deaths.iter().any(|d| d.contains("injected fault")),
+                    "{clause}: death reason must name the injected fault: {:?}",
+                    fs.last_deaths
+                );
+            }
+        }
+    }
+}
+
+/// Randomized multi-clause schedules: `wseed:S` derives a per-lane fault
+/// schedule (deterministic in `(seed, lane)`, pinned by `property.rs`).
+/// Every seed must end in byte-equal results or a typed error naming the
+/// injected fault — and never, ever a hang.
+#[test]
+fn randomized_wire_schedules_heal_or_name_the_injected_fault() {
+    chaos_env();
+    let dir = sim_dir("wseed");
+    let serial = serial_sens(&dir);
+
+    for seed in 0..4u64 {
+        let tag = format!("wseed:{seed}");
+        let (run, wc) = {
+            let dir = dir.clone();
+            run_with_timeout(&tag, 300, move || {
+                let plan = FaultPlan::parse(&format!("wseed:{seed},backoff:0")).unwrap();
+                assert_eq!(plan.deadline_ms, Some(2000), "wseed must imply a collect deadline");
+                let fleet = match EvalFleet::with_faults_proc(&dir, 3, plan) {
+                    Ok(f) => f,
+                    Err(e) => return (Err(format!("{e:#}")), None),
+                };
+                let run = (|| -> anyhow::Result<Vec<SensEntry>> {
+                    let mut p = Pipeline::open(&dir, MODEL)?;
+                    p.attach_fleet(&fleet)?;
+                    p.calibrate(128, 0)?;
+                    p.sensitivity_sqnr(&Lattice::practical())
+                })()
+                .map_err(|e| format!("{e:#}"));
+                (run, Some(fleet.wire_counters()))
+            })
+        };
+        match run {
+            Ok(sens) => assert_sens_bits(&sens, &serial, &tag),
+            Err(msg) => {
+                assert!(
+                    msg.contains("injected fault"),
+                    "{tag}: typed error must name the injected fault: {msg}"
+                );
+                assert!(
+                    wc.is_none() || wc.unwrap().injected() > 0,
+                    "{tag}: error without an injected fault on the books: {wc:?}"
+                );
+            }
+        }
+    }
+}
+
+/// The heartbeat guarantee, with **no fault plan at all**: a SIGSTOPped
+/// worker holds its socket open but answers nothing — only the liveness
+/// deadline (no frame within the window, PONGs included) can tell it from
+/// a slow peer.  The frozen lane becomes a death notice naming the missed
+/// heartbeat, the supervisor respawns it, and sweeps stay byte-equal.
+#[test]
+fn frozen_worker_trips_the_liveness_deadline_and_is_respawned() {
+    chaos_env();
+    let dir = sim_dir("sigstop");
+    let serial = serial_sens(&dir);
+
+    let (sens, again, fs, wc) = {
+        let dir = dir.clone();
+        run_with_timeout("sigstop", 300, move || {
+            let fleet = EvalFleet::new_proc(&dir, 2).unwrap();
+            let mut p = Pipeline::open(&dir, MODEL).unwrap();
+            p.attach_fleet(&fleet).unwrap();
+            p.calibrate(128, 0).unwrap();
+
+            let victim = fleet.proc_pids()[1].expect("lane 1 is process-backed");
+            let status = std::process::Command::new("kill")
+                .args(["-STOP", &victim.to_string()])
+                .status()
+                .expect("spawn kill");
+            assert!(status.success(), "kill -STOP {victim} failed");
+
+            let sens = p.sensitivity_sqnr(&Lattice::practical()).unwrap();
+            let fs = fleet.failure_stats();
+            let wc = fleet.wire_counters();
+            // the healed fleet keeps serving fresh sweeps exactly
+            p.clear_eval_memo();
+            let again = p.sensitivity_sqnr(&Lattice::practical()).unwrap();
+            (sens, again, fs, wc)
+        })
+    };
+    assert_sens_bits(&sens, &serial, "sweep across a frozen worker");
+    assert_sens_bits(&again, &serial, "re-sweep on the healed fleet");
+    assert!(fs.worker_restarts >= 1, "the frozen lane must be respawned: {fs:?}");
+    assert!(
+        fs.last_deaths.iter().any(|d| d.contains("heartbeat missed")),
+        "death reason must name the missed heartbeat: {:?}",
+        fs.last_deaths
+    );
+    assert!(wc.heartbeats_sent > 0, "no pings flowed: {wc:?}");
+    assert!(wc.heartbeat_deaths >= 1, "liveness deadline never fired: {wc:?}");
+}
+
+// ---------------------------------------------------------------------------
+// mpqd serve plane
+// ---------------------------------------------------------------------------
+
+/// Two-model sim zoo under a per-test temp dir (generation is
+/// deterministic: same specs → byte-identical artifacts).
+fn zoo_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_chaos_serve_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let a = SimSpec {
+        name: "srv_a".into(),
+        batch: 4,
+        dims: vec![8, 10, 6],
+        calib_n: 32,
+        val_n: 16,
+        ood_n: 0,
+        seed: 7,
+        fault_plan: None,
+    };
+    let b = SimSpec { name: "srv_b".into(), dims: vec![8, 12, 6], seed: 11, ..a.clone() };
+    sim::generate_zoo(&dir, &[a, b]).expect("generate sim zoo");
+    dir
+}
+
+fn small_policy() -> JobPolicy {
+    JobPolicy { calib_n: 16, adaround_steps: 4, ..Default::default() }
+}
+
+fn cfg(dir: &Path, sock: &Path, state: &Path) -> ServeCfg {
+    ServeCfg {
+        dir: dir.to_path_buf(),
+        socket: sock.to_path_buf(),
+        state_dir: state.to_path_buf(),
+        workers: 2,
+        max_idle: 2,
+        max_jobs: 4,
+        fault_plan: None,
+        hold: false,
+        io_timeout_ms: daemon::DEFAULT_IO_TIMEOUT_MS,
+    }
+}
+
+fn spawn_daemon(cfg: ServeCfg) -> thread::JoinHandle<anyhow::Result<()>> {
+    thread::spawn(move || daemon::run(cfg))
+}
+
+/// Connect without any probe round trip — chaos tests script the daemon's
+/// per-connection fault lanes by connection order, so the first client
+/// connection must stay connection 0.
+fn dial_client(socket: &Path) -> Client {
+    for _ in 0..1000 {
+        if let Ok(c) = Client::connect(socket) {
+            return c;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("daemon on {} never became reachable", socket.display());
+}
+
+fn result_text(payload: &mpq::jsonio::Json) -> String {
+    payload.req("result").unwrap().to_string()
+}
+
+fn durability(payload: &mpq::jsonio::Json, field: &str) -> u64 {
+    payload.req("durability").unwrap().req(field).unwrap().as_f64().unwrap() as u64
+}
+
+fn wire_stat(status: &mpq::jsonio::Json, field: &str) -> u64 {
+    status
+        .req("telemetry")
+        .unwrap()
+        .req("wire")
+        .unwrap()
+        .req(field)
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64
+}
+
+fn assert_no_strands(state: &Path, tag: &str) {
+    let stranded: Vec<String> = std::fs::read_dir(state)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".mpqj") || n.contains(".tmp."))
+        .collect();
+    assert!(stranded.is_empty(), "{tag}: stranded files: {stranded:?}");
+}
+
+/// Daemon replies are mangled on the wire (a corrupted submit ACK on
+/// connection 0, then the retried submit's ACK dropped on connection 1)
+/// and the client's bounded backoff + idempotency key absorb both: one
+/// admission, one job, the correct durable result — and the daemon's
+/// telemetry shows exactly what was injected and retried.
+#[test]
+fn daemon_replies_survive_injected_wire_faults_via_idempotent_retry() {
+    let dir = zoo_dir("wire");
+    let policy = small_policy();
+    let base = run_local(&dir, "srv_a", &policy, 0, None).unwrap().to_string();
+
+    let sock = dir.join("d.sock");
+    let state = dir.join("mpqd");
+    let mut dc = cfg(&dir, &sock, &state);
+    dc.fault_plan = Some("wcorrupt@0:1,wdrop@1:1".into());
+    let h = spawn_daemon(dc);
+
+    let mut c = dial_client(&sock);
+    let id = c.submit("srv_a", &policy).expect("submit must survive two mangled ACKs");
+    let res = dial_client(&sock).watch(id, |_| {}).unwrap();
+    assert_eq!(result_text(&res), base, "result after wire chaos differs from serial");
+
+    let mut probe = dial_client(&sock);
+    let st = probe.status().unwrap();
+    assert_eq!(
+        st.req("jobs").unwrap().as_arr().unwrap().len(),
+        1,
+        "retries admitted a duplicate job: {st}"
+    );
+    assert_eq!(wire_stat(&st, "frames_corrupted"), 1, "corrupt clause fired once");
+    assert_eq!(wire_stat(&st, "frames_dropped"), 1, "drop clause fired once");
+    assert!(
+        wire_stat(&st, "retries") >= 2,
+        "both resubmits should land as idempotency-key hits: {st}"
+    );
+
+    probe.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+    assert!(!sock.exists(), "socket file left behind after shutdown");
+    assert_no_strands(&state, "wire chaos");
+}
+
+/// The acceptance kill: a daemon dies mid-job (crash barrier on the run
+/// journal), and a **new** client retries the submit under the same
+/// idempotency key against the restarted daemon.  The retry maps to the
+/// same job id, the kept journal replays exactly the `CRASH_AT` completed
+/// barriers, and only the remainder is recomputed — byte-equal result.
+#[test]
+fn killed_daemon_retried_submit_never_reexecutes_completed_barriers() {
+    const CRASH_AT: u64 = 5;
+    const KEY: &str = "chaos-idem-crash";
+    let dir = zoo_dir("idem");
+    let policy = small_policy();
+    let base = run_local(&dir, "srv_a", &policy, 0, None).unwrap().to_string();
+
+    // clean daemon run first: learn the job's total barrier count
+    let sock1 = dir.join("d1.sock");
+    let h1 = spawn_daemon(cfg(&dir, &sock1, &dir.join("mpqd1")));
+    let mut c1 = dial_client(&sock1);
+    let id = c1.submit("srv_a", &policy).unwrap();
+    let res = dial_client(&sock1).watch(id, |_| {}).unwrap();
+    assert_eq!(result_text(&res), base);
+    let total = durability(&res, "appended");
+    assert!(total > CRASH_AT, "need more than {CRASH_AT} barriers, got {total}");
+    c1.shutdown().unwrap();
+    h1.join().unwrap().unwrap();
+
+    // kill the daemon mid-job at journal barrier CRASH_AT
+    let sock2 = dir.join("d2.sock");
+    let state2 = dir.join("mpqd2");
+    let mut crash_cfg = cfg(&dir, &sock2, &state2);
+    crash_cfg.fault_plan = Some(format!("crash@PHASE:{CRASH_AT}"));
+    let h2 = spawn_daemon(crash_cfg);
+    let mut c2 = dial_client(&sock2);
+    let jid = c2.submit_idem("srv_a", &policy, KEY).unwrap();
+    let err = h2.join().expect_err("daemon survived its crash barrier");
+    let msg = err
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| err.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string panic>");
+    assert!(msg.contains("crash@PHASE"), "unexpected panic: {msg}");
+    assert!(
+        state2.join(format!("job_{jid}.mpqj")).exists(),
+        "job journal missing after the kill"
+    );
+
+    // restart; a brand-new client retries the same key
+    let h3 = spawn_daemon(cfg(&dir, &sock2, &state2));
+    let mut c3 = dial_client(&sock2);
+    let again = c3.submit_idem("srv_a", &policy, KEY).unwrap();
+    assert_eq!(again, jid, "retried submit admitted a duplicate job");
+    let resumed = dial_client(&sock2).watch(jid, |_| {}).unwrap();
+    assert_eq!(result_text(&resumed), base, "resumed result differs from serial");
+    assert_eq!(durability(&resumed, "replayed"), CRASH_AT, "replayed unit count");
+    assert_eq!(
+        durability(&resumed, "appended"),
+        total - CRASH_AT,
+        "completed units were re-executed after restart"
+    );
+    let st = c3.status().unwrap();
+    assert!(wire_stat(&st, "retries") >= 1, "idem hit must count as a retry: {st}");
+
+    c3.shutdown().unwrap();
+    h3.join().unwrap().unwrap();
+    assert_no_strands(&state2, "crash + idem retry");
+}
+
+/// Overload shedding: past the `max_jobs` cap the daemon answers with a
+/// typed `RETRY_AFTER` instead of an ERR; the client backs off, retries,
+/// and finally surfaces a typed shed error once its budget is spent.
+/// Freeing the slot lets the very same submit land.
+#[test]
+fn overloaded_daemon_sheds_with_retry_after_until_a_slot_frees() {
+    let dir = zoo_dir("shed");
+    let policy = small_policy();
+    let sock = dir.join("d.sock");
+    let state = dir.join("mpqd");
+    let mut dc = cfg(&dir, &sock, &state);
+    dc.max_jobs = 1;
+    dc.hold = true; // park the resident job so the cap stays occupied
+    let h = spawn_daemon(dc);
+
+    let mut c = dial_client(&sock);
+    let id1 = c.submit("srv_a", &policy).unwrap();
+
+    let mut c2 = dial_client(&sock);
+    c2.set_retries(1);
+    let err = c2.submit("srv_b", &policy).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shed") && msg.contains("admission refused"),
+        "shed error must be typed and carry the cause: {msg}"
+    );
+    assert!(
+        wire_stat(&c.status().unwrap(), "sheds") >= 2,
+        "every RETRY_AFTER must be counted"
+    );
+
+    // a freed slot turns the same retried submit into an admission
+    c.cancel(id1).unwrap();
+    let id2 = c2.submit("srv_b", &policy).unwrap();
+    c.release().unwrap();
+    let base_b = run_local(&dir, "srv_b", &policy, 0, None).unwrap().to_string();
+    let res = dial_client(&sock).watch(id2, |_| {}).unwrap();
+    assert_eq!(result_text(&res), base_b, "post-shed job result differs from serial");
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+    assert_no_strands(&state, "shed");
+}
+
+/// Per-job deadlines cancel gracefully: the job fails at a phase boundary
+/// with a typed error, the journal survives, and an idem-keyed resubmit
+/// with a workable deadline revives the **same** job — kept barriers
+/// replay, only the rest is recomputed, result byte-equal to serial.
+#[test]
+fn deadline_cancel_keeps_the_journal_and_an_idem_resubmit_resumes_it() {
+    const KEY: &str = "chaos-idem-deadline";
+    let dir = zoo_dir("deadline");
+    let policy = small_policy();
+    let base = run_local(&dir, "srv_a", &policy, 0, None).unwrap().to_string();
+
+    let sock = dir.join("d.sock");
+    let state = dir.join("mpqd");
+    let h = spawn_daemon(cfg(&dir, &sock, &state));
+    let mut c = dial_client(&sock);
+
+    let doomed = JobPolicy { deadline_ms: Some(1), ..policy.clone() };
+    let id = c.submit_idem("srv_a", &doomed, KEY).unwrap();
+    let err = dial_client(&sock).watch(id, |_| {}).expect_err("1ms deadline must cancel");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline exceeded"), "cancel must be typed: {msg}");
+    assert!(
+        state.join(format!("job_{id}.mpqj")).exists(),
+        "graceful cancel must keep the journal"
+    );
+    assert!(wire_stat(&c.status().unwrap(), "deadline_cancels") >= 1);
+
+    let relaxed = JobPolicy { deadline_ms: None, ..policy.clone() };
+    let again = c.submit_idem("srv_a", &relaxed, KEY).unwrap();
+    assert_eq!(again, id, "revival must reuse the job id");
+    let res = dial_client(&sock).watch(id, |_| {}).unwrap();
+    assert_eq!(result_text(&res), base, "revived result differs from serial");
+    assert!(
+        durability(&res, "replayed") > 0,
+        "the kept journal must replay on revival: {res}"
+    );
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+    assert_no_strands(&state, "deadline + revival");
+}

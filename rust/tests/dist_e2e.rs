@@ -35,6 +35,14 @@ fn worker_bin_env() {
     ONCE.call_once(|| std::env::set_var("MPQ_WORKER_BIN", env!("CARGO_BIN_EXE_mpq")));
 }
 
+/// `MPQ_FAULT_PLAN` in the environment (the chaos CI variant) injects
+/// wire faults into every env-plan fleet, so restart/degradation counts
+/// become schedule-dependent: exact-zero and exactly-once assertions only
+/// hold without it.  Results must stay byte-equal either way.
+fn env_faults() -> bool {
+    std::env::var("MPQ_FAULT_PLAN").map(|s| !s.trim().is_empty()).unwrap_or(false)
+}
+
 /// Fresh sim artifacts under a per-test temp dir.
 fn sim_dir(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("mpq_dist_e2e_{tag}"));
@@ -137,7 +145,9 @@ fn dist_proc_lanes_match_serial_bit_for_bit() {
         );
 
         let fs = fleet.failure_stats();
-        assert_eq!(fs.worker_restarts, 0, "w={workers}: clean run must not respawn");
+        if !env_faults() {
+            assert_eq!(fs.worker_restarts, 0, "w={workers}: clean run must not respawn");
+        }
         assert!(fs.degraded_events.is_empty(), "w={workers}");
     }
 }
@@ -206,7 +216,11 @@ fn dist_proc_fleet_survives_sigkill_mid_sweep() {
     assert_sens_bits(&sens, &serial, "post-SIGKILL sweep");
 
     let fs = fleet.failure_stats();
-    assert_eq!(fs.worker_restarts, 1, "one respawn heals the fleet: {fs:?}");
+    if env_faults() {
+        assert!(fs.worker_restarts >= 1, "the SIGKILL must respawn a lane: {fs:?}");
+    } else {
+        assert_eq!(fs.worker_restarts, 1, "one respawn heals the fleet: {fs:?}");
+    }
     assert!(fs.degraded_events.is_empty(), "death within budget must not degrade");
     assert_eq!(fleet.workers(), 4, "fleet back at full strength");
     assert!(
@@ -223,7 +237,9 @@ fn dist_proc_fleet_survives_sigkill_mid_sweep() {
     p.clear_eval_memo();
     let again = p.sensitivity_sqnr(&lat).unwrap();
     assert_sens_bits(&again, &serial, "re-sweep on the healed fleet");
-    assert_eq!(fleet.failure_stats().worker_restarts, 1, "no further respawns");
+    if !env_faults() {
+        assert_eq!(fleet.failure_stats().worker_restarts, 1, "no further respawns");
+    }
 }
 
 /// `panic@LANE:N` fault clauses extend to process lanes: the directive is

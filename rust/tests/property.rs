@@ -776,6 +776,170 @@ fn frame_reads_over_fragmented_streams_match_whole_buffer_decode() {
     }
 }
 
+/// The write-side counterpart of [`FragReader`]: accepts at most `cap`
+/// bytes (in small fragments, so `write_all` must loop), then fails with
+/// `ConnectionReset` — a torn write.  Optionally injects one spurious
+/// error on the first call: `Interrupted` must be retried transparently
+/// by `write_all`; `WouldBlock` is a hard error on a blocking socket.
+struct TornWriter {
+    buf: Vec<u8>,
+    cap: usize,
+    inject: Option<std::io::ErrorKind>,
+}
+
+impl TornWriter {
+    fn new(cap: usize, inject: Option<std::io::ErrorKind>) -> Self {
+        Self { buf: Vec::new(), cap, inject }
+    }
+}
+
+impl std::io::Write for TornWriter {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        if let Some(k) = self.inject.take() {
+            return Err(std::io::Error::from(k));
+        }
+        let room = self.cap - self.buf.len();
+        if room == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "torn write: peer vanished mid-frame",
+            ));
+        }
+        let n = data.len().min(room).min(3);
+        self.buf.extend_from_slice(&data[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Torn `write_frame` at EVERY byte offset: whatever prefix of the frame
+/// reaches the wire, a reader sees either the exact records that were
+/// fully written or a clean typed rejection (mid-frame EOF / checksum) —
+/// never a wrong or invented record.  This is the crash-consistency
+/// contract both socket planes (`pool/transport.rs`, `serve/proto.rs`)
+/// and the injected `wsplit@`/`wreset@` wire faults lean on.
+#[test]
+fn torn_frame_writes_leave_exact_prefix_or_clean_rejection() {
+    let mut rng = Rng::new(0x76);
+    for case in 0..25 {
+        let kind = store::kind::PROBE;
+        let digest = 0xBEEF_0000 + case as u64;
+        let payload: Vec<u8> = (0..rng.below(50)).map(|_| rng.below(256) as u8).collect();
+        let frame = store::encode_record(kind, digest, &payload);
+        // a complete frame already on the stream: torn writes after it
+        // must never disturb what was previously committed
+        let prior = store::encode_record(store::kind::BLOB, 0xA11CE, &[9, 9, 9]);
+
+        for cap in 0..=frame.len() {
+            let mut w = TornWriter::new(cap, None);
+            let wrote = store::write_frame(&mut w, kind, digest, &payload);
+            if cap >= frame.len() {
+                assert!(wrote.is_ok(), "case {case}: full-capacity write failed");
+                assert_eq!(w.buf, frame, "case {case}: bytes on the wire differ");
+            } else {
+                assert!(wrote.is_err(), "case {case} cap={cap}: torn write not reported");
+                assert_eq!(w.buf, frame[..w.buf.len()], "case {case}: non-prefix on wire");
+            }
+
+            let mut stream = prior.clone();
+            stream.extend_from_slice(&w.buf);
+            let mut r = stream.as_slice();
+            let first = store::read_frame(&mut r, 1 << 20)
+                .unwrap_or_else(|e| panic!("case {case} cap={cap}: prior frame lost: {e:#}"))
+                .expect("prior frame vanished");
+            assert_eq!(
+                (first.kind, first.digest, first.payload.as_slice()),
+                (store::kind::BLOB, 0xA11CE, &[9u8, 9, 9][..]),
+                "case {case} cap={cap}: torn write altered a committed frame"
+            );
+            match store::read_frame(&mut r, 1 << 20) {
+                Ok(Some(rec)) => {
+                    assert_eq!(cap, frame.len(), "case {case}: partial frame decoded");
+                    assert_eq!(
+                        (rec.kind, rec.digest, rec.payload),
+                        (kind, digest, payload.clone()),
+                        "case {case}: decoded record differs from what was written"
+                    );
+                }
+                Ok(None) => assert_eq!(
+                    w.buf.len(),
+                    0,
+                    "case {case} cap={cap}: mid-frame bytes read as a clean boundary"
+                ),
+                Err(_) => assert!(
+                    !w.buf.is_empty() && w.buf.len() < frame.len(),
+                    "case {case} cap={cap}: clean stream rejected"
+                ),
+            }
+        }
+
+        // a spurious Interrupted is retried to a complete frame; a
+        // WouldBlock is a hard error with nothing (or a prefix) on the
+        // wire — both end in the same prefix-or-rejection contract
+        let mut w = TornWriter::new(frame.len(), Some(std::io::ErrorKind::Interrupted));
+        store::write_frame(&mut w, kind, digest, &payload)
+            .unwrap_or_else(|e| panic!("case {case}: Interrupted not retried: {e:#}"));
+        assert_eq!(w.buf, frame, "case {case}: post-Interrupted frame differs");
+
+        let mut w = TornWriter::new(frame.len(), Some(std::io::ErrorKind::WouldBlock));
+        assert!(
+            store::write_frame(&mut w, kind, digest, &payload).is_err(),
+            "case {case}: WouldBlock swallowed"
+        );
+        assert_eq!(w.buf, frame[..w.buf.len()], "case {case}: WouldBlock left non-prefix");
+    }
+}
+
+/// The randomized wire-chaos schedule (`wseed:SEED`) is a pure function
+/// of `(seed, lane)`: re-materializing any lane's schedule — from the
+/// same plan, a re-parsed plan, or a plan "sized" for a different fleet —
+/// always yields identical clauses, so a CI seed echoed into a log is
+/// enough to reproduce a failure at any worker count.  Different seeds
+/// must actually differ, every derived clause is a gentle one-shot wire
+/// fault, and `wseed` implies a collect watchdog (dropped frames would
+/// otherwise hang the sweep forever).
+#[test]
+fn wire_seed_schedule_is_deterministic_and_lane_count_independent() {
+    use mpq::pool::FaultPlan;
+    let mut rng = Rng::new(0x77);
+    let mut schedules = std::collections::HashSet::new();
+    for _ in 0..CASES {
+        let seed = rng.below(1 << 30) as u64;
+        let plan = FaultPlan::parse(&format!("wseed:{seed}")).unwrap();
+        assert_eq!(plan.wire_seed, Some(seed));
+        assert_eq!(
+            plan.deadline_ms,
+            Some(2000),
+            "wseed must imply a collect watchdog or dropped frames hang"
+        );
+        let reparsed = FaultPlan::parse(&format!("wseed:{seed},deadline:750")).unwrap();
+        assert_eq!(reparsed.deadline_ms, Some(750), "explicit deadline overridden");
+        let mut key = format!("{seed}:");
+        for lane in 0..6 {
+            let a = plan.wire_faults_for_lane(lane);
+            let b = reparsed.wire_faults_for_lane(lane);
+            assert_eq!(a, b, "seed {seed} lane {lane}: schedule not reproducible");
+            assert!(a.len() <= 1, "seed {seed} lane {lane}: more than one derived fault");
+            for f in &a {
+                assert!(f.kind.is_wire(), "seed {seed}: derived a non-wire fault");
+                assert!(!f.recurring, "seed {seed}: derived fault must be one-shot");
+                assert_eq!(f.lane, lane);
+            }
+            key.push_str(&format!("{a:?};"));
+        }
+        schedules.insert(key);
+    }
+    // seeds genuinely steer the schedule (collisions allowed, but 200
+    // seeds collapsing to a handful of schedules means the seed is dead)
+    assert!(
+        schedules.len() > CASES / 2,
+        "only {} distinct schedules from {CASES} seeds",
+        schedules.len()
+    );
+}
+
 #[test]
 fn candidate_labels_parse_back() {
     for w in [4u8, 6, 8] {

@@ -59,6 +59,7 @@ fn cfg(dir: &Path, sock: &Path, state: &Path) -> ServeCfg {
         max_jobs: 4,
         fault_plan: None,
         hold: false,
+        io_timeout_ms: daemon::DEFAULT_IO_TIMEOUT_MS,
     }
 }
 
